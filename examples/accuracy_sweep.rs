@@ -1,0 +1,56 @@
+//! Accuracy sweep — the Table 2 / Table 3 / Table 6 analog generator.
+//!
+//! Sweeps every base algorithm at several fixed budgets and with the
+//! Twilight pruner, across context lengths, printing one table per
+//! context (RULER-style) on the synthetic suite.
+//!
+//! ```bash
+//! cargo run --release --example accuracy_sweep -- --ctxs 1024,4096 --n 4
+//! ```
+
+use std::sync::Arc;
+use twilight::coordinator::SparseConfig;
+use twilight::evalsuite::{render_table, run_accuracy, suite_requests};
+use twilight::model::retrieval::build_retrieval_model;
+use twilight::selector::SelectorKind;
+use twilight::util::cli::Args;
+use twilight::workload::RetrievalVocab;
+
+fn main() {
+    let a = Args::from_env(&[]);
+    let ctxs = a.usize_list_or("ctxs", &[1024, 4096]);
+    let n = a.usize_or("n", 4);
+    let p = a.f64_or("p", 0.95) as f32;
+    let budgets = a.usize_list_or("budgets", &[32, 128, 512]);
+    let model = Arc::new(build_retrieval_model(
+        RetrievalVocab::DEFAULT,
+        *ctxs.iter().max().unwrap() * 2,
+    ));
+    let selectors = [
+        SelectorKind::Quest,
+        SelectorKind::DoubleSparsity,
+        SelectorKind::StreamingLlm,
+        SelectorKind::SnapKv,
+        SelectorKind::Oracle,
+    ];
+    for &ctx in &ctxs {
+        let reqs = suite_requests(42, ctx, n);
+        let capacity = (ctx + 64) * 2;
+        let mut results = vec![run_accuracy(model.clone(), &SparseConfig::dense(), &reqs, capacity)];
+        // Full + Twilight (pruner-only row).
+        let mut full_twi = SparseConfig::twilight(SelectorKind::Full, p);
+        full_twi.skip_layers = 0;
+        results.push(run_accuracy(model.clone(), &full_twi, &reqs, capacity));
+        for sel in selectors {
+            for &b in &budgets {
+                let mut c = SparseConfig::baseline(sel, b);
+                c.skip_layers = 0;
+                results.push(run_accuracy(model.clone(), &c, &reqs, capacity));
+            }
+            let mut c = SparseConfig::twilight(sel, p);
+            c.skip_layers = 0;
+            results.push(run_accuracy(model.clone(), &c, &reqs, capacity));
+        }
+        println!("{}", render_table(&format!("ctx = {ctx}"), &results));
+    }
+}

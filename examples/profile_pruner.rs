@@ -1,0 +1,38 @@
+//! Internal profiling driver for the perf pass (EXPERIMENTS.md §Perf).
+use twilight::pruner::{prune_group, PrunerConfig, PrunerScratch};
+use twilight::selector::{quest::QuestSelector, TokenSelector};
+use std::time::Instant;
+fn main() {
+    let d = 64; let n = 16384; let group = 4;
+    let mut cache = twilight::kvcache::PagedKvCache::new(twilight::kvcache::CacheConfig::new(1, d, n/16+2));
+    let mut seq = twilight::kvcache::SeqCache::default();
+    let mut r = twilight::util::rng::Rng::new(1);
+    for _ in 0..n {
+        let k: Vec<f32> = (0..d).map(|_| r.normal_f32(0.0,1.0)).collect();
+        cache.append(&mut seq, &k, &k).unwrap();
+    }
+    let qs: Vec<f32> = (0..group*d).map(|_| r.normal_f32(0.0,2.0)).collect();
+    let use_sort = std::env::args().any(|a| a == "--sort");
+    let pc = PrunerConfig { p: 0.9, use_sort, ..Default::default() };
+    let mut scratch = PrunerScratch::default();
+    let mut sel = QuestSelector::new();
+    let mut out = vec![0.0f32; group*d];
+    let iters = 200;
+    let (mut t_sel, mut t_prune, mut t_attn) = (0.0, 0.0, 0.0);
+    let mut b1 = 0usize;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let cand = sel.select(&cache, &seq, 0, &qs, group, n/4);
+        t_sel += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let (kept, _) = prune_group(&pc, &cache, &seq, 0, &qs, group, &cand, &mut scratch);
+        t_prune += t0.elapsed().as_secs_f64();
+        b1 = kept.len();
+        let t0 = Instant::now();
+        twilight::attention::sparse::group_varlen(&cache, &seq, 0, &qs, group, &kept, &mut out);
+        t_attn += t0.elapsed().as_secs_f64();
+    }
+    let f = 1e3 / iters as f64;
+    println!("select {:.3}ms prune {:.3}ms attend {:.3}ms total {:.3}ms (B0={} B1={b1}, sort={use_sort})",
+        t_sel*f, t_prune*f, t_attn*f, (t_sel+t_prune+t_attn)*f, n/4);
+}

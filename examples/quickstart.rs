@@ -1,0 +1,66 @@
+//! Quickstart: build the retrieval model, wrap Quest in the Twilight
+//! pruner, serve one needle-in-a-haystack request, and print what the
+//! pipeline did.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+use twilight::coordinator::engine::Engine;
+use twilight::coordinator::SparseConfig;
+use twilight::model::retrieval::build_retrieval_model;
+use twilight::model::sampler::greedy;
+use twilight::selector::SelectorKind;
+use twilight::util::rng::Rng;
+use twilight::workload::{gen_niah, RetrievalVocab};
+
+fn main() {
+    let vocab = RetrievalVocab::DEFAULT;
+    let ctx = 8192;
+
+    // 1. A model. (Real deployments load TWT weights from `artifacts/`;
+    //    the retrieval model can also be constructed in-process.)
+    let model = Arc::new(build_retrieval_model(vocab, ctx * 2));
+    println!("model: {} ({} params)", model.cfg.name, model.param_count());
+
+    // 2. The paper's pipeline: Quest selects a conservative 1/4-context
+    //    candidate set; the Twilight pruner keeps the minimal top-p set.
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.95);
+    cfg.skip_layers = 0; // single-layer model
+    println!("pipeline: {}", cfg.label());
+
+    // 3. An engine with a paged KV pool.
+    let mut engine = Engine::new(model, cfg, ctx + 64);
+
+    // 4. One long-context request.
+    let mut rng = Rng::new(7);
+    let request = gen_niah(&mut rng, vocab, ctx);
+    println!("prompt: {} tokens (needle hidden somewhere inside)", request.prompt.len());
+
+    let logits = engine.prefill(0, &request.prompt).expect("out of KV pages");
+    let predicted = greedy(&logits);
+    println!(
+        "answer: token {predicted} — {}",
+        if predicted == request.answer { "CORRECT" } else { "WRONG" }
+    );
+
+    // 5. What the hierarchy did.
+    let s = &engine.stats;
+    println!(
+        "\nSelect-then-Prune on the final decode step:\n  \
+         stage-1 candidates/head: {:8.1}\n  \
+         final budget/head:       {:8.1}  ({:.1}% pruned)\n  \
+         context length:          {:8}",
+        s.avg_candidates(),
+        s.avg_kept(),
+        s.prune_ratio() * 100.0,
+        ctx,
+    );
+    println!(
+        "timing: select {:.2}ms | prune {:.2}ms | attend {:.2}ms",
+        s.t_select * 1e3,
+        s.t_prune * 1e3,
+        s.t_attend * 1e3
+    );
+}

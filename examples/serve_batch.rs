@@ -1,0 +1,128 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §E2E run): load the
+//! retrieval model (TWT artifact if built, else in-process), generate a
+//! mixed long-context workload with Poisson arrivals, push it through the
+//! full coordinator (queue → continuous batcher → Select-then-Prune
+//! engine), and report accuracy + latency/throughput for the dense
+//! baseline, the Quest baseline, and Quest+Twilight.
+//!
+//! ```bash
+//! cargo run --release --example serve_batch -- --requests 24 --ctx 4096
+//! ```
+
+use std::sync::Arc;
+use twilight::coordinator::engine::Engine;
+use twilight::coordinator::request::Request;
+use twilight::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use twilight::coordinator::SparseConfig;
+use twilight::model::weights;
+use twilight::selector::SelectorKind;
+use twilight::util::cli::Args;
+use twilight::util::json::{self, Json};
+use twilight::util::rng::Rng;
+use twilight::workload::{gen_fwe, gen_niah, poissonize, GenRequest, RetrievalVocab};
+
+fn workload(seed: u64, n: usize, ctx: usize) -> Vec<GenRequest> {
+    let v = RetrievalVocab::DEFAULT;
+    let mut rng = Rng::new(seed);
+    let mut reqs = Vec::new();
+    for i in 0..n {
+        let mut g = if i % 3 == 2 {
+            gen_fwe(&mut rng, v, ctx, 6.0)
+        } else {
+            gen_niah(&mut rng, v, ctx)
+        };
+        g.max_new_tokens = 8; // decode a few tokens so TPOT is meaningful
+        reqs.push(g);
+    }
+    poissonize(&mut reqs, seed + 1, 50.0);
+    reqs
+}
+
+fn run(
+    model: Arc<twilight::model::Model>,
+    cfg: SparseConfig,
+    reqs: &[GenRequest],
+    capacity: usize,
+    max_batch: usize,
+) -> Json {
+    let engine = Engine::new(model, cfg.clone(), capacity);
+    let mut sched = Scheduler::new(
+        engine,
+        SchedulerConfig { max_batch, ..Default::default() },
+    );
+    for (i, g) in reqs.iter().enumerate() {
+        let mut r = Request::new(i as u64, g.prompt.clone(), g.max_new_tokens);
+        r.arrival = g.arrival;
+        sched.submit(r);
+    }
+    let report = sched.run_to_completion();
+    // Accuracy: first output token vs ground truth.
+    let mut correct = 0;
+    for f in sched.finished_requests() {
+        let want = reqs[f.id as usize].answer;
+        if f.output.first() == Some(&want) {
+            correct += 1;
+        }
+    }
+    let s = &sched.engine.stats;
+    let mut j = report.to_json();
+    if let Json::Obj(kv) = &mut j {
+        kv.push(("label".into(), json::s(&cfg.label())));
+        kv.push(("accuracy".into(), Json::Num(correct as f64 / reqs.len() as f64)));
+        kv.push(("avg_budget".into(), Json::Num(s.avg_kept())));
+        kv.push(("prune_ratio".into(), Json::Num(s.prune_ratio())));
+    }
+    j
+}
+
+fn main() {
+    let a = Args::from_env(&[]);
+    let n = a.usize_or("requests", 18);
+    let ctx = a.usize_or("ctx", 4096);
+    let max_batch = a.usize_or("max-batch", 8);
+    let dir = a.str_or("artifacts", "artifacts");
+    let model = Arc::new(weights::load_model(&dir, "retrieval").unwrap_or_else(|_| {
+        twilight::model::retrieval::build_retrieval_model(RetrievalVocab::DEFAULT, 1 << 17)
+    }));
+    let reqs = workload(11, n, ctx);
+    let capacity = (ctx + 64) * (max_batch + 2);
+
+    println!(
+        "serving {n} requests (ctx={ctx}, Poisson arrivals, max_batch={max_batch})\n"
+    );
+    println!(
+        "{:<22} {:>9} {:>12} {:>12} {:>12} {:>11}",
+        "pipeline", "accuracy", "tpot-ms", "ttft-ms", "tok/s", "avg-budget"
+    );
+    let mut results = Vec::new();
+    for cfg in [
+        SparseConfig::dense(),
+        {
+            let mut c = SparseConfig::baseline(SelectorKind::Quest, ctx / 4);
+            c.skip_layers = 0;
+            c
+        },
+        {
+            let mut c = SparseConfig::twilight(SelectorKind::Quest, 0.95);
+            c.skip_layers = 0;
+            c
+        },
+    ] {
+        let j = run(model.clone(), cfg, &reqs, capacity, max_batch);
+        println!(
+            "{:<22} {:>9.3} {:>12.2} {:>12.2} {:>12.1} {:>11.1}",
+            j.get_str("label").unwrap_or("?"),
+            j.get_f64("accuracy").unwrap_or(0.0),
+            j.get_f64("tpot_mean_s").unwrap_or(0.0) * 1e3,
+            j.get_f64("ttft_mean_s").unwrap_or(0.0) * 1e3,
+            j.get_f64("throughput_tok_s").unwrap_or(0.0),
+            j.get_f64("avg_budget").unwrap_or(0.0),
+        );
+        results.push(j);
+    }
+    let out = Json::Arr(results).pretty();
+    let path = format!("{dir}/e2e_report.json");
+    if std::fs::write(&path, &out).is_ok() {
+        println!("\nwrote {path}");
+    }
+}

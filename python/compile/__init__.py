@@ -1,0 +1,1 @@
+"""Build-time compile path (L1 Pallas kernels + L2 JAX model + AOT lowering)."""

@@ -1,0 +1,188 @@
+"""AOT compile path: lower every L2 graph to HLO *text* and write all
+build artifacts. Runs ONCE (`make artifacts`); Python never touches the
+request path.
+
+HLO text — not `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids that the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to --out:
+  corpus_eval.bin            held-out token stream (PG-19 analog)
+  retrieval.{json,twt}       constructed retrieval model
+  charlm.{json,twt}          trained charlm (trains if .twt missing)
+  charlm_prefill_128.hlo.txt tokens[128] -> logits[128,64]
+  charlm_step_512.hlo.txt    decode step against a 512-slot cache
+  twilight_attn_1024.hlo.txt L1 pipeline: quant+spgemv+topp+sparse attn
+  model.hlo.txt              alias of charlm_prefill_128 (Makefile contract)
+  manifest.json              signature index for the Rust runtime
+"""
+
+import argparse
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model, retrieval_model, weights_io
+from .kernels import sparse_attn
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_and_write(fn, specs, path):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def ensure_charlm(out, steps):
+    twt = os.path.join(out, "charlm.twt")
+    if os.path.exists(twt):
+        print(f"charlm weights cached at {twt}")
+        raw = weights_io.read_twt(twt)
+        params = dict(
+            embed=raw["embed"],
+            lm_head=raw["lm_head"],
+            final_norm=raw["final_norm"],
+            layers=[
+                {k: raw[f"layers.{i}.{k}"] for k in
+                 ("wq", "wk", "wv", "wo", "w1", "w2", "ln1", "ln2")}
+                for i in range(model.CHARLM_CONFIG["n_layers"])
+            ],
+        )
+        return params
+    from . import train_lm
+
+    print(f"training charlm for {steps} steps ...")
+    params, _ = train_lm.train(steps=steps)
+    weights_io.save_model(out, model.CHARLM_CONFIG, params)
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=240)
+    ap.add_argument("--skip-train", action="store_true",
+                    help="use random charlm weights (CI smoke mode)")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    # --- corpora ---------------------------------------------------------
+    _, eval_data = corpus.train_eval_corpora(1 << 16, 1 << 14)
+    eval_data.tofile(os.path.join(out, "corpus_eval.bin"))
+    print(f"wrote corpus_eval.bin ({len(eval_data)} tokens)")
+
+    # --- retrieval model ---------------------------------------------------
+    rparams = retrieval_model.build_params()
+    weights_io.save_model(out, retrieval_model.RETRIEVAL_CONFIG, rparams)
+    print("wrote retrieval.{json,twt}")
+
+    # --- charlm ------------------------------------------------------------
+    cfg = model.CHARLM_CONFIG
+    if args.skip_train and not os.path.exists(os.path.join(out, "charlm.twt")):
+        params = model.init_params(cfg, seed=0)
+        weights_io.save_model(out, cfg, params)
+        print("wrote charlm (RANDOM weights; --skip-train)")
+    else:
+        params = ensure_charlm(out, args.steps)
+    params = jax.tree.map(jnp.asarray, params)
+
+    # --- HLO graphs ----------------------------------------------------------
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    # charlm_prefill_128: tokens[128] -> (logits[128, V],)
+    lower_and_write(
+        lambda toks: (model.forward_prefill(params, toks, cfg),),
+        [jax.ShapeDtypeStruct((128,), i32)],
+        os.path.join(out, "charlm_prefill_128.hlo.txt"),
+    )
+
+    # charlm_step_512: (tok, pos, cur_len, k_cache, v_cache)
+    L, Hkv, dh = cfg["n_layers"], cfg["n_kv_heads"], cfg["head_dim"]
+    lower_and_write(
+        lambda tok, pos, cur, kc, vc: model.decode_step(
+            params, tok, pos, kc, vc, cur, cfg
+        ),
+        [
+            jax.ShapeDtypeStruct((), i32),
+            jax.ShapeDtypeStruct((), i32),
+            jax.ShapeDtypeStruct((), i32),
+            jax.ShapeDtypeStruct((L, 512, Hkv, dh), f32),
+            jax.ShapeDtypeStruct((L, 512, Hkv, dh), f32),
+        ],
+        os.path.join(out, "charlm_step_512.hlo.txt"),
+    )
+
+    # twilight_attn_1024: the L1 Pallas pipeline at retrieval geometry.
+    rcfg = retrieval_model.RETRIEVAL_CONFIG
+    H, rHkv, rdh = rcfg["n_heads"], rcfg["n_kv_heads"], rcfg["head_dim"]
+    group = H // rHkv
+    lower_and_write(
+        lambda q, k, v, p: sparse_attn.twilight_attention(q, k, v, p, group),
+        [
+            jax.ShapeDtypeStruct((H, rdh), f32),
+            jax.ShapeDtypeStruct((rHkv, 1024, rdh), f32),
+            jax.ShapeDtypeStruct((rHkv, 1024, rdh), f32),
+            jax.ShapeDtypeStruct((), f32),
+        ],
+        os.path.join(out, "twilight_attn_1024.hlo.txt"),
+    )
+
+    # Makefile contract: artifacts/model.hlo.txt.
+    shutil.copyfile(
+        os.path.join(out, "charlm_prefill_128.hlo.txt"),
+        os.path.join(out, "model.hlo.txt"),
+    )
+
+    manifest = {
+        "charlm_prefill_128": {
+            "file": "charlm_prefill_128.hlo.txt",
+            "inputs": [["i32", [128]]],
+            "outputs": [["f32", [128, cfg["vocab_size"]]]],
+        },
+        "charlm_step_512": {
+            "file": "charlm_step_512.hlo.txt",
+            "inputs": [
+                ["i32", []], ["i32", []], ["i32", []],
+                ["f32", [L, 512, Hkv, dh]], ["f32", [L, 512, Hkv, dh]],
+            ],
+            "outputs": [
+                ["f32", [cfg["vocab_size"]]],
+                ["f32", [L, Hkv, dh]],
+                ["f32", [L, Hkv, dh]],
+            ],
+        },
+        "twilight_attn_1024": {
+            "file": "twilight_attn_1024.hlo.txt",
+            "inputs": [
+                ["f32", [H, rdh]],
+                ["f32", [rHkv, 1024, rdh]],
+                ["f32", [rHkv, 1024, rdh]],
+                ["f32", []],
+            ],
+            "outputs": [["f32", [H, rdh]], ["f32", [H, 1024]]],
+        },
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json — artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

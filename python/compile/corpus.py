@@ -1,0 +1,65 @@
+"""Deterministic synthetic pseudo-language corpus (the PG-19 analog).
+
+Structure chosen so that a small trained LM exhibits the attention-weight
+phenomenology the paper studies:
+
+* a seeded order-2 "letter" Markov chain gives local statistics that
+  dense local attention learns quickly (→ diffuse/local heads);
+* with probability `copy_prob`, the generator emits a verbatim *copy* of
+  an earlier span — long-range structure that is only predictable by
+  attending far back to a handful of tokens (→ focused retrieval heads,
+  the induction pattern).
+
+Vocabulary: 64 token ids. The same generator (same seed) produces the
+train and the held-out eval corpora (disjoint seeds), and `aot.py` dumps
+the eval stream to `artifacts/corpus_eval.bin` (raw u8) for the Rust
+perplexity harness.
+"""
+
+import numpy as np
+
+VOCAB = 64
+
+
+def make_transition(seed: int) -> np.ndarray:
+    """Sparse-ish order-1 transition matrix over VOCAB tokens."""
+    rng = np.random.default_rng(seed)
+    # Each token prefers ~6 successors heavily, with smoothing.
+    T = rng.gamma(0.08, 1.0, size=(VOCAB, VOCAB))
+    for i in range(VOCAB):
+        hot = rng.choice(VOCAB, size=6, replace=False)
+        T[i, hot] += rng.gamma(4.0, 1.0, size=6)
+    T /= T.sum(axis=1, keepdims=True)
+    return T
+
+
+def generate(seed: int, length: int, copy_prob: float = 0.02,
+             copy_len_lo: int = 16, copy_len_hi: int = 64) -> np.ndarray:
+    """Generate `length` tokens (uint8)."""
+    rng = np.random.default_rng(seed + 1)
+    T = make_transition(1234)  # shared dynamics across train/eval
+    out = np.empty(length, dtype=np.uint8)
+    out[0] = rng.integers(VOCAB)
+    i = 1
+    while i < length:
+        if i > 2 * copy_len_hi and rng.random() < copy_prob:
+            # Copy an earlier span verbatim.
+            span = int(rng.integers(copy_len_lo, copy_len_hi))
+            start = int(rng.integers(0, i - span))
+            span = min(span, length - i)
+            out[i:i + span] = out[start:start + span]
+            i += span
+        else:
+            out[i] = rng.choice(VOCAB, p=T[out[i - 1]])
+            i += 1
+    return out
+
+
+def train_eval_corpora(train_len: int, eval_len: int):
+    """The canonical corpora: disjoint seeds, shared dynamics."""
+    return generate(17, train_len), generate(9999, eval_len)
+
+
+if __name__ == "__main__":
+    tr, ev = train_eval_corpora(1 << 16, 1 << 14)
+    print(f"train {tr.shape} eval {ev.shape}; head: {tr[:16].tolist()}")

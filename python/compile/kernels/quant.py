@@ -1,0 +1,44 @@
+"""Paged INT-quantization of the K cache (jnp, build-time).
+
+Produces the mirror-cache representation the SpGEMV kernel consumes:
+per-(kv-head, page) asymmetric codes + scale/zero, with the params
+expanded to per-row vectors so the kernel blocks stay rectangular.
+"""
+
+import jax.numpy as jnp
+
+from . import ref
+
+
+def quantize_paged(k, bits=4, page=16):
+    """Quantize k: [Hkv, N, d] into (codes int32 [Hkv, N, d],
+    scale_row [Hkv, N], zero_row [Hkv, N]) with one (scale, zero) per
+    (kv head, page) group — the paper's per-head dynamic quantization at
+    Quest's page granularity."""
+    Hkv, N, d = k.shape
+    assert N % page == 0, "context must be page-aligned (pad first)"
+    blk = k.reshape(Hkv, N // page, page * d)
+    lo = blk.min(axis=-1, keepdims=True)
+    hi = blk.max(axis=-1, keepdims=True)
+    levels = (1 << bits) - 1
+    scale = jnp.where(hi > lo, (hi - lo) / levels, 1.0)
+    zero = lo
+    codes = jnp.clip(jnp.round((blk - zero) / scale), 0, levels).astype(jnp.int32)
+    codes = codes.reshape(Hkv, N, d)
+    scale_row = jnp.repeat(scale[..., 0], page, axis=-1)
+    zero_row = jnp.repeat(zero[..., 0], page, axis=-1)
+    return codes, scale_row, zero_row
+
+
+def dequantize_paged(codes, scale_row, zero_row):
+    """Inverse of `quantize_paged` (up to quantization error)."""
+    return zero_row[..., None] + codes.astype(jnp.float32) * scale_row[..., None]
+
+
+def quantization_error(k, bits, page=16):
+    """Max |k - dequant(quant(k))| — used by the Fig. 6 precision sweep."""
+    c, s, z = quantize_paged(k, bits, page)
+    return jnp.max(jnp.abs(k - dequantize_paged(c, s, z)))
+
+
+__all__ = ["quantize_paged", "dequantize_paged", "quantization_error", "ref"]

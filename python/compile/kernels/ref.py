@@ -1,0 +1,129 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the correctness contracts: each Pallas kernel in this package
+must match its `*_ref` here (pytest enforces allclose across shape/dtype
+sweeps), and the Rust kernels match the same semantics on the other side
+of the TWT/HLO interchange.
+"""
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x, bits):
+    """Per-array asymmetric quantization.
+
+    Matches rust `tensor::quant::quantize`: scale = (max-min)/(2^b - 1),
+    zero = min, code = round((x - zero)/scale) clamped to [0, 2^b - 1].
+    Returns (codes int32, scale, zero).
+    """
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    levels = (1 << bits) - 1
+    scale = jnp.where(hi > lo, (hi - lo) / levels, 1.0)
+    zero = lo
+    codes = jnp.clip(jnp.round((x - zero) / scale), 0, levels).astype(jnp.int32)
+    return codes, scale, zero
+
+
+def dequantize_ref(codes, scale, zero):
+    """dequant(code) = zero + code * scale."""
+    return zero + codes.astype(jnp.float32) * scale
+
+
+def spgemv_ref(q, codes, scale_row, zero_row):
+    """Estimated scores: out[i] = zero_row[i]*sum(q) + scale_row[i]*(codes[i]·q).
+
+    q: [d]; codes: [N, d] int; scale_row/zero_row: [N] per-row quant params
+    (page-level params expanded per row).
+    """
+    qsum = jnp.sum(q)
+    code_dot = codes.astype(jnp.float32) @ q
+    return zero_row * qsum + scale_row * code_dot
+
+
+def topp_mask_ref(w, p):
+    """Oracle top-p mask: minimal descending-prefix with mass >= p.
+
+    w: [..., N] normalized along the last axis. Returns float mask, 1.0
+    for kept entries. Ties at the threshold weight are kept (matching the
+    binary-search kernel, which thresholds by value).
+    """
+    order = jnp.argsort(-w, axis=-1)
+    sorted_w = jnp.take_along_axis(w, order, axis=-1)
+    csum = jnp.cumsum(sorted_w, axis=-1)
+    # Number of entries needed: first index where csum >= p.
+    needed = jnp.sum((csum < p).astype(jnp.int32), axis=-1, keepdims=True) + 1
+    needed = jnp.minimum(needed, w.shape[-1])
+    # Threshold weight = the needed-th largest value; keep w >= threshold.
+    thresh = jnp.take_along_axis(sorted_w, needed - 1, axis=-1)
+    return (w >= thresh).astype(jnp.float32)
+
+
+def attention_ref(q, k, v):
+    """Dense single-query attention. q: [H, d]; k, v: [Hkv, N, d] (GQA:
+    head h uses kv head h // (H // Hkv)). Returns [H, d]."""
+    H, d = q.shape
+    Hkv = k.shape[0]
+    group = H // Hkv
+    outs = []
+    for h in range(H):
+        kh = k[h // group]
+        vh = v[h // group]
+        logits = kh @ q[h] / jnp.sqrt(d).astype(jnp.float32)
+        wts = jnp.exp(logits - jnp.max(logits))
+        wts = wts / jnp.sum(wts)
+        outs.append(wts @ vh)
+    return jnp.stack(outs)
+
+
+def masked_attention_ref(q, k, v, mask):
+    """Sparse (masked) attention. mask: [H, N] with 1.0 = keep. Softmax is
+    computed over kept entries only (Definition 3.1)."""
+    H, d = q.shape
+    Hkv = k.shape[0]
+    group = H // Hkv
+    outs = []
+    for h in range(H):
+        kh = k[h // group]
+        vh = v[h // group]
+        logits = kh @ q[h] / jnp.sqrt(d).astype(jnp.float32)
+        logits = jnp.where(mask[h] > 0, logits, -jnp.inf)
+        m = jnp.max(logits)
+        wts = jnp.exp(logits - m)
+        wts = wts / jnp.sum(wts)
+        outs.append(wts @ vh)
+    return jnp.stack(outs)
+
+
+def twilight_pipeline_ref(q, k, v, p, bits=4, page=16):
+    """End-to-end Select(Full)-then-Prune reference: estimate scores from
+    a per-(kv-head, page) quantized K, softmax per query head, top-p mask
+    (union over the GQA group), masked attention. Returns (out, mask)."""
+    H, d = q.shape
+    Hkv, N, _ = k.shape
+    group = H // Hkv
+    masks = []
+    for h in range(H):
+        kh = k[h // group]
+        # Per-page quantization of this kv head's K.
+        scores = []
+        for p0 in range(0, N, page):
+            blk = kh[p0:p0 + page]
+            codes, scale, zero = quantize_ref(blk, bits)
+            scores.append(
+                spgemv_ref(
+                    q[h],
+                    codes,
+                    jnp.full((blk.shape[0],), scale),
+                    jnp.full((blk.shape[0],), zero),
+                )
+            )
+        est = jnp.concatenate(scores) / jnp.sqrt(d).astype(jnp.float32)
+        w = jnp.exp(est - jnp.max(est))
+        w = w / jnp.sum(w)
+        masks.append(topp_mask_ref(w, p))
+    mask = jnp.stack(masks)
+    # GQA union within each group.
+    mask = mask.reshape(Hkv, group, N).max(axis=1, keepdims=True)
+    mask = jnp.broadcast_to(mask, (Hkv, group, N)).reshape(H, N)
+    return masked_attention_ref(q, k, v, mask), mask

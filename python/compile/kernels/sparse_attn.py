@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: masked sparse attention (the final stage of Fig. 5).
+
+One grid step per query head. BlockSpec's index_map implements the GQA
+group mapping (query head h reads KV head h // group), so the K/V tiles
+are pulled into VMEM once per head without a host-side gather. The softmax
+is computed over kept (mask=1) entries only — Definition 3.1 with Λ
+restricted to the selected index set.
+
+VMEM footprint per step (N=4096, d=128 f32): K 2 MiB + V 2 MiB + row
+vectors — within the 16 MiB VMEM budget; longer contexts use bucketed
+artifacts (DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, out_ref):
+    q = q_ref[...]  # [1, d]
+    k = k_ref[...][0]  # [N, d]
+    v = v_ref[...][0]
+    mask = mask_ref[...]  # [1, N]
+    d = q.shape[-1]
+    logits = (k @ q[0]) / jnp.sqrt(d).astype(jnp.float32)  # [N]
+    logits = jnp.where(mask[0] > 0, logits, NEG_INF)
+    m = jnp.max(logits)
+    w = jnp.exp(logits - m)
+    w = w / jnp.sum(w)
+    out_ref[...] = (w @ v)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("group",))
+def sparse_attention(q, k, v, mask, group):
+    """q: [H, d]; k, v: [Hkv, N, d]; mask: [H, N]. Returns [H, d]."""
+    H, d = q.shape
+    Hkv, N, _ = k.shape
+    assert H == Hkv * group
+    return pl.pallas_call(
+        _kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda h: (h, 0)),
+            pl.BlockSpec((1, N, d), lambda h: (h // group, 0, 0)),
+            pl.BlockSpec((1, N, d), lambda h: (h // group, 0, 0)),
+            pl.BlockSpec((1, N), lambda h: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda h: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, d), jnp.float32),
+        interpret=True,
+    )(q, k, v, mask)
+
+
+def twilight_attention(q, k, v, p, group, bits=4, page=16):
+    """The full L1 pipeline (Fig. 5 with a trivial Full selector):
+    INT-quantize K per page → SpGEMV estimation → softmax → top-p binary
+    search → GQA-union mask → masked sparse attention.
+
+    Returns (out [H, d], mask [H, N]). This is the graph `aot.py` lowers
+    to `twilight_attn_*.hlo.txt` for the Rust PJRT path.
+    """
+    from . import quant, spgemv, topp
+
+    H, d = q.shape
+    codes, scale_row, zero_row = quant.quantize_paged(k, bits=bits, page=page)
+    est = spgemv.spgemv_all_heads(q, codes, scale_row, zero_row, group,
+                                  block_n=min(256, k.shape[1]))
+    est = est / jnp.sqrt(d).astype(jnp.float32)
+    w = jax.nn.softmax(est, axis=-1)
+    mask = topp.topp_mask_grouped(w, p, group)
+    out = sparse_attention(q, k, v, mask, group)
+    return out, mask

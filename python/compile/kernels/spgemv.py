@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: score-estimation SpGEMV over the INT4 mirror K cache
+(paper Appendix B.1).
+
+TPU adaptation of the paper's CUDA kernel (DESIGN.md §Hardware-Adaptation):
+the CUDA version unpacks INT4 in shared memory with cp.async double
+buffering; here BlockSpec expresses the HBM→VMEM schedule — each grid step
+pulls one (BN × d) tile of codes plus its per-row scale/zero into VMEM,
+dequantizes in-register via the scale/zero identity, and contracts against
+the resident query vector. Block sizes keep the VMEM footprint under
+256 KiB (BN=256, d=128: codes f32 tile 128 KiB + rows 2 KiB).
+
+Runs under interpret=True on CPU (real-TPU lowering would emit a Mosaic
+custom-call the CPU PJRT plugin cannot execute).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 256
+
+
+def _kernel(q_ref, codes_ref, scale_ref, zero_ref, out_ref):
+    q = q_ref[...]  # [d]
+    codes = codes_ref[...].astype(jnp.float32)  # [BN, d]
+    # dot(q, zero + code*scale) = zero*sum(q) + scale*dot(q, code):
+    # dequantization never materializes the fp K tile.
+    qsum = jnp.sum(q)
+    code_dot = codes @ q
+    out_ref[...] = zero_ref[...] * qsum + scale_ref[...] * code_dot
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def spgemv(q, codes, scale_row, zero_row, block_n=DEFAULT_BLOCK_N):
+    """Estimated scores q·K̂ᵀ for one head.
+
+    q: [d] f32; codes: [N, d] int32 (unsigned codes); scale_row/zero_row:
+    [N] per-row quant params. N must be a multiple of block_n (pad with
+    zero rows — they dequantize to `zero` and are cheap to ignore
+    downstream). Returns [N] f32.
+    """
+    N, d = codes.shape
+    assert N % block_n == 0, f"N={N} not a multiple of block_n={block_n}"
+    grid = (N // block_n,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),  # q resident across steps
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=True,
+    )(q, codes, scale_row, zero_row)
+
+
+def spgemv_all_heads(q, codes, scale_row, zero_row, group, block_n=DEFAULT_BLOCK_N):
+    """Vectorized over query heads: q [H, d], codes [Hkv, N, d],
+    scale/zero [Hkv, N]; head h uses kv head h // group. Returns [H, N]."""
+    H = q.shape[0]
+    outs = [
+        spgemv(q[h], codes[h // group], scale_row[h // group], zero_row[h // group],
+               block_n=block_n)
+        for h in range(H)
+    ]
+    return jnp.stack(outs)

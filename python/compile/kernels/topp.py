@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: top-p selection via binary search (paper Algorithm 1).
+
+One grid step per head; the head's normalized weight row lives in VMEM and
+the fixed-trip binary search runs as a fori_loop whose body is a single
+fused elementwise pass (`where`/`sum` tensorized — exactly the fusion the
+paper's GPU kernel performs; the intermediate W0/W1/W2 of the listing are
+never materialized). 24 iterations bisect the threshold to ~max(w)/2^24,
+far below any epsilon of interest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ITERS = 24
+
+
+def _kernel(w_ref, p_ref, mask_ref):
+    w = w_ref[...]  # [1, N]
+    p = p_ref[0, 0]
+
+    def body(_, lr):
+        l, r = lr
+        m = 0.5 * (l + r)
+        mass = jnp.sum(jnp.where(w >= m, w, 0.0))
+        ge = mass >= p
+        return (jnp.where(ge, m, l), jnp.where(ge, r, m))
+
+    l, _ = jax.lax.fori_loop(0, ITERS, body, (jnp.float32(0.0), jnp.max(w)))
+    mask_ref[...] = (w >= l).astype(jnp.float32)
+
+
+@jax.jit
+def topp_mask(w, p):
+    """Top-p keep mask. w: [H, N] softmax-normalized rows; p: scalar.
+    Returns float mask [H, N]: 1.0 for kept weights; kept mass >= p
+    (invariant: l only moves to thresholds whose at-or-above mass >= p)."""
+    H, N = w.shape
+    p_arr = jnp.full((1, 1), p, jnp.float32)
+    return pl.pallas_call(
+        _kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((1, N), lambda h: (h, 0)),
+            pl.BlockSpec((1, 1), lambda h: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, N), lambda h: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, N), jnp.float32),
+        interpret=True,
+    )(w, p_arr)
+
+
+@functools.partial(jax.jit, static_argnames=("group",))
+def topp_mask_grouped(w, p, group):
+    """Top-p per query head followed by the GQA group union (paper B.2):
+    the final mask is shared by the group so the attention kernel loads
+    each KV row once. w: [H, N]."""
+    mask = topp_mask(w, p)
+    H, N = w.shape
+    hkv = H // group
+    grouped = mask.reshape(hkv, group, N).max(axis=1, keepdims=True)
+    return jnp.broadcast_to(grouped, (hkv, group, N)).reshape(H, N)

@@ -1,0 +1,181 @@
+"""L2: the JAX model — charlm's forward pass (training + decode), kept in
+exact correspondence with the Rust-native forward (`rust/src/model/mod.rs`):
+same RoPE pairing, RMSNorm, tanh-GELU, and projection layouts (weights are
+`[out, in]`, applied as `h @ W.T`). `rust/tests/hlo_parity.rs` asserts the
+two agree through the HLO interchange.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CHARLM_CONFIG = dict(
+    name="charlm",
+    vocab_size=64,
+    d_model=128,
+    n_layers=4,
+    n_heads=8,
+    n_kv_heads=8,
+    head_dim=16,
+    d_ff=512,
+    use_rope=True,
+    rope_theta=10000.0,
+    use_norm=True,
+    norm_eps=1e-5,
+    max_ctx=2048,
+)
+
+
+def init_params(cfg, seed=0):
+    """Initialize charlm parameters (numpy, f32)."""
+    rng = np.random.default_rng(seed)
+    d = cfg["d_model"]
+    qd = cfg["n_heads"] * cfg["head_dim"]
+    kvd = cfg["n_kv_heads"] * cfg["head_dim"]
+
+    def w(shape, std):
+        return rng.normal(0.0, std, size=shape).astype(np.float32)
+
+    std = 0.02
+    layers = []
+    for _ in range(cfg["n_layers"]):
+        layers.append(
+            dict(
+                wq=w((qd, d), std),
+                wk=w((kvd, d), std),
+                wv=w((kvd, d), std),
+                wo=w((d, qd), std / np.sqrt(2 * cfg["n_layers"])),
+                w1=w((cfg["d_ff"], d), std),
+                w2=w((d, cfg["d_ff"]), std / np.sqrt(2 * cfg["n_layers"])),
+                ln1=np.ones(d, np.float32),
+                ln2=np.ones(d, np.float32),
+            )
+        )
+    return dict(
+        embed=w((cfg["vocab_size"], d), 0.5),
+        lm_head=w((cfg["vocab_size"], d), std),
+        final_norm=np.ones(d, np.float32),
+        layers=layers,
+    )
+
+
+def rmsnorm(x, w, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * w / jnp.sqrt(ms + eps)
+
+
+def rope(x, pos, theta):
+    """x: [..., d] with pairs (2i, 2i+1); pos broadcastable to x[..., 0]."""
+    d = x.shape[-1]
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    freq = theta ** (-2.0 * i / d)  # [d/2]
+    ang = pos[..., None] * freq  # [..., d/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x2 = x.reshape(x.shape[:-1] + (d // 2, 2))
+    a, b = x2[..., 0], x2[..., 1]
+    rot = jnp.stack([a * cos - b * sin, a * sin + b * cos], axis=-1)
+    return rot.reshape(x.shape)
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+def forward_train(params, tokens, cfg):
+    """Full-sequence causal forward. tokens: [B, S] int32 → logits [B, S, V]."""
+    B, S = tokens.shape
+    d = cfg["d_model"]
+    H, Hkv, dh = cfg["n_heads"], cfg["n_kv_heads"], cfg["head_dim"]
+    group = H // Hkv
+    x = jnp.asarray(params["embed"])[tokens]  # [B, S, d]
+    pos = jnp.arange(S, dtype=jnp.float32)[None, :]  # [1, S]
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    for lw in params["layers"]:
+        h = rmsnorm(x, lw["ln1"], cfg["norm_eps"]) if cfg["use_norm"] else x
+        q = _split_heads(h @ jnp.asarray(lw["wq"]).T, H, dh)  # [B,S,H,dh]
+        k = _split_heads(h @ jnp.asarray(lw["wk"]).T, Hkv, dh)
+        v = _split_heads(h @ jnp.asarray(lw["wv"]).T, Hkv, dh)
+        if cfg["use_rope"]:
+            q = rope(q, jnp.broadcast_to(pos[..., None], (B, S, H)), cfg["rope_theta"])
+            k = rope(k, jnp.broadcast_to(pos[..., None], (B, S, Hkv)), cfg["rope_theta"])
+        # GQA: expand kv heads to query heads.
+        k_exp = jnp.repeat(k, group, axis=2)  # [B,S,H,dh]
+        v_exp = jnp.repeat(v, group, axis=2)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k_exp) / jnp.sqrt(dh)
+        logits = jnp.where(causal[None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", w, v_exp).reshape(B, S, H * dh)
+        x = x + attn @ jnp.asarray(lw["wo"]).T
+        h = rmsnorm(x, lw["ln2"], cfg["norm_eps"]) if cfg["use_norm"] else x
+        x = x + jax.nn.gelu(h @ jnp.asarray(lw["w1"]).T, approximate=True) @ jnp.asarray(lw["w2"]).T
+    if cfg["use_norm"]:
+        x = rmsnorm(x, params["final_norm"], cfg["norm_eps"])
+    return x @ jnp.asarray(params["lm_head"]).T
+
+
+def forward_prefill(params, tokens, cfg):
+    """Single-sequence causal forward: tokens [S] → logits [S, V]. The
+    graph exported as `charlm_prefill_*.hlo.txt`."""
+    return forward_train(params, tokens[None], cfg)[0]
+
+
+def decode_step(params, tok, pos, k_cache, v_cache, cur_len, cfg):
+    """One decode step against a fixed-capacity cache (the HLO decode
+    graph). tok, pos, cur_len: int32 scalars; k_cache/v_cache:
+    [L, N, Hkv, dh] with rows >= cur_len undefined. Returns
+    (logits [V], k_new [L, Hkv, dh], v_new [L, Hkv, dh])."""
+    d = cfg["d_model"]
+    H, Hkv, dh = cfg["n_heads"], cfg["n_kv_heads"], cfg["head_dim"]
+    group = H // Hkv
+    N = k_cache.shape[1]
+    x = jnp.asarray(params["embed"])[tok]  # [d]
+    posf = jnp.asarray(pos, jnp.float32)
+    valid = jnp.arange(N) < cur_len  # [N]
+    k_news, v_news = [], []
+    for li, lw in enumerate(params["layers"]):
+        h = rmsnorm(x, lw["ln1"], cfg["norm_eps"]) if cfg["use_norm"] else x
+        q = (h @ jnp.asarray(lw["wq"]).T).reshape(H, dh)
+        k = (h @ jnp.asarray(lw["wk"]).T).reshape(Hkv, dh)
+        v = (h @ jnp.asarray(lw["wv"]).T).reshape(Hkv, dh)
+        if cfg["use_rope"]:
+            q = rope(q, jnp.broadcast_to(posf, (H,)), cfg["rope_theta"])
+            k = rope(k, jnp.broadcast_to(posf, (Hkv,)), cfg["rope_theta"])
+        k_news.append(k)
+        v_news.append(v)
+        kc = k_cache[li]  # [N, Hkv, dh]
+        vc = v_cache[li]
+        outs = []
+        for hh in range(H):
+            kvh = hh // group
+            logits = kc[:, kvh] @ q[hh] / jnp.sqrt(dh)  # [N]
+            logits = jnp.where(valid, logits, -1e30)
+            self_logit = jnp.dot(k[kvh], q[hh]) / jnp.sqrt(dh)
+            all_logits = jnp.concatenate([logits, self_logit[None]])
+            w = jax.nn.softmax(all_logits)
+            out = w[:-1] @ vc[:, kvh] + w[-1] * v[kvh]
+            outs.append(out)
+        attn = jnp.concatenate(outs)
+        x = x + attn @ jnp.asarray(lw["wo"]).T
+        h = rmsnorm(x, lw["ln2"], cfg["norm_eps"]) if cfg["use_norm"] else x
+        x = x + jax.nn.gelu(h @ jnp.asarray(lw["w1"]).T, approximate=True) @ jnp.asarray(lw["w2"]).T
+    if cfg["use_norm"]:
+        x = rmsnorm(x, params["final_norm"], cfg["norm_eps"])
+    logits = x @ jnp.asarray(params["lm_head"]).T
+    return logits, jnp.stack(k_news), jnp.stack(v_news)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg_key",))
+def _loss_jit(params, tokens, cfg_key):
+    cfg = dict(cfg_key)
+    logits = forward_train(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def loss_fn(params, tokens, cfg):
+    """Mean next-token NLL over a [B, S] batch."""
+    return _loss_jit(params, tokens, tuple(sorted(cfg.items())))

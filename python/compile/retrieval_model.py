@@ -1,0 +1,121 @@
+"""Constructed-weights retrieval model — python mirror of
+`rust/src/model/retrieval.rs` (same constants, same channel layout).
+The Rust integration test `weights_parity` loads the TWT written here and
+asserts exact equality with the Rust-built weights.
+"""
+
+import numpy as np
+
+N_KEYS = 16
+N_VALS = 16
+BETA = 90.0
+SELF_SUPPRESS = 10.0
+FWE_GAIN = 17.0
+ALPHA_R = 4.0
+ALPHA_F = 1.0
+
+CH_KEY = 0
+CH_VAL = 16
+CH_IS_PAIR = 32
+CH_IS_QNIAH = 33
+CH_IS_QFWE = 34
+CH_OUT = 48
+
+RETRIEVAL_CONFIG = dict(
+    name="retrieval",
+    vocab_size=N_KEYS * N_VALS + N_KEYS + 1 + N_VALS,
+    d_model=64,
+    n_layers=1,
+    n_heads=8,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=4,
+    use_rope=False,
+    rope_theta=10000.0,
+    use_norm=False,
+    norm_eps=1e-5,
+    max_ctx=131072,
+)
+
+
+def pair(k, v):
+    return k * N_VALS + v
+
+
+def query_niah(k):
+    return N_KEYS * N_VALS + k
+
+
+def query_fwe():
+    return N_KEYS * N_VALS + N_KEYS
+
+
+def answer(v):
+    return N_KEYS * N_VALS + N_KEYS + 1 + v
+
+
+def build_params():
+    cfg = RETRIEVAL_CONFIG
+    d = cfg["d_model"]
+    dh = cfg["head_dim"]
+    V = cfg["vocab_size"]
+    qd = cfg["n_heads"] * dh
+    kvd = cfg["n_kv_heads"] * dh
+
+    embed = np.zeros((V, d), np.float32)
+    for k in range(N_KEYS):
+        for v in range(N_VALS):
+            row = pair(k, v)
+            embed[row, CH_KEY + k] = 1.0
+            embed[row, CH_VAL + v] = 1.0
+            embed[row, CH_IS_PAIR] = 1.0
+        embed[query_niah(k), CH_KEY + k] = 1.0
+        embed[query_niah(k), CH_IS_QNIAH] = 1.0
+    embed[query_fwe(), CH_IS_QFWE] = 1.0
+    for v in range(N_VALS):
+        embed[answer(v), CH_VAL + v] = 1.0
+
+    wq = np.zeros((qd, d), np.float32)
+    for h in range(4):
+        for i in range(N_KEYS):
+            wq[h * dh + i, CH_KEY + i] = BETA
+    for h in range(4, 8):
+        wq[h * dh, CH_IS_QFWE] = FWE_GAIN
+
+    wk = np.zeros((kvd, d), np.float32)
+    for i in range(N_KEYS):
+        wk[i, CH_KEY + i] = 1.0
+        wk[i, CH_IS_QNIAH] = -SELF_SUPPRESS
+    wk[dh, CH_IS_PAIR] = 1.0
+
+    wv = np.zeros((kvd, d), np.float32)
+    for i in range(N_VALS):
+        wv[i, CH_VAL + i] = 1.0
+        wv[dh + i, CH_VAL + i] = 1.0
+
+    wo = np.zeros((d, qd), np.float32)
+    for h in range(8):
+        gain = ALPHA_R / 4.0 if h < 4 else ALPHA_F / 4.0
+        for i in range(N_VALS):
+            wo[CH_OUT + i, h * dh + i] = gain
+
+    lm_head = np.zeros((V, d), np.float32)
+    for v in range(N_VALS):
+        lm_head[answer(v), CH_OUT + v] = 1.0
+
+    layer = dict(
+        wq=wq,
+        wk=wk,
+        wv=wv,
+        wo=wo,
+        w1=np.zeros((cfg["d_ff"], d), np.float32),
+        w2=np.zeros((d, cfg["d_ff"]), np.float32),
+        ln1=np.ones(d, np.float32),
+        ln2=np.ones(d, np.float32),
+    )
+    return dict(
+        embed=embed,
+        lm_head=lm_head,
+        final_norm=np.ones(d, np.float32),
+        layers=[layer],
+    )

@@ -1,0 +1,65 @@
+"""TWT tensor-archive writer (the Rust side reads it in
+`rust/src/model/weights.rs`; see that file for the format spec)."""
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"TWT1"
+
+
+def write_twt(path, tensors):
+    """tensors: list of (name, np.ndarray f32)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", 0, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_twt(path):
+    """Read back (for tests)."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (ln,) = struct.unpack("<I", f.read(4))
+            name = f.read(ln).decode()
+            dtype, ndim = struct.unpack("<BB", f.read(2))
+            assert dtype == 0
+            shape = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            numel = int(np.prod(shape)) if ndim else 1
+            data = np.frombuffer(f.read(4 * numel), dtype="<f4").reshape(shape)
+            out[name] = data
+    return out
+
+
+def params_to_tensors(params):
+    """Flatten a charlm-style params dict to TWT (name, array) pairs using
+    the Rust naming convention."""
+    out = [
+        ("embed", params["embed"]),
+        ("lm_head", params["lm_head"]),
+        ("final_norm", params["final_norm"]),
+    ]
+    for i, lw in enumerate(params["layers"]):
+        for key in ("wq", "wk", "wv", "wo", "w1", "w2", "ln1", "ln2"):
+            out.append((f"layers.{i}.{key}", lw[key]))
+    return out
+
+
+def save_model(dirpath, cfg, params):
+    """Write `<dir>/<name>.json` + `<dir>/<name>.twt`."""
+    name = cfg["name"]
+    with open(f"{dirpath}/{name}.json", "w") as f:
+        json.dump(cfg, f, indent=2)
+    write_twt(f"{dirpath}/{name}.twt", params_to_tensors(params))

@@ -1,0 +1,162 @@
+"""Pallas kernels vs pure-jnp oracles — the L1 correctness contract.
+
+Hypothesis sweeps shapes and distributions; every property asserts
+allclose (or the kernel's documented invariant) against `ref.py`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref, sparse_attn, spgemv, topp
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(0, scale, size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- spgemv --
+
+
+@settings(**SETTINGS)
+@given(
+    n_blocks=st.integers(1, 4),
+    d=st.sampled_from([8, 32, 128]),
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 10_000),
+)
+def test_spgemv_matches_ref(n_blocks, d, bits, seed):
+    rng = np.random.default_rng(seed)
+    N = 64 * n_blocks
+    k = rand(rng, 1, N, d)
+    q = rand(rng, d)
+    codes, s, z = quant.quantize_paged(k, bits, 16)
+    got = spgemv.spgemv(q, codes[0], s[0], z[0], block_n=64)
+    want = ref.spgemv_ref(q, codes[0], s[0], z[0])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), bits=st.sampled_from([4, 8]))
+def test_spgemv_approximates_exact_scores(seed, bits):
+    rng = np.random.default_rng(seed)
+    N, d = 128, 64
+    k = rand(rng, 1, N, d)
+    q = rand(rng, d)
+    codes, s, z = quant.quantize_paged(k, bits, 16)
+    est = spgemv.spgemv(q, codes[0], s[0], z[0], block_n=64)
+    exact = k[0] @ q
+    err = float(jnp.max(jnp.abs(est - exact)))
+    # Error bounded by step/2 * sum|q| (per-element worst case).
+    step = float(jnp.max(s))
+    bound = 0.5 * step * float(jnp.sum(jnp.abs(q))) + 1e-3
+    assert err <= bound, f"err {err} > bound {bound}"
+
+
+# ------------------------------------------------------------------ topp --
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([16, 100, 512]),
+    sharp=st.sampled_from([0.3, 2.0, 8.0]),
+    p=st.sampled_from([0.5, 0.85, 0.95]),
+    seed=st.integers(0, 10_000),
+)
+def test_topp_mass_and_near_minimality(n, sharp, p, seed):
+    rng = np.random.default_rng(seed)
+    w = jax.nn.softmax(rand(rng, 4, n, scale=sharp), axis=-1)
+    mask = topp.topp_mask(w, p)
+    kept_mass = (w * mask).sum(-1)
+    assert bool(jnp.all(kept_mass >= p - 1e-3)), kept_mass
+    # Compare budget to the sort oracle; ties allow small slack.
+    oracle = ref.topp_mask_ref(w, p)
+    assert int(mask.sum()) <= int(oracle.sum()) + 4 * w.shape[0]
+
+
+def test_topp_single_spike():
+    w = np.full((1, 128), 1e-4, np.float32)
+    w[0, 7] = 1.0
+    w /= w.sum()
+    mask = topp.topp_mask(jnp.asarray(w), 0.9)
+    assert mask[0, 7] == 1.0
+    assert int(mask.sum()) == 1
+
+
+def test_topp_grouped_union():
+    rng = np.random.default_rng(0)
+    w = jax.nn.softmax(rand(rng, 8, 64, scale=4.0), axis=-1)
+    g = topp.topp_mask_grouped(w, 0.8, group=4)
+    per_head = topp.topp_mask(w, 0.8)
+    # Union property: grouped mask covers each head's own mask.
+    assert bool(jnp.all(g >= per_head))
+    # And is constant within each group.
+    gr = np.asarray(g).reshape(2, 4, 64)
+    assert (gr == gr[:, :1]).all()
+
+
+# --------------------------------------------------------- sparse attention --
+
+
+@settings(**SETTINGS)
+@given(
+    hkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 4]),
+    n=st.sampled_from([32, 256]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 10_000),
+)
+def test_sparse_attention_matches_ref(hkv, group, n, d, seed):
+    rng = np.random.default_rng(seed)
+    H = hkv * group
+    q = rand(rng, H, d)
+    k = rand(rng, hkv, n, d)
+    v = rand(rng, hkv, n, d)
+    mask = (rng.random((H, n)) < 0.3).astype(np.float32)
+    mask[:, 0] = 1.0  # never fully empty
+    got = sparse_attn.sparse_attention(q, k, v, jnp.asarray(mask), group)
+    want = ref.masked_attention_ref(q, k, v, jnp.asarray(mask))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_sparse_attention_full_mask_equals_dense():
+    rng = np.random.default_rng(3)
+    q, k, v = rand(rng, 8, 32), rand(rng, 2, 64, 32), rand(rng, 2, 64, 32)
+    mask = jnp.ones((8, 64), jnp.float32)
+    got = sparse_attn.sparse_attention(q, k, v, mask, 4)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------- pipeline --
+
+
+@settings(**SETTINGS)
+@given(p=st.sampled_from([0.7, 0.9, 0.95]), seed=st.integers(0, 10_000))
+def test_twilight_pipeline_matches_ref(p, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = rand(rng, 8, 32), rand(rng, 2, 256, 32), rand(rng, 2, 256, 32)
+    out, mask = sparse_attn.twilight_attention(q, k, v, p, group=4)
+    out_ref, mask_ref = ref.twilight_pipeline_ref(q, k, v, p)
+    assert float((mask == mask_ref).mean()) > 0.999
+    np.testing.assert_allclose(out, out_ref, rtol=1e-3, atol=1e-4)
+
+
+def test_pipeline_output_close_to_full_attention():
+    # The paper's bound: error <= (1-p)·||V||_F in the attention-weight
+    # metric; empirically the pruned output stays close to dense.
+    rng = np.random.default_rng(4)
+    # Sharpen the queries so the weight distribution is focused (random
+    # N(0,1) data is maximally diffuse and top-p correctly keeps ~all).
+    q = rand(rng, 8, 32, scale=4.0)
+    k, v = rand(rng, 2, 512, 32), rand(rng, 2, 512, 32)
+    dense = ref.attention_ref(q, k, v)
+    out, mask = sparse_attn.twilight_attention(q, k, v, 0.95, group=4)
+    err = float(jnp.max(jnp.abs(out - dense)))
+    assert err < 0.35, err
+    # And it actually pruned something.
+    assert float(mask.mean()) < 0.6, float(mask.mean())

@@ -1,0 +1,76 @@
+#![allow(dead_code)]
+//! Shared helpers for the figure benches (harness = false; criterion is
+//! not in the offline crate set — timing comes from `util::stats::bench`).
+
+use std::sync::Arc;
+use twilight::kvcache::{CacheConfig, PagedKvCache, SeqCache};
+use twilight::model::Model;
+use twilight::util::rng::Rng;
+
+/// Build a paged cache with `n` tokens whose keys have page-coherent
+/// structure (per-page centroids + noise) — the locality real KV caches
+/// exhibit and Quest exploits.
+pub fn structured_cache(seed: u64, kv_heads: usize, d: usize, n: usize) -> (PagedKvCache, SeqCache) {
+    let mut cache = PagedKvCache::new(CacheConfig::new(kv_heads, d, n / 16 + 2));
+    let mut seq = SeqCache::default();
+    let mut r = Rng::new(seed);
+    let mut centroid: Vec<f32> = (0..kv_heads * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+    for t in 0..n {
+        if t % 16 == 0 {
+            centroid = (0..kv_heads * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        }
+        let k: Vec<f32> = centroid.iter().map(|&c| c + r.normal_f32(0.0, 0.3)).collect();
+        let v: Vec<f32> = (0..kv_heads * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        cache.append(&mut seq, &k, &v).unwrap();
+    }
+    (cache, seq)
+}
+
+/// Random query heads `[h * d]`, sharpened so attention is focused.
+pub fn queries(seed: u64, h: usize, d: usize, sharp: f32) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..h * d).map(|_| r.normal_f32(0.0, sharp)).collect()
+}
+
+/// Attention-realistic queries: each head's query is a sharpened copy of
+/// a real key from the cache plus noise — the focused-head regime
+/// (retrieval heads) where sparse attention pays off. Random queries
+/// orthogonal to all keys would give maximally-diffuse attention that
+/// *nothing* can prune; real LLM heads are not like that (Fig. 3).
+pub fn focused_queries(
+    seed: u64,
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    kv_head: usize,
+    h: usize,
+    gain: f32,
+) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    let d = cache.cfg.head_dim;
+    let mut out = Vec::with_capacity(h * d);
+    for _ in 0..h {
+        let t = r.below(seq.len);
+        let (page, slot) = seq.locate(t, cache.cfg.page_size);
+        let k = cache.k_at(page, kv_head, slot);
+        out.extend(k.iter().map(|&x| gain * x + r.normal_f32(0.0, 0.3)));
+    }
+    out
+}
+
+/// The retrieval model shared by the engine-level benches.
+pub fn retrieval_model(max_ctx: usize) -> Arc<Model> {
+    Arc::new(twilight::model::retrieval::build_retrieval_model(
+        twilight::workload::RetrievalVocab::DEFAULT,
+        max_ctx,
+    ))
+}
+
+/// Charlm from artifacts, if built.
+pub fn charlm() -> Option<Arc<Model>> {
+    twilight::model::weights::load_model("artifacts", "charlm").ok().map(Arc::new)
+}
+
+/// Print a bench header with the exhibit it reproduces.
+pub fn header(exhibit: &str, what: &str) {
+    println!("=== {exhibit} — {what} ===");
+}

@@ -1,0 +1,70 @@
+//! Fig. 10 — time breakdown of the Select-then-Prune pipeline vs the
+//! Quest baseline, at several batch sizes on a long-retrieval workload.
+//! Cross-checks the §4.3 cost model.
+
+mod common;
+
+use twilight::coordinator::engine::Engine;
+use twilight::coordinator::SparseConfig;
+use twilight::selector::SelectorKind;
+use twilight::sim;
+use twilight::util::rng::Rng;
+use twilight::workload::{gen_niah, RetrievalVocab};
+
+fn main() {
+    common::header("Figure 10", "time breakdown: selector / pruner / attention");
+    let ctx = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(16384usize);
+    let model = common::retrieval_model(ctx * 2);
+    let v = RetrievalVocab::DEFAULT;
+    println!(
+        "{:>6} {:<16} {:>10} {:>9} {:>9} {:>9} {:>10}",
+        "batch", "method", "ms/step", "select%", "prune%", "attend%", "avg-budget"
+    );
+    for batch in [1usize, 8, 32] {
+        for (label, cfg) in [
+            ("Quest B=N/4", {
+                let mut c = SparseConfig::baseline(SelectorKind::Quest, ctx / 4);
+                c.skip_layers = 0;
+                c
+            }),
+            ("Quest-Twi", {
+                let mut c = SparseConfig::twilight(SelectorKind::Quest, 0.95);
+                c.skip_layers = 0;
+                c
+            }),
+        ] {
+            let mut e = Engine::new(model.clone(), cfg, (ctx + 64) * batch + 64);
+            let mut rng = Rng::new(5);
+            for i in 0..batch {
+                let g = gen_niah(&mut rng, v, ctx);
+                let _ = e.prefill(i as u64, &g.prompt).unwrap();
+            }
+            e.reset_stats();
+            let steps = 4;
+            let t0 = std::time::Instant::now();
+            for _ in 0..steps {
+                for i in 0..batch {
+                    let _ = e.decode(i as u64, 3).unwrap();
+                }
+            }
+            let total = t0.elapsed().as_secs_f64();
+            let s = &e.stats;
+            println!(
+                "{:>6} {:<16} {:>10.2} {:>8.1}% {:>8.1}% {:>8.1}% {:>10.1}",
+                batch,
+                label,
+                total / steps as f64 * 1e3,
+                100.0 * s.t_select / total,
+                100.0 * s.t_prune / total,
+                100.0 * (s.t_attend + s.t_dense) / total,
+                s.avg_kept(),
+            );
+        }
+    }
+    // §4.3 closed form for reference.
+    let b0 = ctx as f64 / 4.0;
+    println!(
+        "\n§4.3 theoretical speedup at B0=N/4, B1=N/64: {:.2}x",
+        sim::theoretical_speedup(ctx as f64, b0, ctx as f64 / 64.0)
+    );
+}

@@ -1,0 +1,42 @@
+//! Fig. 12 — SpGEMV (score estimation) latency vs quantization width.
+//! The kernel is memory-bound, so latency should track bytes streamed:
+//! INT2 < INT4 < INT8 < FP16.
+
+mod common;
+
+use std::time::Duration;
+use twilight::attention::spgemv::QuantizedK;
+use twilight::tensor::quant::QuantBits;
+use twilight::util::rng::Rng;
+use twilight::util::stats::bench;
+
+fn main() {
+    common::header("Figure 12", "SpGEMV latency vs quantization bits");
+    let d = 128;
+    println!("{:>7} {:>6} {:>12} {:>12} {:>10}", "N", "bits", "us/call", "MB", "GB/s");
+    for n in [4096usize, 16384, 65536] {
+        let mut r = Rng::new(1);
+        let k: Vec<f32> = (0..n * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let q: Vec<f32> = (0..d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let mut out = vec![0.0f32; n];
+        for bits in [QuantBits::Int2, QuantBits::Int4, QuantBits::Int8, QuantBits::Fp16] {
+            let qk = QuantizedK::from_rows(&k, d, bits, 16);
+            let res = bench(
+                "spgemv",
+                Duration::from_millis(60),
+                Duration::from_millis(400),
+                3,
+                || qk.gemv(&q, &mut out),
+            );
+            let bytes = qk.bytes() as f64;
+            println!(
+                "{:>7} {:>6} {:>12.1} {:>12.2} {:>10.2}",
+                n,
+                bits.bits(),
+                res.secs.mean * 1e6,
+                bytes / 1e6,
+                bytes / res.secs.mean / 1e9,
+            );
+        }
+    }
+}

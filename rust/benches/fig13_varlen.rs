@@ -1,0 +1,91 @@
+//! Fig. 13 — padded vs head-varlen vs group-varlen attention under a
+//! *real* Twilight budget distribution (collected from a retrieval run),
+//! plus the LPT vs round-robin load-balance makespan (§4.2).
+
+mod common;
+
+use std::time::Duration;
+use twilight::attention::sparse;
+use twilight::coordinator::balance::{lpt_partition, makespan, round_robin_partition, WorkItem};
+use twilight::pruner::{prune_head, PrunerConfig, PrunerScratch};
+use twilight::util::stats::bench;
+
+fn main() {
+    common::header("Figure 13", "varlen attention packings under head-dynamic budgets");
+    let d = 64;
+    let n = 16384;
+    let group = 4;
+    let (cache, seq) = common::structured_cache(3, 1, d, n);
+    // Real per-head budgets: prune each query head separately at p=0.9,
+    // mixing focused (sharp q) and diffuse (flat q) heads like Fig. 11.
+    let mut kept: Vec<Vec<usize>> = Vec::new();
+    let mut qs = Vec::new();
+    let pc = PrunerConfig { p: 0.9, ..Default::default() };
+    let mut scratch = PrunerScratch::default();
+    let all: Vec<usize> = (0..n).collect();
+    for g in 0..group {
+        let sharp = if g % 2 == 0 { 3.0 } else { 0.2 }; // focused vs diffuse
+        let q = common::queries(40 + g as u64, 1, d, sharp);
+        let out = prune_head(&pc, &cache, &seq, 0, &q, &all, &mut scratch);
+        kept.push(out.kept);
+        qs.extend(q);
+    }
+    let budgets: Vec<usize> = kept.iter().map(|k| k.len()).collect();
+    let max_budget = *budgets.iter().max().unwrap();
+    println!("per-head budgets: {budgets:?} (max {max_budget})\n");
+
+    let mut out = vec![0.0f32; group * d];
+    let warm = Duration::from_millis(50);
+    let meas = Duration::from_millis(400);
+    // Padded: every head pays max_budget.
+    let r_pad = bench("padded", warm, meas, 3, || {
+        for g in 0..group {
+            sparse::padded(&cache, &seq, 0, &qs[g * d..(g + 1) * d], &kept[g], max_budget,
+                &mut out[g * d..(g + 1) * d]);
+        }
+    });
+    // Head-varlen: exact per-head work, but under GQA K/V re-read per head.
+    let r_head = bench("head-varlen", warm, meas, 3, || {
+        for g in 0..group {
+            sparse::head_varlen(&cache, &seq, 0, &qs[g * d..(g + 1) * d], &kept[g],
+                &mut out[g * d..(g + 1) * d]);
+        }
+    });
+    // Group-varlen: union indices, one K/V load per group.
+    let mut union: Vec<usize> = kept.iter().flatten().copied().collect();
+    union.sort_unstable();
+    union.dedup();
+    let r_group = bench("group-varlen", warm, meas, 3, || {
+        sparse::group_varlen(&cache, &seq, 0, &qs, group, &union, &mut out);
+    });
+    // KV bytes each packing must stream (the GPU-bandwidth metric; on a
+    // cache-resident CPU run, compute dominates instead — DESIGN.md §2).
+    let row_bytes = d * 2 * 2; // K+V fp16
+    let bytes_pad = group * max_budget * row_bytes;
+    let bytes_head: usize = budgets.iter().map(|b| b * row_bytes).sum();
+    let bytes_group = union.len() * row_bytes;
+    println!("{:<14} {:>12} {:>14}", "packing", "ms/step", "KV-MB-touched");
+    for (r, bytes) in [(&r_pad, bytes_pad), (&r_head, bytes_head), (&r_group, bytes_group)] {
+        println!("{:<14} {:>12.3} {:>14.2}", r.name, r.secs.mean * 1e3, bytes as f64 / 1e6);
+    }
+
+    // Load-balance makespan with these budgets over simulated workers.
+    println!("\nload balancing (32 sequences × {group} heads, same budget mix):");
+    let items: Vec<WorkItem> = (0..32)
+        .flat_map(|s| {
+            budgets.iter().enumerate().map(move |(h, &b)| WorkItem {
+                seq: s as u32,
+                kv_head: h as u32,
+                budget: b,
+            })
+        })
+        .collect();
+    for workers in [4usize, 8, 16] {
+        let lpt = makespan(&lpt_partition(&items, workers));
+        let rr = makespan(&round_robin_partition(&items, workers));
+        println!(
+            "  {workers:>2} workers: LPT makespan {lpt:>8}  round-robin {rr:>8}  ({:.2}x better)",
+            rr as f64 / lpt as f64
+        );
+    }
+}

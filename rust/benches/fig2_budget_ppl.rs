@@ -1,0 +1,43 @@
+//! Fig. 2 — held-out perplexity vs KV-cache budget for the top-k
+//! methods (charlm on the synthetic corpus; requires `make artifacts`).
+//! The paper's shape: each method needs a *different* budget to approach
+//! full-attention ppl, and the oracle needs the least.
+
+mod common;
+
+use twilight::coordinator::SparseConfig;
+use twilight::evalsuite::ppl::eval_ppl;
+use twilight::selector::SelectorKind;
+use twilight::workload::load_corpus;
+
+fn main() {
+    common::header("Figure 2", "perplexity vs budget per top-k method (charlm)");
+    let Some(model) = common::charlm() else {
+        println!("SKIP: charlm artifacts missing (run `make artifacts`)");
+        return;
+    };
+    let corpus = load_corpus("artifacts/corpus_eval.bin").expect("corpus artifact");
+    let windows = 2;
+    let wlen = 384;
+    let burn = 48;
+    let full = eval_ppl(model.clone(), &SparseConfig::dense(), &corpus, windows, wlen, burn);
+    println!("full attention ppl = {:.3}\n", full.ppl);
+    println!("{:>9} {:>10} {:>10} {:>10} {:>10}", "budget", "oracle", "quest", "ds", "streaming");
+    for budget in [8usize, 16, 32, 64, 128, 256] {
+        let mut row = format!("{budget:>9}");
+        for sel in [
+            SelectorKind::Oracle,
+            SelectorKind::Quest,
+            SelectorKind::DoubleSparsity,
+            SelectorKind::StreamingLlm,
+        ] {
+            let mut cfg = SparseConfig::baseline(sel, budget);
+            cfg.skip_layers = 2; // paper: first two layers dense
+            cfg.dense_below = budget;
+            let r = eval_ppl(model.clone(), &cfg, &corpus, windows, wlen, burn);
+            row.push_str(&format!(" {:>10.3}", r.ppl));
+        }
+        println!("{row}");
+    }
+    println!("\n(lower is better; oracle should reach full-ppl at the smallest budget)");
+}

@@ -1,0 +1,55 @@
+//! Fig. 1/3 — focused vs diffuse attention-weight distributions, on both
+//! models: the constructed retrieval heads and trained charlm heads.
+
+mod common;
+
+use twilight::evalsuite::distributions::{entropy, final_position_weights};
+use twilight::pruner::topp::oracle_budget;
+use twilight::util::rng::Rng;
+use twilight::util::stats::Histogram;
+use twilight::workload::{gen_niah, load_corpus, RetrievalVocab};
+
+fn main() {
+    common::header("Figure 1/3", "attention weight distributions: focused vs diffuse");
+    let v = RetrievalVocab::DEFAULT;
+    let ctx = 2048;
+    let model = common::retrieval_model(ctx * 2);
+    let mut rng = Rng::new(2);
+    let g = gen_niah(&mut rng, v, ctx);
+    let ws = final_position_weights(&model, &g.prompt, 0);
+    println!("retrieval model, NIAH query, {ctx} tokens:");
+    println!("{:>5} {:<12} {:>10} {:>12} {:>14}", "head", "kind", "entropy", "p90-budget", "weight-profile");
+    for (h, w) in ws.iter().enumerate() {
+        let mut hist = Histogram::new(0.0, 1.0, 24);
+        let max = w.iter().cloned().fold(0.0f32, f32::max);
+        for &x in w.iter() {
+            hist.add((x / max) as f64);
+        }
+        println!(
+            "{:>5} {:<12} {:>10.2} {:>12} {:>24}",
+            h,
+            if h < 4 { "retrieval" } else { "aggregation" },
+            entropy(w),
+            oracle_budget(w, 0.9),
+            hist.sparkline(),
+        );
+    }
+    if let Some(charlm) = common::charlm() {
+        let corpus = load_corpus("artifacts/corpus_eval.bin").expect("corpus");
+        let prompt: Vec<u32> = corpus[..512].to_vec();
+        println!("\ncharlm (trained), 512-token corpus window, layer 2:");
+        println!("{:>5} {:>10} {:>12}", "head", "entropy", "p90-budget");
+        let ws = final_position_weights(&charlm, &prompt, 2);
+        let mut budgets: Vec<usize> = Vec::new();
+        for (h, w) in ws.iter().enumerate() {
+            let b = oracle_budget(w, 0.9);
+            budgets.push(b);
+            println!("{:>5} {:>10.2} {:>12}", h, entropy(w), b);
+        }
+        let min = budgets.iter().min().unwrap();
+        let max = budgets.iter().max().unwrap();
+        println!("budget spread across heads: min {min}, max {max} ({}x)", max / min.max(&1));
+    } else {
+        println!("\n(charlm artifacts missing — run `make artifacts` for the trained-head panel)");
+    }
+}

@@ -1,0 +1,50 @@
+//! Fig. 6 — kept attention mass at p=0.85 when the pruner estimates
+//! weights from INT2 / INT4 / INT8 / FP16 mirrors, scored under the
+//! exact (FP32) weights. The paper's finding: INT2 collapses, INT4 ≈ INT8.
+
+mod common;
+
+use twilight::attention::spgemv::QuantizedK;
+use twilight::pruner::topp::topp_binary_search;
+use twilight::tensor::quant::QuantBits;
+use twilight::tensor::{dot, softmax_inplace};
+use twilight::util::rng::Rng;
+use twilight::util::stats::mean;
+
+fn main() {
+    common::header("Figure 6", "true attention mass captured at p=0.85 per quant width");
+    let d = 128;
+    let n = 4096;
+    let p = 0.85f32;
+    let trials = 12;
+    println!("{:>6} {:>14} {:>12}", "bits", "kept-mass", "avg-budget");
+    for bits in [QuantBits::Int2, QuantBits::Int4, QuantBits::Int8, QuantBits::Fp16] {
+        let mut masses = Vec::new();
+        let mut budgets = Vec::new();
+        for t in 0..trials {
+            let mut r = Rng::new(100 + t);
+            let k: Vec<f32> = (0..n * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let q: Vec<f32> = (0..d).map(|_| r.normal_f32(0.0, 2.0)).collect();
+            // Exact weights.
+            let scale = 1.0 / (d as f32).sqrt();
+            let mut exact: Vec<f32> =
+                (0..n).map(|i| dot(&q, &k[i * d..(i + 1) * d]) * scale).collect();
+            softmax_inplace(&mut exact);
+            // Estimated weights from the quantized mirror.
+            let qk = QuantizedK::from_rows(&k, d, bits, 16);
+            let mut est = vec![0.0f32; n];
+            qk.gemv(&q, &mut est);
+            for e in est.iter_mut() {
+                *e *= scale;
+            }
+            softmax_inplace(&mut est);
+            let sel = topp_binary_search(&est, p, 1e-5);
+            // Score: how much *true* mass the estimated selection kept.
+            let kept: f32 = sel.indices.iter().map(|&i| exact[i]).sum();
+            masses.push(kept as f64);
+            budgets.push(sel.indices.len() as f64);
+        }
+        println!("{:>6} {:>14.4} {:>12.1}", bits.bits(), mean(&masses), mean(&budgets));
+    }
+    println!("\n(INT2 should fall visibly below p; INT4 and INT8 should both hold ≈p or above)");
+}

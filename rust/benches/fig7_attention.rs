@@ -1,0 +1,167 @@
+//! Fig. 7 — self-attention operator latency and speedup across sequence
+//! lengths and batch sizes.
+//!
+//! Methods (CPU analogs, DESIGN.md §2): FA2 = contiguous dense;
+//! FlashInfer = paged dense; FlashInfer-Twi = Full selector + Twilight;
+//! Quest = page top-k at B=N/4; Quest-Twi = Quest + Twilight. Reported:
+//! measured per-(seq × kv-head × step) latency, speedup vs FA2, and the
+//! byte-model estimated-A100 latency.
+
+mod common;
+
+use std::time::Duration;
+use twilight::attention::{full, sparse};
+use twilight::pruner::{prune_group, PrunerConfig, PrunerScratch};
+use twilight::selector::{quest::QuestSelector, TokenSelector};
+use twilight::sim;
+use twilight::util::stats::bench;
+
+fn main() {
+    common::header("Figure 7", "self-attention latency vs seqlen × batch");
+    let d = 64;
+    let kv_heads = 1;
+    let group = 4; // 4 query heads per kv head (GQA)
+    // Optional comma-separated lens in argv (cargo bench also passes
+    // flags like `--bench`; ignore anything non-numeric).
+    let mut lens: Vec<usize> = std::env::args()
+        .skip(1)
+        .flat_map(|s| s.split(',').filter_map(|t| t.parse().ok()).collect::<Vec<_>>())
+        .collect();
+    if lens.is_empty() {
+        lens = vec![4096, 8192, 16384, 32768];
+    }
+    let batches = [1usize, 8];
+    println!(
+        "{:>7} {:>6} {:<16} {:>12} {:>9} {:>12}",
+        "seqlen", "batch", "method", "ms/step", "vs-FA2", "est-A100-us"
+    );
+    for &n in &lens {
+        for &b in &batches {
+            let caches: Vec<_> =
+                (0..b).map(|i| common::structured_cache(100 + i as u64, kv_heads, d, n)).collect();
+            let qs: Vec<Vec<f32>> = (0..b)
+                .map(|i| common::focused_queries(7 + i as u64, &caches[i].0, &caches[i].1, 0, group, 2.0))
+                .collect();
+            // Contiguous copies for the FA2 analog.
+            let flat: Vec<(Vec<f32>, Vec<f32>)> = caches
+                .iter()
+                .map(|(c, s)| {
+                    let mut k = Vec::with_capacity(n * d);
+                    let mut v = Vec::with_capacity(n * d);
+                    for t in 0..s.len {
+                        let (p, sl) = s.locate(t, 16);
+                        k.extend_from_slice(c.k_at(p, 0, sl));
+                        v.extend_from_slice(c.v_at(p, 0, sl));
+                    }
+                    (k, v)
+                })
+                .collect();
+            let mut out = vec![0.0f32; group * d];
+            let warm = Duration::from_millis(50);
+            let meas = Duration::from_millis(300);
+
+            let mut results = Vec::new();
+            // FA2 analog.
+            let r = bench("fa2", warm, meas, 3, || {
+                for i in 0..b {
+                    for g in 0..group {
+                        full::contiguous_full(
+                            &qs[i][g * d..(g + 1) * d],
+                            &flat[i].0,
+                            &flat[i].1,
+                            &mut out[g * d..(g + 1) * d],
+                        );
+                    }
+                }
+            });
+            let fa2 = r.secs.mean;
+            results.push(("FA2", fa2, sim::full_stage_bytes(n, d)));
+            // FlashInfer analog (paged streaming).
+            let r = bench("flashinfer", warm, meas, 3, || {
+                for i in 0..b {
+                    for g in 0..group {
+                        full::paged_full(
+                            &caches[i].0,
+                            &caches[i].1,
+                            0,
+                            &qs[i][g * d..(g + 1) * d],
+                            &mut out[g * d..(g + 1) * d],
+                        );
+                    }
+                }
+            });
+            results.push(("FlashInfer", r.secs.mean, sim::full_stage_bytes(n, d)));
+            // FlashInfer-Twi: prune the full context then sparse-attend.
+            let pc = PrunerConfig { p: 0.9, ..Default::default() };
+            let all: Vec<usize> = (0..n).collect();
+            let mut scratch = PrunerScratch::default();
+            let r = bench("flashinfer-twi", warm, meas, 3, || {
+                for i in 0..b {
+                    let (kept, _) = prune_group(
+                        &pc, &caches[i].0, &caches[i].1, 0, &qs[i], group, &all, &mut scratch,
+                    );
+                    sparse::group_varlen(&caches[i].0, &caches[i].1, 0, &qs[i], group, &kept, &mut out);
+                }
+            });
+            let b1 = {
+                let (kept, _) =
+                    prune_group(&pc, &caches[0].0, &caches[0].1, 0, &qs[0], group, &all, &mut scratch);
+                kept.len()
+            };
+            results.push((
+                "FlashInfer-Twi",
+                r.secs.mean,
+                sim::quest_twilight_stage_bytes(n, d, 16, n, b1),
+            ));
+            // Quest B=N/4.
+            let budget = n / 4;
+            let mut selectors: Vec<QuestSelector> = (0..b).map(|_| QuestSelector::new()).collect();
+            let r = bench("quest", warm, meas, 3, || {
+                for i in 0..b {
+                    let cand = selectors[i].select(&caches[i].0, &caches[i].1, 0, &qs[i], group, budget);
+                    sparse::group_varlen(&caches[i].0, &caches[i].1, 0, &qs[i], group, &cand, &mut out);
+                }
+            });
+            results.push(("Quest", r.secs.mean, sim::quest_stage_bytes(n, d, 16, budget)));
+            // Quest-Twi.
+            let r = bench("quest-twi", warm, meas, 3, || {
+                for i in 0..b {
+                    let cand = selectors[i].select(&caches[i].0, &caches[i].1, 0, &qs[i], group, budget);
+                    let (kept, _) =
+                        prune_group(&pc, &caches[i].0, &caches[i].1, 0, &qs[i], group, &cand, &mut scratch);
+                    sparse::group_varlen(&caches[i].0, &caches[i].1, 0, &qs[i], group, &kept, &mut out);
+                }
+            });
+            let b1q = {
+                let cand = selectors[0].select(&caches[0].0, &caches[0].1, 0, &qs[0], group, budget);
+                let (kept, _) =
+                    prune_group(&pc, &caches[0].0, &caches[0].1, 0, &qs[0], group, &cand, &mut scratch);
+                kept.len()
+            };
+            results.push((
+                "Quest-Twi",
+                r.secs.mean,
+                sim::quest_twilight_stage_bytes(n, d, 16, budget, b1q),
+            ));
+            for (name, secs, bytes) in &results {
+                // Batched-kernel estimate: per-seq bytes scale with batch,
+                // kernel launches do not.
+                let stages = [bytes.selector, bytes.pruner, bytes.attention]
+                    .iter()
+                    .filter(|&&x| x > 0)
+                    .count() as f64;
+                let est = (bytes.total() * b) as f64 / sim::A100.mem_bw
+                    + stages * sim::A100.launch_overhead;
+                println!(
+                    "{:>7} {:>6} {:<16} {:>12.3} {:>8.1}x {:>12.1}",
+                    n,
+                    b,
+                    name,
+                    secs * 1e3,
+                    fa2 / secs,
+                    est * 1e6,
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Fig. 8 — end-to-end decoding TPOT across batch sizes, through the
+//! full coordinator (queue → continuous batcher → engine).
+
+mod common;
+
+use twilight::coordinator::engine::Engine;
+use twilight::coordinator::request::Request;
+use twilight::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use twilight::coordinator::SparseConfig;
+use twilight::selector::SelectorKind;
+use twilight::util::rng::Rng;
+use twilight::workload::{gen_niah, RetrievalVocab};
+
+fn main() {
+    common::header("Figure 8", "end-to-end TPOT vs batch size");
+    let ctx = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4096usize);
+    let model = common::retrieval_model(ctx * 2);
+    let v = RetrievalVocab::DEFAULT;
+    println!(
+        "{:>6} {:<18} {:>10} {:>12} {:>10}",
+        "batch", "method", "tpot-ms", "tok/s", "vs-dense"
+    );
+    for batch in [4usize, 16, 32] {
+        let mut dense_tpot = 0.0;
+        for (label, cfg) in [
+            ("FlashInfer(dense)", SparseConfig::dense()),
+            ("Quest B=N/4", {
+                let mut c = SparseConfig::baseline(SelectorKind::Quest, ctx / 4);
+                c.skip_layers = 0;
+                c
+            }),
+            ("Quest-Twi p=0.95", {
+                let mut c = SparseConfig::twilight(SelectorKind::Quest, 0.95);
+                c.skip_layers = 0;
+                c
+            }),
+        ] {
+            let engine = Engine::new(model.clone(), cfg, (ctx + 80) * (batch + 1));
+            let mut sched = Scheduler::new(
+                engine,
+                SchedulerConfig { max_batch: batch, ..Default::default() },
+            );
+            let mut rng = Rng::new(9);
+            for i in 0..batch {
+                let g = gen_niah(&mut rng, v, ctx);
+                sched.submit(Request::new(i as u64, g.prompt, 6));
+            }
+            let rep = sched.run_to_completion();
+            let tpot = rep.tpot_summary().mean;
+            if label.starts_with("FlashInfer") {
+                dense_tpot = tpot;
+            }
+            println!(
+                "{:>6} {:<18} {:>10.2} {:>12.1} {:>9.2}x",
+                batch,
+                label,
+                tpot * 1e3,
+                rep.throughput_tok_s(),
+                dense_tpot / tpot,
+            );
+        }
+    }
+}

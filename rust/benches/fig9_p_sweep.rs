@@ -1,0 +1,47 @@
+//! Fig. 9 — sensitivity to the threshold p: charlm perplexity (accuracy)
+//! and sparse-attention step latency (efficiency) across p values.
+
+mod common;
+
+use twilight::coordinator::engine::Engine;
+use twilight::coordinator::SparseConfig;
+use twilight::evalsuite::ppl::eval_ppl;
+use twilight::selector::SelectorKind;
+use twilight::util::rng::Rng;
+use twilight::workload::{gen_niah, load_corpus, RetrievalVocab};
+
+fn main() {
+    common::header("Figure 9", "accuracy & latency vs threshold p");
+    let ps = [0.5f32, 0.7, 0.8, 0.85, 0.9, 0.95, 0.99];
+    // Latency side: retrieval model at 16k context.
+    let ctx = 16384;
+    let model = common::retrieval_model(ctx * 2);
+    let mut rng = Rng::new(1);
+    let g = gen_niah(&mut rng, RetrievalVocab::DEFAULT, ctx);
+    println!("{:>6} {:>14} {:>12} {:>12}", "p", "attn-ms/step", "avg-budget", "charlm-ppl");
+    let charlm = common::charlm();
+    let corpus = load_corpus("artifacts/corpus_eval.bin").ok();
+    for &p in &ps {
+        let mut cfg = SparseConfig::twilight(SelectorKind::Quest, p);
+        cfg.skip_layers = 0;
+        let mut e = Engine::new(model.clone(), cfg, ctx + 64);
+        let _ = e.prefill(0, &g.prompt).unwrap();
+        e.reset_stats();
+        let steps = 6;
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            let _ = e.decode(0, 3).unwrap();
+        }
+        let ms = t0.elapsed().as_secs_f64() / steps as f64 * 1e3;
+        let ppl = match (&charlm, &corpus) {
+            (Some(m), Some(c)) => {
+                let mut cc = SparseConfig::twilight(SelectorKind::Quest, p);
+                cc.skip_layers = 2;
+                format!("{:>12.3}", eval_ppl(m.clone(), &cc, c, 2, 256, 32).ppl)
+            }
+            _ => format!("{:>12}", "n/a"),
+        };
+        println!("{:>6.2} {:>14.2} {:>12.1} {}", p, ms, e.stats.avg_kept(), ppl);
+    }
+    println!("\n(the knee — good ppl at low latency — should sit near p≈0.85-0.95)");
+}

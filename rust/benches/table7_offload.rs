@@ -1,0 +1,65 @@
+//! Table 7 — single attention-operator latency in CPU-offload scenarios:
+//! the KV cache lives behind a slow link; Quest must load B0 = N/4 tokens
+//! through it, Quest-Twi loads only the pruned B1 (its INT4 mirror stays
+//! resident).
+
+mod common;
+
+use std::time::Duration;
+use twilight::attention::full::contiguous_full;
+use twilight::kvcache::offload::OffloadArena;
+use twilight::pruner::{prune_head, PrunerConfig, PrunerScratch};
+use twilight::selector::{quest::QuestSelector, TokenSelector};
+use twilight::util::rng::Rng;
+use twilight::util::stats::bench;
+
+fn main() {
+    common::header("Table 7", "attention latency with offloaded KV (us)");
+    let d = 64;
+    println!("{:>7} {:>14} {:>14} {:>9}", "tokens", "Quest-us", "Quest-Twi-us", "speedup");
+    for n in [10_240usize, 20_480, 30_720] {
+        let (cache, seq) = common::structured_cache(7, 1, d, n);
+        // Offload arena mirrors the cache contents behind a slow link.
+        let mut arena = OffloadArena::new(d, 8);
+        for t in 0..n {
+            let (p, s) = seq.locate(t, 16);
+            arena.push(cache.k_at(p, 0, s), cache.v_at(p, 0, s));
+        }
+        // Focused-head queries (retrieval regime — where offloading bites).
+        let q = common::focused_queries(9, &cache, &seq, 0, 1, 2.0);
+        let budget = n / 4;
+        let mut selector = QuestSelector::new();
+        let pc = PrunerConfig { p: 0.9, ..Default::default() };
+        let mut scratch = PrunerScratch::default();
+        let mut out = vec![0.0f32; d];
+        let mut kbuf = vec![0.0f32; budget * d];
+        let mut vbuf = vec![0.0f32; budget * d];
+        let warm = Duration::from_millis(40);
+        let meas = Duration::from_millis(300);
+        // Quest: select pages (metadata resident), then *load* B0 tokens
+        // through the link and attend.
+        let r_quest = bench("quest-offload", warm, meas, 2, || {
+            let cand = selector.select(&cache, &seq, 0, &q, 1, budget);
+            arena.load_tokens(&cand, &mut kbuf[..cand.len() * d], &mut vbuf[..cand.len() * d]);
+            contiguous_full(&q, &kbuf[..cand.len() * d], &vbuf[..cand.len() * d], &mut out);
+        });
+        // Quest-Twi: same selection; pruner reads the resident INT4
+        // mirror; only B1 tokens cross the link.
+        let r_twi = bench("quest-twi-offload", warm, meas, 2, || {
+            let cand = selector.select(&cache, &seq, 0, &q, 1, budget);
+            let pruned = prune_head(&pc, &cache, &seq, 0, &q, &cand, &mut scratch);
+            let b1 = pruned.kept.len();
+            arena.load_tokens(&pruned.kept, &mut kbuf[..b1 * d], &mut vbuf[..b1 * d]);
+            contiguous_full(&q, &kbuf[..b1 * d], &vbuf[..b1 * d], &mut out);
+        });
+        println!(
+            "{:>7} {:>14.1} {:>14.1} {:>8.1}x",
+            n,
+            r_quest.secs.mean * 1e6,
+            r_twi.secs.mean * 1e6,
+            r_quest.secs.mean / r_twi.secs.mean
+        );
+        let mut rng = Rng::new(0);
+        let _ = rng.f32();
+    }
+}

@@ -1,0 +1,146 @@
+//! Dense attention baselines.
+//!
+//! `contiguous_full` is the SDPA/FlashAttention2 analog: K/V as flat
+//! `[n, d]` slices, two-pass softmax. `paged_full` is the FlashInfer
+//! analog: iterates the paged KV cache with a streaming (online) softmax
+//! so pages are visited exactly once — the same single-pass structure as
+//! flash decoding, which is what makes it bandwidth-optimal.
+
+use super::scale;
+use crate::kvcache::{PagedKvCache, SeqCache};
+use crate::tensor::{axpy, dot};
+
+/// Dense attention over contiguous K/V (`[n, d]` row-major): out `[d]`.
+pub fn contiguous_full(q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
+    let d = q.len();
+    let n = k.len() / d;
+    debug_assert_eq!(k.len(), n * d);
+    debug_assert_eq!(v.len(), n * d);
+    let s = scale(d);
+    let mut logits = vec![0.0f32; n];
+    for (i, l) in logits.iter_mut().enumerate() {
+        *l = dot(q, &k[i * d..(i + 1) * d]) * s;
+    }
+    crate::tensor::softmax_inplace(&mut logits);
+    out.fill(0.0);
+    for (i, &w) in logits.iter().enumerate() {
+        axpy(w, &v[i * d..(i + 1) * d], out);
+    }
+}
+
+/// Streaming-softmax dense attention over the paged cache for one head.
+/// Visits each page once; numerically identical (up to fp error) to the
+/// two-pass version.
+pub fn paged_full(cache: &PagedKvCache, seq: &SeqCache, head: usize, q: &[f32], out: &mut [f32]) {
+    let d = q.len();
+    let s = scale(d);
+    let mut m = f32::NEG_INFINITY; // running max
+    let mut denom = 0.0f32; // running sum of exp
+    out.fill(0.0);
+    for (pi, &page) in seq.pages.iter().enumerate() {
+        let fill = if pi + 1 == seq.pages.len() {
+            seq.len - pi * cache.cfg.page_size
+        } else {
+            cache.cfg.page_size
+        };
+        for slot in 0..fill {
+            let logit = dot(q, cache.k_at(page, head, slot)) * s;
+            if logit > m {
+                // Rescale accumulated state.
+                let corr = (m - logit).exp();
+                if m.is_finite() {
+                    denom *= corr;
+                    for o in out.iter_mut() {
+                        *o *= corr;
+                    }
+                }
+                m = logit;
+            }
+            let w = (logit - m).exp();
+            denom += w;
+            axpy(w, cache.v_at(page, head, slot), out);
+        }
+    }
+    if denom > 0.0 {
+        let inv = 1.0 / denom;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::{naive_sparse, random_cache, random_q};
+
+    #[test]
+    fn contiguous_matches_naive() {
+        let d = 16;
+        let n = 37;
+        let q = random_q(1, d);
+        let mut r = crate::util::rng::Rng::new(2);
+        let k: Vec<f32> = (0..n * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let v: Vec<f32> = (0..n * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let mut out = vec![0.0; d];
+        contiguous_full(&q, &k, &v, &mut out);
+        // Naive: weights then weighted sum.
+        let s = scale(d);
+        let mut w: Vec<f32> = (0..n).map(|i| dot(&q, &k[i * d..(i + 1) * d]) * s).collect();
+        crate::tensor::softmax_inplace(&mut w);
+        let mut want = vec![0.0; d];
+        for i in 0..n {
+            axpy(w[i], &v[i * d..(i + 1) * d], &mut want);
+        }
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn paged_matches_all_indices_sparse() {
+        let (cache, seq) = random_cache(3, 2, 16, 53);
+        let q = random_q(4, 16);
+        for head in 0..2 {
+            let mut out = vec![0.0; 16];
+            paged_full(&cache, &seq, head, &q, &mut out);
+            let all: Vec<usize> = (0..seq.len).collect();
+            let want = naive_sparse(&cache, &seq, head, &q, &all);
+            for (a, b) in out.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "head {head}: {out:?} vs {want:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn paged_single_token() {
+        let (cache, seq) = random_cache(5, 1, 8, 1);
+        let q = random_q(6, 8);
+        let mut out = vec![0.0; 8];
+        paged_full(&cache, &seq, 0, &q, &mut out);
+        // With one token, output == its V row.
+        let v = cache.v_at(seq.pages[0], 0, 0);
+        for (a, b) in out.iter().zip(v) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn streaming_softmax_stability_with_large_logits() {
+        // Huge-magnitude keys stress the running-max rescale.
+        let d = 8;
+        let mut cache =
+            crate::kvcache::PagedKvCache::new(crate::kvcache::CacheConfig::new(1, d, 8));
+        let mut seq = crate::kvcache::SeqCache::default();
+        for i in 0..32 {
+            let k = vec![if i == 17 { 40.0 } else { -40.0 }; d];
+            let v = vec![i as f32; d];
+            cache.append(&mut seq, &k, &v).unwrap();
+        }
+        let q = vec![1.0; d];
+        let mut out = vec![0.0; d];
+        paged_full(&cache, &seq, 0, &q, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert!((out[0] - 17.0).abs() < 1e-3, "{out:?}"); // token 17 dominates
+    }
+}

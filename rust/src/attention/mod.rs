@@ -1,0 +1,89 @@
+//! Attention compute kernels (the CPU analogs of the paper's CUDA/Triton
+//! kernels — see DESIGN.md §2 for the hardware mapping).
+//!
+//! * [`full`] — dense baselines: contiguous (SDPA/FlashAttention2 analog)
+//!   and paged streaming-softmax (FlashInfer analog).
+//! * [`sparse`] — index-list sparse attention with the three varlen
+//!   packings of Appendix B.2 (padded / head-varlen / group-varlen).
+//! * [`spgemv`] — the score-estimation SpGEMV over the quantized mirror
+//!   K cache (Appendix B.1), at INT2/4/8/FP16.
+//!
+//! All kernels are single-(kv-)head primitives; batching across
+//! (sequence × head) work items is done by the coordinator through
+//! `util::threadpool::parallel_for`, mirroring FlashInfer's flattened
+//! head-dimension load balancing (§4.2 "Load Balancing").
+
+pub mod full;
+pub mod sparse;
+pub mod spgemv;
+
+use crate::kvcache::{PagedKvCache, SeqCache};
+
+/// Scale factor `1/sqrt(d)` shared by every kernel.
+#[inline]
+pub fn scale(d: usize) -> f32 {
+    1.0 / (d as f32).sqrt()
+}
+
+/// Compute exact attention logits `q·K[tok]/sqrt(d)` for a token range.
+/// Utility for tests and the oracle selector.
+pub fn exact_logits(cache: &PagedKvCache, seq: &SeqCache, head: usize, q: &[f32]) -> Vec<f32> {
+    let s = scale(q.len());
+    (0..seq.len).map(|t| cache.exact_score(seq, head, q, t) * s).collect()
+}
+
+/// Full softmax attention weights for a head (normalized). Tests/oracles.
+pub fn exact_weights(cache: &PagedKvCache, seq: &SeqCache, head: usize, q: &[f32]) -> Vec<f32> {
+    let mut w = exact_logits(cache, seq, head, q);
+    crate::tensor::softmax_inplace(&mut w);
+    w
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::kvcache::CacheConfig;
+    use crate::util::rng::Rng;
+
+    /// Build a cache with `n` random tokens for `kv_heads` heads of dim `d`.
+    pub fn random_cache(seed: u64, kv_heads: usize, d: usize, n: usize) -> (PagedKvCache, SeqCache) {
+        let pages = n.div_ceil(16) + 2;
+        let mut cache = PagedKvCache::new(CacheConfig::new(kv_heads, d, pages));
+        let mut seq = SeqCache::default();
+        let mut r = Rng::new(seed);
+        for _ in 0..n {
+            let k: Vec<f32> = (0..kv_heads * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let v: Vec<f32> = (0..kv_heads * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            cache.append(&mut seq, &k, &v).unwrap();
+        }
+        (cache, seq)
+    }
+
+    pub fn random_q(seed: u64, d: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..d).map(|_| r.normal_f32(0.0, 1.0)).collect()
+    }
+
+    /// Naive reference attention over an explicit index set.
+    pub fn naive_sparse(
+        cache: &PagedKvCache,
+        seq: &SeqCache,
+        head: usize,
+        q: &[f32],
+        idx: &[usize],
+    ) -> Vec<f32> {
+        let d = q.len();
+        let s = scale(d);
+        let mut logits: Vec<f32> = idx
+            .iter()
+            .map(|&t| cache.exact_score(seq, head, q, t) * s)
+            .collect();
+        crate::tensor::softmax_inplace(&mut logits);
+        let mut out = vec![0.0; d];
+        for (&t, &w) in idx.iter().zip(&logits) {
+            let (page, slot) = seq.locate(t, cache.cfg.page_size);
+            crate::tensor::axpy(w, cache.v_at(page, head, slot), &mut out);
+        }
+        out
+    }
+}

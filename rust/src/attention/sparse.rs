@@ -1,0 +1,257 @@
+//! Sparse attention over explicit index lists, with the three varlen
+//! packings compared in Appendix B.2 / Fig. 13:
+//!
+//! * **padded** — every head computes over `max_budget` slots, reading
+//!   masked garbage for short heads (uniform resource allocation, the
+//!   strawman traditional kernels use);
+//! * **head-varlen** — each query head walks exactly its own index list;
+//!   under GQA this re-reads the shared KV head once per query head;
+//! * **group-varlen** — Twilight's design: the query-head group shares the
+//!   union index list, loading each KV row once per *group* and applying
+//!   it to all query heads in the group.
+//!
+//! The kernels are exact (softmax over the selected logits), matching
+//! Definition 3.1 with Λ restricted to the index set.
+
+use super::scale;
+use crate::kvcache::{PagedKvCache, SeqCache};
+use crate::tensor::{axpy, dot};
+
+/// Sparse attention for one (query-)head over `idx` (logical token ids).
+/// `out` is `[d]`.
+pub fn head_varlen(
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    kv_head: usize,
+    q: &[f32],
+    idx: &[usize],
+    out: &mut [f32],
+) {
+    let d = q.len();
+    let s = scale(d);
+    let ps = cache.cfg.page_size;
+    // Streaming softmax over the index list: one pass, no logits buffer.
+    let mut m = f32::NEG_INFINITY;
+    let mut denom = 0.0f32;
+    out.fill(0.0);
+    for &t in idx {
+        let (page, slot) = seq.locate(t, ps);
+        let logit = dot(q, cache.k_at(page, kv_head, slot)) * s;
+        if logit > m {
+            if m.is_finite() {
+                let corr = (m - logit).exp();
+                denom *= corr;
+                for o in out.iter_mut() {
+                    *o *= corr;
+                }
+            }
+            m = logit;
+        }
+        let w = (logit - m).exp();
+        denom += w;
+        axpy(w, cache.v_at(page, kv_head, slot), out);
+    }
+    if denom > 0.0 {
+        let inv = 1.0 / denom;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+/// Padded variant: computes over `idx` padded to `max_budget` by
+/// re-reading `idx[0]` with a `-inf` mask — the wasted loads are real, as
+/// in a uniformly-provisioned kernel. Result identical to `head_varlen`.
+pub fn padded(
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    kv_head: usize,
+    q: &[f32],
+    idx: &[usize],
+    max_budget: usize,
+    out: &mut [f32],
+) {
+    let d = q.len();
+    let s = scale(d);
+    let ps = cache.cfg.page_size;
+    let mut m = f32::NEG_INFINITY;
+    let mut denom = 0.0f32;
+    out.fill(0.0);
+    let pad_tok = idx.first().copied().unwrap_or(0);
+    for i in 0..max_budget.max(idx.len()) {
+        let (t, masked) = if i < idx.len() { (idx[i], false) } else { (pad_tok, true) };
+        let (page, slot) = seq.locate(t, ps);
+        // The load happens regardless of the mask (that is the point).
+        let kval = cache.k_at(page, kv_head, slot);
+        let logit = if masked { f32::NEG_INFINITY } else { dot(q, kval) * s };
+        if logit > m {
+            if m.is_finite() {
+                let corr = (m - logit).exp();
+                denom *= corr;
+                for o in out.iter_mut() {
+                    *o *= corr;
+                }
+            }
+            m = logit;
+        }
+        let w = if logit.is_finite() { (logit - m).exp() } else { 0.0 };
+        denom += w;
+        if w > 0.0 {
+            axpy(w, cache.v_at(page, kv_head, slot), out);
+        } else {
+            // Masked slot: still touch V to model the wasted read.
+            std::hint::black_box(cache.v_at(page, kv_head, slot)[0]);
+        }
+    }
+    if denom > 0.0 {
+        let inv = 1.0 / denom;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+/// Group-varlen (GQA) variant: `qs` holds `group` query heads (`[g][d]`),
+/// all mapped to `kv_head`, sharing the union index list `idx`. Each KV
+/// row is loaded once and applied to every query head in the group.
+/// `outs` is `[g][d]` flattened.
+pub fn group_varlen(
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    kv_head: usize,
+    qs: &[f32],
+    group: usize,
+    idx: &[usize],
+    outs: &mut [f32],
+) {
+    let d = qs.len() / group;
+    let s = scale(d);
+    let ps = cache.cfg.page_size;
+    let mut m = vec![f32::NEG_INFINITY; group];
+    let mut denom = vec![0.0f32; group];
+    outs.fill(0.0);
+    for &t in idx {
+        let (page, slot) = seq.locate(t, ps);
+        let kval = cache.k_at(page, kv_head, slot); // single load per token
+        let vval = cache.v_at(page, kv_head, slot);
+        for g in 0..group {
+            let q = &qs[g * d..(g + 1) * d];
+            let out = &mut outs[g * d..(g + 1) * d];
+            let logit = dot(q, kval) * s;
+            if logit > m[g] {
+                if m[g].is_finite() {
+                    let corr = (m[g] - logit).exp();
+                    denom[g] *= corr;
+                    for o in out.iter_mut() {
+                        *o *= corr;
+                    }
+                }
+                m[g] = logit;
+            }
+            let w = (logit - m[g]).exp();
+            denom[g] += w;
+            axpy(w, vval, out);
+        }
+    }
+    for g in 0..group {
+        if denom[g] > 0.0 {
+            let inv = 1.0 / denom[g];
+            for o in outs[g * d..(g + 1) * d].iter_mut() {
+                *o *= inv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::{naive_sparse, random_cache, random_q};
+
+    #[test]
+    fn head_varlen_matches_naive() {
+        let (cache, seq) = random_cache(11, 2, 16, 100);
+        let q = random_q(12, 16);
+        let idx = vec![0usize, 5, 17, 31, 64, 99];
+        for head in 0..2 {
+            let mut out = vec![0.0; 16];
+            head_varlen(&cache, &seq, head, &q, &idx, &mut out);
+            let want = naive_sparse(&cache, &seq, head, &q, &idx);
+            for (a, b) in out.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn padded_equals_head_varlen() {
+        let (cache, seq) = random_cache(13, 1, 8, 64);
+        let q = random_q(14, 8);
+        let idx = vec![3usize, 9, 40];
+        let mut a = vec![0.0; 8];
+        let mut b = vec![0.0; 8];
+        head_varlen(&cache, &seq, 0, &q, &idx, &mut a);
+        padded(&cache, &seq, 0, &q, &idx, 32, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn group_varlen_equals_per_head() {
+        let (cache, seq) = random_cache(15, 1, 8, 80);
+        let group = 4;
+        let mut qs = Vec::new();
+        for g in 0..group {
+            qs.extend(random_q(20 + g as u64, 8));
+        }
+        let idx = vec![1usize, 2, 30, 55, 79];
+        let mut outs = vec![0.0; group * 8];
+        group_varlen(&cache, &seq, 0, &qs, group, &idx, &mut outs);
+        for g in 0..group {
+            let mut want = vec![0.0; 8];
+            head_varlen(&cache, &seq, 0, &qs[g * 8..(g + 1) * 8], &idx, &mut want);
+            for (a, b) in outs[g * 8..(g + 1) * 8].iter().zip(&want) {
+                assert!((a - b).abs() < 1e-5, "group {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_with_full_index_set_equals_dense() {
+        let (cache, seq) = random_cache(17, 1, 16, 48);
+        let q = random_q(18, 16);
+        let all: Vec<usize> = (0..seq.len).collect();
+        let mut sparse_out = vec![0.0; 16];
+        head_varlen(&cache, &seq, 0, &q, &all, &mut sparse_out);
+        let mut dense_out = vec![0.0; 16];
+        crate::attention::full::paged_full(&cache, &seq, 0, &q, &mut dense_out);
+        for (a, b) in sparse_out.iter().zip(&dense_out) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn empty_index_list_is_zero() {
+        let (cache, seq) = random_cache(19, 1, 8, 16);
+        let q = random_q(21, 8);
+        let mut out = vec![1.0; 8];
+        head_varlen(&cache, &seq, 0, &q, &[], &mut out);
+        assert_eq!(out, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn unsorted_indices_give_same_result() {
+        let (cache, seq) = random_cache(23, 1, 8, 64);
+        let q = random_q(24, 8);
+        let idx1 = vec![5usize, 10, 20, 40];
+        let idx2 = vec![40usize, 5, 20, 10];
+        let mut a = vec![0.0; 8];
+        let mut b = vec![0.0; 8];
+        head_varlen(&cache, &seq, 0, &q, &idx1, &mut a);
+        head_varlen(&cache, &seq, 0, &q, &idx2, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Score-estimation SpGEMV (paper §4.2, Appendix B.1).
+//!
+//! Computes `q · K̂ᵀ` over the *quantized mirror* K cache for a set of
+//! candidate tokens ("sparse" = paged/indexed access, matching the
+//! paper's FlashInfer-derived kernel where the INT4 K pages are gathered
+//! by page table). The fused dequant-dot never materializes K̂: the
+//! integer codes are multiplied directly and scale/zero are applied once
+//! per row — the CPU analog of unpacking INT4 in shared memory.
+
+use crate::kvcache::{quant_dot_row, quant_dot_row_qsum, PagedKvCache, SeqCache};
+use crate::tensor::quant::{quantize, QuantBits, QuantBlock};
+
+/// Estimate logits (unscaled by 1/sqrt(d)) for `tokens` from the mirror
+/// cache into `out`.
+pub fn estimate_scores(
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    head: usize,
+    q: &[f32],
+    tokens: &[usize],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(tokens.len(), out.len());
+    let d = cache.cfg.head_dim;
+    let ps = cache.cfg.page_size;
+    let qsum: f32 = q.iter().sum();
+    for (o, &t) in out.iter_mut().zip(tokens) {
+        let (page, slot) = seq.locate(t, ps);
+        let block = cache.mirror_at(page, head).expect("mirror block missing");
+        *o = quant_dot_row_qsum(q, qsum, block, slot * d, d);
+    }
+}
+
+/// Estimate logits for a whole GQA group in one pass over the mirror:
+/// each packed row is unpacked once and contracted with every query head
+/// (§Perf). `out` is `[group][tokens.len()]` flattened row-major.
+pub fn estimate_scores_group(
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    kv_head: usize,
+    qs: &[f32],
+    group: usize,
+    tokens: &[usize],
+    out: &mut [f32],
+) {
+    let d = cache.cfg.head_dim;
+    let ps = cache.cfg.page_size;
+    debug_assert_eq!(out.len(), group * tokens.len());
+    let qsums: Vec<f32> =
+        (0..group).map(|g| qs[g * d..(g + 1) * d].iter().sum()).collect();
+    let n = tokens.len();
+    let mut row = vec![0.0f32; group];
+    for (i, &t) in tokens.iter().enumerate() {
+        let (page, slot) = seq.locate(t, ps);
+        let block = cache.mirror_at(page, kv_head).expect("mirror block missing");
+        crate::kvcache::quant_dot_row_group(qs, &qsums, block, slot * d, d, &mut row);
+        for g in 0..group {
+            out[g * n + i] = row[g];
+        }
+    }
+}
+
+/// A standalone quantized K matrix (contiguous, one head) for kernels and
+/// benches that do not need the paged pool — e.g. the Fig. 12 SpGEMV
+/// latency ablation across bit widths.
+pub struct QuantizedK {
+    pub d: usize,
+    pub n: usize,
+    pub bits: QuantBits,
+    /// One block per group of `group_rows` rows (per-block scale/zero).
+    pub blocks: Vec<QuantBlock>,
+    pub group_rows: usize,
+}
+
+impl QuantizedK {
+    /// Quantize `k` (`[n, d]` row-major) at `bits`, `group_rows` rows per
+    /// scale/zero group (the paper uses one page = 16 rows).
+    pub fn from_rows(k: &[f32], d: usize, bits: QuantBits, group_rows: usize) -> QuantizedK {
+        let n = k.len() / d;
+        let mut blocks = Vec::with_capacity(n.div_ceil(group_rows));
+        let mut i = 0;
+        while i < n {
+            let rows = group_rows.min(n - i);
+            blocks.push(quantize(&k[i * d..(i + rows) * d], bits));
+            i += rows;
+        }
+        QuantizedK { d, n, bits, blocks, group_rows }
+    }
+
+    /// Total packed bytes (the memory the kernel must stream).
+    pub fn bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.packed.len() + 8).sum()
+    }
+
+    /// `out[i] = q · K̂[rows[i]]`.
+    pub fn spgemv(&self, q: &[f32], rows: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(q.len(), self.d);
+        for (o, &r) in out.iter_mut().zip(rows) {
+            let block = &self.blocks[r / self.group_rows];
+            let slot = r % self.group_rows;
+            *o = quant_dot_row(q, block, slot * self.d, self.d);
+        }
+    }
+
+    /// Dense GEMV over all rows: `out[i] = q · K̂[i]`.
+    pub fn gemv(&self, q: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n);
+        let mut row = 0;
+        for block in &self.blocks {
+            let rows = block.n / self.d;
+            for s in 0..rows {
+                out[row] = quant_dot_row(q, block, s * self.d, self.d);
+                row += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::{random_cache, random_q};
+    use crate::tensor::dot;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn estimate_close_to_exact_int4() {
+        let (cache, seq) = random_cache(31, 1, 32, 128);
+        let q = random_q(32, 32);
+        let toks: Vec<usize> = (0..128).collect();
+        let mut est = vec![0.0; 128];
+        estimate_scores(&cache, &seq, 0, &q, &toks, &mut est);
+        let mut worst = 0.0f32;
+        for (&t, &e) in toks.iter().zip(&est) {
+            let exact = cache.exact_score(&seq, 0, &q, t);
+            worst = worst.max((exact - e).abs());
+        }
+        // INT4 per-page groups over N(0,1) keys, d=32: per-element error is
+        // ~scale/2 ≈ 0.2, so dot error concentrates near 0.2·sqrt(32)·σ_q;
+        // the observed worst case sits well under 2 while logits span ±15.
+        assert!(worst < 2.0, "worst abs err {worst}");
+    }
+
+    #[test]
+    fn rank_correlation_int4_beats_int2() {
+        let mut r = Rng::new(77);
+        let d = 64;
+        let n = 256;
+        let k: Vec<f32> = (0..n * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let q: Vec<f32> = (0..d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let exact: Vec<f32> = (0..n).map(|i| dot(&q, &k[i * d..(i + 1) * d])).collect();
+        let top_exact = top_set(&exact, 32);
+        let overlap = |bits: QuantBits| {
+            let qk = QuantizedK::from_rows(&k, d, bits, 16);
+            let mut est = vec![0.0; n];
+            qk.gemv(&q, &mut est);
+            let top_est = top_set(&est, 32);
+            top_exact.iter().filter(|t| top_est.contains(t)).count()
+        };
+        let o2 = overlap(QuantBits::Int2);
+        let o4 = overlap(QuantBits::Int4);
+        let o8 = overlap(QuantBits::Int8);
+        assert!(o4 > o2, "int4 {o4} <= int2 {o2}");
+        assert!(o8 >= o4, "int8 {o8} < int4 {o4}");
+        assert!(o4 >= 28, "int4 overlap too low: {o4}/32");
+    }
+
+    fn top_set(xs: &[f32], k: usize) -> std::collections::HashSet<usize> {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+        idx.into_iter().take(k).collect()
+    }
+
+    #[test]
+    fn spgemv_subset_matches_gemv() {
+        let mut r = Rng::new(5);
+        let d = 16;
+        let n = 64;
+        let k: Vec<f32> = (0..n * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let q: Vec<f32> = (0..d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let qk = QuantizedK::from_rows(&k, d, QuantBits::Int4, 16);
+        let mut dense = vec![0.0; n];
+        qk.gemv(&q, &mut dense);
+        let rows = vec![0usize, 7, 16, 63];
+        let mut sparse = vec![0.0; rows.len()];
+        qk.spgemv(&q, &rows, &mut sparse);
+        for (i, &row) in rows.iter().enumerate() {
+            assert_eq!(sparse[i], dense[row]);
+        }
+    }
+
+    #[test]
+    fn bytes_scale_with_bits() {
+        let k = vec![0.5f32; 128 * 64];
+        let b2 = QuantizedK::from_rows(&k, 64, QuantBits::Int2, 16).bytes();
+        let b4 = QuantizedK::from_rows(&k, 64, QuantBits::Int4, 16).bytes();
+        let b8 = QuantizedK::from_rows(&k, 64, QuantBits::Int8, 16).bytes();
+        let b16 = QuantizedK::from_rows(&k, 64, QuantBits::Fp16, 16).bytes();
+        assert!(b2 < b4 && b4 < b8 && b8 < b16);
+        // Ratio roughly 2:4:8:16.
+        assert!((b16 as f64 / b4 as f64 - 4.0).abs() < 0.2);
+    }
+}

@@ -1,0 +1,116 @@
+//! Head-wise load balancing (paper §4.2, "Load Balancing with Awareness
+//! of Head Dynamism").
+//!
+//! Twilight's per-head dynamic budgets make uniform per-head resource
+//! allocation wasteful: a worker assigned a diffuse head (budget ≈ N)
+//! stalls the step while workers with focused heads (budget ≈ 10) idle.
+//! Following FlashInfer, the (sequence × kv-head) work items are
+//! flattened into one list and scheduled longest-processing-time-first
+//! (LPT) across workers. The same structure drives the Fig. 13 bench.
+
+/// A unit of attention work: one (sequence, kv-head) pair with a known
+/// token budget (= cost, since the kernels are bandwidth-bound).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkItem {
+    pub seq: u32,
+    pub kv_head: u32,
+    pub budget: usize,
+}
+
+/// Assignment of items to a worker, with its total cost.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerLoad {
+    pub items: Vec<WorkItem>,
+    pub cost: usize,
+}
+
+/// Greedy LPT partition of `items` over `workers` workers. Returns the
+/// per-worker assignments; makespan = max cost.
+pub fn lpt_partition(items: &[WorkItem], workers: usize) -> Vec<WorkerLoad> {
+    let workers = workers.max(1);
+    let mut sorted: Vec<WorkItem> = items.to_vec();
+    sorted.sort_by(|a, b| b.budget.cmp(&a.budget));
+    let mut loads = vec![WorkerLoad::default(); workers];
+    for it in sorted {
+        // Assign to the currently least-loaded worker.
+        let w = loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| l.cost)
+            .map(|(i, _)| i)
+            .unwrap();
+        loads[w].cost += it.budget;
+        loads[w].items.push(it);
+    }
+    loads
+}
+
+/// Naive round-robin partition (the "uniform allocation" strawman).
+pub fn round_robin_partition(items: &[WorkItem], workers: usize) -> Vec<WorkerLoad> {
+    let workers = workers.max(1);
+    let mut loads = vec![WorkerLoad::default(); workers];
+    for (i, it) in items.iter().enumerate() {
+        let w = i % workers;
+        loads[w].cost += it.budget;
+        loads[w].items.push(*it);
+    }
+    loads
+}
+
+/// Makespan (max worker cost) of a partition.
+pub fn makespan(loads: &[WorkerLoad]) -> usize {
+    loads.iter().map(|l| l.cost).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn items_skewed(seed: u64, n: usize) -> Vec<WorkItem> {
+        // Budget distribution like Twilight's: many tiny (focused heads),
+        // few huge (diffuse heads).
+        let mut r = Rng::new(seed);
+        (0..n)
+            .map(|i| WorkItem {
+                seq: (i / 8) as u32,
+                kv_head: (i % 8) as u32,
+                budget: if r.chance(0.15) { r.range(4000, 16000) } else { r.range(8, 128) },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lpt_covers_all_items() {
+        let items = items_skewed(1, 64);
+        let loads = lpt_partition(&items, 4);
+        let total: usize = loads.iter().map(|l| l.items.len()).sum();
+        assert_eq!(total, 64);
+        let cost_total: usize = loads.iter().map(|l| l.cost).sum();
+        assert_eq!(cost_total, items.iter().map(|i| i.budget).sum::<usize>());
+    }
+
+    #[test]
+    fn lpt_beats_round_robin_on_skew() {
+        let items = items_skewed(2, 64);
+        let lpt = makespan(&lpt_partition(&items, 8));
+        let rr = makespan(&round_robin_partition(&items, 8));
+        assert!(lpt <= rr, "lpt {lpt} > rr {rr}");
+        // And is near the lower bound (total/workers or max item).
+        let total: usize = items.iter().map(|i| i.budget).sum();
+        let lower = (total / 8).max(items.iter().map(|i| i.budget).max().unwrap());
+        assert!(lpt <= lower + lower / 2, "lpt {lpt} vs lower bound {lower}");
+    }
+
+    #[test]
+    fn single_worker_is_total() {
+        let items = items_skewed(3, 10);
+        let total: usize = items.iter().map(|i| i.budget).sum();
+        assert_eq!(makespan(&lpt_partition(&items, 1)), total);
+    }
+
+    #[test]
+    fn empty_items() {
+        assert_eq!(makespan(&lpt_partition(&[], 4)), 0);
+    }
+}

@@ -1,0 +1,541 @@
+//! The decode engine: wires the model forward pass to the paged KV cache,
+//! Token Selector, Twilight Pruner, and varlen attention kernels — the
+//! per-step pipeline of Fig. 5 — and keeps the Fig. 10 time breakdown.
+
+use super::{AttnVariant, SparseConfig};
+use crate::kvcache::{CacheConfig, CacheError, PagedKvCache, SeqCache};
+use crate::model::{LayerBackend, Model};
+use crate::pruner::{prune_group, PruneOutcome, PrunerScratch};
+use crate::selector::{SelectorKind, TokenSelector};
+use crate::util::stats::Histogram;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Engine-internal sequence id (the coordinator maps RequestId → SeqId).
+pub type SeqId = u64;
+
+/// Accumulated timing and budget statistics (Fig. 10 / Table budgets).
+#[derive(Clone, Debug)]
+pub struct EngineStats {
+    /// Seconds in the Token Selector across all steps.
+    pub t_select: f64,
+    /// Seconds in the Twilight Pruner.
+    pub t_prune: f64,
+    /// Seconds in the sparse attention kernel.
+    pub t_attend: f64,
+    /// Seconds in dense attention (skip layers / short contexts).
+    pub t_dense: f64,
+    /// Seconds in everything else (projections, MLP, norms, sampling).
+    pub t_other: f64,
+    /// Decode steps executed.
+    pub steps: u64,
+    /// Sum of stage-1 candidate budgets (per kv-head per step).
+    pub candidates_sum: u64,
+    /// Sum of final kept budgets.
+    pub kept_sum: u64,
+    /// Number of (step × kv-head) sparse attention invocations.
+    pub sparse_calls: u64,
+    /// Histogram of final per-head budgets.
+    pub kept_hist: Histogram,
+    /// Bytes the pipeline *would* stream on a GPU (sim cost model).
+    pub est_bytes_select: u64,
+    pub est_bytes_prune: u64,
+    pub est_bytes_attend: u64,
+}
+
+impl Default for EngineStats {
+    fn default() -> Self {
+        EngineStats {
+            t_select: 0.0,
+            t_prune: 0.0,
+            t_attend: 0.0,
+            t_dense: 0.0,
+            t_other: 0.0,
+            steps: 0,
+            candidates_sum: 0,
+            kept_sum: 0,
+            sparse_calls: 0,
+            kept_hist: Histogram::new(0.0, 4096.0, 64),
+            est_bytes_select: 0,
+            est_bytes_prune: 0,
+            est_bytes_attend: 0,
+        }
+    }
+}
+
+impl EngineStats {
+    /// Mean final budget per sparse head-call.
+    pub fn avg_kept(&self) -> f64 {
+        if self.sparse_calls == 0 {
+            0.0
+        } else {
+            self.kept_sum as f64 / self.sparse_calls as f64
+        }
+    }
+
+    pub fn avg_candidates(&self) -> f64 {
+        if self.sparse_calls == 0 {
+            0.0
+        } else {
+            self.candidates_sum as f64 / self.sparse_calls as f64
+        }
+    }
+
+    /// Fraction of stage-1 candidates pruned away by Twilight.
+    pub fn prune_ratio(&self) -> f64 {
+        if self.candidates_sum == 0 {
+            0.0
+        } else {
+            1.0 - self.kept_sum as f64 / self.candidates_sum as f64
+        }
+    }
+}
+
+/// Per-sequence engine state.
+struct SeqState {
+    caches: Vec<SeqCache>,
+    /// One selector per (layer × kv_head), lazily constructed.
+    selectors: Vec<Box<dyn TokenSelector>>,
+    pos: usize,
+}
+
+/// The decode engine. One per model; holds the physical page pools (one
+/// per layer) and all live sequences.
+pub struct Engine {
+    pub model: Arc<Model>,
+    pub cfg: SparseConfig,
+    caches: Vec<PagedKvCache>,
+    seqs: HashMap<SeqId, SeqState>,
+    pub stats: EngineStats,
+    scratch: PrunerScratch,
+}
+
+impl Engine {
+    /// `capacity_tokens` sizes each layer's page pool.
+    pub fn new(model: Arc<Model>, cfg: SparseConfig, capacity_tokens: usize) -> Engine {
+        let c = &model.cfg;
+        let pages = capacity_tokens.div_ceil(16) + 1;
+        let caches = (0..c.n_layers)
+            .map(|_| PagedKvCache::new(CacheConfig::new(c.n_kv_heads, c.head_dim, pages)))
+            .collect();
+        Engine {
+            model,
+            cfg,
+            caches,
+            seqs: HashMap::new(),
+            stats: EngineStats::default(),
+            scratch: PrunerScratch::default(),
+        }
+    }
+
+    pub fn num_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.caches.iter().map(|c| c.free_pages()).min().unwrap_or(0)
+    }
+
+    pub fn seq_len(&self, id: SeqId) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.pos)
+    }
+
+    fn new_state(&self) -> SeqState {
+        let c = &self.model.cfg;
+        let mut selectors: Vec<Box<dyn TokenSelector>> = Vec::new();
+        for layer in 0..c.n_layers {
+            for kvh in 0..c.n_kv_heads {
+                selectors.push(
+                    self.cfg.selector.build(c.head_dim, (layer * 131 + kvh) as u64),
+                );
+            }
+        }
+        SeqState { caches: vec![SeqCache::default(); c.n_layers], selectors, pos: 0 }
+    }
+
+    /// Register an empty sequence (used by teacher-forced evaluation,
+    /// where every token goes through `decode`).
+    pub fn start_empty(&mut self, id: SeqId) {
+        let st = self.new_state();
+        self.seqs.insert(id, st);
+    }
+
+    /// True if a decode step for `id` cannot run out of pages.
+    pub fn can_step(&self, id: SeqId) -> bool {
+        match self.seqs.get(&id) {
+            None => false,
+            Some(st) => {
+                let needs_page = st.pos % 16 == 0;
+                !needs_page || self.caches.iter().all(|c| c.free_pages() >= 1)
+            }
+        }
+    }
+
+    /// Admit a sequence and prefill its prompt; returns the logits after
+    /// the final prompt token (for sampling the first output token).
+    ///
+    /// Single-layer models use the O(n) embedding-KV fast path; deeper
+    /// models run a dense decode pass per token.
+    pub fn prefill(&mut self, id: SeqId, prompt: &[u32]) -> Result<Vec<f32>, CacheError> {
+        assert!(!prompt.is_empty());
+        let st = self.new_state();
+        self.seqs.insert(id, st);
+        let single_layer = self.model.cfg.n_layers == 1;
+        let model = self.model.clone();
+        if single_layer {
+            for (pos, &tok) in prompt[..prompt.len() - 1].iter().enumerate() {
+                let (k, v) = model.kv_from_embedding(tok, pos);
+                let st = self.seqs.get_mut(&id).unwrap();
+                let res = self.caches[0].append(&mut st.caches[0], &k, &v);
+                if let Err(e) = res {
+                    self.release(id);
+                    return Err(e);
+                }
+                self.seqs.get_mut(&id).unwrap().pos = pos + 1;
+            }
+            self.decode(id, prompt[prompt.len() - 1])
+        } else {
+            let mut logits = Vec::new();
+            for &tok in prompt {
+                logits = self.decode(id, tok)?;
+            }
+            Ok(logits)
+        }
+    }
+
+    /// One decode step: process `tok` at the sequence's current position,
+    /// return logits.
+    pub fn decode(&mut self, id: SeqId, tok: u32) -> Result<Vec<f32>, CacheError> {
+        let mut st = self.seqs.remove(&id).expect("unknown sequence");
+        let pos = st.pos;
+        let model = self.model.clone();
+        let staged_before =
+            self.stats.t_select + self.stats.t_prune + self.stats.t_attend + self.stats.t_dense;
+        let t0 = Instant::now();
+        let result = {
+            let mut backend = StepBackend {
+                caches: &mut self.caches,
+                st: &mut st,
+                cfg: &self.cfg,
+                model: &model,
+                stats: &mut self.stats,
+                scratch: &mut self.scratch,
+                error: None,
+            };
+            let logits = model.decode_step(tok, pos, &mut backend);
+            match backend.error.take() {
+                Some(e) => Err(e),
+                None => Ok(logits),
+            }
+        };
+        let total = t0.elapsed().as_secs_f64();
+        st.pos = pos + 1;
+        self.stats.steps += 1;
+        self.seqs.insert(id, st);
+        if result.is_ok() {
+            // Everything not attributed to a stage is "other"
+            // (projections, MLP, norms, unembedding).
+            let staged_after = self.stats.t_select
+                + self.stats.t_prune
+                + self.stats.t_attend
+                + self.stats.t_dense;
+            self.stats.t_other += (total - (staged_after - staged_before)).max(0.0);
+        } else {
+            self.release(id);
+        }
+        result
+    }
+
+    /// Release a sequence's pages and state.
+    pub fn release(&mut self, id: SeqId) {
+        if let Some(st) = self.seqs.remove(&id) {
+            for (layer, sc) in st.caches.iter().enumerate() {
+                self.caches[layer].release(sc);
+            }
+        }
+    }
+
+    /// Reset statistics (between bench phases).
+    pub fn reset_stats(&mut self) {
+        self.stats = EngineStats::default();
+    }
+}
+
+/// The per-step attention backend: implements the Select-then-Prune
+/// pipeline for every layer of one decode step.
+struct StepBackend<'a> {
+    caches: &'a mut [PagedKvCache],
+    st: &'a mut SeqState,
+    cfg: &'a SparseConfig,
+    model: &'a Model,
+    stats: &'a mut EngineStats,
+    scratch: &'a mut PrunerScratch,
+    error: Option<CacheError>,
+}
+
+impl<'a> LayerBackend for StepBackend<'a> {
+    fn append_kv(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        if self.error.is_some() {
+            return;
+        }
+        if let Err(e) = self.caches[layer].append(&mut self.st.caches[layer], k, v) {
+            self.error = Some(e);
+        }
+    }
+
+    fn attend(&mut self, layer: usize, qs: &[f32]) -> Vec<f32> {
+        let c = &self.model.cfg;
+        let d = c.head_dim;
+        let group = c.group();
+        let mut out = vec![0.0; c.q_dim()];
+        if self.error.is_some() {
+            return out;
+        }
+        let cache = &self.caches[layer];
+        let seq = &self.st.caches[layer];
+        let n = seq.len;
+        let dense = layer < self.cfg.skip_layers
+            || n <= self.cfg.dense_below
+            || (self.cfg.selector == SelectorKind::Full && self.cfg.twilight.is_none());
+        if dense {
+            let t = Instant::now();
+            for h in 0..c.n_heads {
+                let kvh = h / group;
+                crate::attention::full::paged_full(
+                    cache,
+                    seq,
+                    kvh,
+                    &qs[h * d..(h + 1) * d],
+                    &mut out[h * d..(h + 1) * d],
+                );
+            }
+            self.stats.t_dense += t.elapsed().as_secs_f64();
+            self.stats.est_bytes_attend +=
+                (c.n_kv_heads * crate::sim::attn_bytes(n, d)) as u64;
+            return out;
+        }
+        let budget = self.cfg.budget.resolve(n);
+        for kvh in 0..c.n_kv_heads {
+            let qs_group = &qs[kvh * group * d..(kvh + 1) * group * d];
+            // --- stage 1: Token Selector (black box, conservative) ------
+            let t = Instant::now();
+            let sel = &mut self.st.selectors[layer * c.n_kv_heads + kvh];
+            let candidates = sel.select(cache, seq, kvh, qs_group, group, budget);
+            self.stats.t_select += t.elapsed().as_secs_f64();
+            self.stats.est_bytes_select += selector_bytes(self.cfg.selector, n, d) as u64;
+            // --- stage 2: Twilight Pruner -------------------------------
+            let (kept, outcomes): (Vec<usize>, Option<Vec<PruneOutcome>>) =
+                match &self.cfg.twilight {
+                    Some(pc) => {
+                        let t = Instant::now();
+                        let (union, outs) = prune_group(
+                            pc, cache, seq, kvh, qs_group, group, &candidates, self.scratch,
+                        );
+                        self.stats.t_prune += t.elapsed().as_secs_f64();
+                        self.stats.est_bytes_prune += crate::sim::spgemv_bytes(
+                            candidates.len(),
+                            d,
+                            cache.cfg.mirror_bits,
+                        ) as u64;
+                        (union, Some(outs))
+                    }
+                    None => (candidates.clone(), None),
+                };
+            self.stats.sparse_calls += 1;
+            self.stats.candidates_sum += candidates.len() as u64;
+            self.stats.kept_sum += kept.len() as u64;
+            self.stats.kept_hist.add(kept.len() as f64);
+            let _ = outcomes;
+            // --- stage 3: sparse attention kernel -----------------------
+            let t = Instant::now();
+            let outs = &mut out[kvh * group * d..(kvh + 1) * group * d];
+            match self.cfg.attn {
+                AttnVariant::GroupVarlen => {
+                    crate::attention::sparse::group_varlen(
+                        cache, seq, kvh, qs_group, group, &kept, outs,
+                    );
+                }
+                AttnVariant::HeadVarlen => {
+                    for g in 0..group {
+                        crate::attention::sparse::head_varlen(
+                            cache,
+                            seq,
+                            kvh,
+                            &qs_group[g * d..(g + 1) * d],
+                            &kept,
+                            &mut outs[g * d..(g + 1) * d],
+                        );
+                    }
+                }
+                AttnVariant::Padded => {
+                    let max_budget = budget.max(kept.len());
+                    for g in 0..group {
+                        crate::attention::sparse::padded(
+                            cache,
+                            seq,
+                            kvh,
+                            &qs_group[g * d..(g + 1) * d],
+                            &kept,
+                            max_budget,
+                            &mut outs[g * d..(g + 1) * d],
+                        );
+                    }
+                }
+            }
+            self.stats.t_attend += t.elapsed().as_secs_f64();
+            self.stats.est_bytes_attend += crate::sim::attn_bytes(kept.len(), d) as u64;
+            // --- feedback for stateful (dropping) selectors -------------
+            let sel = &mut self.st.selectors[layer * c.n_kv_heads + kvh];
+            if selector_wants_observation(self.cfg.selector) {
+                let mut w: Vec<f32> = kept
+                    .iter()
+                    .map(|&t| {
+                        cache.exact_score(seq, kvh, &qs_group[..d], t)
+                            * crate::attention::scale(d)
+                    })
+                    .collect();
+                crate::tensor::softmax_inplace(&mut w);
+                sel.observe(&kept, &w);
+            }
+        }
+        out
+    }
+}
+
+/// Estimated selector metadata traffic (bytes) for the sim cost model.
+fn selector_bytes(kind: SelectorKind, n: usize, d: usize) -> usize {
+    match kind {
+        SelectorKind::Quest => crate::sim::quest_meta_bytes(n, d, 16),
+        SelectorKind::DoubleSparsity => crate::sim::ds_label_bytes(n, d / 4),
+        SelectorKind::MagicPig => n * 8, // signature table
+        SelectorKind::Oracle | SelectorKind::Full => crate::sim::attn_bytes(n, d) / 2,
+        SelectorKind::StreamingLlm | SelectorKind::SnapKv | SelectorKind::H2O => 0,
+    }
+}
+
+fn selector_wants_observation(kind: SelectorKind) -> bool {
+    matches!(kind, SelectorKind::SnapKv | SelectorKind::H2O)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::retrieval::build_retrieval_model;
+    use crate::model::sampler::greedy;
+    use crate::selector::SelectorKind;
+    use crate::util::rng::Rng;
+    use crate::workload::{gen_fwe, gen_niah, RetrievalVocab};
+
+    const V: RetrievalVocab = RetrievalVocab::DEFAULT;
+
+    fn engine(cfg: SparseConfig) -> Engine {
+        let model = Arc::new(build_retrieval_model(V, 8192));
+        Engine::new(model, cfg, 16384)
+    }
+
+    #[test]
+    fn dense_engine_answers_niah() {
+        let mut e = engine(SparseConfig::dense());
+        let mut r = Rng::new(1);
+        for i in 0..5 {
+            let g = gen_niah(&mut r, V, 512);
+            let logits = e.prefill(i, &g.prompt).unwrap();
+            assert_eq!(greedy(&logits), g.answer);
+            e.release(i);
+        }
+        assert_eq!(e.free_pages(), 16384 / 16 + 1);
+    }
+
+    #[test]
+    fn quest_twilight_answers_niah_with_tiny_budget() {
+        let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+        cfg.skip_layers = 0;
+        cfg.dense_below = 16;
+        let mut e = engine(cfg);
+        let mut r = Rng::new(2);
+        let mut correct = 0;
+        for i in 0..8 {
+            let g = gen_niah(&mut r, V, 1024);
+            let logits = e.prefill(i, &g.prompt).unwrap();
+            if greedy(&logits) == g.answer {
+                correct += 1;
+            }
+            e.release(i);
+        }
+        assert!(correct >= 7, "quest+twilight NIAH accuracy {correct}/8");
+        assert!(e.stats.sparse_calls > 0);
+        // Twilight must have pruned hard on the focused retrieval head.
+        assert!(e.stats.prune_ratio() > 0.2, "prune ratio {}", e.stats.prune_ratio());
+    }
+
+    #[test]
+    fn fwe_needs_diffuse_mass() {
+        // With Twilight at high p, FWE stays accurate; a tiny fixed top-k
+        // budget breaks it.
+        let mut twi = SparseConfig::twilight(SelectorKind::Full, 0.95);
+        twi.skip_layers = 0;
+        twi.dense_below = 16;
+        let mut small = SparseConfig::baseline(SelectorKind::Oracle, 8);
+        small.skip_layers = 0;
+        small.dense_below = 8;
+        let mut correct_twi = 0;
+        let mut correct_small = 0;
+        for trial in 0..6u64 {
+            let mut r = Rng::new(100 + trial);
+            let g = gen_fwe(&mut r, V, 1024, 3.0);
+            let mut e1 = engine(twi.clone());
+            let l1 = e1.prefill(0, &g.prompt).unwrap();
+            if greedy(&l1) == g.answer {
+                correct_twi += 1;
+            }
+            let mut e2 = engine(small.clone());
+            let l2 = e2.prefill(0, &g.prompt).unwrap();
+            if greedy(&l2) == g.answer {
+                correct_small += 1;
+            }
+        }
+        assert!(correct_twi >= 5, "twilight FWE {correct_twi}/6");
+        assert!(correct_small <= 3, "B=8 top-k should break FWE, got {correct_small}/6");
+    }
+
+    #[test]
+    fn oom_reported_and_sequence_released() {
+        let model = Arc::new(build_retrieval_model(V, 8192));
+        let mut e = Engine::new(model, SparseConfig::dense(), 64);
+        let mut r = Rng::new(3);
+        let g = gen_niah(&mut r, V, 256);
+        let err = e.prefill(0, &g.prompt);
+        assert!(err.is_err());
+        assert_eq!(e.num_seqs(), 0);
+        assert_eq!(e.free_pages(), 64 / 16 + 1);
+    }
+
+    #[test]
+    fn can_step_tracks_page_boundaries() {
+        let model = Arc::new(build_retrieval_model(V, 8192));
+        let mut e = Engine::new(model, SparseConfig::dense(), 64);
+        let mut r = Rng::new(4);
+        let g = gen_niah(&mut r, V, 30);
+        let _ = e.prefill(0, &g.prompt).unwrap();
+        assert!(e.can_step(0));
+        assert!(!e.can_step(99));
+    }
+
+    #[test]
+    fn stats_accumulate_breakdown() {
+        let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+        cfg.skip_layers = 0;
+        cfg.dense_below = 16;
+        let mut e = engine(cfg);
+        let mut r = Rng::new(5);
+        let g = gen_niah(&mut r, V, 512);
+        let _ = e.prefill(0, &g.prompt).unwrap();
+        let s = &e.stats;
+        assert!(s.t_select > 0.0);
+        assert!(s.t_prune > 0.0);
+        assert!(s.t_attend > 0.0);
+        assert!(s.avg_kept() > 0.0);
+        assert!(s.avg_candidates() >= s.avg_kept());
+    }
+}

@@ -1,0 +1,133 @@
+//! Serving metrics: TTFT, TPOT, throughput, and budget distributions —
+//! everything Fig. 8 and the tables report.
+
+use crate::util::json::{self, Json};
+use crate::util::stats::Summary;
+
+/// Per-request timing record.
+#[derive(Clone, Debug)]
+pub struct RequestMetrics {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub output_len: usize,
+    pub arrival: f64,
+    pub first_token_at: f64,
+    pub finished_at: f64,
+    pub preemptions: u32,
+}
+
+impl RequestMetrics {
+    /// Time to first token.
+    pub fn ttft(&self) -> f64 {
+        self.first_token_at - self.arrival
+    }
+
+    /// Time per output token after the first.
+    pub fn tpot(&self) -> f64 {
+        if self.output_len <= 1 {
+            0.0
+        } else {
+            (self.finished_at - self.first_token_at) / (self.output_len - 1) as f64
+        }
+    }
+}
+
+/// Aggregated serving report.
+#[derive(Clone, Debug, Default)]
+pub struct ServingReport {
+    pub requests: Vec<RequestMetrics>,
+    /// Wall-clock duration of the run.
+    pub duration: f64,
+}
+
+impl ServingReport {
+    pub fn total_output_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.output_len).sum()
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.duration <= 0.0 {
+            0.0
+        } else {
+            self.total_output_tokens() as f64 / self.duration
+        }
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::from(&self.requests.iter().map(|r| r.ttft()).collect::<Vec<_>>())
+    }
+
+    pub fn tpot_summary(&self) -> Summary {
+        Summary::from(
+            &self
+                .requests
+                .iter()
+                .filter(|r| r.output_len > 1)
+                .map(|r| r.tpot())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// JSON for result files.
+    pub fn to_json(&self) -> Json {
+        let tpot = self.tpot_summary();
+        let ttft = self.ttft_summary();
+        json::obj(vec![
+            ("requests", Json::Num(self.requests.len() as f64)),
+            ("duration_s", Json::Num(self.duration)),
+            ("output_tokens", Json::Num(self.total_output_tokens() as f64)),
+            ("throughput_tok_s", Json::Num(self.throughput_tok_s())),
+            ("ttft_mean_s", Json::Num(ttft.mean)),
+            ("ttft_p99_s", Json::Num(ttft.p99)),
+            ("tpot_mean_s", Json::Num(tpot.mean)),
+            ("tpot_p50_s", Json::Num(tpot.p50)),
+            ("tpot_p99_s", Json::Num(tpot.p99)),
+            (
+                "preemptions",
+                Json::Num(self.requests.iter().map(|r| r.preemptions as f64).sum()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rm(arrival: f64, first: f64, fin: f64, out: usize) -> RequestMetrics {
+        RequestMetrics {
+            id: 0,
+            prompt_len: 10,
+            output_len: out,
+            arrival,
+            first_token_at: first,
+            finished_at: fin,
+            preemptions: 0,
+        }
+    }
+
+    #[test]
+    fn ttft_tpot() {
+        let r = rm(1.0, 1.5, 2.5, 11);
+        assert!((r.ttft() - 0.5).abs() < 1e-12);
+        assert!((r.tpot() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_token_tpot_zero() {
+        assert_eq!(rm(0.0, 0.1, 0.1, 1).tpot(), 0.0);
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let rep = ServingReport {
+            requests: vec![rm(0.0, 0.1, 1.1, 11), rm(0.0, 0.2, 2.2, 21)],
+            duration: 2.2,
+        };
+        assert_eq!(rep.total_output_tokens(), 32);
+        assert!((rep.throughput_tok_s() - 32.0 / 2.2).abs() < 1e-9);
+        let j = rep.to_json();
+        assert_eq!(j.get_usize("requests"), Some(2));
+        assert!(j.get_f64("tpot_mean_s").unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! The serving coordinator — Twilight's L3 system layer.
+//!
+//! ```text
+//!  requests ──> queue ──> scheduler (continuous batching, preemption)
+//!                            │
+//!                            v
+//!                         engine (per decode step, per layer):
+//!                            Token Selector  ─┐  conservative budget B0
+//!                            Twilight Pruner ─┤  INT4 SpGEMV → top-p → B1
+//!                            varlen attention ┘  group-varlen kernel
+//!                            rest-of-layer (native or PJRT HLO)
+//!                            │
+//!                            v
+//!                         metrics (TTFT/TPOT/throughput/budget hists)
+//! ```
+
+pub mod balance;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+use crate::pruner::PrunerConfig;
+use crate::selector::SelectorKind;
+use crate::util::json::Json;
+
+/// How the conservative stage-1 budget B0 is derived from context length.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BudgetSpec {
+    /// Fixed token count.
+    Fixed(usize),
+    /// Fraction of the current context (paper: 1/4 for the selector).
+    Fraction(f32),
+}
+
+impl BudgetSpec {
+    pub fn resolve(&self, ctx_len: usize) -> usize {
+        match *self {
+            BudgetSpec::Fixed(n) => n.min(ctx_len),
+            BudgetSpec::Fraction(f) => ((ctx_len as f32 * f) as usize).max(1).min(ctx_len),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BudgetSpec> {
+        if let Some(frac) = s.strip_suffix('f') {
+            return frac.parse::<f32>().ok().map(BudgetSpec::Fraction);
+        }
+        if s.contains('.') {
+            return s.parse::<f32>().ok().map(BudgetSpec::Fraction);
+        }
+        s.parse::<usize>().ok().map(BudgetSpec::Fixed)
+    }
+}
+
+/// Which sparse-attention kernel packing to use (Fig. 13 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnVariant {
+    GroupVarlen,
+    HeadVarlen,
+    Padded,
+}
+
+impl AttnVariant {
+    pub fn parse(s: &str) -> Option<AttnVariant> {
+        match s {
+            "group" | "group-varlen" => Some(AttnVariant::GroupVarlen),
+            "head" | "head-varlen" => Some(AttnVariant::HeadVarlen),
+            "padded" => Some(AttnVariant::Padded),
+            _ => None,
+        }
+    }
+}
+
+/// Full sparse-attention pipeline configuration for the engine.
+#[derive(Clone, Debug)]
+pub struct SparseConfig {
+    /// The base algorithm (black-box Token Selector).
+    pub selector: SelectorKind,
+    /// Conservative stage-1 budget.
+    pub budget: BudgetSpec,
+    /// Twilight pruner; `None` runs the base algorithm alone.
+    pub twilight: Option<PrunerConfig>,
+    /// Dense attention for the first `skip_layers` layers (the paper
+    /// leaves the first two layers dense).
+    pub skip_layers: usize,
+    /// Contexts shorter than this stay dense.
+    pub dense_below: usize,
+    /// Kernel packing variant.
+    pub attn: AttnVariant,
+}
+
+impl SparseConfig {
+    /// Dense/full attention configuration.
+    pub fn dense() -> SparseConfig {
+        SparseConfig {
+            selector: SelectorKind::Full,
+            budget: BudgetSpec::Fraction(1.0),
+            twilight: None,
+            skip_layers: usize::MAX,
+            dense_below: 0,
+            attn: AttnVariant::GroupVarlen,
+        }
+    }
+
+    /// The paper's recommended deployment: base selector at 1/4 context
+    /// plus the Twilight pruner at threshold `p`.
+    pub fn twilight(selector: SelectorKind, p: f32) -> SparseConfig {
+        SparseConfig {
+            selector,
+            budget: BudgetSpec::Fraction(0.25),
+            twilight: Some(PrunerConfig { p, ..Default::default() }),
+            skip_layers: 2,
+            dense_below: 64,
+            attn: AttnVariant::GroupVarlen,
+        }
+    }
+
+    /// A fixed-budget top-k baseline without Twilight.
+    pub fn baseline(selector: SelectorKind, budget: usize) -> SparseConfig {
+        SparseConfig {
+            selector,
+            budget: BudgetSpec::Fixed(budget),
+            twilight: None,
+            skip_layers: 2,
+            dense_below: 64,
+            attn: AttnVariant::GroupVarlen,
+        }
+    }
+
+    /// Parse from a JSON object (the config-file path).
+    pub fn from_json(j: &Json) -> Result<SparseConfig, String> {
+        let selector = SelectorKind::parse(j.get_str("selector").unwrap_or("quest"))
+            .ok_or("unknown selector")?;
+        let budget = BudgetSpec::parse(j.get_str("budget").unwrap_or("0.25f"))
+            .ok_or("bad budget spec")?;
+        let twilight = match j.get("twilight") {
+            Some(Json::Bool(false)) | None => None,
+            Some(tw) => {
+                let p = tw.get_f64("p").unwrap_or(0.95) as f32;
+                let min_keep = tw.get_usize("min_keep").unwrap_or(4);
+                Some(PrunerConfig { p, min_keep, ..Default::default() })
+            }
+        };
+        Ok(SparseConfig {
+            selector,
+            budget,
+            twilight,
+            skip_layers: j.get_usize("skip_layers").unwrap_or(2),
+            dense_below: j.get_usize("dense_below").unwrap_or(64),
+            attn: AttnVariant::parse(j.get_str("attn").unwrap_or("group"))
+                .ok_or("bad attn variant")?,
+        })
+    }
+
+    /// Short human-readable label for reports ("quest+twi(p=0.95)").
+    pub fn label(&self) -> String {
+        match &self.twilight {
+            Some(t) => format!("{}+twi(p={})", self.selector.name(), t.p),
+            None => match self.budget {
+                BudgetSpec::Fixed(b) => format!("{}(B={b})", self.selector.name()),
+                BudgetSpec::Fraction(f) => format!("{}(B={f}N)", self.selector.name()),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_spec_parse_and_resolve() {
+        assert_eq!(BudgetSpec::parse("256"), Some(BudgetSpec::Fixed(256)));
+        assert_eq!(BudgetSpec::parse("0.25f"), Some(BudgetSpec::Fraction(0.25)));
+        assert_eq!(BudgetSpec::parse("0.25"), Some(BudgetSpec::Fraction(0.25)));
+        assert_eq!(BudgetSpec::Fixed(256).resolve(100), 100);
+        assert_eq!(BudgetSpec::Fraction(0.25).resolve(1000), 250);
+        assert_eq!(BudgetSpec::Fraction(0.5).resolve(1), 1);
+    }
+
+    #[test]
+    fn sparse_config_from_json() {
+        let j = Json::parse(
+            r#"{"selector":"quest","budget":"0.25f","twilight":{"p":0.85},
+                "skip_layers":1,"attn":"group"}"#,
+        )
+        .unwrap();
+        let c = SparseConfig::from_json(&j).unwrap();
+        assert_eq!(c.selector, SelectorKind::Quest);
+        assert!((c.twilight.unwrap().p - 0.85).abs() < 1e-6);
+        assert_eq!(c.skip_layers, 1);
+        assert_eq!(c.label(), "quest+twi(p=0.85)");
+    }
+
+    #[test]
+    fn twilight_disabled_via_false() {
+        let j = Json::parse(r#"{"selector":"ds","budget":"512","twilight":false}"#).unwrap();
+        let c = SparseConfig::from_json(&j).unwrap();
+        assert!(c.twilight.is_none());
+        assert_eq!(c.label(), "ds(B=512)");
+    }
+}

@@ -1,0 +1,103 @@
+//! Request representation and lifecycle for the serving coordinator.
+
+use crate::model::sampler::SamplingParams;
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// Lifecycle states of a request inside the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestState {
+    /// In the admission queue.
+    Queued,
+    /// Prompt is being processed.
+    Prefilling,
+    /// Generating tokens.
+    Decoding,
+    /// Evicted under memory pressure; will re-enter prefill.
+    Preempted,
+    /// Done (completed or cancelled).
+    Finished,
+}
+
+/// A serving request plus its runtime bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub params: SamplingParams,
+    /// Arrival time (seconds since trace start).
+    pub arrival: f64,
+    pub state: RequestState,
+    pub output: Vec<u32>,
+    /// Time the first output token was produced.
+    pub first_token_at: Option<f64>,
+    /// Completion time.
+    pub finished_at: Option<f64>,
+    /// Stop decoding when this token is produced (optional).
+    pub stop_token: Option<u32>,
+    /// Preemption count (diagnostics).
+    pub preemptions: u32,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            params: SamplingParams::default(),
+            arrival: 0.0,
+            state: RequestState::Queued,
+            output: Vec::new(),
+            first_token_at: None,
+            finished_at: None,
+            stop_token: None,
+            preemptions: 0,
+        }
+    }
+
+    /// Total sequence length right now (prompt + generated).
+    pub fn seq_len(&self) -> usize {
+        self.prompt.len() + self.output.len()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.output.len() >= self.max_new_tokens
+            || self
+                .stop_token
+                .map(|s| self.output.last() == Some(&s))
+                .unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn done_by_length_and_stop() {
+        let mut r = Request::new(1, vec![1, 2, 3], 2);
+        assert!(!r.is_done());
+        r.output.push(9);
+        assert!(!r.is_done());
+        r.output.push(9);
+        assert!(r.is_done());
+
+        let mut r = Request::new(2, vec![1], 100);
+        r.stop_token = Some(7);
+        r.output.push(3);
+        assert!(!r.is_done());
+        r.output.push(7);
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn seq_len_counts_output() {
+        let mut r = Request::new(1, vec![1, 2, 3], 8);
+        assert_eq!(r.seq_len(), 3);
+        r.output.push(5);
+        assert_eq!(r.seq_len(), 4);
+    }
+}

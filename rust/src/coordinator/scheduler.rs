@@ -1,0 +1,310 @@
+//! Continuous-batching scheduler (vLLM-style) over the decode [`Engine`].
+//!
+//! Each scheduler *step* interleaves: (1) admitting arrived requests when
+//! the page pool has headroom (prefill), (2) one decode iteration for
+//! every running request, (3) preemption of the youngest request when the
+//! pool runs dry (its pages are released; it re-prefills later —
+//! recompute-style preemption, the same policy vLLM defaults to).
+//!
+//! Time is virtual when replaying a trace (`now` advances with the
+//! wall-clock of actual compute), so arrival patterns interact with
+//! compute latency exactly as in a live server.
+
+use super::engine::Engine;
+use super::metrics::{RequestMetrics, ServingReport};
+use super::request::{Request, RequestState};
+use crate::model::sampler::sample;
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Scheduler limits.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Max concurrently-decoding requests.
+    pub max_batch: usize,
+    /// Keep at least this many pages free before admitting a request
+    /// (headroom for running decodes).
+    pub admit_headroom_pages: usize,
+    /// Max prefills per scheduler step (bounds head-of-line blocking).
+    pub max_prefills_per_step: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_batch: 64, admit_headroom_pages: 8, max_prefills_per_step: 4 }
+    }
+}
+
+/// The coordinator's scheduler: admission queue + running set.
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+    pub engine: Engine,
+    queue: VecDeque<Request>,
+    running: Vec<Request>,
+    rng: Rng,
+    finished: Vec<Request>,
+}
+
+impl Scheduler {
+    pub fn new(engine: Engine, cfg: SchedulerConfig) -> Scheduler {
+        Scheduler {
+            cfg,
+            engine,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            rng: Rng::new(0xBA7C4),
+            finished: Vec::new(),
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Pages a prompt will need across all layers.
+    fn pages_needed(&self, prompt_len: usize) -> usize {
+        let layers = self.engine.model.cfg.n_layers;
+        prompt_len.div_ceil(16) * layers
+    }
+
+    /// One scheduler iteration at virtual time `now`. Returns the number
+    /// of output tokens produced.
+    pub fn step(&mut self, now: f64) -> usize {
+        // --- admission ------------------------------------------------
+        let mut prefills = 0;
+        while prefills < self.cfg.max_prefills_per_step
+            && self.running.len() < self.cfg.max_batch
+        {
+            let Some(front) = self.queue.front() else { break };
+            if front.arrival > now {
+                break;
+            }
+            let need = self.pages_needed(front.prompt.len()) / self.engine.model.cfg.n_layers
+                + self.cfg.admit_headroom_pages;
+            if self.engine.free_pages() < need {
+                break;
+            }
+            let mut req = self.queue.pop_front().unwrap();
+            req.state = RequestState::Prefilling;
+            match self.engine.prefill(req.id, &req.prompt) {
+                Ok(logits) => {
+                    let tok = sample(&logits, &req.params, &mut self.rng);
+                    req.output.push(tok);
+                    req.first_token_at = req.first_token_at.or(Some(now));
+                    req.state = RequestState::Decoding;
+                    if req.is_done() {
+                        self.engine.release(req.id);
+                        self.finish(req, now);
+                    } else {
+                        self.running.push(req);
+                    }
+                    prefills += 1;
+                }
+                Err(_) => {
+                    // Not enough pages after all: back to the queue head.
+                    req.state = RequestState::Queued;
+                    self.queue.push_front(req);
+                    break;
+                }
+            }
+        }
+        // --- decode ----------------------------------------------------
+        // Preempt (youngest-first) until every running request can step.
+        let mut produced = 0;
+        let mut i = 0;
+        while i < self.running.len() {
+            if !self.engine.can_step(self.running[i].id) {
+                // Free pages by preempting the *last* admitted request.
+                if let Some(mut victim) = self.running.pop() {
+                    if victim.id == self.running.get(i).map(|r| r.id).unwrap_or(victim.id)
+                        && self.running.len() == i
+                    {
+                        // The victim is the request we were inspecting.
+                    }
+                    self.engine.release(victim.id);
+                    victim.state = RequestState::Preempted;
+                    victim.preemptions += 1;
+                    // Re-enter the queue with its generated tokens folded
+                    // into the prompt (recompute-style preemption).
+                    victim.prompt.extend_from_slice(&victim.output);
+                    victim.output.clear();
+                    victim.first_token_at = None;
+                    self.queue.push_front(victim);
+                    continue; // re-check same index
+                }
+            }
+            let req = &mut self.running[i];
+            let last = *req.output.last().unwrap();
+            match self.engine.decode(req.id, last) {
+                Ok(logits) => {
+                    let tok = sample(&logits, &req.params, &mut self.rng);
+                    req.output.push(tok);
+                    produced += 1;
+                    i += 1;
+                }
+                Err(_) => {
+                    // OOM mid-step (engine released the sequence):
+                    // recompute-preempt this request.
+                    let mut victim = self.running.remove(i);
+                    victim.state = RequestState::Preempted;
+                    victim.preemptions += 1;
+                    victim.prompt.extend_from_slice(&victim.output);
+                    victim.output.clear();
+                    victim.first_token_at = None;
+                    self.queue.push_front(victim);
+                }
+            }
+        }
+        // --- completion --------------------------------------------------
+        let mut j = 0;
+        while j < self.running.len() {
+            if self.running[j].is_done() {
+                let req = self.running.remove(j);
+                self.engine.release(req.id);
+                self.finish(req, now);
+            } else {
+                j += 1;
+            }
+        }
+        produced
+    }
+
+    fn finish(&mut self, mut req: Request, now: f64) {
+        req.state = RequestState::Finished;
+        req.finished_at = Some(now);
+        self.finished.push(req);
+    }
+
+    /// Drive the scheduler until all submitted requests finish; returns
+    /// the serving report. Virtual time = accumulated wall-clock compute.
+    pub fn run_to_completion(&mut self) -> ServingReport {
+        let t0 = Instant::now();
+        let mut guard = 0u64;
+        while !self.queue.is_empty() || !self.running.is_empty() {
+            let now = t0.elapsed().as_secs_f64();
+            self.step(now);
+            guard += 1;
+            assert!(guard < 10_000_000, "scheduler livelock");
+        }
+        let duration = t0.elapsed().as_secs_f64();
+        let requests = self
+            .finished
+            .iter()
+            .map(|r| RequestMetrics {
+                id: r.id,
+                prompt_len: r.prompt.len(),
+                output_len: r.output.len(),
+                arrival: r.arrival,
+                first_token_at: r.first_token_at.unwrap_or(r.arrival),
+                finished_at: r.finished_at.unwrap_or(duration),
+                preemptions: r.preemptions,
+            })
+            .collect();
+        ServingReport { requests, duration }
+    }
+
+    /// Finished requests (for output inspection).
+    pub fn finished_requests(&self) -> &[Request] {
+        &self.finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SparseConfig;
+    use crate::model::retrieval::build_retrieval_model;
+    use crate::selector::SelectorKind;
+    use crate::util::rng::Rng;
+    use crate::workload::{gen_niah, RetrievalVocab};
+    use std::sync::Arc;
+
+    const V: RetrievalVocab = RetrievalVocab::DEFAULT;
+
+    fn sched(capacity: usize, cfg: SparseConfig) -> Scheduler {
+        let model = Arc::new(build_retrieval_model(V, 8192));
+        let engine = Engine::new(model, cfg, capacity);
+        Scheduler::new(engine, SchedulerConfig::default())
+    }
+
+    #[test]
+    fn completes_batch_and_answers() {
+        let mut s = sched(1 << 16, SparseConfig::twilight(SelectorKind::Quest, 0.9));
+        let mut r = Rng::new(1);
+        let mut answers = Vec::new();
+        for i in 0..6 {
+            let g = gen_niah(&mut r, V, 256);
+            let req = Request::new(i, g.prompt.clone(), 1);
+            answers.push(g.answer);
+            s.submit(req);
+        }
+        let rep = s.run_to_completion();
+        assert_eq!(rep.requests.len(), 6);
+        let mut correct = 0;
+        for (req, want) in s.finished_requests().iter().zip(&answers) {
+            if req.output.first() == Some(want) {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 5, "{correct}/6");
+        // All pages returned.
+        assert_eq!(s.engine.num_seqs(), 0);
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut s = sched(1 << 16, SparseConfig::dense());
+        s.cfg.max_batch = 2;
+        let mut r = Rng::new(2);
+        for i in 0..5 {
+            let g = gen_niah(&mut r, V, 64);
+            let mut req = Request::new(i, g.prompt, 8);
+            req.stop_token = None;
+            s.submit(req);
+        }
+        s.step(0.0);
+        assert!(s.running() <= 2);
+        let rep = s.run_to_completion();
+        assert_eq!(rep.requests.len(), 5);
+    }
+
+    #[test]
+    fn preempts_under_memory_pressure_and_recovers() {
+        // Pool sized so 3 long decodes cannot coexist.
+        let mut s = sched(700, SparseConfig::dense());
+        s.cfg.admit_headroom_pages = 0;
+        let mut r = Rng::new(3);
+        for i in 0..3 {
+            let g = gen_niah(&mut r, V, 192);
+            s.submit(Request::new(i, g.prompt, 64));
+        }
+        let rep = s.run_to_completion();
+        assert_eq!(rep.requests.len(), 3);
+        let total_preempt: u32 = rep.requests.iter().map(|r| r.preemptions).sum();
+        assert!(total_preempt > 0, "expected at least one preemption");
+        assert_eq!(s.engine.num_seqs(), 0);
+    }
+
+    #[test]
+    fn arrivals_respected() {
+        let mut s = sched(1 << 14, SparseConfig::dense());
+        let mut r = Rng::new(4);
+        let g = gen_niah(&mut r, V, 64);
+        let mut req = Request::new(0, g.prompt, 1);
+        req.arrival = 1e9; // far future
+        s.submit(req);
+        assert_eq!(s.step(0.0), 0);
+        assert_eq!(s.pending(), 1);
+        s.step(2e9);
+        assert_eq!(s.pending(), 0);
+    }
+}

@@ -1,0 +1,226 @@
+//! Line-delimited JSON TCP server — the `twilight serve` front end.
+//!
+//! Protocol (one JSON object per line):
+//! ```text
+//! → {"prompt": [1,2,3], "max_new_tokens": 4}
+//! ← {"id": 0, "output": [17,3,3,9], "ttft_s": 0.01, "tpot_s": 0.002}
+//! → {"cmd": "stats"}
+//! ← {"requests": ..., "throughput_tok_s": ...}
+//! → {"cmd": "shutdown"}
+//! ```
+//!
+//! Connections are handled by an acceptor thread each; requests funnel
+//! through an mpsc channel into the single scheduler thread that owns the
+//! engine (the same single-writer design vLLM's engine loop uses).
+
+use super::request::Request;
+use super::scheduler::Scheduler;
+use crate::util::json::{self, Json};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A request travelling from a connection thread to the engine loop.
+struct Inflight {
+    req: Request,
+    reply: mpsc::Sender<Json>,
+    submitted: Instant,
+}
+
+/// Serve forever (or until a `shutdown` command) on `addr`.
+pub fn serve(mut sched: Scheduler, addr: &str) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    crate::log_info!("listening on {addr}");
+    let (tx, rx) = mpsc::channel::<Inflight>();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let next_id = Arc::new(AtomicU64::new(0));
+
+    let mut pending: Vec<(u64, mpsc::Sender<Json>, Instant)> = Vec::new();
+    let t0 = Instant::now();
+    loop {
+        if shutdown.load(Ordering::Relaxed) && pending.is_empty() && sched.running() == 0 {
+            crate::log_info!("shutdown complete");
+            return Ok(());
+        }
+        // Accept new connections (non-blocking).
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                crate::log_info!("connection from {peer}");
+                let tx = tx.clone();
+                let shutdown = shutdown.clone();
+                let next_id = next_id.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, tx, shutdown, next_id);
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+            Err(e) => return Err(e),
+        }
+        // Drain newly-submitted requests into the scheduler.
+        while let Ok(inf) = rx.try_recv() {
+            pending.push((inf.req.id, inf.reply, inf.submitted));
+            sched.submit(inf.req);
+        }
+        // Drive the engine.
+        let now = t0.elapsed().as_secs_f64();
+        sched.step(now);
+        // Reply to finished requests.
+        let finished: Vec<(u64, Vec<u32>, f64, f64)> = sched
+            .finished_requests()
+            .iter()
+            .filter(|r| pending.iter().any(|(id, _, _)| *id == r.id))
+            .map(|r| {
+                let ttft = r.first_token_at.unwrap_or(0.0) - r.arrival;
+                let tpot = if r.output.len() > 1 {
+                    (r.finished_at.unwrap_or(now) - r.first_token_at.unwrap_or(now))
+                        / (r.output.len() - 1) as f64
+                } else {
+                    0.0
+                };
+                (r.id, r.output.clone(), ttft, tpot)
+            })
+            .collect();
+        for (id, output, ttft, tpot) in finished {
+            if let Some(pos) = pending.iter().position(|(pid, _, _)| *pid == id) {
+                let (_, reply, _) = pending.remove(pos);
+                let msg = json::obj(vec![
+                    ("id", Json::Num(id as f64)),
+                    ("output", Json::Arr(output.iter().map(|&t| Json::Num(t as f64)).collect())),
+                    ("ttft_s", Json::Num(ttft)),
+                    ("tpot_s", Json::Num(tpot)),
+                ]);
+                let _ = reply.send(msg);
+            }
+        }
+        if sched.running() == 0 && sched.pending() == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: mpsc::Sender<Inflight>,
+    shutdown: Arc<AtomicBool>,
+    next_id: Arc<AtomicU64>,
+) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                writeln!(writer, "{}", json::obj(vec![("error", json::s(&e.to_string()))]).to_string())?;
+                continue;
+            }
+        };
+        if parsed.get_str("cmd") == Some("shutdown") {
+            shutdown.store(true, Ordering::Relaxed);
+            writeln!(writer, "{}", json::obj(vec![("ok", Json::Bool(true))]).to_string())?;
+            return Ok(());
+        }
+        let Some(prompt) = parsed.get("prompt").and_then(|p| p.as_arr()).map(|a| {
+            a.iter().filter_map(|v| v.as_usize()).map(|v| v as u32).collect::<Vec<u32>>()
+        }) else {
+            writeln!(
+                writer,
+                "{}",
+                json::obj(vec![("error", json::s("missing 'prompt'"))]).to_string()
+            )?;
+            continue;
+        };
+        if prompt.is_empty() {
+            writeln!(
+                writer,
+                "{}",
+                json::obj(vec![("error", json::s("empty prompt"))]).to_string()
+            )?;
+            continue;
+        }
+        let max_new = parsed.get_usize("max_new_tokens").unwrap_or(16);
+        let id = next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request::new(id, prompt, max_new);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(Inflight { req, reply: reply_tx, submitted: Instant::now() })
+            .map_err(|_| std::io::Error::new(std::io::ErrorKind::BrokenPipe, "engine gone"))?;
+        // Block this connection thread until the engine replies.
+        match reply_rx.recv() {
+            Ok(msg) => writeln!(writer, "{}", msg.to_string())?,
+            Err(_) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    json::obj(vec![("error", json::s("engine dropped request"))]).to_string()
+                )?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Engine;
+    use crate::coordinator::scheduler::SchedulerConfig;
+    use crate::coordinator::SparseConfig;
+    use crate::model::retrieval::build_retrieval_model;
+    use crate::selector::SelectorKind;
+    use crate::util::rng::Rng;
+    use crate::workload::{gen_niah, RetrievalVocab};
+    use std::io::{BufRead, BufReader, Write};
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let v = RetrievalVocab::DEFAULT;
+        let model = std::sync::Arc::new(build_retrieval_model(v, 8192));
+        let engine = Engine::new(model, SparseConfig::twilight(SelectorKind::Quest, 0.9), 1 << 14);
+        let sched = Scheduler::new(engine, SchedulerConfig::default());
+        // Pick a free port by binding then immediately reusing.
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap().to_string();
+        drop(probe);
+        let addr2 = addr.clone();
+        let h = std::thread::spawn(move || serve(sched, &addr2));
+        // Wait for the listener.
+        let mut stream = None;
+        for _ in 0..200 {
+            match std::net::TcpStream::connect(&addr) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+            }
+        }
+        let stream = stream.expect("server did not come up");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut r = Rng::new(1);
+        let g = gen_niah(&mut r, v, 128);
+        let prompt_json: Vec<String> = g.prompt.iter().map(|t| t.to_string()).collect();
+        writeln!(
+            &stream,
+            "{{\"prompt\": [{}], \"max_new_tokens\": 1}}",
+            prompt_json.join(",")
+        )
+        .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        let out = resp.get("output").unwrap().as_arr().unwrap();
+        assert_eq!(out[0].as_usize(), Some(g.answer as usize));
+        // Shutdown.
+        writeln!(&stream, "{{\"cmd\": \"shutdown\"}}").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        h.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,164 @@
+//! Accuracy evaluation harness — produces the rows of the paper's tables
+//! on the synthetic task suite (DESIGN.md §3, §5).
+
+pub mod distributions;
+pub mod ppl;
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::SparseConfig;
+use crate::model::sampler::greedy;
+use crate::model::Model;
+use crate::util::rng::Rng;
+use crate::workload::{gen_fwe, gen_multi_niah, gen_niah, GenRequest, RetrievalVocab, TaskKind};
+use std::sync::Arc;
+
+/// Accuracy + budget outcome for one (method, suite) cell.
+#[derive(Clone, Debug)]
+pub struct AccuracyResult {
+    pub label: String,
+    /// (task, correct, total) rows.
+    pub per_task: Vec<(TaskKind, usize, usize)>,
+    /// Mean final per-head budget (tokens) over sparse calls.
+    pub avg_budget: f64,
+    /// Mean stage-1 candidate budget.
+    pub avg_candidates: f64,
+    /// Fraction of candidates pruned by Twilight.
+    pub prune_ratio: f64,
+}
+
+impl AccuracyResult {
+    pub fn overall(&self) -> f64 {
+        let c: usize = self.per_task.iter().map(|(_, c, _)| c).sum();
+        let t: usize = self.per_task.iter().map(|(_, _, t)| t).sum();
+        if t == 0 {
+            0.0
+        } else {
+            c as f64 / t as f64
+        }
+    }
+
+    pub fn task_accuracy(&self, task: TaskKind) -> f64 {
+        self.per_task
+            .iter()
+            .find(|(k, _, _)| *k == task)
+            .map(|(_, c, t)| *c as f64 / (*t).max(1) as f64)
+            .unwrap_or(0.0)
+    }
+}
+
+/// The evaluation suites (paper-benchmark analogs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Suite {
+    /// LongBench analog: mixed tasks at one medium-long context.
+    Longbench,
+    /// RULER analog: NIAH-heavy at several long contexts.
+    Ruler,
+    /// Medium-context analog (GSM8K/COQA stand-in): short contexts.
+    Medium,
+}
+
+impl Suite {
+    pub fn parse(s: &str) -> Option<Suite> {
+        match s.to_ascii_lowercase().as_str() {
+            "longbench" => Some(Suite::Longbench),
+            "ruler" => Some(Suite::Ruler),
+            "medium" => Some(Suite::Medium),
+            _ => None,
+        }
+    }
+}
+
+/// Generate the requests of a suite at `ctx_len`.
+pub fn suite_requests(seed: u64, ctx_len: usize, n_per_task: usize) -> Vec<GenRequest> {
+    let v = RetrievalVocab::DEFAULT;
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for _ in 0..n_per_task {
+        out.push(gen_niah(&mut rng, v, ctx_len));
+        out.push(gen_multi_niah(&mut rng, v, ctx_len, 4));
+        out.push(gen_fwe(&mut rng, v, ctx_len, 6.0));
+    }
+    out
+}
+
+/// Run `requests` through a fresh engine configured with `cfg`; greedy
+/// decode one answer token per request and score exact-match.
+pub fn run_accuracy(
+    model: Arc<Model>,
+    cfg: &SparseConfig,
+    requests: &[GenRequest],
+    capacity_tokens: usize,
+) -> AccuracyResult {
+    let mut engine = Engine::new(model, cfg.clone(), capacity_tokens);
+    let mut counts: Vec<(TaskKind, usize, usize)> = vec![
+        (TaskKind::Niah, 0, 0),
+        (TaskKind::MultiNiah, 0, 0),
+        (TaskKind::Fwe, 0, 0),
+    ];
+    for (i, req) in requests.iter().enumerate() {
+        let logits = engine.prefill(i as u64, &req.prompt).expect("prefill OOM");
+        let pred = greedy(&logits);
+        let row = counts.iter_mut().find(|(k, _, _)| *k == req.task).unwrap();
+        row.2 += 1;
+        if pred == req.answer {
+            row.1 += 1;
+        }
+        engine.release(i as u64);
+    }
+    AccuracyResult {
+        label: cfg.label(),
+        per_task: counts,
+        avg_budget: engine.stats.avg_kept(),
+        avg_candidates: engine.stats.avg_candidates(),
+        prune_ratio: engine.stats.prune_ratio(),
+    }
+}
+
+/// Render a set of results as an aligned text table (the CLI/table
+/// output format used by EXPERIMENTS.md).
+pub fn render_table(title: &str, results: &[AccuracyResult]) -> String {
+    let mut s = format!("## {title}\n");
+    s.push_str(&format!(
+        "{:<22} {:>7} {:>9} {:>7} {:>9} {:>10} {:>8}\n",
+        "method", "niah", "multi", "fwe", "overall", "avg-budget", "pruned%"
+    ));
+    for r in results {
+        s.push_str(&format!(
+            "{:<22} {:>7.3} {:>9.3} {:>7.3} {:>9.3} {:>10.1} {:>8.1}\n",
+            r.label,
+            r.task_accuracy(TaskKind::Niah),
+            r.task_accuracy(TaskKind::MultiNiah),
+            r.task_accuracy(TaskKind::Fwe),
+            r.overall(),
+            r.avg_budget,
+            r.prune_ratio * 100.0,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::retrieval::build_retrieval_model;
+    use crate::selector::SelectorKind;
+
+    #[test]
+    fn accuracy_suite_shapes_hold() {
+        // The core Table-2 shape on a small instance: Twilight matches
+        // dense accuracy at a fraction of the budget; a starved fixed
+        // budget loses on FWE.
+        let model = Arc::new(build_retrieval_model(RetrievalVocab::DEFAULT, 8192));
+        let reqs = suite_requests(11, 512, 3);
+        let dense = run_accuracy(model.clone(), &SparseConfig::dense(), &reqs, 1 << 14);
+        let mut twi = SparseConfig::twilight(SelectorKind::Quest, 0.95);
+        twi.skip_layers = 0;
+        twi.dense_below = 32;
+        let twi_r = run_accuracy(model.clone(), &twi, &reqs, 1 << 14);
+        assert!((dense.overall() - 1.0).abs() < 1e-9, "dense must be perfect");
+        assert!(twi_r.overall() >= 0.8, "twilight overall {}", twi_r.overall());
+        assert!(twi_r.avg_budget > 0.0);
+        let table = render_table("test", &[dense, twi_r]);
+        assert!(table.contains("avg-budget"));
+    }
+}

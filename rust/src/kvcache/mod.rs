@@ -1,0 +1,545 @@
+//! Paged KV cache manager (PagedAttention-style, paper §4.3) with the
+//! Twilight INT4 mirror K cache and Quest page metadata maintained on
+//! append.
+//!
+//! Layout decisions mirror the paper's system design:
+//! * storage is paged (`page_size` tokens per page, default 16 — Quest's
+//!   page granularity) with per-sequence page tables, so prefix sharing
+//!   and the varlen attention kernels address tokens as
+//!   `(page, slot)` pairs;
+//! * a low-precision mirror of K (per-(page, head) asymmetric INT4 by
+//!   default) is kept alongside, in the same paged layout — this is the
+//!   "extra INT4 quantized K cache" of §4.2, costing 1/8 extra memory;
+//! * per-(page, head) elementwise min/max of K is kept for the Quest
+//!   selector's upper-bound score.
+
+pub mod offload;
+
+use crate::tensor::quant::{self, QuantBits, QuantBlock};
+
+/// Identifies a physical page in the pool.
+pub type PageId = u32;
+
+/// Cache geometry and precision configuration.
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    /// Number of KV heads (GQA: may be fewer than query heads).
+    pub kv_heads: usize,
+    /// Head dimension.
+    pub head_dim: usize,
+    /// Tokens per page.
+    pub page_size: usize,
+    /// Total physical pages in the pool.
+    pub num_pages: usize,
+    /// Mirror K-cache precision (paper default INT4).
+    pub mirror_bits: QuantBits,
+}
+
+impl CacheConfig {
+    pub fn new(kv_heads: usize, head_dim: usize, num_pages: usize) -> CacheConfig {
+        CacheConfig { kv_heads, head_dim, page_size: 16, num_pages, mirror_bits: QuantBits::Int4 }
+    }
+
+    /// Tokens the pool can hold.
+    pub fn capacity_tokens(&self) -> usize {
+        self.num_pages * self.page_size
+    }
+}
+
+/// Per-sequence view: page table plus logical length.
+#[derive(Clone, Debug, Default)]
+pub struct SeqCache {
+    pub pages: Vec<PageId>,
+    pub len: usize,
+}
+
+impl SeqCache {
+    /// Physical location of logical token `i`.
+    #[inline]
+    pub fn locate(&self, i: usize, page_size: usize) -> (PageId, usize) {
+        (self.pages[i / page_size], i % page_size)
+    }
+}
+
+/// Errors from the allocator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CacheError {
+    OutOfPages,
+}
+
+impl std::fmt::Display for CacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheError::OutOfPages => write!(f, "KV cache pool exhausted"),
+        }
+    }
+}
+
+impl std::error::Error for CacheError {}
+
+/// The physical paged pool. All tensors are row-major f32; the mirror is
+/// packed per (page, head).
+pub struct PagedKvCache {
+    pub cfg: CacheConfig,
+    /// K storage: `[page][kv_head][slot][d]`.
+    k: Vec<f32>,
+    /// V storage: same layout.
+    v: Vec<f32>,
+    /// Mirror K codes: per (page, head) `QuantBlock` over `[slot][d]`.
+    mirror: Vec<Option<QuantBlock>>,
+    /// Quest metadata: per (page, head), elementwise min then max (2*d).
+    minmax: Vec<f32>,
+    /// Number of valid tokens currently in each page.
+    page_fill: Vec<u32>,
+    /// Reference counts (prefix sharing); 0 = free.
+    refs: Vec<u32>,
+    free: Vec<PageId>,
+}
+
+impl PagedKvCache {
+    pub fn new(cfg: CacheConfig) -> PagedKvCache {
+        let per_page = cfg.kv_heads * cfg.page_size * cfg.head_dim;
+        PagedKvCache {
+            k: vec![0.0; cfg.num_pages * per_page],
+            v: vec![0.0; cfg.num_pages * per_page],
+            mirror: (0..cfg.num_pages * cfg.kv_heads).map(|_| None).collect(),
+            minmax: vec![0.0; cfg.num_pages * cfg.kv_heads * 2 * cfg.head_dim],
+            page_fill: vec![0; cfg.num_pages],
+            refs: vec![0; cfg.num_pages],
+            free: (0..cfg.num_pages as PageId).rev().collect(),
+            cfg,
+        }
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.cfg.num_pages - self.free.len()
+    }
+
+    fn alloc_page(&mut self) -> Result<PageId, CacheError> {
+        let p = self.free.pop().ok_or(CacheError::OutOfPages)?;
+        self.refs[p as usize] = 1;
+        self.page_fill[p as usize] = 0;
+        for h in 0..self.cfg.kv_heads {
+            self.mirror[p as usize * self.cfg.kv_heads + h] = None;
+        }
+        Ok(p)
+    }
+
+    /// Increase the refcount of every page of `seq` (prefix sharing: a
+    /// forked sequence shares all full pages of its parent).
+    pub fn share(&mut self, seq: &SeqCache) -> SeqCache {
+        for &p in &seq.pages {
+            self.refs[p as usize] += 1;
+        }
+        seq.clone()
+    }
+
+    /// Release a sequence's pages.
+    pub fn release(&mut self, seq: &SeqCache) {
+        for &p in &seq.pages {
+            let r = &mut self.refs[p as usize];
+            debug_assert!(*r > 0);
+            *r -= 1;
+            if *r == 0 {
+                self.free.push(p);
+            }
+        }
+    }
+
+    #[inline]
+    fn k_base(&self, page: PageId, head: usize, slot: usize) -> usize {
+        let c = &self.cfg;
+        ((page as usize * c.kv_heads + head) * c.page_size + slot) * c.head_dim
+    }
+
+    /// K vector at (page, head, slot).
+    #[inline]
+    pub fn k_at(&self, page: PageId, head: usize, slot: usize) -> &[f32] {
+        let b = self.k_base(page, head, slot);
+        &self.k[b..b + self.cfg.head_dim]
+    }
+
+    /// V vector at (page, head, slot).
+    #[inline]
+    pub fn v_at(&self, page: PageId, head: usize, slot: usize) -> &[f32] {
+        let b = self.k_base(page, head, slot);
+        &self.v[b..b + self.cfg.head_dim]
+    }
+
+    /// Quest min/max metadata of (page, head): `(&min[d], &max[d])`.
+    #[inline]
+    pub fn minmax_at(&self, page: PageId, head: usize) -> (&[f32], &[f32]) {
+        let d = self.cfg.head_dim;
+        let b = (page as usize * self.cfg.kv_heads + head) * 2 * d;
+        (&self.minmax[b..b + d], &self.minmax[b + d..b + 2 * d])
+    }
+
+    /// Mirror quant block of (page, head), if the page has been sealed.
+    #[inline]
+    pub fn mirror_at(&self, page: PageId, head: usize) -> Option<&QuantBlock> {
+        self.mirror[page as usize * self.cfg.kv_heads + head].as_ref()
+    }
+
+    /// Number of valid tokens in `page`.
+    #[inline]
+    pub fn fill_of(&self, page: PageId) -> usize {
+        self.page_fill[page as usize] as usize
+    }
+
+    /// Append one token's K/V (all kv heads at once, `k`/`v` are
+    /// `[kv_heads * head_dim]`) to `seq`, allocating a page if needed.
+    pub fn append(
+        &mut self,
+        seq: &mut SeqCache,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<(), CacheError> {
+        let c = self.cfg.clone();
+        debug_assert_eq!(k.len(), c.kv_heads * c.head_dim);
+        debug_assert_eq!(v.len(), c.kv_heads * c.head_dim);
+        let slot = seq.len % c.page_size;
+        if slot == 0 {
+            let p = self.alloc_page()?;
+            seq.pages.push(p);
+        }
+        let page = *seq.pages.last().unwrap();
+        debug_assert_eq!(self.refs[page as usize], 1, "appending to shared page");
+        for h in 0..c.kv_heads {
+            let base = self.k_base(page, h, slot);
+            let src = &k[h * c.head_dim..(h + 1) * c.head_dim];
+            self.k[base..base + c.head_dim].copy_from_slice(src);
+            let vsrc = &v[h * c.head_dim..(h + 1) * c.head_dim];
+            self.v[base..base + c.head_dim].copy_from_slice(vsrc);
+            // Update Quest min/max incrementally.
+            let mb = (page as usize * c.kv_heads + h) * 2 * c.head_dim;
+            if slot == 0 {
+                self.minmax[mb..mb + c.head_dim].copy_from_slice(src);
+                self.minmax[mb + c.head_dim..mb + 2 * c.head_dim].copy_from_slice(src);
+            } else {
+                for (i, &x) in src.iter().enumerate() {
+                    let mn = &mut self.minmax[mb + i];
+                    if x < *mn {
+                        *mn = x;
+                    }
+                    let mx = &mut self.minmax[mb + c.head_dim + i];
+                    if x > *mx {
+                        *mx = x;
+                    }
+                }
+            }
+        }
+        self.page_fill[page as usize] = (slot + 1) as u32;
+        seq.len += 1;
+        // Re-quantize the page's mirror. Cost is amortizable (the paper
+        // quantizes at prefill and on page close); we refresh every append
+        // for exactness and count the traffic in sim::cost instead.
+        self.requantize_page(page);
+        Ok(())
+    }
+
+    /// Rebuild the mirror blocks for `page` from current contents.
+    fn requantize_page(&mut self, page: PageId) {
+        let c = self.cfg.clone();
+        let fill = self.page_fill[page as usize] as usize;
+        for h in 0..c.kv_heads {
+            let b = self.k_base(page, h, 0);
+            let data = &self.k[b..b + fill * c.head_dim];
+            let block = quant::quantize(data, c.mirror_bits);
+            self.mirror[page as usize * c.kv_heads + h] = Some(block);
+        }
+    }
+
+    /// Estimated score `q · K̂[tok]` from the mirror cache for a logical
+    /// token index. Fused dequant-dot on the packed codes.
+    pub fn mirror_score(&self, seq: &SeqCache, head: usize, q: &[f32], tok: usize) -> f32 {
+        let c = &self.cfg;
+        let (page, slot) = seq.locate(tok, c.page_size);
+        let block = self.mirror_at(page, head).expect("mirror missing");
+        // Slice the block logically: codes for `slot` start at slot*d.
+        quant_dot_row(q, block, slot * c.head_dim, c.head_dim)
+    }
+
+    /// Exact score `q · K[tok]`.
+    pub fn exact_score(&self, seq: &SeqCache, head: usize, q: &[f32], tok: usize) -> f32 {
+        let c = &self.cfg;
+        let (page, slot) = seq.locate(tok, c.page_size);
+        crate::tensor::dot(q, self.k_at(page, head, slot))
+    }
+
+    /// Bytes held by the fp32 KV store (for memory accounting).
+    pub fn bytes_main(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+
+    /// Bytes held by the mirror cache.
+    pub fn bytes_mirror(&self) -> usize {
+        self.mirror
+            .iter()
+            .flatten()
+            .map(|b| b.packed.len() + 8)
+            .sum()
+    }
+}
+
+/// Max head dimension supported by the stack-buffer unpack fast path.
+pub const MAX_HEAD_DIM: usize = 256;
+
+/// Dot a whole GQA *group* of queries (`qs: [group * d]`) against one
+/// packed row, unpacking the codes once (§Perf: the unpack pass dominates
+/// the fused dequant-dot on CPU; sharing it across the group amortizes it
+/// 4× for LLaMA-3-style models). `out[g] += nothing` — results written.
+#[inline]
+pub fn quant_dot_row_group(
+    qs: &[f32],
+    qsums: &[f32],
+    b: &QuantBlock,
+    offset: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    let group = qsums.len();
+    debug_assert_eq!(qs.len(), group * d);
+    debug_assert!(d <= MAX_HEAD_DIM);
+    let mut codes = [0.0f32; MAX_HEAD_DIM];
+    match b.bits {
+        QuantBits::Fp16 => {
+            for (i, c) in codes[..d].iter_mut().enumerate() {
+                let j = offset + i;
+                let h = u16::from_le_bytes([b.packed[2 * j], b.packed[2 * j + 1]]);
+                *c = crate::tensor::fp16::f16_to_f32(h);
+            }
+            for g in 0..group {
+                out[g] = crate::tensor::dot(&qs[g * d..(g + 1) * d], &codes[..d]);
+            }
+            return;
+        }
+        QuantBits::Int8 => {
+            for (c, &byte) in codes[..d].iter_mut().zip(&b.packed[offset..offset + d]) {
+                *c = byte as f32;
+            }
+        }
+        QuantBits::Int4 => {
+            debug_assert!(offset % 2 == 0 && d % 2 == 0);
+            let bytes = &b.packed[offset / 2..offset / 2 + d / 2];
+            for (p, &byte) in bytes.iter().enumerate() {
+                codes[2 * p] = (byte & 0x0F) as f32;
+                codes[2 * p + 1] = (byte >> 4) as f32;
+            }
+        }
+        QuantBits::Int2 => {
+            debug_assert!(offset % 4 == 0 && d % 4 == 0);
+            let bytes = &b.packed[offset / 4..offset / 4 + d / 4];
+            for (p, &byte) in bytes.iter().enumerate() {
+                codes[4 * p] = (byte & 0x03) as f32;
+                codes[4 * p + 1] = ((byte >> 2) & 0x03) as f32;
+                codes[4 * p + 2] = ((byte >> 4) & 0x03) as f32;
+                codes[4 * p + 3] = (byte >> 6) as f32;
+            }
+        }
+    }
+    for g in 0..group {
+        out[g] = b.zero * qsums[g]
+            + b.scale * crate::tensor::dot(&qs[g * d..(g + 1) * d], &codes[..d]);
+    }
+}
+
+/// Dot `q` against a row (offset..offset+d) of a packed quant block,
+/// without materializing the dequantized row in memory traffic terms:
+/// codes are widened into a stack buffer (a vectorizable unpack pass,
+/// the CPU analog of the CUDA kernel's shared-memory dequant) and then
+/// contracted with a vectorized FMA dot.
+#[inline]
+pub fn quant_dot_row(q: &[f32], b: &QuantBlock, offset: usize, d: usize) -> f32 {
+    let qsum: f32 = q.iter().sum();
+    quant_dot_row_qsum(q, qsum, b, offset, d)
+}
+
+/// `quant_dot_row` with the (row-invariant) `sum(q)` hoisted out — the
+/// SpGEMV loop computes it once per query instead of once per row.
+#[inline]
+pub fn quant_dot_row_qsum(q: &[f32], qsum: f32, b: &QuantBlock, offset: usize, d: usize) -> f32 {
+    debug_assert!(offset + d <= b.n);
+    debug_assert_eq!(q.len(), d);
+    debug_assert!(d <= MAX_HEAD_DIM);
+    match b.bits {
+        QuantBits::Fp16 => {
+            let mut acc = 0.0f32;
+            for (i, &qi) in q.iter().enumerate() {
+                let j = offset + i;
+                let h = u16::from_le_bytes([b.packed[2 * j], b.packed[2 * j + 1]]);
+                acc += qi * crate::tensor::fp16::f16_to_f32(h);
+            }
+            acc
+        }
+        QuantBits::Int8 => {
+            let mut codes = [0.0f32; MAX_HEAD_DIM];
+            for (c, &byte) in codes[..d].iter_mut().zip(&b.packed[offset..offset + d]) {
+                *c = byte as f32;
+            }
+            b.zero * qsum + b.scale * crate::tensor::dot(q, &codes[..d])
+        }
+        QuantBits::Int4 => {
+            // Page rows are d-aligned and d is even in all our models, so
+            // the row starts on a byte boundary.
+            debug_assert!(offset % 2 == 0 && d % 2 == 0);
+            let bytes = &b.packed[offset / 2..offset / 2 + d / 2];
+            let mut codes = [0.0f32; MAX_HEAD_DIM];
+            for (p, &byte) in bytes.iter().enumerate() {
+                codes[2 * p] = (byte & 0x0F) as f32;
+                codes[2 * p + 1] = (byte >> 4) as f32;
+            }
+            b.zero * qsum + b.scale * crate::tensor::dot(q, &codes[..d])
+        }
+        QuantBits::Int2 => {
+            debug_assert!(offset % 4 == 0 && d % 4 == 0);
+            let bytes = &b.packed[offset / 4..offset / 4 + d / 4];
+            let mut codes = [0.0f32; MAX_HEAD_DIM];
+            for (p, &byte) in bytes.iter().enumerate() {
+                codes[4 * p] = (byte & 0x03) as f32;
+                codes[4 * p + 1] = ((byte >> 2) & 0x03) as f32;
+                codes[4 * p + 2] = ((byte >> 4) & 0x03) as f32;
+                codes[4 * p + 3] = (byte >> 6) as f32;
+            }
+            b.zero * qsum + b.scale * crate::tensor::dot(q, &codes[..d])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mk(kv_heads: usize, d: usize, pages: usize) -> PagedKvCache {
+        PagedKvCache::new(CacheConfig::new(kv_heads, d, pages))
+    }
+
+    fn rand_kv(r: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| r.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn append_and_read_back() {
+        let mut c = mk(2, 8, 4);
+        let mut seq = SeqCache::default();
+        let mut r = Rng::new(1);
+        let mut ks = Vec::new();
+        for _ in 0..20 {
+            let k = rand_kv(&mut r, 16);
+            let v = rand_kv(&mut r, 16);
+            c.append(&mut seq, &k, &v).unwrap();
+            ks.push(k);
+        }
+        assert_eq!(seq.len, 20);
+        assert_eq!(seq.pages.len(), 2); // 20 tokens / 16 per page
+        for (i, k) in ks.iter().enumerate() {
+            let (page, slot) = seq.locate(i, 16);
+            for h in 0..2 {
+                assert_eq!(c.k_at(page, h, slot), &k[h * 8..(h + 1) * 8]);
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_pages() {
+        let mut c = mk(1, 4, 1);
+        let mut seq = SeqCache::default();
+        for _ in 0..16 {
+            c.append(&mut seq, &[0.0; 4], &[0.0; 4]).unwrap();
+        }
+        let e = c.append(&mut seq, &[0.0; 4], &[0.0; 4]);
+        assert_eq!(e, Err(CacheError::OutOfPages));
+    }
+
+    #[test]
+    fn release_returns_pages() {
+        let mut c = mk(1, 4, 4);
+        let mut seq = SeqCache::default();
+        for _ in 0..40 {
+            c.append(&mut seq, &[1.0; 4], &[1.0; 4]).unwrap();
+        }
+        assert_eq!(c.free_pages(), 1);
+        c.release(&seq);
+        assert_eq!(c.free_pages(), 4);
+    }
+
+    #[test]
+    fn prefix_sharing_refcounts() {
+        let mut c = mk(1, 4, 8);
+        let mut a = SeqCache::default();
+        for _ in 0..32 {
+            c.append(&mut a, &[1.0; 4], &[1.0; 4]).unwrap();
+        }
+        let b = c.share(&a);
+        c.release(&a);
+        assert_eq!(c.free_pages(), 6); // b still holds 2 pages
+        c.release(&b);
+        assert_eq!(c.free_pages(), 8);
+    }
+
+    #[test]
+    fn quest_minmax_bounds_scores() {
+        let mut c = mk(1, 8, 8);
+        let mut seq = SeqCache::default();
+        let mut r = Rng::new(5);
+        for _ in 0..48 {
+            let k = rand_kv(&mut r, 8);
+            c.append(&mut seq, &k, &k).unwrap();
+        }
+        let q = rand_kv(&mut r, 8);
+        // Quest upper bound per page: sum_i max(q_i*min_i, q_i*max_i)
+        for (pi, &page) in seq.pages.iter().enumerate() {
+            let (mn, mx) = c.minmax_at(page, 0);
+            let ub: f32 = q
+                .iter()
+                .zip(mn.iter().zip(mx))
+                .map(|(&qi, (&lo, &hi))| (qi * lo).max(qi * hi))
+                .sum();
+            for slot in 0..c.fill_of(page) {
+                let tok = pi * 16 + slot;
+                let s = c.exact_score(&seq, 0, &q, tok);
+                assert!(s <= ub + 1e-4, "page {pi} slot {slot}: {s} > {ub}");
+            }
+        }
+    }
+
+    #[test]
+    fn mirror_score_close_to_exact() {
+        let mut c = mk(2, 16, 8);
+        let mut seq = SeqCache::default();
+        let mut r = Rng::new(9);
+        for _ in 0..64 {
+            let k = rand_kv(&mut r, 32);
+            c.append(&mut seq, &k, &k).unwrap();
+        }
+        let q = rand_kv(&mut r, 16);
+        for tok in [0usize, 15, 16, 63] {
+            for h in 0..2 {
+                let exact = c.exact_score(&seq, h, &q, tok);
+                let approx = c.mirror_score(&seq, h, &q, tok);
+                // INT4 with per-(page,head) scale over N(0,1) data: coarse
+                // but must stay well-correlated.
+                assert!(
+                    (exact - approx).abs() < 1.5,
+                    "tok {tok} head {h}: exact={exact} approx={approx}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let mut c = mk(1, 16, 4);
+        let mut seq = SeqCache::default();
+        for _ in 0..16 {
+            c.append(&mut seq, &[0.5; 16], &[0.5; 16]).unwrap();
+        }
+        assert_eq!(c.bytes_main(), 2 * 4 * 16 * 16 * 4);
+        // One full page mirrored at int4: 16*16/2 bytes + 8 overhead.
+        assert_eq!(c.bytes_mirror(), 16 * 16 / 2 + 8);
+    }
+}

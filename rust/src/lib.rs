@@ -1,0 +1,35 @@
+//! # Twilight — Adaptive Attention Sparsity with Hierarchical Top-p Pruning
+//!
+//! A production-shaped reproduction of *"Twilight: Adaptive Attention
+//! Sparsity with Hierarchical Top-p Pruning"* (NeurIPS 2025) as a
+//! three-layer Rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: request queue,
+//!   continuous batcher, paged KV cache, token selectors (Quest, Double
+//!   Sparsity, MagicPIG, StreamingLLM, SnapKV, H2O), the **Twilight
+//!   pruner** (INT4 SpGEMV estimation → softmax → top-p binary search),
+//!   varlen sparse-attention kernels, metrics, and the CLI launcher.
+//! * **L2 (JAX, build time)** — the decode-layer compute graph, lowered
+//!   once to HLO text and executed from Rust via PJRT (`runtime/`).
+//! * **L1 (Pallas, build time)** — the SpGEMV / top-p / sparse-attention
+//!   kernels, lowered (interpret mode) into the same HLO and validated
+//!   against pure-jnp oracles.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every table/figure of the paper to a module and bench target.
+
+pub mod attention;
+pub mod coordinator;
+pub mod evalsuite;
+pub mod kvcache;
+pub mod model;
+pub mod pruner;
+pub mod runtime;
+pub mod selector;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+/// Crate version string reported by the CLI and the server banner.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,225 @@
+//! `twilight` — the serving-framework launcher.
+//!
+//! ```text
+//! twilight serve   --model retrieval --addr 127.0.0.1:7070 --selector quest --p 0.95
+//! twilight eval    --suite longbench --ctx 2048 --n 5
+//! twilight ppl     --budgets 16,32,64,128,256 --selector quest
+//! twilight bench   --ctx 4096 --steps 20            (quick latency check)
+//! twilight inspect --artifacts artifacts            (PJRT graphs)
+//! ```
+
+use std::sync::Arc;
+
+use twilight::coordinator::engine::Engine;
+use twilight::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use twilight::coordinator::{server, SparseConfig};
+use twilight::evalsuite::{ppl, render_table, run_accuracy, suite_requests};
+use twilight::model::retrieval::build_retrieval_model;
+use twilight::model::weights;
+use twilight::selector::SelectorKind;
+use twilight::util::cli::Args;
+use twilight::util::logging;
+use twilight::workload::{load_corpus, RetrievalVocab};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: twilight <serve|eval|ppl|bench|inspect> [--help]\n\
+         run with a subcommand; see README.md for options"
+    );
+    std::process::exit(2)
+}
+
+fn sparse_config_from_args(a: &Args) -> SparseConfig {
+    let selector = SelectorKind::parse(&a.str_or("selector", "quest")).unwrap_or_else(|| {
+        eprintln!("unknown selector");
+        std::process::exit(2)
+    });
+    let mut cfg = if a.flag("no-twilight") {
+        SparseConfig::baseline(selector, a.usize_or("budget", 1024))
+    } else {
+        SparseConfig::twilight(selector, a.f64_or("p", 0.95) as f32)
+    };
+    if let Some(b) = a.get("budget") {
+        if let Some(spec) = twilight::coordinator::BudgetSpec::parse(b) {
+            cfg.budget = spec;
+        }
+    }
+    cfg.skip_layers =
+        a.usize_or("skip-layers", if a.str_or("model", "retrieval") == "retrieval" { 0 } else { 2 });
+    cfg.dense_below = a.usize_or("dense-below", 64);
+    cfg
+}
+
+fn load_model_arg(a: &Args) -> Arc<twilight::model::Model> {
+    let dir = a.str_or("artifacts", "artifacts");
+    match a.str_or("model", "retrieval").as_str() {
+        "retrieval" => {
+            // Prefer the artifact (parity with the python-built weights);
+            // fall back to the in-crate builder.
+            match weights::load_model(&dir, "retrieval") {
+                Ok(m) => Arc::new(m),
+                Err(_) => Arc::new(build_retrieval_model(RetrievalVocab::DEFAULT, 1 << 17)),
+            }
+        }
+        name => Arc::new(weights::load_model(&dir, name).unwrap_or_else(|e| {
+            eprintln!("failed to load model '{name}': {e}");
+            std::process::exit(1)
+        })),
+    }
+}
+
+fn cmd_serve(a: &Args) {
+    let model = load_model_arg(a);
+    let cfg = sparse_config_from_args(a);
+    let capacity = a.usize_or("capacity", 1 << 20);
+    twilight::log_info!(
+        "model={} ({} params), pipeline={}, capacity={} tokens",
+        model.cfg.name,
+        model.param_count(),
+        cfg.label(),
+        capacity
+    );
+    let engine = Engine::new(model, cfg, capacity);
+    let sched = Scheduler::new(
+        engine,
+        SchedulerConfig { max_batch: a.usize_or("max-batch", 64), ..Default::default() },
+    );
+    let addr = a.str_or("addr", "127.0.0.1:7070");
+    if let Err(e) = server::serve(sched, &addr) {
+        eprintln!("server error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_eval(a: &Args) {
+    let model = load_model_arg(a);
+    let ctx = a.usize_or("ctx", 2048);
+    let n = a.usize_or("n", 5);
+    let seed = a.u64_or("seed", 42);
+    let capacity = (ctx + 64) * 2;
+    let reqs = suite_requests(seed, ctx, n);
+    let suite = a.str_or("suite", "longbench");
+    let mut results = Vec::new();
+    let budgets: Vec<usize> = a.usize_list_or("budgets", &[256, 1024]);
+    let selectors: Vec<SelectorKind> = a
+        .str_or("selectors", "quest,ds")
+        .split(',')
+        .filter_map(SelectorKind::parse)
+        .collect();
+    // Full baseline.
+    results.push(run_accuracy(model.clone(), &SparseConfig::dense(), &reqs, capacity));
+    for sel in &selectors {
+        for &b in &budgets {
+            let mut c = SparseConfig::baseline(*sel, b);
+            c.skip_layers = 0;
+            results.push(run_accuracy(model.clone(), &c, &reqs, capacity));
+        }
+        let mut c = SparseConfig::twilight(*sel, a.f64_or("p", 0.95) as f32);
+        c.skip_layers = 0;
+        results.push(run_accuracy(model.clone(), &c, &reqs, capacity));
+    }
+    println!("{}", render_table(&format!("{suite} (ctx={ctx}, n={n} per task)"), &results));
+}
+
+fn cmd_ppl(a: &Args) {
+    let dir = a.str_or("artifacts", "artifacts");
+    let model = Arc::new(weights::load_model(&dir, "charlm").unwrap_or_else(|e| {
+        eprintln!("charlm artifacts missing ({e}); run `make artifacts`");
+        std::process::exit(1)
+    }));
+    let corpus = load_corpus(&format!("{dir}/corpus_eval.bin")).unwrap_or_else(|e| {
+        eprintln!("corpus missing: {e}");
+        std::process::exit(1)
+    });
+    let windows = a.usize_or("windows", 4);
+    let wlen = a.usize_or("window-len", 512);
+    let selector = SelectorKind::parse(&a.str_or("selector", "quest")).unwrap();
+    println!("{:<22} {:>10} {:>12}", "method", "ppl", "avg-budget");
+    let dense = ppl::eval_ppl(model.clone(), &SparseConfig::dense(), &corpus, windows, wlen, 32);
+    println!("{:<22} {:>10.3} {:>12.1}", "full", dense.ppl, wlen as f64);
+    for b in a.usize_list_or("budgets", &[16, 32, 64, 128, 256]) {
+        let mut c = SparseConfig::baseline(selector, b);
+        c.skip_layers = 2;
+        let r = ppl::eval_ppl(model.clone(), &c, &corpus, windows, wlen, 32);
+        println!("{:<22} {:>10.3} {:>12.1}", r.label, r.ppl, r.avg_budget);
+    }
+    let mut c = SparseConfig::twilight(selector, a.f64_or("p", 0.95) as f32);
+    c.skip_layers = 2;
+    let r = ppl::eval_ppl(model.clone(), &c, &corpus, windows, wlen, 32);
+    println!("{:<22} {:>10.3} {:>12.1}", r.label, r.ppl, r.avg_budget);
+}
+
+fn cmd_bench(a: &Args) {
+    // Quick smoke latency check; the full figure benches live in benches/.
+    let model = load_model_arg(a);
+    let ctx = a.usize_or("ctx", 4096);
+    let mut rng = twilight::util::rng::Rng::new(7);
+    let g = twilight::workload::gen_niah(&mut rng, RetrievalVocab::DEFAULT, ctx);
+    for (label, cfg) in [
+        ("full", SparseConfig::dense()),
+        ("quest(B=N/4)", {
+            let mut c = SparseConfig::baseline(SelectorKind::Quest, ctx / 4);
+            c.skip_layers = 0;
+            c
+        }),
+        ("quest+twi(p=0.95)", {
+            let mut c = SparseConfig::twilight(SelectorKind::Quest, 0.95);
+            c.skip_layers = 0;
+            c
+        }),
+    ] {
+        let mut e = Engine::new(model.clone(), cfg, ctx * 2 + 128);
+        let _ = e.prefill(0, &g.prompt).unwrap();
+        e.reset_stats();
+        let t0 = std::time::Instant::now();
+        let steps = a.usize_or("steps", 20);
+        for _ in 0..steps {
+            let _ = e.decode(0, g.prompt[0]).unwrap();
+        }
+        let total = t0.elapsed().as_secs_f64();
+        let dt = total / steps as f64;
+        println!(
+            "{label:<20} {:.3} ms/step (select {:.0}% prune {:.0}% attend {:.0}%)",
+            dt * 1e3,
+            100.0 * e.stats.t_select / total,
+            100.0 * e.stats.t_prune / total,
+            100.0 * (e.stats.t_attend + e.stats.t_dense) / total,
+        );
+    }
+}
+
+fn cmd_inspect(a: &Args) {
+    let dir = a.str_or("artifacts", "artifacts");
+    match twilight::runtime::Runtime::open(&dir) {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform());
+            for g in rt.graphs() {
+                println!("graph: {g}");
+            }
+        }
+        Err(e) => {
+            eprintln!("{e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn main() {
+    logging::init();
+    let all: Vec<String> = std::env::args().skip(1).collect();
+    if all.is_empty() {
+        usage();
+    }
+    let cmd = all[0].clone();
+    let a = Args::parse(all.into_iter().skip(1), &["no-twilight", "help"]);
+    logging::set_level(logging::level_from_str(&a.str_or("log", "info")));
+    match cmd.as_str() {
+        "serve" => cmd_serve(&a),
+        "eval" => cmd_eval(&a),
+        "ppl" => cmd_ppl(&a),
+        "bench" => cmd_bench(&a),
+        "inspect" => cmd_inspect(&a),
+        "version" | "--version" => println!("twilight {}", twilight::VERSION),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,447 @@
+//! Model substrate: transformer configuration, weights, and the
+//! decode-step forward pass.
+//!
+//! The forward pass is written against the [`LayerBackend`] trait so the
+//! *attention implementation is pluggable*: the coordinator engine wires
+//! in the paged cache + Token Selector + Twilight Pruner + varlen kernel
+//! pipeline, while tests plug a dense backend. Everything else (QKV
+//! projections, RoPE, MLP, norms) is computed natively here — and the
+//! same graph is exported to HLO by `python/compile/model.py` for the
+//! PJRT path; the two are cross-validated in `rust/tests/`.
+
+pub mod retrieval;
+pub mod sampler;
+pub mod weights;
+
+use crate::tensor::{gemv, rmsnorm, rope_inplace};
+use crate::util::json::Json;
+
+/// Transformer architecture configuration (loaded from
+/// `artifacts/<model>.json`, written by the python compile path).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub use_rope: bool,
+    pub rope_theta: f32,
+    pub use_norm: bool,
+    pub norm_eps: f32,
+    /// Maximum context length the model is rated for.
+    pub max_ctx: usize,
+}
+
+impl ModelConfig {
+    /// GQA group size (query heads per KV head).
+    pub fn group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelConfig, String> {
+        let need = |k: &str| j.get_usize(k).ok_or_else(|| format!("config missing '{k}'"));
+        let cfg = ModelConfig {
+            name: j.get_str("name").unwrap_or("model").to_string(),
+            vocab_size: need("vocab_size")?,
+            d_model: need("d_model")?,
+            n_layers: need("n_layers")?,
+            n_heads: need("n_heads")?,
+            n_kv_heads: need("n_kv_heads")?,
+            head_dim: need("head_dim")?,
+            d_ff: need("d_ff")?,
+            use_rope: j.get_bool("use_rope").unwrap_or(true),
+            rope_theta: j.get_f64("rope_theta").unwrap_or(10000.0) as f32,
+            use_norm: j.get_bool("use_norm").unwrap_or(true),
+            norm_eps: j.get_f64("norm_eps").unwrap_or(1e-5) as f32,
+            max_ctx: j.get_usize("max_ctx").unwrap_or(2048),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_heads % self.n_kv_heads != 0 {
+            return Err("n_heads must be divisible by n_kv_heads".into());
+        }
+        if self.use_rope && self.head_dim % 2 != 0 {
+            return Err("rope requires even head_dim".into());
+        }
+        if self.vocab_size == 0 || self.d_model == 0 || self.n_layers == 0 {
+            return Err("zero-sized model dimension".into());
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<ModelConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+        ModelConfig::from_json(&j)
+    }
+}
+
+/// Per-layer weight tensors (row-major, layout documented in
+/// `weights.rs`).
+pub struct LayerWeights {
+    /// `[n_heads*head_dim, d_model]`
+    pub wq: Vec<f32>,
+    /// `[n_kv_heads*head_dim, d_model]`
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    /// `[d_model, n_heads*head_dim]`
+    pub wo: Vec<f32>,
+    /// `[d_ff, d_model]`
+    pub w1: Vec<f32>,
+    /// `[d_model, d_ff]`
+    pub w2: Vec<f32>,
+    pub ln1: Vec<f32>,
+    pub ln2: Vec<f32>,
+}
+
+/// A complete model: config + weights.
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub embed: Vec<f32>,
+    pub lm_head: Vec<f32>,
+    pub final_norm: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+}
+
+/// The pluggable attention/cache backend for one *sequence*.
+pub trait LayerBackend {
+    /// Store the new token's K/V (`[n_kv_heads*head_dim]` each, already
+    /// roped) for `layer`.
+    fn append_kv(&mut self, layer: usize, k: &[f32], v: &[f32]);
+
+    /// Attention output `[n_heads*head_dim]` for roped queries `qs`.
+    fn attend(&mut self, layer: usize, qs: &[f32]) -> Vec<f32>;
+}
+
+/// GELU (tanh approximation, matching jax.nn.gelu's default).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((0.7978845608_f64 * (x as f64 + 0.044715 * (x as f64).powi(3))).tanh()) as f32)
+}
+
+impl Model {
+    /// Embed a token id.
+    pub fn embed_token(&self, tok: u32) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let base = tok as usize * d;
+        self.embed[base..base + d].to_vec()
+    }
+
+    /// Compute this token's K/V for layer 0 assuming the residual stream
+    /// equals the raw embedding — exact for layer 0, which is all a
+    /// 1-layer model (the retrieval model) has. Used for O(n) prefill.
+    pub fn kv_from_embedding(&self, tok: u32, pos: usize) -> (Vec<f32>, Vec<f32>) {
+        assert_eq!(self.cfg.n_layers, 1, "kv_from_embedding is only exact for 1-layer models");
+        let c = &self.cfg;
+        let x = self.embed_token(tok);
+        let mut h = vec![0.0; c.d_model];
+        if c.use_norm {
+            rmsnorm(&x, &self.layers[0].ln1, c.norm_eps, &mut h);
+        } else {
+            h.copy_from_slice(&x);
+        }
+        let mut k = vec![0.0; c.kv_dim()];
+        let mut v = vec![0.0; c.kv_dim()];
+        gemv(&self.layers[0].wk, &h, None, &mut k);
+        gemv(&self.layers[0].wv, &h, None, &mut v);
+        if c.use_rope {
+            for hh in 0..c.n_kv_heads {
+                rope_inplace(&mut k[hh * c.head_dim..(hh + 1) * c.head_dim], pos, c.rope_theta);
+            }
+        }
+        (k, v)
+    }
+
+    /// One decode step: embed `tok` at `pos`, run all layers (attention
+    /// via `backend`), return logits `[vocab]`.
+    pub fn decode_step<B: LayerBackend>(&self, tok: u32, pos: usize, backend: &mut B) -> Vec<f32> {
+        let c = &self.cfg;
+        let mut x = self.embed_token(tok);
+        let mut h = vec![0.0; c.d_model];
+        let mut q = vec![0.0; c.q_dim()];
+        let mut k = vec![0.0; c.kv_dim()];
+        let mut v = vec![0.0; c.kv_dim()];
+        let mut ff = vec![0.0; c.d_ff];
+        let mut ff_out = vec![0.0; c.d_model];
+        let mut attn_res = vec![0.0; c.d_model];
+        for (li, lw) in self.layers.iter().enumerate() {
+            // Attention block.
+            if c.use_norm {
+                rmsnorm(&x, &lw.ln1, c.norm_eps, &mut h);
+            } else {
+                h.copy_from_slice(&x);
+            }
+            gemv(&lw.wq, &h, None, &mut q);
+            gemv(&lw.wk, &h, None, &mut k);
+            gemv(&lw.wv, &h, None, &mut v);
+            if c.use_rope {
+                for hh in 0..c.n_heads {
+                    rope_inplace(&mut q[hh * c.head_dim..(hh + 1) * c.head_dim], pos, c.rope_theta);
+                }
+                for hh in 0..c.n_kv_heads {
+                    rope_inplace(&mut k[hh * c.head_dim..(hh + 1) * c.head_dim], pos, c.rope_theta);
+                }
+            }
+            backend.append_kv(li, &k, &v);
+            let attn = backend.attend(li, &q);
+            gemv(&lw.wo, &attn, None, &mut attn_res);
+            for (xi, a) in x.iter_mut().zip(&attn_res) {
+                *xi += a;
+            }
+            // MLP block.
+            if c.use_norm {
+                rmsnorm(&x, &lw.ln2, c.norm_eps, &mut h);
+            } else {
+                h.copy_from_slice(&x);
+            }
+            gemv(&lw.w1, &h, None, &mut ff);
+            for f in ff.iter_mut() {
+                *f = gelu(*f);
+            }
+            gemv(&lw.w2, &ff, None, &mut ff_out);
+            for (xi, a) in x.iter_mut().zip(&ff_out) {
+                *xi += a;
+            }
+        }
+        if c.use_norm {
+            rmsnorm(&x, &self.final_norm, c.norm_eps, &mut h);
+        } else {
+            h.copy_from_slice(&x);
+        }
+        let mut logits = vec![0.0; c.vocab_size];
+        gemv(&self.lm_head, &h, None, &mut logits);
+        logits
+    }
+
+    /// Approximate parameter count.
+    pub fn param_count(&self) -> usize {
+        let mut n = self.embed.len() + self.lm_head.len() + self.final_norm.len();
+        for l in &self.layers {
+            n += l.wq.len() + l.wk.len() + l.wv.len() + l.wo.len() + l.w1.len() + l.w2.len()
+                + l.ln1.len() + l.ln2.len();
+        }
+        n
+    }
+}
+
+/// Dense per-sequence backend over plain vectors — the reference backend
+/// used by tests and the ppl oracle ("Full" rows in the tables).
+pub struct DenseBackend {
+    pub cfg: ModelConfig,
+    /// Per layer: K rows `[n][kv_dim]` flattened.
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+impl DenseBackend {
+    pub fn new(cfg: &ModelConfig) -> DenseBackend {
+        DenseBackend {
+            cfg: cfg.clone(),
+            k: vec![Vec::new(); cfg.n_layers],
+            v: vec![Vec::new(); cfg.n_layers],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.k[0].len() / self.cfg.kv_dim().max(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.k[0].is_empty()
+    }
+}
+
+impl LayerBackend for DenseBackend {
+    fn append_kv(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        self.k[layer].extend_from_slice(k);
+        self.v[layer].extend_from_slice(v);
+    }
+
+    fn attend(&mut self, layer: usize, qs: &[f32]) -> Vec<f32> {
+        let c = &self.cfg;
+        let d = c.head_dim;
+        let kvd = c.kv_dim();
+        let n = self.k[layer].len() / kvd;
+        let group = c.group();
+        let mut out = vec![0.0; c.q_dim()];
+        // Gather per-KV-head contiguous K/V then dense attention per head.
+        let mut kh = vec![0.0; n * d];
+        let mut vh = vec![0.0; n * d];
+        for h in 0..c.n_heads {
+            let kvh = h / group;
+            for t in 0..n {
+                kh[t * d..(t + 1) * d]
+                    .copy_from_slice(&self.k[layer][t * kvd + kvh * d..t * kvd + (kvh + 1) * d]);
+                vh[t * d..(t + 1) * d]
+                    .copy_from_slice(&self.v[layer][t * kvd + kvh * d..t * kvd + (kvh + 1) * d]);
+            }
+            crate::attention::full::contiguous_full(
+                &qs[h * d..(h + 1) * d],
+                &kh,
+                &vh,
+                &mut out[h * d..(h + 1) * d],
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    pub fn tiny_config() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            vocab_size: 16,
+            d_model: 24,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 6,
+            d_ff: 32,
+            use_rope: true,
+            rope_theta: 10000.0,
+            use_norm: true,
+            norm_eps: 1e-5,
+            max_ctx: 128,
+        }
+    }
+
+    pub fn random_model(cfg: &ModelConfig, seed: u64) -> Model {
+        let mut r = Rng::new(seed);
+        let d = cfg.d_model;
+        let mut vecf = |n: usize, std: f32| -> Vec<f32> {
+            (0..n).map(|_| r.normal_f32(0.0, std)).collect()
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                wq: vecf(cfg.q_dim() * d, 0.08),
+                wk: vecf(cfg.kv_dim() * d, 0.08),
+                wv: vecf(cfg.kv_dim() * d, 0.08),
+                wo: vecf(d * cfg.q_dim(), 0.08),
+                w1: vecf(cfg.d_ff * d, 0.08),
+                w2: vecf(d * cfg.d_ff, 0.08),
+                ln1: vec![1.0; d],
+                ln2: vec![1.0; d],
+            })
+            .collect();
+        Model {
+            cfg: cfg.clone(),
+            embed: vecf(cfg.vocab_size * d, 0.5),
+            lm_head: vecf(cfg.vocab_size * d, 0.1),
+            final_norm: vec![1.0; d],
+            layers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::{random_model, tiny_config};
+    use super::*;
+
+    #[test]
+    fn decode_produces_finite_logits() {
+        let cfg = tiny_config();
+        let m = random_model(&cfg, 1);
+        let mut b = DenseBackend::new(&cfg);
+        for (pos, tok) in [3u32, 7, 1, 0, 15].iter().enumerate() {
+            let logits = m.decode_step(*tok, pos, &mut b);
+            assert_eq!(logits.len(), 16);
+            assert!(logits.iter().all(|x| x.is_finite()));
+        }
+        assert_eq!(b.len(), 5);
+    }
+
+    #[test]
+    fn decode_is_deterministic() {
+        let cfg = tiny_config();
+        let m = random_model(&cfg, 2);
+        let run = || {
+            let mut b = DenseBackend::new(&cfg);
+            let mut last = Vec::new();
+            for (pos, tok) in [1u32, 2, 3].iter().enumerate() {
+                last = m.decode_step(*tok, pos, &mut b);
+            }
+            last
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"name":"x","vocab_size":10,"d_model":8,"n_layers":1,"n_heads":2,
+                "n_kv_heads":1,"head_dim":4,"d_ff":16,"use_rope":false,
+                "use_norm":false,"max_ctx":64}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c.group(), 2);
+        assert!(!c.use_rope);
+        assert_eq!(c.max_ctx, 64);
+    }
+
+    #[test]
+    fn config_validation_catches_bad_gqa() {
+        let j = Json::parse(
+            r#"{"vocab_size":10,"d_model":8,"n_layers":1,"n_heads":3,
+                "n_kv_heads":2,"head_dim":4,"d_ff":16}"#,
+        )
+        .unwrap();
+        assert!(ModelConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn kv_from_embedding_matches_decode_for_1layer() {
+        let mut cfg = tiny_config();
+        cfg.n_layers = 1;
+        let m = random_model(&cfg, 3);
+        struct Capture {
+            k: Vec<f32>,
+            v: Vec<f32>,
+        }
+        impl LayerBackend for Capture {
+            fn append_kv(&mut self, _l: usize, k: &[f32], v: &[f32]) {
+                self.k = k.to_vec();
+                self.v = v.to_vec();
+            }
+            fn attend(&mut self, _l: usize, qs: &[f32]) -> Vec<f32> {
+                vec![0.0; qs.len()]
+            }
+        }
+        let mut cap = Capture { k: vec![], v: vec![] };
+        let _ = m.decode_step(9, 5, &mut cap);
+        let (k, v) = m.kv_from_embedding(9, 5);
+        for (a, b) in cap.k.iter().zip(&k) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        for (a, b) in cap.v.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gelu_sane() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(3.0) - 3.0).abs() < 0.01);
+        assert!(gelu(-3.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,276 @@
+//! Constructed-weights retrieval model — the long-context evaluation
+//! substrate (DESIGN.md §3, §7).
+//!
+//! A single-attention-layer GQA transformer whose weights are built
+//! analytically so that its behaviour is *provable*:
+//!
+//! * **KV head 0 (retrieval, query heads 0–3)** implements exact
+//!   key-match attention: for a NIAH query token carrying key `k`, the
+//!   attention logit is `β/√dh` at every pair token bound to `k` and `0`
+//!   elsewhere (the query token's own key is suppressed with a large
+//!   negative flag term). The resulting weight distribution is **focused**
+//!   — the regime where top-k over-selects and top-p prunes to a handful
+//!   of tokens.
+//! * **KV head 1 (aggregation, query heads 4–7)** implements uniform
+//!   attention over pair tokens for FWE queries: the output is the value
+//!   frequency vector. The distribution is **diffuse** — the regime where
+//!   a fixed top-k budget under-selects and corrupts the frequency
+//!   estimate.
+//!
+//! The unembedding reads the combined value channel, so greedy decoding
+//! answers NIAH with the needle's value and FWE with the modal value —
+//! *iff* the sparse-attention pipeline preserved the relevant attention
+//! mass. Accuracy under any selector/pruner is therefore an exact probe
+//! of selection fidelity, at any context length, with O(n) prefill
+//! (single layer ⇒ K/V depend only on embeddings).
+//!
+//! Mirrored by `python/compile/retrieval_model.py`, which exports the
+//! same weights through the TWT archive; `rust/tests/` checks parity.
+
+use super::{LayerWeights, Model, ModelConfig};
+use crate::workload::RetrievalVocab;
+
+/// Query-head gain for retrieval heads: match logit = BETA / sqrt(dh).
+pub const BETA: f32 = 90.0;
+/// Suppression applied to the query token's own key signature.
+pub const SELF_SUPPRESS: f32 = 10.0;
+/// FWE query gain: pair-token logit = FWE_GAIN / sqrt(dh).
+pub const FWE_GAIN: f32 = 17.0;
+/// Output mixing: retrieval channel weight.
+pub const ALPHA_R: f32 = 4.0;
+/// Output mixing: aggregation channel weight.
+pub const ALPHA_F: f32 = 1.0;
+
+/// Fixed geometry of the constructed model.
+pub fn retrieval_config(vocab: RetrievalVocab, max_ctx: usize) -> ModelConfig {
+    assert!(vocab.n_keys <= 16 && vocab.n_vals <= 16, "channel layout sized for <=16");
+    ModelConfig {
+        name: "retrieval".into(),
+        vocab_size: vocab.vocab_size() as usize,
+        d_model: 64,
+        n_layers: 1,
+        n_heads: 8,
+        n_kv_heads: 2,
+        head_dim: 32,
+        d_ff: 4,
+        use_rope: false,
+        rope_theta: 10000.0,
+        use_norm: false,
+        norm_eps: 1e-5,
+        max_ctx,
+    }
+}
+
+// Channel layout in d_model = 64:
+const CH_KEY: usize = 0; // 0..16  key one-hot
+const CH_VAL: usize = 16; // 16..32 value one-hot
+const CH_IS_PAIR: usize = 32;
+const CH_IS_QNIAH: usize = 33;
+const CH_IS_QFWE: usize = 34;
+const CH_OUT: usize = 48; // 48..64 combined value output
+
+/// Build the model for `vocab`.
+pub fn build_retrieval_model(vocab: RetrievalVocab, max_ctx: usize) -> Model {
+    let cfg = retrieval_config(vocab, max_ctx);
+    let d = cfg.d_model;
+    let dh = cfg.head_dim;
+    let nk = vocab.n_keys as usize;
+    let nv = vocab.n_vals as usize;
+
+    // ---- embeddings -----------------------------------------------------
+    let mut embed = vec![0.0f32; cfg.vocab_size * d];
+    for k in 0..nk as u32 {
+        for v in 0..nv as u32 {
+            let row = vocab.pair(k, v) as usize * d;
+            embed[row + CH_KEY + k as usize] = 1.0;
+            embed[row + CH_VAL + v as usize] = 1.0;
+            embed[row + CH_IS_PAIR] = 1.0;
+        }
+        let row = vocab.query_niah(k) as usize * d;
+        embed[row + CH_KEY + k as usize] = 1.0;
+        embed[row + CH_IS_QNIAH] = 1.0;
+    }
+    embed[vocab.query_fwe() as usize * d + CH_IS_QFWE] = 1.0;
+    // Answer tokens only appear as outputs; embed them harmlessly so
+    // multi-token decoding stays well-defined.
+    for v in 0..nv as u32 {
+        embed[vocab.answer(v) as usize * d + CH_VAL + v as usize] = 1.0;
+    }
+
+    // ---- attention projections ------------------------------------------
+    // W_Q: [n_heads*dh, d]. Heads 0..4 retrieval, 4..8 aggregation.
+    let mut wq = vec![0.0f32; cfg.q_dim() * d];
+    for h in 0..4 {
+        for i in 0..nk {
+            // Q[h*dh + i] = BETA * x[CH_KEY + i]
+            wq[(h * dh + i) * d + CH_KEY + i] = BETA;
+        }
+    }
+    for h in 4..8 {
+        // Q[h*dh + 0] = FWE_GAIN * x[CH_IS_QFWE]
+        wq[(h * dh) * d + CH_IS_QFWE] = FWE_GAIN;
+    }
+
+    // W_K: [n_kv_heads*dh, d]. KV head 0 = key signature (with query-token
+    // self suppression), KV head 1 = is_pair.
+    let mut wk = vec![0.0f32; cfg.kv_dim() * d];
+    for i in 0..nk {
+        wk[i * d + CH_KEY + i] = 1.0;
+        wk[i * d + CH_IS_QNIAH] = -SELF_SUPPRESS;
+    }
+    wk[dh * d + CH_IS_PAIR] = 1.0; // kv head 1, dim 0
+
+    // W_V: both KV heads expose the value one-hot in dims 0..nv.
+    let mut wv = vec![0.0f32; cfg.kv_dim() * d];
+    for i in 0..nv {
+        wv[i * d + CH_VAL + i] = 1.0; // kv head 0
+        wv[(dh + i) * d + CH_VAL + i] = 1.0; // kv head 1
+    }
+
+    // W_O: [d, n_heads*dh]. Retrieval heads write ALPHA_R/4 each,
+    // aggregation heads ALPHA_F/4 each, into CH_OUT..CH_OUT+nv.
+    let mut wo = vec![0.0f32; d * cfg.q_dim()];
+    for h in 0..8 {
+        let gain = if h < 4 { ALPHA_R / 4.0 } else { ALPHA_F / 4.0 };
+        for i in 0..nv {
+            wo[(CH_OUT + i) * cfg.q_dim() + h * dh + i] = gain;
+        }
+    }
+
+    // ---- unembedding ------------------------------------------------------
+    let mut lm_head = vec![0.0f32; cfg.vocab_size * d];
+    for v in 0..nv as u32 {
+        lm_head[vocab.answer(v) as usize * d + CH_OUT + v as usize] = 1.0;
+    }
+
+    let layers = vec![LayerWeights {
+        wq,
+        wk,
+        wv,
+        wo,
+        w1: vec![0.0; cfg.d_ff * d],
+        w2: vec![0.0; d * cfg.d_ff],
+        ln1: vec![1.0; d],
+        ln2: vec![1.0; d],
+    }];
+
+    Model { cfg, embed, lm_head, final_norm: vec![1.0; d], layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{DenseBackend, LayerBackend};
+    use crate::util::rng::Rng;
+    use crate::workload::{gen_fwe, gen_multi_niah, gen_niah};
+
+    const V: RetrievalVocab = RetrievalVocab::DEFAULT;
+
+    /// Run a request through the model with dense attention; return the
+    /// predicted token.
+    fn predict(m: &Model, prompt: &[u32]) -> u32 {
+        let mut b = DenseBackend::new(&m.cfg);
+        // O(n) prefill: single layer — K/V from embeddings.
+        for (pos, &tok) in prompt[..prompt.len() - 1].iter().enumerate() {
+            let (k, v) = m.kv_from_embedding(tok, pos);
+            b.append_kv(0, &k, &v);
+        }
+        let logits = m.decode_step(*prompt.last().unwrap(), prompt.len() - 1, &mut b);
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as u32
+    }
+
+    #[test]
+    fn niah_dense_accuracy_is_perfect() {
+        let m = build_retrieval_model(V, 4096);
+        let mut r = Rng::new(1);
+        for _ in 0..10 {
+            let g = gen_niah(&mut r, V, 512);
+            assert_eq!(predict(&m, &g.prompt), g.answer, "NIAH failed");
+        }
+    }
+
+    #[test]
+    fn multi_niah_dense_accuracy_is_perfect() {
+        let m = build_retrieval_model(V, 4096);
+        let mut r = Rng::new(2);
+        for _ in 0..5 {
+            let g = gen_multi_niah(&mut r, V, 512, 4);
+            assert_eq!(predict(&m, &g.prompt), g.answer, "multi-NIAH failed");
+        }
+    }
+
+    #[test]
+    fn fwe_dense_accuracy_is_perfect() {
+        let m = build_retrieval_model(V, 4096);
+        let mut r = Rng::new(3);
+        for _ in 0..5 {
+            let g = gen_fwe(&mut r, V, 1024, 8.0);
+            assert_eq!(predict(&m, &g.prompt), g.answer, "FWE failed");
+        }
+    }
+
+    #[test]
+    fn retrieval_head_is_focused_and_fwe_head_is_diffuse() {
+        // Measures the Fig. 3 claim directly on the constructed model.
+        let m = build_retrieval_model(V, 4096);
+        let mut r = Rng::new(4);
+        let g = gen_niah(&mut r, V, 512);
+        let mut b = DenseBackend::new(&m.cfg);
+        for (pos, &tok) in g.prompt[..512].iter().enumerate() {
+            let (k, v) = m.kv_from_embedding(tok, pos);
+            b.append_kv(0, &k, &v);
+        }
+        let _ = m.decode_step(g.prompt[512], 512, &mut b);
+        // Reconstruct per-head weights from the dense cache.
+        let cfg = &m.cfg;
+        let x = m.embed_token(g.prompt[512]);
+        let mut q = vec![0.0; cfg.q_dim()];
+        crate::tensor::gemv(&m.layers[0].wq, &x, None, &mut q);
+        let dh = cfg.head_dim;
+        let kvd = cfg.kv_dim();
+        let n = b.len();
+        let head_weights = |h: usize| -> Vec<f32> {
+            let kvh = h / cfg.group();
+            let mut w: Vec<f32> = (0..n)
+                .map(|t| {
+                    let kt = &b.k[0][t * kvd + kvh * dh..t * kvd + (kvh + 1) * dh];
+                    crate::tensor::dot(&q[h * dh..(h + 1) * dh], kt)
+                        / (dh as f32).sqrt()
+                })
+                .collect();
+            crate::tensor::softmax_inplace(&mut w);
+            w
+        };
+        let focused = head_weights(0); // retrieval head
+        let diffuse = head_weights(4); // aggregation head (NIAH query → uniform)
+        let b_focused = crate::pruner::topp::oracle_budget(&focused, 0.9);
+        let b_diffuse = crate::pruner::topp::oracle_budget(&diffuse, 0.9);
+        assert!(b_focused <= 4, "retrieval head budget {b_focused}");
+        assert!(b_diffuse >= n / 2, "aggregation head budget {b_diffuse} of {n}");
+    }
+
+    #[test]
+    fn truncating_context_breaks_niah() {
+        // Sanity: the model *needs* the needle — recency-only context fails.
+        let m = build_retrieval_model(V, 4096);
+        let mut r = Rng::new(5);
+        // Needle placed early; keep only the last 64 pairs.
+        let g = loop {
+            let g = gen_niah(&mut r, V, 512);
+            // find needle position
+            let qkey = g.prompt[512] - V.n_keys * V.n_vals;
+            let pos = (0..512).find(|&p| V.pair_key(g.prompt[p]) == qkey).unwrap();
+            if pos < 300 {
+                break g;
+            }
+        };
+        let mut truncated: Vec<u32> = g.prompt[448..512].to_vec();
+        truncated.push(g.prompt[512]);
+        assert_ne!(predict(&m, &truncated), g.answer);
+    }
+}

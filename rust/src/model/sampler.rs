@@ -1,0 +1,112 @@
+//! Token sampling from logits: greedy, temperature, and top-p (nucleus)
+//! sampling — the *original* top-p whose analogy motivates the paper's
+//! attention pruner.
+
+use crate::util::rng::Rng;
+
+/// Sampling parameters for a request.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingParams {
+    pub temperature: f32,
+    /// Nucleus threshold; 0.0 or 1.0 with temperature 0 = greedy.
+    pub top_p: f32,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_p: 1.0 }
+    }
+}
+
+/// Greedy argmax.
+pub fn greedy(logits: &[f32]) -> u32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i as u32)
+        .unwrap_or(0)
+}
+
+/// Sample according to `params`.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> u32 {
+    if params.temperature <= 0.0 {
+        return greedy(logits);
+    }
+    let mut probs: Vec<f32> = logits.iter().map(|&l| l / params.temperature).collect();
+    crate::tensor::softmax_inplace(&mut probs);
+    // Nucleus filter.
+    let mut order: Vec<usize> = (0..probs.len()).collect();
+    order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    let mut mass = 0.0f32;
+    let mut cut = probs.len();
+    for (rank, &i) in order.iter().enumerate() {
+        mass += probs[i];
+        if mass >= params.top_p {
+            cut = rank + 1;
+            break;
+        }
+    }
+    let kept = &order[..cut];
+    let total: f32 = kept.iter().map(|&i| probs[i]).sum();
+    let mut u = rng.f32() * total;
+    for &i in kept {
+        u -= probs[i];
+        if u <= 0.0 {
+            return i as u32;
+        }
+    }
+    kept[kept.len() - 1] as u32
+}
+
+/// Log-probability of `tok` under the logits (for perplexity evals).
+pub fn log_prob(logits: &[f32], tok: u32) -> f64 {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let z: f64 = logits.iter().map(|&l| ((l as f64) - max).exp()).sum();
+    (logits[tok as usize] as f64 - max) - z.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        assert_eq!(greedy(&[0.1, 3.0, -1.0]), 1);
+    }
+
+    #[test]
+    fn temperature_zero_is_greedy() {
+        let mut r = Rng::new(1);
+        let p = SamplingParams { temperature: 0.0, top_p: 0.5 };
+        assert_eq!(sample(&[0.0, 5.0, 1.0], &p, &mut r), 1);
+    }
+
+    #[test]
+    fn top_p_restricts_support() {
+        let mut r = Rng::new(2);
+        // One dominant logit: nucleus 0.5 keeps only it.
+        let p = SamplingParams { temperature: 1.0, top_p: 0.5 };
+        for _ in 0..100 {
+            assert_eq!(sample(&[10.0, 0.0, 0.0], &p, &mut r), 0);
+        }
+    }
+
+    #[test]
+    fn sampling_covers_support_at_high_temp() {
+        let mut r = Rng::new(3);
+        let p = SamplingParams { temperature: 5.0, top_p: 1.0 };
+        let mut seen = [false; 3];
+        for _ in 0..300 {
+            seen[sample(&[0.1, 0.0, -0.1], &p, &mut r) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn log_prob_normalizes() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|t| log_prob(&logits, t).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

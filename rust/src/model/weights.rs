@@ -1,0 +1,217 @@
+//! TWT tensor-archive format — the weight interchange between the python
+//! compile path (`python/compile/weights_io.py`) and the Rust runtime.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   b"TWT1"
+//! u32     n_tensors
+//! repeat n_tensors times:
+//!   u32   name_len, name bytes (utf-8)
+//!   u8    dtype (0 = f32)
+//!   u8    ndim
+//!   u32   dims[ndim]
+//!   f32   data[prod(dims)]
+//! ```
+
+use super::{LayerWeights, Model, ModelConfig};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 4] = b"TWT1";
+
+/// Read a TWT archive into name → tensor.
+pub fn read_archive<R: Read>(mut r: R) -> std::io::Result<HashMap<String, Tensor>> {
+    let bad = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("bad TWT magic"));
+    }
+    let n = read_u32(&mut r)? as usize;
+    if n > 1_000_000 {
+        return Err(bad("absurd tensor count"));
+    }
+    let mut out = HashMap::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            return Err(bad("absurd name length"));
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).map_err(|_| bad("non-utf8 tensor name"))?;
+        let mut dt = [0u8; 1];
+        r.read_exact(&mut dt)?;
+        if dt[0] != 0 {
+            return Err(bad("unsupported dtype"));
+        }
+        let mut nd = [0u8; 1];
+        r.read_exact(&mut nd)?;
+        let mut shape = Vec::with_capacity(nd[0] as usize);
+        for _ in 0..nd[0] {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        if numel > 512 * 1024 * 1024 {
+            return Err(bad("absurd tensor size"));
+        }
+        let mut bytes = vec![0u8; numel * 4];
+        r.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.insert(name, Tensor::from_vec(data, &shape));
+    }
+    Ok(out)
+}
+
+/// Write a TWT archive (used by tests and the retrieval-model builder).
+pub fn write_archive<W: Write>(mut w: W, tensors: &[(String, Tensor)]) -> std::io::Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        w.write_all(&[0u8, t.shape.len() as u8])?;
+        for &d in &t.shape {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for &x in &t.data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Assemble a [`Model`] from an archive + config, verifying every shape.
+pub fn model_from_archive(
+    cfg: ModelConfig,
+    mut tensors: HashMap<String, Tensor>,
+) -> Result<Model, String> {
+    let mut take = |name: &str, want: &[usize]| -> Result<Vec<f32>, String> {
+        let t = tensors.remove(name).ok_or_else(|| format!("missing tensor '{name}'"))?;
+        if t.shape != want {
+            return Err(format!("tensor '{name}': shape {:?}, want {:?}", t.shape, want));
+        }
+        Ok(t.data)
+    };
+    let d = cfg.d_model;
+    let embed = take("embed", &[cfg.vocab_size, d])?;
+    let lm_head = take("lm_head", &[cfg.vocab_size, d])?;
+    let final_norm = take("final_norm", &[d])?;
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for i in 0..cfg.n_layers {
+        let p = |s: &str| format!("layers.{i}.{s}");
+        layers.push(LayerWeights {
+            wq: take(&p("wq"), &[cfg.q_dim(), d])?,
+            wk: take(&p("wk"), &[cfg.kv_dim(), d])?,
+            wv: take(&p("wv"), &[cfg.kv_dim(), d])?,
+            wo: take(&p("wo"), &[d, cfg.q_dim()])?,
+            w1: take(&p("w1"), &[cfg.d_ff, d])?,
+            w2: take(&p("w2"), &[d, cfg.d_ff])?,
+            ln1: take(&p("ln1"), &[d])?,
+            ln2: take(&p("ln2"), &[d])?,
+        });
+    }
+    Ok(Model { cfg, embed, lm_head, final_norm, layers })
+}
+
+/// Load a model from `<dir>/<name>.json` + `<dir>/<name>.twt`.
+pub fn load_model(dir: &str, name: &str) -> Result<Model, String> {
+    let cfg = ModelConfig::load(&format!("{dir}/{name}.json"))?;
+    let f = std::fs::File::open(format!("{dir}/{name}.twt"))
+        .map_err(|e| format!("{dir}/{name}.twt: {e}"))?;
+    let tensors = read_archive(std::io::BufReader::new(f)).map_err(|e| e.to_string())?;
+    model_from_archive(cfg, tensors)
+}
+
+/// Serialize a model back to (config json, archive tensors) — used by the
+/// Rust-side retrieval builder and tests.
+pub fn model_to_tensors(m: &Model) -> Vec<(String, Tensor)> {
+    let c = &m.cfg;
+    let d = c.d_model;
+    let mut out = vec![
+        ("embed".to_string(), Tensor::from_vec(m.embed.clone(), &[c.vocab_size, d])),
+        ("lm_head".to_string(), Tensor::from_vec(m.lm_head.clone(), &[c.vocab_size, d])),
+        ("final_norm".to_string(), Tensor::from_vec(m.final_norm.clone(), &[d])),
+    ];
+    for (i, l) in m.layers.iter().enumerate() {
+        let p = |s: &str| format!("layers.{i}.{s}");
+        out.push((p("wq"), Tensor::from_vec(l.wq.clone(), &[c.q_dim(), d])));
+        out.push((p("wk"), Tensor::from_vec(l.wk.clone(), &[c.kv_dim(), d])));
+        out.push((p("wv"), Tensor::from_vec(l.wv.clone(), &[c.kv_dim(), d])));
+        out.push((p("wo"), Tensor::from_vec(l.wo.clone(), &[d, c.q_dim()])));
+        out.push((p("w1"), Tensor::from_vec(l.w1.clone(), &[c.d_ff, d])));
+        out.push((p("w2"), Tensor::from_vec(l.w2.clone(), &[d, c.d_ff])));
+        out.push((p("ln1"), Tensor::from_vec(l.ln1.clone(), &[d])));
+        out.push((p("ln2"), Tensor::from_vec(l.ln2.clone(), &[d])));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::{random_model, tiny_config};
+
+    #[test]
+    fn archive_roundtrip() {
+        let t1 = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let t2 = Tensor::from_vec(vec![0.5], &[1]);
+        let mut buf = Vec::new();
+        write_archive(&mut buf, &[("a".into(), t1.clone()), ("b".into(), t2.clone())]).unwrap();
+        let m = read_archive(&buf[..]).unwrap();
+        assert_eq!(m["a"], t1);
+        assert_eq!(m["b"], t2);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = b"NOPE\x00\x00\x00\x00".to_vec();
+        assert!(read_archive(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let t = Tensor::from_vec(vec![1.0; 10], &[10]);
+        let mut buf = Vec::new();
+        write_archive(&mut buf, &[("x".into(), t)]).unwrap();
+        buf.truncate(buf.len() - 5);
+        assert!(read_archive(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn model_roundtrip_through_archive() {
+        let cfg = tiny_config();
+        let m = random_model(&cfg, 9);
+        let tensors = model_to_tensors(&m);
+        let mut buf = Vec::new();
+        write_archive(&mut buf, &tensors).unwrap();
+        let map = read_archive(&buf[..]).unwrap();
+        let m2 = model_from_archive(cfg.clone(), map).unwrap();
+        assert_eq!(m.embed, m2.embed);
+        assert_eq!(m.layers[1].wo, m2.layers[1].wo);
+        assert_eq!(m.param_count(), m2.param_count());
+    }
+
+    #[test]
+    fn shape_mismatch_detected() {
+        let cfg = tiny_config();
+        let m = random_model(&cfg, 10);
+        let mut tensors = model_to_tensors(&m);
+        // Corrupt a shape.
+        tensors[0].1 = Tensor::from_vec(vec![0.0; 4], &[2, 2]);
+        let mut buf = Vec::new();
+        write_archive(&mut buf, &tensors).unwrap();
+        let map = read_archive(&buf[..]).unwrap();
+        assert!(model_from_archive(cfg, map).is_err());
+    }
+}

@@ -1,0 +1,249 @@
+//! The Twilight Pruner (paper §4.1–4.2): the second stage of the
+//! Select-then-Prune architecture.
+//!
+//! Given the candidate token set chosen by a (black-box) Token Selector
+//! under a conservative budget, the pruner:
+//! 1. estimates attention logits for the candidates from the INT4 mirror
+//!    K cache (SpGEMV, Appendix B.1);
+//! 2. softmax-normalizes them (top-p requires normalized weights —
+//!    Table 1's "Need Normalization?" column);
+//! 3. runs top-p binary search (Algorithm 1) to keep the minimal subset
+//!    with cumulative estimated mass ≥ p;
+//! 4. under GQA, unions the per-query-head keep-sets across the group so
+//!    the group-varlen attention kernel loads each KV row once (B.2).
+
+pub mod topp;
+
+use crate::attention::spgemv::estimate_scores;
+use crate::kvcache::{PagedKvCache, SeqCache};
+
+/// Pruner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PrunerConfig {
+    /// Cumulative-mass threshold p (paper: 0.95 LLaMA, 0.85 Longchat).
+    pub p: f32,
+    /// Binary-search convergence epsilon.
+    pub eps: f32,
+    /// Never prune below this many tokens (attention sinks + stability).
+    pub min_keep: usize,
+    /// Use the sort oracle instead of binary search (ablations).
+    pub use_sort: bool,
+}
+
+impl Default for PrunerConfig {
+    fn default() -> Self {
+        PrunerConfig { p: 0.95, eps: 1e-4, min_keep: 4, use_sort: false }
+    }
+}
+
+/// Outcome of pruning one query head.
+#[derive(Clone, Debug)]
+pub struct PruneOutcome {
+    /// Kept logical token indices (subset of the candidates), ascending.
+    pub kept: Vec<usize>,
+    /// Estimated attention mass captured (within the candidate set).
+    pub mass: f32,
+    /// Binary search iterations.
+    pub iters: usize,
+}
+
+/// Scratch buffers reused across calls (hot path: no allocation).
+#[derive(Default)]
+pub struct PrunerScratch {
+    scores: Vec<f32>,
+    group_scores: Vec<f32>,
+}
+
+/// Prune `candidates` for a single query head `q` against `kv_head`'s
+/// mirror cache. Returns the kept subset (minimal top-p set).
+pub fn prune_head(
+    cfg: &PrunerConfig,
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    kv_head: usize,
+    q: &[f32],
+    candidates: &[usize],
+    scratch: &mut PrunerScratch,
+) -> PruneOutcome {
+    let n = candidates.len();
+    if n <= cfg.min_keep {
+        return PruneOutcome { kept: candidates.to_vec(), mass: 1.0, iters: 0 };
+    }
+    scratch.scores.resize(n, 0.0);
+    // (1) SpGEMV estimation from the INT4 mirror.
+    estimate_scores(cache, seq, kv_head, q, candidates, &mut scratch.scores);
+    // (2) scale + softmax over the candidate subset.
+    let s = crate::attention::scale(q.len());
+    for x in scratch.scores.iter_mut() {
+        *x *= s;
+    }
+    crate::tensor::softmax_inplace(&mut scratch.scores);
+    // (3) top-p.
+    let r = if cfg.use_sort {
+        topp::topp_sort(&scratch.scores, cfg.p)
+    } else {
+        topp::topp_binary_search(&scratch.scores, cfg.p, cfg.eps)
+    };
+    let mut kept: Vec<usize> = r.indices.iter().map(|&i| candidates[i]).collect();
+    // (4) floor: keep the top-scoring tokens if we pruned below min_keep.
+    if kept.len() < cfg.min_keep {
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            scratch.scores[b].partial_cmp(&scratch.scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        kept = order.iter().take(cfg.min_keep).map(|&i| candidates[i]).collect();
+        kept.sort_unstable();
+    }
+    PruneOutcome { kept, mass: r.mass, iters: r.iters }
+}
+
+/// Prune for a GQA group: `qs` is `[group * d]` query heads sharing
+/// `kv_head`. Per-head top-p keep-sets are unioned (B.2) so the attention
+/// kernel loads each KV row once per group. Returns the union (ascending)
+/// plus per-head outcomes for budget accounting.
+pub fn prune_group(
+    cfg: &PrunerConfig,
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    kv_head: usize,
+    qs: &[f32],
+    group: usize,
+    candidates: &[usize],
+    scratch: &mut PrunerScratch,
+) -> (Vec<usize>, Vec<PruneOutcome>) {
+    let d = qs.len() / group;
+    let n = candidates.len();
+    if n <= cfg.min_keep {
+        let out = PruneOutcome { kept: candidates.to_vec(), mass: 1.0, iters: 0 };
+        return (candidates.to_vec(), vec![out; group]);
+    }
+    // One SpGEMV pass for the whole group (codes unpacked once per row —
+    // §Perf); then per-head softmax + top-p on the shared score matrix.
+    scratch.group_scores.resize(group * n, 0.0);
+    crate::attention::spgemv::estimate_scores_group(
+        cache, seq, kv_head, qs, group, candidates, &mut scratch.group_scores,
+    );
+    let s = crate::attention::scale(d);
+    let mut outcomes = Vec::with_capacity(group);
+    let mut union: Vec<usize> = Vec::new();
+    for g in 0..group {
+        let row = &mut scratch.group_scores[g * n..(g + 1) * n];
+        for x in row.iter_mut() {
+            *x *= s;
+        }
+        crate::tensor::softmax_inplace(row);
+        let r = if cfg.use_sort {
+            topp::topp_sort(row, cfg.p)
+        } else {
+            topp::topp_binary_search(row, cfg.p, cfg.eps)
+        };
+        let mut kept: Vec<usize> = r.indices.iter().map(|&i| candidates[i]).collect();
+        if kept.len() < cfg.min_keep {
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| {
+                row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            kept = order.iter().take(cfg.min_keep).map(|&i| candidates[i]).collect();
+            kept.sort_unstable();
+        }
+        union.extend_from_slice(&kept);
+        outcomes.push(PruneOutcome { kept, mass: r.mass, iters: r.iters });
+    }
+    union.sort_unstable();
+    union.dedup();
+    (union, outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::{random_cache, random_q};
+
+    #[test]
+    fn prune_keeps_subset_with_mass() {
+        let (cache, seq) = random_cache(41, 1, 32, 256);
+        let q = random_q(42, 32);
+        let candidates: Vec<usize> = (0..256).collect();
+        let mut scratch = PrunerScratch::default();
+        let cfg = PrunerConfig { p: 0.9, ..Default::default() };
+        let out = prune_head(&cfg, &cache, &seq, 0, &q, &candidates, &mut scratch);
+        assert!(!out.kept.is_empty());
+        assert!(out.kept.len() <= 256);
+        assert!(out.mass >= 0.9 - 1e-3);
+        assert!(out.kept.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+        assert!(out.kept.iter().all(|t| candidates.contains(t)));
+    }
+
+    #[test]
+    fn focused_query_prunes_harder() {
+        // Make a cache where one key matches q exactly: focused attention.
+        let d = 32;
+        let mut cache = crate::kvcache::PagedKvCache::new(crate::kvcache::CacheConfig::new(1, d, 32));
+        let mut seq = crate::kvcache::SeqCache::default();
+        let mut r = crate::util::rng::Rng::new(7);
+        let q = random_q(8, d);
+        for i in 0..256 {
+            let k: Vec<f32> = if i == 100 {
+                q.iter().map(|x| x * 4.0).collect() // strong match
+            } else {
+                (0..d).map(|_| r.normal_f32(0.0, 0.3)).collect()
+            };
+            cache.append(&mut seq, &k, &k).unwrap();
+        }
+        let candidates: Vec<usize> = (0..256).collect();
+        let mut scratch = PrunerScratch::default();
+        let cfg = PrunerConfig { p: 0.9, ..Default::default() };
+        let out = prune_head(&cfg, &cache, &seq, 0, &q, &candidates, &mut scratch);
+        assert!(out.kept.contains(&100), "must keep the matching token");
+        assert!(out.kept.len() <= 16, "focused head should prune hard: {}", out.kept.len());
+    }
+
+    #[test]
+    fn min_keep_floor() {
+        let (cache, seq) = random_cache(43, 1, 16, 64);
+        let q = random_q(44, 16);
+        let candidates: Vec<usize> = (0..64).collect();
+        let mut scratch = PrunerScratch::default();
+        let cfg = PrunerConfig { p: 0.0001, min_keep: 8, ..Default::default() };
+        let out = prune_head(&cfg, &cache, &seq, 0, &q, &candidates, &mut scratch);
+        assert!(out.kept.len() >= 8);
+    }
+
+    #[test]
+    fn group_union_covers_heads() {
+        let (cache, seq) = random_cache(45, 1, 16, 128);
+        let group = 4;
+        let mut qs = Vec::new();
+        for g in 0..group {
+            qs.extend(random_q(50 + g as u64, 16));
+        }
+        let candidates: Vec<usize> = (0..128).collect();
+        let mut scratch = PrunerScratch::default();
+        let cfg = PrunerConfig { p: 0.8, ..Default::default() };
+        let (union, outs) = prune_group(&cfg, &cache, &seq, 0, &qs, group, &candidates, &mut scratch);
+        assert_eq!(outs.len(), group);
+        for o in &outs {
+            for t in &o.kept {
+                assert!(union.binary_search(t).is_ok(), "union must contain every head's keeps");
+            }
+        }
+        assert!(union.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn higher_p_keeps_more() {
+        let (cache, seq) = random_cache(47, 1, 32, 512);
+        let q = random_q(48, 32);
+        let candidates: Vec<usize> = (0..512).collect();
+        let mut scratch = PrunerScratch::default();
+        let lo = prune_head(
+            &PrunerConfig { p: 0.5, ..Default::default() },
+            &cache, &seq, 0, &q, &candidates, &mut scratch,
+        );
+        let hi = prune_head(
+            &PrunerConfig { p: 0.99, ..Default::default() },
+            &cache, &seq, 0, &q, &candidates, &mut scratch,
+        );
+        assert!(hi.kept.len() >= lo.kept.len());
+    }
+}

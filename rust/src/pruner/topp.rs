@@ -1,0 +1,236 @@
+//! Top-p selection over normalized attention weights.
+//!
+//! Two implementations:
+//! * [`topp_sort`] — the oracle: sort descending, take the minimal prefix
+//!   whose sum ≥ p (Definition 3.3). O(n log n), sequential.
+//! * [`topp_binary_search`] — Algorithm 1 from the paper: binary search on
+//!   the weight threshold with fused elementwise passes; parallel-friendly
+//!   (each pass is a vectorizable map-reduce, no data-dependent order),
+//!   which is why the GPU kernel uses it. Returns a superset-or-equal of
+//!   the sort oracle's mass with |I| within one threshold-tie of minimal.
+
+/// Result of a top-p selection.
+#[derive(Clone, Debug)]
+pub struct ToppResult {
+    /// Selected indices (ascending).
+    pub indices: Vec<usize>,
+    /// Sum of selected weights.
+    pub mass: f32,
+    /// Final threshold: weights >= this were kept.
+    pub threshold: f32,
+    /// Binary-search iterations used (0 for the sort oracle).
+    pub iters: usize,
+}
+
+/// Oracle top-p: minimal prefix of the descending sort with mass ≥ p.
+pub fn topp_sort(w: &[f32], p: f32) -> ToppResult {
+    let mut order: Vec<usize> = (0..w.len()).collect();
+    order.sort_by(|&a, &b| w[b].partial_cmp(&w[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut mass = 0.0f32;
+    let mut kept = Vec::new();
+    let mut threshold = 0.0f32;
+    for &i in &order {
+        kept.push(i);
+        mass += w[i];
+        threshold = w[i];
+        if mass >= p {
+            break;
+        }
+    }
+    kept.sort_unstable();
+    ToppResult { indices: kept, mass, threshold, iters: 0 }
+}
+
+/// Algorithm 1: top-p via binary search on the threshold.
+///
+/// Invariant maintained: `mass(w >= l) >= p` (l starts at 0 where mass = 1
+/// for normalized w) and `mass(w >= r) < p` — shrink until no weight lies
+/// strictly between `l` and `r`, then keep `w >= l`. Each iteration is a
+/// single fused pass (sum-above, plus the bracket-gap extrema), exactly
+/// the `where/sum/max` fusion the paper tensorizes on GPU.
+pub fn topp_binary_search(w: &[f32], p: f32, eps: f32) -> ToppResult {
+    if w.is_empty() {
+        return ToppResult { indices: vec![], mass: 0.0, threshold: 0.0, iters: 0 };
+    }
+    let wmax = w.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut l = 0.0f32;
+    let mut r = wmax;
+    let mut iters = 0;
+    // Active-set bisection (§Perf): the bracket [l, r] only shrinks, so
+    // any weight >= r is kept for sure (its mass is banked) and any
+    // weight < l is dropped for sure — both leave the active set, which
+    // shrinks geometrically. Each pass is a branch-light scan, the same
+    // fused `where/sum` the GPU kernel tensorizes, but over ever fewer
+    // elements.
+    let mut active: Vec<f32> = w.to_vec();
+    let mut banked = 0.0f32; // mass of weights proven >= threshold
+    while iters < 32 && !active.is_empty() {
+        let m = 0.5 * (l + r);
+        let mut mass_above = banked;
+        for &x in &active {
+            if x >= m {
+                mass_above += x;
+            }
+        }
+        iters += 1;
+        if mass_above >= p {
+            l = m;
+        } else {
+            r = m;
+        }
+        // Compact: bank definite keeps, drop definite rejects.
+        let mut gap_min = f32::INFINITY;
+        let mut gap_max = f32::NEG_INFINITY;
+        active.retain(|&x| {
+            if x >= r {
+                banked += x;
+                false
+            } else if x < l {
+                false
+            } else {
+                gap_min = gap_min.min(x);
+                gap_max = gap_max.max(x);
+                true
+            }
+        });
+        // Converged when the remaining bracket contains (almost) no
+        // distinct weight values.
+        if gap_max - gap_min <= eps || r - l <= eps * 1e-2 {
+            break;
+        }
+    }
+    let mut indices = Vec::new();
+    let mut mass = 0.0f32;
+    for (i, &x) in w.iter().enumerate() {
+        if x >= l {
+            indices.push(i);
+            mass += x;
+        }
+    }
+    // Guard: if fp drift left us below p (possible when eps is loose),
+    // fall back to widening by the sort oracle on the remainder.
+    if mass < p && indices.len() < w.len() {
+        let mut rest: Vec<usize> = (0..w.len()).filter(|i| w[*i] < l).collect();
+        rest.sort_by(|&a, &b| w[b].partial_cmp(&w[a]).unwrap_or(std::cmp::Ordering::Equal));
+        for i in rest {
+            indices.push(i);
+            mass += w[i];
+            if mass >= p {
+                break;
+            }
+        }
+        indices.sort_unstable();
+    }
+    ToppResult { indices, mass, threshold: l, iters }
+}
+
+/// Budget needed by oracle top-p (the |I| of Definition 3.3) — used by
+/// the budget-dynamism analyses (Fig. 4 / Fig. 11).
+pub fn oracle_budget(w: &[f32], p: f32) -> usize {
+    topp_sort(w, p).indices.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::softmax_inplace;
+    use crate::util::rng::Rng;
+
+    fn softmaxed(seed: u64, n: usize, sharp: f32) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        let mut w: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, sharp)).collect();
+        softmax_inplace(&mut w);
+        w
+    }
+
+    #[test]
+    fn sort_oracle_minimal() {
+        let w = vec![0.5, 0.3, 0.1, 0.05, 0.05];
+        let r = topp_sort(&w, 0.75);
+        assert_eq!(r.indices, vec![0, 1]);
+        assert!((r.mass - 0.8).abs() < 1e-6);
+        let r = topp_sort(&w, 0.85);
+        assert_eq!(r.indices, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn binary_search_reaches_mass() {
+        for (seed, sharp) in [(1u64, 0.5f32), (2, 2.0), (3, 6.0)] {
+            for n in [16usize, 100, 1000] {
+                let w = softmaxed(seed, n, sharp);
+                for p in [0.5f32, 0.8, 0.9, 0.95, 0.99] {
+                    let r = topp_binary_search(&w, p, 1e-6);
+                    assert!(r.mass >= p - 1e-4, "n={n} p={p} mass={}", r.mass);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn binary_search_near_minimal() {
+        for seed in 0..10u64 {
+            let w = softmaxed(seed, 512, 3.0);
+            let p = 0.9;
+            let oracle = topp_sort(&w, p);
+            let bs = topp_binary_search(&w, p, 1e-7);
+            // Binary search may keep threshold-ties; allow small slack.
+            assert!(
+                bs.indices.len() <= oracle.indices.len() + 4,
+                "seed={seed} bs={} oracle={}",
+                bs.indices.len(),
+                oracle.indices.len()
+            );
+        }
+    }
+
+    #[test]
+    fn focused_needs_fewer_than_diffuse() {
+        // The core top-p claim (Fig. 3/4): a peaked distribution needs far
+        // fewer tokens than a flat one at the same p.
+        let focused = softmaxed(5, 1024, 8.0);
+        let diffuse = softmaxed(6, 1024, 0.3);
+        let bf = oracle_budget(&focused, 0.9);
+        let bd = oracle_budget(&diffuse, 0.9);
+        assert!(bf * 4 < bd, "focused {bf} vs diffuse {bd}");
+    }
+
+    #[test]
+    fn uniform_distribution_selects_fraction_p() {
+        let n = 1000;
+        let w = vec![1.0 / n as f32; n];
+        let r = topp_binary_search(&w, 0.9, 1e-9);
+        // All weights equal: threshold keeps all (ties) — mass = 1.
+        assert!(r.mass >= 0.9);
+        let o = topp_sort(&w, 0.9);
+        // fp accumulation of 1000 equal weights may land one off 900.
+        assert!((o.indices.len() as i64 - 900).abs() <= 2, "{}", o.indices.len());
+    }
+
+    #[test]
+    fn single_spike() {
+        let mut w = vec![0.0001f32; 100];
+        w[42] = 1.0;
+        let total: f32 = w.iter().sum();
+        for x in w.iter_mut() {
+            *x /= total;
+        }
+        let r = topp_binary_search(&w, 0.9, 1e-8);
+        assert_eq!(r.indices, vec![42]);
+    }
+
+    #[test]
+    fn empty_and_p_zero() {
+        let r = topp_binary_search(&[], 0.9, 1e-6);
+        assert!(r.indices.is_empty());
+        let w = vec![0.25f32; 4];
+        let r = topp_binary_search(&w, 0.0, 1e-6);
+        assert!(r.mass >= 0.0);
+    }
+
+    #[test]
+    fn iters_bounded() {
+        let w = softmaxed(9, 4096, 2.0);
+        let r = topp_binary_search(&w, 0.95, 1e-6);
+        assert!(r.iters <= 32);
+    }
+}

@@ -1,0 +1,40 @@
+//! The trivial selector: keep every token. "Full + Twilight" in Table 2 —
+//! the configuration that isolates the pruner's own effect.
+
+use super::TokenSelector;
+use crate::kvcache::{PagedKvCache, SeqCache};
+
+pub struct FullSelector;
+
+impl TokenSelector for FullSelector {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn select(
+        &mut self,
+        _cache: &PagedKvCache,
+        seq: &SeqCache,
+        _kv_head: usize,
+        _qs: &[f32],
+        _group: usize,
+        _budget: usize,
+    ) -> Vec<usize> {
+        (0..seq.len).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::{random_cache, random_q};
+
+    #[test]
+    fn returns_everything() {
+        let (cache, seq) = random_cache(1, 1, 8, 40);
+        let q = random_q(2, 8);
+        let mut s = FullSelector;
+        let got = s.select(&cache, &seq, 0, &q, 1, 16);
+        assert_eq!(got, (0..40).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,93 @@
+//! H2O [8]: Heavy-Hitter Oracle — keep the tokens with the largest
+//! *accumulated* attention scores plus a recency window (token-dropping
+//! baseline).
+
+use super::{top_k_indices, TokenSelector};
+use crate::kvcache::{PagedKvCache, SeqCache};
+
+pub struct H2O {
+    /// Recency window always kept.
+    pub recent: usize,
+    /// Accumulated attention mass per token.
+    acc: Vec<f32>,
+}
+
+impl H2O {
+    pub fn new(recent: usize) -> H2O {
+        H2O { recent, acc: Vec::new() }
+    }
+}
+
+impl TokenSelector for H2O {
+    fn name(&self) -> &'static str {
+        "h2o"
+    }
+
+    fn select(
+        &mut self,
+        _cache: &PagedKvCache,
+        seq: &SeqCache,
+        _kv_head: usize,
+        _qs: &[f32],
+        _group: usize,
+        budget: usize,
+    ) -> Vec<usize> {
+        let n = seq.len;
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.acc.len() < n {
+            self.acc.resize(n, 0.0);
+        }
+        let keep_recent = self.recent.min(n);
+        let top_budget = budget.saturating_sub(keep_recent);
+        let mut out = top_k_indices(&self.acc[..n], top_budget);
+        for t in n - keep_recent..n {
+            if out.binary_search(&t).is_err() {
+                out.push(t);
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    fn observe(&mut self, tokens: &[usize], weights: &[f32]) {
+        for (&t, &w) in tokens.iter().zip(weights) {
+            if t >= self.acc.len() {
+                self.acc.resize(t + 1, 0.0);
+            }
+            self.acc[t] += w;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::{random_cache, random_q};
+
+    #[test]
+    fn heavy_hitters_survive() {
+        let (cache, seq) = random_cache(61, 1, 8, 100);
+        let q = random_q(62, 8);
+        let mut s = H2O::new(8);
+        for _ in 0..3 {
+            s.observe(&[7, 30], &[0.6, 0.4]);
+        }
+        let got = s.select(&cache, &seq, 0, &q, 1, 16);
+        assert!(got.contains(&7));
+        assert!(got.contains(&30));
+        assert!(got.contains(&99)); // recency
+        assert!(got.len() <= 16);
+    }
+
+    #[test]
+    fn budget_zero_keeps_recent_only() {
+        let (cache, seq) = random_cache(63, 1, 8, 50);
+        let q = random_q(64, 8);
+        let mut s = H2O::new(4);
+        let got = s.select(&cache, &seq, 0, &q, 1, 4);
+        assert_eq!(got, vec![46, 47, 48, 49]);
+    }
+}

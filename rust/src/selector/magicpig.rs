@@ -1,0 +1,161 @@
+//! MagicPIG [30]: LSH-sampling token selection (the paper's SOTA
+//! *non-top-k* baseline).
+//!
+//! SimHash signatures: `L` tables × `K` random hyperplanes. A token is
+//! sampled when its signature collides with the query's in at least one
+//! table. There is no budget parameter — accuracy/cost is controlled by
+//! (K, L), exactly as in the paper's evaluation (K=8/L=75, K=10/L=150).
+//! We always union in a small recency window, mirroring MagicPIG's
+//! treatment of local tokens (recent tokens are attended densely).
+
+use super::TokenSelector;
+use crate::kvcache::{PagedKvCache, SeqCache};
+use crate::tensor::dot;
+use crate::util::rng::Rng;
+
+pub struct MagicPig {
+    head_dim: usize,
+    /// Bits per table.
+    pub k: usize,
+    /// Number of tables.
+    pub l: usize,
+    /// Random hyperplanes: `[l][k][d]` flattened.
+    planes: Vec<f32>,
+    /// Cached per-token signatures `[tok][l]`, filled incrementally.
+    sigs: Vec<u64>,
+    sig_len: usize,
+    recent: usize,
+}
+
+impl MagicPig {
+    pub fn new(head_dim: usize, k: usize, l: usize, seed: u64) -> MagicPig {
+        let mut rng = Rng::new(seed ^ 0x9A61C9);
+        let planes = (0..l * k * head_dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        MagicPig { head_dim, k: k.min(63), l, planes, sigs: Vec::new(), sig_len: 0, recent: 16 }
+    }
+
+    /// K-bit SimHash signature of `x` under table `t`.
+    fn signature(&self, t: usize, x: &[f32]) -> u64 {
+        let d = self.head_dim;
+        let mut sig = 0u64;
+        for b in 0..self.k {
+            let plane = &self.planes[(t * self.k + b) * d..(t * self.k + b + 1) * d];
+            if dot(plane, x) >= 0.0 {
+                sig |= 1 << b;
+            }
+        }
+        sig
+    }
+
+    /// Extend cached token signatures up to `seq.len`.
+    fn extend_sigs(&mut self, cache: &PagedKvCache, seq: &SeqCache, kv_head: usize) {
+        let ps = cache.cfg.page_size;
+        while self.sig_len < seq.len {
+            let t = self.sig_len;
+            let (page, slot) = seq.locate(t, ps);
+            let k = cache.k_at(page, kv_head, slot);
+            for table in 0..self.l {
+                self.sigs.push(self.signature(table, k));
+            }
+            self.sig_len += 1;
+        }
+    }
+}
+
+impl TokenSelector for MagicPig {
+    fn name(&self) -> &'static str {
+        "magicpig"
+    }
+
+    fn select(
+        &mut self,
+        cache: &PagedKvCache,
+        seq: &SeqCache,
+        kv_head: usize,
+        qs: &[f32],
+        group: usize,
+        _budget: usize,
+    ) -> Vec<usize> {
+        if seq.len == 0 {
+            return Vec::new();
+        }
+        self.extend_sigs(cache, seq, kv_head);
+        let d = self.head_dim;
+        // Query signatures per table, OR-ed over the group's heads.
+        let mut out: Vec<usize> = Vec::new();
+        let recent_from = seq.len.saturating_sub(self.recent);
+        for t in 0..seq.len {
+            if t >= recent_from {
+                out.push(t);
+                continue;
+            }
+            let mut hit = false;
+            'tables: for table in 0..self.l {
+                let ks = self.sigs[t * self.l + table];
+                for g in 0..group {
+                    let qsig = self.signature(table, &qs[g * d..(g + 1) * d]);
+                    if qsig == ks {
+                        hit = true;
+                        break 'tables;
+                    }
+                }
+            }
+            if hit {
+                out.push(t);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::{random_cache, random_q};
+    use crate::kvcache::{CacheConfig, PagedKvCache, SeqCache};
+
+    #[test]
+    fn identical_key_always_collides() {
+        let d = 32;
+        let mut cache = PagedKvCache::new(CacheConfig::new(1, d, 8));
+        let mut seq = SeqCache::default();
+        let q = random_q(31, d);
+        for i in 0..64 {
+            let k: Vec<f32> = if i == 10 { q.clone() } else { random_q(100 + i, d) };
+            cache.append(&mut seq, &k, &k).unwrap();
+        }
+        let mut s = MagicPig::new(d, 8, 16, 1);
+        let got = s.select(&cache, &seq, 0, &q, 1, 0);
+        assert!(got.contains(&10), "identical key must collide in every table");
+    }
+
+    #[test]
+    fn recent_window_always_kept() {
+        let (cache, seq) = random_cache(33, 1, 16, 100);
+        let q = random_q(34, 16);
+        let mut s = MagicPig::new(16, 10, 4, 2);
+        let got = s.select(&cache, &seq, 0, &q, 1, 0);
+        for t in 84..100 {
+            assert!(got.contains(&t));
+        }
+    }
+
+    #[test]
+    fn more_tables_select_more() {
+        let (cache, seq) = random_cache(35, 1, 16, 512);
+        let q = random_q(36, 16);
+        let n_small = MagicPig::new(16, 10, 8, 3).select(&cache, &seq, 0, &q, 1, 0).len();
+        let n_big = MagicPig::new(16, 10, 64, 3).select(&cache, &seq, 0, &q, 1, 0).len();
+        assert!(n_big >= n_small, "L=64 picked {n_big} < L=8 {n_small}");
+    }
+
+    #[test]
+    fn signatures_cached_incrementally() {
+        let (cache, seq) = random_cache(37, 1, 8, 40);
+        let q = random_q(38, 8);
+        let mut s = MagicPig::new(8, 6, 4, 4);
+        let _ = s.select(&cache, &seq, 0, &q, 1, 0);
+        assert_eq!(s.sig_len, 40);
+        assert_eq!(s.sigs.len(), 40 * 4);
+    }
+}

@@ -1,0 +1,193 @@
+//! Token Selectors — the paper's black-box abstraction over existing
+//! sparse-attention algorithms (§4.1).
+//!
+//! A selector answers: *given this query (group), which candidate tokens
+//! should the attention kernel consider?* The Twilight pruner then
+//! refines the candidate set with top-p. Every baseline the paper
+//! evaluates is implemented here behind one trait:
+//!
+//! | Selector        | Paper ref        | Kind                      |
+//! |-----------------|------------------|---------------------------|
+//! | `FullSelector`  | "Full+Twilight"  | trivial (all tokens)      |
+//! | `QuestSelector` | Quest [9]        | page min/max upper bound  |
+//! | `DoubleSparsity`| DS [12]          | calibrated label channels |
+//! | `MagicPig`      | MagicPIG [30]    | LSH sampling (non-top-k)  |
+//! | `StreamingLlm`  | StreamingLLM [17]| sink + recency (dropping) |
+//! | `SnapKv`        | SnapKV [18]      | pooled observed attention |
+//! | `H2O`           | H2O [8]          | accumulated-score eviction|
+//! | `OracleTopK`    | Definition 3.2   | exact top-k upper bound   |
+//!
+//! Selectors may be stateful per (sequence, layer, kv-head): dropping
+//! methods (H2O/SnapKV) accumulate observed attention via [`TokenSelector::observe`].
+
+pub mod double_sparsity;
+pub mod full;
+pub mod h2o;
+pub mod magicpig;
+pub mod oracle;
+pub mod quest;
+pub mod snapkv;
+pub mod streaming_llm;
+
+use crate::kvcache::{PagedKvCache, SeqCache};
+
+/// The black-box Token Selector interface (paper §4.1). One instance per
+/// (sequence, layer, kv-head group); `select` is called every decode step.
+pub trait TokenSelector: Send {
+    /// Algorithm name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Choose candidate tokens for the current step.
+    ///
+    /// * `qs` — the query heads of this KV group, `[group * d]`.
+    /// * `budget` — the conservative token budget (selector may return
+    ///   fewer, e.g. when the context is short, or ignore it entirely for
+    ///   budget-free methods like MagicPIG).
+    ///
+    /// Returns ascending logical token indices into `seq`.
+    fn select(
+        &mut self,
+        cache: &PagedKvCache,
+        seq: &SeqCache,
+        kv_head: usize,
+        qs: &[f32],
+        group: usize,
+        budget: usize,
+    ) -> Vec<usize>;
+
+    /// Feed back the attention weights actually computed this step
+    /// (`weights[i]` corresponds to `tokens[i]`). Stateful (dropping)
+    /// selectors use this; the default is a no-op.
+    fn observe(&mut self, _tokens: &[usize], _weights: &[f32]) {}
+}
+
+/// Which selector to construct — parsed from configs/CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectorKind {
+    Full,
+    Quest,
+    DoubleSparsity,
+    MagicPig,
+    StreamingLlm,
+    SnapKv,
+    H2O,
+    Oracle,
+}
+
+impl SelectorKind {
+    pub fn parse(s: &str) -> Option<SelectorKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" => Some(SelectorKind::Full),
+            "quest" => Some(SelectorKind::Quest),
+            "ds" | "double-sparsity" | "double_sparsity" => Some(SelectorKind::DoubleSparsity),
+            "magicpig" | "pig" => Some(SelectorKind::MagicPig),
+            "streaming" | "streamingllm" | "streaming-llm" => Some(SelectorKind::StreamingLlm),
+            "snapkv" => Some(SelectorKind::SnapKv),
+            "h2o" => Some(SelectorKind::H2O),
+            "oracle" => Some(SelectorKind::Oracle),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SelectorKind::Full => "full",
+            SelectorKind::Quest => "quest",
+            SelectorKind::DoubleSparsity => "ds",
+            SelectorKind::MagicPig => "magicpig",
+            SelectorKind::StreamingLlm => "streaming",
+            SelectorKind::SnapKv => "snapkv",
+            SelectorKind::H2O => "h2o",
+            SelectorKind::Oracle => "oracle",
+        }
+    }
+
+    /// Construct a fresh selector instance (per seq × layer × kv-head).
+    pub fn build(self, head_dim: usize, seed: u64) -> Box<dyn TokenSelector> {
+        match self {
+            SelectorKind::Full => Box::new(full::FullSelector),
+            SelectorKind::Quest => Box::new(quest::QuestSelector::new()),
+            SelectorKind::DoubleSparsity => {
+                Box::new(double_sparsity::DoubleSparsity::new(head_dim, head_dim / 4))
+            }
+            SelectorKind::MagicPig => Box::new(magicpig::MagicPig::new(head_dim, 10, 150, seed)),
+            SelectorKind::StreamingLlm => Box::new(streaming_llm::StreamingLlm::new(4)),
+            SelectorKind::SnapKv => Box::new(snapkv::SnapKv::new(32, 7)),
+            SelectorKind::H2O => Box::new(h2o::H2O::new(32)),
+            SelectorKind::Oracle => Box::new(oracle::OracleTopK),
+        }
+    }
+}
+
+/// Max-score helper: group queries are reduced by max over the group, the
+/// union semantics Quest/NSA use for GQA (B.2).
+pub(crate) fn group_max_scores<F: Fn(&[f32], usize) -> f32>(
+    qs: &[f32],
+    group: usize,
+    n: usize,
+    score: F,
+) -> Vec<f32> {
+    let d = qs.len() / group;
+    let mut out = vec![f32::NEG_INFINITY; n];
+    for g in 0..group {
+        let q = &qs[g * d..(g + 1) * d];
+        for (t, o) in out.iter_mut().enumerate() {
+            let s = score(q, t);
+            if s > *o {
+                *o = s;
+            }
+        }
+    }
+    out
+}
+
+/// Take the indices of the `k` largest scores, returned ascending.
+pub(crate) fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    if k < scores.len() {
+        idx.select_nth_unstable_by(k, |&a, &b| {
+            scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.truncate(k);
+    }
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(SelectorKind::parse("quest"), Some(SelectorKind::Quest));
+        assert_eq!(SelectorKind::parse("DS"), Some(SelectorKind::DoubleSparsity));
+        assert_eq!(SelectorKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn top_k_indices_basic() {
+        let s = vec![0.1, 0.9, 0.5, 0.7, 0.2];
+        assert_eq!(top_k_indices(&s, 2), vec![1, 3]);
+        assert_eq!(top_k_indices(&s, 5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(top_k_indices(&s, 9), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn all_kinds_build() {
+        for k in [
+            SelectorKind::Full,
+            SelectorKind::Quest,
+            SelectorKind::DoubleSparsity,
+            SelectorKind::MagicPig,
+            SelectorKind::StreamingLlm,
+            SelectorKind::SnapKv,
+            SelectorKind::H2O,
+            SelectorKind::Oracle,
+        ] {
+            let s = k.build(64, 1);
+            assert!(!s.name().is_empty());
+        }
+    }
+}

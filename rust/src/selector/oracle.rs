@@ -1,0 +1,56 @@
+//! Oracle top-k (Definition 3.2): exact logits, exact top-k. The
+//! theoretical upper bound of all top-k methods — used by Fig. 2 and the
+//! budget-dynamism analyses. Reads the full K cache (not deployable, by
+//! construction).
+
+use super::{group_max_scores, top_k_indices, TokenSelector};
+use crate::kvcache::{PagedKvCache, SeqCache};
+
+pub struct OracleTopK;
+
+impl TokenSelector for OracleTopK {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn select(
+        &mut self,
+        cache: &PagedKvCache,
+        seq: &SeqCache,
+        kv_head: usize,
+        qs: &[f32],
+        group: usize,
+        budget: usize,
+    ) -> Vec<usize> {
+        if seq.len == 0 {
+            return Vec::new();
+        }
+        let scores = group_max_scores(qs, group, seq.len, |q, t| {
+            cache.exact_score(seq, kv_head, q, t)
+        });
+        top_k_indices(&scores, budget)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::{random_cache, random_q};
+
+    #[test]
+    fn picks_exact_top_tokens() {
+        let (cache, seq) = random_cache(71, 1, 16, 128);
+        let q = random_q(72, 16);
+        let logits = crate::attention::exact_logits(&cache, &seq, 0, &q);
+        let mut s = OracleTopK;
+        let got = s.select(&cache, &seq, 0, &q, 1, 8);
+        assert_eq!(got.len(), 8);
+        // Every selected token's logit >= every unselected token's logit.
+        let min_sel = got.iter().map(|&t| logits[t]).fold(f32::INFINITY, f32::min);
+        for t in 0..128 {
+            if !got.contains(&t) {
+                assert!(logits[t] <= min_sel + 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! SnapKV [18]: token importance from pooled attention observed over a
+//! recent window of queries (token-dropping baseline, Appendix D).
+//!
+//! SnapKV originally compresses at prefill using the prompt's last
+//! `obs_window` queries. In the decoding harness we maintain the same
+//! statistic online: `observe` accumulates the attention mass each token
+//! received over the trailing window, a 1-D max-pool smooths it (SnapKV's
+//! "clustering" pooling), and selection keeps the top tokens plus the
+//! recency window.
+
+use super::{top_k_indices, TokenSelector};
+use crate::kvcache::{PagedKvCache, SeqCache};
+use std::collections::VecDeque;
+
+pub struct SnapKv {
+    /// Observation window: how many recent steps of weights to keep.
+    pub obs_window: usize,
+    /// Max-pool kernel size (odd).
+    pub pool: usize,
+    /// Ring of (tokens, weights) observations.
+    history: VecDeque<(Vec<usize>, Vec<f32>)>,
+    recent: usize,
+}
+
+impl SnapKv {
+    pub fn new(obs_window: usize, pool: usize) -> SnapKv {
+        SnapKv { obs_window, pool: pool | 1, history: VecDeque::new(), recent: 16 }
+    }
+
+    /// Accumulated, max-pooled importance per token.
+    fn pooled_scores(&self, n: usize) -> Vec<f32> {
+        let mut acc = vec![0.0f32; n];
+        for (toks, ws) in &self.history {
+            for (&t, &w) in toks.iter().zip(ws) {
+                if t < n {
+                    acc[t] += w;
+                }
+            }
+        }
+        // 1-D max pool.
+        let r = self.pool / 2;
+        let mut out = vec![0.0f32; n];
+        for i in 0..n {
+            let lo = i.saturating_sub(r);
+            let hi = (i + r + 1).min(n);
+            let mut m = 0.0f32;
+            for &a in &acc[lo..hi] {
+                m = m.max(a);
+            }
+            out[i] = m;
+        }
+        out
+    }
+}
+
+impl TokenSelector for SnapKv {
+    fn name(&self) -> &'static str {
+        "snapkv"
+    }
+
+    fn select(
+        &mut self,
+        _cache: &PagedKvCache,
+        seq: &SeqCache,
+        _kv_head: usize,
+        _qs: &[f32],
+        _group: usize,
+        budget: usize,
+    ) -> Vec<usize> {
+        let n = seq.len;
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.history.is_empty() {
+            // Cold start: recency fallback.
+            let from = n.saturating_sub(budget);
+            return (from..n).collect();
+        }
+        let scores = self.pooled_scores(n);
+        let keep_recent = self.recent.min(n);
+        let top_budget = budget.saturating_sub(keep_recent);
+        let mut out = top_k_indices(&scores, top_budget);
+        for t in n - keep_recent..n {
+            if out.binary_search(&t).is_err() {
+                out.push(t);
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    fn observe(&mut self, tokens: &[usize], weights: &[f32]) {
+        self.history.push_back((tokens.to_vec(), weights.to_vec()));
+        while self.history.len() > self.obs_window {
+            self.history.pop_front();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::{random_cache, random_q};
+
+    #[test]
+    fn cold_start_is_recency() {
+        let (cache, seq) = random_cache(51, 1, 8, 100);
+        let q = random_q(52, 8);
+        let mut s = SnapKv::new(8, 7);
+        let got = s.select(&cache, &seq, 0, &q, 1, 10);
+        assert_eq!(got, (90..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn observed_heavy_token_is_kept() {
+        let (cache, seq) = random_cache(53, 1, 8, 200);
+        let q = random_q(54, 8);
+        let mut s = SnapKv::new(8, 3);
+        // Token 42 repeatedly receives most of the attention.
+        for _ in 0..5 {
+            s.observe(&[10, 42, 150], &[0.1, 0.8, 0.1]);
+        }
+        let got = s.select(&cache, &seq, 0, &q, 1, 24);
+        assert!(got.contains(&42), "{got:?}");
+        // Recency window present too.
+        assert!(got.contains(&199));
+    }
+
+    #[test]
+    fn history_bounded() {
+        let mut s = SnapKv::new(4, 3);
+        for i in 0..20 {
+            s.observe(&[i], &[1.0]);
+        }
+        assert_eq!(s.history.len(), 4);
+    }
+
+    #[test]
+    fn pooling_spreads_importance() {
+        let mut s = SnapKv::new(4, 5);
+        s.observe(&[50], &[1.0]);
+        let scores = s.pooled_scores(100);
+        // Neighbors within the pool radius share the max.
+        assert!(scores[48] > 0.0 && scores[52] > 0.0);
+        assert_eq!(scores[40], 0.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! StreamingLLM [17]: attention sinks + recency window (query-agnostic
+//! token dropping — Appendix D baseline).
+
+use super::TokenSelector;
+use crate::kvcache::{PagedKvCache, SeqCache};
+
+pub struct StreamingLlm {
+    /// Number of initial "sink" tokens always kept.
+    pub sinks: usize,
+}
+
+impl StreamingLlm {
+    pub fn new(sinks: usize) -> StreamingLlm {
+        StreamingLlm { sinks }
+    }
+}
+
+impl TokenSelector for StreamingLlm {
+    fn name(&self) -> &'static str {
+        "streaming"
+    }
+
+    fn select(
+        &mut self,
+        _cache: &PagedKvCache,
+        seq: &SeqCache,
+        _kv_head: usize,
+        _qs: &[f32],
+        _group: usize,
+        budget: usize,
+    ) -> Vec<usize> {
+        let n = seq.len;
+        let sinks = self.sinks.min(n);
+        let window = budget.saturating_sub(sinks);
+        let recent_from = n.saturating_sub(window).max(sinks);
+        let mut out: Vec<usize> = (0..sinks).collect();
+        out.extend(recent_from..n);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::{random_cache, random_q};
+
+    #[test]
+    fn sinks_plus_window() {
+        let (cache, seq) = random_cache(41, 1, 8, 100);
+        let q = random_q(42, 8);
+        let mut s = StreamingLlm::new(4);
+        let got = s.select(&cache, &seq, 0, &q, 1, 20);
+        assert_eq!(got.len(), 20);
+        assert_eq!(&got[..4], &[0, 1, 2, 3]);
+        assert_eq!(got[4], 84);
+        assert_eq!(*got.last().unwrap(), 99);
+    }
+
+    #[test]
+    fn short_sequence_keeps_all() {
+        let (cache, seq) = random_cache(43, 1, 8, 10);
+        let q = random_q(44, 8);
+        let mut s = StreamingLlm::new(4);
+        let got = s.select(&cache, &seq, 0, &q, 1, 64);
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+}

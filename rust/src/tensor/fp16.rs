@@ -1,0 +1,147 @@
+//! IEEE-754 binary16 conversion (bit-level, no `half` crate). The FP16 K
+//! cache is the paper's baseline precision: we store it as `u16` words and
+//! convert on load, which also makes byte-traffic accounting exact for the
+//! memory-bound cost model in `sim/`.
+
+/// Convert f32 -> f16 bits (round-to-nearest-even).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf/NaN
+        return sign | 0x7C00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    // Re-bias: f32 exp-127 -> f16 exp-15
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal f16.
+        let mut e = (unbiased + 15) as u32;
+        let mut m = mant >> 13;
+        // Round to nearest even on the 13 dropped bits.
+        let rem = mant & 0x1FFF;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+            if m == 0x400 {
+                m = 0;
+                e += 1;
+                if e >= 31 {
+                    return sign | 0x7C00;
+                }
+            }
+        }
+        return sign | ((e as u16) << 10) | (m as u16);
+    }
+    if unbiased >= -24 {
+        // Subnormal f16.
+        // value = 1.mant * 2^unbiased = m16 * 2^-24 with m16 = full >> shift,
+        // full the 24-bit significand and shift = -1 - unbiased (14..=23).
+        let full = mant | 0x80_0000; // implicit leading 1
+        let shift = (-1 - unbiased) as u32;
+        let m = full >> shift;
+        let rem = full & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut m16 = m as u16;
+        if rem > half || (rem == half && (m16 & 1) == 1) {
+            m16 += 1;
+        }
+        return sign | m16;
+    }
+    sign // underflow to zero
+}
+
+/// Convert f16 bits -> f32.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: normalize.
+            let mut e = -14i32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3FF;
+            sign | (((e + 127) as u32) << 23) | (m << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Quantize a slice to fp16 storage.
+pub fn encode(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| f32_to_f16(x)).collect()
+}
+
+/// Decode fp16 storage back into f32.
+pub fn decode_into(hs: &[u16], out: &mut [f32]) {
+    for (o, &h) in out.iter_mut().zip(hs) {
+        *o = f16_to_f32(h);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 1024.0] {
+            assert_eq!(f16_to_f32(f32_to_f16(v)), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        // Relative error of f16 is <= 2^-11 for normals.
+        let mut x = -8.0f32;
+        while x < 8.0 {
+            let r = f16_to_f32(f32_to_f16(x));
+            if x.abs() > 1e-4 {
+                assert!(((r - x) / x).abs() < 1.0 / 1024.0, "x={x} r={r}");
+            }
+            x += 0.0137;
+        }
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(f32_to_f16(1e9)), f32::INFINITY); // overflow
+        assert_eq!(f16_to_f32(f32_to_f16(1e-10)), 0.0); // underflow
+    }
+
+    #[test]
+    fn subnormals() {
+        let tiny = 3.0e-5f32; // subnormal range for f16 is < 6.1e-5
+        let r = f16_to_f32(f32_to_f16(tiny));
+        assert!((r - tiny).abs() / tiny < 0.05, "tiny={tiny} r={r}");
+    }
+
+    #[test]
+    fn encode_decode_slice() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.37).collect();
+        let hs = encode(&xs);
+        let mut out = vec![0.0; 100];
+        decode_into(&hs, &mut out);
+        for (a, b) in xs.iter().zip(&out) {
+            assert!((a - b).abs() <= a.abs() * 0.001 + 1e-3);
+        }
+    }
+}

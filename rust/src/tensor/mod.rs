@@ -1,0 +1,246 @@
+//! Dense tensor substrate: row-major f32 tensors, fp16 bit conversion,
+//! and the quantized K-cache representations (INT2/4/8) from §4.2 of the
+//! paper.
+
+pub mod fp16;
+pub mod quant;
+
+/// A row-major f32 tensor with explicit shape. The compute kernels in
+/// `attention/` take raw slices for speed; `Tensor` is the bookkeeping
+/// type used at module boundaries (weights, activations, literals).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.ndim(), 2);
+        let d = self.shape[1];
+        &self.data[i * d..(i + 1) * d]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert_eq!(self.ndim(), 2);
+        let d = self.shape[1];
+        &mut self.data[i * d..(i + 1) * d]
+    }
+
+    /// Reshape in place (numel must match).
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(self.numel(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Max |a - b| between two tensors of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+/// y = W x + b for row-major `w: [out, inp]`. The MLP/QKV hot path.
+pub fn gemv(w: &[f32], x: &[f32], bias: Option<&[f32]>, out: &mut [f32]) {
+    let inp = x.len();
+    debug_assert_eq!(w.len(), out.len() * inp);
+    for (o, row) in out.iter_mut().zip(w.chunks_exact(inp)) {
+        *o = dot(row, x);
+    }
+    if let Some(b) = bias {
+        for (o, bi) in out.iter_mut().zip(b) {
+            *o += bi;
+        }
+    }
+}
+
+/// Dot product, written so LLVM auto-vectorizes (4 independent partial
+/// sums over exact chunks).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// `out += s * x` (axpy), used by attention value accumulation.
+#[inline]
+pub fn axpy(s: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, xi) in out.iter_mut().zip(x) {
+        *o += s * xi;
+    }
+}
+
+/// Numerically-stable in-place softmax; returns the max logit (useful for
+/// streaming variants and tests).
+pub fn softmax_inplace(xs: &mut [f32]) -> f32 {
+    if xs.is_empty() {
+        return f32::NEG_INFINITY;
+    }
+    let max = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+    max
+}
+
+/// RMSNorm: `x * w / rms(x)`.
+pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), w.len());
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for ((o, xi), wi) in out.iter_mut().zip(x).zip(w) {
+        *o = xi * inv * wi;
+    }
+}
+
+/// Rotary position embedding applied in pairs `(x[2i], x[2i+1])`,
+/// matching the python/compile/model.py convention.
+pub fn rope_inplace(x: &mut [f32], pos: usize, theta: f32) {
+    let d = x.len();
+    let half = d / 2;
+    for i in 0..half {
+        let freq = theta.powf(-2.0 * i as f32 / d as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let a = x[2 * i];
+        let b = x[2 * i + 1];
+        x[2 * i] = a * cos - b * sin;
+        x[2 * i + 1] = a * sin + b * cos;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_rows() {
+        let t = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[2, 3]);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..131).map(|i| i as f32 * 0.1).collect();
+        let b: Vec<f32> = (0..131).map(|i| (130 - i) as f32 * 0.01).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gemv_identity() {
+        let n = 5;
+        let mut w = vec![0.0; n * n];
+        for i in 0..n {
+            w[i * n + i] = 1.0;
+        }
+        let x = vec![1., 2., 3., 4., 5.];
+        let mut y = vec![0.0; n];
+        gemv(&w, &x, None, &mut y);
+        assert_eq!(y, x);
+        gemv(&w, &x, Some(&[1.0; 5]), &mut y);
+        assert_eq!(y, vec![2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = vec![1.0, 2.0, 3.0, 1000.0];
+        softmax_inplace(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(x[3] > 0.999);
+    }
+
+    #[test]
+    fn softmax_uniform() {
+        let mut x = vec![0.5; 8];
+        softmax_inplace(&mut x);
+        for v in x {
+            assert!((v - 0.125).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_unit() {
+        let x = vec![3.0, 4.0];
+        let w = vec![1.0, 1.0];
+        let mut out = vec![0.0; 2];
+        rmsnorm(&x, &w, 0.0, &mut out);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-6);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_pos0_identity() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        let orig = x.clone();
+        rope_inplace(&mut x, 0, 10000.0);
+        assert_eq!(x, orig);
+        rope_inplace(&mut x, 17, 10000.0);
+        let n0: f32 = orig.iter().map(|v| v * v).sum();
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-4);
+        assert!(x != orig);
+    }
+
+    #[test]
+    fn rope_relative_dot_invariance() {
+        // q at pos p and k at pos p+delta: dot depends only on delta.
+        let q0 = vec![0.3, -0.2, 0.9, 0.1];
+        let k0 = vec![-0.5, 0.4, 0.2, 0.8];
+        let dot_at = |p: usize, delta: usize| {
+            let mut q = q0.clone();
+            let mut k = k0.clone();
+            rope_inplace(&mut q, p + delta, 10000.0);
+            rope_inplace(&mut k, p, 10000.0);
+            dot(&q, &k)
+        };
+        assert!((dot_at(0, 5) - dot_at(100, 5)).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,296 @@
+//! Per-head asymmetric K-cache quantization (paper §4.2, Appendix B.1).
+//!
+//! The Twilight pruner estimates attention weights from a low-precision
+//! mirror of the K cache. Following the paper (which follows QServe) we
+//! use *per-head, dynamic, asymmetric* quantization: each (head, page)
+//! group stores an fp16 `scale`/`zero` pair; INT4 elements are packed two
+//! per byte after a `+offset` shift to unsigned (paper's `+128` trick,
+//! here `+2^(bits-1)` at each width), interleaved in element order.
+//!
+//! INT2 and INT8 variants exist for the Fig. 6 / Fig. 12 ablations.
+
+/// Quantization width for the mirror K cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantBits {
+    Int2,
+    Int4,
+    Int8,
+    /// No quantization: fp16 storage (baseline precision).
+    Fp16,
+}
+
+impl QuantBits {
+    pub fn bits(self) -> usize {
+        match self {
+            QuantBits::Int2 => 2,
+            QuantBits::Int4 => 4,
+            QuantBits::Int8 => 8,
+            QuantBits::Fp16 => 16,
+        }
+    }
+
+    /// Bytes needed to store `n` elements at this width.
+    pub fn bytes_for(self, n: usize) -> usize {
+        (n * self.bits()).div_ceil(8)
+    }
+
+    pub fn levels(self) -> usize {
+        1usize << self.bits().min(16)
+    }
+
+    pub fn parse(s: &str) -> Option<QuantBits> {
+        match s {
+            "int2" | "2" => Some(QuantBits::Int2),
+            "int4" | "4" => Some(QuantBits::Int4),
+            "int8" | "8" => Some(QuantBits::Int8),
+            "fp16" | "16" => Some(QuantBits::Fp16),
+            _ => None,
+        }
+    }
+}
+
+/// A quantized block: packed codes plus the (scale, zero) pair.
+/// `dequant(x) = (code - zero_point) * scale` with codes unsigned.
+#[derive(Clone, Debug)]
+pub struct QuantBlock {
+    pub bits: QuantBits,
+    pub n: usize,
+    pub packed: Vec<u8>,
+    pub scale: f32,
+    pub zero: f32,
+}
+
+/// Quantize `xs` asymmetrically at `bits`; `Fp16` stores raw half bits.
+pub fn quantize(xs: &[f32], bits: QuantBits) -> QuantBlock {
+    if bits == QuantBits::Fp16 {
+        let mut packed = Vec::with_capacity(xs.len() * 2);
+        for &x in xs {
+            packed.extend_from_slice(&super::fp16::f32_to_f16(x).to_le_bytes());
+        }
+        return QuantBlock { bits, n: xs.len(), packed, scale: 1.0, zero: 0.0 };
+    }
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    let levels = (bits.levels() - 1) as f32;
+    let scale = if hi > lo { (hi - lo) / levels } else { 1.0 };
+    let zero = lo; // dequant(code) = zero + code*scale
+    let inv = 1.0 / scale;
+    let nbits = bits.bits();
+    let mut packed = vec![0u8; bits.bytes_for(xs.len())];
+    for (i, &x) in xs.iter().enumerate() {
+        let code = (((x - zero) * inv).round().clamp(0.0, levels)) as u32;
+        let bitpos = i * nbits;
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        packed[byte] |= (code as u8) << off;
+        // INT4/INT2 never straddle a byte; INT8 fills the byte exactly.
+    }
+    QuantBlock { bits, n: xs.len(), packed, scale, zero }
+}
+
+/// Dequantize into `out` (len == n).
+pub fn dequantize_into(b: &QuantBlock, out: &mut [f32]) {
+    assert_eq!(out.len(), b.n);
+    match b.bits {
+        QuantBits::Fp16 => {
+            for (i, o) in out.iter_mut().enumerate() {
+                let h = u16::from_le_bytes([b.packed[2 * i], b.packed[2 * i + 1]]);
+                *o = super::fp16::f16_to_f32(h);
+            }
+        }
+        QuantBits::Int8 => {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = b.zero + b.packed[i] as f32 * b.scale;
+            }
+        }
+        QuantBits::Int4 => {
+            // Two codes per byte; build per-block LUT-free unpack.
+            for (i, o) in out.iter_mut().enumerate() {
+                let byte = b.packed[i / 2];
+                let code = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                *o = b.zero + code as f32 * b.scale;
+            }
+        }
+        QuantBits::Int2 => {
+            for (i, o) in out.iter_mut().enumerate() {
+                let byte = b.packed[i / 4];
+                let code = (byte >> ((i % 4) * 2)) & 0x03;
+                *o = b.zero + code as f32 * b.scale;
+            }
+        }
+    }
+}
+
+/// Fused dequant-and-dot: `sum_i q[i] * dequant(K)[i]` without
+/// materializing the dequantized vector. This is the SpGEMV inner loop
+/// (paper Appendix B.1) — the hot path of the Twilight pruner.
+///
+/// Identity used: `dot(q, zero + code*scale) = zero*sum(q) + scale*dot(q, code)`,
+/// so the loop only multiplies integer codes, then applies scale/zero once.
+#[inline]
+pub fn dot_quantized(q: &[f32], b: &QuantBlock) -> f32 {
+    debug_assert_eq!(q.len(), b.n);
+    match b.bits {
+        QuantBits::Fp16 => {
+            let mut acc = 0.0f32;
+            for (i, &qi) in q.iter().enumerate() {
+                let h = u16::from_le_bytes([b.packed[2 * i], b.packed[2 * i + 1]]);
+                acc += qi * super::fp16::f16_to_f32(h);
+            }
+            acc
+        }
+        QuantBits::Int8 => {
+            let mut code_dot = 0.0f32;
+            let mut qsum = 0.0f32;
+            for (&qi, &c) in q.iter().zip(b.packed.iter()) {
+                code_dot += qi * c as f32;
+                qsum += qi;
+            }
+            b.zero * qsum + b.scale * code_dot
+        }
+        QuantBits::Int4 => {
+            let mut code_dot = 0.0f32;
+            let mut qsum = 0.0f32;
+            let pairs = b.n / 2;
+            for p in 0..pairs {
+                let byte = b.packed[p];
+                let q0 = q[2 * p];
+                let q1 = q[2 * p + 1];
+                code_dot += q0 * (byte & 0x0F) as f32 + q1 * (byte >> 4) as f32;
+                qsum += q0 + q1;
+            }
+            if b.n % 2 == 1 {
+                let i = b.n - 1;
+                let code = b.packed[i / 2] & 0x0F;
+                code_dot += q[i] * code as f32;
+                qsum += q[i];
+            }
+            b.zero * qsum + b.scale * code_dot
+        }
+        QuantBits::Int2 => {
+            let mut code_dot = 0.0f32;
+            let mut qsum = 0.0f32;
+            for (i, &qi) in q.iter().enumerate() {
+                let code = (b.packed[i / 4] >> ((i % 4) * 2)) & 0x03;
+                code_dot += qi * code as f32;
+                qsum += qi;
+            }
+            b.zero * qsum + b.scale * code_dot
+        }
+    }
+}
+
+/// Worst-case absolute dequantization error for a block: half a step.
+pub fn max_error(b: &QuantBlock) -> f32 {
+    match b.bits {
+        QuantBits::Fp16 => 1e-3, // relative ~2^-11; coarse bound for tests
+        _ => b.scale * 0.5,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip_err(bits: QuantBits, xs: &[f32]) -> f32 {
+        let b = quantize(xs, bits);
+        let mut out = vec![0.0; xs.len()];
+        dequantize_into(&b, &mut out);
+        xs.iter().zip(&out).map(|(a, c)| (a - c).abs()).fold(0.0f32, f32::max)
+    }
+
+    #[test]
+    fn int8_roundtrip_tight() {
+        let mut r = Rng::new(1);
+        let xs: Vec<f32> = (0..128).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let b = quantize(&xs, QuantBits::Int8);
+        assert!(roundtrip_err(QuantBits::Int8, &xs) <= max_error(&b) + 1e-6);
+    }
+
+    #[test]
+    fn int4_roundtrip_within_step() {
+        let mut r = Rng::new(2);
+        let xs: Vec<f32> = (0..128).map(|_| r.normal_f32(0.0, 2.0)).collect();
+        let b = quantize(&xs, QuantBits::Int4);
+        assert!(roundtrip_err(QuantBits::Int4, &xs) <= max_error(&b) + 1e-6);
+    }
+
+    #[test]
+    fn int2_is_coarse_but_bounded() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f32> = (0..64).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let b = quantize(&xs, QuantBits::Int2);
+        assert!(roundtrip_err(QuantBits::Int2, &xs) <= max_error(&b) + 1e-6);
+        // And strictly worse than int4 on the same data (sanity of ablation).
+        assert!(roundtrip_err(QuantBits::Int2, &xs) > roundtrip_err(QuantBits::Int4, &xs));
+    }
+
+    #[test]
+    fn fp16_roundtrip() {
+        let xs = vec![0.5, -1.25, 3.75, 0.0];
+        assert!(roundtrip_err(QuantBits::Fp16, &xs) < 1e-3);
+    }
+
+    #[test]
+    fn extremes_are_exact() {
+        // Asymmetric quant maps min -> code 0 and max -> top code exactly.
+        let xs = vec![-3.0, 0.1, 0.2, 5.0];
+        for bits in [QuantBits::Int2, QuantBits::Int4, QuantBits::Int8] {
+            let b = quantize(&xs, bits);
+            let mut out = vec![0.0; 4];
+            dequantize_into(&b, &mut out);
+            assert!((out[0] + 3.0).abs() < 1e-5, "{bits:?} {out:?}");
+            assert!((out[3] - 5.0).abs() < 1e-4, "{bits:?} {out:?}");
+        }
+    }
+
+    #[test]
+    fn dot_quantized_matches_dequant_dot() {
+        let mut r = Rng::new(7);
+        for bits in [QuantBits::Int2, QuantBits::Int4, QuantBits::Int8, QuantBits::Fp16] {
+            for n in [1usize, 2, 7, 64, 128, 129] {
+                let xs: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 1.0)).collect();
+                let q: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 1.0)).collect();
+                let b = quantize(&xs, bits);
+                let mut deq = vec![0.0; n];
+                dequantize_into(&b, &mut deq);
+                let want: f32 = q.iter().zip(&deq).map(|(a, c)| a * c).sum();
+                let got = dot_quantized(&q, &b);
+                assert!(
+                    (want - got).abs() < 1e-3 * n as f32,
+                    "bits={bits:?} n={n} want={want} got={got}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn constant_input() {
+        let xs = vec![2.5; 32];
+        for bits in [QuantBits::Int2, QuantBits::Int4, QuantBits::Int8] {
+            let b = quantize(&xs, bits);
+            let mut out = vec![0.0; 32];
+            dequantize_into(&b, &mut out);
+            for o in out {
+                assert!((o - 2.5).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_for_widths() {
+        assert_eq!(QuantBits::Int4.bytes_for(128), 64);
+        assert_eq!(QuantBits::Int2.bytes_for(128), 32);
+        assert_eq!(QuantBits::Int8.bytes_for(128), 128);
+        assert_eq!(QuantBits::Fp16.bytes_for(128), 256);
+        assert_eq!(QuantBits::Int4.bytes_for(3), 2);
+    }
+}

@@ -1,0 +1,129 @@
+//! Tiny command-line argument parser (clap is not in the offline crate
+//! set). Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments, with typed accessors and defaulting.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: named options plus positionals, in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(body.to_string());
+                    } else {
+                        let v = it.next().unwrap();
+                        out.opts.insert(body.to_string(), v);
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(flag_names: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list of usize, e.g. `--lens 1024,4096,16384`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            Some(s) => s.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// Comma-separated list of f64.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            Some(s) => s.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--x", "3", "--y=4", "pos1"], &[]);
+        assert_eq!(a.usize_or("x", 0), 3);
+        assert_eq!(a.usize_or("y", 0), 4);
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn flags_and_defaults() {
+        let a = parse(&["--verbose", "--n", "2"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.usize_or("n", 0), 2);
+        assert_eq!(a.f64_or("p", 0.95), 0.95);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--a", "--b"], &[]);
+        assert!(a.flag("a"));
+        assert!(a.flag("b"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--lens", "1,2,3", "--ps", "0.8, 0.9"], &[]);
+        assert_eq!(a.usize_list_or("lens", &[]), vec![1, 2, 3]);
+        assert_eq!(a.f64_list_or("ps", &[]), vec![0.8, 0.9]);
+        assert_eq!(a.usize_list_or("missing", &[7]), vec![7]);
+    }
+}

@@ -1,0 +1,45 @@
+//! Owned substrate: utilities the offline crate-set requires us to build
+//! ourselves (no serde / clap / rand / criterion / proptest available).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Round `n` up to the next multiple of `m` (`m > 0`).
+#[inline]
+pub fn round_up(n: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(n: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    n.div_ceil(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 16), 0);
+        assert_eq!(round_up(1, 16), 16);
+        assert_eq!(round_up(16, 16), 16);
+        assert_eq!(round_up(17, 16), 32);
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+}

@@ -1,0 +1,82 @@
+//! Mini property-based testing harness (proptest is not in the offline
+//! crate set). A property is a closure over a seeded [`Rng`]; the runner
+//! executes many cases and, on panic or returned failure, reports the
+//! case seed so the exact input can be replayed with
+//! `TWILIGHT_PROP_SEED=<seed> cargo test <name>`.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, base_seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` for `cfg.cases` seeded cases. The property returns
+/// `Err(message)` (or panics) to signal failure.
+pub fn check<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, cfg: Config, prop: F) {
+    // Replay hook: run exactly one seed if requested.
+    if let Ok(s) = std::env::var("TWILIGHT_PROP_SEED") {
+        if let Ok(seed) = s.parse::<u64>() {
+            let mut rng = Rng::new(seed);
+            if let Err(e) = prop(&mut rng) {
+                panic!("property '{name}' failed on replay seed {seed}: {e}");
+            }
+            return;
+        }
+    }
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(e) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay with TWILIGHT_PROP_SEED={seed}): {e}"
+            );
+        }
+    }
+}
+
+/// Run with the default config.
+pub fn check_default<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, prop: F) {
+    check(name, Config::default(), prop)
+}
+
+/// Assert helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check_default("reflexive", |rng| {
+            let x = rng.below(100);
+            if x == x {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failure_with_seed() {
+        check("always-fails", Config { cases: 2, base_seed: 1 }, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,209 @@
+//! Summary statistics, histograms, and the micro-bench harness used by the
+//! `benches/` binaries (criterion is not in the offline crate set, so the
+//! timing loop lives here: warmup, fixed-time measurement, robust summary).
+
+use std::time::{Duration, Instant};
+
+/// Summary of a sample of f64 observations.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: v[0],
+            p50: percentile_sorted(&v, 50.0),
+            p90: percentile_sorted(&v, 90.0),
+            p99: percentile_sorted(&v, 99.0),
+            max: v[n - 1],
+        }
+    }
+}
+
+/// Percentile (0..=100) of a pre-sorted slice, linear interpolation.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi.min(sorted.len() - 1)] * frac
+}
+
+/// Percentile of an unsorted slice.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Fixed-bucket histogram over `[lo, hi)`; used for budget distributions.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub buckets: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbuckets: usize) -> Histogram {
+        assert!(hi > lo && nbuckets > 0);
+        Histogram { lo, hi, buckets: vec![0; nbuckets], underflow: 0, overflow: 0, count: 0, sum: 0.0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let nb = self.buckets.len();
+            let w = (self.hi - self.lo) / nb as f64;
+            let idx = (((x - self.lo) / w) as usize).min(nb - 1);
+            self.buckets[idx] += 1;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Render a compact ASCII sparkline of bucket mass.
+    pub fn sparkline(&self) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.buckets.iter().copied().max().unwrap_or(0).max(1);
+        self.buckets
+            .iter()
+            .map(|&b| BARS[(b as usize * (BARS.len() - 1)) / max as usize])
+            .collect()
+    }
+}
+
+/// One benchmark measurement: wall-clock per iteration, in seconds.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub secs: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.secs.mean * 1e6
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.secs.mean * 1e3
+    }
+}
+
+/// The bench harness: warm up for `warmup`, then time individual
+/// invocations of `f` until `measure` elapses (at least `min_iters`).
+pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, min_iters: usize, mut f: F) -> BenchResult {
+    let start = Instant::now();
+    while start.elapsed() < warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < measure || samples.len() < min_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), iters: samples.len(), secs: Summary::from(&samples) }
+}
+
+/// Quick bench with default timing (0.2s warmup, 1s measure).
+pub fn bench_quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, Duration::from_millis(200), Duration::from_secs(1), 5, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let v = [0.0, 10.0];
+        assert!((percentile(&v, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&v, 0.0), 0.0);
+        assert_eq!(percentile(&v, 100.0), 10.0);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        h.add(-1.0);
+        h.add(99.0);
+        assert_eq!(h.count, 12);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert!(h.buckets.iter().all(|&b| b == 1));
+        assert_eq!(h.sparkline().chars().count(), 10);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let r = bench("noop", Duration::from_millis(1), Duration::from_millis(10), 3, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.secs.mean >= 0.0);
+    }
+}

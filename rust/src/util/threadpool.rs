@@ -1,0 +1,78 @@
+//! Scoped worker pool for head-varlen attention load balancing.
+//!
+//! FlashInfer balances head-wise dynamic budgets by flattening the
+//! (sequence, head) dimension into a single work list; we do the same with
+//! a chunked atomic work queue drained by a fixed set of worker threads.
+//! On this single-core testbed the pool is usually size 1 (the queue then
+//! degenerates to a loop with no overhead beyond one atomic per chunk),
+//! but the structure is what a multi-core deployment would use.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Execute `work(i)` for every `i in 0..n` across `threads` workers,
+/// dynamically load-balanced in chunks of `chunk` items.
+pub fn parallel_for<F: Fn(usize) + Sync>(threads: usize, n: usize, chunk: usize, work: F) {
+    let threads = threads.max(1);
+    let chunk = chunk.max(1);
+    if threads == 1 || n <= chunk {
+        for i in 0..n {
+            work(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    work(i);
+                }
+            });
+        }
+    });
+}
+
+/// Number of workers to use by default: respects `TWILIGHT_THREADS`,
+/// falling back to available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("TWILIGHT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices_single_thread() {
+        let sum = AtomicU64::new(0);
+        parallel_for(1, 100, 8, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn covers_all_indices_multi_thread() {
+        let hits = (0..1000).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        parallel_for(4, 1000, 7, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_items_is_noop() {
+        parallel_for(4, 0, 16, |_| panic!("should not run"));
+    }
+}

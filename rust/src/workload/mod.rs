@@ -1,0 +1,338 @@
+//! Workload generation: the synthetic task suite that substitutes for
+//! LongBench / RULER / GSM8K / PG-19 (DESIGN.md §3), plus arrival-process
+//! generation for the serving benches.
+//!
+//! Tasks target the **retrieval model** (`model/retrieval.rs`): the
+//! context is a stream of composite *(key, value) pair tokens*; the final
+//! token is a query that either asks for the value bound to a key
+//! (*NIAH* — requires focused attention on one position) or for the most
+//! frequent value (*FWE* — requires diffuse attention over the whole
+//! context). Both have exact ground truth at any context length, and the
+//! single-token-per-pair encoding keeps the constructed model at one
+//! attention layer so prefill is O(n).
+
+use crate::util::rng::Rng;
+
+/// A generated request: prompt tokens, query kind, ground truth.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub prompt: Vec<u32>,
+    pub task: TaskKind,
+    /// Expected answer token id (an answer-region token) for scoring.
+    pub answer: u32,
+    /// Arrival time offset in seconds (0 for batch workloads).
+    pub arrival: f64,
+    /// Number of output tokens to decode (serving workloads; accuracy
+    /// suites use 1).
+    pub max_new_tokens: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Needle-in-a-haystack: retrieve the value bound to a unique key.
+    Niah,
+    /// Multi-needle: the key is bound several times to the same value.
+    MultiNiah,
+    /// Frequent-word extraction: output the most frequent value token.
+    Fwe,
+}
+
+impl TaskKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskKind::Niah => "niah",
+            TaskKind::MultiNiah => "multi-niah",
+            TaskKind::Fwe => "fwe",
+        }
+    }
+}
+
+/// Token-id layout shared with `model/retrieval.rs` and
+/// `python/compile/retrieval_model.py`:
+///
+/// ```text
+/// [0, nk*nv)                         pair tokens: pair(k,v) = k*nv + v
+/// [nk*nv, nk*nv+nk)                  NIAH query tokens (one per key)
+/// nk*nv + nk                         FWE query token
+/// (nk*nv+nk, nk*nv+nk+nv]            answer tokens (one per value)
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct RetrievalVocab {
+    pub n_keys: u32,
+    pub n_vals: u32,
+}
+
+impl RetrievalVocab {
+    pub const DEFAULT: RetrievalVocab = RetrievalVocab { n_keys: 16, n_vals: 16 };
+
+    pub fn pair(&self, k: u32, v: u32) -> u32 {
+        debug_assert!(k < self.n_keys && v < self.n_vals);
+        k * self.n_vals + v
+    }
+
+    pub fn query_niah(&self, k: u32) -> u32 {
+        self.n_keys * self.n_vals + k
+    }
+
+    pub fn query_fwe(&self) -> u32 {
+        self.n_keys * self.n_vals + self.n_keys
+    }
+
+    pub fn answer(&self, v: u32) -> u32 {
+        self.n_keys * self.n_vals + self.n_keys + 1 + v
+    }
+
+    pub fn vocab_size(&self) -> u32 {
+        self.n_keys * self.n_vals + self.n_keys + 1 + self.n_vals
+    }
+
+    pub fn is_pair(&self, tok: u32) -> bool {
+        tok < self.n_keys * self.n_vals
+    }
+
+    pub fn pair_key(&self, tok: u32) -> u32 {
+        debug_assert!(self.is_pair(tok));
+        tok / self.n_vals
+    }
+
+    pub fn pair_val(&self, tok: u32) -> u32 {
+        debug_assert!(self.is_pair(tok));
+        tok % self.n_vals
+    }
+
+    /// Answer-region value id of a token, if it is an answer token.
+    pub fn answer_val(&self, tok: u32) -> Option<u32> {
+        let base = self.n_keys * self.n_vals + self.n_keys + 1;
+        if tok >= base && tok < base + self.n_vals {
+            Some(tok - base)
+        } else {
+            None
+        }
+    }
+}
+
+/// Generate a NIAH request: `ctx_len` pair tokens with a unique needle
+/// key bound once, query token at the end.
+pub fn gen_niah(rng: &mut Rng, vocab: RetrievalVocab, ctx_len: usize) -> GenRequest {
+    assert!(ctx_len >= 2);
+    let needle_key = rng.below(vocab.n_keys as usize) as u32;
+    let needle_val = rng.below(vocab.n_vals as usize) as u32;
+    let needle_pos = rng.below(ctx_len);
+    let mut prompt = Vec::with_capacity(ctx_len + 1);
+    for p in 0..ctx_len {
+        if p == needle_pos {
+            prompt.push(vocab.pair(needle_key, needle_val));
+        } else {
+            let mut k = rng.below(vocab.n_keys as usize) as u32;
+            while k == needle_key {
+                k = rng.below(vocab.n_keys as usize) as u32;
+            }
+            prompt.push(vocab.pair(k, rng.below(vocab.n_vals as usize) as u32));
+        }
+    }
+    prompt.push(vocab.query_niah(needle_key));
+    GenRequest {
+        prompt,
+        task: TaskKind::Niah,
+        answer: vocab.answer(needle_val),
+        arrival: 0.0,
+        max_new_tokens: 1,
+    }
+}
+
+/// Multi-needle: the queried key is bound `bindings` times, all to the
+/// same value (RULER multi-key flavor: selection must find *some*
+/// binding).
+pub fn gen_multi_niah(
+    rng: &mut Rng,
+    vocab: RetrievalVocab,
+    ctx_len: usize,
+    bindings: usize,
+) -> GenRequest {
+    assert!(ctx_len > bindings + 1);
+    let needle_key = rng.below(vocab.n_keys as usize) as u32;
+    let needle_val = rng.below(vocab.n_vals as usize) as u32;
+    let mut positions = rng.sample_indices(ctx_len, bindings);
+    positions.sort_unstable();
+    let mut prompt = Vec::with_capacity(ctx_len + 1);
+    let mut bind_i = 0;
+    for p in 0..ctx_len {
+        if bind_i < bindings && p == positions[bind_i] {
+            prompt.push(vocab.pair(needle_key, needle_val));
+            bind_i += 1;
+        } else {
+            let mut k = rng.below(vocab.n_keys as usize) as u32;
+            while k == needle_key {
+                k = rng.below(vocab.n_keys as usize) as u32;
+            }
+            prompt.push(vocab.pair(k, rng.below(vocab.n_vals as usize) as u32));
+        }
+    }
+    prompt.push(vocab.query_niah(needle_key));
+    GenRequest {
+        prompt,
+        task: TaskKind::MultiNiah,
+        answer: vocab.answer(needle_val),
+        arrival: 0.0,
+        max_new_tokens: 1,
+    }
+}
+
+/// FWE: one value id appears `boost`× more often than baseline; the query
+/// asks for the most frequent value. Needs *diffuse* attention: a sparse
+/// method that truncates most of the context mis-estimates frequencies.
+pub fn gen_fwe(rng: &mut Rng, vocab: RetrievalVocab, ctx_len: usize, boost: f64) -> GenRequest {
+    let hot_val = rng.below(vocab.n_vals as usize) as u32;
+    let mut counts = vec![0usize; vocab.n_vals as usize];
+    let mut prompt = Vec::with_capacity(ctx_len + 1);
+    for _ in 0..ctx_len {
+        let k = rng.below(vocab.n_keys as usize) as u32;
+        let v = if rng.chance(boost / (boost + vocab.n_vals as f64)) {
+            hot_val
+        } else {
+            rng.below(vocab.n_vals as usize) as u32
+        };
+        counts[v as usize] += 1;
+        prompt.push(vocab.pair(k, v));
+    }
+    let argmax = counts
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &c)| c)
+        .map(|(i, _)| i as u32)
+        .unwrap();
+    prompt.push(vocab.query_fwe());
+    GenRequest {
+        prompt,
+        task: TaskKind::Fwe,
+        answer: vocab.answer(argmax),
+        arrival: 0.0,
+        max_new_tokens: 1,
+    }
+}
+
+/// A batch workload mixing the three tasks (the LongBench/RULER analog
+/// suite).
+pub fn gen_suite(
+    seed: u64,
+    vocab: RetrievalVocab,
+    ctx_len: usize,
+    n_per_task: usize,
+) -> Vec<GenRequest> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for _ in 0..n_per_task {
+        out.push(gen_niah(&mut rng, vocab, ctx_len));
+        out.push(gen_multi_niah(&mut rng, vocab, ctx_len, 4));
+        out.push(gen_fwe(&mut rng, vocab, ctx_len, 8.0));
+    }
+    out
+}
+
+/// Attach Poisson arrivals at `rate` req/s to a batch of requests.
+pub fn poissonize(reqs: &mut [GenRequest], seed: u64, rate: f64) {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    for r in reqs.iter_mut() {
+        t += rng.exp(rate);
+        r.arrival = t;
+    }
+}
+
+/// Load a token corpus written by `python/compile/corpus.py`
+/// (`artifacts/corpus_eval.bin`: raw u8 token ids) for perplexity evals.
+pub fn load_corpus(path: &str) -> std::io::Result<Vec<u32>> {
+    let bytes = std::fs::read(path)?;
+    Ok(bytes.into_iter().map(|b| b as u32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const V: RetrievalVocab = RetrievalVocab::DEFAULT;
+
+    #[test]
+    fn vocab_layout_disjoint() {
+        assert_eq!(V.vocab_size(), 16 * 16 + 16 + 1 + 16);
+        assert!(V.is_pair(V.pair(15, 15)));
+        assert!(!V.is_pair(V.query_niah(0)));
+        assert_eq!(V.answer_val(V.answer(7)), Some(7));
+        assert_eq!(V.answer_val(V.query_fwe()), None);
+        assert_eq!(V.pair_key(V.pair(3, 9)), 3);
+        assert_eq!(V.pair_val(V.pair(3, 9)), 9);
+    }
+
+    #[test]
+    fn niah_structure() {
+        let mut r = Rng::new(1);
+        let g = gen_niah(&mut r, V, 256);
+        assert_eq!(g.prompt.len(), 257);
+        let qtok = g.prompt[256];
+        let qkey = qtok - V.n_keys * V.n_vals;
+        // The needle key appears exactly once among pair tokens.
+        let mut found = None;
+        for p in 0..256 {
+            let tok = g.prompt[p];
+            assert!(V.is_pair(tok));
+            if V.pair_key(tok) == qkey {
+                assert!(found.is_none(), "needle key bound twice");
+                found = Some(V.pair_val(tok));
+            }
+        }
+        assert_eq!(V.answer(found.unwrap()), g.answer);
+    }
+
+    #[test]
+    fn multi_niah_consistent_value() {
+        let mut r = Rng::new(2);
+        let g = gen_multi_niah(&mut r, V, 512, 4);
+        let qkey = g.prompt[512] - V.n_keys * V.n_vals;
+        let mut bindings = 0;
+        for p in 0..512 {
+            if V.pair_key(g.prompt[p]) == qkey {
+                assert_eq!(V.answer(V.pair_val(g.prompt[p])), g.answer);
+                bindings += 1;
+            }
+        }
+        assert_eq!(bindings, 4);
+    }
+
+    #[test]
+    fn fwe_answer_is_mode() {
+        let mut r = Rng::new(3);
+        let g = gen_fwe(&mut r, V, 2048, 8.0);
+        let mut counts = vec![0usize; V.n_vals as usize];
+        for p in 0..2048 {
+            counts[V.pair_val(g.prompt[p]) as usize] += 1;
+        }
+        let mode = counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0 as u32;
+        assert_eq!(g.answer, V.answer(mode));
+        let sorted = {
+            let mut c = counts.clone();
+            c.sort_unstable_by(|a, b| b.cmp(a));
+            c
+        };
+        assert!(sorted[0] > sorted[1] * 2, "{sorted:?}");
+    }
+
+    #[test]
+    fn suite_and_arrivals() {
+        let mut reqs = gen_suite(7, V, 128, 3);
+        assert_eq!(reqs.len(), 9);
+        poissonize(&mut reqs, 8, 100.0);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival > w[0].arrival);
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = gen_suite(42, V, 64, 2);
+        let b = gen_suite(42, V, 64, 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+}

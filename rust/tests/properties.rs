@@ -1,0 +1,248 @@
+//! Property-based tests (via the in-crate `util::prop` harness) on the
+//! coordinator's core invariants: quantization error bounds, top-p mass,
+//! page-allocator safety, selector contracts, scheduler conservation,
+//! and JSON round-tripping.
+
+use twilight::coordinator::engine::Engine;
+use twilight::coordinator::request::Request;
+use twilight::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use twilight::coordinator::{BudgetSpec, SparseConfig};
+use twilight::kvcache::{CacheConfig, PagedKvCache, SeqCache};
+use twilight::model::retrieval::build_retrieval_model;
+use twilight::pruner::topp::{topp_binary_search, topp_sort};
+use twilight::selector::SelectorKind;
+use twilight::tensor::quant::{self, QuantBits};
+use twilight::tensor::softmax_inplace;
+use twilight::util::json::Json;
+use twilight::util::prop::{check, check_default, Config};
+use twilight::util::rng::Rng;
+use twilight::workload::{gen_niah, RetrievalVocab};
+
+#[test]
+fn prop_quant_roundtrip_bounded_all_widths() {
+    check_default("quant-roundtrip", |rng| {
+        let n = rng.range(1, 200);
+        let std = 0.1 + rng.f32() * 5.0;
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, std)).collect();
+        for bits in [QuantBits::Int2, QuantBits::Int4, QuantBits::Int8] {
+            let b = quant::quantize(&xs, bits);
+            let mut out = vec![0.0; n];
+            quant::dequantize_into(&b, &mut out);
+            let bound = quant::max_error(&b) + 1e-5;
+            for (a, c) in xs.iter().zip(&out) {
+                if (a - c).abs() > bound {
+                    return Err(format!("{bits:?}: |{a} - {c}| > {bound}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topp_mass_invariant() {
+    check_default("topp-mass", |rng| {
+        let n = rng.range(2, 2000);
+        let sharp = 0.2 + rng.f32() * 8.0;
+        let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, sharp)).collect();
+        softmax_inplace(&mut w);
+        let p = 0.3 + rng.f32() * 0.69;
+        let r = topp_binary_search(&w, p, 1e-6);
+        if r.mass < p - 1e-3 {
+            return Err(format!("mass {} < p {p}", r.mass));
+        }
+        // Never larger than the oracle by more than threshold ties.
+        let o = topp_sort(&w, p);
+        if r.indices.len() + 0 < o.indices.len().saturating_sub(1) {
+            return Err("binary search kept fewer than the minimal set".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allocator_never_double_allocates() {
+    check_default("allocator", |rng| {
+        let pages = rng.range(2, 20);
+        let mut cache = PagedKvCache::new(CacheConfig::new(1, 4, pages));
+        let mut seqs: Vec<SeqCache> = Vec::new();
+        for _ in 0..rng.range(10, 60) {
+            if seqs.is_empty() || rng.chance(0.6) {
+                //
+
+                let mut s = SeqCache::default();
+                let toks = rng.range(1, 24);
+                let mut ok = true;
+                for _ in 0..toks {
+                    if cache.append(&mut s, &[1.0; 4], &[1.0; 4]).is_err() {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok || !s.pages.is_empty() {
+                    seqs.push(s);
+                } else {
+                    cache.release(&s);
+                }
+            } else {
+                let i = rng.below(seqs.len());
+                let s = seqs.swap_remove(i);
+                cache.release(&s);
+            }
+            // Invariant: no page owned by two live sequences (refcount 1
+            // without sharing), and used+free == total.
+            let mut owned = std::collections::HashSet::new();
+            for s in &seqs {
+                for &p in &s.pages {
+                    if !owned.insert(p) {
+                        return Err(format!("page {p} owned twice"));
+                    }
+                }
+            }
+            if cache.used_pages() + cache.free_pages() != pages {
+                return Err("page accounting broken".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_selectors_return_sorted_valid_indices() {
+    check(
+        "selector-contract",
+        Config { cases: 24, ..Default::default() },
+        |rng| {
+            let n = rng.range(20, 300);
+            let d = 16;
+            let mut cache = PagedKvCache::new(CacheConfig::new(1, d, n / 16 + 2));
+            let mut seq = SeqCache::default();
+            for _ in 0..n {
+                let k: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                cache.append(&mut seq, &k, &k).unwrap();
+            }
+            let q: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let budget = rng.range(1, n + 10);
+            for kind in [
+                SelectorKind::Full,
+                SelectorKind::Quest,
+                SelectorKind::DoubleSparsity,
+                SelectorKind::MagicPig,
+                SelectorKind::StreamingLlm,
+                SelectorKind::SnapKv,
+                SelectorKind::H2O,
+                SelectorKind::Oracle,
+            ] {
+                let mut sel = kind.build(d, 1);
+                let got = sel.select(&cache, &seq, 0, &q, 1, budget);
+                if got.windows(2).any(|w| w[0] >= w[1]) {
+                    return Err(format!("{kind:?}: unsorted/duplicated output"));
+                }
+                if got.iter().any(|&t| t >= n) {
+                    return Err(format!("{kind:?}: out-of-range token"));
+                }
+                if got.is_empty() {
+                    return Err(format!("{kind:?}: empty selection"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_conserves_requests_and_pages() {
+    check(
+        "scheduler-conservation",
+        Config { cases: 8, ..Default::default() },
+        |rng| {
+            let v = RetrievalVocab::DEFAULT;
+            let model = std::sync::Arc::new(build_retrieval_model(v, 4096));
+            let capacity = rng.range(400, 2000);
+            let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+            cfg.skip_layers = 0;
+            let engine = Engine::new(model, cfg, capacity);
+            let total_pages = engine.free_pages();
+            let mut sched = Scheduler::new(
+                engine,
+                SchedulerConfig {
+                    max_batch: rng.range(1, 6),
+                    admit_headroom_pages: 0,
+                    max_prefills_per_step: 2,
+                },
+            );
+            let nreq = rng.range(2, 8);
+            for i in 0..nreq {
+                let ctx = rng.range(32, 180);
+                let g = gen_niah(rng, v, ctx);
+                sched.submit(Request::new(i as u64, g.prompt, rng.range(1, 5)));
+            }
+            let report = sched.run_to_completion();
+            if report.requests.len() != nreq {
+                return Err(format!("{} of {nreq} finished", report.requests.len()));
+            }
+            if sched.engine.num_seqs() != 0 {
+                return Err("sequences leaked".into());
+            }
+            if sched.engine.free_pages() != total_pages {
+                return Err(format!(
+                    "pages leaked: {} != {total_pages}",
+                    sched.engine.free_pages()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => {
+                let n = rng.below(8);
+                Json::Str((0..n).map(|_| *rng.choose(&['a', 'é', '"', '\\', 'z', '\n'])).collect())
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check_default("json-roundtrip", |rng| {
+        let v = random_json(rng, 0);
+        let text = v.to_string();
+        let back = Json::parse(&text).map_err(|e| format!("{e} on {text}"))?;
+        if back != v {
+            return Err(format!("{back:?} != {v:?}"));
+        }
+        let pretty = Json::parse(&v.pretty()).map_err(|e| e.to_string())?;
+        if pretty != v {
+            return Err("pretty roundtrip failed".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_budget_spec_resolve_in_range() {
+    check_default("budget-spec", |rng| {
+        let ctx = rng.range(1, 100_000);
+        let frac = rng.f32();
+        let b = BudgetSpec::Fraction(frac).resolve(ctx);
+        if b < 1 || b > ctx {
+            return Err(format!("fraction resolve {b} out of [1, {ctx}]"));
+        }
+        let fixed = rng.range(0, 200_000);
+        let b = BudgetSpec::Fixed(fixed).resolve(ctx);
+        if b > ctx {
+            return Err("fixed resolve exceeded ctx".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,217 @@
+//! Cross-module integration: full serving stack over the retrieval and
+//! charlm models, the Table-2/3 accuracy shapes, the §4.3 cost-model
+//! cross-check, and the offload path.
+
+use std::sync::Arc;
+use twilight::coordinator::engine::Engine;
+use twilight::coordinator::request::Request;
+use twilight::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use twilight::coordinator::{AttnVariant, SparseConfig};
+use twilight::evalsuite::{run_accuracy, suite_requests};
+use twilight::model::retrieval::build_retrieval_model;
+use twilight::selector::SelectorKind;
+use twilight::util::rng::Rng;
+use twilight::workload::{gen_niah, poissonize, RetrievalVocab, TaskKind};
+
+const V: RetrievalVocab = RetrievalVocab::DEFAULT;
+
+fn model(ctx: usize) -> Arc<twilight::model::Model> {
+    Arc::new(build_retrieval_model(V, ctx))
+}
+
+/// Table 2/5 shape: each base algorithm + Twilight matches the best
+/// fixed-budget variant of that algorithm at a much smaller final budget.
+#[test]
+fn twilight_matches_best_fixed_budget_with_fraction_of_tokens() {
+    let ctx = 2048;
+    let m = model(ctx * 2);
+    let reqs = suite_requests(7, ctx, 4);
+    let cap = (ctx + 64) * 2;
+    for sel in [SelectorKind::Quest, SelectorKind::DoubleSparsity] {
+        let mut big = SparseConfig::baseline(sel, ctx / 2);
+        big.skip_layers = 0;
+        let big_r = run_accuracy(m.clone(), &big, &reqs, cap);
+        let mut twi = SparseConfig::twilight(sel, 0.95);
+        twi.skip_layers = 0;
+        let twi_r = run_accuracy(m.clone(), &twi, &reqs, cap);
+        assert!(
+            twi_r.overall() >= big_r.overall() - 0.1,
+            "{sel:?}: twilight {} vs best-fixed {}",
+            twi_r.overall(),
+            big_r.overall()
+        );
+        // On NIAH specifically the pruned budget must be a small fraction
+        // of the conservative candidate set (the "98% pruned" claim shape).
+        assert!(
+            twi_r.prune_ratio > 0.15,
+            "{sel:?}: prune ratio {}",
+            twi_r.prune_ratio
+        );
+    }
+}
+
+/// Table 3 shape: small fixed budgets break NIAH at long contexts while
+/// Twilight holds; token-dropping (StreamingLLM) collapses (Table 6).
+#[test]
+fn long_context_accuracy_ordering() {
+    let ctx = 8192;
+    let m = model(ctx * 2);
+    let reqs = suite_requests(13, ctx, 3);
+    let cap = (ctx + 64) * 2;
+    let mut tiny = SparseConfig::baseline(SelectorKind::Quest, 64);
+    tiny.skip_layers = 0;
+    let tiny_r = run_accuracy(m.clone(), &tiny, &reqs, cap);
+    let mut twi = SparseConfig::twilight(SelectorKind::Quest, 0.95);
+    twi.skip_layers = 0;
+    let twi_r = run_accuracy(m.clone(), &twi, &reqs, cap);
+    let mut drop = SparseConfig::baseline(SelectorKind::StreamingLlm, 512);
+    drop.skip_layers = 0;
+    let drop_r = run_accuracy(m.clone(), &drop, &reqs, cap);
+    assert!(twi_r.overall() > 0.85, "twilight {}", twi_r.overall());
+    // FWE starves under a tiny budget.
+    assert!(
+        tiny_r.task_accuracy(TaskKind::Fwe) < twi_r.task_accuracy(TaskKind::Fwe) + 1e-9,
+        "tiny fwe {} vs twi {}",
+        tiny_r.task_accuracy(TaskKind::Fwe),
+        twi_r.task_accuracy(TaskKind::Fwe)
+    );
+    // StreamingLLM drops the needle whenever it falls outside the window.
+    assert!(
+        drop_r.task_accuracy(TaskKind::Niah) < 0.6,
+        "streaming niah {}",
+        drop_r.task_accuracy(TaskKind::Niah)
+    );
+}
+
+/// The three kernel packings must agree numerically (Fig. 13 is about
+/// speed, not semantics).
+#[test]
+fn attn_variants_agree() {
+    let ctx = 1024;
+    let m = model(ctx * 2);
+    let mut rng = Rng::new(5);
+    let g = gen_niah(&mut rng, V, ctx);
+    let mut logits = Vec::new();
+    for variant in [AttnVariant::GroupVarlen, AttnVariant::HeadVarlen, AttnVariant::Padded] {
+        let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+        cfg.skip_layers = 0;
+        cfg.attn = variant;
+        let mut e = Engine::new(m.clone(), cfg, ctx + 64);
+        logits.push(e.prefill(0, &g.prompt).unwrap());
+    }
+    for v in 1..3 {
+        for (a, b) in logits[0].iter().zip(&logits[v]) {
+            assert!((a - b).abs() < 1e-4, "variant {v} disagrees");
+        }
+    }
+}
+
+/// §4.3 cost-model cross-check: measured stage shares follow the
+/// byte-level model (attend shrinks, prune appears, select fixed).
+#[test]
+fn cost_model_shape_holds() {
+    let ctx = 8192;
+    let m = model(ctx * 2);
+    let mut rng = Rng::new(9);
+    let g = gen_niah(&mut rng, V, ctx);
+    let run = |cfg: SparseConfig| {
+        let mut e = Engine::new(m.clone(), cfg, ctx + 64);
+        let _ = e.prefill(0, &g.prompt).unwrap();
+        e.reset_stats();
+        for _ in 0..8 {
+            let _ = e.decode(0, g.prompt[0]).unwrap();
+        }
+        e.stats.clone()
+    };
+    let mut base = SparseConfig::baseline(SelectorKind::Quest, ctx / 4);
+    base.skip_layers = 0;
+    let s_base = run(base);
+    let mut twi = SparseConfig::twilight(SelectorKind::Quest, 0.95);
+    twi.skip_layers = 0;
+    let s_twi = run(twi);
+    // Twilight's attention time must be far below the base's.
+    assert!(
+        s_twi.t_attend < s_base.t_attend * 0.85,
+        "attend {} vs {}",
+        s_twi.t_attend,
+        s_base.t_attend
+    );
+    // And the measured speedup direction matches the byte model.
+    let bytes_base = s_base.est_bytes_select + s_base.est_bytes_prune + s_base.est_bytes_attend;
+    let bytes_twi = s_twi.est_bytes_select + s_twi.est_bytes_prune + s_twi.est_bytes_attend;
+    assert!(bytes_twi < bytes_base, "byte model: {bytes_twi} !< {bytes_base}");
+}
+
+/// Offload path (Table 7 substrate): selected-token loading through the
+/// slow arena matches the in-memory result.
+#[test]
+fn offload_arena_matches_resident() {
+    use twilight::kvcache::offload::OffloadArena;
+    let d = 32;
+    let n = 512;
+    let mut rng = Rng::new(11);
+    let mut arena = OffloadArena::new(d, 4);
+    let mut k_all = Vec::new();
+    let mut v_all = Vec::new();
+    for _ in 0..n {
+        let k: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let v: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        arena.push(&k, &v);
+        k_all.extend(k);
+        v_all.extend(v);
+    }
+    let sel: Vec<usize> = vec![3, 77, 200, 511];
+    let mut k_out = vec![0.0; sel.len() * d];
+    let mut v_out = vec![0.0; sel.len() * d];
+    arena.load_tokens(&sel, &mut k_out, &mut v_out);
+    let q: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut out_arena = vec![0.0; d];
+    twilight::attention::full::contiguous_full(&q, &k_out, &v_out, &mut out_arena);
+    // Same computation from resident memory.
+    let mut k_res = Vec::new();
+    let mut v_res = Vec::new();
+    for &t in &sel {
+        k_res.extend_from_slice(&k_all[t * d..(t + 1) * d]);
+        v_res.extend_from_slice(&v_all[t * d..(t + 1) * d]);
+    }
+    let mut out_res = vec![0.0; d];
+    twilight::attention::full::contiguous_full(&q, &k_res, &v_res, &mut out_res);
+    assert_eq!(out_arena, out_res);
+}
+
+/// Serving under load with mixed context lengths and arrivals: everything
+/// completes, answers are right, no pages leak.
+#[test]
+fn mixed_length_poisson_serving() {
+    let m = model(1 << 14);
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+    cfg.skip_layers = 0;
+    let engine = Engine::new(m, cfg, 1 << 14);
+    let mut sched = Scheduler::new(
+        engine,
+        SchedulerConfig { max_batch: 4, ..Default::default() },
+    );
+    let mut rng = Rng::new(21);
+    let mut gens = Vec::new();
+    for i in 0..10u64 {
+        let ctx = [256usize, 512, 1024][rng.below(3)];
+        let g = gen_niah(&mut rng, V, ctx);
+        gens.push(g);
+        let _ = i;
+    }
+    poissonize(&mut gens, 22, 200.0);
+    for (i, g) in gens.iter().enumerate() {
+        let mut r = Request::new(i as u64, g.prompt.clone(), 1);
+        r.arrival = g.arrival;
+        sched.submit(r);
+    }
+    let report = sched.run_to_completion();
+    assert_eq!(report.requests.len(), 10);
+    let correct = sched
+        .finished_requests()
+        .iter()
+        .filter(|f| f.output.first() == Some(&gens[f.id as usize].answer))
+        .count();
+    assert!(correct >= 9, "{correct}/10");
+    assert_eq!(sched.engine.num_seqs(), 0);
+}
