@@ -3,9 +3,11 @@
 //! per-step pipeline of Fig. 5 — and keeps the Fig. 10 time breakdown.
 
 use super::{AttnVariant, SparseConfig};
+use crate::governor::signals::SignalHub;
+use crate::governor::BudgetDirective;
 use crate::kvcache::{CacheConfig, CacheError, PagedKvCache, SeqCache};
 use crate::model::{LayerBackend, Model};
-use crate::pruner::{prune_group, PruneOutcome, PrunerScratch};
+use crate::pruner::{prune_group, PruneOutcome, PrunerConfig, PrunerScratch};
 use crate::selector::{SelectorKind, TokenSelector};
 use crate::util::stats::Histogram;
 use std::collections::HashMap;
@@ -108,6 +110,10 @@ pub struct Engine {
     caches: Vec<PagedKvCache>,
     seqs: HashMap<SeqId, SeqState>,
     pub stats: EngineStats,
+    /// Governor telemetry: per-layer prune rings + recall-probe EMA.
+    pub signals: SignalHub,
+    /// Runtime override from the governor; neutral when ungoverned.
+    directive: BudgetDirective,
     scratch: PrunerScratch,
 }
 
@@ -119,14 +125,33 @@ impl Engine {
         let caches = (0..c.n_layers)
             .map(|_| PagedKvCache::new(CacheConfig::new(c.n_kv_heads, c.head_dim, pages)))
             .collect();
+        let n_layers = model.cfg.n_layers;
         Engine {
             model,
             cfg,
             caches,
             seqs: HashMap::new(),
             stats: EngineStats::default(),
+            signals: SignalHub::new(n_layers),
+            directive: BudgetDirective::NEUTRAL,
             scratch: PrunerScratch::default(),
         }
+    }
+
+    /// Install the governor's directive for subsequent decode steps.
+    /// Clamped defensively: the engine never trusts the caller's ranges.
+    pub fn apply_directive(&mut self, d: BudgetDirective) {
+        self.directive = d.clamped();
+    }
+
+    /// The directive currently in force (NEUTRAL when ungoverned).
+    pub fn directive(&self) -> BudgetDirective {
+        self.directive
+    }
+
+    /// Physical pages per layer pool.
+    pub fn total_pages(&self) -> usize {
+        self.caches.first().map(|c| c.cfg.num_pages).unwrap_or(0)
     }
 
     pub fn num_seqs(&self) -> usize {
@@ -213,6 +238,7 @@ impl Engine {
         let staged_before =
             self.stats.t_select + self.stats.t_prune + self.stats.t_attend + self.stats.t_dense;
         let t0 = Instant::now();
+        let directive = self.directive;
         let result = {
             let mut backend = StepBackend {
                 caches: &mut self.caches,
@@ -220,6 +246,8 @@ impl Engine {
                 cfg: &self.cfg,
                 model: &model,
                 stats: &mut self.stats,
+                signals: &mut self.signals,
+                directive,
                 scratch: &mut self.scratch,
                 error: None,
             };
@@ -270,6 +298,8 @@ struct StepBackend<'a> {
     cfg: &'a SparseConfig,
     model: &'a Model,
     stats: &'a mut EngineStats,
+    signals: &'a mut SignalHub,
+    directive: BudgetDirective,
     scratch: &'a mut PrunerScratch,
     error: Option<CacheError>,
 }
@@ -295,8 +325,9 @@ impl<'a> LayerBackend for StepBackend<'a> {
         let cache = &self.caches[layer];
         let seq = &self.st.caches[layer];
         let n = seq.len;
+        let dense_below = self.directive.dense_below_override.unwrap_or(self.cfg.dense_below);
         let dense = layer < self.cfg.skip_layers
-            || n <= self.cfg.dense_below
+            || n <= dense_below
             || (self.cfg.selector == SelectorKind::Full && self.cfg.twilight.is_none());
         if dense {
             let t = Instant::now();
@@ -315,7 +346,10 @@ impl<'a> LayerBackend for StepBackend<'a> {
                 (c.n_kv_heads * crate::sim::attn_bytes(n, d)) as u64;
             return out;
         }
-        let budget = self.cfg.budget.resolve(n);
+        let mut budget = self.cfg.budget.resolve(n);
+        if self.directive.budget_scale != 1.0 {
+            budget = ((budget as f32 * self.directive.budget_scale).round() as usize).clamp(1, n);
+        }
         for kvh in 0..c.n_kv_heads {
             let qs_group = &qs[kvh * group * d..(kvh + 1) * group * d];
             // --- stage 1: Token Selector (black box, conservative) ------
@@ -328,9 +362,15 @@ impl<'a> LayerBackend for StepBackend<'a> {
             let (kept, outcomes): (Vec<usize>, Option<Vec<PruneOutcome>>) =
                 match &self.cfg.twilight {
                     Some(pc) => {
+                        // The governor's p multiplier, clamped so even a
+                        // maximally-degraded directive keeps a real top-p.
+                        let pc = PrunerConfig {
+                            p: (pc.p * self.directive.p_scale).clamp(0.05, 0.999),
+                            ..*pc
+                        };
                         let t = Instant::now();
                         let (union, outs) = prune_group(
-                            pc, cache, seq, kvh, qs_group, group, &candidates, self.scratch,
+                            &pc, cache, seq, kvh, qs_group, group, &candidates, self.scratch,
                         );
                         self.stats.t_prune += t.elapsed().as_secs_f64();
                         self.stats.est_bytes_prune += crate::sim::spgemv_bytes(
@@ -338,6 +378,27 @@ impl<'a> LayerBackend for StepBackend<'a> {
                             d,
                             cache.cfg.mirror_bits,
                         ) as u64;
+                        // Governor telemetry: per-layer captured mass and
+                        // keep ratio, plus the periodic dense recall probe
+                        // on the group's first query head.
+                        if !candidates.is_empty() {
+                            let mean_mass = outs.iter().map(|o| o.mass as f64).sum::<f64>()
+                                / outs.len().max(1) as f64;
+                            let keep_ratio = union.len() as f64 / candidates.len() as f64;
+                            self.signals.record_prune(layer, mean_mass, keep_ratio);
+                            if self.signals.probe_due(self.stats.sparse_calls) {
+                                let recall = probe_recall(
+                                    cache,
+                                    seq,
+                                    kvh,
+                                    &qs_group[..d],
+                                    &candidates,
+                                    &outs[0].kept,
+                                    pc.p,
+                                );
+                                self.signals.record_probe(recall);
+                            }
+                        }
                         (union, Some(outs))
                     }
                     None => (candidates.clone(), None),
@@ -416,6 +477,39 @@ fn selector_bytes(kind: SelectorKind, n: usize, d: usize) -> usize {
 
 fn selector_wants_observation(kind: SelectorKind) -> bool {
     matches!(kind, SelectorKind::SnapKv | SelectorKind::H2O)
+}
+
+/// The governor's periodic accuracy probe: re-score one pruned head
+/// *densely* (exact fp32 scores over the candidate set, via
+/// `PagedKvCache::exact_score`), compute the true top-p set, and report
+/// which fraction of it survived the estimated prune — estimated-vs-true
+/// top-p recall. Runs once per [`SignalHub::probe_due`] cadence, so the
+/// extra O(B0·d) dot products are amortized to noise.
+fn probe_recall(
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    kv_head: usize,
+    q: &[f32],
+    candidates: &[usize],
+    kept: &[usize],
+    p: f32,
+) -> f64 {
+    let s = crate::attention::scale(q.len());
+    let mut scores: Vec<f32> = candidates
+        .iter()
+        .map(|&t| cache.exact_score(seq, kv_head, q, t) * s)
+        .collect();
+    crate::tensor::softmax_inplace(&mut scores);
+    let truth = crate::pruner::topp::topp_sort(&scores, p);
+    if truth.indices.is_empty() {
+        return 1.0;
+    }
+    let hits = truth
+        .indices
+        .iter()
+        .filter(|&&i| kept.binary_search(&candidates[i]).is_ok())
+        .count();
+    hits as f64 / truth.indices.len() as f64
 }
 
 #[cfg(test)]
@@ -520,6 +614,55 @@ mod tests {
         let _ = e.prefill(0, &g.prompt).unwrap();
         assert!(e.can_step(0));
         assert!(!e.can_step(99));
+    }
+
+    #[test]
+    fn directive_scales_budget_and_records_signals() {
+        let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.95);
+        cfg.skip_layers = 0;
+        cfg.dense_below = 16;
+        let mut r = Rng::new(11);
+        let g = gen_niah(&mut r, V, 1024);
+        let mut e1 = engine(cfg.clone());
+        let _ = e1.prefill(0, &g.prompt).unwrap();
+        let base_candidates = e1.stats.avg_candidates();
+        assert!(e1.signals.has_prune_data(), "pruned run must record telemetry");
+        assert!(e1.signals.probes() >= 1, "first sparse call runs the recall probe");
+        let m = e1.signals.mean_mass();
+        assert!(m > 0.0 && m <= 1.0 + 1e-4, "mass telemetry out of range: {m}");
+
+        let mut e2 = engine(cfg);
+        e2.apply_directive(BudgetDirective {
+            p_scale: 0.6,
+            budget_scale: 0.5,
+            ..BudgetDirective::NEUTRAL
+        });
+        let _ = e2.prefill(0, &g.prompt).unwrap();
+        assert!(
+            e2.stats.avg_candidates() < base_candidates * 0.7,
+            "budget_scale=0.5 must shrink B0: {} vs {}",
+            e2.stats.avg_candidates(),
+            base_candidates
+        );
+        assert!(e2.stats.avg_kept() <= e1.stats.avg_kept() + 1e-9);
+    }
+
+    #[test]
+    fn directive_dense_below_override_forces_dense() {
+        let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.95);
+        cfg.skip_layers = 0;
+        cfg.dense_below = 16;
+        let mut e = engine(cfg);
+        e.apply_directive(BudgetDirective {
+            dense_below_override: Some(1 << 20),
+            ..BudgetDirective::NEUTRAL
+        });
+        let mut r = Rng::new(12);
+        let g = gen_niah(&mut r, V, 512);
+        let logits = e.prefill(0, &g.prompt).unwrap();
+        assert_eq!(greedy(&logits), g.answer);
+        assert_eq!(e.stats.sparse_calls, 0, "override must force the dense path");
+        assert!(e.stats.t_dense > 0.0);
     }
 
     #[test]

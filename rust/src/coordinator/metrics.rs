@@ -1,6 +1,8 @@
-//! Serving metrics: TTFT, TPOT, throughput, and budget distributions —
-//! everything Fig. 8 and the tables report.
+//! Serving metrics: TTFT, TPOT, throughput, budget distributions —
+//! everything Fig. 8 and the tables report — plus the governor's
+//! decision trace when the run was governed.
 
+use crate::governor::TraceEntry;
 use crate::util::json::{self, Json};
 use crate::util::stats::Summary;
 
@@ -38,6 +40,8 @@ pub struct ServingReport {
     pub requests: Vec<RequestMetrics>,
     /// Wall-clock duration of the run.
     pub duration: f64,
+    /// Governor decision trace (empty for ungoverned runs).
+    pub governor: Vec<TraceEntry>,
 }
 
 impl ServingReport {
@@ -68,11 +72,16 @@ impl ServingReport {
         )
     }
 
+    /// Total preemptions across requests.
+    pub fn preemptions(&self) -> u32 {
+        self.requests.iter().map(|r| r.preemptions).sum()
+    }
+
     /// JSON for result files.
     pub fn to_json(&self) -> Json {
         let tpot = self.tpot_summary();
         let ttft = self.ttft_summary();
-        json::obj(vec![
+        let mut kv: Vec<(&str, Json)> = vec![
             ("requests", Json::Num(self.requests.len() as f64)),
             ("duration_s", Json::Num(self.duration)),
             ("output_tokens", Json::Num(self.total_output_tokens() as f64)),
@@ -82,11 +91,51 @@ impl ServingReport {
             ("tpot_mean_s", Json::Num(tpot.mean)),
             ("tpot_p50_s", Json::Num(tpot.p50)),
             ("tpot_p99_s", Json::Num(tpot.p99)),
-            (
-                "preemptions",
-                Json::Num(self.requests.iter().map(|r| r.preemptions as f64).sum()),
-            ),
-        ])
+            ("preemptions", Json::Num(self.preemptions() as f64)),
+        ];
+        if !self.governor.is_empty() {
+            let pmin = self.governor.iter().map(|e| e.p_scale).fold(f32::INFINITY, f32::min);
+            let pmax = self.governor.iter().map(|e| e.p_scale).fold(f32::NEG_INFINITY, f32::max);
+            let bmin =
+                self.governor.iter().map(|e| e.budget_scale).fold(f32::INFINITY, f32::min);
+            let bmax =
+                self.governor.iter().map(|e| e.budget_scale).fold(f32::NEG_INFINITY, f32::max);
+            let dmax = self.governor.iter().map(|e| e.degrade_level).max().unwrap_or(0);
+            kv.push(("governor_decisions", Json::Num(self.governor.len() as f64)));
+            kv.push(("governor_p_scale_min", Json::Num(pmin as f64)));
+            kv.push(("governor_p_scale_max", Json::Num(pmax as f64)));
+            kv.push(("governor_budget_scale_min", Json::Num(bmin as f64)));
+            kv.push(("governor_budget_scale_max", Json::Num(bmax as f64)));
+            kv.push(("governor_max_degrade", Json::Num(dmax as f64)));
+            kv.push(("governor_trace", self.governor_trace_json(64)));
+        }
+        json::obj(kv)
+    }
+
+    /// The decision trace as a JSON array, downsampled to roughly
+    /// `max_points` entries (at most `max_points + 1`: the final entry —
+    /// the run's ending directive — is always included even when the
+    /// stride would skip it) so result files stay diffable.
+    pub fn governor_trace_json(&self, max_points: usize) -> Json {
+        let entry_json = |e: &TraceEntry| {
+            json::obj(vec![
+                ("t", Json::Num(e.t)),
+                ("p_scale", Json::Num(e.p_scale as f64)),
+                ("budget_scale", Json::Num(e.budget_scale as f64)),
+                ("degrade", Json::Num(e.degrade_level as f64)),
+                ("tpot_ema_ms", Json::Num(e.tpot_ema * 1e3)),
+                ("free_frac", Json::Num(e.free_frac)),
+                ("mean_mass", Json::Num(e.mean_mass)),
+                ("keep_ratio", Json::Num(e.keep_ratio)),
+            ])
+        };
+        let n = self.governor.len();
+        let stride = n.div_ceil(max_points.max(1)).max(1);
+        let mut arr: Vec<Json> = self.governor.iter().step_by(stride).map(entry_json).collect();
+        if n > 0 && (n - 1) % stride != 0 {
+            arr.push(entry_json(&self.governor[n - 1]));
+        }
+        Json::Arr(arr)
     }
 }
 
@@ -123,11 +172,44 @@ mod tests {
         let rep = ServingReport {
             requests: vec![rm(0.0, 0.1, 1.1, 11), rm(0.0, 0.2, 2.2, 21)],
             duration: 2.2,
+            governor: Vec::new(),
         };
         assert_eq!(rep.total_output_tokens(), 32);
         assert!((rep.throughput_tok_s() - 32.0 / 2.2).abs() < 1e-9);
         let j = rep.to_json();
         assert_eq!(j.get_usize("requests"), Some(2));
         assert!(j.get_f64("tpot_mean_s").unwrap() > 0.0);
+        assert!(j.get("governor_trace").is_none(), "ungoverned: no trace block");
+    }
+
+    #[test]
+    fn governed_report_summarizes_trace() {
+        let entry = |t: f64, p: f32, b: f32, lvl: u8| TraceEntry {
+            t,
+            p_scale: p,
+            budget_scale: b,
+            degrade_level: lvl,
+            tpot_ema: 0.01,
+            free_frac: 0.5,
+            mean_mass: 0.9,
+            keep_ratio: 0.2,
+        };
+        let rep = ServingReport {
+            requests: vec![rm(0.0, 0.1, 1.1, 11)],
+            duration: 1.1,
+            governor: (0..200)
+                .map(|i| entry(i as f64 * 0.01, 1.0 - i as f32 * 0.002, 1.0, (i / 100) as u8))
+                .collect(),
+        };
+        let j = rep.to_json();
+        assert_eq!(j.get_usize("governor_decisions"), Some(200));
+        assert!(j.get_f64("governor_p_scale_min").unwrap() < 1.0);
+        assert_eq!(j.get_f64("governor_max_degrade"), Some(1.0));
+        let trace = j.get("governor_trace").unwrap().as_arr().unwrap();
+        assert!(trace.len() <= 65 && !trace.is_empty());
+        assert!(trace[0].get_f64("p_scale").is_some());
+        // The final decision must always survive downsampling.
+        let last_t = trace.last().unwrap().get_f64("t").unwrap();
+        assert!((last_t - 199.0 * 0.01).abs() < 1e-9, "last entry dropped: t={last_t}");
     }
 }

@@ -42,14 +42,21 @@ impl BudgetSpec {
         }
     }
 
+    /// Parse `"256"` (fixed tokens), `"0.25"` / `"0.25f"` (context
+    /// fraction). Rejects non-positive, non-finite, and >1.0 fractions
+    /// and zero fixed budgets — an invalid spec silently resolving to an
+    /// empty candidate set would disable attention.
     pub fn parse(s: &str) -> Option<BudgetSpec> {
+        fn fraction(f: f32) -> Option<BudgetSpec> {
+            (f.is_finite() && f > 0.0 && f <= 1.0).then_some(BudgetSpec::Fraction(f))
+        }
         if let Some(frac) = s.strip_suffix('f') {
-            return frac.parse::<f32>().ok().map(BudgetSpec::Fraction);
+            return frac.parse::<f32>().ok().and_then(fraction);
         }
         if s.contains('.') {
-            return s.parse::<f32>().ok().map(BudgetSpec::Fraction);
+            return s.parse::<f32>().ok().and_then(fraction);
         }
-        s.parse::<usize>().ok().map(BudgetSpec::Fixed)
+        s.parse::<usize>().ok().filter(|&n| n > 0).map(BudgetSpec::Fixed)
     }
 }
 
@@ -174,9 +181,32 @@ mod tests {
         assert_eq!(BudgetSpec::parse("256"), Some(BudgetSpec::Fixed(256)));
         assert_eq!(BudgetSpec::parse("0.25f"), Some(BudgetSpec::Fraction(0.25)));
         assert_eq!(BudgetSpec::parse("0.25"), Some(BudgetSpec::Fraction(0.25)));
+        assert_eq!(BudgetSpec::parse("1.0"), Some(BudgetSpec::Fraction(1.0)));
+        assert_eq!(BudgetSpec::parse("1f"), Some(BudgetSpec::Fraction(1.0)));
         assert_eq!(BudgetSpec::Fixed(256).resolve(100), 100);
         assert_eq!(BudgetSpec::Fraction(0.25).resolve(1000), 250);
         assert_eq!(BudgetSpec::Fraction(0.5).resolve(1), 1);
+    }
+
+    #[test]
+    fn budget_spec_rejects_nonsense() {
+        for bad in [
+            "0f",     // zero fraction: empty candidate set
+            "0.0",    // ditto
+            "-0.25",  // negative fraction
+            "-0.25f", // negative fraction, suffixed
+            "1.5",    // fraction above 1.0
+            "2.0f",   // ditto, suffixed
+            "nanf",   // non-finite
+            "inff",   // non-finite
+            "0",      // zero fixed budget
+            "-3",     // negative fixed budget
+            "abc",    // not a number
+            "",       // empty
+            "f",      // bare suffix
+        ] {
+            assert_eq!(BudgetSpec::parse(bad), None, "must reject {bad:?}");
+        }
     }
 
     #[test]

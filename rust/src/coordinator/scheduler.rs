@@ -13,7 +13,9 @@
 use super::engine::Engine;
 use super::metrics::{RequestMetrics, ServingReport};
 use super::request::{Request, RequestState};
+use crate::governor::Governor;
 use crate::model::sampler::sample;
+use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -44,6 +46,9 @@ pub struct Scheduler {
     running: Vec<Request>,
     rng: Rng,
     finished: Vec<Request>,
+    /// Optional budget governor; when present it decides a
+    /// [`crate::governor::BudgetDirective`] at the top of every step.
+    governor: Option<Governor>,
 }
 
 impl Scheduler {
@@ -55,6 +60,27 @@ impl Scheduler {
             running: Vec::new(),
             rng: Rng::new(0xBA7C4),
             finished: Vec::new(),
+            governor: None,
+        }
+    }
+
+    /// Attach a governor (replaces any previous one).
+    pub fn attach_governor(&mut self, g: Governor) {
+        self.governor = Some(g);
+    }
+
+    pub fn governor(&self) -> Option<&Governor> {
+        self.governor.as_ref()
+    }
+
+    /// Update the governor's TPOT SLO; false when ungoverned.
+    pub fn set_slo_tpot(&mut self, target_tpot_s: f64) -> bool {
+        match self.governor.as_mut() {
+            Some(g) => {
+                g.set_slo_tpot(target_tpot_s);
+                true
+            }
+            None => false,
         }
     }
 
@@ -79,17 +105,47 @@ impl Scheduler {
     /// One scheduler iteration at virtual time `now`. Returns the number
     /// of output tokens produced.
     pub fn step(&mut self, now: f64) -> usize {
+        // --- governor -------------------------------------------------
+        // Decide before admitting: the directive shapes both this step's
+        // decode work and (via the degrade level) admission below.
+        if let Some(gov) = self.governor.as_mut() {
+            let total = self.engine.total_pages();
+            let free_frac = if total == 0 {
+                1.0
+            } else {
+                self.engine.free_pages() as f64 / total as f64
+            };
+            let snap = gov.snapshot(
+                now,
+                &self.engine.signals,
+                free_frac,
+                self.queue.len(),
+                self.running.len(),
+                self.engine.stats.steps,
+            );
+            let d = gov.step(&snap);
+            self.engine.apply_directive(d);
+        }
+        let step_start = Instant::now();
+        let degrade = self.engine.directive().degrade_level;
         // --- admission ------------------------------------------------
+        // Staged degradation: widen the required headroom as pressure
+        // mounts, and freeze admission entirely at level 3 unless the
+        // engine is idle (nothing running can ever deadlock admission).
+        let admit_headroom = self.cfg.admit_headroom_pages * (1 + degrade as usize);
+        let max_prefills = if degrade >= 3 && !self.running.is_empty() {
+            0
+        } else {
+            self.cfg.max_prefills_per_step
+        };
         let mut prefills = 0;
-        while prefills < self.cfg.max_prefills_per_step
-            && self.running.len() < self.cfg.max_batch
-        {
+        while prefills < max_prefills && self.running.len() < self.cfg.max_batch {
             let Some(front) = self.queue.front() else { break };
             if front.arrival > now {
                 break;
             }
             let need = self.pages_needed(front.prompt.len()) / self.engine.model.cfg.n_layers
-                + self.cfg.admit_headroom_pages;
+                + admit_headroom;
             if self.engine.free_pages() < need {
                 break;
             }
@@ -175,6 +231,9 @@ impl Scheduler {
                 j += 1;
             }
         }
+        if let Some(gov) = self.governor.as_mut() {
+            gov.observe_step(step_start.elapsed().as_secs_f64(), produced);
+        }
         produced
     }
 
@@ -209,12 +268,36 @@ impl Scheduler {
                 preemptions: r.preemptions,
             })
             .collect();
-        ServingReport { requests, duration }
+        let governor = self.governor.as_mut().map(|g| g.take_trace()).unwrap_or_default();
+        ServingReport { requests, duration, governor }
     }
 
     /// Finished requests (for output inspection).
     pub fn finished_requests(&self) -> &[Request] {
         &self.finished
+    }
+
+    /// Live state for the server's `stats` command (the run is still in
+    /// flight, so this reports counters rather than a final report).
+    pub fn live_stats_json(&self) -> Json {
+        let s = &self.engine.stats;
+        let mut kv: Vec<(&str, Json)> = vec![
+            ("pending", Json::Num(self.queue.len() as f64)),
+            ("running", Json::Num(self.running.len() as f64)),
+            ("finished", Json::Num(self.finished.len() as f64)),
+            ("steps", Json::Num(s.steps as f64)),
+            ("avg_candidates", Json::Num(s.avg_candidates())),
+            ("avg_kept", Json::Num(s.avg_kept())),
+            ("prune_ratio", Json::Num(s.prune_ratio())),
+            ("free_pages", Json::Num(self.engine.free_pages() as f64)),
+            ("total_pages", Json::Num(self.engine.total_pages() as f64)),
+            ("mean_mass", Json::Num(self.engine.signals.mean_mass())),
+            ("probe_recall", Json::Num(self.engine.signals.probe_recall())),
+        ];
+        if let Some(g) = &self.governor {
+            kv.push(("governor", g.state_json()));
+        }
+        json::obj(kv)
     }
 }
 
@@ -292,6 +375,46 @@ mod tests {
         let total_preempt: u32 = rep.requests.iter().map(|r| r.preemptions).sum();
         assert!(total_preempt > 0, "expected at least one preemption");
         assert_eq!(s.engine.num_seqs(), 0);
+    }
+
+    #[test]
+    fn governed_scheduler_traces_and_completes() {
+        use crate::governor::slo::SloConfig;
+        use crate::governor::{BudgetDirective, Governor, GovernorConfig};
+        let mut s = sched(1 << 16, SparseConfig::twilight(SelectorKind::Quest, 0.9));
+        // An unattainably tight SLO forces the AIMD policy to tighten.
+        let cfg = GovernorConfig {
+            slo: SloConfig { target_tpot_s: 1e-9, margin: 0.2 },
+            ..Default::default()
+        };
+        s.attach_governor(Governor::new("aimd", cfg).unwrap());
+        let mut r = Rng::new(17);
+        for i in 0..4 {
+            let g = gen_niah(&mut r, V, 256);
+            s.submit(Request::new(i, g.prompt, 8));
+        }
+        let rep = s.run_to_completion();
+        assert_eq!(rep.requests.len(), 4);
+        assert!(!rep.governor.is_empty(), "governed run must record a trace");
+        assert!(
+            rep.governor.last().unwrap().budget_scale < 1.0,
+            "unattainable SLO must tighten the budget"
+        );
+        for e in &rep.governor {
+            assert!(
+                e.p_scale >= BudgetDirective::P_SCALE_RANGE.0
+                    && e.p_scale <= BudgetDirective::P_SCALE_RANGE.1,
+                "p_scale {} outside safe range",
+                e.p_scale
+            );
+            assert!(
+                e.budget_scale >= BudgetDirective::BUDGET_SCALE_RANGE.0
+                    && e.budget_scale <= BudgetDirective::BUDGET_SCALE_RANGE.1
+            );
+        }
+        assert_eq!(s.engine.num_seqs(), 0);
+        let j = s.live_stats_json();
+        assert!(j.get("governor").is_some());
     }
 
     #[test]

@@ -5,13 +5,20 @@
 //! → {"prompt": [1,2,3], "max_new_tokens": 4}
 //! ← {"id": 0, "output": [17,3,3,9], "ttft_s": 0.01, "tpot_s": 0.002}
 //! → {"cmd": "stats"}
-//! ← {"requests": ..., "throughput_tok_s": ...}
+//! ← {"pending": 0, "running": 1, "prune_ratio": ..., "governor": {...}}
+//! → {"cmd": "slo", "tpot_ms": 25}
+//! ← {"ok": true, "tpot_ms": 25}
 //! → {"cmd": "shutdown"}
 //! ```
 //!
-//! Connections are handled by an acceptor thread each; requests funnel
-//! through an mpsc channel into the single scheduler thread that owns the
-//! engine (the same single-writer design vLLM's engine loop uses).
+//! `stats` reports live scheduler/engine counters plus governor state;
+//! `slo` retunes the governor's TPOT target at runtime (fails with
+//! `ok: false` when the scheduler is ungoverned).
+//!
+//! Connections are handled by an acceptor thread each; requests and
+//! control commands funnel through an mpsc channel into the single
+//! scheduler thread that owns the engine (the same single-writer design
+//! vLLM's engine loop uses).
 
 use super::request::Request;
 use super::scheduler::Scheduler;
@@ -30,12 +37,21 @@ struct Inflight {
     submitted: Instant,
 }
 
+/// Anything a connection thread can ask of the engine loop.
+enum ToEngine {
+    Submit(Inflight),
+    /// Reply with live scheduler/governor stats.
+    Stats(mpsc::Sender<Json>),
+    /// Set the governor's TPOT SLO (seconds).
+    Slo(f64, mpsc::Sender<Json>),
+}
+
 /// Serve forever (or until a `shutdown` command) on `addr`.
 pub fn serve(mut sched: Scheduler, addr: &str) -> std::io::Result<()> {
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     crate::log_info!("listening on {addr}");
-    let (tx, rx) = mpsc::channel::<Inflight>();
+    let (tx, rx) = mpsc::channel::<ToEngine>();
     let shutdown = Arc::new(AtomicBool::new(false));
     let next_id = Arc::new(AtomicU64::new(0));
 
@@ -60,10 +76,32 @@ pub fn serve(mut sched: Scheduler, addr: &str) -> std::io::Result<()> {
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
             Err(e) => return Err(e),
         }
-        // Drain newly-submitted requests into the scheduler.
-        while let Ok(inf) = rx.try_recv() {
-            pending.push((inf.req.id, inf.reply, inf.submitted));
-            sched.submit(inf.req);
+        // Drain newly-submitted requests and control commands.
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                ToEngine::Submit(inf) => {
+                    pending.push((inf.req.id, inf.reply, inf.submitted));
+                    sched.submit(inf.req);
+                }
+                ToEngine::Stats(reply) => {
+                    let _ = reply.send(sched.live_stats_json());
+                }
+                ToEngine::Slo(target_s, reply) => {
+                    let ok = sched.set_slo_tpot(target_s);
+                    let msg = if ok {
+                        json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("tpot_ms", Json::Num(target_s * 1e3)),
+                        ])
+                    } else {
+                        json::obj(vec![
+                            ("ok", Json::Bool(false)),
+                            ("error", json::s("scheduler has no governor")),
+                        ])
+                    };
+                    let _ = reply.send(msg);
+                }
+            }
         }
         // Drive the engine.
         let now = t0.elapsed().as_secs_f64();
@@ -104,7 +142,7 @@ pub fn serve(mut sched: Scheduler, addr: &str) -> std::io::Result<()> {
 
 fn handle_conn(
     stream: TcpStream,
-    tx: mpsc::Sender<Inflight>,
+    tx: mpsc::Sender<ToEngine>,
     shutdown: Arc<AtomicBool>,
     next_id: Arc<AtomicU64>,
 ) -> std::io::Result<()> {
@@ -122,10 +160,45 @@ fn handle_conn(
                 continue;
             }
         };
-        if parsed.get_str("cmd") == Some("shutdown") {
-            shutdown.store(true, Ordering::Relaxed);
-            writeln!(writer, "{}", json::obj(vec![("ok", Json::Bool(true))]).to_string())?;
-            return Ok(());
+        match parsed.get_str("cmd") {
+            Some("shutdown") => {
+                shutdown.store(true, Ordering::Relaxed);
+                writeln!(writer, "{}", json::obj(vec![("ok", Json::Bool(true))]).to_string())?;
+                return Ok(());
+            }
+            Some("stats") => {
+                let (reply_tx, reply_rx) = mpsc::channel();
+                tx.send(ToEngine::Stats(reply_tx)).map_err(engine_gone)?;
+                let msg = reply_rx.recv().map_err(|_| engine_gone(()))?;
+                writeln!(writer, "{}", msg.to_string())?;
+                continue;
+            }
+            Some("slo") => {
+                let Some(ms) = parsed.get_f64("tpot_ms").filter(|m| *m > 0.0) else {
+                    writeln!(
+                        writer,
+                        "{}",
+                        json::obj(vec![("error", json::s("slo needs positive 'tpot_ms'"))])
+                            .to_string()
+                    )?;
+                    continue;
+                };
+                let (reply_tx, reply_rx) = mpsc::channel();
+                tx.send(ToEngine::Slo(ms / 1e3, reply_tx)).map_err(engine_gone)?;
+                let msg = reply_rx.recv().map_err(|_| engine_gone(()))?;
+                writeln!(writer, "{}", msg.to_string())?;
+                continue;
+            }
+            Some(other) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    json::obj(vec![("error", json::s(&format!("unknown cmd '{other}'")))])
+                        .to_string()
+                )?;
+                continue;
+            }
+            None => {}
         }
         let Some(prompt) = parsed.get("prompt").and_then(|p| p.as_arr()).map(|a| {
             a.iter().filter_map(|v| v.as_usize()).map(|v| v as u32).collect::<Vec<u32>>()
@@ -149,8 +222,8 @@ fn handle_conn(
         let id = next_id.fetch_add(1, Ordering::Relaxed);
         let req = Request::new(id, prompt, max_new);
         let (reply_tx, reply_rx) = mpsc::channel();
-        tx.send(Inflight { req, reply: reply_tx, submitted: Instant::now() })
-            .map_err(|_| std::io::Error::new(std::io::ErrorKind::BrokenPipe, "engine gone"))?;
+        tx.send(ToEngine::Submit(Inflight { req, reply: reply_tx, submitted: Instant::now() }))
+            .map_err(engine_gone)?;
         // Block this connection thread until the engine replies.
         match reply_rx.recv() {
             Ok(msg) => writeln!(writer, "{}", msg.to_string())?,
@@ -164,6 +237,10 @@ fn handle_conn(
         }
     }
     Ok(())
+}
+
+fn engine_gone<T>(_: T) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::BrokenPipe, "engine gone")
 }
 
 #[cfg(test)]
@@ -180,10 +257,12 @@ mod tests {
 
     #[test]
     fn end_to_end_over_tcp() {
+        use crate::governor::{Governor, GovernorConfig};
         let v = RetrievalVocab::DEFAULT;
         let model = std::sync::Arc::new(build_retrieval_model(v, 8192));
         let engine = Engine::new(model, SparseConfig::twilight(SelectorKind::Quest, 0.9), 1 << 14);
-        let sched = Scheduler::new(engine, SchedulerConfig::default());
+        let mut sched = Scheduler::new(engine, SchedulerConfig::default());
+        sched.attach_governor(Governor::new("aimd", GovernorConfig::default()).unwrap());
         // Pick a free port by binding then immediately reusing.
         let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = probe.local_addr().unwrap().to_string();
@@ -217,6 +296,28 @@ mod tests {
         let resp = Json::parse(&line).unwrap();
         let out = resp.get("output").unwrap().as_arr().unwrap();
         assert_eq!(out[0].as_usize(), Some(g.answer as usize));
+        // Live stats: counters plus governor state.
+        writeln!(&stream, "{{\"cmd\": \"stats\"}}").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let stats = Json::parse(&line).unwrap();
+        assert!(stats.get("steps").is_some(), "stats missing counters: {line}");
+        assert_eq!(stats.get("governor").unwrap().get_str("policy"), Some("aimd"));
+        // Runtime SLO retune.
+        writeln!(&stream, "{{\"cmd\": \"slo\", \"tpot_ms\": 25}}").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let slo = Json::parse(&line).unwrap();
+        assert_eq!(slo.get_bool("ok"), Some(true), "{line}");
+        writeln!(&stream, "{{\"cmd\": \"slo\"}}").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(Json::parse(&line).unwrap().get("error").is_some());
+        // Unknown commands are rejected, connection stays up.
+        writeln!(&stream, "{{\"cmd\": \"nope\"}}").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(Json::parse(&line).unwrap().get("error").is_some());
         // Shutdown.
         writeln!(&stream, "{{\"cmd\": \"shutdown\"}}").unwrap();
         line.clear();

@@ -1,0 +1,401 @@
+//! The adaptive budget governor — a runtime control plane that closes
+//! the loop on top-p sparsity (DESIGN.md §8).
+//!
+//! Twilight makes the *per-head* budget adaptive, but the deployment
+//! knobs (`p`, the stage-1 budget B0, `dense_below`) are frozen at
+//! config time. The governor runs once per scheduler step, aggregates
+//! three live signal streams —
+//!
+//! 1. **accuracy proxies** from the pruner (per-layer captured-mass and
+//!    keep-ratio rings, plus a periodic dense recall probe),
+//! 2. **latency** (step time ≙ TPOT under continuous batching) vs. a
+//!    target SLO,
+//! 3. **memory pressure** (page-pool headroom),
+//!
+//! — and emits a [`BudgetDirective`] the engine applies to every pruned
+//! attention call of the next step. Policies ([`policy`]) decide the
+//! accuracy/latency trade; the pressure ladder ([`pressure`]) overlays
+//! staged degradation so the scheduler is never forced into recompute
+//! preemption without the governor having tried cheaper levers first.
+//!
+//! ```text
+//!  engine ──mass/keep/recall──┐
+//!  scheduler ──step time──────┤
+//!  kv pool ──free pages───────┼──> SignalSnapshot ──> policy ──┐
+//!                             │                                v
+//!  engine <── BudgetDirective ┴──────────── pressure ladder ───┘
+//! ```
+
+pub mod policy;
+pub mod pressure;
+pub mod signals;
+pub mod slo;
+
+use crate::util::json::{self, Json};
+use policy::GovernorPolicy;
+use pressure::PressureConfig;
+use signals::{SignalHub, SignalSnapshot};
+use slo::{SloConfig, SloTracker};
+
+/// What the governor tells the engine to do for the next step. All
+/// fields are *relative* to the static `SparseConfig`, so a neutral
+/// directive reproduces ungoverned behavior exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BudgetDirective {
+    /// Multiplier on the pruner threshold p.
+    pub p_scale: f32,
+    /// Multiplier on the stage-1 candidate budget B0.
+    pub budget_scale: f32,
+    /// Replaces `SparseConfig::dense_below` when set.
+    pub dense_below_override: Option<usize>,
+    /// Pressure ladder rung (0 = none); the scheduler throttles
+    /// admission from level 2 and freezes it at level 3.
+    pub degrade_level: u8,
+}
+
+impl BudgetDirective {
+    pub const NEUTRAL: BudgetDirective = BudgetDirective {
+        p_scale: 1.0,
+        budget_scale: 1.0,
+        dense_below_override: None,
+        degrade_level: 0,
+    };
+
+    /// Hard safety range for the p multiplier.
+    pub const P_SCALE_RANGE: (f32, f32) = (0.5, 1.25);
+    /// Hard safety range for the budget multiplier.
+    pub const BUDGET_SCALE_RANGE: (f32, f32) = (0.2, 1.5);
+    /// Ceiling for `dense_below_override`: contexts up to this may be
+    /// forced dense, longer ones must stay on the sparse path (a policy
+    /// must never be able to disable sparse attention wholesale).
+    pub const DENSE_BELOW_MAX: usize = 4096;
+
+    /// Clamp every field into its safe range. Applied to every policy
+    /// output before it reaches the engine, so a buggy policy can
+    /// degrade quality but never disable attention entirely.
+    pub fn clamped(mut self) -> BudgetDirective {
+        let (plo, phi) = Self::P_SCALE_RANGE;
+        let (blo, bhi) = Self::BUDGET_SCALE_RANGE;
+        self.p_scale = if self.p_scale.is_finite() { self.p_scale.clamp(plo, phi) } else { 1.0 };
+        self.budget_scale =
+            if self.budget_scale.is_finite() { self.budget_scale.clamp(blo, bhi) } else { 1.0 };
+        self.dense_below_override =
+            self.dense_below_override.map(|v| v.min(Self::DENSE_BELOW_MAX));
+        self.degrade_level = self.degrade_level.min(3);
+        self
+    }
+}
+
+impl Default for BudgetDirective {
+    fn default() -> Self {
+        BudgetDirective::NEUTRAL
+    }
+}
+
+/// One governor decision, as recorded in the serving report.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEntry {
+    /// Virtual time of the decision.
+    pub t: f64,
+    pub p_scale: f32,
+    pub budget_scale: f32,
+    pub degrade_level: u8,
+    /// Observed TPOT EMA at decision time (seconds).
+    pub tpot_ema: f64,
+    /// Free page-pool fraction at decision time.
+    pub free_frac: f64,
+    /// Mean captured prune mass at decision time.
+    pub mean_mass: f64,
+    /// Mean kept/candidate ratio at decision time.
+    pub keep_ratio: f64,
+}
+
+/// Governor configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GovernorConfig {
+    pub slo: SloConfig,
+    pub pressure: PressureConfig,
+}
+
+/// The control plane: one per scheduler.
+pub struct Governor {
+    /// Construction-time configuration. The *live* SLO target is owned
+    /// by the tracker (`slo.cfg`) — read it via [`Governor::slo_tpot`].
+    pub cfg: GovernorConfig,
+    slo: SloTracker,
+    policy: Box<dyn GovernorPolicy>,
+    /// The policy's latest output, before the pressure overlay.
+    policy_directive: BudgetDirective,
+    directive: BudgetDirective,
+    trace: Vec<TraceEntry>,
+    decisions: u64,
+    /// Freshness markers: the policy only advances when at least one new
+    /// observation (engine step or latency sample) landed since its last
+    /// decision, so its AI/MD rates track *load*, not the scheduler's
+    /// idle-spin frequency.
+    last_steps: u64,
+    last_obs: u64,
+}
+
+impl Governor {
+    /// Build from a policy name (`static` | `aimd` | `mass`).
+    pub fn new(policy_name: &str, cfg: GovernorConfig) -> Option<Governor> {
+        let policy = policy::parse_policy(policy_name)?;
+        Some(Governor {
+            cfg,
+            slo: SloTracker::new(cfg.slo),
+            policy,
+            policy_directive: BudgetDirective::NEUTRAL,
+            directive: BudgetDirective::NEUTRAL,
+            trace: Vec::new(),
+            decisions: 0,
+            last_steps: u64::MAX,
+            last_obs: u64::MAX,
+        })
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Report one finished scheduler step to the latency tracker.
+    pub fn observe_step(&mut self, step_secs: f64, produced: usize) {
+        self.slo.observe_step(step_secs, produced);
+    }
+
+    /// Change the TPOT SLO at runtime (server `slo` command / CLI). The
+    /// tracker owns the live target; `cfg.slo` stays as-constructed.
+    pub fn set_slo_tpot(&mut self, target_tpot_s: f64) {
+        self.slo.set_target(target_tpot_s);
+    }
+
+    pub fn slo_tpot(&self) -> f64 {
+        self.slo.cfg.target_tpot_s
+    }
+
+    /// Assemble the snapshot a policy will see.
+    pub fn snapshot(
+        &self,
+        now: f64,
+        hub: &SignalHub,
+        free_frac: f64,
+        queue_depth: usize,
+        running: usize,
+        steps: u64,
+    ) -> SignalSnapshot {
+        SignalSnapshot {
+            now,
+            tpot_ema: self.slo.tpot_ema(),
+            slo_tpot: self.slo.cfg.target_tpot_s,
+            free_frac,
+            queue_depth,
+            running,
+            mean_mass: hub.mean_mass(),
+            mean_keep_ratio: hub.mean_keep_ratio(),
+            probe_recall: hub.probe_recall(),
+            steps,
+        }
+    }
+
+    /// One decision: policy → clamp → pressure overlay → clamp.
+    ///
+    /// The *policy* only advances on fresh observations (a new engine
+    /// step or latency sample): a scheduler spinning idle on future
+    /// arrivals calls this thousands of times per second, and letting a
+    /// stateful policy integrate stale signals that fast would slam its
+    /// scale to a clamp within microseconds. The pressure overlay is
+    /// stateless and reapplies every call. The trace records every
+    /// *changed* directive plus a periodic heartbeat.
+    pub fn step(&mut self, snap: &SignalSnapshot) -> BudgetDirective {
+        let obs = self.slo.observations();
+        let fresh = self.last_steps != snap.steps || self.last_obs != obs;
+        if fresh {
+            self.last_steps = snap.steps;
+            self.last_obs = obs;
+            self.policy_directive = self.policy.decide(snap).clamped();
+        }
+        let mut d = self.policy_directive;
+        let level = self.cfg.pressure.level(snap.free_frac);
+        self.cfg.pressure.apply(level, &mut d);
+        let d = d.clamped();
+        let changed = d != self.directive;
+        self.directive = d;
+        self.decisions += 1;
+        if changed || self.trace.is_empty() || self.decisions % 16 == 0 {
+            // Bound the trace for never-drained deployments (the TCP
+            // server runs indefinitely): drop the oldest half when full.
+            const MAX_TRACE: usize = 16384;
+            if self.trace.len() >= MAX_TRACE {
+                self.trace.drain(..MAX_TRACE / 2);
+            }
+            self.trace.push(TraceEntry {
+                t: snap.now,
+                p_scale: d.p_scale,
+                budget_scale: d.budget_scale,
+                degrade_level: d.degrade_level,
+                tpot_ema: snap.tpot_ema,
+                free_frac: snap.free_frac,
+                mean_mass: snap.mean_mass,
+                keep_ratio: snap.mean_keep_ratio,
+            });
+        }
+        d
+    }
+
+    /// The directive currently in force.
+    pub fn directive(&self) -> BudgetDirective {
+        self.directive
+    }
+
+    pub fn trace(&self) -> &[TraceEntry] {
+        &self.trace
+    }
+
+    /// Drain the trace (the scheduler moves it into the serving report).
+    pub fn take_trace(&mut self) -> Vec<TraceEntry> {
+        std::mem::take(&mut self.trace)
+    }
+
+    pub fn decisions(&self) -> u64 {
+        self.decisions
+    }
+
+    /// Live state for the server's `stats` command.
+    pub fn state_json(&self) -> Json {
+        json::obj(vec![
+            ("policy", json::s(self.policy.name())),
+            ("p_scale", Json::Num(self.directive.p_scale as f64)),
+            ("budget_scale", Json::Num(self.directive.budget_scale as f64)),
+            ("degrade_level", Json::Num(self.directive.degrade_level as f64)),
+            (
+                "dense_below_override",
+                match self.directive.dense_below_override {
+                    Some(v) => Json::Num(v as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("slo_tpot_ms", Json::Num(self.slo.cfg.target_tpot_s * 1e3)),
+            ("tpot_ema_ms", Json::Num(self.slo.tpot_ema() * 1e3)),
+            ("slo_violation_rate", Json::Num(self.slo.violation_rate())),
+            ("decisions", Json::Num(self.decisions as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_policy_rejected() {
+        assert!(Governor::new("nope", GovernorConfig::default()).is_none());
+        assert!(Governor::new("aimd", GovernorConfig::default()).is_some());
+        assert!(Governor::new("static", GovernorConfig::default()).is_some());
+        assert!(Governor::new("mass", GovernorConfig::default()).is_some());
+    }
+
+    #[test]
+    fn directives_always_clamped_to_safe_ranges() {
+        let wild = BudgetDirective {
+            p_scale: 9.0,
+            budget_scale: 0.0,
+            dense_below_override: Some(1 << 20),
+            degrade_level: 99,
+        }
+        .clamped();
+        assert_eq!(wild.p_scale, BudgetDirective::P_SCALE_RANGE.1);
+        assert_eq!(wild.budget_scale, BudgetDirective::BUDGET_SCALE_RANGE.0);
+        assert_eq!(wild.dense_below_override, Some(BudgetDirective::DENSE_BELOW_MAX));
+        assert_eq!(wild.degrade_level, 3);
+        let nan = BudgetDirective {
+            p_scale: f32::NAN,
+            budget_scale: f32::NEG_INFINITY,
+            ..BudgetDirective::NEUTRAL
+        }
+        .clamped();
+        assert_eq!(nan.p_scale, 1.0);
+        assert_eq!(nan.budget_scale, 1.0);
+    }
+
+    #[test]
+    fn pressure_overlays_any_policy() {
+        // Even the static policy degrades under pressure.
+        let mut g = Governor::new("static", GovernorConfig::default()).unwrap();
+        let snap = SignalSnapshot { free_frac: 0.01, ..Default::default() };
+        let d = g.step(&snap);
+        assert_eq!(d.degrade_level, 3);
+        assert!(d.p_scale < 1.0);
+        assert!(d.budget_scale < 1.0);
+        assert!(d.dense_below_override.is_some());
+        assert_eq!(g.trace().len(), 1);
+        assert_eq!(g.directive(), d);
+    }
+
+    #[test]
+    fn aimd_governor_reacts_to_slo_violation() {
+        let mut g = Governor::new(
+            "aimd",
+            GovernorConfig {
+                slo: slo::SloConfig { target_tpot_s: 0.010, margin: 0.2 },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let hub = SignalHub::new(1);
+        // Steps twice as slow as the SLO allows.
+        for i in 0..20u64 {
+            g.observe_step(0.020, 4);
+            let snap = g.snapshot(i as f64 * 0.02, &hub, 0.9, 0, 4, i);
+            g.step(&snap);
+        }
+        let d = g.directive();
+        assert!(d.budget_scale < 1.0, "governor must tighten under violation");
+        assert!(d.p_scale < 1.0);
+        assert_eq!(d.degrade_level, 0, "no memory pressure here");
+        // Trace must show the movement.
+        let first = g.trace().first().unwrap().budget_scale;
+        let last = g.trace().last().unwrap().budget_scale;
+        assert!(last < first);
+        let j = g.state_json();
+        assert_eq!(j.get_str("policy"), Some("aimd"));
+        assert!(j.get_f64("tpot_ema_ms").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn policy_state_freezes_without_fresh_observations() {
+        // An idle scheduler spinning on future arrivals calls step() at
+        // megahertz rates with frozen signals; the policy must hold, not
+        // integrate the stale EMA until it slams into a clamp.
+        let mut g = Governor::new(
+            "aimd",
+            GovernorConfig {
+                slo: slo::SloConfig { target_tpot_s: 0.010, margin: 0.2 },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let hub = SignalHub::new(1);
+        g.observe_step(0.020, 1); // one violating latency sample
+        let snap = g.snapshot(0.0, &hub, 0.9, 0, 1, 1);
+        let first = g.step(&snap);
+        assert!(first.budget_scale < 1.0);
+        let mut held = first;
+        for _ in 0..1000 {
+            held = g.step(&snap);
+        }
+        assert_eq!(held, first, "stale signals must not advance the policy");
+        // A fresh observation resumes adaptation.
+        g.observe_step(0.020, 1);
+        let snap2 = g.snapshot(0.1, &hub, 0.9, 0, 1, 2);
+        let next = g.step(&snap2);
+        assert!(next.budget_scale < first.budget_scale);
+    }
+
+    #[test]
+    fn trace_drains_once() {
+        let mut g = Governor::new("static", GovernorConfig::default()).unwrap();
+        g.step(&SignalSnapshot::default());
+        assert_eq!(g.take_trace().len(), 1);
+        assert!(g.trace().is_empty());
+    }
+}

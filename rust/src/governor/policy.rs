@@ -1,0 +1,242 @@
+//! Pluggable budget policies: how the governor turns a signal snapshot
+//! into a [`BudgetDirective`].
+//!
+//! * [`StaticPolicy`] — the identity (config-time knobs rule; the ladder
+//!   in [`super::pressure`] still overlays). The control baseline.
+//! * [`AimdSlo`] — TCP-style additive-increase / multiplicative-decrease
+//!   on a single sparsity scale, driven by the TPOT SLO: violations cut
+//!   the scale multiplicatively (budgets shrink, steps get faster),
+//!   sustained headroom walks it back up additively toward neutral.
+//! * [`MassTarget`] — holds the pruner's captured-mass telemetry at a
+//!   target and backs off whenever the dense recall probe dips, i.e. it
+//!   spends exactly as much budget as the accuracy proxies demand
+//!   (Tactic-style budget-from-score-distribution control).
+
+use super::signals::SignalSnapshot;
+use super::BudgetDirective;
+
+/// A budget policy. Policies are deterministic state machines: given the
+/// same snapshot sequence they emit the same directive sequence (unit
+/// tests rely on this).
+pub trait GovernorPolicy: Send {
+    fn name(&self) -> &'static str;
+    /// One decision. Returned directives are clamped by the governor.
+    fn decide(&mut self, s: &SignalSnapshot) -> BudgetDirective;
+}
+
+/// Parse a policy by CLI name.
+pub fn parse_policy(name: &str) -> Option<Box<dyn GovernorPolicy>> {
+    match name {
+        "static" => Some(Box::new(StaticPolicy)),
+        "aimd" | "aimd-slo" => Some(Box::new(AimdSlo::default())),
+        "mass" | "mass-target" => Some(Box::new(MassTarget::default())),
+        _ => None,
+    }
+}
+
+/// Identity policy: always neutral.
+pub struct StaticPolicy;
+
+impl GovernorPolicy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn decide(&mut self, _s: &SignalSnapshot) -> BudgetDirective {
+        BudgetDirective::NEUTRAL
+    }
+}
+
+/// AIMD on one internal scale `s ∈ [min_scale, 1]`:
+/// * TPOT EMA over target  → `s *= decrease`
+/// * TPOT EMA under target × (1 − headroom) → `s += increase`
+///
+/// The scale maps to the directive asymmetrically: B0 absorbs the full
+/// cut (`budget_scale = s`) while p moves half as far
+/// (`p_scale = 0.5 + 0.5·s`) — shrinking the candidate set is cheap to
+/// recover from, while cutting p below the distribution's mass knee
+/// costs recall (Fig. 9's cliff).
+pub struct AimdSlo {
+    scale: f64,
+    /// Multiplicative back-off factor on violation.
+    pub decrease: f64,
+    /// Additive recovery step with headroom.
+    pub increase: f64,
+    /// Floor for the internal scale.
+    pub min_scale: f64,
+    /// Headroom fraction under target required before recovering.
+    pub headroom: f64,
+}
+
+impl Default for AimdSlo {
+    fn default() -> Self {
+        AimdSlo { scale: 1.0, decrease: 0.85, increase: 0.02, min_scale: 0.25, headroom: 0.2 }
+    }
+}
+
+impl GovernorPolicy for AimdSlo {
+    fn name(&self) -> &'static str {
+        "aimd"
+    }
+
+    fn decide(&mut self, s: &SignalSnapshot) -> BudgetDirective {
+        if s.slo_tpot > 0.0 && s.tpot_ema > 0.0 {
+            if s.tpot_ema > s.slo_tpot {
+                self.scale *= self.decrease;
+            } else if s.tpot_ema < s.slo_tpot * (1.0 - self.headroom) {
+                self.scale += self.increase;
+            }
+            self.scale = self.scale.clamp(self.min_scale, 1.0);
+        }
+        BudgetDirective {
+            p_scale: (0.5 + 0.5 * self.scale) as f32,
+            budget_scale: self.scale as f32,
+            ..BudgetDirective::NEUTRAL
+        }
+    }
+}
+
+/// Holds captured prune mass at `target_mass` and defends the recall
+/// floor measured by the dense probe.
+pub struct MassTarget {
+    p_scale: f64,
+    /// Desired captured-mass telemetry level.
+    pub target_mass: f64,
+    /// Tolerance band around the target.
+    pub band: f64,
+    /// Probe recall below this forces p back up regardless of mass.
+    pub recall_floor: f64,
+    /// Additive adjustment step per decision.
+    pub step: f64,
+}
+
+impl Default for MassTarget {
+    fn default() -> Self {
+        MassTarget { p_scale: 1.0, target_mass: 0.92, band: 0.03, recall_floor: 0.85, step: 0.01 }
+    }
+}
+
+impl GovernorPolicy for MassTarget {
+    fn name(&self) -> &'static str {
+        "mass"
+    }
+
+    fn decide(&mut self, s: &SignalSnapshot) -> BudgetDirective {
+        if s.probe_recall < self.recall_floor {
+            // Estimation is missing true top-p tokens: back off fast.
+            self.p_scale += 4.0 * self.step;
+        } else if s.mean_mass > 0.0 {
+            if s.mean_mass > self.target_mass + self.band {
+                self.p_scale -= self.step;
+            } else if s.mean_mass < self.target_mass - self.band {
+                self.p_scale += self.step;
+            }
+        }
+        self.p_scale = self.p_scale.clamp(0.6, 1.2);
+        BudgetDirective { p_scale: self.p_scale as f32, ..BudgetDirective::NEUTRAL }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_is_identity() {
+        let mut p = StaticPolicy;
+        let d = p.decide(&SignalSnapshot::default());
+        assert_eq!(d, BudgetDirective::NEUTRAL);
+    }
+
+    #[test]
+    fn aimd_converges_on_synthetic_latency_series() {
+        // Plant: TPOT responds linearly to the budget scale with a fixed
+        // floor — tpot = base · (0.2 + 0.8·budget_scale). With base 20ms
+        // and a 10ms SLO the equilibrium is budget_scale ≈ 0.375.
+        let mut pol = AimdSlo::default();
+        let target = 0.010;
+        let base = 0.020;
+        let mut snap = SignalSnapshot { slo_tpot: target, tpot_ema: base, ..Default::default() };
+        let mut d = BudgetDirective::NEUTRAL;
+        for _ in 0..400 {
+            d = pol.decide(&snap).clamped();
+            snap.tpot_ema = base * (0.2 + 0.8 * d.budget_scale as f64);
+        }
+        assert!(
+            snap.tpot_ema <= target * 1.2,
+            "AIMD failed to bring TPOT near target: {} vs {}",
+            snap.tpot_ema,
+            target
+        );
+        assert!(
+            d.budget_scale > 0.2 && (d.budget_scale as f64) < 0.6,
+            "scale should hover near the 0.375 equilibrium, got {}",
+            d.budget_scale
+        );
+        // p is cut by at most half the budget's reduction.
+        assert!(d.p_scale >= d.budget_scale);
+    }
+
+    #[test]
+    fn aimd_recovers_with_headroom() {
+        let mut pol = AimdSlo::default();
+        let snap_hot =
+            SignalSnapshot { slo_tpot: 0.010, tpot_ema: 0.050, ..Default::default() };
+        for _ in 0..50 {
+            pol.decide(&snap_hot);
+        }
+        let floor = pol.decide(&snap_hot).clamped();
+        assert!((floor.budget_scale as f64 - pol.min_scale).abs() < 1e-6);
+        // Load vanishes: scale walks back to neutral additively.
+        let snap_idle =
+            SignalSnapshot { slo_tpot: 0.010, tpot_ema: 0.001, ..Default::default() };
+        let mut d = floor;
+        for _ in 0..100 {
+            d = pol.decide(&snap_idle).clamped();
+        }
+        assert!((d.budget_scale - 1.0).abs() < 1e-6, "did not recover: {}", d.budget_scale);
+        assert!((d.p_scale - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn aimd_holds_without_slo() {
+        let mut pol = AimdSlo::default();
+        let snap = SignalSnapshot { slo_tpot: 0.0, tpot_ema: 99.0, ..Default::default() };
+        for _ in 0..10 {
+            let d = pol.decide(&snap);
+            assert_eq!(d.budget_scale, 1.0, "no SLO → no adaptation");
+        }
+    }
+
+    #[test]
+    fn mass_target_steers_p_both_ways() {
+        let mut pol = MassTarget::default();
+        let over = SignalSnapshot { mean_mass: 0.99, ..Default::default() };
+        let mut d = BudgetDirective::NEUTRAL;
+        for _ in 0..20 {
+            d = pol.decide(&over);
+        }
+        assert!(d.p_scale < 1.0, "overshooting mass must lower p, got {}", d.p_scale);
+        let under = SignalSnapshot { mean_mass: 0.5, ..Default::default() };
+        for _ in 0..40 {
+            d = pol.decide(&under);
+        }
+        assert!(d.p_scale > 1.0, "starved mass must raise p, got {}", d.p_scale);
+    }
+
+    #[test]
+    fn mass_target_defends_recall_floor() {
+        let mut pol = MassTarget::default();
+        // High mass says "prune harder" but the probe says estimation is
+        // missing true top-p tokens — recall wins.
+        let snap = SignalSnapshot { mean_mass: 0.99, probe_recall: 0.5, ..Default::default() };
+        let before = pol.decide(&snap).p_scale;
+        let after = pol.decide(&snap).p_scale;
+        assert!(after >= before, "recall floor must push p up");
+        for _ in 0..40 {
+            pol.decide(&snap);
+        }
+        let d = pol.decide(&snap);
+        assert!((d.p_scale - 1.2).abs() < 1e-6, "should saturate at the cap, got {}", d.p_scale);
+    }
+}

@@ -1,0 +1,139 @@
+//! Memory-pressure degradation ladder.
+//!
+//! The page pool running dry forces the scheduler into recompute
+//! preemption — the most expensive possible response (a victim's whole
+//! prefill is redone). The ladder degrades service *gradually* before
+//! that cliff, in the order the knobs are cheapest to give up:
+//!
+//! | level | free headroom     | action                                  |
+//! |-------|-------------------|-----------------------------------------|
+//! | 0     | comfortable       | none                                    |
+//! | 1     | `< tighten_below` | tighten p (prune harder, steps faster)  |
+//! | 2     | `< shrink_below`  | also shrink the stage-1 budget B0       |
+//! | 3     | `< dense_guard`   | also raise `dense_below` so short       |
+//! |       |                   | contexts skip selection entirely, and   |
+//! |       |                   | the scheduler freezes admission         |
+//!
+//! Raising `dense_below` at level 3 is an accuracy guard, not a speed
+//! knob: with p and B0 both cut, short contexts would pay the full
+//! estimation error for negligible savings — running them dense keeps
+//! them exact while long contexts carry the degradation.
+
+use super::BudgetDirective;
+
+/// Ladder thresholds (fractions of the page pool still free) and the
+/// per-level knob values.
+#[derive(Clone, Copy, Debug)]
+pub struct PressureConfig {
+    /// Below this free fraction: level 1 (tighten p).
+    pub tighten_below: f64,
+    /// Below this free fraction: level 2 (also shrink B0).
+    pub shrink_below: f64,
+    /// Below this free fraction: level 3 (dense guard + admission freeze).
+    pub dense_guard_below: f64,
+    /// p multiplier applied from level 1.
+    pub p_scale: f32,
+    /// B0 multiplier applied from level 2.
+    pub budget_scale: f32,
+    /// `dense_below` override applied at level 3.
+    pub dense_below: usize,
+}
+
+impl Default for PressureConfig {
+    fn default() -> Self {
+        PressureConfig {
+            tighten_below: 0.25,
+            shrink_below: 0.12,
+            dense_guard_below: 0.05,
+            p_scale: 0.9,
+            budget_scale: 0.6,
+            dense_below: 256,
+        }
+    }
+}
+
+impl PressureConfig {
+    /// Degradation level for the observed free-page fraction.
+    pub fn level(&self, free_frac: f64) -> u8 {
+        if free_frac < self.dense_guard_below {
+            3
+        } else if free_frac < self.shrink_below {
+            2
+        } else if free_frac < self.tighten_below {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// Overlay the ladder on a policy's directive: pressure can only make
+    /// the directive *tighter* (min of scales), never relax it.
+    pub fn apply(&self, level: u8, d: &mut BudgetDirective) {
+        d.degrade_level = level;
+        if level >= 1 {
+            d.p_scale = d.p_scale.min(self.p_scale);
+        }
+        if level >= 2 {
+            d.budget_scale = d.budget_scale.min(self.budget_scale);
+        }
+        if level >= 3 {
+            let floor = d.dense_below_override.unwrap_or(0).max(self.dense_below);
+            d.dense_below_override = Some(floor);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_triggers_in_order() {
+        let c = PressureConfig::default();
+        let mut last = 0u8;
+        // Free fraction draining from comfortable to exhausted: levels
+        // must be monotone non-decreasing and hit every rung in order.
+        let mut seen = vec![];
+        for i in 0..=100 {
+            let free = 1.0 - i as f64 / 100.0;
+            let l = c.level(free);
+            assert!(l >= last, "level dropped while pressure rose");
+            if l != last || seen.is_empty() {
+                seen.push(l);
+            }
+            last = l;
+        }
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn overlay_tightens_monotonically() {
+        let c = PressureConfig::default();
+        let mut prev_p = f32::INFINITY;
+        let mut prev_b = f32::INFINITY;
+        for level in 0..=3u8 {
+            let mut d = BudgetDirective::NEUTRAL;
+            c.apply(level, &mut d);
+            assert_eq!(d.degrade_level, level);
+            assert!(d.p_scale <= prev_p);
+            assert!(d.budget_scale <= prev_b);
+            prev_p = d.p_scale;
+            prev_b = d.budget_scale;
+            if level >= 3 {
+                assert_eq!(d.dense_below_override, Some(c.dense_below));
+            } else {
+                assert_eq!(d.dense_below_override, None);
+            }
+        }
+    }
+
+    #[test]
+    fn overlay_never_relaxes_policy() {
+        let c = PressureConfig::default();
+        // Policy already tighter than the ladder: pressure keeps it.
+        let mut d = BudgetDirective { p_scale: 0.6, budget_scale: 0.3, ..BudgetDirective::NEUTRAL };
+        c.apply(2, &mut d);
+        assert_eq!(d.p_scale, 0.6);
+        assert_eq!(d.budget_scale, 0.3);
+    }
+}

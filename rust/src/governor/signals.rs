@@ -1,0 +1,299 @@
+//! Signal aggregation: the telemetry streams the governor closes the
+//! loop on (DESIGN.md §8).
+//!
+//! Three producers feed the hub:
+//! * the **engine** records per-layer prune telemetry (estimated mass
+//!   captured, kept/candidate ratio) into bounded rings after every
+//!   pruned attention call, plus a periodic *recall probe* — one pruned
+//!   head re-scored densely via `PagedKvCache::exact_score` to measure
+//!   estimated-vs-true top-p recall;
+//! * the **scheduler** reports step latency to the [`super::slo`]
+//!   tracker and page-pool headroom;
+//! * the governor snapshots everything once per scheduler step into a
+//!   [`SignalSnapshot`] for the policy to consume.
+
+/// Exponential moving average; seeds on the first sample.
+#[derive(Clone, Copy, Debug)]
+pub struct Ema {
+    alpha: f64,
+    value: f64,
+    samples: u64,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Ema {
+        Ema { alpha, value: 0.0, samples: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.samples == 0 {
+            self.value = x;
+        } else {
+            self.value = self.alpha * x + (1.0 - self.alpha) * self.value;
+        }
+        self.samples += 1;
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value
+    }
+
+    /// True once at least one sample has landed.
+    pub fn is_warm(&self) -> bool {
+        self.samples > 0
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+}
+
+/// Fixed-capacity ring of recent observations with an O(1) running sum.
+#[derive(Clone, Debug)]
+pub struct Ring {
+    buf: Vec<f64>,
+    next: usize,
+    filled: usize,
+    sum: f64,
+}
+
+impl Ring {
+    pub fn new(capacity: usize) -> Ring {
+        assert!(capacity > 0);
+        Ring { buf: vec![0.0; capacity], next: 0, filled: 0, sum: 0.0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.filled == self.buf.len() {
+            self.sum -= self.buf[self.next];
+        } else {
+            self.filled += 1;
+        }
+        self.sum += x;
+        self.buf[self.next] = x;
+        self.next = (self.next + 1) % self.buf.len();
+    }
+
+    pub fn len(&self) -> usize {
+        self.filled
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.filled == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.filled == 0 {
+            0.0
+        } else {
+            self.sum / self.filled as f64
+        }
+    }
+}
+
+/// Per-layer prune telemetry ring pair.
+#[derive(Clone, Debug)]
+pub struct LayerSignal {
+    /// Estimated attention mass captured by the kept set (mean over the
+    /// GQA group per call).
+    pub mass: Ring,
+    /// |kept-union| / |candidates| per call.
+    pub keep_ratio: Ring,
+}
+
+impl LayerSignal {
+    fn new(window: usize) -> LayerSignal {
+        LayerSignal { mass: Ring::new(window), keep_ratio: Ring::new(window) }
+    }
+}
+
+/// Default ring window (per layer, in pruned attention calls).
+pub const DEFAULT_WINDOW: usize = 256;
+
+/// Default recall-probe cadence (one probe per this many sparse calls).
+pub const DEFAULT_PROBE_INTERVAL: u64 = 64;
+
+/// The accuracy-proxy signal store, owned by the engine.
+#[derive(Clone, Debug)]
+pub struct SignalHub {
+    layers: Vec<LayerSignal>,
+    probe_recall: Ema,
+    probe_interval: u64,
+}
+
+impl SignalHub {
+    pub fn new(n_layers: usize) -> SignalHub {
+        SignalHub {
+            layers: (0..n_layers).map(|_| LayerSignal::new(DEFAULT_WINDOW)).collect(),
+            probe_recall: Ema::new(0.2),
+            probe_interval: DEFAULT_PROBE_INTERVAL,
+        }
+    }
+
+    /// Record one pruned attention call's telemetry for `layer`.
+    pub fn record_prune(&mut self, layer: usize, mean_mass: f64, keep_ratio: f64) {
+        if let Some(l) = self.layers.get_mut(layer) {
+            l.mass.push(mean_mass);
+            l.keep_ratio.push(keep_ratio);
+        }
+    }
+
+    /// True when the periodic recall probe should run on this call.
+    pub fn probe_due(&self, sparse_calls: u64) -> bool {
+        self.probe_interval > 0 && sparse_calls % self.probe_interval == 0
+    }
+
+    /// Record an estimated-vs-true top-p recall measurement (0..=1).
+    pub fn record_probe(&mut self, recall: f64) {
+        self.probe_recall.push(recall.clamp(0.0, 1.0));
+    }
+
+    /// EMA of probe recall; 1.0 until the first probe lands (optimistic:
+    /// no evidence of estimation error yet).
+    pub fn probe_recall(&self) -> f64 {
+        if self.probe_recall.is_warm() {
+            self.probe_recall.get()
+        } else {
+            1.0
+        }
+    }
+
+    pub fn probes(&self) -> u64 {
+        self.probe_recall.samples()
+    }
+
+    /// Per-layer window means, for reports.
+    pub fn layer_mass(&self, layer: usize) -> f64 {
+        self.layers.get(layer).map(|l| l.mass.mean()).unwrap_or(0.0)
+    }
+
+    /// Mean captured mass across layers with data.
+    pub fn mean_mass(&self) -> f64 {
+        mean_over(self.layers.iter().filter(|l| !l.mass.is_empty()).map(|l| l.mass.mean()))
+    }
+
+    /// Mean kept/candidate ratio across layers with data.
+    pub fn mean_keep_ratio(&self) -> f64 {
+        mean_over(
+            self.layers
+                .iter()
+                .filter(|l| !l.keep_ratio.is_empty())
+                .map(|l| l.keep_ratio.mean()),
+        )
+    }
+
+    /// True once any prune telemetry has been recorded.
+    pub fn has_prune_data(&self) -> bool {
+        self.layers.iter().any(|l| !l.mass.is_empty())
+    }
+}
+
+fn mean_over<I: Iterator<Item = f64>>(it: I) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for x in it {
+        sum += x;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Everything a policy sees for one decision, in one flat struct.
+#[derive(Clone, Copy, Debug)]
+pub struct SignalSnapshot {
+    /// Virtual time of the decision (seconds since trace start).
+    pub now: f64,
+    /// EMA of observed time-per-output-token (seconds); 0 until warm.
+    pub tpot_ema: f64,
+    /// TPOT target from the SLO (seconds); 0 disables latency control.
+    pub slo_tpot: f64,
+    /// Free fraction of the KV page pool (0 = exhausted).
+    pub free_frac: f64,
+    /// Requests waiting for admission.
+    pub queue_depth: usize,
+    /// Requests currently decoding.
+    pub running: usize,
+    /// Mean estimated mass captured by pruning (window mean over layers).
+    pub mean_mass: f64,
+    /// Mean kept/candidate ratio.
+    pub mean_keep_ratio: f64,
+    /// EMA of the dense recall probe (1.0 until the first probe).
+    pub probe_recall: f64,
+    /// Engine decode steps so far.
+    pub steps: u64,
+}
+
+impl Default for SignalSnapshot {
+    fn default() -> Self {
+        SignalSnapshot {
+            now: 0.0,
+            tpot_ema: 0.0,
+            slo_tpot: 0.0,
+            free_frac: 1.0,
+            queue_depth: 0,
+            running: 0,
+            mean_mass: 0.0,
+            mean_keep_ratio: 0.0,
+            probe_recall: 1.0,
+            steps: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_seeds_then_smooths() {
+        let mut e = Ema::new(0.5);
+        assert!(!e.is_warm());
+        e.push(10.0);
+        assert_eq!(e.get(), 10.0);
+        e.push(0.0);
+        assert!((e.get() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_mean_over_window() {
+        let mut r = Ring::new(4);
+        assert_eq!(r.mean(), 0.0);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            r.push(x);
+        }
+        assert!((r.mean() - 2.5).abs() < 1e-12);
+        r.push(5.0); // evicts 1.0
+        assert_eq!(r.len(), 4);
+        assert!((r.mean() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hub_aggregates_layers() {
+        let mut h = SignalHub::new(2);
+        assert!(!h.has_prune_data());
+        assert_eq!(h.probe_recall(), 1.0);
+        h.record_prune(0, 0.9, 0.2);
+        h.record_prune(1, 0.7, 0.4);
+        assert!(h.has_prune_data());
+        assert!((h.mean_mass() - 0.8).abs() < 1e-12);
+        assert!((h.mean_keep_ratio() - 0.3).abs() < 1e-12);
+        assert!((h.layer_mass(1) - 0.7).abs() < 1e-12);
+        // Out-of-range layer: silently ignored (dense layers never record).
+        h.record_prune(9, 1.0, 1.0);
+        h.record_probe(0.5);
+        assert!(h.probe_recall() < 1.0);
+        assert_eq!(h.probes(), 1);
+    }
+
+    #[test]
+    fn probe_cadence() {
+        let h = SignalHub::new(1);
+        assert!(h.probe_due(0));
+        assert!(!h.probe_due(1));
+        assert!(h.probe_due(DEFAULT_PROBE_INTERVAL));
+    }
+}

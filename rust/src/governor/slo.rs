@@ -1,0 +1,133 @@
+//! Latency SLO tracking: observed step time vs. a TPOT target.
+//!
+//! Under continuous batching every running request advances one token
+//! per scheduler step, so the per-request time-per-output-token *is* the
+//! step duration — the tracker EMAs step durations (only steps that
+//! actually produced tokens; admission-only steps are skipped) and
+//! classifies the current state against the target.
+
+use super::signals::Ema;
+
+/// SLO configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    /// Target time-per-output-token in seconds. `0.0` disables latency
+    /// control (the tracker still measures).
+    pub target_tpot_s: f64,
+    /// Comfort margin: observed TPOT below `target * (1 - margin)` counts
+    /// as headroom (safe to relax sparsity).
+    pub margin: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig { target_tpot_s: 0.0, margin: 0.2 }
+    }
+}
+
+/// Step-latency tracker.
+#[derive(Clone, Debug)]
+pub struct SloTracker {
+    pub cfg: SloConfig,
+    tpot: Ema,
+    observations: u64,
+    violations: u64,
+}
+
+impl SloTracker {
+    pub fn new(cfg: SloConfig) -> SloTracker {
+        SloTracker { cfg, tpot: Ema::new(0.1), observations: 0, violations: 0 }
+    }
+
+    /// Record one scheduler step: wall-clock duration and tokens produced.
+    pub fn observe_step(&mut self, step_secs: f64, produced: usize) {
+        if produced == 0 {
+            return;
+        }
+        self.tpot.push(step_secs);
+        self.observations += 1;
+        if self.cfg.target_tpot_s > 0.0 && step_secs > self.cfg.target_tpot_s {
+            self.violations += 1;
+        }
+    }
+
+    /// Current TPOT EMA (seconds); 0 until the first observation.
+    pub fn tpot_ema(&self) -> f64 {
+        if self.tpot.is_warm() {
+            self.tpot.get()
+        } else {
+            0.0
+        }
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Fraction of observed steps over target.
+    pub fn violation_rate(&self) -> f64 {
+        if self.observations == 0 {
+            0.0
+        } else {
+            self.violations as f64 / self.observations as f64
+        }
+    }
+
+    /// Observed EMA exceeds the target.
+    pub fn is_violating(&self) -> bool {
+        self.cfg.target_tpot_s > 0.0 && self.tpot.is_warm() && self.tpot.get() > self.cfg.target_tpot_s
+    }
+
+    /// Observed EMA is comfortably under the target.
+    pub fn has_headroom(&self) -> bool {
+        self.cfg.target_tpot_s > 0.0
+            && self.tpot.is_warm()
+            && self.tpot.get() < self.cfg.target_tpot_s * (1.0 - self.cfg.margin)
+    }
+
+    /// Change the target at runtime (the server's `slo` command).
+    pub fn set_target(&mut self, target_tpot_s: f64) {
+        self.cfg.target_tpot_s = target_tpot_s.max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_violations_and_headroom() {
+        let mut t = SloTracker::new(SloConfig { target_tpot_s: 0.010, margin: 0.2 });
+        assert!(!t.is_violating());
+        assert!(!t.has_headroom());
+        t.observe_step(0.020, 4);
+        assert!(t.is_violating());
+        assert!((t.violation_rate() - 1.0).abs() < 1e-12);
+        // Drive the EMA well under target.
+        for _ in 0..100 {
+            t.observe_step(0.001, 4);
+        }
+        assert!(!t.is_violating());
+        assert!(t.has_headroom());
+        assert!(t.violation_rate() < 0.05);
+    }
+
+    #[test]
+    fn empty_steps_ignored() {
+        let mut t = SloTracker::new(SloConfig { target_tpot_s: 0.010, margin: 0.2 });
+        t.observe_step(99.0, 0);
+        assert_eq!(t.observations(), 0);
+        assert_eq!(t.tpot_ema(), 0.0);
+    }
+
+    #[test]
+    fn zero_target_never_violates() {
+        let mut t = SloTracker::new(SloConfig::default());
+        t.observe_step(10.0, 1);
+        assert!(!t.is_violating());
+        assert!(!t.has_headroom());
+        t.set_target(0.5);
+        t.observe_step(10.0, 1);
+        assert!(t.is_violating());
+    }
+}

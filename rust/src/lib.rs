@@ -8,7 +8,9 @@
 //!   continuous batcher, paged KV cache, token selectors (Quest, Double
 //!   Sparsity, MagicPIG, StreamingLLM, SnapKV, H2O), the **Twilight
 //!   pruner** (INT4 SpGEMV estimation → softmax → top-p binary search),
-//!   varlen sparse-attention kernels, metrics, and the CLI launcher.
+//!   the **budget governor** (runtime control plane closing the loop on
+//!   p / B0 against accuracy, latency, and memory signals), varlen
+//!   sparse-attention kernels, metrics, and the CLI launcher.
 //! * **L2 (JAX, build time)** — the decode-layer compute graph, lowered
 //!   once to HLO text and executed from Rust via PJRT (`runtime/`).
 //! * **L1 (Pallas, build time)** — the SpGEMV / top-p / sparse-attention
@@ -21,6 +23,7 @@
 pub mod attention;
 pub mod coordinator;
 pub mod evalsuite;
+pub mod governor;
 pub mod kvcache;
 pub mod model;
 pub mod pruner;

@@ -2,11 +2,16 @@
 //!
 //! ```text
 //! twilight serve   --model retrieval --addr 127.0.0.1:7070 --selector quest --p 0.95
+//!                  [--governor static|aimd|mass --slo-tpot-ms 25]
 //! twilight eval    --suite longbench --ctx 2048 --n 5
 //! twilight ppl     --budgets 16,32,64,128,256 --selector quest
 //! twilight bench   --ctx 4096 --steps 20            (quick latency check)
 //! twilight inspect --artifacts artifacts            (PJRT graphs)
 //! ```
+//!
+//! `--governor` attaches the adaptive budget governor (DESIGN.md §8):
+//! it closes the loop on p / B0 against prune-mass telemetry, the
+//! `--slo-tpot-ms` latency target, and KV page-pool pressure.
 
 use std::sync::Arc;
 
@@ -14,6 +19,8 @@ use twilight::coordinator::engine::Engine;
 use twilight::coordinator::scheduler::{Scheduler, SchedulerConfig};
 use twilight::coordinator::{server, SparseConfig};
 use twilight::evalsuite::{ppl, render_table, run_accuracy, suite_requests};
+use twilight::governor::slo::SloConfig;
+use twilight::governor::{Governor, GovernorConfig};
 use twilight::model::retrieval::build_retrieval_model;
 use twilight::model::weights;
 use twilight::selector::SelectorKind;
@@ -80,10 +87,31 @@ fn cmd_serve(a: &Args) {
         capacity
     );
     let engine = Engine::new(model, cfg, capacity);
-    let sched = Scheduler::new(
+    let mut sched = Scheduler::new(
         engine,
         SchedulerConfig { max_batch: a.usize_or("max-batch", 64), ..Default::default() },
     );
+    let gov_name = a.str_or("governor", "none");
+    if gov_name != "none" {
+        let slo_ms = a.f64_or("slo-tpot-ms", 0.0);
+        let gcfg = GovernorConfig {
+            slo: SloConfig { target_tpot_s: slo_ms / 1e3, ..Default::default() },
+            ..Default::default()
+        };
+        match Governor::new(&gov_name, gcfg) {
+            Some(g) => {
+                twilight::log_info!(
+                    "governor={gov_name} slo_tpot={}",
+                    if slo_ms > 0.0 { format!("{slo_ms}ms") } else { "off".to_string() }
+                );
+                sched.attach_governor(g);
+            }
+            None => {
+                eprintln!("unknown governor '{gov_name}' (use static, aimd, or mass)");
+                std::process::exit(2);
+            }
+        }
+    }
     let addr = a.str_or("addr", "127.0.0.1:7070");
     if let Err(e) = server::serve(sched, &addr) {
         eprintln!("server error: {e}");

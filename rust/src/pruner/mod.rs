@@ -78,23 +78,41 @@ pub fn prune_head(
         *x *= s;
     }
     crate::tensor::softmax_inplace(&mut scratch.scores);
-    // (3) top-p.
+    // (3) top-p, (4) min_keep floor with truthful mass.
     let r = if cfg.use_sort {
         topp::topp_sort(&scratch.scores, cfg.p)
     } else {
         topp::topp_binary_search(&scratch.scores, cfg.p, cfg.eps)
     };
-    let mut kept: Vec<usize> = r.indices.iter().map(|&i| candidates[i]).collect();
-    // (4) floor: keep the top-scoring tokens if we pruned below min_keep.
-    if kept.len() < cfg.min_keep {
-        let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by(|&a, &b| {
-            scratch.scores[b].partial_cmp(&scratch.scores[a]).unwrap_or(std::cmp::Ordering::Equal)
-        });
-        kept = order.iter().take(cfg.min_keep).map(|&i| candidates[i]).collect();
-        kept.sort_unstable();
+    let (kept, mass) = floor_min_keep(&scratch.scores, candidates, &r, cfg.min_keep);
+    PruneOutcome { kept, mass, iters: r.iters }
+}
+
+/// Apply the `min_keep` floor to a top-p result: when fewer than
+/// `min_keep` tokens survived, keep the `min_keep` top-scoring candidates
+/// instead — and recompute the captured mass over the floored set. The
+/// governor steers on `PruneOutcome::mass`, so reporting the pre-floor
+/// mass would understate what the kept set actually captures exactly when
+/// the floor is active (peaked heads), biasing the controller.
+fn floor_min_keep(
+    scores: &[f32],
+    candidates: &[usize],
+    r: &topp::ToppResult,
+    min_keep: usize,
+) -> (Vec<usize>, f32) {
+    if r.indices.len() >= min_keep {
+        return (r.indices.iter().map(|&i| candidates[i]).collect(), r.mass);
     }
-    PruneOutcome { kept, mass: r.mass, iters: r.iters }
+    let n = scores.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    order.truncate(min_keep.min(n));
+    let mass = order.iter().map(|&i| scores[i]).sum();
+    let mut kept: Vec<usize> = order.iter().map(|&i| candidates[i]).collect();
+    kept.sort_unstable();
+    (kept, mass)
 }
 
 /// Prune for a GQA group: `qs` is `[group * d]` query heads sharing
@@ -137,17 +155,9 @@ pub fn prune_group(
         } else {
             topp::topp_binary_search(row, cfg.p, cfg.eps)
         };
-        let mut kept: Vec<usize> = r.indices.iter().map(|&i| candidates[i]).collect();
-        if kept.len() < cfg.min_keep {
-            let mut order: Vec<usize> = (0..n).collect();
-            order.sort_by(|&a, &b| {
-                row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal)
-            });
-            kept = order.iter().take(cfg.min_keep).map(|&i| candidates[i]).collect();
-            kept.sort_unstable();
-        }
+        let (kept, mass) = floor_min_keep(row, candidates, &r, cfg.min_keep);
         union.extend_from_slice(&kept);
-        outcomes.push(PruneOutcome { kept, mass: r.mass, iters: r.iters });
+        outcomes.push(PruneOutcome { kept, mass, iters: r.iters });
     }
     union.sort_unstable();
     union.dedup();
@@ -207,6 +217,41 @@ mod tests {
         let cfg = PrunerConfig { p: 0.0001, min_keep: 8, ..Default::default() };
         let out = prune_head(&cfg, &cache, &seq, 0, &q, &candidates, &mut scratch);
         assert!(out.kept.len() >= 8);
+    }
+
+    #[test]
+    fn floored_mass_recomputed_over_kept_set() {
+        // With p≈0 the raw top-p set is a single token; the min_keep floor
+        // widens it to 8, and the reported mass must cover all 8 (strictly
+        // more than the single-token mass — softmax weights are positive).
+        let (cache, seq) = random_cache(43, 1, 16, 64);
+        let q = random_q(44, 16);
+        let candidates: Vec<usize> = (0..64).collect();
+        let mut scratch = PrunerScratch::default();
+        let tiny = prune_head(
+            &PrunerConfig { p: 0.0001, min_keep: 1, ..Default::default() },
+            &cache, &seq, 0, &q, &candidates, &mut scratch,
+        );
+        let floored = prune_head(
+            &PrunerConfig { p: 0.0001, min_keep: 8, ..Default::default() },
+            &cache, &seq, 0, &q, &candidates, &mut scratch,
+        );
+        assert_eq!(floored.kept.len(), 8);
+        assert!(floored.kept.windows(2).all(|w| w[0] < w[1]));
+        assert!(
+            floored.mass > tiny.mass,
+            "floored mass {} must exceed pre-floor mass {}",
+            floored.mass,
+            tiny.mass
+        );
+        assert!(floored.mass <= 1.0 + 1e-5);
+        // The group path shares the same floor helper.
+        let (_, outs) = prune_group(
+            &PrunerConfig { p: 0.0001, min_keep: 8, ..Default::default() },
+            &cache, &seq, 0, &q, 1, &candidates, &mut scratch,
+        );
+        assert_eq!(outs[0].kept, floored.kept);
+        assert!((outs[0].mass - floored.mass).abs() < 1e-5);
     }
 
     #[test]

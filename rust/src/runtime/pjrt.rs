@@ -1,0 +1,144 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, written
+//! once by `python/compile/aot.py`) and executes them on the request path
+//! through the `xla` crate's PJRT CPU client.
+//!
+//! HLO *text* is the interchange format (see aot.py / DESIGN.md §1): the
+//! text parser reassigns instruction ids, avoiding the 64-bit-id protos
+//! that xla_extension 0.5.1 rejects. Executables are compiled on first
+//! use and cached for the life of the process — Python is never invoked.
+
+pub use xla::Literal;
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+
+/// True when the crate was built with a working PJRT backend.
+pub fn available() -> bool {
+    true
+}
+
+/// A loaded artifact store + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: String,
+    manifest: Json,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`).
+    pub fn open(dir: &str) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let manifest_path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {manifest_path} — run `make artifacts` first"))?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("{manifest_path}: {e}"))?;
+        Ok(Runtime { client, dir: dir.to_string(), manifest, exes: HashMap::new() })
+    }
+
+    /// Platform string of the PJRT backend.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names of available graphs.
+    pub fn graphs(&self) -> Vec<String> {
+        match &self.manifest {
+            Json::Obj(kv) => kv.iter().map(|(k, _)| k.clone()).collect(),
+            _ => vec![],
+        }
+    }
+
+    /// Compile (or fetch cached) an executable by manifest name.
+    pub fn ensure(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let file = self
+            .manifest
+            .get(name)
+            .and_then(|e| e.get_str("file"))
+            .ok_or_else(|| anyhow!("graph '{name}' not in manifest"))?;
+        let path = format!("{}/{}", self.dir, file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a graph with literal inputs; returns the decomposed output
+    /// tuple as literals.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.ensure(name)?;
+        let exe = self.exes.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        Ok(result.to_tuple()?)
+    }
+
+    /// Execute and convert every output to an f32 [`Tensor`].
+    pub fn execute_f32(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let outs = self.execute(name, inputs)?;
+        outs.into_iter().map(literal_to_tensor).collect()
+    }
+}
+
+/// Build an f32 literal from a tensor.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Build an i32 scalar literal.
+pub fn i32_scalar(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Build an f32 scalar literal.
+pub fn f32_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Build an i32 vector literal with shape.
+pub fn i32_vec(xs: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(xs);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Convert a (non-tuple) literal to an f32 tensor.
+pub fn literal_to_tensor(lit: xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::from_vec(data, &dims))
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT execution is covered by `rust/tests/hlo_parity.rs` (needs the
+    // artifacts from `make artifacts`); here we only test the pure
+    // conversion helpers.
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        let l = i32_scalar(42);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![42]);
+        let f = f32_scalar(0.5);
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![0.5]);
+    }
+}

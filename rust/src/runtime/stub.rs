@@ -1,0 +1,171 @@
+//! Dependency-free stand-in for the PJRT runtime (built when the `pjrt`
+//! feature is off — the offline environment carries neither the `xla`
+//! crate nor its xla_extension shared library).
+//!
+//! The API mirrors `runtime/pjrt.rs` exactly: the conversion helpers and
+//! [`Literal`] are fully functional (pure Rust), while [`Runtime::open`]
+//! reports that graph execution is unavailable so callers (the CLI
+//! `inspect` command, `rust/tests/hlo_parity.rs`) can degrade gracefully.
+
+use crate::tensor::Tensor;
+use std::fmt;
+
+/// True when the crate was built with a working PJRT backend.
+pub fn available() -> bool {
+    false
+}
+
+/// Runtime error (the stub's analog of the pjrt path's `anyhow::Error`).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(RuntimeError(
+        "twilight was built without the `pjrt` feature; rebuild with \
+         `--features pjrt` (plus the `xla` and `anyhow` dependencies, see \
+         Cargo.toml) to execute HLO artifacts"
+            .to_string(),
+    ))
+}
+
+/// Host-side literal: shaped f32 or i32 data (what the `xla` crate's
+/// `Literal` holds for the dtypes this stack uses).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl Literal {
+    /// Logical dimensions.
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Literal::F32 { dims, .. } | Literal::I32 { dims, .. } => dims,
+        }
+    }
+
+    /// The f32 payload, if this is an f32 literal.
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Literal::F32 { data, .. } => Some(data),
+            Literal::I32 { .. } => None,
+        }
+    }
+
+    /// The i32 payload, if this is an i32 literal.
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Literal::I32 { data, .. } => Some(data),
+            Literal::F32 { .. } => None,
+        }
+    }
+}
+
+/// Stub runtime: opens never succeed (no PJRT client is linked in).
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Always fails in the stub build; the error says how to enable PJRT.
+    pub fn open(_dir: &str) -> Result<Runtime> {
+        unavailable()
+    }
+
+    /// Platform string of the PJRT backend.
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Names of available graphs.
+    pub fn graphs(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// Compile (or fetch cached) an executable by manifest name.
+    pub fn ensure(&mut self, _name: &str) -> Result<()> {
+        unavailable()
+    }
+
+    /// Execute a graph with literal inputs.
+    pub fn execute(&mut self, _name: &str, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    /// Execute and convert every output to an f32 [`Tensor`].
+    pub fn execute_f32(&mut self, _name: &str, _inputs: &[Literal]) -> Result<Vec<Tensor>> {
+        unavailable()
+    }
+}
+
+/// Build an f32 literal from a tensor.
+pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    Ok(Literal::F32 { data: t.data.clone(), dims: t.shape.clone() })
+}
+
+/// Build an i32 scalar literal.
+pub fn i32_scalar(x: i32) -> Literal {
+    Literal::I32 { data: vec![x], dims: vec![] }
+}
+
+/// Build an f32 scalar literal.
+pub fn f32_scalar(x: f32) -> Literal {
+    Literal::F32 { data: vec![x], dims: vec![] }
+}
+
+/// Build an i32 vector literal with shape.
+pub fn i32_vec(xs: &[i32], shape: &[usize]) -> Result<Literal> {
+    if xs.len() != shape.iter().product::<usize>() {
+        return Err(RuntimeError(format!(
+            "i32_vec: {} elements cannot reshape to {shape:?}",
+            xs.len()
+        )));
+    }
+    Ok(Literal::I32 { data: xs.to_vec(), dims: shape.to_vec() })
+}
+
+/// Convert a (non-tuple) literal to an f32 tensor.
+pub fn literal_to_tensor(lit: Literal) -> Result<Tensor> {
+    match lit {
+        Literal::F32 { data, dims } => Ok(Tensor::from_vec(data, &dims)),
+        Literal::I32 { .. } => Err(RuntimeError("literal is i32, not f32".to_string())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert_eq!(lit.dims(), &[2, 3]);
+        let back = literal_to_tensor(lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        assert_eq!(i32_scalar(42).as_i32(), Some(&[42][..]));
+        assert_eq!(f32_scalar(0.5).as_f32(), Some(&[0.5f32][..]));
+        assert!(i32_vec(&[1, 2, 3], &[4]).is_err());
+    }
+
+    #[test]
+    fn open_reports_unavailable() {
+        assert!(!available());
+        let e = Runtime::open("artifacts").err().unwrap();
+        assert!(e.to_string().contains("pjrt"));
+    }
+}

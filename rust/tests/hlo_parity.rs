@@ -16,6 +16,10 @@ use twilight::tensor::Tensor;
 use twilight::util::rng::Rng;
 
 fn artifacts() -> Option<String> {
+    if !twilight::runtime::available() {
+        eprintln!("SKIP: built without the `pjrt` feature (see Cargo.toml)");
+        return None;
+    }
     let dir = std::env::var("TWILIGHT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
         Some(dir)

@@ -8,6 +8,8 @@ use twilight::coordinator::request::Request;
 use twilight::coordinator::scheduler::{Scheduler, SchedulerConfig};
 use twilight::coordinator::{AttnVariant, SparseConfig};
 use twilight::evalsuite::{run_accuracy, suite_requests};
+use twilight::governor::slo::SloConfig;
+use twilight::governor::{BudgetDirective, Governor, GovernorConfig};
 use twilight::model::retrieval::build_retrieval_model;
 use twilight::selector::SelectorKind;
 use twilight::util::rng::Rng;
@@ -177,6 +179,68 @@ fn offload_arena_matches_resident() {
     let mut out_res = vec![0.0; d];
     twilight::attention::full::contiguous_full(&q, &k_res, &v_res, &mut out_res);
     assert_eq!(out_arena, out_res);
+}
+
+/// The governed scheduler under a bursty trace on an undersized page
+/// pool: the AIMD policy must tighten p / B0 against the (unattainable)
+/// TPOT SLO, the pressure ladder must engage as the pool drains, every
+/// directive must respect the safety clamps, and the run must complete
+/// cleanly despite preemption.
+#[test]
+fn governed_scheduler_adapts_under_bursty_load() {
+    let m = model(1 << 14);
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+    cfg.skip_layers = 0;
+    // ~188 pages per layer pool; one 512-token burst wants ~198 — the
+    // second burst runs straight into the pressure ladder.
+    let engine = Engine::new(m, cfg, 3000);
+    let mut sched = Scheduler::new(
+        engine,
+        SchedulerConfig { max_batch: 8, admit_headroom_pages: 0, ..Default::default() },
+    );
+    let gcfg = GovernorConfig {
+        slo: SloConfig { target_tpot_s: 1e-9, margin: 0.2 },
+        ..Default::default()
+    };
+    sched.attach_governor(Governor::new("aimd", gcfg).unwrap());
+    let mut rng = Rng::new(31);
+    let mut id = 0u64;
+    for burst in 0..2 {
+        for _ in 0..6 {
+            let g = gen_niah(&mut rng, V, 512);
+            let mut r = Request::new(id, g.prompt.clone(), 4);
+            r.arrival = burst as f64 * 0.25;
+            sched.submit(r);
+            id += 1;
+        }
+    }
+    let rep = sched.run_to_completion();
+    assert_eq!(rep.requests.len(), 12, "every bursty request must complete");
+    assert_eq!(sched.engine.num_seqs(), 0, "pages leaked");
+    let trace = &rep.governor;
+    assert!(!trace.is_empty(), "governed run must trace decisions");
+    // The SLO is unattainable: the budget must have been cut.
+    assert!(
+        trace.iter().any(|e| e.budget_scale < 1.0),
+        "AIMD never tightened under a 1ns TPOT SLO"
+    );
+    assert!(trace.iter().any(|e| e.p_scale < 1.0));
+    // The undersized pool must have engaged the pressure ladder.
+    assert!(
+        trace.iter().any(|e| e.degrade_level >= 1),
+        "pressure ladder never engaged on an undersized pool"
+    );
+    // Safety: every recorded directive inside the hard clamps.
+    for e in trace {
+        assert!(e.p_scale >= BudgetDirective::P_SCALE_RANGE.0);
+        assert!(e.p_scale <= BudgetDirective::P_SCALE_RANGE.1);
+        assert!(e.budget_scale >= BudgetDirective::BUDGET_SCALE_RANGE.0);
+        assert!(e.budget_scale <= BudgetDirective::BUDGET_SCALE_RANGE.1);
+        assert!(e.degrade_level <= 3);
+    }
+    // Telemetry flowed: captured-mass signal is live and sane.
+    assert!(trace.last().unwrap().mean_mass > 0.0);
+    assert!(trace.last().unwrap().mean_mass <= 1.0 + 1e-4);
 }
 
 /// Serving under load with mixed context lengths and arrivals: everything
