@@ -1,0 +1,119 @@
+//! Fig. 11 — load balancing with awareness of head dynamism (§4.2).
+//!
+//! Part 1: LPT vs round-robin makespan over a Twilight-skewed budget
+//! distribution (many focused heads with tiny budgets, a few diffuse
+//! heads near N) — the allocation strawman the paper argues against.
+//!
+//! Part 2: thread scaling of the *real* batched decode step: the engine
+//! flattens (sequence × kv-head) items, LPT-partitions them, and drains
+//! the buckets with `threadpool::parallel_for` workers. Ends with the
+//! bit-exactness check (threads=1 vs threads=4 logits must be identical).
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+use twilight::coordinator::balance::{
+    lpt_partition, makespan, round_robin_partition, WorkItem,
+};
+use twilight::coordinator::engine::{DecodeBatch, Engine};
+use twilight::coordinator::SparseConfig;
+use twilight::selector::SelectorKind;
+use twilight::util::rng::Rng;
+use twilight::workload::{gen_niah, RetrievalVocab};
+
+const V: RetrievalVocab = RetrievalVocab::DEFAULT;
+
+/// Twilight-like budget skew: ~15% diffuse heads (budget near N), the
+/// rest focused (tens of tokens).
+fn skewed_items(seed: u64, seqs: usize, heads: usize, n: usize) -> Vec<WorkItem> {
+    let mut r = Rng::new(seed);
+    let mut items = Vec::with_capacity(seqs * heads);
+    for s in 0..seqs {
+        for h in 0..heads {
+            let budget =
+                if r.chance(0.15) { r.range(n / 4, n) } else { r.range(8, 128.min(n)) };
+            items.push(WorkItem { seq: s as u32, kv_head: h as u32, budget });
+        }
+    }
+    items
+}
+
+fn main() {
+    common::header("Figure 11", "LPT vs round-robin + batched decode thread scaling");
+
+    // --- Part 1: makespan on skewed budgets ----------------------------
+    println!("makespan on skewed budgets (32 seqs × 8 kv-heads, N=16384):");
+    println!("{:<10} {:>12} {:>14} {:>10}", "workers", "LPT", "round-robin", "ratio");
+    let items = skewed_items(11, 32, 8, 16384);
+    let mut lpt_never_worse = true;
+    for workers in [2usize, 4, 8, 16] {
+        let lpt = makespan(&lpt_partition(&items, workers));
+        let rr = makespan(&round_robin_partition(&items, workers));
+        lpt_never_worse &= lpt <= rr;
+        println!("{workers:<10} {lpt:>12} {rr:>14} {:>9.2}x", rr as f64 / lpt as f64);
+    }
+    println!(
+        "LPT ≤ round-robin on every worker count: {}",
+        if lpt_never_worse { "OK" } else { "VIOLATED" }
+    );
+
+    // --- Part 2: thread scaling of the real batched step ---------------
+    let nseqs = 8;
+    let ctx = 2048;
+    let steps = 12;
+    let build = |threads: usize| -> (Engine, DecodeBatch) {
+        let model = Arc::new(twilight::model::retrieval::build_retrieval_model(V, 1 << 15));
+        let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+        cfg.skip_layers = 0;
+        cfg.dense_below = 16;
+        let mut e = Engine::new(model, cfg, (ctx + 64) * nseqs * 2);
+        e.threads = threads;
+        let mut r = Rng::new(5);
+        let mut toks = Vec::new();
+        for i in 0..nseqs as u64 {
+            let g = gen_niah(&mut r, V, ctx);
+            let _ = e.prefill(i, &g.prompt).unwrap();
+            toks.push((i, g.prompt[0]));
+        }
+        (e, DecodeBatch::new(toks))
+    };
+    println!("\nbatched decode, {nseqs} seqs × {ctx} ctx (quest+twi p=0.9):");
+    println!("{:<10} {:>12} {:>10}", "threads", "ms/step", "speedup");
+    let mut base_ms = 0.0;
+    for threads in [1usize, 2, 4, 8] {
+        let (mut e, batch) = build(threads);
+        // Warm.
+        for _ in 0..2 {
+            let _ = e.step_batch(&batch);
+        }
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            for res in e.step_batch(&batch) {
+                res.expect("OOM in bench");
+            }
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / steps as f64;
+        if threads == 1 {
+            base_ms = ms;
+        }
+        println!("{threads:<10} {ms:>12.3} {:>9.2}x", base_ms / ms);
+    }
+
+    // --- Bit-exactness: threads=1 ≡ threads=4 --------------------------
+    let run = |threads: usize| -> Vec<Vec<f32>> {
+        let (mut e, batch) = build(threads);
+        let mut out = Vec::new();
+        for _ in 0..4 {
+            for res in e.step_batch(&batch) {
+                out.push(res.expect("OOM in parity run"));
+            }
+        }
+        out
+    };
+    let parity = run(1) == run(4);
+    let verdict = if parity { "OK" } else { "FAILED" };
+    println!("\nbit-exact parity (threads=1 vs threads=4): {verdict}");
+    assert!(lpt_never_worse, "LPT makespan exceeded round-robin");
+    assert!(parity, "multi-threaded decode diverged from sequential");
+}

@@ -8,10 +8,18 @@
 //! * [`spgemv`] — the score-estimation SpGEMV over the quantized mirror
 //!   K cache (Appendix B.1), at INT2/4/8/FP16.
 //!
-//! All kernels are single-(kv-)head primitives; batching across
-//! (sequence × head) work items is done by the coordinator through
-//! `util::threadpool::parallel_for`, mirroring FlashInfer's flattened
-//! head-dimension load balancing (§4.2 "Load Balancing").
+//! All kernels are single-(kv-)head primitives. Batching happens one
+//! level up, in the engine's batched decode step
+//! ([`crate::coordinator::engine::Engine::step_batch`]): each layer runs
+//! as three phases — (a) serial QKV projection + KV append for every
+//! sequence, (b) a flattened (sequence × kv-head) attention work list
+//! whose per-item cost is the resolved stage-1 budget, LPT-partitioned
+//! by [`crate::coordinator::balance::lpt_partition`] and drained by
+//! [`crate::util::threadpool::parallel_for`] workers (FlashInfer's
+//! flattened head-dimension load balancing, §4.2), and (c) serial
+//! rest-of-layer — with per-worker stats merged deterministically at
+//! each phase barrier so any worker count is bit-exact with sequential
+//! execution.
 
 pub mod full;
 pub mod sparse;

@@ -1,21 +1,67 @@
 //! The decode engine: wires the model forward pass to the paged KV cache,
 //! Token Selector, Twilight Pruner, and varlen attention kernels — the
 //! per-step pipeline of Fig. 5 — and keeps the Fig. 10 time breakdown.
+//!
+//! Decoding is *batched* (paper §4.2, "Load Balancing with Awareness of
+//! Head Dynamism"): the scheduler hands the engine its whole running set
+//! as one [`DecodeBatch`], and every layer executes as three phases —
+//!
+//! 1. **append** — QKV projection + KV append for all sequences, serial
+//!    (appends mutate the shared page pools);
+//! 2. **attend** — the (sequence × kv-head) pairs are flattened into one
+//!    work list whose per-item cost is the resolved stage-1 budget,
+//!    LPT-partitioned across workers ([`super::balance::lpt_partition`])
+//!    and drained by [`crate::util::threadpool::parallel_for`]; each
+//!    worker runs select → prune → varlen-attend with its own
+//!    [`PrunerScratch`], read-only cache access, and exclusive access to
+//!    its items' per-sequence selector state;
+//! 3. **rest-of-layer** — output projection + MLP for all sequences.
+//!
+//! Workers record stats and governor telemetry into per-item accumulators
+//! that are merged *in flattened item order* at the phase barrier, so
+//! [`EngineStats`], [`SignalHub`] contents, and the logits are bit-exact
+//! for any worker count (`TWILIGHT_THREADS=1` ≡ `TWILIGHT_THREADS=N`).
 
-use super::{AttnVariant, SparseConfig};
+use super::{balance, AttnVariant, SparseConfig};
 use crate::governor::signals::SignalHub;
 use crate::governor::BudgetDirective;
 use crate::kvcache::{CacheConfig, CacheError, PagedKvCache, SeqCache};
-use crate::model::{LayerBackend, Model};
-use crate::pruner::{prune_group, PruneOutcome, PrunerConfig, PrunerScratch};
+use crate::model::{BatchBackend, Model, ModelConfig};
+use crate::pruner::{prune_group, PrunerConfig, PrunerScratch};
 use crate::selector::{SelectorKind, TokenSelector};
 use crate::util::stats::Histogram;
+use crate::util::threadpool;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Engine-internal sequence id (the coordinator maps RequestId → SeqId).
 pub type SeqId = u64;
+
+/// One batched decode step: every entry advances one running sequence by
+/// one token. Ids must be distinct within a batch.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeBatch {
+    pub items: Vec<(SeqId, u32)>,
+}
+
+impl DecodeBatch {
+    pub fn new(items: Vec<(SeqId, u32)>) -> DecodeBatch {
+        DecodeBatch { items }
+    }
+
+    pub fn single(id: SeqId, tok: u32) -> DecodeBatch {
+        DecodeBatch { items: vec![(id, tok)] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
 
 /// Accumulated timing and budget statistics (Fig. 10 / Table budgets).
 #[derive(Clone, Debug)]
@@ -30,8 +76,13 @@ pub struct EngineStats {
     pub t_dense: f64,
     /// Seconds in everything else (projections, MLP, norms, sampling).
     pub t_other: f64,
-    /// Decode steps executed.
+    /// Batched decode steps executed (a batch of any size counts once:
+    /// under continuous batching, step time ≙ TPOT).
     pub steps: u64,
+    /// Prefill steps (one per prompt token pushed through the forward
+    /// pass). Kept separate from `steps` so TPOT-style per-step averages
+    /// are not skewed by prompt processing.
+    pub prefill_steps: u64,
     /// Sum of stage-1 candidate budgets (per kv-head per step).
     pub candidates_sum: u64,
     /// Sum of final kept budgets.
@@ -55,6 +106,7 @@ impl Default for EngineStats {
             t_dense: 0.0,
             t_other: 0.0,
             steps: 0,
+            prefill_steps: 0,
             candidates_sum: 0,
             kept_sum: 0,
             sparse_calls: 0,
@@ -114,7 +166,15 @@ pub struct Engine {
     pub signals: SignalHub,
     /// Runtime override from the governor; neutral when ungoverned.
     directive: BudgetDirective,
-    scratch: PrunerScratch,
+    /// Attention-phase worker count (`TWILIGHT_THREADS` by default; 1
+    /// reproduces strictly sequential execution bit for bit).
+    pub threads: usize,
+    /// Per-worker pruner scratch, reused across steps so the score
+    /// buffers (the large per-call allocations) only ever grow. The
+    /// attention phase still allocates step-scoped bookkeeping (work
+    /// list, per-item outputs) each layer; those are small and
+    /// proportional to batch × kv-heads, not to context length.
+    scratches: Vec<PrunerScratch>,
 }
 
 impl Engine {
@@ -134,7 +194,8 @@ impl Engine {
             stats: EngineStats::default(),
             signals: SignalHub::new(n_layers),
             directive: BudgetDirective::NEUTRAL,
-            scratch: PrunerScratch::default(),
+            threads: threadpool::default_threads(),
+            scratches: Vec::new(),
         }
     }
 
@@ -186,22 +247,36 @@ impl Engine {
         self.seqs.insert(id, st);
     }
 
+    /// Tokens per physical page (uniform across the layer pools).
+    fn page_size(&self) -> usize {
+        self.caches.first().map(|c| c.cfg.page_size).unwrap_or(16)
+    }
+
     /// True if a decode step for `id` cannot run out of pages.
     pub fn can_step(&self, id: SeqId) -> bool {
         match self.seqs.get(&id) {
             None => false,
             Some(st) => {
-                let needs_page = st.pos % 16 == 0;
+                let needs_page = st.pos % self.page_size() == 0;
                 !needs_page || self.caches.iter().all(|c| c.free_pages() >= 1)
             }
         }
+    }
+
+    /// True when the next decode step for `id` must allocate a fresh page
+    /// in every layer pool (the sequence sits on a page boundary). The
+    /// scheduler sums this over a batch to size its preemption decision.
+    pub fn needs_page(&self, id: SeqId) -> bool {
+        self.seqs.get(&id).map(|s| s.pos % self.page_size() == 0).unwrap_or(false)
     }
 
     /// Admit a sequence and prefill its prompt; returns the logits after
     /// the final prompt token (for sampling the first output token).
     ///
     /// Single-layer models use the O(n) embedding-KV fast path; deeper
-    /// models run a dense decode pass per token.
+    /// models run a dense decode pass per token. Either way the work is
+    /// accounted to `stats.prefill_steps`, not `stats.steps`, so decode
+    /// step counts and the governor's TPOT view stay truthful.
     pub fn prefill(&mut self, id: SeqId, prompt: &[u32]) -> Result<Vec<f32>, CacheError> {
         assert!(!prompt.is_empty());
         let st = self.new_state();
@@ -219,60 +294,107 @@ impl Engine {
                 }
                 self.seqs.get_mut(&id).unwrap().pos = pos + 1;
             }
-            self.decode(id, prompt[prompt.len() - 1])
+            self.prefill_step(id, prompt[prompt.len() - 1])
         } else {
             let mut logits = Vec::new();
             for &tok in prompt {
-                logits = self.decode(id, tok)?;
+                logits = self.prefill_step(id, tok)?;
             }
             Ok(logits)
         }
     }
 
-    /// One decode step: process `tok` at the sequence's current position,
-    /// return logits.
+    /// One decode step for a single sequence: process `tok` at the
+    /// sequence's current position, return logits. A batch of one.
     pub fn decode(&mut self, id: SeqId, tok: u32) -> Result<Vec<f32>, CacheError> {
-        let mut st = self.seqs.remove(&id).expect("unknown sequence");
-        let pos = st.pos;
+        self.run_batch(&DecodeBatch::single(id, tok), false).pop().unwrap()
+    }
+
+    /// One prompt token through the forward pass (accounted as prefill).
+    fn prefill_step(&mut self, id: SeqId, tok: u32) -> Result<Vec<f32>, CacheError> {
+        self.run_batch(&DecodeBatch::single(id, tok), true).pop().unwrap()
+    }
+
+    /// One batched decode step: advance every sequence in `batch` by one
+    /// token. Per-sequence results are returned in batch order; a
+    /// sequence that runs out of pages mid-step gets `Err` and is
+    /// released (the others are unaffected).
+    pub fn step_batch(&mut self, batch: &DecodeBatch) -> Vec<Result<Vec<f32>, CacheError>> {
+        self.run_batch(batch, false)
+    }
+
+    fn run_batch(
+        &mut self,
+        batch: &DecodeBatch,
+        prefill: bool,
+    ) -> Vec<Result<Vec<f32>, CacheError>> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
         let model = self.model.clone();
+        // Pull every sequence's state out of the map for the step: the
+        // attention workers need disjoint per-sequence selector state.
+        let mut sts: Vec<SeqState> = Vec::with_capacity(batch.len());
+        let mut toks: Vec<(u32, usize)> = Vec::with_capacity(batch.len());
+        for &(id, tok) in &batch.items {
+            let st = self.seqs.remove(&id).expect("unknown sequence");
+            toks.push((tok, st.pos));
+            sts.push(st);
+        }
+        let threads = self.threads.max(1);
+        if self.scratches.len() < threads {
+            self.scratches.resize_with(threads, PrunerScratch::default);
+        }
         let staged_before =
             self.stats.t_select + self.stats.t_prune + self.stats.t_attend + self.stats.t_dense;
         let t0 = Instant::now();
         let directive = self.directive;
-        let result = {
-            let mut backend = StepBackend {
-                caches: &mut self.caches,
-                st: &mut st,
-                cfg: &self.cfg,
-                model: &model,
-                stats: &mut self.stats,
-                signals: &mut self.signals,
-                directive,
-                scratch: &mut self.scratch,
-                error: None,
-            };
-            let logits = model.decode_step(tok, pos, &mut backend);
-            match backend.error.take() {
-                Some(e) => Err(e),
-                None => Ok(logits),
-            }
+        let probe_interval = self.signals.probe_interval();
+        let mut backend = BatchStepBackend {
+            caches: &mut self.caches,
+            sts: &mut sts,
+            errors: vec![None; batch.len()],
+            cfg: &self.cfg,
+            model: &model,
+            stats: &mut self.stats,
+            signals: &mut self.signals,
+            directive,
+            scratches: &mut self.scratches,
+            threads,
+            probe_interval,
         };
+        let logits = model.decode_batch(&toks, &mut backend);
+        let mut errors = backend.errors;
         let total = t0.elapsed().as_secs_f64();
-        st.pos = pos + 1;
-        self.stats.steps += 1;
-        self.seqs.insert(id, st);
-        if result.is_ok() {
-            // Everything not attributed to a stage is "other"
-            // (projections, MLP, norms, unembedding).
-            let staged_after = self.stats.t_select
-                + self.stats.t_prune
-                + self.stats.t_attend
-                + self.stats.t_dense;
-            self.stats.t_other += (total - (staged_after - staged_before)).max(0.0);
+        if prefill {
+            self.stats.prefill_steps += 1;
         } else {
-            self.release(id);
+            self.stats.steps += 1;
         }
-        result
+        // Everything not attributed to a stage is "other" (projections,
+        // MLP, norms, unembedding).
+        let staged_after =
+            self.stats.t_select + self.stats.t_prune + self.stats.t_attend + self.stats.t_dense;
+        self.stats.t_other += (total - (staged_after - staged_before)).max(0.0);
+        let mut results = Vec::with_capacity(batch.len());
+        for (i, (mut st, lg)) in sts.into_iter().zip(logits).enumerate() {
+            match errors[i].take() {
+                Some(e) => {
+                    // The sequence is already out of the map; return its
+                    // pages to the pools.
+                    for (layer, sc) in st.caches.iter().enumerate() {
+                        self.caches[layer].release(sc);
+                    }
+                    results.push(Err(e));
+                }
+                None => {
+                    st.pos += 1;
+                    self.seqs.insert(batch.items[i].0, st);
+                    results.push(Ok(lg));
+                }
+            }
+        }
+        results
     }
 
     /// Release a sequence's pages and state.
@@ -290,178 +412,415 @@ impl Engine {
     }
 }
 
-/// The per-step attention backend: implements the Select-then-Prune
-/// pipeline for every layer of one decode step.
-struct StepBackend<'a> {
+/// The batched per-step attention backend: implements the three-phase
+/// Select-then-Prune pipeline for every layer of one batched decode step.
+struct BatchStepBackend<'a> {
     caches: &'a mut [PagedKvCache],
-    st: &'a mut SeqState,
+    sts: &'a mut [SeqState],
+    errors: Vec<Option<CacheError>>,
     cfg: &'a SparseConfig,
     model: &'a Model,
     stats: &'a mut EngineStats,
     signals: &'a mut SignalHub,
     directive: BudgetDirective,
-    scratch: &'a mut PrunerScratch,
-    error: Option<CacheError>,
+    scratches: &'a mut [PrunerScratch],
+    threads: usize,
+    probe_interval: u64,
 }
 
-impl<'a> LayerBackend for StepBackend<'a> {
-    fn append_kv(&mut self, layer: usize, k: &[f32], v: &[f32]) {
-        if self.error.is_some() {
+/// One unit of phase-(b) attention work: a (sequence, kv-head) pair.
+struct AttnItem<'a> {
+    /// Flattened index (`seq * n_kv_heads + kv_head`): the deterministic
+    /// merge order at the phase barrier.
+    flat: usize,
+    seq: usize,
+    kv_head: usize,
+    layer: usize,
+    /// Context length (tokens in this sequence's cache).
+    n: usize,
+    dense: bool,
+    /// Resolved stage-1 budget (sparse items only).
+    budget: usize,
+    /// Global sparse-call index, assigned serially at flatten time so
+    /// the recall-probe cadence is identical for any worker count.
+    call_idx: u64,
+    selector: &'a mut Box<dyn TokenSelector>,
+    cache: &'a PagedKvCache,
+    seq_cache: &'a SeqCache,
+    /// This KV group's query heads, `[group * head_dim]`.
+    qs: &'a [f32],
+}
+
+/// The result of one attention work item, merged at the phase barrier in
+/// `flat` order so stats and telemetry are deterministic under any
+/// worker count.
+struct AttnItemOut {
+    flat: usize,
+    seq: usize,
+    kv_head: usize,
+    out: Vec<f32>,
+    t_select: f64,
+    t_prune: f64,
+    t_attend: f64,
+    t_dense: f64,
+    bytes_select: u64,
+    bytes_prune: u64,
+    bytes_attend: u64,
+    sparse: bool,
+    candidates: usize,
+    kept: usize,
+    /// `(layer, mean mass, keep ratio)` when the pruner ran.
+    prune_record: Option<(usize, f64, f64)>,
+    probe: Option<f64>,
+}
+
+/// Per-worker execution state: the items LPT assigned to this worker,
+/// its private pruner scratch, and the results it produced.
+struct WorkerCell<'a> {
+    items: Vec<AttnItem<'a>>,
+    scratch: PrunerScratch,
+    results: Vec<AttnItemOut>,
+}
+
+impl BatchBackend for BatchStepBackend<'_> {
+    fn append_kv(&mut self, layer: usize, idx: usize, k: &[f32], v: &[f32]) {
+        if self.errors[idx].is_some() {
             return;
         }
-        if let Err(e) = self.caches[layer].append(&mut self.st.caches[layer], k, v) {
-            self.error = Some(e);
+        if let Err(e) = self.caches[layer].append(&mut self.sts[idx].caches[layer], k, v) {
+            self.errors[idx] = Some(e);
         }
     }
 
-    fn attend(&mut self, layer: usize, qs: &[f32]) -> Vec<f32> {
+    fn is_failed(&self, idx: usize) -> bool {
+        self.errors[idx].is_some()
+    }
+
+    fn attend_batch(&mut self, layer: usize, qs: &[f32], out: &mut [f32]) {
         let c = &self.model.cfg;
         let d = c.head_dim;
         let group = c.group();
-        let mut out = vec![0.0; c.q_dim()];
-        if self.error.is_some() {
-            return out;
-        }
-        let cache = &self.caches[layer];
-        let seq = &self.st.caches[layer];
-        let n = seq.len;
+        let kvn = c.n_kv_heads;
+        let qd = c.q_dim();
+        out.fill(0.0); // failed sequences stay zero
+        // --- flatten (seq × kv-head) work items, sequence-major --------
         let dense_below = self.directive.dense_below_override.unwrap_or(self.cfg.dense_below);
-        let dense = layer < self.cfg.skip_layers
-            || n <= dense_below
-            || (self.cfg.selector == SelectorKind::Full && self.cfg.twilight.is_none());
-        if dense {
+        let mut call_idx = self.stats.sparse_calls;
+        let mut flat_items: Vec<Option<AttnItem<'_>>> =
+            Vec::with_capacity(self.sts.len() * kvn);
+        let mut work: Vec<balance::WorkItem> = Vec::with_capacity(self.sts.len() * kvn);
+        let cache = &self.caches[layer];
+        for (i, st) in self.sts.iter_mut().enumerate() {
+            if self.errors[i].is_some() {
+                flat_items.extend((0..kvn).map(|_| None));
+                continue;
+            }
+            let seq_cache = &st.caches[layer];
+            let n = seq_cache.len;
+            let dense = layer < self.cfg.skip_layers
+                || n <= dense_below
+                || (self.cfg.selector == SelectorKind::Full && self.cfg.twilight.is_none());
+            let mut budget = 0;
+            if !dense {
+                budget = self.cfg.budget.resolve(n);
+                if self.directive.budget_scale != 1.0 {
+                    budget = ((budget as f32 * self.directive.budget_scale).round() as usize)
+                        .clamp(1, n);
+                }
+            }
+            let sel_base = layer * kvn;
+            for (kvh, selector) in st.selectors[sel_base..sel_base + kvn].iter_mut().enumerate() {
+                let flat = i * kvn + kvh;
+                // Cost model: the kernels are bandwidth-bound, so the
+                // token count to stream is the LPT weight.
+                let cost = if dense { n } else { budget };
+                work.push(balance::WorkItem {
+                    seq: i as u32,
+                    kv_head: kvh as u32,
+                    budget: cost,
+                });
+                let this_call = if dense {
+                    0
+                } else {
+                    call_idx += 1;
+                    call_idx - 1
+                };
+                flat_items.push(Some(AttnItem {
+                    flat,
+                    seq: i,
+                    kv_head: kvh,
+                    layer,
+                    n,
+                    dense,
+                    budget,
+                    call_idx: this_call,
+                    selector,
+                    cache,
+                    seq_cache,
+                    qs: &qs[i * qd + kvh * group * d..i * qd + (kvh + 1) * group * d],
+                }));
+            }
+        }
+        let n_items = flat_items.len();
+        // --- LPT partition over the worker pool ------------------------
+        let workers = self.threads.min(work.len()).max(1);
+        let loads = balance::lpt_partition(&work, workers);
+        let mut cells: Vec<Mutex<WorkerCell<'_>>> = Vec::with_capacity(loads.len());
+        for (w, load) in loads.iter().enumerate() {
+            let mut items = Vec::with_capacity(load.items.len());
+            for wi in &load.items {
+                let flat = wi.seq as usize * kvn + wi.kv_head as usize;
+                items.push(flat_items[flat].take().expect("work item double-assigned"));
+            }
+            cells.push(Mutex::new(WorkerCell {
+                items,
+                scratch: std::mem::take(&mut self.scratches[w]),
+                results: Vec::new(),
+            }));
+        }
+        // --- parallel execution (worker w drains exactly cell w) -------
+        let cfg = self.cfg;
+        let mcfg = c;
+        let directive = self.directive;
+        let probe_interval = self.probe_interval;
+        // Never spawn more workers than buckets: `parallel_for` scopes
+        // fresh threads per call (per layer), so excess workers are pure
+        // spawn/join overhead. A persistent pool would amortize this
+        // across layers — tracked in ROADMAP.
+        threadpool::parallel_for(workers, cells.len(), 1, |w| {
+            let mut guard = cells[w].lock().expect("attention worker poisoned");
+            let WorkerCell { items, scratch, results } = &mut *guard;
+            results.reserve(items.len());
+            for item in items.drain(..) {
+                results.push(run_attn_item(cfg, mcfg, directive, probe_interval, item, scratch));
+            }
+        });
+        // --- deterministic merge at the phase barrier ------------------
+        let mut merged: Vec<Option<AttnItemOut>> = (0..n_items).map(|_| None).collect();
+        for (w, cell) in cells.into_iter().enumerate() {
+            let cell = cell.into_inner().expect("attention worker poisoned");
+            self.scratches[w] = cell.scratch;
+            for r in cell.results {
+                let flat = r.flat;
+                merged[flat] = Some(r);
+            }
+        }
+        for r in merged.into_iter().flatten() {
+            let base = r.seq * qd + r.kv_head * group * d;
+            out[base..base + group * d].copy_from_slice(&r.out);
+            self.stats.t_select += r.t_select;
+            self.stats.t_prune += r.t_prune;
+            self.stats.t_attend += r.t_attend;
+            self.stats.t_dense += r.t_dense;
+            self.stats.est_bytes_select += r.bytes_select;
+            self.stats.est_bytes_prune += r.bytes_prune;
+            self.stats.est_bytes_attend += r.bytes_attend;
+            if r.sparse {
+                self.stats.sparse_calls += 1;
+                self.stats.candidates_sum += r.candidates as u64;
+                self.stats.kept_sum += r.kept as u64;
+                self.stats.kept_hist.add(r.kept as f64);
+            }
+            if let Some((lay, mass, ratio)) = r.prune_record {
+                self.signals.record_prune(lay, mass, ratio);
+            }
+            if let Some(recall) = r.probe {
+                self.signals.record_probe(recall);
+            }
+        }
+    }
+}
+
+/// Execute one (sequence, kv-head) attention work item: dense paged
+/// attention for skip-layers / short contexts, or the full select →
+/// prune → varlen-attend pipeline. Runs on a worker thread with
+/// read-only cache access; everything mutable is item-private.
+fn run_attn_item(
+    cfg: &SparseConfig,
+    c: &ModelConfig,
+    directive: BudgetDirective,
+    probe_interval: u64,
+    item: AttnItem<'_>,
+    scratch: &mut PrunerScratch,
+) -> AttnItemOut {
+    let AttnItem {
+        flat,
+        seq: seq_idx,
+        kv_head,
+        layer,
+        n,
+        dense,
+        budget,
+        call_idx,
+        selector,
+        cache,
+        seq_cache: seq,
+        qs: qs_group,
+    } = item;
+    let d = c.head_dim;
+    let group = c.group();
+    let mut r = AttnItemOut {
+        flat,
+        seq: seq_idx,
+        kv_head,
+        out: vec![0.0; group * d],
+        t_select: 0.0,
+        t_prune: 0.0,
+        t_attend: 0.0,
+        t_dense: 0.0,
+        bytes_select: 0,
+        bytes_prune: 0,
+        bytes_attend: 0,
+        sparse: !dense,
+        candidates: 0,
+        kept: 0,
+        prune_record: None,
+        probe: None,
+    };
+    if dense {
+        let t = Instant::now();
+        for g in 0..group {
+            crate::attention::full::paged_full(
+                cache,
+                seq,
+                kv_head,
+                &qs_group[g * d..(g + 1) * d],
+                &mut r.out[g * d..(g + 1) * d],
+            );
+        }
+        r.t_dense = t.elapsed().as_secs_f64();
+        r.bytes_attend = crate::sim::attn_bytes(n, d) as u64;
+        return r;
+    }
+    // --- stage 1: Token Selector (black box, conservative) ------------
+    let t = Instant::now();
+    let candidates = selector.select(cache, seq, kv_head, qs_group, group, budget);
+    r.t_select = t.elapsed().as_secs_f64();
+    r.bytes_select = selector_bytes(cfg.selector, n, d) as u64;
+    // --- stage 2: Twilight Pruner --------------------------------------
+    let (kept, outcomes) = match &cfg.twilight {
+        Some(pc) => {
+            // The governor's p multiplier, clamped so even a
+            // maximally-degraded directive keeps a real top-p.
+            let pc = PrunerConfig {
+                p: (pc.p * directive.p_scale).clamp(0.05, 0.999),
+                ..*pc
+            };
             let t = Instant::now();
-            for h in 0..c.n_heads {
-                let kvh = h / group;
-                crate::attention::full::paged_full(
+            let (union, outs) =
+                prune_group(&pc, cache, seq, kv_head, qs_group, group, &candidates, scratch);
+            r.t_prune = t.elapsed().as_secs_f64();
+            r.bytes_prune =
+                crate::sim::spgemv_bytes(candidates.len(), d, cache.cfg.mirror_bits) as u64;
+            // Governor telemetry: per-layer captured mass and keep ratio,
+            // plus the periodic dense recall probe on the group's first
+            // query head (cadence from the precomputed call index).
+            if !candidates.is_empty() {
+                let mean_mass = outs.iter().map(|o| o.mass as f64).sum::<f64>()
+                    / outs.len().max(1) as f64;
+                let keep_ratio = union.len() as f64 / candidates.len() as f64;
+                r.prune_record = Some((layer, mean_mass, keep_ratio));
+                if probe_interval > 0 && call_idx % probe_interval == 0 {
+                    r.probe = Some(probe_recall(
+                        cache,
+                        seq,
+                        kv_head,
+                        &qs_group[..d],
+                        &candidates,
+                        &outs[0].kept,
+                        pc.p,
+                    ));
+                }
+            }
+            (union, Some(outs))
+        }
+        None => (candidates.clone(), None),
+    };
+    r.candidates = candidates.len();
+    r.kept = kept.len();
+    // --- stage 3: sparse attention kernel ------------------------------
+    let t = Instant::now();
+    match cfg.attn {
+        AttnVariant::GroupVarlen => {
+            crate::attention::sparse::group_varlen(
+                cache, seq, kv_head, qs_group, group, &kept, &mut r.out,
+            );
+        }
+        AttnVariant::HeadVarlen => {
+            for g in 0..group {
+                crate::attention::sparse::head_varlen(
                     cache,
                     seq,
-                    kvh,
-                    &qs[h * d..(h + 1) * d],
-                    &mut out[h * d..(h + 1) * d],
+                    kv_head,
+                    &qs_group[g * d..(g + 1) * d],
+                    &kept,
+                    &mut r.out[g * d..(g + 1) * d],
                 );
             }
-            self.stats.t_dense += t.elapsed().as_secs_f64();
-            self.stats.est_bytes_attend +=
-                (c.n_kv_heads * crate::sim::attn_bytes(n, d)) as u64;
-            return out;
         }
-        let mut budget = self.cfg.budget.resolve(n);
-        if self.directive.budget_scale != 1.0 {
-            budget = ((budget as f32 * self.directive.budget_scale).round() as usize).clamp(1, n);
-        }
-        for kvh in 0..c.n_kv_heads {
-            let qs_group = &qs[kvh * group * d..(kvh + 1) * group * d];
-            // --- stage 1: Token Selector (black box, conservative) ------
-            let t = Instant::now();
-            let sel = &mut self.st.selectors[layer * c.n_kv_heads + kvh];
-            let candidates = sel.select(cache, seq, kvh, qs_group, group, budget);
-            self.stats.t_select += t.elapsed().as_secs_f64();
-            self.stats.est_bytes_select += selector_bytes(self.cfg.selector, n, d) as u64;
-            // --- stage 2: Twilight Pruner -------------------------------
-            let (kept, outcomes): (Vec<usize>, Option<Vec<PruneOutcome>>) =
-                match &self.cfg.twilight {
-                    Some(pc) => {
-                        // The governor's p multiplier, clamped so even a
-                        // maximally-degraded directive keeps a real top-p.
-                        let pc = PrunerConfig {
-                            p: (pc.p * self.directive.p_scale).clamp(0.05, 0.999),
-                            ..*pc
-                        };
-                        let t = Instant::now();
-                        let (union, outs) = prune_group(
-                            &pc, cache, seq, kvh, qs_group, group, &candidates, self.scratch,
-                        );
-                        self.stats.t_prune += t.elapsed().as_secs_f64();
-                        self.stats.est_bytes_prune += crate::sim::spgemv_bytes(
-                            candidates.len(),
-                            d,
-                            cache.cfg.mirror_bits,
-                        ) as u64;
-                        // Governor telemetry: per-layer captured mass and
-                        // keep ratio, plus the periodic dense recall probe
-                        // on the group's first query head.
-                        if !candidates.is_empty() {
-                            let mean_mass = outs.iter().map(|o| o.mass as f64).sum::<f64>()
-                                / outs.len().max(1) as f64;
-                            let keep_ratio = union.len() as f64 / candidates.len() as f64;
-                            self.signals.record_prune(layer, mean_mass, keep_ratio);
-                            if self.signals.probe_due(self.stats.sparse_calls) {
-                                let recall = probe_recall(
-                                    cache,
-                                    seq,
-                                    kvh,
-                                    &qs_group[..d],
-                                    &candidates,
-                                    &outs[0].kept,
-                                    pc.p,
-                                );
-                                self.signals.record_probe(recall);
-                            }
-                        }
-                        (union, Some(outs))
-                    }
-                    None => (candidates.clone(), None),
-                };
-            self.stats.sparse_calls += 1;
-            self.stats.candidates_sum += candidates.len() as u64;
-            self.stats.kept_sum += kept.len() as u64;
-            self.stats.kept_hist.add(kept.len() as f64);
-            let _ = outcomes;
-            // --- stage 3: sparse attention kernel -----------------------
-            let t = Instant::now();
-            let outs = &mut out[kvh * group * d..(kvh + 1) * group * d];
-            match self.cfg.attn {
-                AttnVariant::GroupVarlen => {
-                    crate::attention::sparse::group_varlen(
-                        cache, seq, kvh, qs_group, group, &kept, outs,
-                    );
-                }
-                AttnVariant::HeadVarlen => {
-                    for g in 0..group {
-                        crate::attention::sparse::head_varlen(
-                            cache,
-                            seq,
-                            kvh,
-                            &qs_group[g * d..(g + 1) * d],
-                            &kept,
-                            &mut outs[g * d..(g + 1) * d],
-                        );
-                    }
-                }
-                AttnVariant::Padded => {
-                    let max_budget = budget.max(kept.len());
-                    for g in 0..group {
-                        crate::attention::sparse::padded(
-                            cache,
-                            seq,
-                            kvh,
-                            &qs_group[g * d..(g + 1) * d],
-                            &kept,
-                            max_budget,
-                            &mut outs[g * d..(g + 1) * d],
-                        );
-                    }
-                }
+        AttnVariant::Padded => {
+            let max_budget = budget.max(kept.len());
+            for g in 0..group {
+                crate::attention::sparse::padded(
+                    cache,
+                    seq,
+                    kv_head,
+                    &qs_group[g * d..(g + 1) * d],
+                    &kept,
+                    max_budget,
+                    &mut r.out[g * d..(g + 1) * d],
+                );
             }
-            self.stats.t_attend += t.elapsed().as_secs_f64();
-            self.stats.est_bytes_attend += crate::sim::attn_bytes(kept.len(), d) as u64;
-            // --- feedback for stateful (dropping) selectors -------------
-            let sel = &mut self.st.selectors[layer * c.n_kv_heads + kvh];
-            if selector_wants_observation(self.cfg.selector) {
+        }
+    }
+    r.t_attend = t.elapsed().as_secs_f64();
+    r.bytes_attend = crate::sim::attn_bytes(kept.len(), d) as u64;
+    // --- feedback for stateful (dropping) selectors --------------------
+    if selector_wants_observation(cfg.selector) {
+        // Reuse the pruner's estimated per-head weights instead of
+        // re-scoring in exact fp32: every kept (union) token is observed
+        // with its group-aggregated estimated attention, so a token any
+        // query head attends to stays visible to the dropping selector.
+        // Fall back to exact scores only when no pruner ran (baseline
+        // mode) or it short-circuited without scoring (candidates ≤
+        // min_keep, where the exact pass is a handful of dot products).
+        let scored = outcomes.as_ref().filter(|outs| {
+            outs.iter().all(|o| o.weights.len() == o.kept.len())
+                && outs.iter().any(|o| !o.weights.is_empty())
+        });
+        match scored {
+            Some(outs) => {
+                let mut w = vec![0.0f32; kept.len()];
+                for o in outs {
+                    for (t, &x) in o.kept.iter().zip(&o.weights) {
+                        if let Ok(j) = kept.binary_search(t) {
+                            w[j] += x;
+                        }
+                    }
+                }
+                let sum: f32 = w.iter().sum();
+                if sum > 0.0 {
+                    let inv = 1.0 / sum;
+                    for x in w.iter_mut() {
+                        *x *= inv;
+                    }
+                }
+                selector.observe(&kept, &w);
+            }
+            None => {
                 let mut w: Vec<f32> = kept
                     .iter()
                     .map(|&t| {
-                        cache.exact_score(seq, kvh, &qs_group[..d], t)
+                        cache.exact_score(seq, kv_head, &qs_group[..d], t)
                             * crate::attention::scale(d)
                     })
                     .collect();
                 crate::tensor::softmax_inplace(&mut w);
-                sel.observe(&kept, &w);
+                selector.observe(&kept, &w);
             }
         }
-        out
     }
+    r
 }
 
 /// Estimated selector metadata traffic (bytes) for the sim cost model.
@@ -483,8 +842,8 @@ fn selector_wants_observation(kind: SelectorKind) -> bool {
 /// *densely* (exact fp32 scores over the candidate set, via
 /// `PagedKvCache::exact_score`), compute the true top-p set, and report
 /// which fraction of it survived the estimated prune — estimated-vs-true
-/// top-p recall. Runs once per [`SignalHub::probe_due`] cadence, so the
-/// extra O(B0·d) dot products are amortized to noise.
+/// top-p recall. Runs once per [`SignalHub::probe_interval`] sparse
+/// calls, so the extra O(B0·d) dot products are amortized to noise.
 fn probe_recall(
     cache: &PagedKvCache,
     seq: &SeqCache,
@@ -614,6 +973,7 @@ mod tests {
         let _ = e.prefill(0, &g.prompt).unwrap();
         assert!(e.can_step(0));
         assert!(!e.can_step(99));
+        assert!(!e.needs_page(99));
     }
 
     #[test]
@@ -680,5 +1040,88 @@ mod tests {
         assert!(s.t_attend > 0.0);
         assert!(s.avg_kept() > 0.0);
         assert!(s.avg_candidates() >= s.avg_kept());
+    }
+
+    #[test]
+    fn prefill_steps_counted_separately_from_decode_steps() {
+        // Single-layer fast path: the whole prompt is one prefill step.
+        let mut e = engine(SparseConfig::dense());
+        let mut r = Rng::new(6);
+        let g = gen_niah(&mut r, V, 128);
+        let _ = e.prefill(0, &g.prompt).unwrap();
+        assert_eq!(e.stats.steps, 0, "prefill must not count as decode");
+        assert_eq!(e.stats.prefill_steps, 1);
+        let _ = e.decode(0, g.prompt[0]).unwrap();
+        assert_eq!(e.stats.steps, 1);
+        assert_eq!(e.stats.prefill_steps, 1);
+        // Multi-layer path: one prefill step per prompt token.
+        let cfg = crate::model::testutil::tiny_config();
+        let m = Arc::new(crate::model::testutil::random_model(&cfg, 2));
+        let mut e2 = Engine::new(m, SparseConfig::dense(), 1024);
+        let _ = e2.prefill(0, &[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(e2.stats.prefill_steps, 5);
+        assert_eq!(e2.stats.steps, 0);
+    }
+
+    #[test]
+    fn batched_step_matches_serial_decode() {
+        // Two independent sequences advanced through step_batch must get
+        // bit-identical logits to one-at-a-time decode.
+        let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+        cfg.skip_layers = 0;
+        cfg.dense_below = 16;
+        let mut r = Rng::new(7);
+        let g0 = gen_niah(&mut r, V, 256);
+        let g1 = gen_niah(&mut r, V, 384);
+        let run = |batched: bool| -> Vec<Vec<f32>> {
+            let mut e = engine(cfg.clone());
+            let _ = e.prefill(0, &g0.prompt).unwrap();
+            let _ = e.prefill(1, &g1.prompt).unwrap();
+            let mut all = Vec::new();
+            for _ in 0..4 {
+                if batched {
+                    let batch = DecodeBatch::new(vec![(0, g0.prompt[0]), (1, g1.prompt[0])]);
+                    for res in e.step_batch(&batch) {
+                        all.push(res.unwrap());
+                    }
+                } else {
+                    all.push(e.decode(0, g0.prompt[0]).unwrap());
+                    all.push(e.decode(1, g1.prompt[0]).unwrap());
+                }
+            }
+            all
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn step_batch_reports_oom_per_sequence() {
+        // Pool sized so two growing sequences eventually exhaust pages:
+        // the failing sequence gets Err and is released, the other keeps
+        // decoding.
+        let model = Arc::new(build_retrieval_model(V, 8192));
+        let mut e = Engine::new(model, SparseConfig::dense(), 160);
+        let mut r = Rng::new(8);
+        let ga = gen_niah(&mut r, V, 64);
+        let gb = gen_niah(&mut r, V, 64);
+        let _ = e.prefill(0, &ga.prompt).unwrap();
+        let _ = e.prefill(1, &gb.prompt).unwrap();
+        let mut saw_err = false;
+        for _ in 0..64 {
+            let ids: Vec<(SeqId, u32)> =
+                e.seqs.keys().copied().map(|id| (id, ga.prompt[0])).collect();
+            if ids.is_empty() {
+                break;
+            }
+            let mut sorted = ids;
+            sorted.sort_unstable();
+            let results = e.step_batch(&DecodeBatch::new(sorted));
+            if results.iter().any(|x| x.is_err()) {
+                saw_err = true;
+                break;
+            }
+        }
+        assert!(saw_err, "pool of 160 tokens must eventually OOM");
+        assert!(e.num_seqs() <= 1, "failed sequence must be released");
     }
 }

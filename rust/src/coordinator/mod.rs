@@ -2,13 +2,16 @@
 //!
 //! ```text
 //!  requests ──> queue ──> scheduler (continuous batching, preemption)
-//!                            │
+//!                            │ one DecodeBatch per step
 //!                            v
-//!                         engine (per decode step, per layer):
-//!                            Token Selector  ─┐  conservative budget B0
-//!                            Twilight Pruner ─┤  INT4 SpGEMV → top-p → B1
-//!                            varlen attention ┘  group-varlen kernel
-//!                            rest-of-layer (native or PJRT HLO)
+//!                         engine (per batched decode step, per layer):
+//!                            QKV + KV append (all seqs, serial)
+//!                            flattened (seq × kv-head) work list:
+//!                              Token Selector  ─┐ conservative budget B0
+//!                              Twilight Pruner ─┤ INT4 SpGEMV → top-p → B1
+//!                              varlen attention ┘ group-varlen kernel
+//!                              (LPT-partitioned across workers)
+//!                            rest-of-layer (all seqs, serial)
 //!                            │
 //!                            v
 //!                         metrics (TTFT/TPOT/throughput/budget hists)

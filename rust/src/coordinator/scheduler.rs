@@ -1,16 +1,20 @@
 //! Continuous-batching scheduler (vLLM-style) over the decode [`Engine`].
 //!
 //! Each scheduler *step* interleaves: (1) admitting arrived requests when
-//! the page pool has headroom (prefill), (2) one decode iteration for
-//! every running request, (3) preemption of the youngest request when the
-//! pool runs dry (its pages are released; it re-prefills later —
-//! recompute-style preemption, the same policy vLLM defaults to).
+//! the page pool has headroom (prefill), (2) **one batched decode step**
+//! ([`Engine::step_batch`]) advancing every running request a token —
+//! the engine flattens the batch into LPT-balanced (sequence × kv-head)
+//! attention work items — and (3) preemption of the youngest request
+//! when the pool runs dry (its pages are released; it re-prefills later —
+//! recompute-style preemption, the same policy vLLM defaults to). Only
+//! the decode phase feeds the governor's latency tracker, so step time ≙
+//! TPOT genuinely holds for the batch (prefill is accounted separately).
 //!
 //! Time is virtual when replaying a trace (`now` advances with the
 //! wall-clock of actual compute), so arrival patterns interact with
 //! compute latency exactly as in a live server.
 
-use super::engine::Engine;
+use super::engine::{DecodeBatch, Engine};
 use super::metrics::{RequestMetrics, ServingReport};
 use super::request::{Request, RequestState};
 use crate::governor::Governor;
@@ -126,7 +130,6 @@ impl Scheduler {
             let d = gov.step(&snap);
             self.engine.apply_directive(d);
         }
-        let step_start = Instant::now();
         let degrade = self.engine.directive().degrade_level;
         // --- admission ------------------------------------------------
         // Staged degradation: widen the required headroom as pressure
@@ -174,52 +177,48 @@ impl Scheduler {
             }
         }
         // --- decode ----------------------------------------------------
-        // Preempt (youngest-first) until every running request can step.
-        let mut produced = 0;
-        let mut i = 0;
-        while i < self.running.len() {
-            if !self.engine.can_step(self.running[i].id) {
-                // Free pages by preempting the *last* admitted request.
-                if let Some(mut victim) = self.running.pop() {
-                    if victim.id == self.running.get(i).map(|r| r.id).unwrap_or(victim.id)
-                        && self.running.len() == i
-                    {
-                        // The victim is the request we were inspecting.
-                    }
-                    self.engine.release(victim.id);
-                    victim.state = RequestState::Preempted;
-                    victim.preemptions += 1;
-                    // Re-enter the queue with its generated tokens folded
-                    // into the prompt (recompute-style preemption).
-                    victim.prompt.extend_from_slice(&victim.output);
-                    victim.output.clear();
-                    victim.first_token_at = None;
-                    self.queue.push_front(victim);
-                    continue; // re-check same index
-                }
+        // Preempt (youngest-first) until the batch's page demand fits:
+        // every sequence on a page boundary needs one fresh page in each
+        // layer pool, and `free_pages` is the min across pools.
+        while !self.running.is_empty() {
+            let boundary = self.running.iter().filter(|r| self.engine.needs_page(r.id)).count();
+            if boundary <= self.engine.free_pages() {
+                break;
             }
-            let req = &mut self.running[i];
-            let last = *req.output.last().unwrap();
-            match self.engine.decode(req.id, last) {
-                Ok(logits) => {
-                    let tok = sample(&logits, &req.params, &mut self.rng);
-                    req.output.push(tok);
-                    produced += 1;
-                    i += 1;
-                }
-                Err(_) => {
+            let victim = self.running.pop().unwrap();
+            self.engine.release(victim.id);
+            self.requeue_preempted(victim);
+        }
+        // One batched decode step advances the whole running set: the
+        // engine flattens it into LPT-balanced (seq × kv-head) items.
+        let mut produced = 0;
+        let decode_start = Instant::now();
+        if !self.running.is_empty() {
+            let batch = DecodeBatch::new(
+                self.running.iter().map(|r| (r.id, *r.output.last().unwrap())).collect(),
+            );
+            let results = self.engine.step_batch(&batch);
+            let mut kept = Vec::with_capacity(self.running.len());
+            let mut victims = Vec::new();
+            for (mut req, res) in self.running.drain(..).zip(results) {
+                match res {
+                    Ok(logits) => {
+                        let tok = sample(&logits, &req.params, &mut self.rng);
+                        req.output.push(tok);
+                        produced += 1;
+                        kept.push(req);
+                    }
                     // OOM mid-step (engine released the sequence):
                     // recompute-preempt this request.
-                    let mut victim = self.running.remove(i);
-                    victim.state = RequestState::Preempted;
-                    victim.preemptions += 1;
-                    victim.prompt.extend_from_slice(&victim.output);
-                    victim.output.clear();
-                    victim.first_token_at = None;
-                    self.queue.push_front(victim);
+                    Err(_) => victims.push(req),
                 }
             }
+            self.running = kept;
+            for victim in victims {
+                self.requeue_preempted(victim);
+            }
         }
+        let decode_secs = decode_start.elapsed().as_secs_f64();
         // --- completion --------------------------------------------------
         let mut j = 0;
         while j < self.running.len() {
@@ -232,9 +231,24 @@ impl Scheduler {
             }
         }
         if let Some(gov) = self.governor.as_mut() {
-            gov.observe_step(step_start.elapsed().as_secs_f64(), produced);
+            // Decode-phase wall time only: under continuous batching the
+            // batched step duration *is* TPOT; admission/prefill work
+            // must not skew the SLO tracker.
+            gov.observe_step(decode_secs, produced);
         }
         produced
+    }
+
+    /// Recompute-style preemption: fold the generated tokens back into
+    /// the prompt and push the request to the queue head (its pages must
+    /// already be released).
+    fn requeue_preempted(&mut self, mut req: Request) {
+        req.state = RequestState::Preempted;
+        req.preemptions += 1;
+        req.prompt.extend_from_slice(&req.output);
+        req.output.clear();
+        req.first_token_at = None;
+        self.queue.push_front(req);
     }
 
     fn finish(&mut self, mut req: Request, now: f64) {
@@ -286,6 +300,7 @@ impl Scheduler {
             ("running", Json::Num(self.running.len() as f64)),
             ("finished", Json::Num(self.finished.len() as f64)),
             ("steps", Json::Num(s.steps as f64)),
+            ("prefill_steps", Json::Num(s.prefill_steps as f64)),
             ("avg_candidates", Json::Num(s.avg_candidates())),
             ("avg_kept", Json::Num(s.avg_kept())),
             ("prune_ratio", Json::Num(s.prune_ratio())),
@@ -415,6 +430,34 @@ mod tests {
         assert_eq!(s.engine.num_seqs(), 0);
         let j = s.live_stats_json();
         assert!(j.get("governor").is_some());
+    }
+
+    #[test]
+    fn concurrent_requests_progress_through_step_batch() {
+        // Every running request must gain exactly one token per scheduler
+        // step (the batched decode advances the whole set at once).
+        let mut s = sched(1 << 16, SparseConfig::twilight(SelectorKind::Quest, 0.9));
+        let mut r = Rng::new(9);
+        for i in 0..4 {
+            let g = gen_niah(&mut r, V, 128);
+            let mut req = Request::new(i, g.prompt, 6);
+            req.stop_token = None;
+            s.submit(req);
+        }
+        // Step 1 admits (prefill samples one token each) and decodes the
+        // admitted set once.
+        let produced = s.step(0.0);
+        let running = s.running();
+        assert!(running >= 2, "expected concurrent decodes, got {running}");
+        assert_eq!(produced, running, "each running request gains one token per step");
+        let decode_steps_before = s.engine.stats.steps;
+        let produced2 = s.step(0.0);
+        assert_eq!(produced2, s.running());
+        // One batched engine step per scheduler step, regardless of batch size.
+        assert_eq!(s.engine.stats.steps, decode_steps_before + 1);
+        let rep = s.run_to_completion();
+        assert_eq!(rep.requests.len(), 4);
+        assert_eq!(s.engine.num_seqs(), 0);
     }
 
     #[test]

@@ -138,9 +138,20 @@ impl SignalHub {
         }
     }
 
-    /// True when the periodic recall probe should run on this call.
+    /// True when the periodic recall probe should run on this call. The
+    /// reference cadence predicate: the engine evaluates the same test
+    /// from call indices precomputed at work-list flatten time (via
+    /// [`SignalHub::probe_interval`]) so the cadence is identical for
+    /// any attention worker count.
     pub fn probe_due(&self, sparse_calls: u64) -> bool {
         self.probe_interval > 0 && sparse_calls % self.probe_interval == 0
+    }
+
+    /// Probe cadence (sparse calls between probes; 0 disables). The
+    /// engine snapshots this before a parallel attention phase so workers
+    /// can evaluate the cadence from precomputed call indices.
+    pub fn probe_interval(&self) -> u64 {
+        self.probe_interval
     }
 
     /// Record an estimated-vs-true top-p recall measurement (0..=1).

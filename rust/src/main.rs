@@ -79,14 +79,16 @@ fn cmd_serve(a: &Args) {
     let model = load_model_arg(a);
     let cfg = sparse_config_from_args(a);
     let capacity = a.usize_or("capacity", 1 << 20);
+    let mut engine = Engine::new(model.clone(), cfg.clone(), capacity);
+    engine.threads = a.usize_or("threads", engine.threads).max(1);
     twilight::log_info!(
-        "model={} ({} params), pipeline={}, capacity={} tokens",
+        "model={} ({} params), pipeline={}, capacity={} tokens, threads={}",
         model.cfg.name,
         model.param_count(),
         cfg.label(),
-        capacity
+        capacity,
+        engine.threads
     );
-    let engine = Engine::new(model, cfg, capacity);
     let mut sched = Scheduler::new(
         engine,
         SchedulerConfig { max_batch: a.usize_or("max-batch", 64), ..Default::default() },
@@ -197,6 +199,7 @@ fn cmd_bench(a: &Args) {
         }),
     ] {
         let mut e = Engine::new(model.clone(), cfg, ctx * 2 + 128);
+        e.threads = a.usize_or("threads", e.threads).max(1);
         let _ = e.prefill(0, &g.prompt).unwrap();
         e.reset_stats();
         let t0 = std::time::Instant::now();

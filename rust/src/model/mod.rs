@@ -128,6 +128,43 @@ pub trait LayerBackend {
     fn attend(&mut self, layer: usize, qs: &[f32]) -> Vec<f32>;
 }
 
+/// The pluggable attention/cache backend for a whole *batch* of
+/// sequences, each advancing one token. [`Model::decode_batch`] drives
+/// every layer through three phases: (a) per-sequence QKV projection +
+/// [`BatchBackend::append_kv`] (serial — appends mutate the shared page
+/// pools), (b) one [`BatchBackend::attend_batch`] call covering the whole
+/// batch (the serving engine flattens it into (sequence × kv-head) work
+/// items and runs them in parallel), then (c) per-sequence rest-of-layer.
+pub trait BatchBackend {
+    /// Phase (a): store sequence `idx`'s new K/V for `layer`.
+    fn append_kv(&mut self, layer: usize, idx: usize, k: &[f32], v: &[f32]);
+
+    /// Phase (b): attention for every sequence of the batch at `layer`.
+    /// `qs` and `out` are `[batch * n_heads * head_dim]`, sequence-major;
+    /// the backend must fully overwrite `out`.
+    fn attend_batch(&mut self, layer: usize, qs: &[f32], out: &mut [f32]);
+
+    /// True when sequence `idx` has failed (e.g. out of cache pages); the
+    /// forward pass skips its per-sequence compute from then on.
+    fn is_failed(&self, _idx: usize) -> bool {
+        false
+    }
+}
+
+/// Adapter running a single-sequence [`LayerBackend`] through the batched
+/// forward pass (batch size 1).
+struct SingleSeq<'a, B: LayerBackend>(&'a mut B);
+
+impl<B: LayerBackend> BatchBackend for SingleSeq<'_, B> {
+    fn append_kv(&mut self, layer: usize, _idx: usize, k: &[f32], v: &[f32]) {
+        self.0.append_kv(layer, k, v);
+    }
+
+    fn attend_batch(&mut self, layer: usize, qs: &[f32], out: &mut [f32]) {
+        out.copy_from_slice(&self.0.attend(layer, qs));
+    }
+}
+
 /// GELU (tanh approximation, matching jax.nn.gelu's default).
 #[inline]
 pub fn gelu(x: f32) -> f32 {
@@ -167,65 +204,110 @@ impl Model {
         (k, v)
     }
 
-    /// One decode step: embed `tok` at `pos`, run all layers (attention
-    /// via `backend`), return logits `[vocab]`.
+    /// One decode step for a single sequence: embed `tok` at `pos`, run
+    /// all layers (attention via `backend`), return logits `[vocab]`.
+    /// A batch-of-one view over [`Model::decode_batch`].
     pub fn decode_step<B: LayerBackend>(&self, tok: u32, pos: usize, backend: &mut B) -> Vec<f32> {
+        self.decode_batch(&[(tok, pos)], &mut SingleSeq(backend)).pop().unwrap()
+    }
+
+    /// One batched decode step: every `(tok, pos)` entry advances one
+    /// sequence by one token. Each layer runs as three phases (see
+    /// [`BatchBackend`]); per-sequence compute is strictly sequence-major
+    /// within a phase, so a batch of one is bit-identical to the
+    /// historical per-sequence forward pass. Returns logits `[vocab]` per
+    /// sequence (all-zero for sequences the backend marks failed).
+    pub fn decode_batch<B: BatchBackend>(
+        &self,
+        toks: &[(u32, usize)],
+        backend: &mut B,
+    ) -> Vec<Vec<f32>> {
         let c = &self.cfg;
-        let mut x = self.embed_token(tok);
+        let nb = toks.len();
+        let qd = c.q_dim();
+        let mut xs: Vec<Vec<f32>> = toks.iter().map(|&(tok, _)| self.embed_token(tok)).collect();
         let mut h = vec![0.0; c.d_model];
-        let mut q = vec![0.0; c.q_dim()];
         let mut k = vec![0.0; c.kv_dim()];
         let mut v = vec![0.0; c.kv_dim()];
         let mut ff = vec![0.0; c.d_ff];
         let mut ff_out = vec![0.0; c.d_model];
         let mut attn_res = vec![0.0; c.d_model];
+        let mut qs = vec![0.0; nb * qd];
+        let mut attn = vec![0.0; nb * qd];
         for (li, lw) in self.layers.iter().enumerate() {
-            // Attention block.
-            if c.use_norm {
-                rmsnorm(&x, &lw.ln1, c.norm_eps, &mut h);
-            } else {
-                h.copy_from_slice(&x);
-            }
-            gemv(&lw.wq, &h, None, &mut q);
-            gemv(&lw.wk, &h, None, &mut k);
-            gemv(&lw.wv, &h, None, &mut v);
-            if c.use_rope {
-                for hh in 0..c.n_heads {
-                    rope_inplace(&mut q[hh * c.head_dim..(hh + 1) * c.head_dim], pos, c.rope_theta);
+            // Phase (a): norms + QKV + RoPE + KV append, serial per
+            // sequence (appends mutate the shared page pools).
+            for (i, &(_, pos)) in toks.iter().enumerate() {
+                if backend.is_failed(i) {
+                    continue;
                 }
-                for hh in 0..c.n_kv_heads {
-                    rope_inplace(&mut k[hh * c.head_dim..(hh + 1) * c.head_dim], pos, c.rope_theta);
+                if c.use_norm {
+                    rmsnorm(&xs[i], &lw.ln1, c.norm_eps, &mut h);
+                } else {
+                    h.copy_from_slice(&xs[i]);
                 }
+                let q = &mut qs[i * qd..(i + 1) * qd];
+                gemv(&lw.wq, &h, None, q);
+                gemv(&lw.wk, &h, None, &mut k);
+                gemv(&lw.wv, &h, None, &mut v);
+                if c.use_rope {
+                    for hh in 0..c.n_heads {
+                        rope_inplace(
+                            &mut q[hh * c.head_dim..(hh + 1) * c.head_dim],
+                            pos,
+                            c.rope_theta,
+                        );
+                    }
+                    for hh in 0..c.n_kv_heads {
+                        rope_inplace(
+                            &mut k[hh * c.head_dim..(hh + 1) * c.head_dim],
+                            pos,
+                            c.rope_theta,
+                        );
+                    }
+                }
+                backend.append_kv(li, i, &k, &v);
             }
-            backend.append_kv(li, &k, &v);
-            let attn = backend.attend(li, &q);
-            gemv(&lw.wo, &attn, None, &mut attn_res);
-            for (xi, a) in x.iter_mut().zip(&attn_res) {
-                *xi += a;
-            }
-            // MLP block.
-            if c.use_norm {
-                rmsnorm(&x, &lw.ln2, c.norm_eps, &mut h);
-            } else {
-                h.copy_from_slice(&x);
-            }
-            gemv(&lw.w1, &h, None, &mut ff);
-            for f in ff.iter_mut() {
-                *f = gelu(*f);
-            }
-            gemv(&lw.w2, &ff, None, &mut ff_out);
-            for (xi, a) in x.iter_mut().zip(&ff_out) {
-                *xi += a;
+            // Phase (b): attention for the whole batch at once.
+            backend.attend_batch(li, &qs, &mut attn);
+            // Phase (c): output projection + MLP, serial per sequence.
+            for (i, x) in xs.iter_mut().enumerate() {
+                if backend.is_failed(i) {
+                    continue;
+                }
+                gemv(&lw.wo, &attn[i * qd..(i + 1) * qd], None, &mut attn_res);
+                for (xi, a) in x.iter_mut().zip(&attn_res) {
+                    *xi += a;
+                }
+                if c.use_norm {
+                    rmsnorm(x, &lw.ln2, c.norm_eps, &mut h);
+                } else {
+                    h.copy_from_slice(x);
+                }
+                gemv(&lw.w1, &h, None, &mut ff);
+                for f in ff.iter_mut() {
+                    *f = gelu(*f);
+                }
+                gemv(&lw.w2, &ff, None, &mut ff_out);
+                for (xi, a) in x.iter_mut().zip(&ff_out) {
+                    *xi += a;
+                }
             }
         }
-        if c.use_norm {
-            rmsnorm(&x, &self.final_norm, c.norm_eps, &mut h);
-        } else {
-            h.copy_from_slice(&x);
+        let mut out = Vec::with_capacity(nb);
+        for (i, x) in xs.iter().enumerate() {
+            let mut logits = vec![0.0; c.vocab_size];
+            if !backend.is_failed(i) {
+                if c.use_norm {
+                    rmsnorm(x, &self.final_norm, c.norm_eps, &mut h);
+                } else {
+                    h.copy_from_slice(x);
+                }
+                gemv(&self.lm_head, &h, None, &mut logits);
+            }
+            out.push(logits);
         }
-        let mut logits = vec![0.0; c.vocab_size];
-        gemv(&self.lm_head, &h, None, &mut logits);
-        logits
+        out
     }
 
     /// Approximate parameter count.
@@ -383,6 +465,48 @@ mod tests {
             last
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn decode_batch_matches_per_sequence_decode() {
+        // A batch of independent dense sequences must produce bit-identical
+        // logits to the historical one-sequence-at-a-time forward pass.
+        struct DenseBatch {
+            seqs: Vec<DenseBackend>,
+        }
+        impl BatchBackend for DenseBatch {
+            fn append_kv(&mut self, layer: usize, idx: usize, k: &[f32], v: &[f32]) {
+                self.seqs[idx].append_kv(layer, k, v);
+            }
+            fn attend_batch(&mut self, layer: usize, qs: &[f32], out: &mut [f32]) {
+                let qd = qs.len() / self.seqs.len();
+                for (i, b) in self.seqs.iter_mut().enumerate() {
+                    out[i * qd..(i + 1) * qd]
+                        .copy_from_slice(&b.attend(layer, &qs[i * qd..(i + 1) * qd]));
+                }
+            }
+        }
+        let cfg = tiny_config();
+        let m = random_model(&cfg, 9);
+        let streams: [&[u32]; 2] = [&[3, 7, 1, 0], &[15, 2, 2, 8]];
+        // Serial reference.
+        let mut serial = Vec::new();
+        for toks in streams {
+            let mut b = DenseBackend::new(&cfg);
+            let mut last = Vec::new();
+            for (pos, &tok) in toks.iter().enumerate() {
+                last = m.decode_step(tok, pos, &mut b);
+            }
+            serial.push(last);
+        }
+        // Batched: both sequences advance in lock-step.
+        let mut bb = DenseBatch { seqs: vec![DenseBackend::new(&cfg), DenseBackend::new(&cfg)] };
+        let mut batched = Vec::new();
+        for pos in 0..streams[0].len() {
+            batched = m.decode_batch(&[(streams[0][pos], pos), (streams[1][pos], pos)], &mut bb);
+        }
+        assert_eq!(serial[0], batched[0]);
+        assert_eq!(serial[1], batched[1]);
     }
 
     #[test]

@@ -43,6 +43,11 @@ pub struct PruneOutcome {
     pub kept: Vec<usize>,
     /// Estimated attention mass captured (within the candidate set).
     pub mass: f32,
+    /// Estimated softmax weight (over the candidate set) of each kept
+    /// token, aligned with `kept`; sums to `mass`. Empty when the pruner
+    /// short-circuited (candidates ≤ min_keep) without scoring — callers
+    /// that need weights must fall back to exact scores in that case.
+    pub weights: Vec<f32>,
     /// Binary search iterations.
     pub iters: usize,
 }
@@ -67,7 +72,7 @@ pub fn prune_head(
 ) -> PruneOutcome {
     let n = candidates.len();
     if n <= cfg.min_keep {
-        return PruneOutcome { kept: candidates.to_vec(), mass: 1.0, iters: 0 };
+        return PruneOutcome { kept: candidates.to_vec(), mass: 1.0, weights: Vec::new(), iters: 0 };
     }
     scratch.scores.resize(n, 0.0);
     // (1) SpGEMV estimation from the INT4 mirror.
@@ -84,8 +89,8 @@ pub fn prune_head(
     } else {
         topp::topp_binary_search(&scratch.scores, cfg.p, cfg.eps)
     };
-    let (kept, mass) = floor_min_keep(&scratch.scores, candidates, &r, cfg.min_keep);
-    PruneOutcome { kept, mass, iters: r.iters }
+    let (kept, mass, weights) = floor_min_keep(&scratch.scores, candidates, &r, cfg.min_keep);
+    PruneOutcome { kept, mass, weights, iters: r.iters }
 }
 
 /// Apply the `min_keep` floor to a top-p result: when fewer than
@@ -93,15 +98,20 @@ pub fn prune_head(
 /// instead — and recompute the captured mass over the floored set. The
 /// governor steers on `PruneOutcome::mass`, so reporting the pre-floor
 /// mass would understate what the kept set actually captures exactly when
-/// the floor is active (peaked heads), biasing the controller.
+/// the floor is active (peaked heads), biasing the controller. Also
+/// returns each kept token's estimated softmax weight (aligned with the
+/// kept list) so downstream consumers — the SnapKV/H2O observation
+/// feedback — never have to re-score what the pruner already scored.
 fn floor_min_keep(
     scores: &[f32],
     candidates: &[usize],
     r: &topp::ToppResult,
     min_keep: usize,
-) -> (Vec<usize>, f32) {
+) -> (Vec<usize>, f32, Vec<f32>) {
     if r.indices.len() >= min_keep {
-        return (r.indices.iter().map(|&i| candidates[i]).collect(), r.mass);
+        let kept = r.indices.iter().map(|&i| candidates[i]).collect();
+        let weights = r.indices.iter().map(|&i| scores[i]).collect();
+        return (kept, r.mass, weights);
     }
     let n = scores.len();
     let mut order: Vec<usize> = (0..n).collect();
@@ -110,15 +120,19 @@ fn floor_min_keep(
     });
     order.truncate(min_keep.min(n));
     let mass = order.iter().map(|&i| scores[i]).sum();
-    let mut kept: Vec<usize> = order.iter().map(|&i| candidates[i]).collect();
-    kept.sort_unstable();
-    (kept, mass)
+    // Candidates are ascending, so sorting the score-indices restores
+    // ascending kept order with weights still aligned.
+    order.sort_unstable();
+    let kept = order.iter().map(|&i| candidates[i]).collect();
+    let weights = order.iter().map(|&i| scores[i]).collect();
+    (kept, mass, weights)
 }
 
 /// Prune for a GQA group: `qs` is `[group * d]` query heads sharing
 /// `kv_head`. Per-head top-p keep-sets are unioned (B.2) so the attention
 /// kernel loads each KV row once per group. Returns the union (ascending)
 /// plus per-head outcomes for budget accounting.
+#[allow(clippy::too_many_arguments)]
 pub fn prune_group(
     cfg: &PrunerConfig,
     cache: &PagedKvCache,
@@ -132,7 +146,8 @@ pub fn prune_group(
     let d = qs.len() / group;
     let n = candidates.len();
     if n <= cfg.min_keep {
-        let out = PruneOutcome { kept: candidates.to_vec(), mass: 1.0, iters: 0 };
+        let out =
+            PruneOutcome { kept: candidates.to_vec(), mass: 1.0, weights: Vec::new(), iters: 0 };
         return (candidates.to_vec(), vec![out; group]);
     }
     // One SpGEMV pass for the whole group (codes unpacked once per row —
@@ -155,9 +170,9 @@ pub fn prune_group(
         } else {
             topp::topp_binary_search(row, cfg.p, cfg.eps)
         };
-        let (kept, mass) = floor_min_keep(row, candidates, &r, cfg.min_keep);
+        let (kept, mass, weights) = floor_min_keep(row, candidates, &r, cfg.min_keep);
         union.extend_from_slice(&kept);
-        outcomes.push(PruneOutcome { kept, mass, iters: r.iters });
+        outcomes.push(PruneOutcome { kept, mass, weights, iters: r.iters });
     }
     union.sort_unstable();
     union.dedup();
@@ -252,6 +267,33 @@ mod tests {
         );
         assert_eq!(outs[0].kept, floored.kept);
         assert!((outs[0].mass - floored.mass).abs() < 1e-5);
+    }
+
+    #[test]
+    fn outcome_weights_align_with_kept() {
+        let (cache, seq) = random_cache(41, 1, 32, 256);
+        let q = random_q(42, 32);
+        let candidates: Vec<usize> = (0..256).collect();
+        let mut scratch = PrunerScratch::default();
+        let cfg = PrunerConfig { p: 0.9, ..Default::default() };
+        let out = prune_head(&cfg, &cache, &seq, 0, &q, &candidates, &mut scratch);
+        assert_eq!(out.weights.len(), out.kept.len());
+        let sum: f32 = out.weights.iter().sum();
+        assert!((sum - out.mass).abs() < 1e-4, "weights sum {sum} vs mass {}", out.mass);
+        assert!(out.weights.iter().all(|w| *w > 0.0));
+        // The floored path must stay aligned too.
+        let floored = prune_head(
+            &PrunerConfig { p: 0.0001, min_keep: 8, ..Default::default() },
+            &cache, &seq, 0, &q, &candidates, &mut scratch,
+        );
+        assert_eq!(floored.weights.len(), floored.kept.len());
+        let fsum: f32 = floored.weights.iter().sum();
+        assert!((fsum - floored.mass).abs() < 1e-4);
+        // Short-circuit path: nothing was scored, so weights are empty.
+        let few: Vec<usize> = (0..3).collect();
+        let out2 = prune_head(&cfg, &cache, &seq, 0, &q, &few, &mut scratch);
+        assert!(out2.weights.is_empty());
+        assert_eq!(out2.kept, few);
     }
 
     #[test]

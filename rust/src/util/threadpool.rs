@@ -1,11 +1,15 @@
 //! Scoped worker pool for head-varlen attention load balancing.
 //!
 //! FlashInfer balances head-wise dynamic budgets by flattening the
-//! (sequence, head) dimension into a single work list; we do the same with
-//! a chunked atomic work queue drained by a fixed set of worker threads.
-//! On this single-core testbed the pool is usually size 1 (the queue then
-//! degenerates to a loop with no overhead beyond one atomic per chunk),
-//! but the structure is what a multi-core deployment would use.
+//! (sequence, head) dimension into a single work list; we do the same
+//! with a chunked atomic work queue drained by scoped worker threads
+//! (spawned per call — a persistent pool amortizing the spawn/join
+//! across layers is a tracked follow-up). The engine's batched decode
+//! step uses this to drain the LPT-partitioned per-worker buckets of
+//! its phase-(b) attention work list (one index per bucket,
+//! `chunk = 1`); with `TWILIGHT_THREADS=1` the queue degenerates to a
+//! plain loop on the caller thread, which is the bit-exact sequential
+//! reference the parity tests compare against.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

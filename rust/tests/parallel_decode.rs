@@ -1,0 +1,113 @@
+//! Parallel batched-decode correctness: the LPT-scheduled multi-threaded
+//! attention phase must be *bit-exact* with sequential execution, and the
+//! scheduler must make progress for many concurrent requests through the
+//! batched step.
+
+use std::sync::Arc;
+use twilight::coordinator::engine::{DecodeBatch, Engine};
+use twilight::coordinator::request::Request;
+use twilight::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use twilight::coordinator::SparseConfig;
+use twilight::model::retrieval::build_retrieval_model;
+use twilight::selector::SelectorKind;
+use twilight::util::rng::Rng;
+use twilight::workload::{gen_niah, RetrievalVocab};
+
+const V: RetrievalVocab = RetrievalVocab::DEFAULT;
+
+/// Run the same multi-sequence decode trace with `threads` attention
+/// workers; return every step's logits plus the budget counters.
+fn run_trace(threads: usize) -> (Vec<Vec<f32>>, u64, u64) {
+    let model = Arc::new(build_retrieval_model(V, 1 << 14));
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+    cfg.skip_layers = 0;
+    cfg.dense_below = 16;
+    let mut e = Engine::new(model, cfg, 1 << 14);
+    e.threads = threads;
+    let mut rng = Rng::new(71);
+    let mut toks = Vec::new();
+    for i in 0..3u64 {
+        // Mixed context lengths → skewed per-head budgets for the LPT.
+        let g = gen_niah(&mut rng, V, 256 * (i as usize + 1));
+        let _ = e.prefill(i, &g.prompt).unwrap();
+        toks.push(g.prompt[0]);
+    }
+    let mut all = Vec::new();
+    for _ in 0..8 {
+        let batch = DecodeBatch::new((0..3u64).map(|i| (i, toks[i as usize])).collect());
+        for res in e.step_batch(&batch) {
+            all.push(res.unwrap());
+        }
+    }
+    (all, e.stats.kept_sum, e.stats.candidates_sum)
+}
+
+#[test]
+fn batched_decode_bit_exact_across_worker_counts() {
+    let (logits_1, kept_1, cand_1) = run_trace(1);
+    let (logits_4, kept_4, cand_4) = run_trace(4);
+    assert_eq!(kept_1, kept_4, "kept_sum must not depend on worker count");
+    assert_eq!(cand_1, cand_4, "candidates_sum must not depend on worker count");
+    assert_eq!(logits_1.len(), logits_4.len());
+    for (step, (a, b)) in logits_1.iter().zip(&logits_4).enumerate() {
+        // Bit-exact: the work items are independent and merged in
+        // flattened order, so no float op order can differ.
+        assert_eq!(a, b, "logits diverged at step-result {step}");
+    }
+}
+
+#[test]
+fn worker_count_does_not_change_telemetry() {
+    let model = Arc::new(build_retrieval_model(V, 1 << 14));
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.95);
+    cfg.skip_layers = 0;
+    cfg.dense_below = 16;
+    let run = |threads: usize| {
+        let mut e = Engine::new(model.clone(), cfg.clone(), 1 << 14);
+        e.threads = threads;
+        let mut rng = Rng::new(72);
+        let g = gen_niah(&mut rng, V, 1024);
+        let _ = e.prefill(0, &g.prompt).unwrap();
+        for _ in 0..4 {
+            let _ = e.decode(0, g.prompt[0]).unwrap();
+        }
+        (
+            e.stats.sparse_calls,
+            e.signals.probes(),
+            e.signals.mean_mass(),
+            e.signals.probe_recall(),
+        )
+    };
+    let (calls_1, probes_1, mass_1, recall_1) = run(1);
+    let (calls_4, probes_4, mass_4, recall_4) = run(4);
+    assert_eq!(calls_1, calls_4);
+    assert_eq!(probes_1, probes_4, "probe cadence must use precomputed call indices");
+    assert_eq!(mass_1, mass_4, "signal rings must merge deterministically");
+    assert_eq!(recall_1, recall_4);
+}
+
+#[test]
+fn scheduler_progresses_many_concurrent_requests_in_parallel() {
+    let model = Arc::new(build_retrieval_model(V, 1 << 14));
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+    cfg.skip_layers = 0;
+    let mut engine = Engine::new(model, cfg, 1 << 16);
+    engine.threads = 4;
+    let mut s = Scheduler::new(engine, SchedulerConfig::default());
+    let mut rng = Rng::new(73);
+    let mut answers = Vec::new();
+    for i in 0..8u64 {
+        let g = gen_niah(&mut rng, V, 256);
+        answers.push(g.answer);
+        s.submit(Request::new(i, g.prompt, 1));
+    }
+    let rep = s.run_to_completion();
+    assert_eq!(rep.requests.len(), 8, "all concurrent requests must finish");
+    let correct = s
+        .finished_requests()
+        .iter()
+        .filter(|r| r.output.first() == Some(&answers[r.id as usize]))
+        .count();
+    assert!(correct >= 7, "{correct}/8 answers under 4-worker batched decode");
+    assert_eq!(s.engine.num_seqs(), 0, "pages leaked");
+}
