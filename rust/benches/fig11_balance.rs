@@ -6,11 +6,17 @@
 //!
 //! Part 2: thread scaling of the *real* batched decode step: the engine
 //! flattens (sequence × kv-head) items, LPT-partitions them, and drains
-//! the buckets with `threadpool::parallel_for` workers. Ends with the
-//! bit-exactness check (threads=1 vs threads=4 logits must be identical).
+//! the buckets on its persistent `ThreadPool`.
+//!
+//! Part 3: spawn amortization — persistent pool vs spawn-per-round
+//! scoped threads over many tiny rounds (the `layers × steps` regime of
+//! a small batch, where per-item work is nearly nothing and framework
+//! fixed costs decide the curve). Ends with the bit-exactness check
+//! (threads=1 vs threads=4 logits must be identical).
 
 mod common;
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 use twilight::coordinator::balance::{
@@ -20,9 +26,30 @@ use twilight::coordinator::engine::{DecodeBatch, Engine};
 use twilight::coordinator::SparseConfig;
 use twilight::selector::SelectorKind;
 use twilight::util::rng::Rng;
+use twilight::util::threadpool::ThreadPool;
 use twilight::workload::{gen_niah, RetrievalVocab};
 
 const V: RetrievalVocab = RetrievalVocab::DEFAULT;
+
+/// The pre-pool implementation: scoped threads spawned per call — the
+/// fixed cost Part 3 measures against the persistent pool.
+fn scoped_parallel_for<F: Fn(usize) + Sync>(threads: usize, n: usize, chunk: usize, work: F) {
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    work(i);
+                }
+            });
+        }
+    });
+}
 
 /// Twilight-like budget skew: ~15% diffuse heads (budget near N), the
 /// rest focused (tens of tokens).
@@ -68,7 +95,7 @@ fn main() {
         cfg.skip_layers = 0;
         cfg.dense_below = 16;
         let mut e = Engine::new(model, cfg, (ctx + 64) * nseqs * 2);
-        e.threads = threads;
+        e.set_threads(threads);
         let mut r = Rng::new(5);
         let mut toks = Vec::new();
         for i in 0..nseqs as u64 {
@@ -99,6 +126,50 @@ fn main() {
         }
         println!("{threads:<10} {ms:>12.3} {:>9.2}x", base_ms / ms);
     }
+
+    // --- Part 3: spawn amortization, persistent vs scoped --------------
+    // The engine runs one pool round per layer per decode step; at small
+    // batch the per-round work is tiny, so the old spawn-per-round cost
+    // scaled with layers × steps. Simulate that regime directly: many
+    // rounds of a few buckets with near-zero work each.
+    let rounds = 3000usize; // ≈ 32 layers × ~94 steps
+    let buckets = 8usize;
+    let work_per_bucket = 64usize;
+    let sink = AtomicU64::new(0);
+    let bucket_work = |w: usize| {
+        let mut acc = 0u64;
+        for k in 0..work_per_bucket {
+            acc = acc.wrapping_add((w * 31 + k) as u64);
+        }
+        sink.fetch_add(acc, Ordering::Relaxed);
+    };
+    let pool = ThreadPool::new(buckets);
+    pool.run(buckets, 1, &bucket_work); // warm: residents spawn here
+    let spawned_after_warm = pool.spawned_threads();
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        pool.run(buckets, 1, &bucket_work);
+    }
+    let pooled_us = t0.elapsed().as_secs_f64() * 1e6 / rounds as f64;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        scoped_parallel_for(buckets, buckets, 1, &bucket_work);
+    }
+    let scoped_us = t0.elapsed().as_secs_f64() * 1e6 / rounds as f64;
+    println!(
+        "\nspawn amortization ({rounds} rounds × {buckets} buckets × {work_per_bucket} adds):"
+    );
+    println!("{:<12} {:>12}", "variant", "us/round");
+    println!("{:<12} {:>12.2}", "persistent", pooled_us);
+    println!("{:<12} {:>12.2}", "scoped", scoped_us);
+    println!("scoped/persistent: {:.2}x", scoped_us / pooled_us);
+    assert_eq!(
+        pool.spawned_threads(),
+        spawned_after_warm,
+        "persistent pool must not spawn after warm-up"
+    );
+    assert!(pool.spawned_threads() < buckets, "caller participates in every round");
+    let _ = std::hint::black_box(sink.load(Ordering::Relaxed));
 
     // --- Bit-exactness: threads=1 ≡ threads=4 --------------------------
     let run = |threads: usize| -> Vec<Vec<f32>> {

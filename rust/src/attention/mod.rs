@@ -14,9 +14,11 @@
 //! as three phases — (a) serial QKV projection + KV append for every
 //! sequence, (b) a flattened (sequence × kv-head) attention work list
 //! whose per-item cost is the resolved stage-1 budget, LPT-partitioned
-//! by [`crate::coordinator::balance::lpt_partition`] and drained by
-//! [`crate::util::threadpool::parallel_for`] workers (FlashInfer's
-//! flattened head-dimension load balancing, §4.2), and (c) serial
+//! by [`crate::coordinator::balance::lpt_partition`] and drained by the
+//! engine's persistent [`crate::util::threadpool::ThreadPool`]
+//! (FlashInfer's flattened head-dimension load balancing with resident
+//! balanced workers, §4.2 — threads are created once per engine and
+//! parked between rounds, not spawned per layer), and (c) serial
 //! rest-of-layer — with per-worker stats merged deterministically at
 //! each phase barrier so any worker count is bit-exact with sequential
 //! execution.

@@ -11,7 +11,9 @@
 //! 2. **attend** — the (sequence × kv-head) pairs are flattened into one
 //!    work list whose per-item cost is the resolved stage-1 budget,
 //!    LPT-partitioned across workers ([`super::balance::lpt_partition`])
-//!    and drained by [`crate::util::threadpool::parallel_for`]; each
+//!    and drained by the engine's persistent
+//!    [`crate::util::threadpool::ThreadPool`] (resident workers created
+//!    once per engine and reused across every layer of every step); each
 //!    worker runs select → prune → varlen-attend with its own
 //!    [`PrunerScratch`], read-only cache access, and exclusive access to
 //!    its items' per-sequence selector state;
@@ -30,7 +32,7 @@ use crate::model::{BatchBackend, Model, ModelConfig};
 use crate::pruner::{prune_group, PrunerConfig, PrunerScratch};
 use crate::selector::{SelectorKind, TokenSelector};
 use crate::util::stats::Histogram;
-use crate::util::threadpool;
+use crate::util::threadpool::ThreadPool;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -166,9 +168,11 @@ pub struct Engine {
     pub signals: SignalHub,
     /// Runtime override from the governor; neutral when ungoverned.
     directive: BudgetDirective,
-    /// Attention-phase worker count (`TWILIGHT_THREADS` by default; 1
-    /// reproduces strictly sequential execution bit for bit).
-    pub threads: usize,
+    /// Persistent attention worker pool, created once per engine
+    /// (`TWILIGHT_THREADS`-sized by default) and reused for every layer
+    /// of every batched step; `threads == 1` bypasses it entirely and
+    /// reproduces strictly sequential execution bit for bit.
+    pool: ThreadPool,
     /// Per-worker pruner scratch, reused across steps so the score
     /// buffers (the large per-call allocations) only ever grow. The
     /// attention phase still allocates step-scoped bookkeeping (work
@@ -194,9 +198,26 @@ impl Engine {
             stats: EngineStats::default(),
             signals: SignalHub::new(n_layers),
             directive: BudgetDirective::NEUTRAL,
-            threads: threadpool::default_threads(),
+            pool: ThreadPool::with_default_threads(),
             scratches: Vec::new(),
         }
+    }
+
+    /// Attention-phase parallelism (caller thread included).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Retarget the attention worker pool. Growth is lazy (resident
+    /// workers spawn on the next batched step that needs them, then stay
+    /// parked between rounds); 1 selects the sequential reference path.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.pool.set_threads(threads);
+    }
+
+    /// The persistent attention worker pool (instrumentation/tests).
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
     }
 
     /// Install the governor's directive for subsequent decode steps.
@@ -341,7 +362,7 @@ impl Engine {
             toks.push((tok, st.pos));
             sts.push(st);
         }
-        let threads = self.threads.max(1);
+        let threads = self.pool.threads();
         if self.scratches.len() < threads {
             self.scratches.resize_with(threads, PrunerScratch::default);
         }
@@ -360,7 +381,7 @@ impl Engine {
             signals: &mut self.signals,
             directive,
             scratches: &mut self.scratches,
-            threads,
+            pool: &self.pool,
             probe_interval,
         };
         let logits = model.decode_batch(&toks, &mut backend);
@@ -424,7 +445,7 @@ struct BatchStepBackend<'a> {
     signals: &'a mut SignalHub,
     directive: BudgetDirective,
     scratches: &'a mut [PrunerScratch],
-    threads: usize,
+    pool: &'a ThreadPool,
     probe_interval: u64,
 }
 
@@ -563,7 +584,7 @@ impl BatchBackend for BatchStepBackend<'_> {
         }
         let n_items = flat_items.len();
         // --- LPT partition over the worker pool ------------------------
-        let workers = self.threads.min(work.len()).max(1);
+        let workers = self.pool.threads().min(work.len()).max(1);
         let loads = balance::lpt_partition(&work, workers);
         let mut cells: Vec<Mutex<WorkerCell<'_>>> = Vec::with_capacity(loads.len());
         for (w, load) in loads.iter().enumerate() {
@@ -583,11 +604,12 @@ impl BatchBackend for BatchStepBackend<'_> {
         let mcfg = c;
         let directive = self.directive;
         let probe_interval = self.probe_interval;
-        // Never spawn more workers than buckets: `parallel_for` scopes
-        // fresh threads per call (per layer), so excess workers are pure
-        // spawn/join overhead. A persistent pool would amortize this
-        // across layers — tracked in ROADMAP.
-        threadpool::parallel_for(workers, cells.len(), 1, |w| {
+        // One pool round per layer: the resident workers (spawned once,
+        // on the engine's first parallel round) wake, drain exactly one
+        // bucket each (chunk = 1, one ticket per LPT bucket), and park
+        // again — the spawn/join cost that used to scale with
+        // layers × steps is amortized to zero here.
+        self.pool.run(cells.len(), 1, |w| {
             let mut guard = cells[w].lock().expect("attention worker poisoned");
             let WorkerCell { items, scratch, results } = &mut *guard;
             results.reserve(items.len());

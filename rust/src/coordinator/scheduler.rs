@@ -4,7 +4,8 @@
 //! the page pool has headroom (prefill), (2) **one batched decode step**
 //! ([`Engine::step_batch`]) advancing every running request a token —
 //! the engine flattens the batch into LPT-balanced (sequence × kv-head)
-//! attention work items — and (3) preemption of the youngest request
+//! attention work items drained by its persistent worker pool (resident
+//! across every scheduler step) — and (3) preemption of the youngest request
 //! when the pool runs dry (its pages are released; it re-prefills later —
 //! recompute-style preemption, the same policy vLLM defaults to). Only
 //! the decode phase feeds the governor's latency tracker, so step time ≙
@@ -299,6 +300,7 @@ impl Scheduler {
             ("pending", Json::Num(self.queue.len() as f64)),
             ("running", Json::Num(self.running.len() as f64)),
             ("finished", Json::Num(self.finished.len() as f64)),
+            ("threads", Json::Num(self.engine.threads() as f64)),
             ("steps", Json::Num(s.steps as f64)),
             ("prefill_steps", Json::Num(s.prefill_steps as f64)),
             ("avg_candidates", Json::Num(s.avg_candidates())),

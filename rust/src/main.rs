@@ -80,14 +80,14 @@ fn cmd_serve(a: &Args) {
     let cfg = sparse_config_from_args(a);
     let capacity = a.usize_or("capacity", 1 << 20);
     let mut engine = Engine::new(model.clone(), cfg.clone(), capacity);
-    engine.threads = a.usize_or("threads", engine.threads).max(1);
+    engine.set_threads(a.usize_or("threads", engine.threads()));
     twilight::log_info!(
         "model={} ({} params), pipeline={}, capacity={} tokens, threads={}",
         model.cfg.name,
         model.param_count(),
         cfg.label(),
         capacity,
-        engine.threads
+        engine.threads()
     );
     let mut sched = Scheduler::new(
         engine,
@@ -199,7 +199,7 @@ fn cmd_bench(a: &Args) {
         }),
     ] {
         let mut e = Engine::new(model.clone(), cfg, ctx * 2 + 128);
-        e.threads = a.usize_or("threads", e.threads).max(1);
+        e.set_threads(a.usize_or("threads", e.threads()));
         let _ = e.prefill(0, &g.prompt).unwrap();
         e.reset_stats();
         let t0 = std::time::Instant::now();

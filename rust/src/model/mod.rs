@@ -134,7 +134,9 @@ pub trait LayerBackend {
 /// [`BatchBackend::append_kv`] (serial — appends mutate the shared page
 /// pools), (b) one [`BatchBackend::attend_batch`] call covering the whole
 /// batch (the serving engine flattens it into (sequence × kv-head) work
-/// items and runs them in parallel), then (c) per-sequence rest-of-layer.
+/// items and drains them on its persistent worker pool — the backend
+/// borrows the pool, so resident workers are reused across all layers of
+/// all steps), then (c) per-sequence rest-of-layer.
 pub trait BatchBackend {
     /// Phase (a): store sequence `idx`'s new K/V for `layer`.
     fn append_kv(&mut self, layer: usize, idx: usize, k: &[f32], v: &[f32]);

@@ -1,44 +1,317 @@
-//! Scoped worker pool for head-varlen attention load balancing.
+//! Persistent worker pool for head-varlen attention load balancing.
 //!
 //! FlashInfer balances head-wise dynamic budgets by flattening the
-//! (sequence, head) dimension into a single work list; we do the same
-//! with a chunked atomic work queue drained by scoped worker threads
-//! (spawned per call — a persistent pool amortizing the spawn/join
-//! across layers is a tracked follow-up). The engine's batched decode
-//! step uses this to drain the LPT-partitioned per-worker buckets of
-//! its phase-(b) attention work list (one index per bucket,
-//! `chunk = 1`); with `TWILIGHT_THREADS=1` the queue degenerates to a
-//! plain loop on the caller thread, which is the bit-exact sequential
-//! reference the parity tests compare against.
+//! (sequence, head) dimension into a single work list and keeping its
+//! balanced varlen workers *resident*; we do the same with a pool of
+//! parked std threads draining a chunked atomic ticket queue. The pool
+//! is created once per [`crate::coordinator::engine::Engine`] and reused
+//! for every layer of every batched decode step, so the spawn/join
+//! fixed cost that used to scale with `layers × steps` is paid once —
+//! [`ThreadPool::spawned_threads`] is the observable: it stays flat
+//! across rounds (asserted by `rust/tests/threadpool_stress.rs`).
+//!
+//! Lifecycle: [`ThreadPool::new`] spawns nothing; resident workers are
+//! grown lazily by the first round that needs them (and after
+//! [`ThreadPool::set_threads`] raises the target — shrinking only
+//! lowers the target, residents are parked, never torn down mid-life).
+//! Each [`ThreadPool::run`] round publishes a generation-stamped job
+//! under the pool mutex, wakes the workers, lets the caller drain
+//! tickets too, and blocks at a completion barrier until every resident
+//! worker has left the round — the `std::thread::scope` guarantee with
+//! the threads outliving the scope, which is what makes the
+//! lifetime-erased job reference sound. A worker panic is captured, the
+//! round still drains to the barrier, and the panic is re-raised on the
+//! caller with the pool intact for subsequent rounds. Dropping the pool
+//! flags shutdown, wakes, and joins every worker.
+//!
+//! Determinism contract: `threads == 1` — and any round with
+//! `n <= chunk` — executes inline on the caller thread, the sequential
+//! bit-exactness reference. For `threads > 1` the *assignment* of
+//! tickets to threads is racy by design; callers that must be bit-exact
+//! (the engine's phase-(b) attention drain) make every ticket's work
+//! independent and merge results in flattened item order at the phase
+//! barrier, so logits, stats, and telemetry are identical for any
+//! worker count (`TWILIGHT_THREADS=1` ≡ `=N`; pinned by
+//! `rust/tests/golden_decode.rs` and `rust/tests/parallel_decode.rs`).
 
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
-/// Execute `work(i)` for every `i in 0..n` across `threads` workers,
-/// dynamically load-balanced in chunks of `chunk` items.
-pub fn parallel_for<F: Fn(usize) + Sync>(threads: usize, n: usize, chunk: usize, work: F) {
-    let threads = threads.max(1);
-    let chunk = chunk.max(1);
-    if threads == 1 || n <= chunk {
-        for i in 0..n {
-            work(i);
+/// The work function of one round; its borrows are lifetime-erased for
+/// the resident workers (see the safety argument in [`ThreadPool::run`]).
+type Task<'a> = dyn Fn(usize) + Sync + 'a;
+
+/// One round's job descriptor, copied out of the slot by each worker.
+#[derive(Clone, Copy)]
+struct JobDesc {
+    work: &'static Task<'static>,
+    n: usize,
+    chunk: usize,
+    /// Resident workers allowed to drain this round (`threads - 1` at
+    /// the round's target): after a `set_threads` shrink, surplus
+    /// residents join the barrier but never pull a ticket.
+    helpers: usize,
+}
+
+/// Round state, guarded by the pool mutex.
+struct Slot {
+    /// Round counter; workers join a round exactly once by comparing it
+    /// against the last generation they executed.
+    generation: u64,
+    /// The active round's job (`None` between rounds).
+    job: Option<JobDesc>,
+    /// Resident workers that have not yet left the active round.
+    outstanding: usize,
+    /// Resident worker threads (excludes the caller).
+    resident: usize,
+    /// Tells parked workers to exit.
+    shutdown: bool,
+    /// First panic captured during the active round.
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Workers park here between rounds.
+    start: Condvar,
+    /// The caller parks here at the round's completion barrier.
+    done: Condvar,
+    /// Ticket queue for the active round (chunked indices into `0..n`).
+    next: AtomicUsize,
+    /// Round admission counter: the first `JobDesc::helpers` residents
+    /// to join the round drain tickets, the rest only hit the barrier.
+    admitted: AtomicUsize,
+}
+
+/// Pull tickets for `job` until the queue runs dry, capturing the first
+/// panic into the slot (the round still reaches its barrier).
+fn drain(shared: &Shared, job: JobDesc) {
+    loop {
+        let start = shared.next.fetch_add(job.chunk, Ordering::Relaxed);
+        if start >= job.n {
+            break;
         }
-        return;
+        let end = (start + job.chunk).min(job.n);
+        let work = job.work;
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| {
+            for i in start..end {
+                work(i);
+            }
+        })) {
+            let mut slot = shared.slot.lock().unwrap();
+            if slot.panic.is_none() {
+                slot.panic = Some(payload);
+            }
+            break;
+        }
     }
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let start = next.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n {
-                    break;
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut last_gen = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
                 }
-                let end = (start + chunk).min(n);
-                for i in start..end {
-                    work(i);
+                if let Some(job) = slot.job {
+                    if slot.generation != last_gen {
+                        last_gen = slot.generation;
+                        break job;
+                    }
                 }
-            });
+                slot = shared.start.wait(slot).unwrap();
+            }
+        };
+        if shared.admitted.fetch_add(1, Ordering::Relaxed) < job.helpers {
+            drain(&shared, job);
         }
-    });
+        let mut slot = shared.slot.lock().unwrap();
+        slot.outstanding -= 1;
+        if slot.outstanding == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+/// A persistent, dependency-free worker pool: parked std threads, a
+/// chunked atomic ticket queue, and a generation counter per round.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    /// Target parallelism including the caller thread.
+    target: AtomicUsize,
+    /// Worker threads ever spawned — the reuse instrumentation hook.
+    spawned: AtomicUsize,
+    /// Serializes rounds (a round owns the slot/ticket state end to end).
+    run_lock: Mutex<()>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl ThreadPool {
+    /// Create a pool targeting `threads` total parallelism (caller
+    /// included). No thread is spawned until a round needs one.
+    pub fn new(threads: usize) -> ThreadPool {
+        ThreadPool {
+            shared: Arc::new(Shared {
+                slot: Mutex::new(Slot {
+                    generation: 0,
+                    job: None,
+                    outstanding: 0,
+                    resident: 0,
+                    shutdown: false,
+                    panic: None,
+                }),
+                start: Condvar::new(),
+                done: Condvar::new(),
+                next: AtomicUsize::new(0),
+                admitted: AtomicUsize::new(0),
+            }),
+            target: AtomicUsize::new(threads.max(1)),
+            spawned: AtomicUsize::new(0),
+            run_lock: Mutex::new(()),
+            handles: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Pool sized by `TWILIGHT_THREADS` / available parallelism.
+    pub fn with_default_threads() -> ThreadPool {
+        ThreadPool::new(default_threads())
+    }
+
+    /// Target parallelism (caller included); never below 1.
+    pub fn threads(&self) -> usize {
+        self.target.load(Ordering::Relaxed).max(1)
+    }
+
+    /// Retarget the pool. Growth is lazy (workers spawn on the next
+    /// round that needs them); shrinking parks the surplus residents but
+    /// never tears them down — `threads == 1` bypasses them entirely.
+    pub fn set_threads(&self, threads: usize) {
+        self.target.store(threads.max(1), Ordering::Relaxed);
+    }
+
+    /// Worker threads ever created by this pool. A reused pool reports a
+    /// constant value across rounds (at most `threads() - 1`, since the
+    /// caller drains tickets too); a spawn-per-round regression makes
+    /// this grow linearly — the stress test's key assertion.
+    pub fn spawned_threads(&self) -> usize {
+        self.spawned.load(Ordering::Relaxed)
+    }
+
+    /// Pooled rounds executed so far (inline rounds — `threads == 1` or
+    /// `n <= chunk` — bypass the pool and are not counted).
+    pub fn rounds(&self) -> u64 {
+        self.shared.slot.lock().unwrap().generation
+    }
+
+    /// Execute `work(i)` for every `i in 0..n`, dynamically
+    /// load-balanced in chunks of `chunk` tickets across the caller plus
+    /// the resident workers. Blocks until every index has been executed
+    /// exactly once. If any invocation panics, the first captured panic
+    /// is re-raised here after the round's barrier (the pool survives
+    /// for subsequent rounds). Rounds are serialized; `work` must not
+    /// call back into the same pool (it would deadlock on the round
+    /// lock) — the engine never nests rounds.
+    pub fn run<F: Fn(usize) + Sync>(&self, n: usize, chunk: usize, work: F) {
+        let chunk = chunk.max(1);
+        let threads = self.threads();
+        if threads == 1 || n <= chunk {
+            for i in 0..n {
+                work(i);
+            }
+            return;
+        }
+        // A previous round's re-raised panic unwinds through the guard
+        // and poisons the lock; the pool is still fully consistent then
+        // (rounds always complete their barrier), so clear the poison.
+        let round_guard = self.run_lock.lock().unwrap_or_else(|e| e.into_inner());
+        // Helpers the round can actually use: one per ticket beyond the
+        // caller's, capped by the target. Lazily grown, kept forever.
+        self.ensure_workers((threads - 1).min(n.saturating_sub(1)));
+        let task: &Task<'_> = &work;
+        // SAFETY: the erased reference only lives in `Slot::job` for the
+        // duration of this round, and the barrier below does not let
+        // this function return until `outstanding == 0` — i.e. until no
+        // worker can touch `work` (or anything it borrows) ever again
+        // (workers only read the job within the generation they joined).
+        // This is the `std::thread::scope` guarantee with the threads
+        // outliving the scope instead of the scope outliving the
+        // threads.
+        let task: &'static Task<'static> =
+            unsafe { std::mem::transmute::<&Task<'_>, &'static Task<'static>>(task) };
+        let job = JobDesc { work: task, n, chunk, helpers: threads - 1 };
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            // No worker is in a round here (the previous round's barrier
+            // completed before its `run` returned), so resetting the
+            // ticket queue and admission counter cannot race stale
+            // `fetch_add`s.
+            self.shared.next.store(0, Ordering::Relaxed);
+            self.shared.admitted.store(0, Ordering::Relaxed);
+            slot.generation = slot.generation.wrapping_add(1);
+            slot.job = Some(job);
+            slot.outstanding = slot.resident;
+        }
+        self.shared.start.notify_all();
+        // The caller is a worker too: threads == 1 degenerates to the
+        // inline loop above, threads == k uses k - 1 resident threads.
+        drain(&self.shared, job);
+        let panic = {
+            let mut slot = self.shared.slot.lock().unwrap();
+            while slot.outstanding != 0 {
+                slot = self.shared.done.wait(slot).unwrap();
+            }
+            slot.job = None;
+            slot.panic.take()
+        };
+        drop(round_guard);
+        if let Some(payload) = panic {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    fn ensure_workers(&self, want: usize) {
+        let mut handles = self.handles.lock().unwrap();
+        while handles.len() < want {
+            let shared = Arc::clone(&self.shared);
+            let idx = self.spawned.load(Ordering::Relaxed);
+            let handle = std::thread::Builder::new()
+                .name(format!("twilight-attn-{idx}"))
+                .spawn(move || worker_loop(shared))
+                .expect("failed to spawn attention worker");
+            // Count it resident only once the spawn succeeded, so a
+            // failed spawn can never strand the round barrier waiting on
+            // a worker that does not exist.
+            self.shared.slot.lock().unwrap().resident += 1;
+            self.spawned.fetch_add(1, Ordering::Relaxed);
+            handles.push(handle);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut slot = match self.shared.slot.lock() {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            slot.shutdown = true;
+        }
+        self.shared.start.notify_all();
+        let handles = match self.handles.get_mut() {
+            Ok(hs) => std::mem::take(hs),
+            Err(poisoned) => std::mem::take(poisoned.into_inner()),
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
 }
 
 /// Number of workers to use by default: respects `TWILIGHT_THREADS`,
@@ -59,24 +332,61 @@ mod tests {
 
     #[test]
     fn covers_all_indices_single_thread() {
+        let pool = ThreadPool::new(1);
         let sum = AtomicU64::new(0);
-        parallel_for(1, 100, 8, |i| {
+        pool.run(100, 8, |i| {
             sum.fetch_add(i as u64, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 4950);
+        assert_eq!(pool.spawned_threads(), 0, "threads == 1 must run inline");
     }
 
     #[test]
     fn covers_all_indices_multi_thread() {
+        let pool = ThreadPool::new(4);
         let hits = (0..1000).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
-        parallel_for(4, 1000, 7, |i| {
+        pool.run(1000, 7, |i| {
             hits[i].fetch_add(1, Ordering::Relaxed);
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert!(pool.spawned_threads() <= 3, "caller participates in the round");
     }
 
     #[test]
     fn zero_items_is_noop() {
-        parallel_for(4, 0, 16, |_| panic!("should not run"));
+        let pool = ThreadPool::new(4);
+        pool.run(0, 16, |_| panic!("should not run"));
+        assert_eq!(pool.spawned_threads(), 0);
+    }
+
+    #[test]
+    fn rounds_reuse_resident_workers() {
+        let pool = ThreadPool::new(4);
+        pool.run(64, 1, |_| {});
+        let spawned = pool.spawned_threads();
+        assert!(spawned >= 1 && spawned <= 3);
+        for _ in 0..50 {
+            pool.run(64, 1, |_| {});
+        }
+        assert_eq!(pool.spawned_threads(), spawned, "threads must spawn once, not per round");
+        assert_eq!(pool.rounds(), 51);
+    }
+
+    #[test]
+    fn panic_is_reraised_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(64, 1, |i| {
+                if i == 7 {
+                    panic!("ticket 7 failed");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "worker panic must reach the caller");
+        let sum = AtomicU64::new(0);
+        pool.run(100, 3, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950, "pool must survive a panicked round");
     }
 }

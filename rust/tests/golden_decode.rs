@@ -1,0 +1,224 @@
+//! Golden-trace regression for the batched decode path: a fixed-seed
+//! end-to-end run (prefill + governed decode steps) whose sampled token
+//! ids, budget counters, and telemetry are (1) bit-identical for any
+//! worker count — the persistent pool's determinism contract — and
+//! (2) pinned against a checked-in golden so *future* PRs cannot change
+//! decode behavior silently.
+//!
+//! Everything in the trace is deterministic by construction: workload
+//! and sampling use fixed `util::rng` seeds, the governor runs the
+//! `mass` policy (it steers on prune-mass/recall telemetry, which is
+//! worker-count invariant) at virtual timestamps, and no wall-clock
+//! quantity is snapshotted. Floats are stored as IEEE-754 bit patterns
+//! so the comparison is exact, not epsilon.
+//!
+//! Golden lifecycle: the file bootstraps on the first run (written to
+//! `rust/tests/golden/`, commit it), compares on every run after, and
+//! regenerates with `TWILIGHT_UPDATE_GOLDEN=1`. Until the bootstrapped
+//! file is committed, cross-PR drift is NOT pinned — a bootstrap run in
+//! CI emits a loud warning annotation saying so. Within one CI workflow
+//! run the pin is still real: the TWILIGHT_THREADS=1 leg bootstraps and
+//! the =4/=8/release legs then compare against that file, so
+//! worker-count- or optimization-dependent divergence fails the run
+//! either way.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use twilight::coordinator::engine::{DecodeBatch, Engine};
+use twilight::coordinator::SparseConfig;
+use twilight::governor::{Governor, GovernorConfig};
+use twilight::model::retrieval::build_retrieval_model;
+use twilight::model::sampler::{sample, SamplingParams};
+use twilight::selector::SelectorKind;
+use twilight::util::rng::Rng;
+use twilight::util::threadpool;
+use twilight::workload::{gen_niah, RetrievalVocab};
+
+const V: RetrievalVocab = RetrievalVocab::DEFAULT;
+const SEQS: u64 = 3;
+const DECODE_STEPS: u64 = 12;
+
+/// Everything the golden pins. Floats live here as bit patterns so
+/// `PartialEq` is exact equality, matching the render format.
+#[derive(Clone, Debug, PartialEq)]
+struct Trace {
+    /// Sampled token ids, step-major then sequence-major (prefill's
+    /// first sampled token per sequence comes first).
+    tokens: Vec<u32>,
+    kept_sum: u64,
+    candidates_sum: u64,
+    sparse_calls: u64,
+    steps: u64,
+    prefill_steps: u64,
+    probes: u64,
+    est_bytes_select: u64,
+    est_bytes_prune: u64,
+    est_bytes_attend: u64,
+    mean_mass_bits: u64,
+    probe_recall_bits: u64,
+    /// Final governor directive (proves the control loop itself is
+    /// worker-count invariant).
+    p_scale_bits: u32,
+    budget_scale_bits: u32,
+}
+
+impl Trace {
+    fn render(&self) -> String {
+        let toks: Vec<String> = self.tokens.iter().map(|t| t.to_string()).collect();
+        format!(
+            "twilight golden decode trace v1\n\
+             tokens {}\n\
+             kept_sum {}\n\
+             candidates_sum {}\n\
+             sparse_calls {}\n\
+             steps {}\n\
+             prefill_steps {}\n\
+             probes {}\n\
+             est_bytes_select {}\n\
+             est_bytes_prune {}\n\
+             est_bytes_attend {}\n\
+             mean_mass {:016x}\n\
+             probe_recall {:016x}\n\
+             p_scale {:08x}\n\
+             budget_scale {:08x}\n",
+            toks.join(" "),
+            self.kept_sum,
+            self.candidates_sum,
+            self.sparse_calls,
+            self.steps,
+            self.prefill_steps,
+            self.probes,
+            self.est_bytes_select,
+            self.est_bytes_prune,
+            self.est_bytes_attend,
+            self.mean_mass_bits,
+            self.probe_recall_bits,
+            self.p_scale_bits,
+            self.budget_scale_bits,
+        )
+    }
+}
+
+/// Run the fixed-seed governed decode trace with `threads` attention
+/// workers.
+fn run_trace(threads: usize) -> Trace {
+    let model = Arc::new(build_retrieval_model(V, 1 << 13));
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+    cfg.skip_layers = 0;
+    cfg.dense_below = 16;
+    let mut e = Engine::new(model, cfg, 1 << 13);
+    e.set_threads(threads);
+    // Governor on: the mass policy steers p from prune-mass telemetry
+    // and the dense recall probe — both deterministic and merged in
+    // flattened item order, so its decisions are too.
+    let mut gov = Governor::new("mass", GovernorConfig::default()).expect("mass policy exists");
+    let mut wl_rng = Rng::new(0xD0_6E);
+    let mut sample_rng = Rng::new(0x5A11);
+    let params = SamplingParams { temperature: 0.8, top_p: 0.9 };
+    let mut tokens = Vec::new();
+    let mut frontier: Vec<(u64, u32)> = Vec::new();
+    for i in 0..SEQS {
+        // Mixed context lengths → skewed per-head budgets for the LPT.
+        let g = gen_niah(&mut wl_rng, V, 192 + 128 * i as usize);
+        let logits = e.prefill(i, &g.prompt).expect("prefill fits the page pool");
+        let tok = sample(&logits, &params, &mut sample_rng);
+        tokens.push(tok);
+        frontier.push((i, tok));
+    }
+    for step in 0..DECODE_STEPS {
+        // Virtual time: governor decisions must not read the wall clock.
+        let free_frac = e.free_pages() as f64 / e.total_pages().max(1) as f64;
+        let snap = gov.snapshot(
+            step as f64 * 0.01,
+            &e.signals,
+            free_frac,
+            0,
+            frontier.len(),
+            e.stats.steps,
+        );
+        let d = gov.step(&snap);
+        e.apply_directive(d);
+        let batch = DecodeBatch::new(frontier.clone());
+        let results = e.step_batch(&batch);
+        for (slot, res) in frontier.iter_mut().zip(results) {
+            let logits = res.expect("golden trace must not OOM");
+            let tok = sample(&logits, &params, &mut sample_rng);
+            tokens.push(tok);
+            slot.1 = tok;
+        }
+    }
+    let d = e.directive();
+    Trace {
+        tokens,
+        kept_sum: e.stats.kept_sum,
+        candidates_sum: e.stats.candidates_sum,
+        sparse_calls: e.stats.sparse_calls,
+        steps: e.stats.steps,
+        prefill_steps: e.stats.prefill_steps,
+        probes: e.signals.probes(),
+        est_bytes_select: e.stats.est_bytes_select,
+        est_bytes_prune: e.stats.est_bytes_prune,
+        est_bytes_attend: e.stats.est_bytes_attend,
+        mean_mass_bits: e.signals.mean_mass().to_bits(),
+        probe_recall_bits: e.signals.probe_recall().to_bits(),
+        p_scale_bits: d.p_scale.to_bits(),
+        budget_scale_bits: d.budget_scale.to_bits(),
+    }
+}
+
+fn golden_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/decode_trace_v1.txt")
+}
+
+#[test]
+fn golden_decode_trace_pinned_across_worker_counts() {
+    let t1 = run_trace(1);
+    assert_eq!(t1.steps, DECODE_STEPS);
+    assert_eq!(t1.tokens.len() as u64, SEQS * (DECODE_STEPS + 1));
+    assert!(t1.sparse_calls > 0, "the trace must exercise the pruned path");
+    assert!(t1.probes > 0, "the trace must exercise the recall probe");
+    // (1) Bit-exactness across worker counts — the pool contract. The
+    // CI matrix additionally runs this whole test under
+    // TWILIGHT_THREADS=1/4/8, covered by the env-default run below.
+    for threads in [4usize, 8] {
+        let tn = run_trace(threads);
+        assert_eq!(t1, tn, "decode trace diverged at threads={threads}");
+    }
+    let tdef = run_trace(threadpool::default_threads());
+    assert_eq!(t1, tdef, "env-sized default pool diverged from the sequential reference");
+    // (2) The checked-in golden pins the trace against future behavior
+    // drift (bootstraps on first run; TWILIGHT_UPDATE_GOLDEN=1 refreshes).
+    let rendered = t1.render();
+    let path = golden_path();
+    let update = std::env::var("TWILIGHT_UPDATE_GOLDEN").is_ok_and(|v| v == "1");
+    match std::fs::read_to_string(&path) {
+        Ok(golden) if !update => {
+            assert_eq!(
+                golden.trim(),
+                rendered.trim(),
+                "decode trace diverged from the checked-in golden at {}.\n\
+                 If this change is intentional, regenerate with\n\
+                 TWILIGHT_UPDATE_GOLDEN=1 cargo test --test golden_decode\n\
+                 and commit the refreshed file.",
+                path.display()
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(path.parent().expect("golden dir"))
+                .expect("create golden dir");
+            std::fs::write(&path, rendered.as_bytes()).expect("write golden");
+            eprintln!("golden_decode: wrote {} — commit this file", path.display());
+            if !update && std::env::var("CI").is_ok() {
+                // GitHub annotation: a missing golden in CI means this
+                // run pinned nothing across PRs (later legs of the same
+                // run do compare against this bootstrap, so worker-count
+                // drift is still caught). Keep it green but loud.
+                println!(
+                    "::warning file=rust/tests/golden_decode.rs::golden decode trace was \
+                     bootstrapped in CI — commit rust/tests/golden/decode_trace_v1.txt to pin \
+                     decode behavior across PRs"
+                );
+            }
+        }
+    }
+}

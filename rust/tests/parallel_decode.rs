@@ -23,7 +23,7 @@ fn run_trace(threads: usize) -> (Vec<Vec<f32>>, u64, u64) {
     cfg.skip_layers = 0;
     cfg.dense_below = 16;
     let mut e = Engine::new(model, cfg, 1 << 14);
-    e.threads = threads;
+    e.set_threads(threads);
     let mut rng = Rng::new(71);
     let mut toks = Vec::new();
     for i in 0..3u64 {
@@ -64,7 +64,7 @@ fn worker_count_does_not_change_telemetry() {
     cfg.dense_below = 16;
     let run = |threads: usize| {
         let mut e = Engine::new(model.clone(), cfg.clone(), 1 << 14);
-        e.threads = threads;
+        e.set_threads(threads);
         let mut rng = Rng::new(72);
         let g = gen_niah(&mut rng, V, 1024);
         let _ = e.prefill(0, &g.prompt).unwrap();
@@ -87,12 +87,51 @@ fn worker_count_does_not_change_telemetry() {
 }
 
 #[test]
+fn engine_reuses_pool_workers_across_steps() {
+    // The persistent pool must spawn its resident workers at most once
+    // per engine — not once per layer per step. Ten batched steps after
+    // the first must not create a single additional thread.
+    let model = Arc::new(build_retrieval_model(V, 1 << 14));
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+    cfg.skip_layers = 0;
+    cfg.dense_below = 16;
+    let mut e = Engine::new(model, cfg, 1 << 14);
+    e.set_threads(4);
+    let mut rng = Rng::new(74);
+    let mut toks = Vec::new();
+    for i in 0..4u64 {
+        let g = gen_niah(&mut rng, V, 256);
+        let _ = e.prefill(i, &g.prompt).unwrap();
+        toks.push((i, g.prompt[0]));
+    }
+    let batch = DecodeBatch::new(toks);
+    for res in e.step_batch(&batch) {
+        res.unwrap();
+    }
+    let spawned = e.pool().spawned_threads();
+    assert!(
+        spawned >= 1 && spawned <= 3,
+        "threads=4 must run at most 3 resident workers (caller participates), got {spawned}"
+    );
+    for _ in 0..10 {
+        for res in e.step_batch(&batch) {
+            res.unwrap();
+        }
+    }
+    assert_eq!(
+        e.pool().spawned_threads(),
+        spawned,
+        "pool must reuse resident workers across steps, not respawn per round"
+    );
+}
+
+#[test]
 fn scheduler_progresses_many_concurrent_requests_in_parallel() {
     let model = Arc::new(build_retrieval_model(V, 1 << 14));
     let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
     cfg.skip_layers = 0;
     let mut engine = Engine::new(model, cfg, 1 << 16);
-    engine.threads = 4;
+    engine.set_threads(4);
     let mut s = Scheduler::new(engine, SchedulerConfig::default());
     let mut rng = Rng::new(73);
     let mut answers = Vec::new();

@@ -10,6 +10,7 @@ use twilight::coordinator::{BudgetSpec, SparseConfig};
 use twilight::kvcache::{CacheConfig, PagedKvCache, SeqCache};
 use twilight::model::retrieval::build_retrieval_model;
 use twilight::pruner::topp::{topp_binary_search, topp_sort};
+use twilight::pruner::{prune_group, prune_head, PrunerConfig, PrunerScratch};
 use twilight::selector::SelectorKind;
 use twilight::tensor::quant::{self, QuantBits};
 use twilight::tensor::softmax_inplace;
@@ -58,6 +59,195 @@ fn prop_topp_mass_invariant() {
         }
         Ok(())
     });
+}
+
+/// Random cache with `n` tokens on one KV head (keys = values).
+fn random_head_cache(rng: &mut Rng, d: usize, n: usize) -> (PagedKvCache, SeqCache) {
+    let mut cache = PagedKvCache::new(CacheConfig::new(1, d, n / 16 + 2));
+    let mut seq = SeqCache::default();
+    for _ in 0..n {
+        let k: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        cache.append(&mut seq, &k, &k).unwrap();
+    }
+    (cache, seq)
+}
+
+/// Threshold dominance: every kept weight must be ≥ every dropped
+/// weight (ties may be split only by the mass guard, which widens in
+/// descending order — equality is allowed).
+fn check_dominance(w: &[f32], kept: &[usize]) -> Result<(), String> {
+    let mut is_kept = vec![false; w.len()];
+    for &i in kept {
+        is_kept[i] = true;
+    }
+    let min_kept =
+        kept.iter().map(|&i| w[i]).fold(f32::INFINITY, f32::min);
+    let max_dropped = w
+        .iter()
+        .zip(&is_kept)
+        .filter(|(_, &k)| !k)
+        .map(|(&x, _)| x)
+        .fold(f32::NEG_INFINITY, f32::max);
+    if max_dropped > min_kept + 1e-6 {
+        return Err(format!(
+            "dropped weight {max_dropped} exceeds kept weight {min_kept}"
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_pruner_min_keep_floor_edge_cases() {
+    check(
+        "pruner-min-keep-edges",
+        Config { cases: 24, ..Default::default() },
+        |rng| {
+            let d = 16;
+            let n = rng.range(4, 120);
+            let (cache, seq) = random_head_cache(rng, d, n);
+            let q: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let candidates: Vec<usize> = (0..n).collect();
+            let mut scratch = PrunerScratch::default();
+            // min_keep >= n: the pruner must short-circuit to keep-all
+            // with full mass and *empty* weights (nothing was scored —
+            // the documented fall-back-to-exact contract).
+            let cfg = PrunerConfig { p: 0.5, min_keep: n + rng.below(10), ..Default::default() };
+            let out = prune_head(&cfg, &cache, &seq, 0, &q, &candidates, &mut scratch);
+            if out.kept != candidates {
+                return Err(format!("min_keep>=n must keep all: kept {}", out.kept.len()));
+            }
+            if out.mass != 1.0 {
+                return Err(format!("short-circuit mass must be 1.0, got {}", out.mass));
+            }
+            if !out.weights.is_empty() {
+                return Err("short-circuit must not fabricate weights".into());
+            }
+            let (union, outs) =
+                prune_group(&cfg, &cache, &seq, 0, &q, 1, &candidates, &mut scratch);
+            if union != candidates || outs[0].kept != candidates || !outs[0].weights.is_empty() {
+                return Err("group path must share the short-circuit contract".into());
+            }
+            // min_keep just below n with a near-zero p: the floor rules,
+            // and the weights stay aligned with the truthful (recomputed)
+            // mass of the floored set.
+            let cfg = PrunerConfig { p: 1e-4, min_keep: n - 1, ..Default::default() };
+            let out = prune_head(&cfg, &cache, &seq, 0, &q, &candidates, &mut scratch);
+            if out.kept.len() != n - 1 {
+                return Err(format!("floor must keep n-1={} tokens, got {}", n - 1, out.kept.len()));
+            }
+            if out.weights.len() != out.kept.len() {
+                return Err("floored weights must align with kept".into());
+            }
+            let sum: f32 = out.weights.iter().sum();
+            if (sum - out.mass).abs() > 1e-3 {
+                return Err(format!("floored weights sum {sum} vs mass {}", out.mass));
+            }
+            if out.mass > 1.0 + 1e-4 {
+                return Err(format!("mass {} exceeds 1", out.mass));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_topp_p_one_boundary_with_ties() {
+    check_default("topp-p1-ties", |rng| {
+        // A handful of distinct raw values → heavy ties, including at
+        // whatever cutoff top-p lands on.
+        let n = rng.range(4, 400);
+        let levels = 1 + rng.below(4);
+        let vals: Vec<f32> = (0..levels).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let mut w: Vec<f32> = (0..n).map(|_| *rng.choose(&vals)).collect();
+        softmax_inplace(&mut w);
+        // p at the 1.0 boundary: the kept mass must be (fp-)complete and
+        // the threshold rule must not keep a smaller weight over a
+        // bigger dropped one.
+        let r = topp_binary_search(&w, 1.0, 1e-6);
+        if r.mass < 1.0 - 1e-3 {
+            return Err(format!("p=1.0 kept mass {} (n={n}, levels={levels})", r.mass));
+        }
+        check_dominance(&w, &r.indices)?;
+        let o = topp_sort(&w, 1.0);
+        if o.mass < 1.0 - 1e-3 {
+            return Err(format!("sort oracle p=1.0 kept mass {}", o.mass));
+        }
+        // Interior p with exact ties at the cutoff: mass invariant and
+        // dominance must both survive the tie group.
+        let p = 0.3 + rng.f32() * 0.69;
+        let r = topp_binary_search(&w, p, 1e-7);
+        if r.mass < p - 1e-3 {
+            return Err(format!("tied cutoff: mass {} < p {p}", r.mass));
+        }
+        check_dominance(&w, &r.indices)?;
+        if r.indices.windows(2).any(|x| x[0] >= x[1]) {
+            return Err("indices must be strictly ascending".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prune_outcome_weights_invariants() {
+    check(
+        "prune-weights",
+        Config { cases: 24, ..Default::default() },
+        |rng| {
+            let d = 16;
+            let n = rng.range(24, 220);
+            let (cache, seq) = random_head_cache(rng, d, n);
+            let group = 1 + rng.below(4);
+            let qs: Vec<f32> = (0..group * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let candidates: Vec<usize> = (0..n).filter(|_| rng.chance(0.7)).collect();
+            let min_keep = 1 + rng.below(8);
+            if candidates.len() <= min_keep + 4 {
+                return Ok(()); // short-circuit regime covered elsewhere
+            }
+            let p = 0.3 + rng.f32() * 0.69;
+            let cfg = PrunerConfig { p, min_keep, ..Default::default() };
+            let mut scratch = PrunerScratch::default();
+            let (union, outs) =
+                prune_group(&cfg, &cache, &seq, 0, &qs, group, &candidates, &mut scratch);
+            let mut rebuilt: Vec<usize> = Vec::new();
+            for (g, o) in outs.iter().enumerate() {
+                if o.weights.len() != o.kept.len() {
+                    return Err(format!(
+                        "head {g}: weights {} misaligned with kept {}",
+                        o.weights.len(),
+                        o.kept.len()
+                    ));
+                }
+                let sum: f32 = o.weights.iter().sum();
+                if (sum - o.mass).abs() > 1e-3 {
+                    return Err(format!("head {g}: weights sum {sum} vs mass {}", o.mass));
+                }
+                if o.weights.iter().any(|&x| x <= 0.0) {
+                    return Err(format!("head {g}: non-positive weight"));
+                }
+                if o.kept.windows(2).any(|x| x[0] >= x[1]) {
+                    return Err(format!("head {g}: kept not strictly ascending"));
+                }
+                for t in &o.kept {
+                    if candidates.binary_search(t).is_err() {
+                        return Err(format!("head {g}: kept token {t} not a candidate"));
+                    }
+                    if union.binary_search(t).is_err() {
+                        return Err(format!("head {g}: kept token {t} missing from union"));
+                    }
+                }
+                if o.mass < p - 1e-3 || o.mass > 1.0 + 1e-3 {
+                    return Err(format!("head {g}: mass {} outside [p, 1]", o.mass));
+                }
+                rebuilt.extend_from_slice(&o.kept);
+            }
+            rebuilt.sort_unstable();
+            rebuilt.dedup();
+            if rebuilt != union {
+                return Err("union must be exactly the dedup of per-head keeps".into());
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

@@ -1,0 +1,168 @@
+//! Stress/determinism battery for the persistent attention worker pool.
+//!
+//! The pool's contract (see `util/threadpool.rs`): every index of every
+//! round executes exactly once; worker panics re-raise on the caller
+//! without poisoning the pool; zero-item rounds are no-ops; and —
+//! the point of the rewrite — resident workers are created once per
+//! pool, not once per round (`spawned_threads` is the instrumentation
+//! hook that makes reuse observable).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use twilight::util::rng::Rng;
+use twilight::util::threadpool::ThreadPool;
+
+/// 10k rounds of mixed (n, chunk): every index in `0..n` is hit exactly
+/// once per round, nothing outside it is ever touched, and the resident
+/// worker set never grows after the first round that needs it.
+#[test]
+fn soak_mixed_rounds_cover_every_index_exactly_once() {
+    const MAX_N: usize = 256;
+    let pool = ThreadPool::new(4);
+    let mut rng = Rng::new(0x57E55);
+    let hits: Vec<AtomicUsize> = (0..MAX_N).map(|_| AtomicUsize::new(0)).collect();
+    let mut spawned_high_water = 0;
+    for round in 0..10_000 {
+        // n in 0..=MAX_N (zero-item rounds included), chunk in 1..=16.
+        let n = rng.below(MAX_N + 1);
+        let chunk = 1 + rng.below(16);
+        pool.run(n, chunk, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            let count = h.swap(0, Ordering::Relaxed);
+            let want = usize::from(i < n);
+            assert_eq!(
+                count, want,
+                "round {round} (n={n}, chunk={chunk}): index {i} ran {count} times"
+            );
+        }
+        let spawned = pool.spawned_threads();
+        assert!(
+            spawned >= spawned_high_water,
+            "spawn counter must be monotonic: {spawned} after {spawned_high_water}"
+        );
+        assert!(spawned <= 3, "threads=4 may never hold more than 3 residents: {spawned}");
+        spawned_high_water = spawned;
+    }
+    assert!(
+        spawned_high_water >= 1,
+        "10k mixed rounds must have engaged the pool at least once"
+    );
+}
+
+/// The reuse assertion in isolation: resident workers are created by the
+/// first parallel round and *never again*, no matter how many rounds
+/// follow — a spawn-per-round regression makes `spawned_threads` grow
+/// linearly and fails immediately.
+#[test]
+fn workers_spawn_once_not_per_round() {
+    let pool = ThreadPool::new(4);
+    assert_eq!(pool.spawned_threads(), 0, "construction must not spawn (lazy growth)");
+    assert_eq!(pool.rounds(), 0);
+    pool.run(256, 2, |_| {});
+    let after_first = pool.spawned_threads();
+    assert_eq!(after_first, 3, "threads=4 ⇒ 3 resident workers (the caller drains too)");
+    let extra_rounds = 1_000u64;
+    for _ in 0..extra_rounds {
+        pool.run(64, 1, |_| {});
+    }
+    assert_eq!(
+        pool.spawned_threads(),
+        after_first,
+        "threads must be created once per pool, not per round"
+    );
+    assert_eq!(pool.rounds(), 1 + extra_rounds, "every parallel round is generation-stamped");
+}
+
+/// A panic inside a work item must surface on the caller with its
+/// payload intact — and the pool must keep serving rounds afterwards
+/// with the same resident workers (no poisoning, no respawn).
+#[test]
+fn worker_panic_propagates_without_poisoning_the_pool() {
+    let pool = ThreadPool::new(4);
+    pool.run(64, 1, |_| {}); // warm: residents up before the panic round
+    let spawned = pool.spawned_threads();
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        pool.run(64, 1, |i| {
+            if i == 13 {
+                panic!("boom at ticket {i}");
+            }
+        });
+    }));
+    let payload = caught.expect_err("worker panic must re-raise on the caller");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("boom at ticket 13"), "panic payload lost: {msg:?}");
+    // The pool survives: full coverage on the very next rounds, with the
+    // same residents.
+    for _ in 0..10 {
+        let sum = AtomicUsize::new(0);
+        pool.run(100, 3, |i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950, "post-panic round lost indices");
+    }
+    assert_eq!(pool.spawned_threads(), spawned, "panic must not cost the pool its workers");
+}
+
+/// Zero-item rounds are no-ops: the work function never runs and no
+/// thread is ever spawned for them.
+#[test]
+fn zero_item_rounds_are_noops() {
+    let pool = ThreadPool::new(8);
+    for _ in 0..100 {
+        pool.run(0, 4, |_| panic!("zero-item round executed work"));
+    }
+    assert_eq!(pool.spawned_threads(), 0, "zero-item rounds must not spawn");
+    assert_eq!(pool.rounds(), 0, "zero-item rounds run inline, not through the pool");
+}
+
+/// `threads == 1` is the sequential bit-exactness reference: the caller
+/// thread runs the plain loop and the pool machinery is never engaged.
+#[test]
+fn single_thread_pool_runs_inline() {
+    let pool = ThreadPool::new(1);
+    let order = std::sync::Mutex::new(Vec::new());
+    pool.run(1000, 7, |i| order.lock().unwrap().push(i));
+    let order = order.into_inner().unwrap();
+    assert_eq!(order, (0..1000).collect::<Vec<_>>(), "inline path must be in-order");
+    assert_eq!(pool.spawned_threads(), 0);
+    assert_eq!(pool.rounds(), 0);
+}
+
+/// `set_threads` growth is lazy (next round spawns the difference) and
+/// shrinking parks residents instead of tearing them down — parked
+/// means parked: a shrunk round admits at most `threads - 1` residents
+/// to the ticket queue, so observed parallelism tracks the target.
+#[test]
+fn set_threads_grows_lazily_and_never_tears_down() {
+    let pool = ThreadPool::new(2);
+    pool.run(64, 1, |_| {});
+    assert_eq!(pool.spawned_threads(), 1);
+    pool.set_threads(6);
+    assert_eq!(pool.spawned_threads(), 1, "growth must wait for the next round");
+    pool.run(64, 1, |_| {});
+    assert_eq!(pool.spawned_threads(), 5);
+    pool.set_threads(2);
+    pool.run(64, 1, |_| {});
+    assert_eq!(pool.spawned_threads(), 5, "shrinking parks residents, never joins them");
+    // Full coverage still holds after the shrink, and the surplus
+    // residents really are parked: at most `threads` distinct threads
+    // (caller + admitted residents) ever touch the work.
+    let sum = AtomicUsize::new(0);
+    let participants = std::sync::Mutex::new(std::collections::HashSet::new());
+    pool.run(100, 1, |i| {
+        sum.fetch_add(i, Ordering::Relaxed);
+        participants.lock().unwrap().insert(std::thread::current().id());
+    });
+    assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    let distinct = participants.into_inner().unwrap().len();
+    assert!(
+        distinct <= 2,
+        "threads=2 round must admit at most 1 resident (saw {distinct} participants)"
+    );
+}
