@@ -1,5 +1,8 @@
 //! Fig. 8 — end-to-end decoding TPOT across batch sizes, through the
-//! full coordinator (queue → continuous batcher → engine).
+//! full coordinator (queue → continuous batcher → engine); plus the
+//! chunked-prefill panels: TTFT vs chunk span, and a mixed-load
+//! comparison of serial (chunk=1) vs chunked prefill while a steady
+//! decode set is running.
 
 mod common;
 
@@ -10,6 +13,79 @@ use twilight::coordinator::SparseConfig;
 use twilight::selector::SelectorKind;
 use twilight::util::rng::Rng;
 use twilight::workload::{gen_niah, RetrievalVocab};
+
+/// A small *multi-layer* random model for the chunked-prefill panels:
+/// the 1-layer retrieval model's prefill chunks take the algebraic
+/// attend-skip (layer-0 K/V needs no attention), so only a deeper model
+/// exercises the multi-query attention work the panels measure.
+fn deep_model(seed: u64) -> std::sync::Arc<twilight::model::Model> {
+    use twilight::model::{Model, ModelConfig};
+    let cfg = ModelConfig {
+        name: "fig8-deep".into(),
+        vocab_size: 256,
+        d_model: 64,
+        n_layers: 4,
+        n_heads: 8,
+        n_kv_heads: 4,
+        head_dim: 16,
+        d_ff: 128,
+        use_rope: true,
+        rope_theta: 10000.0,
+        use_norm: true,
+        norm_eps: 1e-5,
+        max_ctx: 1 << 15,
+    };
+    std::sync::Arc::new(Model::random(&cfg, seed))
+}
+
+/// TTFT / TPOT / preemptions for one chunked-prefill serving run over
+/// the multi-layer model (prompts are random tokens — the panels
+/// measure latency shape, not retrieval accuracy).
+fn chunked_run(
+    ctx: usize,
+    chunk: usize,
+    threads: usize,
+    steady: usize,
+    long_arrivals: usize,
+) -> (f64, f64, f64, usize) {
+    let model = deep_model(11);
+    let vocab = model.cfg.vocab_size;
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.95);
+    cfg.skip_layers = 0;
+    let mut engine = Engine::new(model, cfg, (ctx + 80) * (steady + long_arrivals + 1));
+    engine.set_threads(threads);
+    engine.set_prefill_chunk(chunk);
+    let mut sched = Scheduler::new(
+        engine,
+        SchedulerConfig { max_batch: steady + long_arrivals, ..Default::default() },
+    );
+    let mut rng = Rng::new(17);
+    let mut prompt = |len: usize| -> Vec<u32> {
+        (0..len).map(|_| rng.below(vocab) as u32).collect()
+    };
+    // Steady decoders: short prompts, long generations.
+    for i in 0..steady {
+        let mut req = Request::new(i as u64, prompt(128), 48);
+        req.stop_token = None;
+        sched.submit(req);
+    }
+    // Long-prompt arrivals land once the steady set is decoding.
+    for i in 0..long_arrivals {
+        let mut req = Request::new((steady + i) as u64, prompt(ctx), 4);
+        req.arrival = 0.005 * (i + 1) as f64;
+        req.stop_token = None;
+        sched.submit(req);
+    }
+    let rep = sched.run_to_completion();
+    let long_ttft: Vec<f64> = rep
+        .requests
+        .iter()
+        .filter(|r| r.id >= steady as u64 && !r.rejected)
+        .map(|r| r.ttft())
+        .collect();
+    let ttft = long_ttft.iter().sum::<f64>() / long_ttft.len().max(1) as f64;
+    (ttft, rep.tpot_summary().p99, rep.throughput_tok_s(), rep.preemptions() as usize)
+}
 
 fn main() {
     common::header("Figure 8", "end-to-end TPOT vs batch size");
@@ -59,5 +135,54 @@ fn main() {
                 dense_tpot / tpot,
             );
         }
+    }
+
+    // --- Part 2: TTFT vs prefill chunk span ---------------------------
+    // One long-prompt arrival against a steady decode set, per span and
+    // worker count, on a 4-layer model (whose chunk queries really run
+    // the multi-query attention work list): chunked prefill rides the
+    // LPT-balanced pool, so prefill wall-clock drops with workers while
+    // chunk=1 serializes.
+    let pctx = ctx.min(2048); // multi-layer CPU prefill: keep panels brisk
+    println!();
+    common::header("Figure 8b", "TTFT vs prefill chunk span (long arrival over steady decodes)");
+    println!(
+        "{:>7} {:>8} {:>12} {:>12} {:>12}",
+        "threads", "chunk", "ttft-ms", "tpot-p99-ms", "tok/s"
+    );
+    for threads in [1usize, 4] {
+        for chunk in [1usize, 16, 64, 256] {
+            let (ttft, tpot_p99, tok_s, _) = chunked_run(pctx, chunk, threads, 4, 1);
+            println!(
+                "{:>7} {:>8} {:>12.2} {:>12.2} {:>12.1}",
+                threads,
+                chunk,
+                ttft * 1e3,
+                tpot_p99 * 1e3,
+                tok_s
+            );
+        }
+    }
+
+    // --- Part 3: mixed load, serial vs chunked prefill ----------------
+    // A burst of long prompts during steady decode: serial admission
+    // (chunk=1) head-of-line-blocks every decode for whole prompts;
+    // chunked admission bounds the stall by the per-step token budget.
+    println!();
+    common::header("Figure 8c", "mixed load: serial (chunk=1) vs chunked prefill");
+    println!(
+        "{:>10} {:>12} {:>12} {:>12} {:>8}",
+        "mode", "ttft-ms", "tpot-p99-ms", "tok/s", "preempt"
+    );
+    for (label, chunk) in [("serial", 1usize), ("chunked", 64)] {
+        let (ttft, tpot_p99, tok_s, preempt) = chunked_run(pctx, chunk, 4, 8, 3);
+        println!(
+            "{:>10} {:>12.2} {:>12.2} {:>12.1} {:>8}",
+            label,
+            ttft * 1e3,
+            tpot_p99 * 1e3,
+            tok_s,
+            preempt
+        );
     }
 }

@@ -5,6 +5,14 @@
 //! analog: iterates the paged KV cache with a streaming (online) softmax
 //! so pages are visited exactly once — the same single-pass structure as
 //! flash decoding, which is what makes it bandwidth-optimal.
+//! `paged_full_limit` is the same walk truncated to a visible prefix,
+//! and `paged_full_causal` stacks it into the multi-query causal kernel
+//! a prefill *chunk* needs: query `c` of the chunk attends to tokens
+//! `0..=start+c`. The causal kernel deliberately iterates query-outer /
+//! pages-inner (not the page-outer tiling a GPU kernel would use): each
+//! query's accumulation order is then identical to a lone decode step at
+//! the same position, which is what makes chunked prefill bit-exact with
+//! token-at-a-time processing for any chunk size.
 
 use super::scale;
 use crate::kvcache::{PagedKvCache, SeqCache};
@@ -32,17 +40,29 @@ pub fn contiguous_full(q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
 /// Visits each page once; numerically identical (up to fp error) to the
 /// two-pass version.
 pub fn paged_full(cache: &PagedKvCache, seq: &SeqCache, head: usize, q: &[f32], out: &mut [f32]) {
+    paged_full_limit(cache, seq, head, q, seq.len, out)
+}
+
+/// `paged_full` over the first `limit` tokens only — the visible-prefix
+/// primitive chunked prefill is built from. `limit == seq.len`
+/// reproduces `paged_full` exactly (same cells, same order).
+pub fn paged_full_limit(
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    head: usize,
+    q: &[f32],
+    limit: usize,
+    out: &mut [f32],
+) {
     let d = q.len();
     let s = scale(d);
+    let ps = cache.cfg.page_size;
+    let npages = limit.div_ceil(ps);
     let mut m = f32::NEG_INFINITY; // running max
     let mut denom = 0.0f32; // running sum of exp
     out.fill(0.0);
-    for (pi, &page) in seq.pages.iter().enumerate() {
-        let fill = if pi + 1 == seq.pages.len() {
-            seq.len - pi * cache.cfg.page_size
-        } else {
-            cache.cfg.page_size
-        };
+    for (pi, &page) in seq.pages[..npages].iter().enumerate() {
+        let fill = (limit - pi * ps).min(ps);
         for slot in 0..fill {
             let logit = dot(q, cache.k_at(page, head, slot)) * s;
             if logit > m {
@@ -65,6 +85,42 @@ pub fn paged_full(cache: &PagedKvCache, seq: &SeqCache, head: usize, q: &[f32], 
         let inv = 1.0 / denom;
         for o in out.iter_mut() {
             *o *= inv;
+        }
+    }
+}
+
+/// Multi-query causal dense attention for a prefill chunk, one KV head.
+/// `qs` holds the chunk's query rows: the query for chunk offset `c`,
+/// group head `g` lives at `qs[c * q_stride + g * d ..][..d]` (the
+/// engine passes its flattened step buffer with `q_stride = q_dim`).
+/// Query `c` sits at sequence position `start + c` and attends to tokens
+/// `0..=start+c` — decode semantics, self included. `outs` is
+/// `[span * group * d]`, chunk-offset-major. Bit-exact with running
+/// `paged_full` once per token at the matching position.
+#[allow(clippy::too_many_arguments)]
+pub fn paged_full_causal(
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    kv_head: usize,
+    qs: &[f32],
+    q_stride: usize,
+    group: usize,
+    start: usize,
+    outs: &mut [f32],
+) {
+    let d = cache.cfg.head_dim;
+    let span = outs.len() / (group * d);
+    debug_assert!(start + span <= seq.len);
+    for c in 0..span {
+        for g in 0..group {
+            paged_full_limit(
+                cache,
+                seq,
+                kv_head,
+                &qs[c * q_stride + g * d..c * q_stride + (g + 1) * d],
+                start + c + 1,
+                &mut outs[(c * group + g) * d..(c * group + g + 1) * d],
+            );
         }
     }
 }
@@ -123,6 +179,47 @@ mod tests {
         for (a, b) in out.iter().zip(v) {
             assert!((a - b).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn causal_chunk_matches_per_token_decode() {
+        // The chunk kernel at span S must be bit-identical to S lone
+        // decode-position calls — the chunked-prefill exactness contract.
+        let d = 16;
+        let group = 2;
+        let (cache, seq) = random_cache(7, 1, d, 53);
+        let start = 21;
+        let span = 19; // crosses a page boundary, ends mid-page
+        let mut qs = Vec::new();
+        for c in 0..span {
+            for g in 0..group {
+                qs.extend(random_q(100 + (c * group + g) as u64, d));
+            }
+        }
+        let q_stride = group * d;
+        let mut outs = vec![0.0; span * group * d];
+        paged_full_causal(&cache, &seq, 0, &qs, q_stride, group, start, &mut outs);
+        for c in 0..span {
+            for g in 0..group {
+                let mut want = vec![0.0; d];
+                paged_full_limit(
+                    &cache,
+                    &seq,
+                    0,
+                    &qs[c * q_stride + g * d..c * q_stride + (g + 1) * d],
+                    start + c + 1,
+                    &mut want,
+                );
+                assert_eq!(&outs[(c * group + g) * d..(c * group + g + 1) * d], &want[..]);
+            }
+        }
+        // And the limit at the full length reproduces paged_full exactly.
+        let q = random_q(8, d);
+        let mut a = vec![0.0; d];
+        let mut b = vec![0.0; d];
+        paged_full(&cache, &seq, 0, &q, &mut a);
+        paged_full_limit(&cache, &seq, 0, &q, seq.len, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -8,20 +8,27 @@
 //! * [`spgemv`] — the score-estimation SpGEMV over the quantized mirror
 //!   K cache (Appendix B.1), at INT2/4/8/FP16.
 //!
-//! All kernels are single-(kv-)head primitives. Batching happens one
-//! level up, in the engine's batched decode step
+//! All kernels are single-(kv-)head primitives (plus the multi-query
+//! causal chunk kernel [`full::paged_full_causal`], which stacks the
+//! visible-prefix walk [`full::paged_full_limit`] per chunk offset).
+//! Batching happens one level up, in the engine's unified mixed step
 //! ([`crate::coordinator::engine::Engine::step_batch`]): each layer runs
 //! as three phases — (a) serial QKV projection + KV append for every
-//! sequence, (b) a flattened (sequence × kv-head) attention work list
-//! whose per-item cost is the resolved stage-1 budget, LPT-partitioned
-//! by [`crate::coordinator::balance::lpt_partition`] and drained by the
+//! query token (decode items *and* prefill chunks), (b) a flattened
+//! (item × kv-head) attention work list whose per-item cost is the
+//! resolved stage-1 budget summed over the item's span (≈ span × context
+//! for a chunk), LPT-partitioned by
+//! [`crate::coordinator::balance::lpt_partition`] and drained by the
 //! engine's persistent [`crate::util::threadpool::ThreadPool`]
 //! (FlashInfer's flattened head-dimension load balancing with resident
 //! balanced workers, §4.2 — threads are created once per engine and
 //! parked between rounds, not spawned per layer), and (c) serial
 //! rest-of-layer — with per-worker stats merged deterministically at
 //! each phase barrier so any worker count is bit-exact with sequential
-//! execution.
+//! execution. A chunk item's queries run serially on one worker, each
+//! over a truncated visible-prefix view of its sequence cache, so the
+//! same kernels serve decode and chunked prefill and the results are
+//! bit-exact for any chunk size.
 
 pub mod full;
 pub mod sparse;

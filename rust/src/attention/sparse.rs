@@ -12,6 +12,12 @@
 //!
 //! The kernels are exact (softmax over the selected logits), matching
 //! Definition 3.1 with Λ restricted to the index set.
+//!
+//! Under chunked prefill these same kernels serve each chunk query's
+//! sub-call: the engine passes a truncated visible-prefix `SeqCache`
+//! view, and the selector/pruner guarantee every index is `< view.len`,
+//! so causality within the chunk is enforced by construction — no mask
+//! argument needed (the index list *is* the mask).
 
 use super::scale;
 use crate::kvcache::{PagedKvCache, SeqCache};

@@ -6,12 +6,29 @@
 //! by page table). The fused dequant-dot never materializes K̂: the
 //! integer codes are multiplied directly and scale/zero are applied once
 //! per row — the CPU analog of unpacking INT4 in shared memory.
+//!
+//! Rows in the *unsealed* tail page (tokens at or past
+//! `⌊seq.len / page_size⌋ · page_size` when the tail is partial) have no
+//! mirror block yet — the cache only quantizes a page when it seals —
+//! and are scored exactly from fp32 K. Besides matching the paper's
+//! quantize-on-page-close schedule, this makes the estimate a pure
+//! function of the visible prefix: a chunked-prefill query that sees a
+//! truncated view of its sequence scores the same whether the chunk
+//! appended 1 or 256 tokens behind it.
 
 use crate::kvcache::{quant_dot_row, quant_dot_row_qsum, PagedKvCache, SeqCache};
+use crate::tensor::dot;
 use crate::tensor::quant::{quantize, QuantBits, QuantBlock};
 
+/// First token of the visibly-partial tail page (== `seq.len` when the
+/// visible tail page is full, i.e. every visible row is sealed).
+#[inline]
+fn sealed_limit(seq: &SeqCache, page_size: usize) -> usize {
+    seq.len - seq.len % page_size
+}
+
 /// Estimate logits (unscaled by 1/sqrt(d)) for `tokens` from the mirror
-/// cache into `out`.
+/// cache into `out`; unsealed tail rows are scored exactly.
 pub fn estimate_scores(
     cache: &PagedKvCache,
     seq: &SeqCache,
@@ -23,17 +40,23 @@ pub fn estimate_scores(
     debug_assert_eq!(tokens.len(), out.len());
     let d = cache.cfg.head_dim;
     let ps = cache.cfg.page_size;
+    let sealed = sealed_limit(seq, ps);
     let qsum: f32 = q.iter().sum();
     for (o, &t) in out.iter_mut().zip(tokens) {
         let (page, slot) = seq.locate(t, ps);
-        let block = cache.mirror_at(page, head).expect("mirror block missing");
-        *o = quant_dot_row_qsum(q, qsum, block, slot * d, d);
+        if t < sealed {
+            let block = cache.mirror_at(page, head).expect("sealed page missing mirror");
+            *o = quant_dot_row_qsum(q, qsum, block, slot * d, d);
+        } else {
+            *o = dot(q, cache.k_at(page, head, slot));
+        }
     }
 }
 
 /// Estimate logits for a whole GQA group in one pass over the mirror:
 /// each packed row is unpacked once and contracted with every query head
-/// (§Perf). `out` is `[group][tokens.len()]` flattened row-major.
+/// (§Perf); unsealed tail rows are scored exactly. `out` is
+/// `[group][tokens.len()]` flattened row-major.
 pub fn estimate_scores_group(
     cache: &PagedKvCache,
     seq: &SeqCache,
@@ -46,14 +69,22 @@ pub fn estimate_scores_group(
     let d = cache.cfg.head_dim;
     let ps = cache.cfg.page_size;
     debug_assert_eq!(out.len(), group * tokens.len());
+    let sealed = sealed_limit(seq, ps);
     let qsums: Vec<f32> =
         (0..group).map(|g| qs[g * d..(g + 1) * d].iter().sum()).collect();
     let n = tokens.len();
     let mut row = vec![0.0f32; group];
     for (i, &t) in tokens.iter().enumerate() {
         let (page, slot) = seq.locate(t, ps);
-        let block = cache.mirror_at(page, kv_head).expect("mirror block missing");
-        crate::kvcache::quant_dot_row_group(qs, &qsums, block, slot * d, d, &mut row);
+        if t < sealed {
+            let block = cache.mirror_at(page, kv_head).expect("sealed page missing mirror");
+            crate::kvcache::quant_dot_row_group(qs, &qsums, block, slot * d, d, &mut row);
+        } else {
+            let k = cache.k_at(page, kv_head, slot);
+            for (g, r) in row.iter_mut().enumerate() {
+                *r = dot(&qs[g * d..(g + 1) * d], k);
+            }
+        }
         for g in 0..group {
             out[g * n + i] = row[g];
         }
@@ -139,6 +170,36 @@ mod tests {
         // ~scale/2 ≈ 0.2, so dot error concentrates near 0.2·sqrt(32)·σ_q;
         // the observed worst case sits well under 2 while logits span ±15.
         assert!(worst < 2.0, "worst abs err {worst}");
+    }
+
+    #[test]
+    fn unsealed_tail_scored_exactly() {
+        // 2 sealed pages + an 8-row unsealed tail: sealed rows go through
+        // the mirror, tail rows must be exact fp32 — bit-for-bit, since
+        // chunk invariance rides on this being a pure function of the
+        // visible prefix.
+        let (cache, seq) = random_cache(33, 1, 16, 40);
+        let q = random_q(34, 16);
+        let toks: Vec<usize> = vec![0, 31, 32, 39];
+        let mut est = vec![0.0; toks.len()];
+        estimate_scores(&cache, &seq, 0, &q, &toks, &mut est);
+        for (&t, &e) in toks.iter().zip(&est) {
+            if t >= 32 {
+                assert_eq!(e, cache.exact_score(&seq, 0, &q, t), "tail row {t} not exact");
+            }
+        }
+        // The group path must agree with the single-head path.
+        let mut grp = vec![0.0; toks.len()];
+        estimate_scores_group(&cache, &seq, 0, &q, 1, &toks, &mut grp);
+        assert_eq!(est, grp);
+        // A truncated view (chunked prefill mid-chunk) relies only on
+        // sealed pages + exact tail: same call, shorter visible length.
+        let view = SeqCache { pages: seq.pages[..2].to_vec(), len: 20 };
+        let vtoks: Vec<usize> = vec![15, 16, 19];
+        let mut vest = vec![0.0; vtoks.len()];
+        estimate_scores(&cache, &view, 0, &q, &vtoks, &mut vest);
+        assert_eq!(vest[1], cache.exact_score(&view, 0, &q, 16));
+        assert_eq!(vest[2], cache.exact_score(&view, 0, &q, 19));
     }
 
     #[test]

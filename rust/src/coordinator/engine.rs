@@ -1,34 +1,58 @@
-//! The decode engine: wires the model forward pass to the paged KV cache,
-//! Token Selector, Twilight Pruner, and varlen attention kernels — the
-//! per-step pipeline of Fig. 5 — and keeps the Fig. 10 time breakdown.
+//! The serving engine: wires the model forward pass to the paged KV
+//! cache, Token Selector, Twilight Pruner, and varlen attention kernels —
+//! the per-step pipeline of Fig. 5 — and keeps the Fig. 10 time breakdown.
 //!
-//! Decoding is *batched* (paper §4.2, "Load Balancing with Awareness of
-//! Head Dynamism"): the scheduler hands the engine its whole running set
-//! as one [`DecodeBatch`], and every layer executes as three phases —
+//! The step is a *unified mixed step* (paper §4.2 batching + Sarathi-style
+//! chunked prefill): the scheduler hands the engine one [`DecodeBatch`]
+//! whose items are decode steps (one token) **and prefill chunks** (a
+//! span of prompt tokens), and every layer executes as three phases —
 //!
-//! 1. **append** — QKV projection + KV append for all sequences, serial
-//!    (appends mutate the shared page pools);
-//! 2. **attend** — the (sequence × kv-head) pairs are flattened into one
-//!    work list whose per-item cost is the resolved stage-1 budget,
-//!    LPT-partitioned across workers ([`super::balance::lpt_partition`])
-//!    and drained by the engine's persistent
-//!    [`crate::util::threadpool::ThreadPool`] (resident workers created
-//!    once per engine and reused across every layer of every step); each
-//!    worker runs select → prune → varlen-attend with its own
-//!    [`PrunerScratch`], read-only cache access, and exclusive access to
-//!    its items' per-sequence selector state;
-//! 3. **rest-of-layer** — output projection + MLP for all sequences.
+//! 1. **append** — QKV projection + KV append for every query token,
+//!    serial, item-major (appends mutate the shared page pools; decode
+//!    items come first in a scheduler batch, so memory pressure defers
+//!    chunks rather than starving running decodes);
+//! 2. **attend** — the (item × kv-head) pairs are flattened into one work
+//!    list and LPT-partitioned across workers
+//!    ([`super::balance::lpt_partition`]), drained by the engine's
+//!    persistent [`crate::util::threadpool::ThreadPool`]. A decode item
+//!    costs its resolved stage-1 budget (context length when dense); a
+//!    chunk item is *multi-query* — its sub-calls run serially on one
+//!    worker, each attending causally over the visible prefix through a
+//!    truncated [`SeqCache`] view — and costs the sum over its span
+//!    (≈ span × context). Each worker runs select → prune →
+//!    varlen-attend per sub-call with its own [`PrunerScratch`],
+//!    read-only cache access, and exclusive access to its items'
+//!    per-sequence selector state;
+//! 3. **rest-of-layer** — output projection + MLP for every query token.
+//!
+//! **Chunk invariance.** A chunk appends its whole span before attending,
+//! so a sub-call at position `p` must not see anything a lone decode step
+//! at `p` would not have seen. Exact K/V rows are written once per slot;
+//! the INT4 mirror and Quest min/max of a page are only consulted once
+//! the page *seals* (see the sealing contract in `kvcache`), and the
+//! visibly-partial tail is scored exactly. Logits and KV are therefore
+//! bit-exact for **any** chunk size (`TWILIGHT_PREFILL_CHUNK=1` ≡ `=N`).
+//! The telemetry plane holds too: sub-call plans and sparse-call labels
+//! are pre-resolved per step in (item, token, layer) order, per-call
+//! records merge token-major, and recall probes are replayed into the
+//! EMA in that same order — so [`SignalHub`] contents (what a governor
+//! steers on) are also chunk-size invariant for a fixed step
+//! composition. All pinned by `rust/tests/chunked_prefill.rs`. (A
+//! *scheduler*-driven run still legitimately differs across chunk knobs:
+//! admission spans more or fewer steps, so a governor decides at
+//! different boundaries — that is scheduling, not numerics.)
 //!
 //! Workers record stats and governor telemetry into per-item accumulators
-//! that are merged *in flattened item order* at the phase barrier, so
-//! [`EngineStats`], [`SignalHub`] contents, and the logits are bit-exact
-//! for any worker count (`TWILIGHT_THREADS=1` ≡ `TWILIGHT_THREADS=N`).
+//! that are merged *in flattened item order* (sub-calls in chunk order
+//! within an item) at the phase barrier, so [`EngineStats`], [`SignalHub`]
+//! contents, and the logits are bit-exact for any worker count
+//! (`TWILIGHT_THREADS=1` ≡ `TWILIGHT_THREADS=N`).
 
 use super::{balance, AttnVariant, SparseConfig};
 use crate::governor::signals::SignalHub;
 use crate::governor::BudgetDirective;
 use crate::kvcache::{CacheConfig, CacheError, PagedKvCache, SeqCache};
-use crate::model::{BatchBackend, Model, ModelConfig};
+use crate::model::{BatchBackend, Model, ModelConfig, SpanRef};
 use crate::pruner::{prune_group, PrunerConfig, PrunerScratch};
 use crate::selector::{SelectorKind, TokenSelector};
 use crate::util::stats::Histogram;
@@ -40,20 +64,75 @@ use std::time::Instant;
 /// Engine-internal sequence id (the coordinator maps RequestId → SeqId).
 pub type SeqId = u64;
 
-/// One batched decode step: every entry advances one running sequence by
-/// one token. Ids must be distinct within a batch.
+/// Default prefill chunk span (`TWILIGHT_PREFILL_CHUNK` / `--prefill-chunk`
+/// override it). Chunking only changes wall-clock shape — logits and KV
+/// are bit-exact for any span.
+pub const DEFAULT_PREFILL_CHUNK: usize = 64;
+
+fn default_prefill_chunk() -> usize {
+    std::env::var("TWILIGHT_PREFILL_CHUNK")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(DEFAULT_PREFILL_CHUNK)
+}
+
+/// One item of a mixed step: a sequence advancing by `toks`.
+#[derive(Clone, Debug)]
+pub struct StepItem {
+    pub id: SeqId,
+    /// One token = a decode step; a longer span = a prefill chunk. The
+    /// whole span appends in phase (a), then each token attends causally
+    /// over its own prefix.
+    pub toks: Vec<u32>,
+    /// Prompt processing (chunk) rather than decode: accounted to
+    /// `EngineStats::prefill_steps`, excluded from the decode share of
+    /// [`StepTiming`], and — for single-layer models — eligible for the
+    /// algebraic attend-skip (see [`Engine::prefill`]).
+    pub prefill: bool,
+    /// Final chunk of its prompt: the item's logits will be sampled.
+    pub last: bool,
+}
+
+/// One batched mixed step: decode items plus prefill chunks. Ids must be
+/// distinct within a batch; the scheduler puts decode items first so
+/// page-pool pressure lands on chunks, never on running decodes.
 #[derive(Clone, Debug, Default)]
 pub struct DecodeBatch {
-    pub items: Vec<(SeqId, u32)>,
+    pub items: Vec<StepItem>,
 }
 
 impl DecodeBatch {
+    /// A decode-only batch (back-compat constructor).
     pub fn new(items: Vec<(SeqId, u32)>) -> DecodeBatch {
-        DecodeBatch { items }
+        DecodeBatch {
+            items: items
+                .into_iter()
+                .map(|(id, tok)| StepItem { id, toks: vec![tok], prefill: false, last: true })
+                .collect(),
+        }
     }
 
     pub fn single(id: SeqId, tok: u32) -> DecodeBatch {
-        DecodeBatch { items: vec![(id, tok)] }
+        DecodeBatch::new(vec![(id, tok)])
+    }
+
+    /// A batch holding one prefill chunk.
+    pub fn chunk(id: SeqId, toks: Vec<u32>, last: bool) -> DecodeBatch {
+        let mut b = DecodeBatch::default();
+        b.push_chunk(id, toks, last);
+        b
+    }
+
+    pub fn push_decode(&mut self, id: SeqId, tok: u32) {
+        self.items.push(StepItem { id, toks: vec![tok], prefill: false, last: true });
+    }
+
+    /// Append a prefill chunk; `last` marks the final chunk of a prompt
+    /// (whose logits the caller will sample).
+    pub fn push_chunk(&mut self, id: SeqId, toks: Vec<u32>, last: bool) {
+        assert!(!toks.is_empty(), "empty prefill chunk");
+        self.items.push(StepItem { id, toks, prefill: true, last });
     }
 
     pub fn len(&self) -> usize {
@@ -63,6 +142,23 @@ impl DecodeBatch {
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }
+
+    /// Total query tokens across all items.
+    pub fn query_tokens(&self) -> usize {
+        self.items.iter().map(|it| it.toks.len()).sum()
+    }
+}
+
+/// Wall-clock attribution of the last mixed step: the decode share feeds
+/// the governor's TPOT tracker, the prefill share is reported separately
+/// (a mixed step is *not* TPOT for its chunk tokens). Shares split the
+/// measured total by each side's attention work (Σ visible context per
+/// query token — the bandwidth cost model that also drives the LPT).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTiming {
+    pub total: f64,
+    pub decode: f64,
+    pub prefill: f64,
 }
 
 /// Accumulated timing and budget statistics (Fig. 10 / Table budgets).
@@ -78,13 +174,22 @@ pub struct EngineStats {
     pub t_dense: f64,
     /// Seconds in everything else (projections, MLP, norms, sampling).
     pub t_other: f64,
-    /// Batched decode steps executed (a batch of any size counts once:
-    /// under continuous batching, step time ≙ TPOT).
+    /// Batched steps that advanced at least one decode item (a batch of
+    /// any size counts once: under continuous batching, step time ≙ TPOT).
+    /// Chunk-only admission steps do not count.
     pub steps: u64,
-    /// Prefill steps (one per prompt token pushed through the forward
-    /// pass). Kept separate from `steps` so TPOT-style per-step averages
-    /// are not skewed by prompt processing.
+    /// Prompt tokens pushed through the forward pass (chunked prefill
+    /// appends whole spans, so this counts *tokens*, not forward passes —
+    /// the single-layer fast path pushes only the final prompt token).
+    /// Kept separate from `steps` so TPOT-style per-step averages are not
+    /// skewed by prompt processing.
     pub prefill_steps: u64,
+    /// Prefill chunk items executed (spans of any size count once).
+    pub prefill_chunks: u64,
+    /// Cumulative wall-clock attributed to the prefill share of mixed
+    /// steps (see [`StepTiming`]). An attribution overlay over the same
+    /// wall-clock the `t_*` stage fields decompose — not an extra stage.
+    pub t_prefill: f64,
     /// Sum of stage-1 candidate budgets (per kv-head per step).
     pub candidates_sum: u64,
     /// Sum of final kept budgets.
@@ -109,6 +214,8 @@ impl Default for EngineStats {
             t_other: 0.0,
             steps: 0,
             prefill_steps: 0,
+            prefill_chunks: 0,
+            t_prefill: 0.0,
             candidates_sum: 0,
             kept_sum: 0,
             sparse_calls: 0,
@@ -179,6 +286,11 @@ pub struct Engine {
     /// list, per-item outputs) each layer; those are small and
     /// proportional to batch × kv-heads, not to context length.
     scratches: Vec<PrunerScratch>,
+    /// Prefill chunk span used by [`Engine::prefill`] (the scheduler
+    /// reads it as the base span for its own chunk planning).
+    prefill_chunk: usize,
+    /// Attribution of the most recent mixed step.
+    last_timing: StepTiming,
 }
 
 impl Engine {
@@ -200,7 +312,26 @@ impl Engine {
             directive: BudgetDirective::NEUTRAL,
             pool: ThreadPool::with_default_threads(),
             scratches: Vec::new(),
+            prefill_chunk: default_prefill_chunk(),
+            last_timing: StepTiming::default(),
         }
+    }
+
+    /// Prefill chunk span ([`DEFAULT_PREFILL_CHUNK`] unless overridden by
+    /// `TWILIGHT_PREFILL_CHUNK` / [`Engine::set_prefill_chunk`]).
+    pub fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
+    }
+
+    /// Retarget the prefill chunk span (clamped to ≥ 1). Purely a
+    /// latency-shape knob: logits and KV are bit-exact for any value.
+    pub fn set_prefill_chunk(&mut self, span: usize) {
+        self.prefill_chunk = span.max(1);
+    }
+
+    /// Wall-clock attribution of the most recent mixed step.
+    pub fn last_step_timing(&self) -> StepTiming {
+        self.last_timing
     }
 
     /// Attention-phase parallelism (caller thread included).
@@ -269,8 +400,19 @@ impl Engine {
     }
 
     /// Tokens per physical page (uniform across the layer pools).
-    fn page_size(&self) -> usize {
+    pub fn page_size(&self) -> usize {
         self.caches.first().map(|c| c.cfg.page_size).unwrap_or(16)
+    }
+
+    /// Fresh pages (per layer pool) a span of `span` tokens starting at
+    /// the sequence's current position will allocate. The scheduler sums
+    /// this over a planned mixed batch to size chunk deferral.
+    pub fn new_pages_for(&self, id: SeqId, span: usize) -> usize {
+        let ps = self.page_size();
+        match self.seqs.get(&id) {
+            None => 0,
+            Some(st) => (st.pos + span).div_ceil(ps) - st.pos.div_ceil(ps),
+        }
     }
 
     /// True if a decode step for `id` cannot run out of pages.
@@ -294,73 +436,184 @@ impl Engine {
     /// Admit a sequence and prefill its prompt; returns the logits after
     /// the final prompt token (for sampling the first output token).
     ///
-    /// Single-layer models use the O(n) embedding-KV fast path; deeper
-    /// models run a dense decode pass per token. Either way the work is
-    /// accounted to `stats.prefill_steps`, not `stats.steps`, so decode
-    /// step counts and the governor's TPOT view stay truthful.
+    /// Single-layer models use the O(n) embedding-KV fast path (layer-0
+    /// K/V is a pure function of the embedding, so only the final token
+    /// needs the forward pass); deeper models run the prompt through
+    /// [`Engine::step_batch`] in [`Engine::prefill_chunk`]-sized chunks —
+    /// bit-exact for any chunk size. Either way the work is accounted to
+    /// `stats.prefill_steps` (tokens), not `stats.steps`, so decode step
+    /// counts and the governor's TPOT view stay truthful.
     pub fn prefill(&mut self, id: SeqId, prompt: &[u32]) -> Result<Vec<f32>, CacheError> {
         assert!(!prompt.is_empty());
         let st = self.new_state();
         self.seqs.insert(id, st);
-        let single_layer = self.model.cfg.n_layers == 1;
-        let model = self.model.clone();
-        if single_layer {
-            for (pos, &tok) in prompt[..prompt.len() - 1].iter().enumerate() {
-                let (k, v) = model.kv_from_embedding(tok, pos);
-                let st = self.seqs.get_mut(&id).unwrap();
-                let res = self.caches[0].append(&mut st.caches[0], &k, &v);
-                if let Err(e) = res {
-                    self.release(id);
-                    return Err(e);
+        if self.model.cfg.n_layers == 1 {
+            // One map lookup and one pool borrow for the whole prompt
+            // (these were per-token lookups before the loop was hoisted).
+            let mut failed = None;
+            {
+                let st = self.seqs.get_mut(&id).expect("just inserted");
+                let cache = &mut self.caches[0];
+                for (pos, &tok) in prompt[..prompt.len() - 1].iter().enumerate() {
+                    let (k, v) = self.model.kv_from_embedding(tok, pos);
+                    if let Err(e) = cache.append(&mut st.caches[0], &k, &v) {
+                        failed = Some(e);
+                        break;
+                    }
+                    st.pos = pos + 1;
                 }
-                self.seqs.get_mut(&id).unwrap().pos = pos + 1;
             }
-            self.prefill_step(id, prompt[prompt.len() - 1])
-        } else {
-            let mut logits = Vec::new();
-            for &tok in prompt {
-                logits = self.prefill_step(id, tok)?;
+            if let Some(e) = failed {
+                self.release(id);
+                return Err(e);
             }
-            Ok(logits)
+            return self.step_chunk(id, &prompt[prompt.len() - 1..], true);
         }
+        let chunk = self.prefill_chunk.max(1);
+        let mut logits = Vec::new();
+        let mut i = 0;
+        while i < prompt.len() {
+            let end = (i + chunk).min(prompt.len());
+            logits = self.step_chunk(id, &prompt[i..end], end == prompt.len())?;
+            i = end;
+        }
+        Ok(logits)
     }
 
     /// One decode step for a single sequence: process `tok` at the
     /// sequence's current position, return logits. A batch of one.
     pub fn decode(&mut self, id: SeqId, tok: u32) -> Result<Vec<f32>, CacheError> {
-        self.run_batch(&DecodeBatch::single(id, tok), false).pop().unwrap()
+        self.run_batch(&DecodeBatch::single(id, tok)).pop().unwrap()
     }
 
-    /// One prompt token through the forward pass (accounted as prefill).
-    fn prefill_step(&mut self, id: SeqId, tok: u32) -> Result<Vec<f32>, CacheError> {
-        self.run_batch(&DecodeBatch::single(id, tok), true).pop().unwrap()
+    /// One prefill chunk through the mixed step (batch of one).
+    fn step_chunk(&mut self, id: SeqId, toks: &[u32], last: bool) -> Result<Vec<f32>, CacheError> {
+        self.run_batch(&DecodeBatch::chunk(id, toks.to_vec(), last)).pop().unwrap()
     }
 
-    /// One batched decode step: advance every sequence in `batch` by one
-    /// token. Per-sequence results are returned in batch order; a
-    /// sequence that runs out of pages mid-step gets `Err` and is
-    /// released (the others are unaffected).
+    /// One batched mixed step: advance every item in `batch` by its span.
+    /// Per-item results are returned in batch order (the logits of each
+    /// item's final token); an item that runs out of pages mid-step gets
+    /// `Err` and its sequence is released (the others are unaffected).
     pub fn step_batch(&mut self, batch: &DecodeBatch) -> Vec<Result<Vec<f32>, CacheError>> {
-        self.run_batch(batch, false)
+        self.run_batch(batch)
     }
 
-    fn run_batch(
-        &mut self,
-        batch: &DecodeBatch,
-        prefill: bool,
-    ) -> Vec<Result<Vec<f32>, CacheError>> {
+    fn run_batch(&mut self, batch: &DecodeBatch) -> Vec<Result<Vec<f32>, CacheError>> {
         if batch.is_empty() {
             return Vec::new();
         }
         let model = self.model.clone();
+        // Single-layer algebraic shortcut: a 1-layer model's logits only
+        // ever read the *last* token's attention output, so non-final
+        // chunk tokens (and every token of a non-final chunk) can skip
+        // phase (b) entirely — the unified-step form of the historical
+        // O(n) serial fast path, exact for n_layers == 1 only.
+        let attend_skip: Vec<AttendSkip> = if model.cfg.n_layers == 1 {
+            batch
+                .items
+                .iter()
+                .map(|it| {
+                    if !it.prefill {
+                        AttendSkip::None
+                    } else if it.last {
+                        AttendSkip::AllButLast
+                    } else {
+                        AttendSkip::All
+                    }
+                })
+                .collect()
+        } else {
+            vec![AttendSkip::None; batch.len()]
+        };
         // Pull every sequence's state out of the map for the step: the
         // attention workers need disjoint per-sequence selector state.
         let mut sts: Vec<SeqState> = Vec::with_capacity(batch.len());
-        let mut toks: Vec<(u32, usize)> = Vec::with_capacity(batch.len());
-        for &(id, tok) in &batch.items {
-            let st = self.seqs.remove(&id).expect("unknown sequence");
-            toks.push((tok, st.pos));
+        // (start position, span) per item, plus the query-token offset of
+        // each item in the step's flattened buffers.
+        let mut spans: Vec<(usize, usize)> = Vec::with_capacity(batch.len());
+        let mut offs: Vec<usize> = Vec::with_capacity(batch.len());
+        // Attention-work proxy (Σ visible context per attended query
+        // token — the same bandwidth model as the LPT; attend-skipped
+        // tokens only pay context-independent projection work and count
+        // 1) for decode/prefill wall-clock attribution.
+        let mut decode_cost = 0u64;
+        let mut prefill_cost = 0u64;
+        let mut total_q = 0usize;
+        for (idx, it) in batch.items.iter().enumerate() {
+            let st = self.seqs.remove(&it.id).expect("unknown sequence");
+            let span = it.toks.len();
+            let cost: u64 = match attend_skip[idx] {
+                AttendSkip::None => (0..span).map(|c| (st.pos + c + 1) as u64).sum(),
+                AttendSkip::AllButLast => (span as u64 - 1) + (st.pos + span) as u64,
+                AttendSkip::All => span as u64,
+            };
+            if it.prefill {
+                prefill_cost += cost;
+            } else {
+                decode_cost += cost;
+            }
+            spans.push((st.pos, span));
+            offs.push(total_q);
+            total_q += span;
             sts.push(st);
+        }
+        let model_spans: Vec<SpanRef<'_>> = batch
+            .items
+            .iter()
+            .zip(&spans)
+            .map(|(it, &(pos, _))| SpanRef {
+                toks: &it.toks,
+                pos,
+                need_logits: it.last || !it.prefill,
+            })
+            .collect();
+        let directive = self.directive;
+        // Pre-resolve every sub-call's attention plan for every layer,
+        // serially, in (item, token, layer) order — the order a
+        // token-at-a-time run visits them — so the dense/sparse
+        // decisions, the budgets, and the global sparse-call labels
+        // (which drive the recall-probe cadence) are identical for any
+        // chunk size and any worker count. One SubSpec + call label per
+        // (layer, query token); a sparse token owns `n_kv_heads`
+        // consecutive labels per layer.
+        let n_layers = model.cfg.n_layers;
+        let kvn = model.cfg.n_kv_heads;
+        let dense_below = directive.dense_below_override.unwrap_or(self.cfg.dense_below);
+        let blank = SubSpec { n: 0, dense: true, budget: 0, skip: true };
+        let mut subspecs: Vec<Vec<SubSpec>> =
+            (0..n_layers).map(|_| vec![blank; total_q]).collect();
+        let mut call_bases: Vec<Vec<u64>> = (0..n_layers).map(|_| vec![0u64; total_q]).collect();
+        let mut call_idx = self.stats.sparse_calls;
+        for (i, &(start, span)) in spans.iter().enumerate() {
+            for cidx in 0..span {
+                let n = start + cidx + 1;
+                let skip = match attend_skip[i] {
+                    AttendSkip::None => false,
+                    AttendSkip::AllButLast => cidx + 1 != span,
+                    AttendSkip::All => true,
+                };
+                for (l, (specs, bases)) in
+                    subspecs.iter_mut().zip(call_bases.iter_mut()).enumerate()
+                {
+                    let dense = l < self.cfg.skip_layers
+                        || n <= dense_below
+                        || (self.cfg.selector == SelectorKind::Full
+                            && self.cfg.twilight.is_none());
+                    let mut budget = 0;
+                    if !dense && !skip {
+                        budget = self.cfg.budget.resolve(n);
+                        if directive.budget_scale != 1.0 {
+                            budget = ((budget as f32 * directive.budget_scale).round()
+                                as usize)
+                                .clamp(1, n);
+                        }
+                        bases[offs[i] + cidx] = call_idx;
+                        call_idx += kvn as u64;
+                    }
+                    specs[offs[i] + cidx] = SubSpec { n, dense, budget, skip };
+                }
+            }
         }
         let threads = self.pool.threads();
         if self.scratches.len() < threads {
@@ -369,7 +622,6 @@ impl Engine {
         let staged_before =
             self.stats.t_select + self.stats.t_prune + self.stats.t_attend + self.stats.t_dense;
         let t0 = Instant::now();
-        let directive = self.directive;
         let probe_interval = self.signals.probe_interval();
         let mut backend = BatchStepBackend {
             caches: &mut self.caches,
@@ -383,14 +635,42 @@ impl Engine {
             scratches: &mut self.scratches,
             pool: &self.pool,
             probe_interval,
+            spans: &spans,
+            offs: &offs,
+            subspecs: &subspecs,
+            call_bases: &call_bases,
+            probes: Vec::new(),
         };
-        let logits = model.decode_batch(&toks, &mut backend);
+        let logits = model.decode_batch(&model_spans, &mut backend);
         let mut errors = backend.errors;
+        // Replay buffered recall probes into the EMA in (token, layer,
+        // kv-head) order — token-at-a-time order — instead of the
+        // (layer, token) order the per-layer phase barriers produced
+        // them in, so the probe EMA is chunk-size invariant too.
+        let mut probes = backend.probes;
+        probes.sort_unstable_by_key(|&(tok, layer, kvh, _)| (tok, layer, kvh));
+        for &(_, _, _, recall) in &probes {
+            self.signals.record_probe(recall);
+        }
         let total = t0.elapsed().as_secs_f64();
-        if prefill {
-            self.stats.prefill_steps += 1;
-        } else {
+        // Mixed-step attribution: split the measured wall-clock by each
+        // side's attention-work share.
+        let cost_sum = decode_cost + prefill_cost;
+        let decode_frac = if cost_sum == 0 { 0.0 } else { decode_cost as f64 / cost_sum as f64 };
+        self.last_timing = StepTiming {
+            total,
+            decode: total * decode_frac,
+            prefill: total * (1.0 - decode_frac),
+        };
+        self.stats.t_prefill += self.last_timing.prefill;
+        if decode_cost > 0 {
             self.stats.steps += 1;
+        }
+        for it in &batch.items {
+            if it.prefill {
+                self.stats.prefill_steps += it.toks.len() as u64;
+                self.stats.prefill_chunks += 1;
+            }
         }
         // Everything not attributed to a stage is "other" (projections,
         // MLP, norms, unembedding).
@@ -409,8 +689,8 @@ impl Engine {
                     results.push(Err(e));
                 }
                 None => {
-                    st.pos += 1;
-                    self.seqs.insert(batch.items[i].0, st);
+                    st.pos += spans[i].1;
+                    self.seqs.insert(batch.items[i].id, st);
                     results.push(Ok(lg));
                 }
             }
@@ -433,8 +713,22 @@ impl Engine {
     }
 }
 
+/// Which phase-(b) sub-calls of an item the single-layer algebraic
+/// shortcut elides (see [`Engine::prefill`]; `None` for deep models).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum AttendSkip {
+    /// Attend every sub-call (decode items, all multi-layer items).
+    None,
+    /// Final chunk of a 1-layer prompt: only the last token's logits are
+    /// read, so only its sub-call attends.
+    AllButLast,
+    /// Non-final chunk of a 1-layer prompt: no token's attention output
+    /// is ever read — skip the whole item.
+    All,
+}
+
 /// The batched per-step attention backend: implements the three-phase
-/// Select-then-Prune pipeline for every layer of one batched decode step.
+/// Select-then-Prune pipeline for every layer of one mixed step.
 struct BatchStepBackend<'a> {
     caches: &'a mut [PagedKvCache],
     sts: &'a mut [SeqState],
@@ -447,38 +741,85 @@ struct BatchStepBackend<'a> {
     scratches: &'a mut [PrunerScratch],
     pool: &'a ThreadPool,
     probe_interval: u64,
+    /// (start position, span) per batch item.
+    spans: &'a [(usize, usize)],
+    /// Query-token offset of each item in the flattened step buffers.
+    offs: &'a [usize],
+    /// Pre-resolved sub-call plans, `[layer][query token]` (built by
+    /// `run_batch` in (item, token, layer) order).
+    subspecs: &'a [Vec<SubSpec>],
+    /// Global sparse-call label of each (layer, query token)'s kvn-block.
+    call_bases: &'a [Vec<u64>],
+    /// Recall probes buffered across the step's layers, keyed
+    /// `(query token, layer, kv-head, recall)`; `run_batch` replays them
+    /// into the EMA in token-major order at the end of the step.
+    probes: Vec<(usize, usize, usize, f64)>,
 }
 
-/// One unit of phase-(b) attention work: a (sequence, kv-head) pair.
+/// Per-sub-call attention plan for one query token of an item, resolved
+/// serially up front (see `run_batch`) so the dense/sparse decision,
+/// the budget, and the probe cadence are identical for any worker count
+/// *and* any chunk size.
+#[derive(Clone, Copy, Debug)]
+struct SubSpec {
+    /// Visible context length for this query (its own position + 1).
+    n: usize,
+    dense: bool,
+    /// Resolved stage-1 budget (sparse sub-calls only).
+    budget: usize,
+    /// Elided by the single-layer algebraic shortcut.
+    skip: bool,
+}
+
+/// One unit of phase-(b) attention work: an (item, kv-head) pair —
+/// multi-query when the item is a prefill chunk. Sub-calls execute
+/// serially on one worker, in chunk order (the selector state is
+/// stateful and order-sensitive).
 struct AttnItem<'a> {
-    /// Flattened index (`seq * n_kv_heads + kv_head`): the deterministic
+    /// Flattened index (`item * n_kv_heads + kv_head`): the deterministic
     /// merge order at the phase barrier.
     flat: usize,
     seq: usize,
     kv_head: usize,
     layer: usize,
-    /// Context length (tokens in this sequence's cache).
-    n: usize,
-    dense: bool,
-    /// Resolved stage-1 budget (sparse items only).
-    budget: usize,
-    /// Global sparse-call index, assigned serially at flatten time so
-    /// the recall-probe cadence is identical for any worker count.
-    call_idx: u64,
+    /// Position of the first query token (visible context of sub-call
+    /// `c` is `start + c + 1`).
+    start: usize,
+    /// One entry per query token of the span.
+    subs: &'a [SubSpec],
+    /// Per-sub-call global sparse-call labels (kvn-block bases, aligned
+    /// with `subs`; this head adds its own offset). Assigned serially in
+    /// (item, token, layer) order by `run_batch`, so the recall-probe
+    /// cadence is identical for any worker count and any chunk size.
+    call_bases: &'a [u64],
     selector: &'a mut Box<dyn TokenSelector>,
     cache: &'a PagedKvCache,
     seq_cache: &'a SeqCache,
-    /// This KV group's query heads, `[group * head_dim]`.
+    /// The item's query rows, `[span * q_dim]` (the worker slices out
+    /// this KV group per sub-call).
     qs: &'a [f32],
 }
 
+/// Per-sparse-sub-call record, re-ordered token-major at the barrier.
+#[derive(Clone, Copy)]
+struct CallOut {
+    /// Chunk offset of the sub-call within its item.
+    cidx: usize,
+    candidates: usize,
+    kept: usize,
+    /// `(layer, mean mass, keep ratio)` when the pruner ran.
+    prune_record: Option<(usize, f64, f64)>,
+    probe: Option<f64>,
+}
+
 /// The result of one attention work item, merged at the phase barrier in
-/// `flat` order so stats and telemetry are deterministic under any
-/// worker count.
+/// `flat` order (sub-calls in chunk order) so stats and telemetry are
+/// deterministic under any worker count.
 struct AttnItemOut {
     flat: usize,
     seq: usize,
     kv_head: usize,
+    /// `[span * group * head_dim]`, chunk-offset-major.
     out: Vec<f32>,
     t_select: f64,
     t_prune: f64,
@@ -487,12 +828,7 @@ struct AttnItemOut {
     bytes_select: u64,
     bytes_prune: u64,
     bytes_attend: u64,
-    sparse: bool,
-    candidates: usize,
-    kept: usize,
-    /// `(layer, mean mass, keep ratio)` when the pruner ran.
-    prune_record: Option<(usize, f64, f64)>,
-    probe: Option<f64>,
+    calls: Vec<CallOut>,
 }
 
 /// Per-worker execution state: the items LPT assigned to this worker,
@@ -523,10 +859,13 @@ impl BatchBackend for BatchStepBackend<'_> {
         let group = c.group();
         let kvn = c.n_kv_heads;
         let qd = c.q_dim();
-        out.fill(0.0); // failed sequences stay zero
-        // --- flatten (seq × kv-head) work items, sequence-major --------
-        let dense_below = self.directive.dense_below_override.unwrap_or(self.cfg.dense_below);
-        let mut call_idx = self.stats.sparse_calls;
+        out.fill(0.0); // failed and attend-skipped tokens stay zero
+        // --- flatten (item × kv-head) work items, item-major -----------
+        // Sub-call plans and call labels were pre-resolved by `run_batch`
+        // in (item, token, layer) order; this phase only slices its
+        // layer's tables.
+        let specs = &self.subspecs[layer];
+        let bases = &self.call_bases[layer];
         let mut flat_items: Vec<Option<AttnItem<'_>>> =
             Vec::with_capacity(self.sts.len() * kvn);
         let mut work: Vec<balance::WorkItem> = Vec::with_capacity(self.sts.len() * kvn);
@@ -536,49 +875,42 @@ impl BatchBackend for BatchStepBackend<'_> {
                 flat_items.extend((0..kvn).map(|_| None));
                 continue;
             }
-            let seq_cache = &st.caches[layer];
-            let n = seq_cache.len;
-            let dense = layer < self.cfg.skip_layers
-                || n <= dense_below
-                || (self.cfg.selector == SelectorKind::Full && self.cfg.twilight.is_none());
-            let mut budget = 0;
-            if !dense {
-                budget = self.cfg.budget.resolve(n);
-                if self.directive.budget_scale != 1.0 {
-                    budget = ((budget as f32 * self.directive.budget_scale).round() as usize)
-                        .clamp(1, n);
-                }
+            let (start, span) = self.spans[i];
+            let subs = &specs[self.offs[i]..self.offs[i] + span];
+            if subs.iter().all(|s| s.skip) {
+                flat_items.extend((0..kvn).map(|_| None));
+                continue;
             }
+            let item_bases = &bases[self.offs[i]..self.offs[i] + span];
+            let seq_cache = &st.caches[layer];
+            // Cost model: the kernels are bandwidth-bound, so the token
+            // count to stream — summed over the chunk's sub-calls
+            // (≈ span × context) — is the LPT weight.
+            let cost: usize = subs
+                .iter()
+                .filter(|s| !s.skip)
+                .map(|s| if s.dense { s.n } else { s.budget })
+                .sum();
             let sel_base = layer * kvn;
             for (kvh, selector) in st.selectors[sel_base..sel_base + kvn].iter_mut().enumerate() {
                 let flat = i * kvn + kvh;
-                // Cost model: the kernels are bandwidth-bound, so the
-                // token count to stream is the LPT weight.
-                let cost = if dense { n } else { budget };
                 work.push(balance::WorkItem {
                     seq: i as u32,
                     kv_head: kvh as u32,
                     budget: cost,
                 });
-                let this_call = if dense {
-                    0
-                } else {
-                    call_idx += 1;
-                    call_idx - 1
-                };
                 flat_items.push(Some(AttnItem {
                     flat,
                     seq: i,
                     kv_head: kvh,
                     layer,
-                    n,
-                    dense,
-                    budget,
-                    call_idx: this_call,
+                    start,
+                    subs,
+                    call_bases: item_bases,
                     selector,
                     cache,
                     seq_cache,
-                    qs: &qs[i * qd + kvh * group * d..i * qd + (kvh + 1) * group * d],
+                    qs: &qs[self.offs[i] * qd..(self.offs[i] + span) * qd],
                 }));
             }
         }
@@ -627,9 +959,16 @@ impl BatchBackend for BatchStepBackend<'_> {
                 merged[flat] = Some(r);
             }
         }
+        let mut calls_by_flat: Vec<Vec<CallOut>> = (0..n_items).map(|_| Vec::new()).collect();
         for r in merged.into_iter().flatten() {
-            let base = r.seq * qd + r.kv_head * group * d;
-            out[base..base + group * d].copy_from_slice(&r.out);
+            // Scatter the item's sub-call outputs back into the step's
+            // token-major buffer; time/byte sums merge in flat order.
+            let span = r.out.len() / (group * d);
+            for cidx in 0..span {
+                let base = (self.offs[r.seq] + cidx) * qd + r.kv_head * group * d;
+                out[base..base + group * d]
+                    .copy_from_slice(&r.out[cidx * group * d..(cidx + 1) * group * d]);
+            }
             self.stats.t_select += r.t_select;
             self.stats.t_prune += r.t_prune;
             self.stats.t_attend += r.t_attend;
@@ -637,25 +976,45 @@ impl BatchBackend for BatchStepBackend<'_> {
             self.stats.est_bytes_select += r.bytes_select;
             self.stats.est_bytes_prune += r.bytes_prune;
             self.stats.est_bytes_attend += r.bytes_attend;
-            if r.sparse {
-                self.stats.sparse_calls += 1;
-                self.stats.candidates_sum += r.candidates as u64;
-                self.stats.kept_sum += r.kept as u64;
-                self.stats.kept_hist.add(r.kept as f64);
-            }
-            if let Some((lay, mass, ratio)) = r.prune_record {
-                self.signals.record_prune(lay, mass, ratio);
-            }
-            if let Some(recall) = r.probe {
-                self.signals.record_probe(recall);
+            calls_by_flat[r.flat] = r.calls;
+        }
+        // Per-call telemetry records in (item, token, kv-head) order —
+        // the same sequence token-at-a-time processing produces, so the
+        // per-layer SignalHub rings (and hence a governor steering on
+        // them) are chunk-size invariant, not just worker-count
+        // invariant. Every kv-head of an item shares one sub-call plan,
+        // so the per-head call counts line up by construction. Recall
+        // probes are only *buffered* here (keyed by token/layer/head);
+        // `run_batch` replays them into the global EMA in token-major
+        // order once every layer has run.
+        for i in 0..self.sts.len() {
+            let ncalls =
+                (0..kvn).map(|k| calls_by_flat[i * kvn + k].len()).max().unwrap_or(0);
+            for cc in 0..ncalls {
+                for k in 0..kvn {
+                    let Some(&call) = calls_by_flat[i * kvn + k].get(cc) else { continue };
+                    self.stats.sparse_calls += 1;
+                    self.stats.candidates_sum += call.candidates as u64;
+                    self.stats.kept_sum += call.kept as u64;
+                    self.stats.kept_hist.add(call.kept as f64);
+                    if let Some((lay, mass, ratio)) = call.prune_record {
+                        self.signals.record_prune(lay, mass, ratio);
+                    }
+                    if let Some(recall) = call.probe {
+                        self.probes.push((self.offs[i] + call.cidx, layer, k, recall));
+                    }
+                }
             }
         }
     }
 }
 
-/// Execute one (sequence, kv-head) attention work item: dense paged
-/// attention for skip-layers / short contexts, or the full select →
-/// prune → varlen-attend pipeline. Runs on a worker thread with
+/// Execute one (item, kv-head) attention work item. Each sub-call runs
+/// dense paged attention (skip-layers / short visible contexts) or the
+/// full select → prune → varlen-attend pipeline, over the sub-call's
+/// *visible prefix* (a truncated [`SeqCache`] view for mid-chunk
+/// queries — the final sub-call sees the real per-sequence cache, so
+/// pure decode items never clone). Runs on a worker thread with
 /// read-only cache access; everything mutable is item-private.
 fn run_attn_item(
     cfg: &SparseConfig,
@@ -670,22 +1029,23 @@ fn run_attn_item(
         seq: seq_idx,
         kv_head,
         layer,
-        n,
-        dense,
-        budget,
-        call_idx,
+        start,
+        subs,
+        call_bases,
         selector,
         cache,
-        seq_cache: seq,
-        qs: qs_group,
+        seq_cache,
+        qs,
     } = item;
     let d = c.head_dim;
     let group = c.group();
+    let qd = c.q_dim();
+    let span = subs.len();
     let mut r = AttnItemOut {
         flat,
         seq: seq_idx,
         kv_head,
-        out: vec![0.0; group * d],
+        out: vec![0.0; span * group * d],
         t_select: 0.0,
         t_prune: 0.0,
         t_attend: 0.0,
@@ -693,154 +1053,209 @@ fn run_attn_item(
         bytes_select: 0,
         bytes_prune: 0,
         bytes_attend: 0,
-        sparse: !dense,
-        candidates: 0,
-        kept: 0,
-        prune_record: None,
-        probe: None,
+        calls: Vec::new(),
     };
-    if dense {
+    // Whole-item dense fast path: one multi-query causal kernel call
+    // (bit-exact with the per-sub-call loop below — same walk, same
+    // order — it just skips the per-call dispatch).
+    if subs.iter().all(|s| s.dense && !s.skip) {
         let t = Instant::now();
-        for g in 0..group {
-            crate::attention::full::paged_full(
-                cache,
-                seq,
-                kv_head,
-                &qs_group[g * d..(g + 1) * d],
-                &mut r.out[g * d..(g + 1) * d],
-            );
-        }
+        crate::attention::full::paged_full_causal(
+            cache,
+            seq_cache,
+            kv_head,
+            &qs[kv_head * group * d..],
+            qd,
+            group,
+            start,
+            &mut r.out,
+        );
         r.t_dense = t.elapsed().as_secs_f64();
-        r.bytes_attend = crate::sim::attn_bytes(n, d) as u64;
+        r.bytes_attend = subs.iter().map(|s| crate::sim::attn_bytes(s.n, d) as u64).sum();
         return r;
     }
-    // --- stage 1: Token Selector (black box, conservative) ------------
-    let t = Instant::now();
-    let candidates = selector.select(cache, seq, kv_head, qs_group, group, budget);
-    r.t_select = t.elapsed().as_secs_f64();
-    r.bytes_select = selector_bytes(cfg.selector, n, d) as u64;
-    // --- stage 2: Twilight Pruner --------------------------------------
-    let (kept, outcomes) = match &cfg.twilight {
-        Some(pc) => {
-            // The governor's p multiplier, clamped so even a
-            // maximally-degraded directive keeps a real top-p.
-            let pc = PrunerConfig {
-                p: (pc.p * directive.p_scale).clamp(0.05, 0.999),
-                ..*pc
-            };
+    let ps = cache.cfg.page_size;
+    // Truncated visible-prefix view for mid-chunk sub-calls, built
+    // lazily and grown monotonically (sub-calls see increasing n).
+    let mut view: Option<SeqCache> = None;
+    for (cidx, spec) in subs.iter().enumerate() {
+        if spec.skip {
+            continue;
+        }
+        let n = spec.n;
+        let qs_group = &qs[cidx * qd + kv_head * group * d..cidx * qd + (kv_head + 1) * group * d];
+        let out = &mut r.out[cidx * group * d..(cidx + 1) * group * d];
+        if spec.dense {
             let t = Instant::now();
-            let (union, outs) =
-                prune_group(&pc, cache, seq, kv_head, qs_group, group, &candidates, scratch);
-            r.t_prune = t.elapsed().as_secs_f64();
-            r.bytes_prune =
-                crate::sim::spgemv_bytes(candidates.len(), d, cache.cfg.mirror_bits) as u64;
-            // Governor telemetry: per-layer captured mass and keep ratio,
-            // plus the periodic dense recall probe on the group's first
-            // query head (cadence from the precomputed call index).
-            if !candidates.is_empty() {
-                let mean_mass = outs.iter().map(|o| o.mass as f64).sum::<f64>()
-                    / outs.len().max(1) as f64;
-                let keep_ratio = union.len() as f64 / candidates.len() as f64;
-                r.prune_record = Some((layer, mean_mass, keep_ratio));
-                if probe_interval > 0 && call_idx % probe_interval == 0 {
-                    r.probe = Some(probe_recall(
+            for g in 0..group {
+                crate::attention::full::paged_full_limit(
+                    cache,
+                    seq_cache,
+                    kv_head,
+                    &qs_group[g * d..(g + 1) * d],
+                    n,
+                    &mut out[g * d..(g + 1) * d],
+                );
+            }
+            r.t_dense += t.elapsed().as_secs_f64();
+            r.bytes_attend += crate::sim::attn_bytes(n, d) as u64;
+            continue;
+        }
+        // Selectors and the pruner read `seq.len` / `seq.pages`: hand
+        // them the visible prefix only. With the sealing contract this
+        // makes every sub-call a pure function of that prefix — chunk-
+        // size invariant.
+        let seq: &SeqCache = if n == seq_cache.len {
+            seq_cache
+        } else {
+            let v = view.get_or_insert_with(|| SeqCache {
+                pages: Vec::with_capacity(seq_cache.pages.len()),
+                len: 0,
+            });
+            v.len = n;
+            let np = n.div_ceil(ps);
+            while v.pages.len() < np {
+                v.pages.push(seq_cache.pages[v.pages.len()]);
+            }
+            &*v
+        };
+        let budget = spec.budget;
+        // Pre-assigned token-major label: sparse token `c` owns a block
+        // of kvn consecutive labels, this head takes its slot within it.
+        let call_idx = call_bases[cidx] + kv_head as u64;
+        let mut call =
+            CallOut { cidx, candidates: 0, kept: 0, prune_record: None, probe: None };
+        // --- stage 1: Token Selector (black box, conservative) --------
+        let t = Instant::now();
+        let candidates = selector.select(cache, seq, kv_head, qs_group, group, budget);
+        r.t_select += t.elapsed().as_secs_f64();
+        r.bytes_select += selector_bytes(cfg.selector, n, d) as u64;
+        // --- stage 2: Twilight Pruner ---------------------------------
+        let (kept, outcomes) = match &cfg.twilight {
+            Some(pc) => {
+                // The governor's p multiplier, clamped so even a
+                // maximally-degraded directive keeps a real top-p.
+                let pc = PrunerConfig {
+                    p: (pc.p * directive.p_scale).clamp(0.05, 0.999),
+                    ..*pc
+                };
+                let t = Instant::now();
+                let (union, outs) =
+                    prune_group(&pc, cache, seq, kv_head, qs_group, group, &candidates, scratch);
+                r.t_prune += t.elapsed().as_secs_f64();
+                r.bytes_prune +=
+                    crate::sim::spgemv_bytes(candidates.len(), d, cache.cfg.mirror_bits) as u64;
+                // Governor telemetry: per-layer captured mass and keep
+                // ratio, plus the periodic dense recall probe on the
+                // group's first query head (cadence from the call label
+                // pre-assigned in token-major order by run_batch).
+                if !candidates.is_empty() {
+                    let mean_mass = outs.iter().map(|o| o.mass as f64).sum::<f64>()
+                        / outs.len().max(1) as f64;
+                    let keep_ratio = union.len() as f64 / candidates.len() as f64;
+                    call.prune_record = Some((layer, mean_mass, keep_ratio));
+                    if probe_interval > 0 && call_idx % probe_interval == 0 {
+                        call.probe = Some(probe_recall(
+                            cache,
+                            seq,
+                            kv_head,
+                            &qs_group[..d],
+                            &candidates,
+                            &outs[0].kept,
+                            pc.p,
+                        ));
+                    }
+                }
+                (union, Some(outs))
+            }
+            None => (candidates.clone(), None),
+        };
+        call.candidates = candidates.len();
+        call.kept = kept.len();
+        // --- stage 3: sparse attention kernel -------------------------
+        let t = Instant::now();
+        match cfg.attn {
+            AttnVariant::GroupVarlen => {
+                crate::attention::sparse::group_varlen(
+                    cache, seq, kv_head, qs_group, group, &kept, out,
+                );
+            }
+            AttnVariant::HeadVarlen => {
+                for g in 0..group {
+                    crate::attention::sparse::head_varlen(
                         cache,
                         seq,
                         kv_head,
-                        &qs_group[..d],
-                        &candidates,
-                        &outs[0].kept,
-                        pc.p,
-                    ));
+                        &qs_group[g * d..(g + 1) * d],
+                        &kept,
+                        &mut out[g * d..(g + 1) * d],
+                    );
                 }
             }
-            (union, Some(outs))
-        }
-        None => (candidates.clone(), None),
-    };
-    r.candidates = candidates.len();
-    r.kept = kept.len();
-    // --- stage 3: sparse attention kernel ------------------------------
-    let t = Instant::now();
-    match cfg.attn {
-        AttnVariant::GroupVarlen => {
-            crate::attention::sparse::group_varlen(
-                cache, seq, kv_head, qs_group, group, &kept, &mut r.out,
-            );
-        }
-        AttnVariant::HeadVarlen => {
-            for g in 0..group {
-                crate::attention::sparse::head_varlen(
-                    cache,
-                    seq,
-                    kv_head,
-                    &qs_group[g * d..(g + 1) * d],
-                    &kept,
-                    &mut r.out[g * d..(g + 1) * d],
-                );
+            AttnVariant::Padded => {
+                let max_budget = budget.max(kept.len());
+                for g in 0..group {
+                    crate::attention::sparse::padded(
+                        cache,
+                        seq,
+                        kv_head,
+                        &qs_group[g * d..(g + 1) * d],
+                        &kept,
+                        max_budget,
+                        &mut out[g * d..(g + 1) * d],
+                    );
+                }
             }
         }
-        AttnVariant::Padded => {
-            let max_budget = budget.max(kept.len());
-            for g in 0..group {
-                crate::attention::sparse::padded(
-                    cache,
-                    seq,
-                    kv_head,
-                    &qs_group[g * d..(g + 1) * d],
-                    &kept,
-                    max_budget,
-                    &mut r.out[g * d..(g + 1) * d],
-                );
-            }
-        }
-    }
-    r.t_attend = t.elapsed().as_secs_f64();
-    r.bytes_attend = crate::sim::attn_bytes(kept.len(), d) as u64;
-    // --- feedback for stateful (dropping) selectors --------------------
-    if selector_wants_observation(cfg.selector) {
-        // Reuse the pruner's estimated per-head weights instead of
-        // re-scoring in exact fp32: every kept (union) token is observed
-        // with its group-aggregated estimated attention, so a token any
-        // query head attends to stays visible to the dropping selector.
-        // Fall back to exact scores only when no pruner ran (baseline
-        // mode) or it short-circuited without scoring (candidates ≤
-        // min_keep, where the exact pass is a handful of dot products).
-        let scored = outcomes.as_ref().filter(|outs| {
-            outs.iter().all(|o| o.weights.len() == o.kept.len())
-                && outs.iter().any(|o| !o.weights.is_empty())
-        });
-        match scored {
-            Some(outs) => {
-                let mut w = vec![0.0f32; kept.len()];
-                for o in outs {
-                    for (t, &x) in o.kept.iter().zip(&o.weights) {
-                        if let Ok(j) = kept.binary_search(t) {
-                            w[j] += x;
+        r.t_attend += t.elapsed().as_secs_f64();
+        r.bytes_attend += crate::sim::attn_bytes(kept.len(), d) as u64;
+        // --- feedback for stateful (dropping) selectors ---------------
+        if selector_wants_observation(cfg.selector) {
+            // Reuse the pruner's estimated per-head weights instead of
+            // re-scoring in exact fp32: every kept (union) token is
+            // observed with its group-aggregated estimated attention, so
+            // a token any query head attends to stays visible to the
+            // dropping selector. Fall back to exact scores only when no
+            // pruner ran (baseline mode) or it short-circuited without
+            // scoring (candidates ≤ min_keep, where the exact pass is a
+            // handful of dot products).
+            let scored = outcomes.as_ref().filter(|outs| {
+                outs.iter().all(|o| o.weights.len() == o.kept.len())
+                    && outs.iter().any(|o| !o.weights.is_empty())
+            });
+            match scored {
+                Some(outs) => {
+                    let mut w = vec![0.0f32; kept.len()];
+                    for o in outs {
+                        for (t, &x) in o.kept.iter().zip(&o.weights) {
+                            if let Ok(j) = kept.binary_search(t) {
+                                w[j] += x;
+                            }
                         }
                     }
-                }
-                let sum: f32 = w.iter().sum();
-                if sum > 0.0 {
-                    let inv = 1.0 / sum;
-                    for x in w.iter_mut() {
-                        *x *= inv;
+                    let sum: f32 = w.iter().sum();
+                    if sum > 0.0 {
+                        let inv = 1.0 / sum;
+                        for x in w.iter_mut() {
+                            *x *= inv;
+                        }
                     }
+                    selector.observe(&kept, &w);
                 }
-                selector.observe(&kept, &w);
-            }
-            None => {
-                let mut w: Vec<f32> = kept
-                    .iter()
-                    .map(|&t| {
-                        cache.exact_score(seq, kv_head, &qs_group[..d], t)
-                            * crate::attention::scale(d)
-                    })
-                    .collect();
-                crate::tensor::softmax_inplace(&mut w);
-                selector.observe(&kept, &w);
+                None => {
+                    let mut w: Vec<f32> = kept
+                        .iter()
+                        .map(|&t| {
+                            cache.exact_score(seq, kv_head, &qs_group[..d], t)
+                                * crate::attention::scale(d)
+                        })
+                        .collect();
+                    crate::tensor::softmax_inplace(&mut w);
+                    selector.observe(&kept, &w);
+                }
             }
         }
+        r.calls.push(call);
     }
     r
 }
@@ -1066,23 +1481,31 @@ mod tests {
 
     #[test]
     fn prefill_steps_counted_separately_from_decode_steps() {
-        // Single-layer fast path: the whole prompt is one prefill step.
+        // prefill_steps counts prompt tokens pushed through the forward
+        // pass. Single-layer fast path: only the final prompt token.
         let mut e = engine(SparseConfig::dense());
         let mut r = Rng::new(6);
         let g = gen_niah(&mut r, V, 128);
         let _ = e.prefill(0, &g.prompt).unwrap();
         assert_eq!(e.stats.steps, 0, "prefill must not count as decode");
         assert_eq!(e.stats.prefill_steps, 1);
+        assert_eq!(e.stats.prefill_chunks, 1);
         let _ = e.decode(0, g.prompt[0]).unwrap();
         assert_eq!(e.stats.steps, 1);
         assert_eq!(e.stats.prefill_steps, 1);
-        // Multi-layer path: one prefill step per prompt token.
+        // Multi-layer path: every prompt token, whatever the chunking.
         let cfg = crate::model::testutil::tiny_config();
         let m = Arc::new(crate::model::testutil::random_model(&cfg, 2));
         let mut e2 = Engine::new(m, SparseConfig::dense(), 1024);
         let _ = e2.prefill(0, &[1, 2, 3, 4, 5]).unwrap();
         assert_eq!(e2.stats.prefill_steps, 5);
         assert_eq!(e2.stats.steps, 0);
+        assert!(e2.stats.prefill_chunks >= 1);
+        // Mixed-step timing attribution: a pure-decode step is all decode.
+        let _ = e2.decode(0, 1).unwrap();
+        let t = e2.last_step_timing();
+        assert!(t.total > 0.0);
+        assert!((t.decode - t.total).abs() < 1e-12 && t.prefill == 0.0);
     }
 
     #[test]

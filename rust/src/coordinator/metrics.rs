@@ -1,6 +1,14 @@
 //! Serving metrics: TTFT, TPOT, throughput, budget distributions —
 //! everything Fig. 8 and the tables report — plus the governor's
 //! decision trace when the run was governed.
+//!
+//! Attribution rules under chunked prefill: TTFT is stamped at the first
+//! *sampled* token (after the final prompt chunk), not at admission;
+//! `prefill_time` (`first_token_at - admitted_at`) isolates the chunked
+//! prompt processing from queueing (`admitted_at - arrival`); TPOT spans
+//! only the decode phase. Rejected requests (prompt can never fit the
+//! page pool) are counted separately and excluded from the latency
+//! summaries.
 
 use crate::governor::TraceEntry;
 use crate::util::json::{self, Json};
@@ -13,15 +21,29 @@ pub struct RequestMetrics {
     pub prompt_len: usize,
     pub output_len: usize,
     pub arrival: f64,
+    /// When admission began (== `arrival` when never queued).
+    pub admitted_at: f64,
     pub first_token_at: f64,
     pub finished_at: f64,
     pub preemptions: u32,
+    /// Refused at admission: the prompt can never fit the page pool.
+    pub rejected: bool,
 }
 
 impl RequestMetrics {
     /// Time to first token.
     pub fn ttft(&self) -> f64 {
         self.first_token_at - self.arrival
+    }
+
+    /// Time spent queued before (final) admission.
+    pub fn queue_time(&self) -> f64 {
+        self.admitted_at - self.arrival
+    }
+
+    /// Time spent pushing prompt chunks through the engine.
+    pub fn prefill_time(&self) -> f64 {
+        self.first_token_at - self.admitted_at
     }
 
     /// Time per output token after the first.
@@ -58,7 +80,26 @@ impl ServingReport {
     }
 
     pub fn ttft_summary(&self) -> Summary {
-        Summary::from(&self.requests.iter().map(|r| r.ttft()).collect::<Vec<_>>())
+        Summary::from(
+            &self
+                .requests
+                .iter()
+                .filter(|r| !r.rejected)
+                .map(|r| r.ttft())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Chunked-prompt processing time (admission → first sampled token).
+    pub fn prefill_summary(&self) -> Summary {
+        Summary::from(
+            &self
+                .requests
+                .iter()
+                .filter(|r| !r.rejected)
+                .map(|r| r.prefill_time())
+                .collect::<Vec<_>>(),
+        )
     }
 
     pub fn tpot_summary(&self) -> Summary {
@@ -66,7 +107,7 @@ impl ServingReport {
             &self
                 .requests
                 .iter()
-                .filter(|r| r.output_len > 1)
+                .filter(|r| !r.rejected && r.output_len > 1)
                 .map(|r| r.tpot())
                 .collect::<Vec<_>>(),
         )
@@ -77,10 +118,16 @@ impl ServingReport {
         self.requests.iter().map(|r| r.preemptions).sum()
     }
 
+    /// Requests refused at admission (prompt can never fit the pool).
+    pub fn rejected(&self) -> usize {
+        self.requests.iter().filter(|r| r.rejected).count()
+    }
+
     /// JSON for result files.
     pub fn to_json(&self) -> Json {
         let tpot = self.tpot_summary();
         let ttft = self.ttft_summary();
+        let prefill = self.prefill_summary();
         let mut kv: Vec<(&str, Json)> = vec![
             ("requests", Json::Num(self.requests.len() as f64)),
             ("duration_s", Json::Num(self.duration)),
@@ -88,10 +135,13 @@ impl ServingReport {
             ("throughput_tok_s", Json::Num(self.throughput_tok_s())),
             ("ttft_mean_s", Json::Num(ttft.mean)),
             ("ttft_p99_s", Json::Num(ttft.p99)),
+            ("prefill_mean_s", Json::Num(prefill.mean)),
+            ("prefill_p99_s", Json::Num(prefill.p99)),
             ("tpot_mean_s", Json::Num(tpot.mean)),
             ("tpot_p50_s", Json::Num(tpot.p50)),
             ("tpot_p99_s", Json::Num(tpot.p99)),
             ("preemptions", Json::Num(self.preemptions() as f64)),
+            ("rejected", Json::Num(self.rejected() as f64)),
         ];
         if !self.governor.is_empty() {
             let pmin = self.governor.iter().map(|e| e.p_scale).fold(f32::INFINITY, f32::min);
@@ -149,9 +199,11 @@ mod tests {
             prompt_len: 10,
             output_len: out,
             arrival,
+            admitted_at: arrival,
             first_token_at: first,
             finished_at: fin,
             preemptions: 0,
+            rejected: false,
         }
     }
 
@@ -160,6 +212,33 @@ mod tests {
         let r = rm(1.0, 1.5, 2.5, 11);
         assert!((r.ttft() - 0.5).abs() < 1e-12);
         assert!((r.tpot() - 0.1).abs() < 1e-12);
+        assert!((r.prefill_time() - 0.5).abs() < 1e-12);
+        assert_eq!(r.queue_time(), 0.0);
+    }
+
+    #[test]
+    fn queue_vs_prefill_split() {
+        let mut r = rm(1.0, 2.0, 3.0, 11);
+        r.admitted_at = 1.4;
+        assert!((r.queue_time() - 0.4).abs() < 1e-12);
+        assert!((r.prefill_time() - 0.6).abs() < 1e-12);
+        assert!((r.ttft() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejected_excluded_from_latency_summaries() {
+        let mut rej = rm(0.0, 0.0, 0.0, 0);
+        rej.rejected = true;
+        let rep = ServingReport {
+            requests: vec![rm(0.0, 0.5, 1.5, 11), rej],
+            duration: 1.5,
+            governor: Vec::new(),
+        };
+        assert_eq!(rep.rejected(), 1);
+        assert!((rep.ttft_summary().mean - 0.5).abs() < 1e-12);
+        let j = rep.to_json();
+        assert_eq!(j.get_usize("rejected"), Some(1));
+        assert!(j.get_f64("prefill_mean_s").is_some());
     }
 
     #[test]

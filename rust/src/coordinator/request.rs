@@ -10,7 +10,8 @@ pub type RequestId = u64;
 pub enum RequestState {
     /// In the admission queue.
     Queued,
-    /// Prompt is being processed.
+    /// Prompt chunks are being pushed through mixed steps (spans multiple
+    /// scheduler steps under chunked prefill).
     Prefilling,
     /// Generating tokens.
     Decoding,
@@ -18,6 +19,8 @@ pub enum RequestState {
     Preempted,
     /// Done (completed or cancelled).
     Finished,
+    /// Refused at admission: the prompt can never fit the page pool.
+    Rejected,
 }
 
 /// A serving request plus its runtime bookkeeping.
@@ -31,6 +34,9 @@ pub struct Request {
     pub arrival: f64,
     pub state: RequestState,
     pub output: Vec<u32>,
+    /// Time admission began (first prefill chunk scheduled); cleared on
+    /// preemption. `first_token_at - admitted_at` is the prefill time.
+    pub admitted_at: Option<f64>,
     /// Time the first output token was produced.
     pub first_token_at: Option<f64>,
     /// Completion time.
@@ -51,6 +57,7 @@ impl Request {
             arrival: 0.0,
             state: RequestState::Queued,
             output: Vec::new(),
+            admitted_at: None,
             first_token_at: None,
             finished_at: None,
             stop_token: None,

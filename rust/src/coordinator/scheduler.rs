@@ -1,15 +1,29 @@
-//! Continuous-batching scheduler (vLLM-style) over the decode [`Engine`].
+//! Continuous-batching scheduler (vLLM-style continuous batching +
+//! Sarathi-style chunked-prefill co-scheduling) over the [`Engine`].
 //!
-//! Each scheduler *step* interleaves: (1) admitting arrived requests when
-//! the page pool has headroom (prefill), (2) **one batched decode step**
-//! ([`Engine::step_batch`]) advancing every running request a token —
-//! the engine flattens the batch into LPT-balanced (sequence × kv-head)
-//! attention work items drained by its persistent worker pool (resident
-//! across every scheduler step) — and (3) preemption of the youngest request
-//! when the pool runs dry (its pages are released; it re-prefills later —
-//! recompute-style preemption, the same policy vLLM defaults to). Only
-//! the decode phase feeds the governor's latency tracker, so step time ≙
-//! TPOT genuinely holds for the batch (prefill is accounted separately).
+//! Each scheduler *step* builds **one mixed engine step**: every running
+//! request contributes a decode item, and every request in the
+//! `Prefilling` state contributes the next chunk of its prompt (at most
+//! [`Engine::prefill_chunk`] tokens, shrunk by the governor's pressure
+//! ladder, all chunks together capped by
+//! [`SchedulerConfig::max_prefill_tokens_per_step`]). The engine
+//! flattens the batch into LPT-balanced (item × kv-head) attention work
+//! items drained by its persistent worker pool, so prompt processing
+//! rides the same parallel machinery as decode — TTFT scales with
+//! workers instead of serializing behind one token-at-a-time loop, and a
+//! long admission can no longer head-of-line-block the running set for
+//! its whole prompt.
+//!
+//! Admission is prompt-size aware: a prompt the pool can *never* hold is
+//! rejected up front (counted in [`ServingReport`]); one that merely
+//! does not fit *now* stays parked in the queue. Under memory pressure
+//! the scheduler first defers/trims prefill chunks (they are behind the
+//! decode items in the batch, so the engine's page allocator also favors
+//! decodes within the step), then recompute-preempts the youngest
+//! running request (pages released; it re-prefills later — the policy
+//! vLLM defaults to). Only the decode share of the mixed step's
+//! wall-clock ([`Engine::last_step_timing`]) feeds the governor's
+//! latency tracker, so step time ≙ TPOT genuinely holds for the batch.
 //!
 //! Time is virtual when replaying a trace (`now` advances with the
 //! wall-clock of actual compute), so arrival patterns interact with
@@ -28,26 +42,46 @@ use std::time::Instant;
 /// Scheduler limits.
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerConfig {
-    /// Max concurrently-decoding requests.
+    /// Max concurrently-active requests (decoding + prefilling).
     pub max_batch: usize,
     /// Keep at least this many pages free before admitting a request
     /// (headroom for running decodes).
     pub admit_headroom_pages: usize,
-    /// Max prefills per scheduler step (bounds head-of-line blocking).
+    /// Max new admissions per scheduler step (bounds queue-pop work; the
+    /// token budget below bounds the actual prefill compute).
     pub max_prefills_per_step: usize,
+    /// Per-step prompt-token budget shared by all prefill chunks of a
+    /// mixed step (Sarathi-style): bounds how much a wave of admissions
+    /// can stall the co-scheduled decodes, i.e. bounds TPOT inflation.
+    pub max_prefill_tokens_per_step: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_batch: 64, admit_headroom_pages: 8, max_prefills_per_step: 4 }
+        SchedulerConfig {
+            max_batch: 64,
+            admit_headroom_pages: 8,
+            max_prefills_per_step: 4,
+            max_prefill_tokens_per_step: 512,
+        }
     }
 }
 
-/// The coordinator's scheduler: admission queue + running set.
+/// A request whose prompt is partway through chunked prefill.
+struct PrefillEntry {
+    req: Request,
+    /// Prompt tokens already appended to the engine.
+    cursor: usize,
+}
+
+/// The coordinator's scheduler: admission queue + prefilling set +
+/// running set.
 pub struct Scheduler {
     pub cfg: SchedulerConfig,
     pub engine: Engine,
     queue: VecDeque<Request>,
+    /// Admitted requests still pushing prompt chunks through mixed steps.
+    prefilling: Vec<PrefillEntry>,
     running: Vec<Request>,
     rng: Rng,
     finished: Vec<Request>,
@@ -62,6 +96,7 @@ impl Scheduler {
             cfg,
             engine,
             queue: VecDeque::new(),
+            prefilling: Vec::new(),
             running: Vec::new(),
             rng: Rng::new(0xBA7C4),
             finished: Vec::new(),
@@ -101,14 +136,14 @@ impl Scheduler {
         self.running.len()
     }
 
-    /// Pages a prompt will need across all layers.
-    fn pages_needed(&self, prompt_len: usize) -> usize {
-        let layers = self.engine.model.cfg.n_layers;
-        prompt_len.div_ceil(16) * layers
+    /// Requests partway through chunked prefill.
+    pub fn prefilling(&self) -> usize {
+        self.prefilling.len()
     }
 
-    /// One scheduler iteration at virtual time `now`. Returns the number
-    /// of output tokens produced.
+    /// One scheduler iteration at virtual time `now`: admission, chunk
+    /// planning, and **one mixed engine step** (decodes + prefill
+    /// chunks). Returns the number of decode tokens produced.
     pub fn step(&mut self, now: f64) -> usize {
         // --- governor -------------------------------------------------
         // Decide before admitting: the directive shapes both this step's
@@ -125,62 +160,65 @@ impl Scheduler {
                 &self.engine.signals,
                 free_frac,
                 self.queue.len(),
-                self.running.len(),
+                self.running.len() + self.prefilling.len(),
                 self.engine.stats.steps,
             );
             let d = gov.step(&snap);
             self.engine.apply_directive(d);
         }
-        let degrade = self.engine.directive().degrade_level;
-        // --- admission ------------------------------------------------
+        let directive = self.engine.directive();
+        let degrade = directive.degrade_level;
+        // --- admission (into Prefilling; prompt-size-aware) -----------
         // Staged degradation: widen the required headroom as pressure
-        // mounts, and freeze admission entirely at level 3 unless the
-        // engine is idle (nothing running can ever deadlock admission).
+        // mounts, and freeze *new* admission entirely at level 3 unless
+        // the engine is idle (in-flight prefills keep draining — they
+        // already hold pages, and stalling them can only deadlock).
         let admit_headroom = self.cfg.admit_headroom_pages * (1 + degrade as usize);
-        let max_prefills = if degrade >= 3 && !self.running.is_empty() {
-            0
-        } else {
-            self.cfg.max_prefills_per_step
-        };
-        let mut prefills = 0;
-        while prefills < max_prefills && self.running.len() < self.cfg.max_batch {
+        let frozen = degrade >= 3 && !(self.running.is_empty() && self.prefilling.is_empty());
+        let ps = self.engine.page_size();
+        let mut admitted = 0;
+        while !frozen
+            && admitted < self.cfg.max_prefills_per_step
+            && self.running.len() + self.prefilling.len() < self.cfg.max_batch
+        {
             let Some(front) = self.queue.front() else { break };
             if front.arrival > now {
                 break;
             }
-            let need = self.pages_needed(front.prompt.len()) / self.engine.model.cfg.n_layers
-                + admit_headroom;
-            if self.engine.free_pages() < need {
-                break;
+            let prompt_pages = front.prompt.len().div_ceil(ps);
+            // A preempted request's prompt holds folded-back generated
+            // tokens, so it gets the true feasibility bound (no headroom):
+            // rejecting it on the admission-policy bound would discard
+            // already-served work that the pool can still hold, and
+            // parking it behind an unreachable headroom would wedge the
+            // queue head forever.
+            let policy_headroom =
+                if front.preemptions > 0 { 0 } else { self.cfg.admit_headroom_pages };
+            if prompt_pages + policy_headroom > self.engine.total_pages() {
+                // No schedule can ever serve this (for a re-admission:
+                // the folded sequence itself outgrew the pool): admitting
+                // would only fail mid-prefill and release — refuse up
+                // front and count it.
+                let req = self.queue.pop_front().unwrap();
+                self.reject(req, now);
+                continue;
+            }
+            let want =
+                if front.preemptions > 0 { prompt_pages } else { prompt_pages + admit_headroom };
+            if self.engine.free_pages() < want {
+                break; // parked: retried when pages free up
             }
             let mut req = self.queue.pop_front().unwrap();
             req.state = RequestState::Prefilling;
-            match self.engine.prefill(req.id, &req.prompt) {
-                Ok(logits) => {
-                    let tok = sample(&logits, &req.params, &mut self.rng);
-                    req.output.push(tok);
-                    req.first_token_at = req.first_token_at.or(Some(now));
-                    req.state = RequestState::Decoding;
-                    if req.is_done() {
-                        self.engine.release(req.id);
-                        self.finish(req, now);
-                    } else {
-                        self.running.push(req);
-                    }
-                    prefills += 1;
-                }
-                Err(_) => {
-                    // Not enough pages after all: back to the queue head.
-                    req.state = RequestState::Queued;
-                    self.queue.push_front(req);
-                    break;
-                }
-            }
+            req.admitted_at = req.admitted_at.or(Some(now));
+            self.engine.start_empty(req.id);
+            self.prefilling.push(PrefillEntry { req, cursor: 0 });
+            admitted += 1;
         }
-        // --- decode ----------------------------------------------------
-        // Preempt (youngest-first) until the batch's page demand fits:
-        // every sequence on a page boundary needs one fresh page in each
-        // layer pool, and `free_pages` is the min across pools.
+        // --- decode preemption ----------------------------------------
+        // Preempt (youngest-first) until the decode set's page demand
+        // fits: every sequence on a page boundary needs one fresh page in
+        // each layer pool, and `free_pages` is the min across pools.
         while !self.running.is_empty() {
             let boundary = self.running.iter().filter(|r| self.engine.needs_page(r.id)).count();
             if boundary <= self.engine.free_pages() {
@@ -190,19 +228,67 @@ impl Scheduler {
             self.engine.release(victim.id);
             self.requeue_preempted(victim);
         }
-        // One batched decode step advances the whole running set: the
-        // engine flattens it into LPT-balanced (seq × kv-head) items.
+        let decode_pages =
+            self.running.iter().filter(|r| self.engine.needs_page(r.id)).count();
+        // --- prefill chunk planning -----------------------------------
+        // Each prefilling request contributes at most one chunk (the
+        // pressure ladder shrinks the span before freezing admission);
+        // all chunks share the per-step token budget, and chunks are
+        // *deferred or trimmed* — never the decodes preempted — when the
+        // remaining pages cannot take them (chunk-aware preemption
+        // ordering: prefill work is always the cheaper thing to delay).
+        let chunk = (self.engine.prefill_chunk() / directive.chunk_divisor()).max(1);
+        let mut token_budget = self.cfg.max_prefill_tokens_per_step.max(1);
+        let mut free_for_chunks = self.engine.free_pages().saturating_sub(decode_pages);
+        let mut plan: Vec<(usize, usize)> = Vec::new(); // (prefilling idx, span)
+        for (pi, p) in self.prefilling.iter().enumerate() {
+            if token_budget == 0 {
+                break;
+            }
+            let remaining = p.req.prompt.len() - p.cursor;
+            // Tokens that fit the pages still free: slack on the current
+            // page plus whole fresh pages.
+            let max_fit = (ps - p.cursor % ps) % ps + free_for_chunks * ps;
+            let span = chunk.min(remaining).min(token_budget).min(max_fit);
+            if span == 0 {
+                continue; // deferred: no pages for this chunk right now
+            }
+            free_for_chunks -= self.engine.new_pages_for(p.req.id, span);
+            token_budget -= span;
+            plan.push((pi, span));
+        }
+        if plan.is_empty() && self.running.is_empty() && !self.prefilling.is_empty() {
+            // Wedged: partial prompts hold every page and none can take
+            // another chunk. Recompute-preempt the youngest so the rest
+            // can make progress.
+            let p = self.prefilling.pop().unwrap();
+            self.engine.release(p.req.id);
+            self.requeue_preempted(p.req);
+        }
+        // --- one mixed engine step ------------------------------------
+        // Decode items first (page pressure inside the step lands on the
+        // chunks), then the planned chunks, all flattened by the engine
+        // into LPT-balanced (item × kv-head) attention work.
         let mut produced = 0;
-        let decode_start = Instant::now();
-        if !self.running.is_empty() {
-            let batch = DecodeBatch::new(
-                self.running.iter().map(|r| (r.id, *r.output.last().unwrap())).collect(),
-            );
-            let results = self.engine.step_batch(&batch);
+        if !self.running.is_empty() || !plan.is_empty() {
+            let mut batch = DecodeBatch::default();
+            for r in &self.running {
+                batch.push_decode(r.id, *r.output.last().unwrap());
+            }
+            for &(pi, span) in &plan {
+                let p = &self.prefilling[pi];
+                batch.push_chunk(
+                    p.req.id,
+                    p.req.prompt[p.cursor..p.cursor + span].to_vec(),
+                    p.cursor + span == p.req.prompt.len(),
+                );
+            }
+            let mut results = self.engine.step_batch(&batch).into_iter();
+            // Decode results, in batch order.
             let mut kept = Vec::with_capacity(self.running.len());
             let mut victims = Vec::new();
-            for (mut req, res) in self.running.drain(..).zip(results) {
-                match res {
+            for mut req in self.running.drain(..) {
+                match results.next().unwrap() {
                     Ok(logits) => {
                         let tok = sample(&logits, &req.params, &mut self.rng);
                         req.output.push(tok);
@@ -215,12 +301,50 @@ impl Scheduler {
                 }
             }
             self.running = kept;
+            // Chunk results, in plan order.
+            let mut retire: Vec<usize> = Vec::new();
+            for &(pi, span) in &plan {
+                let p = &mut self.prefilling[pi];
+                match results.next().unwrap() {
+                    Ok(logits) => {
+                        p.cursor += span;
+                        if p.cursor == p.req.prompt.len() {
+                            // TTFT is stamped here, at the first *sampled*
+                            // token — not at admission.
+                            let tok = sample(&logits, &p.req.params, &mut self.rng);
+                            p.req.output.push(tok);
+                            p.req.first_token_at = Some(now);
+                            p.req.state = RequestState::Decoding;
+                            retire.push(pi);
+                        }
+                    }
+                    Err(_) => {
+                        // Engine released the sequence mid-chunk: the
+                        // whole prompt re-prefills later.
+                        p.req.state = RequestState::Preempted;
+                        retire.push(pi);
+                    }
+                }
+            }
+            for &pi in retire.iter().rev() {
+                let p = self.prefilling.remove(pi);
+                match p.req.state {
+                    RequestState::Decoding => {
+                        if p.req.is_done() {
+                            self.engine.release(p.req.id);
+                            self.finish(p.req, now);
+                        } else {
+                            self.running.push(p.req);
+                        }
+                    }
+                    _ => self.requeue_preempted(p.req),
+                }
+            }
             for victim in victims {
                 self.requeue_preempted(victim);
             }
         }
-        let decode_secs = decode_start.elapsed().as_secs_f64();
-        // --- completion --------------------------------------------------
+        // --- completion -----------------------------------------------
         let mut j = 0;
         while j < self.running.len() {
             if self.running[j].is_done() {
@@ -232,23 +356,37 @@ impl Scheduler {
             }
         }
         if let Some(gov) = self.governor.as_mut() {
-            // Decode-phase wall time only: under continuous batching the
-            // batched step duration *is* TPOT; admission/prefill work
-            // must not skew the SLO tracker.
-            gov.observe_step(decode_secs, produced);
+            // Only the decode *share* of the mixed step feeds the SLO
+            // tracker: under continuous batching the decode share ≙ TPOT
+            // for the batch; co-scheduled prefill chunks must not skew it
+            // (their cost is bounded by the per-step token budget and
+            // reported via EngineStats::t_prefill instead).
+            gov.observe_step(self.engine.last_step_timing().decode, produced);
         }
         produced
     }
 
+    /// Terminally refuse service: a fresh prompt the admission policy can
+    /// never hold, or a preempted request whose folded prompt+output
+    /// sequence outgrew the whole pool (unservable by any schedule — the
+    /// report's `preemptions` field distinguishes the two).
+    fn reject(&mut self, mut req: Request, now: f64) {
+        req.state = RequestState::Rejected;
+        req.finished_at = Some(now);
+        self.finished.push(req);
+    }
+
     /// Recompute-style preemption: fold the generated tokens back into
     /// the prompt and push the request to the queue head (its pages must
-    /// already be released).
+    /// already be released). Also used for prefilling requests evicted
+    /// mid-prompt — their whole prompt re-prefills on re-admission.
     fn requeue_preempted(&mut self, mut req: Request) {
         req.state = RequestState::Preempted;
         req.preemptions += 1;
         req.prompt.extend_from_slice(&req.output);
         req.output.clear();
         req.first_token_at = None;
+        req.admitted_at = None;
         self.queue.push_front(req);
     }
 
@@ -263,7 +401,7 @@ impl Scheduler {
     pub fn run_to_completion(&mut self) -> ServingReport {
         let t0 = Instant::now();
         let mut guard = 0u64;
-        while !self.queue.is_empty() || !self.running.is_empty() {
+        while !self.queue.is_empty() || !self.running.is_empty() || !self.prefilling.is_empty() {
             let now = t0.elapsed().as_secs_f64();
             self.step(now);
             guard += 1;
@@ -278,9 +416,11 @@ impl Scheduler {
                 prompt_len: r.prompt.len(),
                 output_len: r.output.len(),
                 arrival: r.arrival,
+                admitted_at: r.admitted_at.unwrap_or(r.arrival),
                 first_token_at: r.first_token_at.unwrap_or(r.arrival),
                 finished_at: r.finished_at.unwrap_or(duration),
                 preemptions: r.preemptions,
+                rejected: r.state == RequestState::Rejected,
             })
             .collect();
         let governor = self.governor.as_mut().map(|g| g.take_trace()).unwrap_or_default();
@@ -296,13 +436,25 @@ impl Scheduler {
     /// flight, so this reports counters rather than a final report).
     pub fn live_stats_json(&self) -> Json {
         let s = &self.engine.stats;
+        let rejected = self
+            .finished
+            .iter()
+            .filter(|r| r.state == RequestState::Rejected)
+            .count();
         let mut kv: Vec<(&str, Json)> = vec![
             ("pending", Json::Num(self.queue.len() as f64)),
+            ("prefilling", Json::Num(self.prefilling.len() as f64)),
             ("running", Json::Num(self.running.len() as f64)),
-            ("finished", Json::Num(self.finished.len() as f64)),
+            // Served to completion; refusals are counted separately so
+            // the two fields never overlap.
+            ("finished", Json::Num((self.finished.len() - rejected) as f64)),
+            ("rejected", Json::Num(rejected as f64)),
             ("threads", Json::Num(self.engine.threads() as f64)),
+            ("prefill_chunk", Json::Num(self.engine.prefill_chunk() as f64)),
             ("steps", Json::Num(s.steps as f64)),
             ("prefill_steps", Json::Num(s.prefill_steps as f64)),
+            ("prefill_chunks", Json::Num(s.prefill_chunks as f64)),
+            ("t_prefill_s", Json::Num(s.t_prefill)),
             ("avg_candidates", Json::Num(s.avg_candidates())),
             ("avg_kept", Json::Num(s.avg_kept())),
             ("prune_ratio", Json::Num(s.prune_ratio())),
@@ -437,7 +589,8 @@ mod tests {
     #[test]
     fn concurrent_requests_progress_through_step_batch() {
         // Every running request must gain exactly one token per scheduler
-        // step (the batched decode advances the whole set at once).
+        // step (the batched decode advances the whole set at once); new
+        // admissions prefill across steps in chunks first.
         let mut s = sched(1 << 16, SparseConfig::twilight(SelectorKind::Quest, 0.9));
         let mut r = Rng::new(9);
         for i in 0..4 {
@@ -446,19 +599,24 @@ mod tests {
             req.stop_token = None;
             s.submit(req);
         }
-        // Step 1 admits (prefill samples one token each) and decodes the
-        // admitted set once.
-        let produced = s.step(0.0);
-        let running = s.running();
-        assert!(running >= 2, "expected concurrent decodes, got {running}");
-        assert_eq!(produced, running, "each running request gains one token per step");
+        // Chunked admission: all four requests move through Prefilling
+        // (possibly over several steps, depending on the chunk span) and
+        // into the running set.
+        let mut guard = 0;
+        while s.running() < 4 {
+            s.step(0.0);
+            guard += 1;
+            assert!(guard < 1 << 12, "admission never completed");
+        }
+        assert_eq!(s.prefilling(), 0);
         let decode_steps_before = s.engine.stats.steps;
-        let produced2 = s.step(0.0);
-        assert_eq!(produced2, s.running());
+        let produced = s.step(0.0);
+        assert_eq!(produced, s.running(), "each running request gains one token per step");
         // One batched engine step per scheduler step, regardless of batch size.
         assert_eq!(s.engine.stats.steps, decode_steps_before + 1);
         let rep = s.run_to_completion();
         assert_eq!(rep.requests.len(), 4);
+        assert_eq!(rep.rejected(), 0);
         assert_eq!(s.engine.num_seqs(), 0);
     }
 

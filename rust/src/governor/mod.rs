@@ -70,6 +70,19 @@ impl BudgetDirective {
     /// must never be able to disable sparse attention wholesale).
     pub const DENSE_BELOW_MAX: usize = 4096;
 
+    /// Prefill-chunk divisor implied by the pressure ladder: level 2
+    /// halves the chunk span, level 3 quarters it — shrinking the
+    /// per-step admission work (and the pages a chunk claims) *before*
+    /// the scheduler freezes admission outright. Levels 0–1 leave the
+    /// chunk alone (p tightening is cheaper to give up first).
+    pub fn chunk_divisor(&self) -> usize {
+        match self.degrade_level {
+            0 | 1 => 1,
+            2 => 2,
+            _ => 4,
+        }
+    }
+
     /// Clamp every field into its safe range. Applied to every policy
     /// output before it reaches the engine, so a buggy policy can
     /// degrade quality but never disable attention entirely.
@@ -315,6 +328,15 @@ mod tests {
         .clamped();
         assert_eq!(nan.p_scale, 1.0);
         assert_eq!(nan.budget_scale, 1.0);
+    }
+
+    #[test]
+    fn chunk_divisor_follows_ladder() {
+        let at = |lvl: u8| BudgetDirective { degrade_level: lvl, ..BudgetDirective::NEUTRAL };
+        assert_eq!(at(0).chunk_divisor(), 1);
+        assert_eq!(at(1).chunk_divisor(), 1);
+        assert_eq!(at(2).chunk_divisor(), 2);
+        assert_eq!(at(3).chunk_divisor(), 4);
     }
 
     #[test]

@@ -9,10 +9,18 @@
 //! |-------|-------------------|-----------------------------------------|
 //! | 0     | comfortable       | none                                    |
 //! | 1     | `< tighten_below` | tighten p (prune harder, steps faster)  |
-//! | 2     | `< shrink_below`  | also shrink the stage-1 budget B0       |
+//! | 2     | `< shrink_below`  | also shrink the stage-1 budget B0 and   |
+//! |       |                   | halve the prefill chunk span            |
 //! | 3     | `< dense_guard`   | also raise `dense_below` so short       |
-//! |       |                   | contexts skip selection entirely, and   |
-//! |       |                   | the scheduler freezes admission         |
+//! |       |                   | contexts skip selection entirely,       |
+//! |       |                   | quarter the prefill chunk, and the      |
+//! |       |                   | scheduler freezes *new* admission       |
+//! |       |                   | (in-flight prefills keep draining)      |
+//!
+//! The chunk shrink (levels 2–3) is carried by the `degrade_level` field
+//! itself — [`BudgetDirective::chunk_divisor`] maps it to a span divisor
+//! the scheduler applies — so admission work and the pages a chunk
+//! claims contract before the freeze cliff.
 //!
 //! Raising `dense_below` at level 3 is an accuracy guard, not a speed
 //! knob: with p and B0 both cut, short contexts would pay the full

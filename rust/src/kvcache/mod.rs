@@ -12,6 +12,19 @@
 //!   "extra INT4 quantized K cache" of §4.2, costing 1/8 extra memory;
 //! * per-(page, head) elementwise min/max of K is kept for the Quest
 //!   selector's upper-bound score.
+//!
+//! **Sealing contract.** A page's mirror block is built exactly once, when
+//! the page *seals* (its last slot is appended) — the paper quantizes at
+//! prefill and on page close, and re-quantizing a partially-filled page
+//! on every append both wastes bandwidth and makes the codes of earlier
+//! slots depend on later arrivals (the per-block scale/zero shift).
+//! Consumers treat the unsealed tail uniformly: the pruner's SpGEMV
+//! scores in-flight rows exactly from fp32 K, and Quest scores the
+//! partial tail page from exact rows instead of its (still-moving)
+//! min/max. This is what makes chunked prefill chunk-size invariant: a
+//! query inside a chunk sees only sealed (content-final) metadata plus
+//! exact reads of the visible prefix, so its result cannot depend on how
+//! many later tokens the chunk appended before it attended.
 
 pub mod offload;
 
@@ -234,14 +247,17 @@ impl PagedKvCache {
         }
         self.page_fill[page as usize] = (slot + 1) as u32;
         seq.len += 1;
-        // Re-quantize the page's mirror. Cost is amortizable (the paper
-        // quantizes at prefill and on page close); we refresh every append
-        // for exactness and count the traffic in sim::cost instead.
-        self.requantize_page(page);
+        // Seal: quantize the mirror exactly once, when the page fills
+        // (the paper quantizes on page close). Until then the page has no
+        // mirror block and consumers score its rows exactly from fp32 K —
+        // see the sealing contract in the module header.
+        if slot + 1 == c.page_size {
+            self.requantize_page(page);
+        }
         Ok(())
     }
 
-    /// Rebuild the mirror blocks for `page` from current contents.
+    /// Build the mirror blocks for `page` from its (final) contents.
     fn requantize_page(&mut self, page: PageId) {
         let c = self.cfg.clone();
         let fill = self.page_fill[page as usize] as usize;
@@ -254,11 +270,13 @@ impl PagedKvCache {
     }
 
     /// Estimated score `q · K̂[tok]` from the mirror cache for a logical
-    /// token index. Fused dequant-dot on the packed codes.
+    /// token index. Fused dequant-dot on the packed codes. The token's
+    /// page must be sealed (see the sealing contract); in-flight rows are
+    /// scored exactly via [`PagedKvCache::exact_score`] instead.
     pub fn mirror_score(&self, seq: &SeqCache, head: usize, q: &[f32], tok: usize) -> f32 {
         let c = &self.cfg;
         let (page, slot) = seq.locate(tok, c.page_size);
-        let block = self.mirror_at(page, head).expect("mirror missing");
+        let block = self.mirror_at(page, head).expect("mirror missing (page not sealed)");
         // Slice the block logically: codes for `slot` start at slot*d.
         quant_dot_row(q, block, slot * c.head_dim, c.head_dim)
     }

@@ -3,11 +3,17 @@
 //! ```text
 //! twilight serve   --model retrieval --addr 127.0.0.1:7070 --selector quest --p 0.95
 //!                  [--governor static|aimd|mass --slo-tpot-ms 25]
+//!                  [--prefill-chunk 64 --prefill-budget 512]
 //! twilight eval    --suite longbench --ctx 2048 --n 5
 //! twilight ppl     --budgets 16,32,64,128,256 --selector quest
 //! twilight bench   --ctx 4096 --steps 20            (quick latency check)
 //! twilight inspect --artifacts artifacts            (PJRT graphs)
 //! ```
+//!
+//! `--prefill-chunk` sets the chunked-prefill span (also
+//! `TWILIGHT_PREFILL_CHUNK`; bit-exact for any value — it only shapes
+//! latency), `--prefill-budget` the per-step prompt-token budget shared
+//! by all co-scheduled chunks of a mixed step.
 //!
 //! `--governor` attaches the adaptive budget governor (DESIGN.md §8):
 //! it closes the loop on p / B0 against prune-mass telemetry, the
@@ -81,18 +87,23 @@ fn cmd_serve(a: &Args) {
     let capacity = a.usize_or("capacity", 1 << 20);
     let mut engine = Engine::new(model.clone(), cfg.clone(), capacity);
     engine.set_threads(a.usize_or("threads", engine.threads()));
+    engine.set_prefill_chunk(a.usize_or("prefill-chunk", engine.prefill_chunk()));
     twilight::log_info!(
-        "model={} ({} params), pipeline={}, capacity={} tokens, threads={}",
+        "model={} ({} params), pipeline={}, capacity={} tokens, threads={}, prefill_chunk={}",
         model.cfg.name,
         model.param_count(),
         cfg.label(),
         capacity,
-        engine.threads()
+        engine.threads(),
+        engine.prefill_chunk()
     );
-    let mut sched = Scheduler::new(
-        engine,
-        SchedulerConfig { max_batch: a.usize_or("max-batch", 64), ..Default::default() },
-    );
+    let sched_cfg = SchedulerConfig {
+        max_batch: a.usize_or("max-batch", 64),
+        max_prefill_tokens_per_step: a
+            .usize_or("prefill-budget", SchedulerConfig::default().max_prefill_tokens_per_step),
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(engine, sched_cfg);
     let gov_name = a.str_or("governor", "none");
     if gov_name != "none" {
         let slo_ms = a.f64_or("slo-tpot-ms", 0.0);
@@ -200,6 +211,7 @@ fn cmd_bench(a: &Args) {
     ] {
         let mut e = Engine::new(model.clone(), cfg, ctx * 2 + 128);
         e.set_threads(a.usize_or("threads", e.threads()));
+        e.set_prefill_chunk(a.usize_or("prefill-chunk", e.prefill_chunk()));
         let _ = e.prefill(0, &g.prompt).unwrap();
         e.reset_stats();
         let t0 = std::time::Instant::now();

@@ -128,26 +128,57 @@ pub trait LayerBackend {
     fn attend(&mut self, layer: usize, qs: &[f32]) -> Vec<f32>;
 }
 
-/// The pluggable attention/cache backend for a whole *batch* of
-/// sequences, each advancing one token. [`Model::decode_batch`] drives
-/// every layer through three phases: (a) per-sequence QKV projection +
-/// [`BatchBackend::append_kv`] (serial — appends mutate the shared page
-/// pools), (b) one [`BatchBackend::attend_batch`] call covering the whole
-/// batch (the serving engine flattens it into (sequence × kv-head) work
-/// items and drains them on its persistent worker pool — the backend
-/// borrows the pool, so resident workers are reused across all layers of
-/// all steps), then (c) per-sequence rest-of-layer.
+/// One item of a batched *mixed* step: `toks` advances a sequence from
+/// position `pos`. A single token is a decode step; a longer span is a
+/// prefill **chunk**, whose tokens run through every phase in one pass
+/// (the backend attends each chunk query causally over its own prefix).
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRef<'a> {
+    pub toks: &'a [u32],
+    /// Sequence position of `toks[0]`.
+    pub pos: usize,
+    /// Whether the caller will read this item's logits. Decode items and
+    /// final prompt chunks set it; a *non-final* prefill chunk clears it
+    /// and skips the (full-vocab) unembedding entirely — its returned
+    /// logits are all-zero.
+    pub need_logits: bool,
+}
+
+impl SpanRef<'_> {
+    pub fn len(&self) -> usize {
+        self.toks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.toks.is_empty()
+    }
+}
+
+/// The pluggable attention/cache backend for a whole *mixed batch*:
+/// decode items and prefill chunks, each a [`SpanRef`].
+/// [`Model::decode_batch`] drives every layer through three phases:
+/// (a) per-token QKV projection + [`BatchBackend::append_kv`] (serial,
+/// item-major then chunk-offset-major — appends mutate the shared page
+/// pools), (b) one [`BatchBackend::attend_batch`] call covering every
+/// query token of the batch (the serving engine flattens it into
+/// (item × kv-head) work items — a chunk item is multi-query, attending
+/// each of its tokens causally over the visible prefix — and drains them
+/// on its persistent worker pool), then (c) per-token rest-of-layer.
 pub trait BatchBackend {
-    /// Phase (a): store sequence `idx`'s new K/V for `layer`.
+    /// Phase (a): store item `idx`'s next K/V row for `layer`. Called
+    /// once per token of the item's span, in chunk order.
     fn append_kv(&mut self, layer: usize, idx: usize, k: &[f32], v: &[f32]);
 
-    /// Phase (b): attention for every sequence of the batch at `layer`.
-    /// `qs` and `out` are `[batch * n_heads * head_dim]`, sequence-major;
-    /// the backend must fully overwrite `out`.
+    /// Phase (b): attention for every query token of the batch at
+    /// `layer`. `qs` and `out` are `[total_tokens * n_heads * head_dim]`
+    /// where `total_tokens` sums the span lengths, item-major then
+    /// chunk-offset-major; the backend must fully overwrite `out`.
+    /// Span boundaries are whatever the backend was constructed with —
+    /// the forward pass does not re-communicate them.
     fn attend_batch(&mut self, layer: usize, qs: &[f32], out: &mut [f32]);
 
-    /// True when sequence `idx` has failed (e.g. out of cache pages); the
-    /// forward pass skips its per-sequence compute from then on.
+    /// True when item `idx` has failed (e.g. out of cache pages); the
+    /// forward pass skips its per-token compute from then on.
     fn is_failed(&self, _idx: usize) -> bool {
         false
     }
@@ -210,96 +241,128 @@ impl Model {
     /// all layers (attention via `backend`), return logits `[vocab]`.
     /// A batch-of-one view over [`Model::decode_batch`].
     pub fn decode_step<B: LayerBackend>(&self, tok: u32, pos: usize, backend: &mut B) -> Vec<f32> {
-        self.decode_batch(&[(tok, pos)], &mut SingleSeq(backend)).pop().unwrap()
+        let toks = [tok];
+        self.decode_batch(&[SpanRef { toks: &toks, pos, need_logits: true }], &mut SingleSeq(backend))
+            .pop()
+            .unwrap()
     }
 
-    /// One batched decode step: every `(tok, pos)` entry advances one
-    /// sequence by one token. Each layer runs as three phases (see
-    /// [`BatchBackend`]); per-sequence compute is strictly sequence-major
-    /// within a phase, so a batch of one is bit-identical to the
-    /// historical per-sequence forward pass. Returns logits `[vocab]` per
-    /// sequence (all-zero for sequences the backend marks failed).
+    /// One batched **mixed** step: every [`SpanRef`] advances one sequence
+    /// by its span — one token for decode items, a whole prefill chunk for
+    /// admission items. Each layer runs as three phases (see
+    /// [`BatchBackend`]); per-token compute is strictly item-major then
+    /// chunk-offset-major within a phase, so a batch of single-token items
+    /// is bit-identical to the historical forward pass, and a chunk is
+    /// bit-identical to pushing its tokens through one at a time (a
+    /// token's layer-`l` K/V depends only on its own layer-`l-1` output,
+    /// which depends only on earlier tokens — layer-major evaluation
+    /// computes the same values in the same per-value operation order).
+    /// Returns logits `[vocab]` for the *last* token of each span
+    /// (all-zero for items the backend marks failed and for items with
+    /// `need_logits == false`); intermediate chunk tokens — and whole
+    /// non-final chunks — skip the unembedding entirely, so prompt
+    /// processing no longer pays `span` full-vocab projections.
     pub fn decode_batch<B: BatchBackend>(
         &self,
-        toks: &[(u32, usize)],
+        spans: &[SpanRef<'_>],
         backend: &mut B,
     ) -> Vec<Vec<f32>> {
         let c = &self.cfg;
-        let nb = toks.len();
         let qd = c.q_dim();
-        let mut xs: Vec<Vec<f32>> = toks.iter().map(|&(tok, _)| self.embed_token(tok)).collect();
+        // Flatten the spans: token-level residual streams, item-major.
+        let mut offs = Vec::with_capacity(spans.len());
+        let mut xs: Vec<Vec<f32>> = Vec::new();
+        for s in spans {
+            offs.push(xs.len());
+            for &tok in s.toks {
+                xs.push(self.embed_token(tok));
+            }
+        }
+        let total = xs.len();
         let mut h = vec![0.0; c.d_model];
         let mut k = vec![0.0; c.kv_dim()];
         let mut v = vec![0.0; c.kv_dim()];
         let mut ff = vec![0.0; c.d_ff];
         let mut ff_out = vec![0.0; c.d_model];
         let mut attn_res = vec![0.0; c.d_model];
-        let mut qs = vec![0.0; nb * qd];
-        let mut attn = vec![0.0; nb * qd];
+        let mut qs = vec![0.0; total * qd];
+        let mut attn = vec![0.0; total * qd];
         for (li, lw) in self.layers.iter().enumerate() {
-            // Phase (a): norms + QKV + RoPE + KV append, serial per
-            // sequence (appends mutate the shared page pools).
-            for (i, &(_, pos)) in toks.iter().enumerate() {
-                if backend.is_failed(i) {
-                    continue;
-                }
-                if c.use_norm {
-                    rmsnorm(&xs[i], &lw.ln1, c.norm_eps, &mut h);
-                } else {
-                    h.copy_from_slice(&xs[i]);
-                }
-                let q = &mut qs[i * qd..(i + 1) * qd];
-                gemv(&lw.wq, &h, None, q);
-                gemv(&lw.wk, &h, None, &mut k);
-                gemv(&lw.wv, &h, None, &mut v);
-                if c.use_rope {
-                    for hh in 0..c.n_heads {
-                        rope_inplace(
-                            &mut q[hh * c.head_dim..(hh + 1) * c.head_dim],
-                            pos,
-                            c.rope_theta,
-                        );
+            // Phase (a): norms + QKV + RoPE + KV append, serial per token
+            // (appends mutate the shared page pools).
+            for (i, s) in spans.iter().enumerate() {
+                for cidx in 0..s.toks.len() {
+                    if backend.is_failed(i) {
+                        break; // an append mid-span failed: skip the rest
                     }
-                    for hh in 0..c.n_kv_heads {
-                        rope_inplace(
-                            &mut k[hh * c.head_dim..(hh + 1) * c.head_dim],
-                            pos,
-                            c.rope_theta,
-                        );
+                    let t = offs[i] + cidx;
+                    let pos = s.pos + cidx;
+                    if c.use_norm {
+                        rmsnorm(&xs[t], &lw.ln1, c.norm_eps, &mut h);
+                    } else {
+                        h.copy_from_slice(&xs[t]);
                     }
+                    let q = &mut qs[t * qd..(t + 1) * qd];
+                    gemv(&lw.wq, &h, None, q);
+                    gemv(&lw.wk, &h, None, &mut k);
+                    gemv(&lw.wv, &h, None, &mut v);
+                    if c.use_rope {
+                        for hh in 0..c.n_heads {
+                            rope_inplace(
+                                &mut q[hh * c.head_dim..(hh + 1) * c.head_dim],
+                                pos,
+                                c.rope_theta,
+                            );
+                        }
+                        for hh in 0..c.n_kv_heads {
+                            rope_inplace(
+                                &mut k[hh * c.head_dim..(hh + 1) * c.head_dim],
+                                pos,
+                                c.rope_theta,
+                            );
+                        }
+                    }
+                    backend.append_kv(li, i, &k, &v);
                 }
-                backend.append_kv(li, i, &k, &v);
             }
-            // Phase (b): attention for the whole batch at once.
+            // Phase (b): attention for every query token at once.
             backend.attend_batch(li, &qs, &mut attn);
-            // Phase (c): output projection + MLP, serial per sequence.
-            for (i, x) in xs.iter_mut().enumerate() {
+            // Phase (c): output projection + MLP, serial per token.
+            for (i, s) in spans.iter().enumerate() {
                 if backend.is_failed(i) {
                     continue;
                 }
-                gemv(&lw.wo, &attn[i * qd..(i + 1) * qd], None, &mut attn_res);
-                for (xi, a) in x.iter_mut().zip(&attn_res) {
-                    *xi += a;
-                }
-                if c.use_norm {
-                    rmsnorm(x, &lw.ln2, c.norm_eps, &mut h);
-                } else {
-                    h.copy_from_slice(x);
-                }
-                gemv(&lw.w1, &h, None, &mut ff);
-                for f in ff.iter_mut() {
-                    *f = gelu(*f);
-                }
-                gemv(&lw.w2, &ff, None, &mut ff_out);
-                for (xi, a) in x.iter_mut().zip(&ff_out) {
-                    *xi += a;
+                for cidx in 0..s.toks.len() {
+                    let t = offs[i] + cidx;
+                    let x = &mut xs[t];
+                    gemv(&lw.wo, &attn[t * qd..(t + 1) * qd], None, &mut attn_res);
+                    for (xi, a) in x.iter_mut().zip(&attn_res) {
+                        *xi += a;
+                    }
+                    if c.use_norm {
+                        rmsnorm(x, &lw.ln2, c.norm_eps, &mut h);
+                    } else {
+                        h.copy_from_slice(x);
+                    }
+                    gemv(&lw.w1, &h, None, &mut ff);
+                    for f in ff.iter_mut() {
+                        *f = gelu(*f);
+                    }
+                    gemv(&lw.w2, &ff, None, &mut ff_out);
+                    for (xi, a) in x.iter_mut().zip(&ff_out) {
+                        *xi += a;
+                    }
                 }
             }
         }
-        let mut out = Vec::with_capacity(nb);
-        for (i, x) in xs.iter().enumerate() {
+        // Unembed the last token of each span — and only for items whose
+        // logits the caller will actually read (non-final prefill chunks
+        // skip the full-vocab projection entirely).
+        let mut out = Vec::with_capacity(spans.len());
+        for (i, s) in spans.iter().enumerate() {
             let mut logits = vec![0.0; c.vocab_size];
-            if !backend.is_failed(i) {
+            if s.need_logits && !backend.is_failed(i) {
+                let x = &xs[offs[i] + s.toks.len() - 1];
                 if c.use_norm {
                     rmsnorm(x, &self.final_norm, c.norm_eps, &mut h);
                 } else {
@@ -310,6 +373,36 @@ impl Model {
             out.push(logits);
         }
         out
+    }
+
+    /// Build a randomly-initialized model — the substrate for unit
+    /// tests, integration tests, and benches that need a *multi-layer*
+    /// forward pass without artifacts (real weights come from
+    /// [`weights::load_model`]).
+    pub fn random(cfg: &ModelConfig, seed: u64) -> Model {
+        let mut r = crate::util::rng::Rng::new(seed);
+        let d = cfg.d_model;
+        let mut vecf =
+            |n: usize, std: f32| -> Vec<f32> { (0..n).map(|_| r.normal_f32(0.0, std)).collect() };
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                wq: vecf(cfg.q_dim() * d, 0.08),
+                wk: vecf(cfg.kv_dim() * d, 0.08),
+                wv: vecf(cfg.kv_dim() * d, 0.08),
+                wo: vecf(d * cfg.q_dim(), 0.08),
+                w1: vecf(cfg.d_ff * d, 0.08),
+                w2: vecf(d * cfg.d_ff, 0.08),
+                ln1: vec![1.0; d],
+                ln2: vec![1.0; d],
+            })
+            .collect();
+        Model {
+            cfg: cfg.clone(),
+            embed: vecf(cfg.vocab_size * d, 0.5),
+            lm_head: vecf(cfg.vocab_size * d, 0.1),
+            final_norm: vec![1.0; d],
+            layers,
+        }
     }
 
     /// Approximate parameter count.
@@ -388,7 +481,6 @@ impl LayerBackend for DenseBackend {
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
-    use crate::util::rng::Rng;
 
     pub fn tiny_config() -> ModelConfig {
         ModelConfig {
@@ -409,30 +501,7 @@ pub(crate) mod testutil {
     }
 
     pub fn random_model(cfg: &ModelConfig, seed: u64) -> Model {
-        let mut r = Rng::new(seed);
-        let d = cfg.d_model;
-        let mut vecf = |n: usize, std: f32| -> Vec<f32> {
-            (0..n).map(|_| r.normal_f32(0.0, std)).collect()
-        };
-        let layers = (0..cfg.n_layers)
-            .map(|_| LayerWeights {
-                wq: vecf(cfg.q_dim() * d, 0.08),
-                wk: vecf(cfg.kv_dim() * d, 0.08),
-                wv: vecf(cfg.kv_dim() * d, 0.08),
-                wo: vecf(d * cfg.q_dim(), 0.08),
-                w1: vecf(cfg.d_ff * d, 0.08),
-                w2: vecf(d * cfg.d_ff, 0.08),
-                ln1: vec![1.0; d],
-                ln2: vec![1.0; d],
-            })
-            .collect();
-        Model {
-            cfg: cfg.clone(),
-            embed: vecf(cfg.vocab_size * d, 0.5),
-            lm_head: vecf(cfg.vocab_size * d, 0.1),
-            final_norm: vec![1.0; d],
-            layers,
-        }
+        Model::random(cfg, seed)
     }
 }
 
@@ -469,25 +538,63 @@ mod tests {
         assert_eq!(run(), run());
     }
 
+    /// A dense per-item test backend whose chunk queries attend causally
+    /// over their own prefix — the reference semantics the serving engine
+    /// implements with views over the paged cache.
+    struct DenseBatch {
+        seqs: Vec<DenseBackend>,
+        /// Span length per item for the current step (set before each
+        /// `decode_batch` call).
+        spans: Vec<usize>,
+    }
+
+    impl BatchBackend for DenseBatch {
+        fn append_kv(&mut self, layer: usize, idx: usize, k: &[f32], v: &[f32]) {
+            self.seqs[idx].append_kv(layer, k, v);
+        }
+        fn attend_batch(&mut self, layer: usize, qs: &[f32], out: &mut [f32]) {
+            let total: usize = self.spans.iter().sum();
+            let qd = qs.len() / total;
+            let c = self.seqs[0].cfg.clone();
+            let d = c.head_dim;
+            let group = c.group();
+            let kvd = c.kv_dim();
+            let mut t = 0;
+            for (i, &span) in self.spans.iter().enumerate() {
+                let b = &self.seqs[i];
+                let n_after = b.k[layer].len() / kvd;
+                for cidx in 0..span {
+                    // Causal: query `cidx` sees its own prefix only.
+                    let limit = n_after - span + cidx + 1;
+                    for hh in 0..c.n_heads {
+                        let kvh = hh / group;
+                        let mut kh = vec![0.0; limit * d];
+                        let mut vh = vec![0.0; limit * d];
+                        for tok in 0..limit {
+                            kh[tok * d..(tok + 1) * d].copy_from_slice(
+                                &b.k[layer][tok * kvd + kvh * d..tok * kvd + (kvh + 1) * d],
+                            );
+                            vh[tok * d..(tok + 1) * d].copy_from_slice(
+                                &b.v[layer][tok * kvd + kvh * d..tok * kvd + (kvh + 1) * d],
+                            );
+                        }
+                        crate::attention::full::contiguous_full(
+                            &qs[t * qd + hh * d..t * qd + (hh + 1) * d],
+                            &kh,
+                            &vh,
+                            &mut out[t * qd + hh * d..t * qd + (hh + 1) * d],
+                        );
+                    }
+                    t += 1;
+                }
+            }
+        }
+    }
+
     #[test]
     fn decode_batch_matches_per_sequence_decode() {
         // A batch of independent dense sequences must produce bit-identical
         // logits to the historical one-sequence-at-a-time forward pass.
-        struct DenseBatch {
-            seqs: Vec<DenseBackend>,
-        }
-        impl BatchBackend for DenseBatch {
-            fn append_kv(&mut self, layer: usize, idx: usize, k: &[f32], v: &[f32]) {
-                self.seqs[idx].append_kv(layer, k, v);
-            }
-            fn attend_batch(&mut self, layer: usize, qs: &[f32], out: &mut [f32]) {
-                let qd = qs.len() / self.seqs.len();
-                for (i, b) in self.seqs.iter_mut().enumerate() {
-                    out[i * qd..(i + 1) * qd]
-                        .copy_from_slice(&b.attend(layer, &qs[i * qd..(i + 1) * qd]));
-                }
-            }
-        }
         let cfg = tiny_config();
         let m = random_model(&cfg, 9);
         let streams: [&[u32]; 2] = [&[3, 7, 1, 0], &[15, 2, 2, 8]];
@@ -502,13 +609,58 @@ mod tests {
             serial.push(last);
         }
         // Batched: both sequences advance in lock-step.
-        let mut bb = DenseBatch { seqs: vec![DenseBackend::new(&cfg), DenseBackend::new(&cfg)] };
+        let mut bb = DenseBatch {
+            seqs: vec![DenseBackend::new(&cfg), DenseBackend::new(&cfg)],
+            spans: vec![1, 1],
+        };
         let mut batched = Vec::new();
         for pos in 0..streams[0].len() {
-            batched = m.decode_batch(&[(streams[0][pos], pos), (streams[1][pos], pos)], &mut bb);
+            batched = m.decode_batch(
+                &[
+                    SpanRef { toks: &streams[0][pos..pos + 1], pos, need_logits: true },
+                    SpanRef { toks: &streams[1][pos..pos + 1], pos, need_logits: true },
+                ],
+                &mut bb,
+            );
         }
         assert_eq!(serial[0], batched[0]);
         assert_eq!(serial[1], batched[1]);
+    }
+
+    #[test]
+    fn chunked_span_matches_per_token_decode() {
+        // Pushing a prompt through as one multi-token chunk must produce
+        // the same final logits as token-at-a-time decode (the layer-major
+        // evaluation computes identical values; attention is causal).
+        let cfg = tiny_config();
+        let m = random_model(&cfg, 11);
+        let toks: Vec<u32> = vec![3, 7, 1, 0, 15, 2, 9, 4, 12];
+        let mut serial_b = DenseBackend::new(&cfg);
+        let mut serial = Vec::new();
+        for (pos, &tok) in toks.iter().enumerate() {
+            serial = m.decode_step(tok, pos, &mut serial_b);
+        }
+        for split in [1usize, 4, toks.len()] {
+            let mut bb = DenseBatch { seqs: vec![DenseBackend::new(&cfg)], spans: vec![] };
+            let mut last = Vec::new();
+            let mut i = 0;
+            while i < toks.len() {
+                let end = (i + split).min(toks.len());
+                bb.spans = vec![end - i];
+                last = m
+                    .decode_batch(
+                        &[SpanRef { toks: &toks[i..end], pos: i, need_logits: end == toks.len() }],
+                        &mut bb,
+                    )
+                    .pop()
+                    .unwrap();
+                i = end;
+            }
+            // Dense attention sums in a different order (contiguous vs the
+            // chunk path both use contiguous_full here, so exact equality
+            // holds).
+            assert_eq!(serial, last, "chunk span {split} diverged");
+        }
     }
 
     #[test]

@@ -7,9 +7,18 @@
 //! budget is covered; all tokens of a chosen page are candidates (16
 //! tokens/page granularity — precisely the layout constraint that makes
 //! naive top-p-in-Quest impossible, motivating Twilight's hierarchy).
+//!
+//! The visibly-partial tail page is scored from its exact K rows (max
+//! logit over the visible slots — the tightest possible bound) rather
+//! than the page's min/max: the min/max keeps moving while the page
+//! fills, and during chunked prefill it already includes tokens *behind*
+//! the querying position. Exact tail scoring keeps the selection a pure
+//! function of the visible prefix, so candidates are identical for any
+//! prefill chunk size (see the sealing contract in `kvcache`).
 
 use super::TokenSelector;
 use crate::kvcache::{PagedKvCache, SeqCache};
+use crate::tensor::dot;
 
 pub struct QuestSelector {
     /// Scratch: page scores.
@@ -61,6 +70,22 @@ impl TokenSelector for QuestSelector {
         self.scores.clear();
         self.scores.resize(npages, f32::NEG_INFINITY);
         for (pi, &page) in seq.pages.iter().enumerate() {
+            let fill = if pi + 1 == npages { seq.len - pi * ps } else { ps };
+            if fill < ps {
+                // Unsealed tail: its min/max may already cover tokens past
+                // this view's visible prefix — score the visible rows
+                // exactly (max logit = the tightest upper bound).
+                for slot in 0..fill {
+                    let k = cache.k_at(page, kv_head, slot);
+                    for g in 0..group {
+                        let s = dot(&qs[g * d..(g + 1) * d], k);
+                        if s > self.scores[pi] {
+                            self.scores[pi] = s;
+                        }
+                    }
+                }
+                continue;
+            }
             let (mn, mx) = cache.minmax_at(page, kv_head);
             // GQA: reduce by max over the group's query heads.
             for g in 0..group {

@@ -1,0 +1,317 @@
+//! Chunked-prefill correctness battery: the unified mixed step must make
+//! chunking *invisible* to the numerics —
+//!
+//! 1. prefill at spans 1 / 7 / 16 / 64 / monolithic produces bit-exact
+//!    logits and KV (witnessed through subsequent decode logits) at any
+//!    worker count, for dense and sparse pipelines, including stateful
+//!    (observing) selectors;
+//! 2. a mixed step (running decodes + a co-scheduled prefill chunk)
+//!    leaves the decode items' logits bit-identical to a decode-only
+//!    step;
+//! 3. the scheduler's chunked admission completes long prompts across
+//!    steps, and prompt-size-aware admission rejects prompts the pool
+//!    can never hold (counted in the serving report).
+
+use std::sync::Arc;
+use twilight::coordinator::engine::{DecodeBatch, Engine};
+use twilight::coordinator::request::Request;
+use twilight::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use twilight::coordinator::SparseConfig;
+use twilight::model::{Model, ModelConfig};
+use twilight::selector::SelectorKind;
+use twilight::util::rng::Rng;
+use twilight::workload::{gen_niah, RetrievalVocab};
+
+const V: RetrievalVocab = RetrievalVocab::DEFAULT;
+
+/// A small multi-layer random model: the single-layer retrieval model
+/// takes the O(n) embedding-KV fast path, which bypasses the chunk
+/// machinery this battery exists to pin.
+fn deep_model(seed: u64) -> Arc<Model> {
+    let cfg = ModelConfig {
+        name: "chunktest".into(),
+        vocab_size: 32,
+        d_model: 24,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        head_dim: 6,
+        d_ff: 32,
+        use_rope: true,
+        rope_theta: 10000.0,
+        use_norm: true,
+        norm_eps: 1e-5,
+        max_ctx: 512,
+    };
+    Arc::new(Model::random(&cfg, seed))
+}
+
+fn random_prompt(seed: u64, len: usize, vocab: usize) -> Vec<u32> {
+    let mut r = Rng::new(seed);
+    (0..len).map(|_| r.below(vocab) as u32).collect()
+}
+
+/// Telemetry fingerprint: everything the governor steers on, as exact
+/// bits (chunking must be invisible to a governed deployment too).
+#[derive(Debug, PartialEq)]
+struct Telemetry {
+    sparse_calls: u64,
+    kept_sum: u64,
+    candidates_sum: u64,
+    probes: u64,
+    mean_mass_bits: u64,
+    probe_recall_bits: u64,
+}
+
+/// Prefill with the given chunk span + 3 decode steps; returns every
+/// logits vector plus the telemetry fingerprint.
+fn run_spans(
+    model: &Arc<Model>,
+    cfg: &SparseConfig,
+    prompt: &[u32],
+    span: usize,
+    threads: usize,
+) -> (Vec<Vec<f32>>, Telemetry) {
+    let mut e = Engine::new(model.clone(), cfg.clone(), 4096);
+    e.set_threads(threads);
+    e.set_prefill_chunk(span);
+    let mut all = vec![e.prefill(0, prompt).unwrap()];
+    for _ in 0..3 {
+        all.push(e.decode(0, prompt[0]).unwrap());
+    }
+    let t = Telemetry {
+        sparse_calls: e.stats.sparse_calls,
+        kept_sum: e.stats.kept_sum,
+        candidates_sum: e.stats.candidates_sum,
+        probes: e.signals.probes(),
+        mean_mass_bits: e.signals.mean_mass().to_bits(),
+        probe_recall_bits: e.signals.probe_recall().to_bits(),
+    };
+    (all, t)
+}
+
+#[test]
+fn chunked_prefill_bit_exact_across_spans_dense() {
+    let model = deep_model(1);
+    let prompt = random_prompt(2, 100, 32);
+    let cfg = SparseConfig::dense();
+    let (reference, ..) = run_spans(&model, &cfg, &prompt, 1, 1);
+    for threads in [1usize, 4] {
+        for span in [1usize, 7, 16, 64, 1000] {
+            let (got, ..) = run_spans(&model, &cfg, &prompt, span, threads);
+            assert_eq!(
+                reference, got,
+                "dense logits diverged at span={span} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_bit_exact_across_spans_sparse() {
+    // The full Select-then-Prune pipeline, with the dense_below boundary
+    // crossing *inside* chunks (early sub-calls dense, later ones
+    // sparse) — the hardest invariance case: Quest page scores, the
+    // pruner's SpGEMV, and the kept sets must all be pure functions of
+    // each query's visible prefix.
+    let model = deep_model(3);
+    let prompt = random_prompt(4, 150, 32);
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+    cfg.skip_layers = 0;
+    cfg.dense_below = 8;
+    let (reference, telemetry) = run_spans(&model, &cfg, &prompt, 1, 1);
+    assert!(telemetry.sparse_calls > 0, "the battery must exercise the pruned path");
+    assert!(telemetry.probes > 0, "the battery must exercise the recall probe");
+    for threads in [1usize, 4, 8] {
+        for span in [1usize, 7, 16, 64, 1000] {
+            let (got, t2) = run_spans(&model, &cfg, &prompt, span, threads);
+            assert_eq!(
+                reference, got,
+                "sparse logits diverged at span={span} threads={threads}"
+            );
+            // Token-major call indexing + token-major telemetry merge:
+            // probe cadence and SignalHub contents — what a governor
+            // steers on — must be bit-identical too, not just the
+            // logits.
+            assert_eq!(telemetry, t2, "telemetry diverged at span={span} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_bit_exact_with_stateful_selector() {
+    // SnapKV observes the attention it computed and selects from that
+    // state: chunking must preserve the per-(seq, layer, kv-head) call
+    // order exactly (sub-calls run serially, in chunk order, on one
+    // worker) or the selector state — and then everything — drifts.
+    let model = deep_model(5);
+    let prompt = random_prompt(6, 120, 32);
+    let mut cfg = SparseConfig::twilight(SelectorKind::SnapKv, 0.9);
+    cfg.skip_layers = 0;
+    cfg.dense_below = 8;
+    let (reference, ..) = run_spans(&model, &cfg, &prompt, 1, 1);
+    for threads in [1usize, 4] {
+        for span in [1usize, 16, 33] {
+            let (got, ..) = run_spans(&model, &cfg, &prompt, span, threads);
+            assert_eq!(
+                reference, got,
+                "snapkv logits diverged at span={span} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mixed_step_leaves_decode_logits_unchanged() {
+    // Co-scheduling a prefill chunk with running decodes must not change
+    // the decode items' logits by a single bit: work items are
+    // independent and merged in flattened order.
+    let model = deep_model(7);
+    let p0 = random_prompt(8, 90, 32);
+    let p1 = random_prompt(9, 117, 32);
+    let p2 = random_prompt(10, 80, 32);
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+    cfg.skip_layers = 0;
+    cfg.dense_below = 8;
+    let mk = |threads: usize| {
+        let mut e = Engine::new(model.clone(), cfg.clone(), 4096);
+        e.set_threads(threads);
+        let _ = e.prefill(0, &p0).unwrap();
+        let _ = e.prefill(1, &p1).unwrap();
+        e
+    };
+    for threads in [1usize, 4] {
+        let mut a = mk(threads);
+        let decode_only = DecodeBatch::new(vec![(0, p0[0]), (1, p1[0])]);
+        let ra: Vec<Vec<f32>> =
+            a.step_batch(&decode_only).into_iter().map(|r| r.unwrap()).collect();
+        let mut b = mk(threads);
+        b.start_empty(2);
+        let mut mixed = DecodeBatch::new(vec![(0, p0[0]), (1, p1[0])]);
+        mixed.push_chunk(2, p2[..64].to_vec(), false);
+        let rb: Vec<Vec<f32>> = b
+            .step_batch(&mixed)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        assert_eq!(ra[0], rb[0], "decode 0 perturbed by a co-scheduled chunk (threads={threads})");
+        assert_eq!(ra[1], rb[1], "decode 1 perturbed by a co-scheduled chunk (threads={threads})");
+        assert_eq!(b.seq_len(2), Some(64), "chunk must advance the prefilling sequence");
+        // Finish the interrupted prompt and check it against an
+        // uninterrupted chunked prefill on a fresh engine.
+        let tail: Vec<Vec<f32>> = b
+            .step_batch(&DecodeBatch::chunk(2, p2[64..].to_vec(), true))
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        let mut solo = Engine::new(model.clone(), cfg.clone(), 4096);
+        solo.set_threads(threads);
+        solo.set_prefill_chunk(64);
+        let want = solo.prefill(2, &p2).unwrap();
+        assert_eq!(tail[0], want, "interleaved chunks diverged from solo prefill");
+    }
+}
+
+#[test]
+fn engine_prefill_chunk_knob_clamps() {
+    let model = deep_model(11);
+    let mut e = Engine::new(model, SparseConfig::dense(), 1024);
+    e.set_prefill_chunk(0);
+    assert_eq!(e.prefill_chunk(), 1, "span must clamp to >= 1");
+    e.set_prefill_chunk(128);
+    assert_eq!(e.prefill_chunk(), 128);
+}
+
+#[test]
+fn scheduler_rejects_never_fitting_prompt() {
+    // A prompt larger than the whole page pool used to be admitted, fail
+    // mid-prefill, and bounce forever; it must now be rejected up front
+    // and counted, while well-sized requests keep flowing.
+    let model = Arc::new(twilight::model::retrieval::build_retrieval_model(V, 8192));
+    let engine = Engine::new(model, SparseConfig::dense(), 256); // 17 pages
+    let mut s = Scheduler::new(engine, SchedulerConfig::default());
+    let mut r = Rng::new(12);
+    let big = gen_niah(&mut r, V, 512); // 32 pages: can never fit
+    let small = gen_niah(&mut r, V, 64); // 4 pages: fits comfortably
+    s.submit(Request::new(0, big.prompt.clone(), 1));
+    s.submit(Request::new(1, small.prompt.clone(), 1));
+    let rep = s.run_to_completion();
+    assert_eq!(rep.requests.len(), 2);
+    assert_eq!(rep.rejected(), 1, "oversized prompt must be rejected");
+    let small_done = s
+        .finished_requests()
+        .iter()
+        .find(|q| q.id == 1)
+        .expect("small request must finish");
+    assert_eq!(small_done.output.first(), Some(&small.answer));
+    assert_eq!(s.engine.num_seqs(), 0, "pages leaked");
+}
+
+#[test]
+fn preempted_request_readmits_without_rejection() {
+    // A preempted request's folded prompt (original prompt + generated
+    // tokens) may cross the admission-policy headroom bound; it must be
+    // parked and re-admitted on the true feasibility bound — never
+    // terminally rejected, which would discard already-served work the
+    // pool can still hold.
+    let model = Arc::new(twilight::model::retrieval::build_retrieval_model(V, 8192));
+    let engine = Engine::new(model, SparseConfig::dense(), 256); // 17 pages
+    let mut s = Scheduler::new(
+        engine,
+        SchedulerConfig { admit_headroom_pages: 8, ..Default::default() },
+    );
+    let mut r = Rng::new(14);
+    for i in 0..2 {
+        let g = gen_niah(&mut r, V, 100);
+        let mut req = Request::new(i, g.prompt, 60);
+        req.stop_token = None;
+        s.submit(req);
+    }
+    let rep = s.run_to_completion();
+    assert_eq!(rep.requests.len(), 2);
+    assert!(rep.preemptions() > 0, "the undersized pool must actually preempt");
+    assert_eq!(rep.rejected(), 0, "preempted work must be re-admitted, not rejected");
+    for q in s.finished_requests() {
+        assert_eq!(q.output.len(), 60, "request {} truncated", q.id);
+    }
+    assert_eq!(s.engine.num_seqs(), 0, "pages leaked");
+}
+
+#[test]
+fn scheduler_chunks_long_admission_across_steps() {
+    // A long prompt admitted among running decodes prefills across
+    // multiple mixed steps under the per-step token budget, while the
+    // short requests keep decoding every step.
+    let model = Arc::new(twilight::model::retrieval::build_retrieval_model(V, 8192));
+    let mut engine = Engine::new(model, SparseConfig::twilight(SelectorKind::Quest, 0.9), 1 << 14);
+    engine.set_prefill_chunk(64);
+    let mut s = Scheduler::new(
+        engine,
+        SchedulerConfig { max_batch: 8, max_prefill_tokens_per_step: 128, ..Default::default() },
+    );
+    let mut r = Rng::new(13);
+    for i in 0..4 {
+        let g = gen_niah(&mut r, V, 128);
+        let mut req = Request::new(i, g.prompt, 16);
+        req.stop_token = None;
+        s.submit(req);
+    }
+    let long = gen_niah(&mut r, V, 2048);
+    s.submit(Request::new(4, long.prompt.clone(), 1));
+    let rep = s.run_to_completion();
+    assert_eq!(rep.requests.len(), 5, "everything must complete");
+    assert_eq!(rep.rejected(), 0);
+    // The long prompt cannot fit one step's budget: chunked admission
+    // must have spanned multiple steps.
+    assert!(
+        s.engine.stats.prefill_chunks as usize >= 2048 / 64,
+        "expected many chunks, got {}",
+        s.engine.stats.prefill_chunks
+    );
+    let long_done = s.finished_requests().iter().find(|q| q.id == 4).unwrap();
+    assert_eq!(long_done.output.first(), Some(&long.answer), "chunked prefill broke retrieval");
+    let lm = rep.requests.iter().find(|m| m.id == 4).unwrap();
+    assert!(lm.prefill_time() >= 0.0);
+    assert!(lm.ttft() >= lm.prefill_time() - 1e-9, "ttft must cover queue + prefill");
+    assert_eq!(s.engine.num_seqs(), 0, "pages leaked");
+}

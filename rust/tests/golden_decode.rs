@@ -1,9 +1,11 @@
 //! Golden-trace regression for the batched decode path: a fixed-seed
-//! end-to-end run (prefill + governed decode steps) whose sampled token
-//! ids, budget counters, and telemetry are (1) bit-identical for any
-//! worker count — the persistent pool's determinism contract — and
-//! (2) pinned against a checked-in golden so *future* PRs cannot change
-//! decode behavior silently.
+//! end-to-end run (prefill + governed decode steps + a chunked-admission
+//! segment where a fourth sequence prefills in 32-token chunks
+//! co-scheduled with the running decodes) whose sampled token ids,
+//! budget counters, and telemetry are (1) bit-identical for any worker
+//! count — the persistent pool's determinism contract — and (2) pinned
+//! against a checked-in golden so *future* PRs cannot change decode (or
+//! mixed-step) behavior silently.
 //!
 //! Everything in the trace is deterministic by construction: workload
 //! and sampling use fixed `util::rng` seeds, the governor runs the
@@ -37,6 +39,11 @@ use twilight::workload::{gen_niah, RetrievalVocab};
 const V: RetrievalVocab = RetrievalVocab::DEFAULT;
 const SEQS: u64 = 3;
 const DECODE_STEPS: u64 = 12;
+/// Chunked-admission segment: the 4th sequence's prompt (96 + 1 query
+/// token) enters in 32-token chunks → 4 mixed steps.
+const CHUNK_PROMPT_CTX: usize = 96;
+const CHUNK_SPAN: usize = 32;
+const CHUNK_STEPS: u64 = (CHUNK_PROMPT_CTX as u64 + 1).div_ceil(CHUNK_SPAN as u64);
 
 /// Everything the golden pins. Floats live here as bit patterns so
 /// `PartialEq` is exact equality, matching the render format.
@@ -147,6 +154,36 @@ fn run_trace(threads: usize) -> Trace {
             slot.1 = tok;
         }
     }
+    // --- chunked-admission segment ------------------------------------
+    // A 4th sequence prefills in CHUNK_SPAN-token chunks co-scheduled
+    // with the frontier decodes: mixed steps, one chunk per step. The
+    // decodes keep sampling every step; the newcomer samples its first
+    // token after its final chunk. Pins mixed-step determinism and the
+    // decode-isolation contract into the golden.
+    let g3 = gen_niah(&mut wl_rng, V, CHUNK_PROMPT_CTX);
+    e.start_empty(SEQS);
+    let mut cursor = 0;
+    while cursor < g3.prompt.len() {
+        let end = (cursor + CHUNK_SPAN).min(g3.prompt.len());
+        let mut batch = DecodeBatch::default();
+        for &(id, tok) in frontier.iter() {
+            batch.push_decode(id, tok);
+        }
+        batch.push_chunk(SEQS, g3.prompt[cursor..end].to_vec(), end == g3.prompt.len());
+        let mut results = e.step_batch(&batch).into_iter();
+        for slot in frontier.iter_mut() {
+            let logits = results.next().unwrap().expect("golden trace must not OOM");
+            let tok = sample(&logits, &params, &mut sample_rng);
+            tokens.push(tok);
+            slot.1 = tok;
+        }
+        let chunk_logits = results.next().unwrap().expect("golden trace must not OOM");
+        cursor = end;
+        if cursor == g3.prompt.len() {
+            let tok = sample(&chunk_logits, &params, &mut sample_rng);
+            tokens.push(tok);
+        }
+    }
     let d = e.directive();
     Trace {
         tokens,
@@ -173,8 +210,19 @@ fn golden_path() -> PathBuf {
 #[test]
 fn golden_decode_trace_pinned_across_worker_counts() {
     let t1 = run_trace(1);
-    assert_eq!(t1.steps, DECODE_STEPS);
-    assert_eq!(t1.tokens.len() as u64, SEQS * (DECODE_STEPS + 1));
+    // Decode steps + the mixed (decode + chunk) steps of the admission
+    // segment all advance decode items, so all count as steps.
+    assert_eq!(t1.steps, DECODE_STEPS + CHUNK_STEPS);
+    // Per sequence: one prefill token + DECODE_STEPS + CHUNK_STEPS decode
+    // tokens; plus the newcomer's single first token.
+    assert_eq!(
+        t1.tokens.len() as u64,
+        SEQS * (DECODE_STEPS + CHUNK_STEPS + 1) + 1
+    );
+    // Chunked admission pushed the whole 4th prompt through the forward
+    // pass (the first three prompts ride the 1-layer fast path: one
+    // token each).
+    assert_eq!(t1.prefill_steps, SEQS + CHUNK_PROMPT_CTX as u64 + 1);
     assert!(t1.sparse_calls > 0, "the trace must exercise the pruned path");
     assert!(t1.probes > 0, "the trace must exercise the recall probe");
     // (1) Bit-exactness across worker counts — the pool contract. The

@@ -359,6 +359,7 @@ fn prop_scheduler_conserves_requests_and_pages() {
                     max_batch: rng.range(1, 6),
                     admit_headroom_pages: 0,
                     max_prefills_per_step: 2,
+                    ..Default::default()
                 },
             );
             let nreq = rng.range(2, 8);
