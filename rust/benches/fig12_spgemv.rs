@@ -1,42 +1,203 @@
-//! Fig. 12 — SpGEMV (score estimation) latency vs quantization width.
-//! The kernel is memory-bound, so latency should track bytes streamed:
-//! INT2 < INT4 < INT8 < FP16.
+//! Fig. 12 — SpGEMV (score estimation) latency vs quantization width,
+//! extended with the page-major hot-path panels:
+//!
+//! * 12a — standalone GEMV, row-major (fused dequant-dot per row) vs
+//!   block-tiled (codes unpacked once per block): both are memory-bound,
+//!   so latency tracks bytes streamed (INT2 < INT4 < INT8 < FP16), and
+//!   the tiled walk amortizes the unpack pass across the block's rows.
+//! * 12b — the *paged* group estimator (`estimate_scores_group`):
+//!   row-major reference vs the page-tiled hot path at GQA group 4 —
+//!   the tile is amortized across rows × heads.
+//! * 12c — hierarchical page top-p pre-prune: full scoring vs
+//!   bound-ordered early stop on peaked and diffuse query shapes, with
+//!   the fraction of candidate pages skipped.
 
 mod common;
 
 use std::time::Duration;
-use twilight::attention::spgemv::QuantizedK;
+use twilight::attention::spgemv::{
+    estimate_scores_group, estimate_scores_group_rowmajor, QuantizedK, SpgemvScratch,
+};
+use twilight::kvcache::{CacheConfig, PagedKvCache, SeqCache};
+use twilight::pruner::{prune_group_into, AttnScratch, PrunerConfig};
 use twilight::tensor::quant::QuantBits;
 use twilight::util::rng::Rng;
 use twilight::util::stats::bench;
 
-fn main() {
-    common::header("Figure 12", "SpGEMV latency vs quantization bits");
+const ALL_BITS: [QuantBits; 4] =
+    [QuantBits::Int2, QuantBits::Int4, QuantBits::Int8, QuantBits::Fp16];
+
+fn paged_cache(n: usize, d: usize, bits: QuantBits, seed: u64) -> (PagedKvCache, SeqCache) {
+    let mut cfg = CacheConfig::new(1, d, n.div_ceil(16) + 2);
+    cfg.mirror_bits = bits;
+    let mut cache = PagedKvCache::new(cfg);
+    let mut seq = SeqCache::default();
+    let mut r = Rng::new(seed);
+    for _ in 0..n {
+        let k: Vec<f32> = (0..d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        cache.append(&mut seq, &k, &k).unwrap();
+    }
+    (cache, seq)
+}
+
+fn panel_a() {
+    println!("-- 12a: standalone GEMV, row-major vs block-tiled --");
     let d = 128;
-    println!("{:>7} {:>6} {:>12} {:>12} {:>10}", "N", "bits", "us/call", "MB", "GB/s");
+    println!(
+        "{:>7} {:>6} {:>12} {:>12} {:>8} {:>12} {:>10}",
+        "N", "bits", "row us", "tiled us", "speedup", "MB", "GB/s(tiled)"
+    );
     for n in [4096usize, 16384, 65536] {
         let mut r = Rng::new(1);
         let k: Vec<f32> = (0..n * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
         let q: Vec<f32> = (0..d).map(|_| r.normal_f32(0.0, 1.0)).collect();
         let mut out = vec![0.0f32; n];
-        for bits in [QuantBits::Int2, QuantBits::Int4, QuantBits::Int8, QuantBits::Fp16] {
+        for bits in ALL_BITS {
             let qk = QuantizedK::from_rows(&k, d, bits, 16);
-            let res = bench(
-                "spgemv",
+            let row = bench(
+                "gemv",
                 Duration::from_millis(60),
-                Duration::from_millis(400),
+                Duration::from_millis(300),
                 3,
                 || qk.gemv(&q, &mut out),
             );
+            let mut tile = Vec::new();
+            let tiled = bench(
+                "gemv_tiled",
+                Duration::from_millis(60),
+                Duration::from_millis(300),
+                3,
+                || qk.gemv_tiled(&q, &mut tile, &mut out),
+            );
             let bytes = qk.bytes() as f64;
             println!(
-                "{:>7} {:>6} {:>12.1} {:>12.2} {:>10.2}",
+                "{:>7} {:>6} {:>12.1} {:>12.1} {:>7.2}x {:>12.2} {:>10.2}",
                 n,
                 bits.bits(),
-                res.secs.mean * 1e6,
+                row.secs.mean * 1e6,
+                tiled.secs.mean * 1e6,
+                row.secs.mean / tiled.secs.mean,
                 bytes / 1e6,
-                bytes / res.secs.mean / 1e9,
+                bytes / tiled.secs.mean / 1e9,
             );
         }
     }
+}
+
+fn panel_b() {
+    println!("\n-- 12b: paged group estimator (group=4), row-major vs page-tiled --");
+    let d = 128;
+    let group = 4;
+    println!(
+        "{:>7} {:>6} {:>12} {:>12} {:>8}",
+        "ctx", "bits", "row us", "tiled us", "speedup"
+    );
+    for n in [4096usize, 16384] {
+        for bits in ALL_BITS {
+            let (cache, seq) = paged_cache(n, d, bits, 2);
+            let mut r = Rng::new(3);
+            let qs: Vec<f32> = (0..group * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let tokens: Vec<usize> = (0..n).collect();
+            let mut out = vec![0.0f32; group * n];
+            let row = bench(
+                "rowmajor",
+                Duration::from_millis(60),
+                Duration::from_millis(300),
+                3,
+                || estimate_scores_group_rowmajor(&cache, &seq, 0, &qs, group, &tokens, &mut out),
+            );
+            let mut sc = SpgemvScratch::default();
+            let tiled = bench(
+                "tiled",
+                Duration::from_millis(60),
+                Duration::from_millis(300),
+                3,
+                || estimate_scores_group(&cache, &seq, 0, &qs, group, &tokens, &mut out, &mut sc),
+            );
+            println!(
+                "{:>7} {:>6} {:>12.1} {:>12.1} {:>7.2}x",
+                n,
+                bits.bits(),
+                row.secs.mean * 1e6,
+                tiled.secs.mean * 1e6,
+                row.secs.mean / tiled.secs.mean,
+            );
+        }
+    }
+}
+
+fn panel_c() {
+    println!("\n-- 12c: hier page pre-prune (p=0.95, eps=0.02), full vs bound-ordered --");
+    let d = 128;
+    println!(
+        "{:>7} {:>9} {:>12} {:>12} {:>8} {:>10}",
+        "ctx", "shape", "full us", "hier us", "speedup", "skip frac"
+    );
+    for n in [4096usize, 8192] {
+        for (shape, sharp) in [("diffuse", 0.0f32), ("peaked", 4.0)] {
+            // Peaked: a handful of keys aligned with q concentrate the
+            // softmax, letting the bound-ordered walk stop early.
+            let mut cfg = CacheConfig::new(1, d, n.div_ceil(16) + 2);
+            cfg.mirror_bits = QuantBits::Int4;
+            let mut cache = PagedKvCache::new(cfg);
+            let mut seq = SeqCache::default();
+            let mut r = Rng::new(5);
+            let q: Vec<f32> = (0..d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            for i in 0..n {
+                let k: Vec<f32> = if sharp > 0.0 && i % 512 == 100 {
+                    q.iter().map(|x| x * sharp).collect()
+                } else {
+                    (0..d).map(|_| r.normal_f32(0.0, 0.4)).collect()
+                };
+                cache.append(&mut seq, &k, &k).unwrap();
+            }
+            let tokens: Vec<usize> = (0..n).collect();
+            let base = PrunerConfig { p: 0.95, ..Default::default() };
+            let hier = PrunerConfig { hier_pages: true, hier_eps: 0.02, ..base };
+            let mut scratch = AttnScratch::default();
+            let full = bench(
+                "full",
+                Duration::from_millis(60),
+                Duration::from_millis(300),
+                3,
+                || {
+                    prune_group_into(&base, &cache, &seq, 0, &q, 1, &tokens, &mut scratch);
+                },
+            );
+            let mut info = twilight::pruner::HierPruneInfo::default();
+            let hier_res = bench(
+                "hier",
+                Duration::from_millis(60),
+                Duration::from_millis(300),
+                3,
+                || {
+                    info = prune_group_into(&hier, &cache, &seq, 0, &q, 1, &tokens, &mut scratch);
+                },
+            );
+            let frac = if info.pages_total == 0 {
+                0.0
+            } else {
+                info.pages_skipped as f64 / info.pages_total as f64
+            };
+            println!(
+                "{:>7} {:>9} {:>12.1} {:>12.1} {:>7.2}x {:>10.3}",
+                n,
+                shape,
+                full.secs.mean * 1e6,
+                hier_res.secs.mean * 1e6,
+                full.secs.mean / hier_res.secs.mean,
+                frac,
+            );
+        }
+    }
+}
+
+fn main() {
+    common::header(
+        "Figure 12",
+        "SpGEMV latency: quantization bits x row-major/page-tiled/hier-pages",
+    );
+    panel_a();
+    panel_b();
+    panel_c();
 }

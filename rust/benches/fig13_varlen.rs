@@ -55,8 +55,11 @@ fn main() {
     let mut union: Vec<usize> = kept.iter().flatten().copied().collect();
     union.sort_unstable();
     union.dedup();
+    let mut sm_m: Vec<f32> = Vec::new();
+    let mut sm_d: Vec<f32> = Vec::new();
     let r_group = bench("group-varlen", warm, meas, 3, || {
-        sparse::group_varlen(&cache, &seq, 0, &qs, group, &union, &mut out);
+        sparse::group_varlen_with(&cache, &seq, 0, &qs, group, &union, &mut sm_m, &mut sm_d,
+            &mut out);
     });
     // KV bytes each packing must stream (the GPU-bandwidth metric; on a
     // cache-resident CPU run, compute dominates instead — DESIGN.md §2).

@@ -11,7 +11,7 @@ mod common;
 
 use std::time::Duration;
 use twilight::attention::{full, sparse};
-use twilight::pruner::{prune_group, PrunerConfig, PrunerScratch};
+use twilight::pruner::{prune_group_into, PrunerConfig, PrunerScratch};
 use twilight::selector::{quest::QuestSelector, TokenSelector};
 use twilight::sim;
 use twilight::util::stats::bench;
@@ -57,6 +57,10 @@ fn main() {
                 })
                 .collect();
             let mut out = vec![0.0f32; group * d];
+            // Reused streaming-softmax state for the group-varlen calls
+            // (engine parity: the hot path never allocates these).
+            let mut sm_m: Vec<f32> = Vec::new();
+            let mut sm_d: Vec<f32> = Vec::new();
             let warm = Duration::from_millis(50);
             let meas = Duration::from_millis(300);
 
@@ -95,18 +99,23 @@ fn main() {
             let pc = PrunerConfig { p: 0.9, ..Default::default() };
             let all: Vec<usize> = (0..n).collect();
             let mut scratch = PrunerScratch::default();
+            // The engine-parity _into path: results stay in the scratch
+            // arena (timing the cloning wrapper would charge the panel a
+            // per-call deep copy the engine never pays).
             let r = bench("flashinfer-twi", warm, meas, 3, || {
                 for i in 0..b {
-                    let (kept, _) = prune_group(
+                    prune_group_into(
                         &pc, &caches[i].0, &caches[i].1, 0, &qs[i], group, &all, &mut scratch,
                     );
-                    sparse::group_varlen(&caches[i].0, &caches[i].1, 0, &qs[i], group, &kept, &mut out);
+                    sparse::group_varlen_with(
+                        &caches[i].0, &caches[i].1, 0, &qs[i], group, &scratch.union,
+                        &mut sm_m, &mut sm_d, &mut out,
+                    );
                 }
             });
             let b1 = {
-                let (kept, _) =
-                    prune_group(&pc, &caches[0].0, &caches[0].1, 0, &qs[0], group, &all, &mut scratch);
-                kept.len()
+                prune_group_into(&pc, &caches[0].0, &caches[0].1, 0, &qs[0], group, &all, &mut scratch);
+                scratch.union.len()
             };
             results.push((
                 "FlashInfer-Twi",
@@ -119,7 +128,10 @@ fn main() {
             let r = bench("quest", warm, meas, 3, || {
                 for i in 0..b {
                     let cand = selectors[i].select(&caches[i].0, &caches[i].1, 0, &qs[i], group, budget);
-                    sparse::group_varlen(&caches[i].0, &caches[i].1, 0, &qs[i], group, &cand, &mut out);
+                    sparse::group_varlen_with(
+                        &caches[i].0, &caches[i].1, 0, &qs[i], group, &cand, &mut sm_m, &mut sm_d,
+                        &mut out,
+                    );
                 }
             });
             results.push(("Quest", r.secs.mean, sim::quest_stage_bytes(n, d, 16, budget)));
@@ -127,16 +139,17 @@ fn main() {
             let r = bench("quest-twi", warm, meas, 3, || {
                 for i in 0..b {
                     let cand = selectors[i].select(&caches[i].0, &caches[i].1, 0, &qs[i], group, budget);
-                    let (kept, _) =
-                        prune_group(&pc, &caches[i].0, &caches[i].1, 0, &qs[i], group, &cand, &mut scratch);
-                    sparse::group_varlen(&caches[i].0, &caches[i].1, 0, &qs[i], group, &kept, &mut out);
+                    prune_group_into(&pc, &caches[i].0, &caches[i].1, 0, &qs[i], group, &cand, &mut scratch);
+                    sparse::group_varlen_with(
+                        &caches[i].0, &caches[i].1, 0, &qs[i], group, &scratch.union,
+                        &mut sm_m, &mut sm_d, &mut out,
+                    );
                 }
             });
             let b1q = {
                 let cand = selectors[0].select(&caches[0].0, &caches[0].1, 0, &qs[0], group, budget);
-                let (kept, _) =
-                    prune_group(&pc, &caches[0].0, &caches[0].1, 0, &qs[0], group, &cand, &mut scratch);
-                kept.len()
+                prune_group_into(&pc, &caches[0].0, &caches[0].1, 0, &qs[0], group, &cand, &mut scratch);
+                scratch.union.len()
             };
             results.push((
                 "Quest-Twi",

@@ -8,7 +8,7 @@ mod common;
 use std::time::Duration;
 use twilight::attention::full::contiguous_full;
 use twilight::kvcache::offload::OffloadArena;
-use twilight::pruner::{prune_head, PrunerConfig, PrunerScratch};
+use twilight::pruner::{prune_group_into, PrunerConfig, PrunerScratch};
 use twilight::selector::{quest::QuestSelector, TokenSelector};
 use twilight::util::rng::Rng;
 use twilight::util::stats::bench;
@@ -47,9 +47,10 @@ fn main() {
         // mirror; only B1 tokens cross the link.
         let r_twi = bench("quest-twi-offload", warm, meas, 2, || {
             let cand = selector.select(&cache, &seq, 0, &q, 1, budget);
-            let pruned = prune_head(&pc, &cache, &seq, 0, &q, &cand, &mut scratch);
-            let b1 = pruned.kept.len();
-            arena.load_tokens(&pruned.kept, &mut kbuf[..b1 * d], &mut vbuf[..b1 * d]);
+            // Engine-parity _into path (no per-call outcome clone).
+            prune_group_into(&pc, &cache, &seq, 0, &q, 1, &cand, &mut scratch);
+            let b1 = scratch.union.len();
+            arena.load_tokens(&scratch.union, &mut kbuf[..b1 * d], &mut vbuf[..b1 * d]);
             contiguous_full(&q, &kbuf[..b1 * d], &vbuf[..b1 * d], &mut out);
         });
         println!(

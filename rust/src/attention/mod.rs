@@ -6,7 +6,10 @@
 //! * [`sparse`] — index-list sparse attention with the three varlen
 //!   packings of Appendix B.2 (padded / head-varlen / group-varlen).
 //! * [`spgemv`] — the score-estimation SpGEMV over the quantized mirror
-//!   K cache (Appendix B.1), at INT2/4/8/FP16.
+//!   K cache (Appendix B.1), at INT2/4/8/FP16 — page-tiled: per-page
+//!   candidate runs unpack each mirror block once and amortize the
+//!   dequant across rows × GQA heads (bit-identical to the row-major
+//!   reference; DESIGN.md §9).
 //!
 //! All kernels are single-(kv-)head primitives (plus the multi-query
 //! causal chunk kernel [`full::paged_full_causal`], which stacks the

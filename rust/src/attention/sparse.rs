@@ -120,7 +120,8 @@ pub fn padded(
 /// Group-varlen (GQA) variant: `qs` holds `group` query heads (`[g][d]`),
 /// all mapped to `kv_head`, sharing the union index list `idx`. Each KV
 /// row is loaded once and applied to every query head in the group.
-/// `outs` is `[g][d]` flattened.
+/// `outs` is `[g][d]` flattened. Convenience wrapper over
+/// [`group_varlen_with`] that allocates its own streaming-softmax state.
 pub fn group_varlen(
     cache: &PagedKvCache,
     seq: &SeqCache,
@@ -130,11 +131,34 @@ pub fn group_varlen(
     idx: &[usize],
     outs: &mut [f32],
 ) {
+    let mut m = Vec::new();
+    let mut denom = Vec::new();
+    group_varlen_with(cache, seq, kv_head, qs, group, idx, &mut m, &mut denom, outs);
+}
+
+/// Allocation-free core of [`group_varlen`]: the per-head streaming
+/// max/denominator state comes from caller-owned buffers (part of the
+/// per-worker `AttnScratch` arena in the engine), so steady-state decode
+/// performs no heap allocation here. Bit-identical to the wrapper.
+#[allow(clippy::too_many_arguments)]
+pub fn group_varlen_with(
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    kv_head: usize,
+    qs: &[f32],
+    group: usize,
+    idx: &[usize],
+    m: &mut Vec<f32>,
+    denom: &mut Vec<f32>,
+    outs: &mut [f32],
+) {
     let d = qs.len() / group;
     let s = scale(d);
     let ps = cache.cfg.page_size;
-    let mut m = vec![f32::NEG_INFINITY; group];
-    let mut denom = vec![0.0f32; group];
+    m.clear();
+    m.resize(group, f32::NEG_INFINITY);
+    denom.clear();
+    denom.resize(group, 0.0f32);
     outs.fill(0.0);
     for &t in idx {
         let (page, slot) = seq.locate(t, ps);
@@ -220,6 +244,25 @@ mod tests {
             for (a, b) in outs[g * 8..(g + 1) * 8].iter().zip(&want) {
                 assert!((a - b).abs() < 1e-5, "group {g}");
             }
+        }
+    }
+
+    #[test]
+    fn group_varlen_with_reused_scratch_bit_exact() {
+        let (cache, seq) = random_cache(25, 1, 8, 80);
+        let group = 4;
+        let mut qs = Vec::new();
+        for g in 0..group {
+            qs.extend(random_q(30 + g as u64, 8));
+        }
+        let mut m = Vec::new();
+        let mut denom = Vec::new();
+        for idx in [vec![1usize, 2, 30, 55, 79], vec![0usize], vec![5usize, 6, 7]] {
+            let mut a = vec![0.0; group * 8];
+            group_varlen(&cache, &seq, 0, &qs, group, &idx, &mut a);
+            let mut b = vec![1.0; group * 8]; // dirty output buffer
+            group_varlen_with(&cache, &seq, 0, &qs, group, &idx, &mut m, &mut denom, &mut b);
+            assert_eq!(a, b, "scratch reuse changed the kernel result");
         }
     }
 

@@ -1,11 +1,24 @@
-//! Score-estimation SpGEMV (paper §4.2, Appendix B.1).
+//! Score-estimation SpGEMV (paper §4.2, Appendix B.1) — **page-tiled**.
 //!
 //! Computes `q · K̂ᵀ` over the *quantized mirror* K cache for a set of
 //! candidate tokens ("sparse" = paged/indexed access, matching the
 //! paper's FlashInfer-derived kernel where the INT4 K pages are gathered
-//! by page table). The fused dequant-dot never materializes K̂: the
-//! integer codes are multiplied directly and scale/zero are applied once
-//! per row — the CPU analog of unpacking INT4 in shared memory.
+//! by page table).
+//!
+//! The hot path walks the candidate list as **per-page runs** (candidates
+//! arrive ascending from the selectors, so runs are contiguous), unpacks
+//! each mirror `QuantBlock`'s code window **once per run** into a
+//! reusable scratch tile ([`SpgemvScratch::tile`]), and then contracts
+//! every row of the run against every query head of the GQA group — the
+//! unpack pass, which dominates the fused dequant-dot on CPU, is
+//! amortized across both the rows of the run and the heads of the group.
+//! Per-row dot values are bit-identical to the historical row-major fused
+//! path ([`estimate_scores_rowmajor`], kept as the reference): the tile
+//! holds exactly the f32 code values the per-row stack buffer held, and
+//! each row is contracted by the same `tensor::dot` (or, for the
+//! single-head Fp16 case, the same sequential accumulation), so logits —
+//! and everything downstream: top-p sets, telemetry, golden traces — do
+//! not move.
 //!
 //! Rows in the *unsealed* tail page (tokens at or past
 //! `⌊seq.len / page_size⌋ · page_size` when the tail is partial) have no
@@ -16,20 +29,257 @@
 //! truncated view of its sequence scores the same whether the chunk
 //! appended 1 or 256 tokens behind it.
 
-use crate::kvcache::{quant_dot_row, quant_dot_row_qsum, PagedKvCache, SeqCache};
+use crate::kvcache::{quant_dot_row_group, quant_dot_row_qsum, PagedKvCache, SeqCache};
 use crate::tensor::dot;
-use crate::tensor::quant::{quantize, QuantBits, QuantBlock};
+use crate::tensor::quant::{self, quantize, QuantBits, QuantBlock};
 
 /// First token of the visibly-partial tail page (== `seq.len` when the
 /// visible tail page is full, i.e. every visible row is sealed).
 #[inline]
-fn sealed_limit(seq: &SeqCache, page_size: usize) -> usize {
+pub(crate) fn sealed_limit(seq: &SeqCache, page_size: usize) -> usize {
     seq.len - seq.len % page_size
 }
 
+/// First index past the per-page candidate run starting at `i`: a
+/// maximal stretch of tokens on one sealed page, or of unsealed-tail
+/// tokens. The single definition shared by both tiled estimators and the
+/// pruner's hierarchical pre-prune — whose correctness argument needs
+/// its run boundaries to coincide exactly with the tiler's.
+#[inline]
+pub(crate) fn run_end(tokens: &[usize], i: usize, sealed: usize, ps: usize) -> usize {
+    let n = tokens.len();
+    let t0 = tokens[i];
+    let mut j = i + 1;
+    if t0 >= sealed {
+        while j < n && tokens[j] >= sealed {
+            j += 1;
+        }
+    } else {
+        let pg = t0 / ps;
+        while j < n && tokens[j] < sealed && tokens[j] / ps == pg {
+            j += 1;
+        }
+    }
+    j
+}
+
+/// Reusable buffers for the tiled SpGEMV (one per worker, embedded in the
+/// pruner's `AttnScratch`): the per-run code tile, the per-head `sum(q)`
+/// hoists, and the per-row group-score staging row. Capacity only ever
+/// grows, so steady-state calls perform zero heap allocations.
+#[derive(Default)]
+pub struct SpgemvScratch {
+    /// Unpacked f32 codes for the current run's slot window.
+    pub tile: Vec<f32>,
+    /// Per-head `sum(q)` (row-invariant factor of the fused dequant-dot).
+    pub qsums: Vec<f32>,
+    /// Per-head staging for one row's scores (single-row fallback path).
+    pub row: Vec<f32>,
+}
+
+/// Score one tile row against one query head, matching the row-major
+/// fused path bit for bit: integer widths use
+/// `zero·qsum + scale·dot(q, codes)` with the vectorized `tensor::dot`;
+/// Fp16 group rows also use `tensor::dot` (as `quant_dot_row_group`
+/// did).
+#[inline]
+fn tile_row_score(q: &[f32], qsum: f32, b: &QuantBlock, row: &[f32]) -> f32 {
+    match b.bits {
+        QuantBits::Fp16 => dot(q, row),
+        _ => b.zero * qsum + b.scale * dot(q, row),
+    }
+}
+
+/// Single-head variant: the historical `quant_dot_row_qsum` Fp16 path is
+/// a sequential accumulation (not the 4-lane `tensor::dot`), so the tiled
+/// path must reproduce that exact order to stay bit-identical.
+#[inline]
+fn tile_row_score_single(q: &[f32], qsum: f32, b: &QuantBlock, row: &[f32]) -> f32 {
+    match b.bits {
+        QuantBits::Fp16 => {
+            let mut acc = 0.0f32;
+            for (qi, x) in q.iter().zip(row) {
+                acc += qi * x;
+            }
+            acc
+        }
+        _ => b.zero * qsum + b.scale * dot(q, row),
+    }
+}
+
 /// Estimate logits (unscaled by 1/sqrt(d)) for `tokens` from the mirror
-/// cache into `out`; unsealed tail rows are scored exactly.
+/// cache into `out`; unsealed tail rows are scored exactly. Page-tiled:
+/// consecutive tokens on one sealed page unpack the mirror block's slot
+/// window once. Bit-identical to [`estimate_scores_rowmajor`] for any
+/// token order (runs degrade gracefully to single rows).
 pub fn estimate_scores(
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    head: usize,
+    q: &[f32],
+    tokens: &[usize],
+    out: &mut [f32],
+    scratch: &mut SpgemvScratch,
+) {
+    debug_assert_eq!(tokens.len(), out.len());
+    let d = cache.cfg.head_dim;
+    let ps = cache.cfg.page_size;
+    let sealed = sealed_limit(seq, ps);
+    let qsum: f32 = q.iter().sum();
+    let n = tokens.len();
+    let mut i = 0;
+    while i < n {
+        let t0 = tokens[i];
+        let j = run_end(tokens, i, sealed, ps);
+        if t0 >= sealed {
+            // Unsealed tail rows: exact fp32 (no mirror yet).
+            for (r, &t) in tokens[i..j].iter().enumerate() {
+                let (page, slot) = seq.locate(t, ps);
+                out[i + r] = dot(q, cache.k_at(page, head, slot));
+            }
+            i = j;
+            continue;
+        }
+        let page = seq.pages[t0 / ps];
+        let block = cache.mirror_at(page, head).expect("sealed page missing mirror");
+        let (mut lo, mut hi) = (t0 % ps, t0 % ps);
+        for &t in &tokens[i + 1..j] {
+            let s = t % ps;
+            lo = lo.min(s);
+            hi = hi.max(s);
+        }
+        let rows = j - i;
+        let window = hi - lo + 1;
+        if rows == 1 || window >= rows * 2 {
+            // Single row, or a run sparse within its slot window: the
+            // fused row path widens only the rows actually scored —
+            // cheaper than unpacking the whole window (bit-identical
+            // either way, so the threshold is purely a cost choice).
+            for (r, &t) in tokens[i..j].iter().enumerate() {
+                out[i + r] = quant_dot_row_qsum(q, qsum, block, (t % ps) * d, d);
+            }
+        } else {
+            scratch.tile.resize(window * d, 0.0);
+            quant::unpack_codes_into(block, lo * d, &mut scratch.tile);
+            for (r, &t) in tokens[i..j].iter().enumerate() {
+                let s = t % ps;
+                let row = &scratch.tile[(s - lo) * d..(s - lo + 1) * d];
+                out[i + r] = tile_row_score_single(q, qsum, block, row);
+            }
+        }
+        i = j;
+    }
+}
+
+/// Estimate logits for a whole GQA group in one pass over the mirror:
+/// each per-page run's codes are unpacked once into the scratch tile and
+/// contracted with every query head of the group (§Perf — the unpack is
+/// amortized rows × heads); unsealed tail rows are scored exactly. `out`
+/// is `[group][tokens.len()]` flattened row-major. Bit-identical to
+/// [`estimate_scores_group_rowmajor`].
+#[allow(clippy::too_many_arguments)]
+pub fn estimate_scores_group(
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    kv_head: usize,
+    qs: &[f32],
+    group: usize,
+    tokens: &[usize],
+    out: &mut [f32],
+    scratch: &mut SpgemvScratch,
+) {
+    let d = cache.cfg.head_dim;
+    scratch.qsums.clear();
+    scratch
+        .qsums
+        .extend((0..group).map(|g| qs[g * d..(g + 1) * d].iter().sum::<f32>()));
+    estimate_scores_group_with_qsums(cache, seq, kv_head, qs, group, tokens, out, scratch);
+}
+
+/// Core of [`estimate_scores_group`] that trusts `scratch.qsums` to hold
+/// the `group` per-head `sum(q)` values already: the hier pre-prune
+/// fills them once per prune call and then scores many per-page runs
+/// without recomputing the query reductions.
+#[allow(clippy::too_many_arguments)]
+pub fn estimate_scores_group_with_qsums(
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    kv_head: usize,
+    qs: &[f32],
+    group: usize,
+    tokens: &[usize],
+    out: &mut [f32],
+    scratch: &mut SpgemvScratch,
+) {
+    let d = cache.cfg.head_dim;
+    let ps = cache.cfg.page_size;
+    debug_assert_eq!(out.len(), group * tokens.len());
+    debug_assert_eq!(scratch.qsums.len(), group);
+    let sealed = sealed_limit(seq, ps);
+    scratch.row.resize(group, 0.0);
+    let n = tokens.len();
+    let mut i = 0;
+    while i < n {
+        let t0 = tokens[i];
+        let j = run_end(tokens, i, sealed, ps);
+        if t0 >= sealed {
+            for (r, &t) in tokens[i..j].iter().enumerate() {
+                let (page, slot) = seq.locate(t, ps);
+                let k = cache.k_at(page, kv_head, slot);
+                for g in 0..group {
+                    out[g * n + i + r] = dot(&qs[g * d..(g + 1) * d], k);
+                }
+            }
+            i = j;
+            continue;
+        }
+        let page = seq.pages[t0 / ps];
+        let block = cache.mirror_at(page, kv_head).expect("sealed page missing mirror");
+        let (mut lo, mut hi) = (t0 % ps, t0 % ps);
+        for &t in &tokens[i + 1..j] {
+            let s = t % ps;
+            lo = lo.min(s);
+            hi = hi.max(s);
+        }
+        let rows = j - i;
+        let window = hi - lo + 1;
+        if rows == 1 || window >= rows * 2 {
+            // Sparse-within-window run: per-row fused path widens only
+            // the scored rows (bit-identical; see the single-head note).
+            for (r, &t) in tokens[i..j].iter().enumerate() {
+                quant_dot_row_group(
+                    qs,
+                    &scratch.qsums,
+                    block,
+                    (t % ps) * d,
+                    d,
+                    &mut scratch.row,
+                );
+                for g in 0..group {
+                    out[g * n + i + r] = scratch.row[g];
+                }
+            }
+        } else {
+            scratch.tile.resize(window * d, 0.0);
+            quant::unpack_codes_into(block, lo * d, &mut scratch.tile);
+            for (r, &t) in tokens[i..j].iter().enumerate() {
+                let s = t % ps;
+                let row = &scratch.tile[(s - lo) * d..(s - lo + 1) * d];
+                for g in 0..group {
+                    out[g * n + i + r] =
+                        tile_row_score(&qs[g * d..(g + 1) * d], scratch.qsums[g], block, row);
+                }
+            }
+        }
+        i = j;
+    }
+}
+
+/// The historical row-major estimator, kept as the bit-exactness
+/// reference for the tiled hot path (tests) and as the baseline panel of
+/// the Fig. 12-style SpGEMV ablation (benches). Scores each candidate
+/// independently via the fused dequant-dot.
+pub fn estimate_scores_rowmajor(
     cache: &PagedKvCache,
     seq: &SeqCache,
     head: usize,
@@ -53,11 +303,10 @@ pub fn estimate_scores(
     }
 }
 
-/// Estimate logits for a whole GQA group in one pass over the mirror:
-/// each packed row is unpacked once and contracted with every query head
-/// (§Perf); unsealed tail rows are scored exactly. `out` is
-/// `[group][tokens.len()]` flattened row-major.
-pub fn estimate_scores_group(
+/// Row-major GQA-group reference (see [`estimate_scores_rowmajor`]): each
+/// packed row is unpacked once per *row* (not per run) and contracted
+/// with every query head.
+pub fn estimate_scores_group_rowmajor(
     cache: &PagedKvCache,
     seq: &SeqCache,
     kv_head: usize,
@@ -70,15 +319,14 @@ pub fn estimate_scores_group(
     let ps = cache.cfg.page_size;
     debug_assert_eq!(out.len(), group * tokens.len());
     let sealed = sealed_limit(seq, ps);
-    let qsums: Vec<f32> =
-        (0..group).map(|g| qs[g * d..(g + 1) * d].iter().sum()).collect();
+    let qsums: Vec<f32> = (0..group).map(|g| qs[g * d..(g + 1) * d].iter().sum()).collect();
     let n = tokens.len();
     let mut row = vec![0.0f32; group];
     for (i, &t) in tokens.iter().enumerate() {
         let (page, slot) = seq.locate(t, ps);
         if t < sealed {
             let block = cache.mirror_at(page, kv_head).expect("sealed page missing mirror");
-            crate::kvcache::quant_dot_row_group(qs, &qsums, block, slot * d, d, &mut row);
+            quant_dot_row_group(qs, &qsums, block, slot * d, d, &mut row);
         } else {
             let k = cache.k_at(page, kv_head, slot);
             for (g, r) in row.iter_mut().enumerate() {
@@ -123,24 +371,48 @@ impl QuantizedK {
         self.blocks.iter().map(|b| b.packed.len() + 8).sum()
     }
 
-    /// `out[i] = q · K̂[rows[i]]`.
+    /// `out[i] = q · K̂[rows[i]]`. The row-invariant `sum(q)` is hoisted
+    /// out of the row loop (the paged path always did this; the
+    /// standalone Fig. 12 path recomputed it per row).
     pub fn spgemv(&self, q: &[f32], rows: &[usize], out: &mut [f32]) {
         debug_assert_eq!(q.len(), self.d);
+        let qsum: f32 = q.iter().sum();
         for (o, &r) in out.iter_mut().zip(rows) {
             let block = &self.blocks[r / self.group_rows];
             let slot = r % self.group_rows;
-            *o = quant_dot_row(q, block, slot * self.d, self.d);
+            *o = quant_dot_row_qsum(q, qsum, block, slot * self.d, self.d);
         }
     }
 
-    /// Dense GEMV over all rows: `out[i] = q · K̂[i]`.
+    /// Dense GEMV over all rows: `out[i] = q · K̂[i]` (qsum hoisted).
     pub fn gemv(&self, q: &[f32], out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.n);
+        let qsum: f32 = q.iter().sum();
         let mut row = 0;
         for block in &self.blocks {
             let rows = block.n / self.d;
             for s in 0..rows {
-                out[row] = quant_dot_row(q, block, s * self.d, self.d);
+                out[row] = quant_dot_row_qsum(q, qsum, block, s * self.d, self.d);
+                row += 1;
+            }
+        }
+    }
+
+    /// Block-tiled dense GEMV: each block's codes are unpacked once into
+    /// `tile`, then every row is a plain f32 dot — the standalone analog
+    /// of the paged tiled path, for the Fig. 12 row-major-vs-tiled panel.
+    /// Bit-identical to [`QuantizedK::gemv`].
+    pub fn gemv_tiled(&self, q: &[f32], tile: &mut Vec<f32>, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n);
+        let qsum: f32 = q.iter().sum();
+        let mut row = 0;
+        for block in &self.blocks {
+            let rows = block.n / self.d;
+            tile.resize(block.n, 0.0);
+            quant::unpack_codes_into(block, 0, tile);
+            for s in 0..rows {
+                let r = &tile[s * self.d..(s + 1) * self.d];
+                out[row] = tile_row_score_single(q, qsum, block, r);
                 row += 1;
             }
         }
@@ -151,6 +423,7 @@ impl QuantizedK {
 mod tests {
     use super::*;
     use crate::attention::testutil::{random_cache, random_q};
+    use crate::kvcache::CacheConfig;
     use crate::tensor::dot;
     use crate::util::rng::Rng;
 
@@ -160,7 +433,8 @@ mod tests {
         let q = random_q(32, 32);
         let toks: Vec<usize> = (0..128).collect();
         let mut est = vec![0.0; 128];
-        estimate_scores(&cache, &seq, 0, &q, &toks, &mut est);
+        let mut sc = SpgemvScratch::default();
+        estimate_scores(&cache, &seq, 0, &q, &toks, &mut est, &mut sc);
         let mut worst = 0.0f32;
         for (&t, &e) in toks.iter().zip(&est) {
             let exact = cache.exact_score(&seq, 0, &q, t);
@@ -173,6 +447,70 @@ mod tests {
     }
 
     #[test]
+    fn tiled_bit_exact_vs_rowmajor_all_widths() {
+        // The tiled hot path must reproduce the row-major reference to
+        // the bit: across bit widths, scattered/contiguous candidate
+        // shapes, group sizes, and the sealed/unsealed-tail boundary.
+        for bits in [QuantBits::Int2, QuantBits::Int4, QuantBits::Int8, QuantBits::Fp16] {
+            let d = 32;
+            let n = 72; // 4 sealed pages + an 8-row unsealed tail
+            let mut cache = crate::kvcache::PagedKvCache::new({
+                let mut c = CacheConfig::new(2, d, 8);
+                c.mirror_bits = bits;
+                c
+            });
+            let mut seq = crate::kvcache::SeqCache::default();
+            let mut r = Rng::new(900 + bits.bits() as u64);
+            for _ in 0..n {
+                let k: Vec<f32> = (0..2 * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+                cache.append(&mut seq, &k, &k).unwrap();
+            }
+            let shapes: Vec<Vec<usize>> = vec![
+                (0..n).collect(),                       // every row, crossing the tail
+                (0..n).step_by(3).collect(),            // gaps within pages
+                vec![5],                                // single row (fallback path)
+                vec![0, 1, 2, 3, 17, 40, 41, 64, 71],   // mixed runs + tail
+                vec![15, 16, 31, 32, 63, 64],           // page-boundary straddles
+            ];
+            for kv_head in 0..2 {
+                for group in [1usize, 4] {
+                    let mut qs = Vec::new();
+                    for g in 0..group {
+                        qs.extend(random_q(70 + g as u64, d));
+                    }
+                    for toks in &shapes {
+                        let mut want = vec![0.0; group * toks.len()];
+                        estimate_scores_group_rowmajor(
+                            &cache, &seq, kv_head, &qs, group, toks, &mut want,
+                        );
+                        let mut got = vec![0.0; group * toks.len()];
+                        let mut sc = SpgemvScratch::default();
+                        estimate_scores_group(
+                            &cache, &seq, kv_head, &qs, group, toks, &mut got, &mut sc,
+                        );
+                        assert_eq!(
+                            want, got,
+                            "group tiled != rowmajor (bits={bits:?} group={group} toks={toks:?})"
+                        );
+                        if group == 1 {
+                            let mut w1 = vec![0.0; toks.len()];
+                            estimate_scores_rowmajor(&cache, &seq, kv_head, &qs, toks, &mut w1);
+                            let mut g1 = vec![0.0; toks.len()];
+                            estimate_scores(
+                                &cache, &seq, kv_head, &qs, toks, &mut g1, &mut sc,
+                            );
+                            assert_eq!(
+                                w1, g1,
+                                "single-head tiled != rowmajor (bits={bits:?} toks={toks:?})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn unsealed_tail_scored_exactly() {
         // 2 sealed pages + an 8-row unsealed tail: sealed rows go through
         // the mirror, tail rows must be exact fp32 — bit-for-bit, since
@@ -182,7 +520,8 @@ mod tests {
         let q = random_q(34, 16);
         let toks: Vec<usize> = vec![0, 31, 32, 39];
         let mut est = vec![0.0; toks.len()];
-        estimate_scores(&cache, &seq, 0, &q, &toks, &mut est);
+        let mut sc = SpgemvScratch::default();
+        estimate_scores(&cache, &seq, 0, &q, &toks, &mut est, &mut sc);
         for (&t, &e) in toks.iter().zip(&est) {
             if t >= 32 {
                 assert_eq!(e, cache.exact_score(&seq, 0, &q, t), "tail row {t} not exact");
@@ -190,14 +529,14 @@ mod tests {
         }
         // The group path must agree with the single-head path.
         let mut grp = vec![0.0; toks.len()];
-        estimate_scores_group(&cache, &seq, 0, &q, 1, &toks, &mut grp);
+        estimate_scores_group(&cache, &seq, 0, &q, 1, &toks, &mut grp, &mut sc);
         assert_eq!(est, grp);
         // A truncated view (chunked prefill mid-chunk) relies only on
         // sealed pages + exact tail: same call, shorter visible length.
         let view = SeqCache { pages: seq.pages[..2].to_vec(), len: 20 };
         let vtoks: Vec<usize> = vec![15, 16, 19];
         let mut vest = vec![0.0; vtoks.len()];
-        estimate_scores(&cache, &view, 0, &q, &vtoks, &mut vest);
+        estimate_scores(&cache, &view, 0, &q, &vtoks, &mut vest, &mut sc);
         assert_eq!(vest[1], cache.exact_score(&view, 0, &q, 16));
         assert_eq!(vest[2], cache.exact_score(&view, 0, &q, 19));
     }
@@ -247,6 +586,24 @@ mod tests {
         qk.spgemv(&q, &rows, &mut sparse);
         for (i, &row) in rows.iter().enumerate() {
             assert_eq!(sparse[i], dense[row]);
+        }
+    }
+
+    #[test]
+    fn gemv_tiled_bit_exact() {
+        let mut r = Rng::new(6);
+        let d = 32;
+        let n = 100; // non-multiple of group_rows: partial final block
+        let k: Vec<f32> = (0..n * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let q: Vec<f32> = (0..d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        for bits in [QuantBits::Int2, QuantBits::Int4, QuantBits::Int8, QuantBits::Fp16] {
+            let qk = QuantizedK::from_rows(&k, d, bits, 16);
+            let mut a = vec![0.0; n];
+            qk.gemv(&q, &mut a);
+            let mut b = vec![0.0; n];
+            let mut tile = Vec::new();
+            qk.gemv_tiled(&q, &mut tile, &mut b);
+            assert_eq!(a, b, "tiled gemv diverged at bits={bits:?}");
         }
     }
 

@@ -20,9 +20,12 @@
 //!    worker, each attending causally over the visible prefix through a
 //!    truncated [`SeqCache`] view — and costs the sum over its span
 //!    (≈ span × context). Each worker runs select → prune →
-//!    varlen-attend per sub-call with its own [`PrunerScratch`],
-//!    read-only cache access, and exclusive access to its items'
-//!    per-sequence selector state;
+//!    varlen-attend per sub-call with its own [`AttnScratch`] arena
+//!    (every per-candidate buffer — candidate list, SpGEMV tiles, top-p
+//!    active set, keep-set union, streaming-softmax state — is reused,
+//!    so a steady-state work unit performs zero heap allocations; see
+//!    DESIGN.md §9), read-only cache access, and exclusive access to
+//!    its items' per-sequence selector state;
 //! 3. **rest-of-layer** — output projection + MLP for every query token.
 //!
 //! **Chunk invariance.** A chunk appends its whole span before attending,
@@ -53,7 +56,7 @@ use crate::governor::signals::SignalHub;
 use crate::governor::BudgetDirective;
 use crate::kvcache::{CacheConfig, CacheError, PagedKvCache, SeqCache};
 use crate::model::{BatchBackend, Model, ModelConfig, SpanRef};
-use crate::pruner::{prune_group, PrunerConfig, PrunerScratch};
+use crate::pruner::{prune_group_into, AttnScratch, PrunerConfig};
 use crate::selector::{SelectorKind, TokenSelector};
 use crate::util::stats::Histogram;
 use crate::util::threadpool::ThreadPool;
@@ -196,6 +199,11 @@ pub struct EngineStats {
     pub kept_sum: u64,
     /// Number of (step × kv-head) sparse attention invocations.
     pub sparse_calls: u64,
+    /// Hier-pages mode: cumulative candidate page runs skipped unscored
+    /// by the page-level pre-prune (0 unless `--hier-pages` ran).
+    pub hier_pages_skipped: u64,
+    /// Hier-pages mode: cumulative candidate page runs seen.
+    pub hier_pages_total: u64,
     /// Histogram of final per-head budgets.
     pub kept_hist: Histogram,
     /// Bytes the pipeline *would* stream on a GPU (sim cost model).
@@ -219,6 +227,8 @@ impl Default for EngineStats {
             candidates_sum: 0,
             kept_sum: 0,
             sparse_calls: 0,
+            hier_pages_skipped: 0,
+            hier_pages_total: 0,
             kept_hist: Histogram::new(0.0, 4096.0, 64),
             est_bytes_select: 0,
             est_bytes_prune: 0,
@@ -280,12 +290,21 @@ pub struct Engine {
     /// of every batched step; `threads == 1` bypasses it entirely and
     /// reproduces strictly sequential execution bit for bit.
     pool: ThreadPool,
-    /// Per-worker pruner scratch, reused across steps so the score
-    /// buffers (the large per-call allocations) only ever grow. The
-    /// attention phase still allocates step-scoped bookkeeping (work
-    /// list, per-item outputs) each layer; those are small and
-    /// proportional to batch × kv-heads, not to context length.
-    scratches: Vec<PrunerScratch>,
+    /// Per-worker attention scratch arenas (selection buffer, SpGEMV
+    /// tiles, top-p active set, keep-set union, recycled outcomes,
+    /// streaming-softmax state), reused across steps so every
+    /// per-candidate/per-context-length buffer only ever grows: the
+    /// steady-state pruned attention call performs zero heap
+    /// allocations. The attention phase still allocates step-scoped
+    /// bookkeeping (work list, LPT buckets) each layer; those are small
+    /// and proportional to batch × kv-heads, not to context length.
+    scratches: Vec<AttnScratch>,
+    /// Recycled per-work-item output buffers (`AttnItemOut::out`) and
+    /// per-call telemetry vectors: popped before each attention phase,
+    /// pushed back after the merge, so the per-(item × kv-head) result
+    /// buffers stop allocating once warm.
+    out_pool: Vec<Vec<f32>>,
+    call_pool: Vec<Vec<CallOut>>,
     /// Prefill chunk span used by [`Engine::prefill`] (the scheduler
     /// reads it as the base span for its own chunk planning).
     prefill_chunk: usize,
@@ -312,6 +331,8 @@ impl Engine {
             directive: BudgetDirective::NEUTRAL,
             pool: ThreadPool::with_default_threads(),
             scratches: Vec::new(),
+            out_pool: Vec::new(),
+            call_pool: Vec::new(),
             prefill_chunk: default_prefill_chunk(),
             last_timing: StepTiming::default(),
         }
@@ -617,7 +638,7 @@ impl Engine {
         }
         let threads = self.pool.threads();
         if self.scratches.len() < threads {
-            self.scratches.resize_with(threads, PrunerScratch::default);
+            self.scratches.resize_with(threads, AttnScratch::default);
         }
         let staged_before =
             self.stats.t_select + self.stats.t_prune + self.stats.t_attend + self.stats.t_dense;
@@ -633,6 +654,8 @@ impl Engine {
             signals: &mut self.signals,
             directive,
             scratches: &mut self.scratches,
+            out_pool: &mut self.out_pool,
+            call_pool: &mut self.call_pool,
             pool: &self.pool,
             probe_interval,
             spans: &spans,
@@ -738,7 +761,10 @@ struct BatchStepBackend<'a> {
     stats: &'a mut EngineStats,
     signals: &'a mut SignalHub,
     directive: BudgetDirective,
-    scratches: &'a mut [PrunerScratch],
+    scratches: &'a mut [AttnScratch],
+    /// Recycled work-item output / telemetry buffers (engine-owned).
+    out_pool: &'a mut Vec<Vec<f32>>,
+    call_pool: &'a mut Vec<Vec<CallOut>>,
     pool: &'a ThreadPool,
     probe_interval: u64,
     /// (start position, span) per batch item.
@@ -798,6 +824,12 @@ struct AttnItem<'a> {
     /// The item's query rows, `[span * q_dim]` (the worker slices out
     /// this KV group per sub-call).
     qs: &'a [f32],
+    /// Recycled output buffer (pre-sized `span * group * d`, zeroed) —
+    /// becomes `AttnItemOut::out` and returns to the engine's pool after
+    /// the merge.
+    out: Vec<f32>,
+    /// Recycled per-call telemetry buffer (cleared).
+    calls: Vec<CallOut>,
 }
 
 /// Per-sparse-sub-call record, re-ordered token-major at the barrier.
@@ -810,6 +842,10 @@ struct CallOut {
     /// `(layer, mean mass, keep ratio)` when the pruner ran.
     prune_record: Option<(usize, f64, f64)>,
     probe: Option<f64>,
+    /// Hier-pages accounting: candidate page runs skipped / seen (0/0
+    /// when the pre-prune is off).
+    hier_skipped: u32,
+    hier_total: u32,
 }
 
 /// The result of one attention work item, merged at the phase barrier in
@@ -832,10 +868,10 @@ struct AttnItemOut {
 }
 
 /// Per-worker execution state: the items LPT assigned to this worker,
-/// its private pruner scratch, and the results it produced.
+/// its private attention scratch arena, and the results it produced.
 struct WorkerCell<'a> {
     items: Vec<AttnItem<'a>>,
-    scratch: PrunerScratch,
+    scratch: AttnScratch,
     results: Vec<AttnItemOut>,
 }
 
@@ -899,6 +935,13 @@ impl BatchBackend for BatchStepBackend<'_> {
                     kv_head: kvh as u32,
                     budget: cost,
                 });
+                // Recycled result buffers: popped here, pushed back after
+                // the merge — steady state allocates nothing per item.
+                let mut out_buf = self.out_pool.pop().unwrap_or_default();
+                out_buf.clear();
+                out_buf.resize(span * group * d, 0.0);
+                let mut calls_buf = self.call_pool.pop().unwrap_or_default();
+                calls_buf.clear();
                 flat_items.push(Some(AttnItem {
                     flat,
                     seq: i,
@@ -911,6 +954,8 @@ impl BatchBackend for BatchStepBackend<'_> {
                     cache,
                     seq_cache,
                     qs: &qs[self.offs[i] * qd..(self.offs[i] + span) * qd],
+                    out: out_buf,
+                    calls: calls_buf,
                 }));
             }
         }
@@ -969,6 +1014,7 @@ impl BatchBackend for BatchStepBackend<'_> {
                 out[base..base + group * d]
                     .copy_from_slice(&r.out[cidx * group * d..(cidx + 1) * group * d]);
             }
+            self.out_pool.push(r.out);
             self.stats.t_select += r.t_select;
             self.stats.t_prune += r.t_prune;
             self.stats.t_attend += r.t_attend;
@@ -997,6 +1043,12 @@ impl BatchBackend for BatchStepBackend<'_> {
                     self.stats.candidates_sum += call.candidates as u64;
                     self.stats.kept_sum += call.kept as u64;
                     self.stats.kept_hist.add(call.kept as f64);
+                    if call.hier_total > 0 {
+                        self.stats.hier_pages_skipped += call.hier_skipped as u64;
+                        self.stats.hier_pages_total += call.hier_total as u64;
+                        self.signals
+                            .record_hier(call.hier_skipped as u64, call.hier_total as u64);
+                    }
                     if let Some((lay, mass, ratio)) = call.prune_record {
                         self.signals.record_prune(lay, mass, ratio);
                     }
@@ -1004,6 +1056,13 @@ impl BatchBackend for BatchStepBackend<'_> {
                         self.probes.push((self.offs[i] + call.cidx, layer, k, recall));
                     }
                 }
+            }
+        }
+        // Return the per-call telemetry vectors to the recycle pool
+        // (capacity-0 vectors never allocated; dropping them is free).
+        for calls in calls_by_flat {
+            if calls.capacity() > 0 {
+                self.call_pool.push(calls);
             }
         }
     }
@@ -1022,7 +1081,7 @@ fn run_attn_item(
     directive: BudgetDirective,
     probe_interval: u64,
     item: AttnItem<'_>,
-    scratch: &mut PrunerScratch,
+    scratch: &mut AttnScratch,
 ) -> AttnItemOut {
     let AttnItem {
         flat,
@@ -1036,16 +1095,19 @@ fn run_attn_item(
         cache,
         seq_cache,
         qs,
+        out: item_out,
+        calls: item_calls,
     } = item;
     let d = c.head_dim;
     let group = c.group();
     let qd = c.q_dim();
     let span = subs.len();
+    debug_assert_eq!(item_out.len(), span * group * d);
     let mut r = AttnItemOut {
         flat,
         seq: seq_idx,
         kv_head,
-        out: vec![0.0; span * group * d],
+        out: item_out,
         t_select: 0.0,
         t_prune: 0.0,
         t_attend: 0.0,
@@ -1053,7 +1115,7 @@ fn run_attn_item(
         bytes_select: 0,
         bytes_prune: 0,
         bytes_attend: 0,
-        calls: Vec::new(),
+        calls: item_calls,
     };
     // Whole-item dense fast path: one multi-query causal kernel call
     // (bit-exact with the per-sub-call loop below — same walk, same
@@ -1123,61 +1185,86 @@ fn run_attn_item(
         // Pre-assigned token-major label: sparse token `c` owns a block
         // of kvn consecutive labels, this head takes its slot within it.
         let call_idx = call_bases[cidx] + kv_head as u64;
-        let mut call =
-            CallOut { cidx, candidates: 0, kept: 0, prune_record: None, probe: None };
+        let mut call = CallOut {
+            cidx,
+            candidates: 0,
+            kept: 0,
+            prune_record: None,
+            probe: None,
+            hier_skipped: 0,
+            hier_total: 0,
+        };
         // --- stage 1: Token Selector (black box, conservative) --------
+        // Candidates land in the arena's reused buffer (taken out for
+        // the duration of this sub-call so the pruner can borrow the
+        // rest of the arena).
+        let mut cands = std::mem::take(&mut scratch.candidates);
         let t = Instant::now();
-        let candidates = selector.select(cache, seq, kv_head, qs_group, group, budget);
+        selector.select_into(cache, seq, kv_head, qs_group, group, budget, &mut cands);
         r.t_select += t.elapsed().as_secs_f64();
         r.bytes_select += selector_bytes(cfg.selector, n, d) as u64;
         // --- stage 2: Twilight Pruner ---------------------------------
-        let (kept, outcomes) = match &cfg.twilight {
-            Some(pc) => {
-                // The governor's p multiplier, clamped so even a
-                // maximally-degraded directive keeps a real top-p.
-                let pc = PrunerConfig {
-                    p: (pc.p * directive.p_scale).clamp(0.05, 0.999),
-                    ..*pc
-                };
-                let t = Instant::now();
-                let (union, outs) =
-                    prune_group(&pc, cache, seq, kv_head, qs_group, group, &candidates, scratch);
-                r.t_prune += t.elapsed().as_secs_f64();
-                r.bytes_prune +=
-                    crate::sim::spgemv_bytes(candidates.len(), d, cache.cfg.mirror_bits) as u64;
-                // Governor telemetry: per-layer captured mass and keep
-                // ratio, plus the periodic dense recall probe on the
-                // group's first query head (cadence from the call label
-                // pre-assigned in token-major order by run_batch).
-                if !candidates.is_empty() {
-                    let mean_mass = outs.iter().map(|o| o.mass as f64).sum::<f64>()
-                        / outs.len().max(1) as f64;
-                    let keep_ratio = union.len() as f64 / candidates.len() as f64;
-                    call.prune_record = Some((layer, mean_mass, keep_ratio));
-                    if probe_interval > 0 && call_idx % probe_interval == 0 {
-                        call.probe = Some(probe_recall(
-                            cache,
-                            seq,
-                            kv_head,
-                            &qs_group[..d],
-                            &candidates,
-                            &outs[0].kept,
-                            pc.p,
-                        ));
-                    }
+        // Results stay in the arena: `scratch.union` (keep-set union)
+        // and `scratch.outcomes` (per-head, buffers recycled).
+        let mut pruned = false;
+        if let Some(pc) = &cfg.twilight {
+            // The governor's p multiplier, clamped so even a
+            // maximally-degraded directive keeps a real top-p; the
+            // hier-pages override toggles the page-level pre-prune.
+            let pc = PrunerConfig {
+                p: (pc.p * directive.p_scale).clamp(0.05, 0.999),
+                hier_pages: directive.hier_pages_override.unwrap_or(pc.hier_pages),
+                ..*pc
+            };
+            let t = Instant::now();
+            let info =
+                prune_group_into(&pc, cache, seq, kv_head, qs_group, group, &cands, scratch);
+            r.t_prune += t.elapsed().as_secs_f64();
+            r.bytes_prune +=
+                crate::sim::spgemv_bytes(cands.len(), d, cache.cfg.mirror_bits) as u64;
+            call.hier_skipped = info.pages_skipped;
+            call.hier_total = info.pages_total;
+            // Governor telemetry: per-layer captured mass and keep
+            // ratio, plus the periodic dense recall probe on the
+            // group's first query head (cadence from the call label
+            // pre-assigned in token-major order by run_batch).
+            if !cands.is_empty() {
+                let mean_mass = scratch.outcomes.iter().map(|o| o.mass as f64).sum::<f64>()
+                    / scratch.outcomes.len().max(1) as f64;
+                let keep_ratio = scratch.union.len() as f64 / cands.len() as f64;
+                call.prune_record = Some((layer, mean_mass, keep_ratio));
+                if probe_interval > 0 && call_idx % probe_interval == 0 {
+                    call.probe = Some(probe_recall(
+                        cache,
+                        seq,
+                        kv_head,
+                        &qs_group[..d],
+                        &cands,
+                        &scratch.outcomes[0].kept,
+                        pc.p,
+                    ));
                 }
-                (union, Some(outs))
             }
-            None => (candidates.clone(), None),
-        };
-        call.candidates = candidates.len();
+            pruned = true;
+        }
+        let kept_union = std::mem::take(&mut scratch.union);
+        let kept: &[usize] = if pruned { &kept_union } else { &cands };
+        call.candidates = cands.len();
         call.kept = kept.len();
         // --- stage 3: sparse attention kernel -------------------------
         let t = Instant::now();
         match cfg.attn {
             AttnVariant::GroupVarlen => {
-                crate::attention::sparse::group_varlen(
-                    cache, seq, kv_head, qs_group, group, &kept, out,
+                crate::attention::sparse::group_varlen_with(
+                    cache,
+                    seq,
+                    kv_head,
+                    qs_group,
+                    group,
+                    kept,
+                    &mut scratch.attn_m,
+                    &mut scratch.attn_denom,
+                    out,
                 );
             }
             AttnVariant::HeadVarlen => {
@@ -1187,7 +1274,7 @@ fn run_attn_item(
                         seq,
                         kv_head,
                         &qs_group[g * d..(g + 1) * d],
-                        &kept,
+                        kept,
                         &mut out[g * d..(g + 1) * d],
                     );
                 }
@@ -1200,7 +1287,7 @@ fn run_attn_item(
                         seq,
                         kv_head,
                         &qs_group[g * d..(g + 1) * d],
-                        &kept,
+                        kept,
                         max_budget,
                         &mut out[g * d..(g + 1) * d],
                     );
@@ -1219,42 +1306,40 @@ fn run_attn_item(
             // pruner ran (baseline mode) or it short-circuited without
             // scoring (candidates ≤ min_keep, where the exact pass is a
             // handful of dot products).
-            let scored = outcomes.as_ref().filter(|outs| {
-                outs.iter().all(|o| o.weights.len() == o.kept.len())
-                    && outs.iter().any(|o| !o.weights.is_empty())
-            });
-            match scored {
-                Some(outs) => {
-                    let mut w = vec![0.0f32; kept.len()];
-                    for o in outs {
-                        for (t, &x) in o.kept.iter().zip(&o.weights) {
-                            if let Ok(j) = kept.binary_search(t) {
-                                w[j] += x;
-                            }
+            let scored = pruned
+                && scratch.outcomes.iter().all(|o| o.weights.len() == o.kept.len())
+                && scratch.outcomes.iter().any(|o| !o.weights.is_empty());
+            if scored {
+                scratch.obs_w.clear();
+                scratch.obs_w.resize(kept.len(), 0.0);
+                for o in scratch.outcomes.iter() {
+                    for (t, &x) in o.kept.iter().zip(&o.weights) {
+                        if let Ok(j) = kept.binary_search(t) {
+                            scratch.obs_w[j] += x;
                         }
                     }
-                    let sum: f32 = w.iter().sum();
-                    if sum > 0.0 {
-                        let inv = 1.0 / sum;
-                        for x in w.iter_mut() {
-                            *x *= inv;
-                        }
+                }
+                let sum: f32 = scratch.obs_w.iter().sum();
+                if sum > 0.0 {
+                    let inv = 1.0 / sum;
+                    for x in scratch.obs_w.iter_mut() {
+                        *x *= inv;
                     }
-                    selector.observe(&kept, &w);
                 }
-                None => {
-                    let mut w: Vec<f32> = kept
-                        .iter()
-                        .map(|&t| {
-                            cache.exact_score(seq, kv_head, &qs_group[..d], t)
-                                * crate::attention::scale(d)
-                        })
-                        .collect();
-                    crate::tensor::softmax_inplace(&mut w);
-                    selector.observe(&kept, &w);
-                }
+                selector.observe(kept, &scratch.obs_w);
+            } else {
+                scratch.obs_w.clear();
+                scratch.obs_w.extend(kept.iter().map(|&t| {
+                    cache.exact_score(seq, kv_head, &qs_group[..d], t)
+                        * crate::attention::scale(d)
+                }));
+                crate::tensor::softmax_inplace(&mut scratch.obs_w);
+                selector.observe(kept, &scratch.obs_w);
             }
         }
+        // Return the taken buffers to the arena for the next sub-call.
+        scratch.union = kept_union;
+        scratch.candidates = cands;
         r.calls.push(call);
     }
     r

@@ -64,6 +64,10 @@ pub struct ServingReport {
     pub duration: f64,
     /// Governor decision trace (empty for ungoverned runs).
     pub governor: Vec<TraceEntry>,
+    /// Hierarchical page pre-prune accounting (0/0 unless `--hier-pages`
+    /// ran): candidate page runs skipped unscored / seen.
+    pub hier_pages_skipped: u64,
+    pub hier_pages_total: u64,
 }
 
 impl ServingReport {
@@ -123,6 +127,16 @@ impl ServingReport {
         self.requests.iter().filter(|r| r.rejected).count()
     }
 
+    /// Fraction of candidate pages the hier pre-prune skipped (0 when the
+    /// mode never ran).
+    pub fn hier_skip_frac(&self) -> f64 {
+        if self.hier_pages_total == 0 {
+            0.0
+        } else {
+            self.hier_pages_skipped as f64 / self.hier_pages_total as f64
+        }
+    }
+
     /// JSON for result files.
     pub fn to_json(&self) -> Json {
         let tpot = self.tpot_summary();
@@ -143,6 +157,11 @@ impl ServingReport {
             ("preemptions", Json::Num(self.preemptions() as f64)),
             ("rejected", Json::Num(self.rejected() as f64)),
         ];
+        if self.hier_pages_total > 0 {
+            kv.push(("hier_pages_skipped", Json::Num(self.hier_pages_skipped as f64)));
+            kv.push(("hier_pages_total", Json::Num(self.hier_pages_total as f64)));
+            kv.push(("hier_skip_frac", Json::Num(self.hier_skip_frac())));
+        }
         if !self.governor.is_empty() {
             let pmin = self.governor.iter().map(|e| e.p_scale).fold(f32::INFINITY, f32::min);
             let pmax = self.governor.iter().map(|e| e.p_scale).fold(f32::NEG_INFINITY, f32::max);
@@ -232,7 +251,7 @@ mod tests {
         let rep = ServingReport {
             requests: vec![rm(0.0, 0.5, 1.5, 11), rej],
             duration: 1.5,
-            governor: Vec::new(),
+            ..Default::default()
         };
         assert_eq!(rep.rejected(), 1);
         assert!((rep.ttft_summary().mean - 0.5).abs() < 1e-12);
@@ -251,7 +270,7 @@ mod tests {
         let rep = ServingReport {
             requests: vec![rm(0.0, 0.1, 1.1, 11), rm(0.0, 0.2, 2.2, 21)],
             duration: 2.2,
-            governor: Vec::new(),
+            ..Default::default()
         };
         assert_eq!(rep.total_output_tokens(), 32);
         assert!((rep.throughput_tok_s() - 32.0 / 2.2).abs() < 1e-9);
@@ -279,6 +298,7 @@ mod tests {
             governor: (0..200)
                 .map(|i| entry(i as f64 * 0.01, 1.0 - i as f32 * 0.002, 1.0, (i / 100) as u8))
                 .collect(),
+            ..Default::default()
         };
         let j = rep.to_json();
         assert_eq!(j.get_usize("governor_decisions"), Some(200));

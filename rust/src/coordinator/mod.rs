@@ -114,12 +114,17 @@ impl SparseConfig {
     }
 
     /// The paper's recommended deployment: base selector at 1/4 context
-    /// plus the Twilight pruner at threshold `p`.
+    /// plus the Twilight pruner at threshold `p`. The hierarchical
+    /// page-level pre-prune is opt-in via `TWILIGHT_HIER_PAGES=1` (or
+    /// `--hier-pages` / the config file / a governor directive); the
+    /// default pipeline stays bit-exact with the historical path.
     pub fn twilight(selector: SelectorKind, p: f32) -> SparseConfig {
+        let hier_pages =
+            std::env::var("TWILIGHT_HIER_PAGES").is_ok_and(|v| v == "1" || v == "true");
         SparseConfig {
             selector,
             budget: BudgetSpec::Fraction(0.25),
-            twilight: Some(PrunerConfig { p, ..Default::default() }),
+            twilight: Some(PrunerConfig { p, hier_pages, ..Default::default() }),
             skip_layers: 2,
             dense_below: 64,
             attn: AttnVariant::GroupVarlen,
@@ -149,7 +154,10 @@ impl SparseConfig {
             Some(tw) => {
                 let p = tw.get_f64("p").unwrap_or(0.95) as f32;
                 let min_keep = tw.get_usize("min_keep").unwrap_or(4);
-                Some(PrunerConfig { p, min_keep, ..Default::default() })
+                let hier_pages = matches!(tw.get("hier_pages"), Some(Json::Bool(true)));
+                let base = PrunerConfig::default();
+                let hier_eps = tw.get_f64("hier_eps").unwrap_or(base.hier_eps as f64) as f32;
+                Some(PrunerConfig { p, min_keep, hier_pages, hier_eps, ..base })
             }
         };
         Ok(SparseConfig {
@@ -163,9 +171,13 @@ impl SparseConfig {
         })
     }
 
-    /// Short human-readable label for reports ("quest+twi(p=0.95)").
+    /// Short human-readable label for reports ("quest+twi(p=0.95)",
+    /// "+hier" appended when the page pre-prune is on).
     pub fn label(&self) -> String {
         match &self.twilight {
+            Some(t) if t.hier_pages => {
+                format!("{}+twi(p={})+hier", self.selector.name(), t.p)
+            }
             Some(t) => format!("{}+twi(p={})", self.selector.name(), t.p),
             None => match self.budget {
                 BudgetSpec::Fixed(b) => format!("{}(B={b})", self.selector.name()),
@@ -224,6 +236,20 @@ mod tests {
         assert!((c.twilight.unwrap().p - 0.85).abs() < 1e-6);
         assert_eq!(c.skip_layers, 1);
         assert_eq!(c.label(), "quest+twi(p=0.85)");
+    }
+
+    #[test]
+    fn hier_pages_via_json_and_label() {
+        let j = Json::parse(
+            r#"{"selector":"quest","budget":"0.25f",
+                "twilight":{"p":0.9,"hier_pages":true,"hier_eps":0.01}}"#,
+        )
+        .unwrap();
+        let c = SparseConfig::from_json(&j).unwrap();
+        let t = c.twilight.unwrap();
+        assert!(t.hier_pages);
+        assert!((t.hier_eps - 0.01).abs() < 1e-6);
+        assert_eq!(c.label(), "quest+twi(p=0.9)+hier");
     }
 
     #[test]

@@ -424,7 +424,13 @@ impl Scheduler {
             })
             .collect();
         let governor = self.governor.as_mut().map(|g| g.take_trace()).unwrap_or_default();
-        ServingReport { requests, duration, governor }
+        ServingReport {
+            requests,
+            duration,
+            governor,
+            hier_pages_skipped: self.engine.signals.hier_pages_skipped(),
+            hier_pages_total: self.engine.signals.hier_pages_total(),
+        }
     }
 
     /// Finished requests (for output inspection).
@@ -462,6 +468,8 @@ impl Scheduler {
             ("total_pages", Json::Num(self.engine.total_pages() as f64)),
             ("mean_mass", Json::Num(self.engine.signals.mean_mass())),
             ("probe_recall", Json::Num(self.engine.signals.probe_recall())),
+            ("hier_pages_skipped", Json::Num(self.engine.signals.hier_pages_skipped() as f64)),
+            ("hier_skip_frac", Json::Num(self.engine.signals.hier_skip_frac())),
         ];
         if let Some(g) = &self.governor {
             kv.push(("governor", g.state_json()));

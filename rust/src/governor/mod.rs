@@ -48,6 +48,13 @@ pub struct BudgetDirective {
     pub budget_scale: f32,
     /// Replaces `SparseConfig::dense_below` when set.
     pub dense_below_override: Option<usize>,
+    /// Toggles the pruner's hierarchical page-level top-p pre-prune
+    /// (`PrunerConfig::hier_pages`) when set: a policy can switch the
+    /// cheaper page-bounded scoring on under load (it trades ≤ hier_eps
+    /// of captured mass for skipping cold pages' SpGEMV entirely) or
+    /// force it off for accuracy-critical phases. `None` leaves the
+    /// configured default in force.
+    pub hier_pages_override: Option<bool>,
     /// Pressure ladder rung (0 = none); the scheduler throttles
     /// admission from level 2 and freezes it at level 3.
     pub degrade_level: u8,
@@ -58,6 +65,7 @@ impl BudgetDirective {
         p_scale: 1.0,
         budget_scale: 1.0,
         dense_below_override: None,
+        hier_pages_override: None,
         degrade_level: 0,
     };
 
@@ -287,6 +295,13 @@ impl Governor {
                     None => Json::Null,
                 },
             ),
+            (
+                "hier_pages_override",
+                match self.directive.hier_pages_override {
+                    Some(v) => Json::Bool(v),
+                    None => Json::Null,
+                },
+            ),
             ("slo_tpot_ms", Json::Num(self.slo.cfg.target_tpot_s * 1e3)),
             ("tpot_ema_ms", Json::Num(self.slo.tpot_ema() * 1e3)),
             ("slo_violation_rate", Json::Num(self.slo.violation_rate())),
@@ -313,12 +328,14 @@ mod tests {
             p_scale: 9.0,
             budget_scale: 0.0,
             dense_below_override: Some(1 << 20),
+            hier_pages_override: Some(true),
             degrade_level: 99,
         }
         .clamped();
         assert_eq!(wild.p_scale, BudgetDirective::P_SCALE_RANGE.1);
         assert_eq!(wild.budget_scale, BudgetDirective::BUDGET_SCALE_RANGE.0);
         assert_eq!(wild.dense_below_override, Some(BudgetDirective::DENSE_BELOW_MAX));
+        assert_eq!(wild.hier_pages_override, Some(true), "bool knob passes through clamping");
         assert_eq!(wild.degrade_level, 3);
         let nan = BudgetDirective {
             p_scale: f32::NAN,

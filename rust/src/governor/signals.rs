@@ -119,6 +119,11 @@ pub struct SignalHub {
     layers: Vec<LayerSignal>,
     probe_recall: Ema,
     probe_interval: u64,
+    /// Hierarchical page pre-prune accounting (cumulative): candidate
+    /// page runs seen and page runs skipped unscored. Zero unless
+    /// `hier_pages` mode ran.
+    hier_skipped: u64,
+    hier_total: u64,
 }
 
 impl SignalHub {
@@ -127,6 +132,34 @@ impl SignalHub {
             layers: (0..n_layers).map(|_| LayerSignal::new(DEFAULT_WINDOW)).collect(),
             probe_recall: Ema::new(0.2),
             probe_interval: DEFAULT_PROBE_INTERVAL,
+            hier_skipped: 0,
+            hier_total: 0,
+        }
+    }
+
+    /// Record one hier-pages prune call's page accounting.
+    pub fn record_hier(&mut self, skipped: u64, total: u64) {
+        self.hier_skipped += skipped;
+        self.hier_total += total;
+    }
+
+    /// Cumulative candidate page runs skipped by the hier pre-prune.
+    pub fn hier_pages_skipped(&self) -> u64 {
+        self.hier_skipped
+    }
+
+    /// Cumulative candidate page runs seen by the hier pre-prune.
+    pub fn hier_pages_total(&self) -> u64 {
+        self.hier_total
+    }
+
+    /// Fraction of candidate pages the hier pre-prune skipped (0 when the
+    /// mode never ran).
+    pub fn hier_skip_frac(&self) -> f64 {
+        if self.hier_total == 0 {
+            0.0
+        } else {
+            self.hier_skipped as f64 / self.hier_total as f64
         }
     }
 
@@ -298,6 +331,17 @@ mod tests {
         h.record_probe(0.5);
         assert!(h.probe_recall() < 1.0);
         assert_eq!(h.probes(), 1);
+    }
+
+    #[test]
+    fn hier_counters_accumulate() {
+        let mut h = SignalHub::new(1);
+        assert_eq!(h.hier_skip_frac(), 0.0, "no hier data: frac is 0");
+        h.record_hier(3, 10);
+        h.record_hier(2, 10);
+        assert_eq!(h.hier_pages_skipped(), 5);
+        assert_eq!(h.hier_pages_total(), 20);
+        assert!((h.hier_skip_frac() - 0.25).abs() < 1e-12);
     }
 
     #[test]

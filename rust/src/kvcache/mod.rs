@@ -10,8 +10,13 @@
 //! * a low-precision mirror of K (per-(page, head) asymmetric INT4 by
 //!   default) is kept alongside, in the same paged layout — this is the
 //!   "extra INT4 quantized K cache" of §4.2, costing 1/8 extra memory;
+//!   the pruner's page-tiled SpGEMV unpacks a mirror block's codes once
+//!   per candidate run (`tensor::quant::unpack_codes_into`) rather than
+//!   once per row;
 //! * per-(page, head) elementwise min/max of K is kept for the Quest
-//!   selector's upper-bound score.
+//!   selector's upper-bound score — and, with `--hier-pages`, doubles as
+//!   the pruner's page-level logit bound (plus the mirror block's
+//!   `quant::max_error` slack) for hierarchical top-p early stopping.
 //!
 //! **Sealing contract.** A page's mirror block is built exactly once, when
 //! the page *seals* (its last slot is appended) — the paper quantizes at
@@ -322,42 +327,16 @@ pub fn quant_dot_row_group(
     let group = qsums.len();
     debug_assert_eq!(qs.len(), group * d);
     debug_assert!(d <= MAX_HEAD_DIM);
+    // One shared widening routine (`unpack_codes_into`) serves this row
+    // path, the single-head path below, and the page-tile unpack, so the
+    // per-width bit-twiddling cannot drift apart.
     let mut codes = [0.0f32; MAX_HEAD_DIM];
-    match b.bits {
-        QuantBits::Fp16 => {
-            for (i, c) in codes[..d].iter_mut().enumerate() {
-                let j = offset + i;
-                let h = u16::from_le_bytes([b.packed[2 * j], b.packed[2 * j + 1]]);
-                *c = crate::tensor::fp16::f16_to_f32(h);
-            }
-            for g in 0..group {
-                out[g] = crate::tensor::dot(&qs[g * d..(g + 1) * d], &codes[..d]);
-            }
-            return;
+    quant::unpack_codes_into(b, offset, &mut codes[..d]);
+    if b.bits == QuantBits::Fp16 {
+        for g in 0..group {
+            out[g] = crate::tensor::dot(&qs[g * d..(g + 1) * d], &codes[..d]);
         }
-        QuantBits::Int8 => {
-            for (c, &byte) in codes[..d].iter_mut().zip(&b.packed[offset..offset + d]) {
-                *c = byte as f32;
-            }
-        }
-        QuantBits::Int4 => {
-            debug_assert!(offset % 2 == 0 && d % 2 == 0);
-            let bytes = &b.packed[offset / 2..offset / 2 + d / 2];
-            for (p, &byte) in bytes.iter().enumerate() {
-                codes[2 * p] = (byte & 0x0F) as f32;
-                codes[2 * p + 1] = (byte >> 4) as f32;
-            }
-        }
-        QuantBits::Int2 => {
-            debug_assert!(offset % 4 == 0 && d % 4 == 0);
-            let bytes = &b.packed[offset / 4..offset / 4 + d / 4];
-            for (p, &byte) in bytes.iter().enumerate() {
-                codes[4 * p] = (byte & 0x03) as f32;
-                codes[4 * p + 1] = ((byte >> 2) & 0x03) as f32;
-                codes[4 * p + 2] = ((byte >> 4) & 0x03) as f32;
-                codes[4 * p + 3] = (byte >> 6) as f32;
-            }
-        }
+        return;
     }
     for g in 0..group {
         out[g] = b.zero * qsums[g]
@@ -383,48 +362,24 @@ pub fn quant_dot_row_qsum(q: &[f32], qsum: f32, b: &QuantBlock, offset: usize, d
     debug_assert!(offset + d <= b.n);
     debug_assert_eq!(q.len(), d);
     debug_assert!(d <= MAX_HEAD_DIM);
-    match b.bits {
-        QuantBits::Fp16 => {
-            let mut acc = 0.0f32;
-            for (i, &qi) in q.iter().enumerate() {
-                let j = offset + i;
-                let h = u16::from_le_bytes([b.packed[2 * j], b.packed[2 * j + 1]]);
-                acc += qi * crate::tensor::fp16::f16_to_f32(h);
-            }
-            acc
+    if b.bits == QuantBits::Fp16 {
+        // Fused sequential accumulation — the historical single-head
+        // Fp16 order; kept distinct from the group path's vectorized
+        // `dot` so results stay bit-for-bit stable.
+        let mut acc = 0.0f32;
+        for (i, &qi) in q.iter().enumerate() {
+            let j = offset + i;
+            let h = u16::from_le_bytes([b.packed[2 * j], b.packed[2 * j + 1]]);
+            acc += qi * crate::tensor::fp16::f16_to_f32(h);
         }
-        QuantBits::Int8 => {
-            let mut codes = [0.0f32; MAX_HEAD_DIM];
-            for (c, &byte) in codes[..d].iter_mut().zip(&b.packed[offset..offset + d]) {
-                *c = byte as f32;
-            }
-            b.zero * qsum + b.scale * crate::tensor::dot(q, &codes[..d])
-        }
-        QuantBits::Int4 => {
-            // Page rows are d-aligned and d is even in all our models, so
-            // the row starts on a byte boundary.
-            debug_assert!(offset % 2 == 0 && d % 2 == 0);
-            let bytes = &b.packed[offset / 2..offset / 2 + d / 2];
-            let mut codes = [0.0f32; MAX_HEAD_DIM];
-            for (p, &byte) in bytes.iter().enumerate() {
-                codes[2 * p] = (byte & 0x0F) as f32;
-                codes[2 * p + 1] = (byte >> 4) as f32;
-            }
-            b.zero * qsum + b.scale * crate::tensor::dot(q, &codes[..d])
-        }
-        QuantBits::Int2 => {
-            debug_assert!(offset % 4 == 0 && d % 4 == 0);
-            let bytes = &b.packed[offset / 4..offset / 4 + d / 4];
-            let mut codes = [0.0f32; MAX_HEAD_DIM];
-            for (p, &byte) in bytes.iter().enumerate() {
-                codes[4 * p] = (byte & 0x03) as f32;
-                codes[4 * p + 1] = ((byte >> 2) & 0x03) as f32;
-                codes[4 * p + 2] = ((byte >> 4) & 0x03) as f32;
-                codes[4 * p + 3] = (byte >> 6) as f32;
-            }
-            b.zero * qsum + b.scale * crate::tensor::dot(q, &codes[..d])
-        }
+        return acc;
     }
+    // Integer widths: widen via the shared `unpack_codes_into` (also
+    // used by the group path and the page-tile unpack — one copy of the
+    // bit-twiddling), then one vectorized dot.
+    let mut codes = [0.0f32; MAX_HEAD_DIM];
+    quant::unpack_codes_into(b, offset, &mut codes[..d]);
+    b.zero * qsum + b.scale * crate::tensor::dot(q, &codes[..d])
 }
 
 #[cfg(test)]

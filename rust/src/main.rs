@@ -15,6 +15,13 @@
 //! latency), `--prefill-budget` the per-step prompt-token budget shared
 //! by all co-scheduled chunks of a mixed step.
 //!
+//! `--hier-pages` (also `TWILIGHT_HIER_PAGES=1`) enables the pruner's
+//! hierarchical page-level top-p pre-prune: candidate pages are scored
+//! in descending Quest-bound order and cold pages are skipped once they
+//! provably cannot shift the top-p mass by more than `--hier-eps`
+//! (default 0.02; kept mass stays ≥ p − hier_eps). Skipped-page counts
+//! appear in `stats` / serving reports.
+//!
 //! `--governor` attaches the adaptive budget governor (DESIGN.md §8):
 //! it closes the loop on p / B0 against prune-mass telemetry, the
 //! `--slo-tpot-ms` latency target, and KV page-pool pressure.
@@ -55,6 +62,17 @@ fn sparse_config_from_args(a: &Args) -> SparseConfig {
     if let Some(b) = a.get("budget") {
         if let Some(spec) = twilight::coordinator::BudgetSpec::parse(b) {
             cfg.budget = spec;
+        }
+    }
+    // Hierarchical page-level top-p pre-prune (also TWILIGHT_HIER_PAGES=1).
+    if a.flag("hier-pages") {
+        if let Some(t) = cfg.twilight.as_mut() {
+            t.hier_pages = true;
+        }
+    }
+    if let Some(e) = a.get("hier-eps") {
+        if let (Some(t), Ok(eps)) = (cfg.twilight.as_mut(), e.parse::<f32>()) {
+            t.hier_eps = eps.clamp(0.0, 0.5);
         }
     }
     cfg.skip_layers =
@@ -254,7 +272,7 @@ fn main() {
         usage();
     }
     let cmd = all[0].clone();
-    let a = Args::parse(all.into_iter().skip(1), &["no-twilight", "help"]);
+    let a = Args::parse(all.into_iter().skip(1), &["no-twilight", "help", "hier-pages"]);
     logging::set_level(logging::level_from_str(&a.str_or("log", "info")));
     match cmd.as_str() {
         "serve" => cmd_serve(&a),

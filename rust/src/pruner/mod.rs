@@ -4,18 +4,49 @@
 //! Given the candidate token set chosen by a (black-box) Token Selector
 //! under a conservative budget, the pruner:
 //! 1. estimates attention logits for the candidates from the INT4 mirror
-//!    K cache (SpGEMV, Appendix B.1);
+//!    K cache (page-tiled SpGEMV, Appendix B.1);
 //! 2. softmax-normalizes them (top-p requires normalized weights —
 //!    Table 1's "Need Normalization?" column);
 //! 3. runs top-p binary search (Algorithm 1) to keep the minimal subset
 //!    with cumulative estimated mass ≥ p;
 //! 4. under GQA, unions the per-query-head keep-sets across the group so
 //!    the group-varlen attention kernel loads each KV row once (B.2).
+//!
+//! **Hot path.** The engine calls [`prune_group_into`], which leaves the
+//! union and per-head outcomes in the caller's [`AttnScratch`] arena —
+//! every buffer the pipeline touches (SpGEMV tiles and qsums, softmax
+//! rows, the binary search's active set, the min-keep floor's order, the
+//! keep-set union, the recycled [`PruneOutcome`] vectors) is reused
+//! across calls, so steady-state decode performs **zero heap
+//! allocations** per pruned attention call (pinned by
+//! `rust/tests/alloc_count.rs`). [`prune_head`] / [`prune_group`] are
+//! thin compatibility wrappers that clone the results out.
+//!
+//! **Hierarchical page-level pre-prune** (opt-in:
+//! `PrunerConfig::hier_pages`, surfaced as `--hier-pages` /
+//! `TWILIGHT_HIER_PAGES` and a `BudgetDirective` knob). Before SpGEMV,
+//! each candidate page's maximum *estimated* logit is upper-bounded from
+//! the cache's Quest min/max metadata plus the mirror block's
+//! quantization slack; pages are scored in descending bound order, and
+//! scoring stops once the banked softmax mass proves the remaining pages
+//! cannot shift any head's top-p mass by more than
+//! [`PrunerConfig::hier_eps`] — so the kept set's captured mass (w.r.t.
+//! the full candidate softmax) stays ≥ `p − hier_eps`. Skipped-page
+//! counts flow into `SignalHub` / `EngineStats` / `ServingReport`
+//! telemetry. With nothing skipped the hier path is bit-identical to the
+//! default path (scores are scattered back to candidate order before the
+//! softmax), which is also why default mode is pinned: `hier_pages:
+//! false` never reorders anything.
 
 pub mod topp;
 
-use crate::attention::spgemv::estimate_scores;
+use crate::attention::spgemv::{
+    estimate_scores, estimate_scores_group, estimate_scores_group_with_qsums, run_end,
+    sealed_limit, SpgemvScratch,
+};
 use crate::kvcache::{PagedKvCache, SeqCache};
+use crate::tensor::quant::{self, QuantBits};
+use topp::{topp_binary_search_into, topp_sort, ToppScratch};
 
 /// Pruner configuration.
 #[derive(Clone, Copy, Debug)]
@@ -28,16 +59,31 @@ pub struct PrunerConfig {
     pub min_keep: usize,
     /// Use the sort oracle instead of binary search (ablations).
     pub use_sort: bool,
+    /// Hierarchical page-level top-p pre-prune (see module docs). Off by
+    /// default: the default pipeline is bit-exact with the historical
+    /// row-major path.
+    pub hier_pages: bool,
+    /// Mass tolerance of the page pre-prune: scoring stops only when the
+    /// unscored pages provably cannot change any head's captured top-p
+    /// mass by more than this, so kept mass ≥ p − hier_eps.
+    pub hier_eps: f32,
 }
 
 impl Default for PrunerConfig {
     fn default() -> Self {
-        PrunerConfig { p: 0.95, eps: 1e-4, min_keep: 4, use_sort: false }
+        PrunerConfig {
+            p: 0.95,
+            eps: 1e-4,
+            min_keep: 4,
+            use_sort: false,
+            hier_pages: false,
+            hier_eps: 0.02,
+        }
     }
 }
 
 /// Outcome of pruning one query head.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct PruneOutcome {
     /// Kept logical token indices (subset of the candidates), ascending.
     pub kept: Vec<usize>,
@@ -52,15 +98,121 @@ pub struct PruneOutcome {
     pub iters: usize,
 }
 
-/// Scratch buffers reused across calls (hot path: no allocation).
+/// Page-level accounting of one hierarchical prune call: how many
+/// candidate page runs existed and how many were skipped unscored.
+/// All-zero when the hier pre-prune is disabled.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HierPruneInfo {
+    pub pages_total: u32,
+    pub pages_skipped: u32,
+}
+
+/// The per-worker scratch arena of the pruned-attention hot path (grown
+/// from the historical `PrunerScratch`; that name survives as an alias).
+/// One instance per attention worker, threaded through selection
+/// (`TokenSelector::select_into`), pruning ([`prune_group_into`]), the
+/// sparse kernel (`attention::sparse::group_varlen_with`), and the
+/// stateful-selector observation feedback. Every buffer's capacity only
+/// grows, so steady-state decode performs zero heap allocations per
+/// (item × kv-head) work unit.
 #[derive(Default)]
-pub struct PrunerScratch {
+pub struct AttnScratch {
+    /// Single-head score buffer ([`prune_head`]).
     scores: Vec<f32>,
+    /// Group score matrix, `[group][candidates]` flattened.
     group_scores: Vec<f32>,
+    /// SpGEMV tile / qsum / row staging.
+    pub spgemv: SpgemvScratch,
+    /// Top-p binary search buffers.
+    pub topp: ToppScratch,
+    /// Min-keep floor's partial-selection order.
+    floor_order: Vec<usize>,
+    /// Stage-1 candidate buffer (filled by `TokenSelector::select_into`).
+    pub candidates: Vec<usize>,
+    /// Keep-set union across the GQA group (ascending, deduped) —
+    /// the result of the latest [`prune_group_into`].
+    pub union: Vec<usize>,
+    /// Per-head outcomes of the latest [`prune_group_into`]; element
+    /// vectors are recycled in place across calls.
+    pub outcomes: Vec<PruneOutcome>,
+    /// Streaming-softmax state for `group_varlen_with`.
+    pub attn_m: Vec<f32>,
+    /// Streaming-softmax denominators for `group_varlen_with`.
+    pub attn_denom: Vec<f32>,
+    /// Observation-feedback weight staging (engine).
+    pub obs_w: Vec<f32>,
+    /// Hierarchical page pre-prune state.
+    hier: HierScratch,
+}
+
+/// Historical name of the arena (pre-dating the attention/selector
+/// buffers); kept so existing callers compile unchanged.
+pub type PrunerScratch = AttnScratch;
+
+/// One per-page run of candidate indices (hier pre-prune).
+#[derive(Clone, Copy, Default)]
+struct RunInfo {
+    /// Candidate-index range `[start, end)`.
+    start: usize,
+    end: usize,
+    /// Ordering key: max over the group of the scaled logit upper bound
+    /// (+∞ for unsealed-tail runs, which are always scored first).
+    key: f32,
+}
+
+#[derive(Default)]
+struct HierScratch {
+    runs: Vec<RunInfo>,
+    /// Run visit order (descending bound).
+    order: Vec<usize>,
+    /// Per-(run × head) scaled logit upper bounds.
+    bounds: Vec<f32>,
+    /// Per-candidate "was scored" marks.
+    scored: Vec<bool>,
+    /// Per-run scoring staging, `[group][run_len]`.
+    run_out: Vec<f32>,
+    /// Scored candidate positions, ascending.
+    compact_pos: Vec<usize>,
+    /// Token ids of the scored candidates, ascending (aligned with
+    /// `compact_pos`).
+    compact_cands: Vec<usize>,
+    /// Scored score matrix, `[group][compact]`.
+    compact_scores: Vec<f32>,
+    /// Streaming per-head scaled-logit max / exp-sum (stop rule only —
+    /// the final softmax is recomputed from the compact scores, so f64
+    /// here cannot perturb the numerics).
+    m: Vec<f64>,
+    s: Vec<f64>,
+    /// Per-head `Σ|q_i|` (quantization-slack term of the page bound).
+    qabs: Vec<f32>,
+    /// Per-head max finite bound (shift for the suffix sums below).
+    bmax: Vec<f32>,
+    /// Per-(order position × head) suffix sums of
+    /// `len · exp(bound − bmax)` over the not-yet-visited runs: fixed
+    /// after ordering, so each stop check is O(group) instead of
+    /// rescanning the remaining tail (O(runs²·group) worst case).
+    suffix: Vec<f64>,
+}
+
+/// Reuse the outcome vector in place: truncate/extend to `group`,
+/// clearing each element's buffers without freeing them.
+fn reset_outcomes(outs: &mut Vec<PruneOutcome>, group: usize) {
+    outs.truncate(group);
+    for o in outs.iter_mut() {
+        o.kept.clear();
+        o.weights.clear();
+        o.mass = 0.0;
+        o.iters = 0;
+    }
+    while outs.len() < group {
+        outs.push(PruneOutcome::default());
+    }
 }
 
 /// Prune `candidates` for a single query head `q` against `kv_head`'s
-/// mirror cache. Returns the kept subset (minimal top-p set).
+/// mirror cache. Returns the kept subset (minimal top-p set). Not the
+/// engine hot path (that is [`prune_group_into`]); the returned outcome
+/// owns its vectors.
 pub fn prune_head(
     cfg: &PrunerConfig,
     cache: &PagedKvCache,
@@ -68,29 +220,81 @@ pub fn prune_head(
     kv_head: usize,
     q: &[f32],
     candidates: &[usize],
-    scratch: &mut PrunerScratch,
+    scratch: &mut AttnScratch,
 ) -> PruneOutcome {
     let n = candidates.len();
     if n <= cfg.min_keep {
         return PruneOutcome { kept: candidates.to_vec(), mass: 1.0, weights: Vec::new(), iters: 0 };
     }
     scratch.scores.resize(n, 0.0);
-    // (1) SpGEMV estimation from the INT4 mirror.
-    estimate_scores(cache, seq, kv_head, q, candidates, &mut scratch.scores);
-    // (2) scale + softmax over the candidate subset.
+    // (1) SpGEMV estimation from the INT4 mirror (page-tiled).
+    estimate_scores(
+        cache,
+        seq,
+        kv_head,
+        q,
+        candidates,
+        &mut scratch.scores,
+        &mut scratch.spgemv,
+    );
+    // (2) scale + softmax, (3) top-p, (4) min_keep floor — shared with
+    // the group path. The union buffer doubles as throwaway here.
     let s = crate::attention::scale(q.len());
-    for x in scratch.scores.iter_mut() {
-        *x *= s;
+    let mut out = PruneOutcome::default();
+    scratch.union.clear();
+    finish_head(
+        &mut scratch.scores,
+        candidates,
+        cfg,
+        s,
+        &mut scratch.topp,
+        &mut scratch.floor_order,
+        &mut out,
+        &mut scratch.union,
+    );
+    out
+}
+
+/// Scale → softmax → top-p → min-keep floor for one head's score row
+/// (shared by the default and hierarchical paths; `row` holds raw
+/// estimated logits on entry and normalized weights on exit). Appends
+/// the kept tokens to `union`.
+#[allow(clippy::too_many_arguments)]
+fn finish_head(
+    row: &mut [f32],
+    cands: &[usize],
+    cfg: &PrunerConfig,
+    scale: f32,
+    topp_s: &mut ToppScratch,
+    order: &mut Vec<usize>,
+    out: &mut PruneOutcome,
+    union: &mut Vec<usize>,
+) {
+    for x in row.iter_mut() {
+        *x *= scale;
     }
-    crate::tensor::softmax_inplace(&mut scratch.scores);
-    // (3) top-p, (4) min_keep floor with truthful mass.
-    let r = if cfg.use_sort {
-        topp::topp_sort(&scratch.scores, cfg.p)
+    crate::tensor::softmax_inplace(row);
+    let (mass0, iters) = if cfg.use_sort {
+        let r = topp_sort(row, cfg.p);
+        topp_s.indices.clear();
+        topp_s.indices.extend_from_slice(&r.indices);
+        (r.mass, r.iters)
     } else {
-        topp::topp_binary_search(&scratch.scores, cfg.p, cfg.eps)
+        let st = topp_binary_search_into(row, cfg.p, cfg.eps, topp_s);
+        (st.mass, st.iters)
     };
-    let (kept, mass, weights) = floor_min_keep(&scratch.scores, candidates, &r, cfg.min_keep);
-    PruneOutcome { kept, mass, weights, iters: r.iters }
+    out.mass = floor_min_keep_into(
+        row,
+        cands,
+        &topp_s.indices,
+        mass0,
+        cfg.min_keep,
+        order,
+        &mut out.kept,
+        &mut out.weights,
+    );
+    out.iters = iters;
+    union.extend_from_slice(&out.kept);
 }
 
 /// Apply the `min_keep` floor to a top-p result: when fewer than
@@ -102,36 +306,60 @@ pub fn prune_head(
 /// returns each kept token's estimated softmax weight (aligned with the
 /// kept list) so downstream consumers — the SnapKV/H2O observation
 /// feedback — never have to re-score what the pruner already scored.
-fn floor_min_keep(
+///
+/// The floor uses `select_nth_unstable_by` partial selection (not a full
+/// sort) under a (score desc, index asc) total order — the same set, and
+/// after the small re-sort the same summation sequence, as the historical
+/// stable full sort, so the reported mass is fp-identical.
+#[allow(clippy::too_many_arguments)]
+fn floor_min_keep_into(
     scores: &[f32],
     candidates: &[usize],
-    r: &topp::ToppResult,
+    topp_indices: &[usize],
+    topp_mass: f32,
     min_keep: usize,
-) -> (Vec<usize>, f32, Vec<f32>) {
-    if r.indices.len() >= min_keep {
-        let kept = r.indices.iter().map(|&i| candidates[i]).collect();
-        let weights = r.indices.iter().map(|&i| scores[i]).collect();
-        return (kept, r.mass, weights);
+    order: &mut Vec<usize>,
+    kept: &mut Vec<usize>,
+    weights: &mut Vec<f32>,
+) -> f32 {
+    kept.clear();
+    weights.clear();
+    if topp_indices.len() >= min_keep {
+        kept.extend(topp_indices.iter().map(|&i| candidates[i]));
+        weights.extend(topp_indices.iter().map(|&i| scores[i]));
+        return topp_mass;
     }
     let n = scores.len();
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| {
-        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
-    });
-    order.truncate(min_keep.min(n));
+    let m = min_keep.min(n);
+    order.clear();
+    order.extend(0..n);
+    let by = |a: &usize, b: &usize| {
+        scores[*b]
+            .partial_cmp(&scores[*a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(b))
+    };
+    if m < n {
+        order.select_nth_unstable_by(m, by);
+        order.truncate(m);
+    }
+    // Restore the descending visit order so the mass sums in the same
+    // fp sequence the full sort produced.
+    order.sort_unstable_by(by);
     let mass = order.iter().map(|&i| scores[i]).sum();
     // Candidates are ascending, so sorting the score-indices restores
     // ascending kept order with weights still aligned.
     order.sort_unstable();
-    let kept = order.iter().map(|&i| candidates[i]).collect();
-    let weights = order.iter().map(|&i| scores[i]).collect();
-    (kept, mass, weights)
+    kept.extend(order.iter().map(|&i| candidates[i]));
+    weights.extend(order.iter().map(|&i| scores[i]));
+    mass
 }
 
 /// Prune for a GQA group: `qs` is `[group * d]` query heads sharing
 /// `kv_head`. Per-head top-p keep-sets are unioned (B.2) so the attention
-/// kernel loads each KV row once per group. Returns the union (ascending)
-/// plus per-head outcomes for budget accounting.
+/// kernel loads each KV row once per group. Compatibility wrapper over
+/// [`prune_group_into`]: returns owned copies of the union (ascending)
+/// and the per-head outcomes.
 #[allow(clippy::too_many_arguments)]
 pub fn prune_group(
     cfg: &PrunerConfig,
@@ -141,42 +369,338 @@ pub fn prune_group(
     qs: &[f32],
     group: usize,
     candidates: &[usize],
-    scratch: &mut PrunerScratch,
+    scratch: &mut AttnScratch,
 ) -> (Vec<usize>, Vec<PruneOutcome>) {
+    prune_group_into(cfg, cache, seq, kv_head, qs, group, candidates, scratch);
+    (scratch.union.clone(), scratch.outcomes.clone())
+}
+
+/// Allocation-free group prune: results land in `scratch.union`
+/// (ascending, deduped) and `scratch.outcomes` (one per head, buffers
+/// recycled). Returns the page-level accounting of the hierarchical
+/// pre-prune (all-zero when `cfg.hier_pages` is off).
+#[allow(clippy::too_many_arguments)]
+pub fn prune_group_into(
+    cfg: &PrunerConfig,
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    kv_head: usize,
+    qs: &[f32],
+    group: usize,
+    candidates: &[usize],
+    scratch: &mut AttnScratch,
+) -> HierPruneInfo {
     let d = qs.len() / group;
     let n = candidates.len();
+    reset_outcomes(&mut scratch.outcomes, group);
+    scratch.union.clear();
     if n <= cfg.min_keep {
-        let out =
-            PruneOutcome { kept: candidates.to_vec(), mass: 1.0, weights: Vec::new(), iters: 0 };
-        return (candidates.to_vec(), vec![out; group]);
-    }
-    // One SpGEMV pass for the whole group (codes unpacked once per row —
-    // §Perf); then per-head softmax + top-p on the shared score matrix.
-    scratch.group_scores.resize(group * n, 0.0);
-    crate::attention::spgemv::estimate_scores_group(
-        cache, seq, kv_head, qs, group, candidates, &mut scratch.group_scores,
-    );
-    let s = crate::attention::scale(d);
-    let mut outcomes = Vec::with_capacity(group);
-    let mut union: Vec<usize> = Vec::new();
-    for g in 0..group {
-        let row = &mut scratch.group_scores[g * n..(g + 1) * n];
-        for x in row.iter_mut() {
-            *x *= s;
+        scratch.union.extend_from_slice(candidates);
+        for o in scratch.outcomes.iter_mut() {
+            o.kept.extend_from_slice(candidates);
+            o.mass = 1.0;
         }
-        crate::tensor::softmax_inplace(row);
-        let r = if cfg.use_sort {
-            topp::topp_sort(row, cfg.p)
-        } else {
-            topp::topp_binary_search(row, cfg.p, cfg.eps)
-        };
-        let (kept, mass, weights) = floor_min_keep(row, candidates, &r, cfg.min_keep);
-        union.extend_from_slice(&kept);
-        outcomes.push(PruneOutcome { kept, mass, weights, iters: r.iters });
+        return HierPruneInfo::default();
     }
-    union.sort_unstable();
-    union.dedup();
-    (union, outcomes)
+    let s = crate::attention::scale(d);
+    if cfg.hier_pages {
+        return hier_prune_group(cfg, cache, seq, kv_head, qs, group, candidates, s, scratch);
+    }
+    // One page-tiled SpGEMV pass for the whole group (codes unpacked once
+    // per page run — §Perf); then per-head softmax + top-p on the shared
+    // score matrix.
+    scratch.group_scores.resize(group * n, 0.0);
+    estimate_scores_group(
+        cache,
+        seq,
+        kv_head,
+        qs,
+        group,
+        candidates,
+        &mut scratch.group_scores,
+        &mut scratch.spgemv,
+    );
+    for g in 0..group {
+        finish_head(
+            &mut scratch.group_scores[g * n..(g + 1) * n],
+            candidates,
+            cfg,
+            s,
+            &mut scratch.topp,
+            &mut scratch.floor_order,
+            &mut scratch.outcomes[g],
+            &mut scratch.union,
+        );
+    }
+    scratch.union.sort_unstable();
+    scratch.union.dedup();
+    HierPruneInfo::default()
+}
+
+/// The hierarchical page-level pre-prune (Double-P-style page-then-token
+/// top-p; see module docs for the `p − hier_eps` mass guarantee).
+///
+/// Soundness of the bound: every token of a sealed page satisfies
+/// `q·K ≤ Σᵢ max(qᵢ·mnᵢ, qᵢ·mxᵢ)` (the Quest bound), and the mirror
+/// estimate deviates from `q·K` by at most `slack·Σ|qᵢ|`, where `slack`
+/// is `max_error(block)` for the integer widths (per-element error ≤
+/// half a step and K stays inside the block's [lo, hi]) and a
+/// page-max-|K|-relative term for Fp16 (f16 round-off is relative, so
+/// the constant `max_error` would be unsound there), so
+/// `estimate ≤ quest_ub + slack·Σ|q|` — scaled by `1/√d` like the
+/// logits. Unsealed-tail runs get a +∞ key and are always scored first.
+#[allow(clippy::too_many_arguments)]
+fn hier_prune_group(
+    cfg: &PrunerConfig,
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    kv_head: usize,
+    qs: &[f32],
+    group: usize,
+    candidates: &[usize],
+    s: f32,
+    scratch: &mut AttnScratch,
+) -> HierPruneInfo {
+    let d = qs.len() / group;
+    let n = candidates.len();
+    let ps = cache.cfg.page_size;
+    let sealed = sealed_limit(seq, ps);
+    let eps = f64::from(cfg.hier_eps.clamp(0.0, 0.5));
+    let hier = &mut scratch.hier;
+    // --- (1) segment candidates into per-page runs (the tiler's own
+    //         run definition — boundaries coincide by construction) -----
+    hier.runs.clear();
+    {
+        let mut i = 0;
+        while i < n {
+            let j = run_end(candidates, i, sealed, ps);
+            hier.runs.push(RunInfo { start: i, end: j, key: f32::INFINITY });
+            i = j;
+        }
+    }
+    let nruns = hier.runs.len();
+    // --- (2) per-(run × head) scaled upper bounds ----------------------
+    hier.qabs.clear();
+    hier.qabs.extend(
+        (0..group).map(|g| qs[g * d..(g + 1) * d].iter().map(|x| x.abs()).sum::<f32>()),
+    );
+    hier.bounds.clear();
+    hier.bounds.resize(nruns * group, f32::INFINITY);
+    for (ri, run) in hier.runs.iter_mut().enumerate() {
+        let t0 = candidates[run.start];
+        if t0 >= sealed {
+            continue; // unsealed tail: key stays +∞, scored first
+        }
+        let page = seq.pages[t0 / ps];
+        let (mn, mx) = cache.minmax_at(page, kv_head);
+        let block = cache.mirror_at(page, kv_head).expect("sealed page missing mirror");
+        let slack = if block.bits == QuantBits::Fp16 {
+            // f16 round-off is *relative* (half-ulp ≈ |x|·2⁻¹¹), so the
+            // integer widths' constant `max_error` is not a sound
+            // per-element bound here — derive it from the page's max |K|
+            // instead (2⁻¹⁰ leaves a 2× margin over the half-ulp).
+            let mut maxabs = 0.0f32;
+            for i in 0..d {
+                maxabs = maxabs.max(mn[i].abs()).max(mx[i].abs());
+            }
+            maxabs * (1.0 / 1024.0)
+        } else {
+            // Asymmetric int quant: per-element error ≤ scale/2 and the
+            // dequantized value stays inside the block's [lo, hi].
+            quant::max_error(block)
+        };
+        let mut key = f32::NEG_INFINITY;
+        for g in 0..group {
+            let q = &qs[g * d..(g + 1) * d];
+            let mut ub = 0.0f32;
+            for i in 0..d {
+                ub += (q[i] * mn[i]).max(q[i] * mx[i]);
+            }
+            let b = s * (ub + slack * hier.qabs[g]);
+            hier.bounds[ri * group + g] = b;
+            key = key.max(b);
+        }
+        run.key = key;
+    }
+    // --- (3) visit order: descending bound, ties by run index ----------
+    hier.order.clear();
+    hier.order.extend(0..nruns);
+    {
+        let runs = &hier.runs;
+        hier.order.sort_unstable_by(|&a, &b| {
+            runs[b]
+                .key
+                .partial_cmp(&runs[a].key)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+    }
+    // --- (3b) per-head suffix sums of the remaining-mass bound ---------
+    // The bounds are fixed after ordering, so precompute, for every
+    // visit position, Σ_{not yet visited} len·exp(bound − bmax) per
+    // head (shifted by the max finite bound so the sums cannot
+    // overflow). Each stop check below is then O(group). Runs with a
+    // +∞ key (unsealed tails, which sort to the front) are excluded:
+    // while any of them remains unvisited no stop is allowed anyway.
+    let inf_runs = hier
+        .order
+        .iter()
+        .take_while(|&&r| hier.runs[r].key == f32::INFINITY)
+        .count();
+    hier.bmax.clear();
+    hier.bmax.resize(group, f32::NEG_INFINITY);
+    for (ri, run) in hier.runs.iter().enumerate() {
+        if run.key == f32::INFINITY {
+            continue;
+        }
+        for g in 0..group {
+            let b = hier.bounds[ri * group + g];
+            if b > hier.bmax[g] {
+                hier.bmax[g] = b;
+            }
+        }
+    }
+    hier.suffix.clear();
+    hier.suffix.resize((nruns + 1) * group, 0.0);
+    for oi in (inf_runs..nruns).rev() {
+        let rj = hier.order[oi];
+        let run = hier.runs[rj];
+        let len = (run.end - run.start) as f64;
+        for g in 0..group {
+            let shifted = f64::from(hier.bounds[rj * group + g] - hier.bmax[g]).exp();
+            hier.suffix[oi * group + g] = hier.suffix[(oi + 1) * group + g] + len * shifted;
+        }
+    }
+    // --- (4) score runs until the remainder provably cannot matter -----
+    hier.scored.clear();
+    hier.scored.resize(n, false);
+    hier.m.clear();
+    hier.m.resize(group, f64::NEG_INFINITY);
+    hier.s.clear();
+    hier.s.resize(group, 0.0);
+    scratch.group_scores.resize(group * n, 0.0);
+    // Per-head qsums once per prune call (the per-run scoring below
+    // trusts them instead of recomputing the group × d reductions).
+    scratch.spgemv.qsums.clear();
+    scratch
+        .spgemv
+        .qsums
+        .extend((0..group).map(|g| qs[g * d..(g + 1) * d].iter().sum::<f32>()));
+    let mut scored_count = 0usize;
+    let mut skipped = 0u32;
+    for (oi, &ri) in hier.order.iter().enumerate() {
+        if scored_count >= cfg.min_keep.max(1) && oi >= inf_runs {
+            // Stop rule: for every head, the unscored runs' maximum
+            // possible softmax mass fraction R/(S+R) must be ≤ eps,
+            // i.e. R·(1−eps) ≤ eps·S, with
+            // R = Σ_remaining count·exp(ub−M) read off the suffix sums.
+            let mut stop = true;
+            for g in 0..group {
+                let sg = hier.s[g];
+                if sg <= 0.0 {
+                    stop = false;
+                    break;
+                }
+                let rem =
+                    hier.suffix[oi * group + g] * (f64::from(hier.bmax[g]) - hier.m[g]).exp();
+                if rem * (1.0 - eps) > eps * sg {
+                    stop = false;
+                    break;
+                }
+            }
+            if stop {
+                skipped = (nruns - oi) as u32;
+                break;
+            }
+        }
+        let run = hier.runs[ri];
+        let len = run.end - run.start;
+        hier.run_out.resize(group * len, 0.0);
+        // Per-run page-tiled scoring: bit-identical per-row values to a
+        // whole-list call (rows are scored independently and the run
+        // boundaries coincide with the tiler's; qsums pre-filled above).
+        estimate_scores_group_with_qsums(
+            cache,
+            seq,
+            kv_head,
+            qs,
+            group,
+            &candidates[run.start..run.end],
+            &mut hier.run_out,
+            &mut scratch.spgemv,
+        );
+        for g in 0..group {
+            for r in 0..len {
+                let raw = hier.run_out[g * len + r];
+                scratch.group_scores[g * n + run.start + r] = raw;
+                let logit = f64::from(raw * s);
+                if logit > hier.m[g] {
+                    if hier.m[g].is_finite() {
+                        hier.s[g] *= (hier.m[g] - logit).exp();
+                    }
+                    hier.m[g] = logit;
+                }
+                hier.s[g] += (logit - hier.m[g]).exp();
+            }
+        }
+        for pos in run.start..run.end {
+            hier.scored[pos] = true;
+        }
+        scored_count += len;
+    }
+    // --- (5) compact the scored subset back to candidate order ---------
+    // Scores are gathered in ascending candidate order, so with nothing
+    // skipped the compact arrays equal the full candidate arrays and the
+    // finish below is bit-identical to the non-hier path — in that
+    // common case finish directly on the full score matrix and skip the
+    // gather entirely.
+    if skipped == 0 {
+        for g in 0..group {
+            finish_head(
+                &mut scratch.group_scores[g * n..(g + 1) * n],
+                candidates,
+                cfg,
+                s,
+                &mut scratch.topp,
+                &mut scratch.floor_order,
+                &mut scratch.outcomes[g],
+                &mut scratch.union,
+            );
+        }
+        scratch.union.sort_unstable();
+        scratch.union.dedup();
+        return HierPruneInfo { pages_total: nruns as u32, pages_skipped: 0 };
+    }
+    hier.compact_pos.clear();
+    hier.compact_cands.clear();
+    for (pos, &was_scored) in hier.scored.iter().enumerate() {
+        if was_scored {
+            hier.compact_pos.push(pos);
+            hier.compact_cands.push(candidates[pos]);
+        }
+    }
+    let m = hier.compact_pos.len();
+    hier.compact_scores.resize(group * m, 0.0);
+    for g in 0..group {
+        for (j, &pos) in hier.compact_pos.iter().enumerate() {
+            hier.compact_scores[g * m + j] = scratch.group_scores[g * n + pos];
+        }
+    }
+    for g in 0..group {
+        finish_head(
+            &mut hier.compact_scores[g * m..(g + 1) * m],
+            &hier.compact_cands,
+            cfg,
+            s,
+            &mut scratch.topp,
+            &mut scratch.floor_order,
+            &mut scratch.outcomes[g],
+            &mut scratch.union,
+        );
+    }
+    scratch.union.sort_unstable();
+    scratch.union.dedup();
+    HierPruneInfo { pages_total: nruns as u32, pages_skipped: skipped }
 }
 
 #[cfg(test)]
@@ -332,5 +856,117 @@ mod tests {
             &cache, &seq, 0, &q, &candidates, &mut scratch,
         );
         assert!(hi.kept.len() >= lo.kept.len());
+    }
+
+    #[test]
+    fn into_path_reuses_scratch_bit_exact() {
+        // A dirty, repeatedly-reused arena must be invisible: the _into
+        // path's union/outcomes match a fresh-scratch wrapper call bit
+        // for bit, across candidate shapes and group sizes.
+        let (cache, seq) = random_cache(61, 1, 32, 320);
+        let cfg = PrunerConfig { p: 0.9, ..Default::default() };
+        let mut dirty = PrunerScratch::default();
+        for (seed, group, ncand) in [(1u64, 1usize, 320usize), (2, 4, 320), (3, 4, 77), (4, 2, 3)] {
+            let mut qs = Vec::new();
+            for g in 0..group {
+                qs.extend(random_q(seed * 10 + g as u64, 32));
+            }
+            let candidates: Vec<usize> = (0..320).step_by(320 / ncand.max(1)).take(ncand).collect();
+            let mut fresh = PrunerScratch::default();
+            let (want_union, want_outs) =
+                prune_group(&cfg, &cache, &seq, 0, &qs, group, &candidates, &mut fresh);
+            prune_group_into(&cfg, &cache, &seq, 0, &qs, group, &candidates, &mut dirty);
+            assert_eq!(want_union, dirty.union);
+            assert_eq!(want_outs.len(), dirty.outcomes.len());
+            for (a, b) in want_outs.iter().zip(&dirty.outcomes) {
+                assert_eq!(a.kept, b.kept);
+                assert_eq!(a.mass.to_bits(), b.mass.to_bits());
+                assert_eq!(
+                    a.weights.iter().map(|w| w.to_bits()).collect::<Vec<_>>(),
+                    b.weights.iter().map(|w| w.to_bits()).collect::<Vec<_>>()
+                );
+                assert_eq!(a.iters, b.iters);
+            }
+        }
+    }
+
+    #[test]
+    fn hier_unskipped_is_bit_exact_with_default() {
+        // hier_eps = 0 makes the stop rule unsatisfiable (exp > 0), so
+        // every page is scored — and because scores are scattered back to
+        // candidate order before the softmax, the result must be
+        // bit-identical to the non-hier path.
+        let (cache, seq) = random_cache(71, 1, 32, 256);
+        let group = 2;
+        let mut qs = Vec::new();
+        for g in 0..group {
+            qs.extend(random_q(80 + g as u64, 32));
+        }
+        let candidates: Vec<usize> = (0..256).collect();
+        let mut s1 = PrunerScratch::default();
+        let mut s2 = PrunerScratch::default();
+        let base = PrunerConfig { p: 0.9, ..Default::default() };
+        let hier = PrunerConfig { hier_pages: true, hier_eps: 0.0, ..base };
+        prune_group_into(&base, &cache, &seq, 0, &qs, group, &candidates, &mut s1);
+        let info = prune_group_into(&hier, &cache, &seq, 0, &qs, group, &candidates, &mut s2);
+        assert_eq!(info.pages_skipped, 0, "eps=0 must score every page");
+        assert_eq!(info.pages_total, 16);
+        assert_eq!(s1.union, s2.union);
+        for (a, b) in s1.outcomes.iter().zip(&s2.outcomes) {
+            assert_eq!(a.kept, b.kept);
+            assert_eq!(a.mass.to_bits(), b.mass.to_bits());
+        }
+    }
+
+    #[test]
+    fn hier_skips_pages_on_peaked_heads_and_keeps_mass() {
+        // A strongly-matching key concentrates the softmax on one page;
+        // the hier pre-prune must skip most of the cold pages while the
+        // kept set still captures ≥ p − hier_eps of the *full-candidate*
+        // estimated mass.
+        let d = 32;
+        let mut cache = crate::kvcache::PagedKvCache::new(crate::kvcache::CacheConfig::new(1, d, 40));
+        let mut seq = crate::kvcache::SeqCache::default();
+        let mut r = crate::util::rng::Rng::new(9);
+        let q = random_q(18, d);
+        for i in 0..512 {
+            let k: Vec<f32> = if i == 200 {
+                q.iter().map(|x| x * 5.0).collect()
+            } else {
+                (0..d).map(|_| r.normal_f32(0.0, 0.2)).collect()
+            };
+            cache.append(&mut seq, &k, &k).unwrap();
+        }
+        let candidates: Vec<usize> = (0..512).collect();
+        let p = 0.9f32;
+        let eps = 0.02f32;
+        let cfg = PrunerConfig { p, hier_pages: true, hier_eps: eps, ..Default::default() };
+        let mut scratch = PrunerScratch::default();
+        let info = prune_group_into(&cfg, &cache, &seq, 0, &q, 1, &candidates, &mut scratch);
+        assert!(info.pages_total == 32, "512 tokens = 32 page runs");
+        assert!(
+            info.pages_skipped > 8,
+            "peaked head should skip many cold pages, skipped {}",
+            info.pages_skipped
+        );
+        let kept = scratch.outcomes[0].kept.clone();
+        assert!(kept.contains(&200), "the hot token must survive");
+        // Full-candidate estimated softmax (row-major reference).
+        let mut est = vec![0.0; candidates.len()];
+        crate::attention::spgemv::estimate_scores_rowmajor(
+            &cache, &seq, 0, &q, &candidates, &mut est,
+        );
+        let s = crate::attention::scale(d);
+        for x in est.iter_mut() {
+            *x *= s;
+        }
+        crate::tensor::softmax_inplace(&mut est);
+        let full_mass: f32 = kept.iter().map(|&t| est[t]).sum();
+        assert!(
+            full_mass >= p - eps - 1e-3,
+            "captured mass {} < p − δ = {}",
+            full_mass,
+            p - eps
+        );
     }
 }

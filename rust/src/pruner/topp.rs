@@ -22,6 +22,27 @@ pub struct ToppResult {
     pub iters: usize,
 }
 
+/// Scalar half of a scratch-based top-p result; the selected indices land
+/// in [`ToppScratch::indices`].
+#[derive(Clone, Copy, Debug)]
+pub struct ToppStats {
+    pub mass: f32,
+    pub threshold: f32,
+    pub iters: usize,
+}
+
+/// Reusable buffers for [`topp_binary_search_into`] (part of the
+/// per-worker `AttnScratch` arena): the shrinking active set, the
+/// selected-index output, and the fp-drift fallback staging. Capacity
+/// only grows, so steady-state calls are allocation-free.
+#[derive(Default)]
+pub struct ToppScratch {
+    active: Vec<f32>,
+    /// Selected indices (ascending) of the most recent search.
+    pub indices: Vec<usize>,
+    rest: Vec<usize>,
+}
+
 /// Oracle top-p: minimal prefix of the descending sort with mass ≥ p.
 pub fn topp_sort(w: &[f32], p: f32) -> ToppResult {
     let mut order: Vec<usize> = (0..w.len()).collect();
@@ -49,8 +70,19 @@ pub fn topp_sort(w: &[f32], p: f32) -> ToppResult {
 /// single fused pass (sum-above, plus the bracket-gap extrema), exactly
 /// the `where/sum/max` fusion the paper tensorizes on GPU.
 pub fn topp_binary_search(w: &[f32], p: f32, eps: f32) -> ToppResult {
+    let mut s = ToppScratch::default();
+    let st = topp_binary_search_into(w, p, eps, &mut s);
+    ToppResult { indices: s.indices, mass: st.mass, threshold: st.threshold, iters: st.iters }
+}
+
+/// Allocation-free core of [`topp_binary_search`]: identical algorithm,
+/// with the active set, selected indices, and fallback staging drawn from
+/// the caller's [`ToppScratch`]. The selected indices (ascending) are
+/// left in `scratch.indices`.
+pub fn topp_binary_search_into(w: &[f32], p: f32, eps: f32, s: &mut ToppScratch) -> ToppStats {
+    s.indices.clear();
     if w.is_empty() {
-        return ToppResult { indices: vec![], mass: 0.0, threshold: 0.0, iters: 0 };
+        return ToppStats { mass: 0.0, threshold: 0.0, iters: 0 };
     }
     let wmax = w.iter().copied().fold(f32::NEG_INFINITY, f32::max);
     let mut l = 0.0f32;
@@ -62,12 +94,14 @@ pub fn topp_binary_search(w: &[f32], p: f32, eps: f32) -> ToppResult {
     // shrinks geometrically. Each pass is a branch-light scan, the same
     // fused `where/sum` the GPU kernel tensorizes, but over ever fewer
     // elements.
-    let mut active: Vec<f32> = w.to_vec();
+    s.active.clear();
+    s.active.extend_from_slice(w);
+    let active = &mut s.active;
     let mut banked = 0.0f32; // mass of weights proven >= threshold
     while iters < 32 && !active.is_empty() {
         let m = 0.5 * (l + r);
         let mut mass_above = banked;
-        for &x in &active {
+        for &x in active.iter() {
             if x >= m {
                 mass_above += x;
             }
@@ -99,29 +133,36 @@ pub fn topp_binary_search(w: &[f32], p: f32, eps: f32) -> ToppResult {
             break;
         }
     }
-    let mut indices = Vec::new();
     let mut mass = 0.0f32;
     for (i, &x) in w.iter().enumerate() {
         if x >= l {
-            indices.push(i);
+            s.indices.push(i);
             mass += x;
         }
     }
     // Guard: if fp drift left us below p (possible when eps is loose),
     // fall back to widening by the sort oracle on the remainder.
-    if mass < p && indices.len() < w.len() {
-        let mut rest: Vec<usize> = (0..w.len()).filter(|i| w[*i] < l).collect();
-        rest.sort_by(|&a, &b| w[b].partial_cmp(&w[a]).unwrap_or(std::cmp::Ordering::Equal));
-        for i in rest {
-            indices.push(i);
+    if mass < p && s.indices.len() < w.len() {
+        s.rest.clear();
+        s.rest.extend((0..w.len()).filter(|i| w[*i] < l));
+        // (weight desc, idx asc) total order via an unstable sort: the
+        // identical sequence the historical stable descending sort gave
+        // (`rest` is built in ascending index order), minus the stable
+        // sort's temp-buffer allocation — this fallback sits inside the
+        // hot path's zero-allocation contract.
+        s.rest.sort_unstable_by(|&a, &b| {
+            w[b].partial_cmp(&w[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+        for &i in &s.rest {
+            s.indices.push(i);
             mass += w[i];
             if mass >= p {
                 break;
             }
         }
-        indices.sort_unstable();
+        s.indices.sort_unstable();
     }
-    ToppResult { indices, mass, threshold: l, iters }
+    ToppStats { mass, threshold: l, iters }
 }
 
 /// Budget needed by oracle top-p (the |I| of Definition 3.3) — used by
@@ -225,6 +266,24 @@ mod tests {
         let w = vec![0.25f32; 4];
         let r = topp_binary_search(&w, 0.0, 1e-6);
         assert!(r.mass >= 0.0);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh() {
+        // A dirty, repeatedly-reused scratch must be invisible: identical
+        // indices, bit-identical mass/threshold, same iteration count.
+        let mut s = ToppScratch::default();
+        for seed in 0..6u64 {
+            for (n, p) in [(257usize, 0.9f32), (16, 0.5), (1000, 0.99)] {
+                let w = softmaxed(seed, n, 2.5);
+                let fresh = topp_binary_search(&w, p, 1e-6);
+                let st = topp_binary_search_into(&w, p, 1e-6, &mut s);
+                assert_eq!(fresh.indices, s.indices);
+                assert_eq!(fresh.mass.to_bits(), st.mass.to_bits());
+                assert_eq!(fresh.threshold.to_bits(), st.threshold.to_bits());
+                assert_eq!(fresh.iters, st.iters);
+            }
+        }
     }
 
     #[test]

@@ -55,6 +55,27 @@ pub trait TokenSelector: Send {
         budget: usize,
     ) -> Vec<usize>;
 
+    /// Allocation-aware variant: write the candidate set into a
+    /// caller-reused buffer instead of returning a fresh `Vec`. The
+    /// engine's zero-allocation decode path calls this; selectors that
+    /// can select without allocating (Quest) override it, the rest fall
+    /// back to [`TokenSelector::select`] (one transient allocation).
+    #[allow(clippy::too_many_arguments)]
+    fn select_into(
+        &mut self,
+        cache: &PagedKvCache,
+        seq: &SeqCache,
+        kv_head: usize,
+        qs: &[f32],
+        group: usize,
+        budget: usize,
+        out: &mut Vec<usize>,
+    ) {
+        let v = self.select(cache, seq, kv_head, qs, group, budget);
+        out.clear();
+        out.extend_from_slice(&v);
+    }
+
     /// Feed back the attention weights actually computed this step
     /// (`weights[i]` corresponds to `tokens[i]`). Stateful (dropping)
     /// selectors use this; the default is a no-op.

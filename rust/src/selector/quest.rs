@@ -23,11 +23,13 @@ use crate::tensor::dot;
 pub struct QuestSelector {
     /// Scratch: page scores.
     scores: Vec<f32>,
+    /// Scratch: page order for the top-pages partial selection.
+    order: Vec<usize>,
 }
 
 impl QuestSelector {
     pub fn new() -> QuestSelector {
-        QuestSelector { scores: Vec::new() }
+        QuestSelector { scores: Vec::new(), order: Vec::new() }
     }
 
     /// Quest's per-page upper bound for one query head.
@@ -61,10 +63,29 @@ impl TokenSelector for QuestSelector {
         group: usize,
         budget: usize,
     ) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.select_into(cache, seq, kv_head, qs, group, budget, &mut out);
+        out
+    }
+
+    /// Allocation-free selection: page scores and the selection order
+    /// live in selector-owned scratch, candidates land in the caller's
+    /// reused buffer — the engine's zero-allocation decode path.
+    fn select_into(
+        &mut self,
+        cache: &PagedKvCache,
+        seq: &SeqCache,
+        kv_head: usize,
+        qs: &[f32],
+        group: usize,
+        budget: usize,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
         let ps = cache.cfg.page_size;
         let npages = seq.pages.len();
         if npages == 0 {
-            return Vec::new();
+            return;
         }
         let d = qs.len() / group;
         self.scores.clear();
@@ -97,21 +118,21 @@ impl TokenSelector for QuestSelector {
         }
         // Pick pages by descending upper bound until the budget is covered.
         let budget_pages = budget.div_ceil(ps).max(1).min(npages);
-        let mut order: Vec<usize> = (0..npages).collect();
+        self.order.clear();
+        self.order.extend(0..npages);
         if budget_pages < npages {
-            order.select_nth_unstable_by(budget_pages, |&a, &b| {
-                self.scores[b].partial_cmp(&self.scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+            let scores = &self.scores;
+            self.order.select_nth_unstable_by(budget_pages, |&a, &b| {
+                scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
             });
-            order.truncate(budget_pages);
+            self.order.truncate(budget_pages);
         }
-        order.sort_unstable();
-        let mut out = Vec::with_capacity(budget_pages * ps);
-        for pi in order {
+        self.order.sort_unstable();
+        for &pi in &self.order {
             let fill = if pi + 1 == npages { seq.len - pi * ps } else { ps };
             let base = pi * ps;
             out.extend(base..base + fill);
         }
-        out
     }
 }
 

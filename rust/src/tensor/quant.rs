@@ -187,6 +187,53 @@ pub fn dot_quantized(q: &[f32], b: &QuantBlock) -> f32 {
     }
 }
 
+/// Widen the packed codes of elements `[first, first + out.len())` into
+/// `out` as f32 — *codes*, not dequantized values (Fp16 widens the stored
+/// halves, which are the "codes" of that width). This is the page-tile
+/// unpack of the tiled SpGEMV: a run of rows sharing one block unpacks
+/// its window once, then every (row × query-head) contraction reads the
+/// tile. The widening expressions are byte-for-byte the ones
+/// `quant_dot_row_qsum` / `quant_dot_row_group` use for their per-row
+/// stack buffers, so a dot over a tile row is bit-identical to the
+/// row-major fused path.
+pub fn unpack_codes_into(b: &QuantBlock, first: usize, out: &mut [f32]) {
+    debug_assert!(first + out.len() <= b.n);
+    match b.bits {
+        QuantBits::Fp16 => {
+            for (i, o) in out.iter_mut().enumerate() {
+                let j = first + i;
+                let h = u16::from_le_bytes([b.packed[2 * j], b.packed[2 * j + 1]]);
+                *o = super::fp16::f16_to_f32(h);
+            }
+        }
+        QuantBits::Int8 => {
+            for (o, &byte) in out.iter_mut().zip(&b.packed[first..first + out.len()]) {
+                *o = byte as f32;
+            }
+        }
+        QuantBits::Int4 => {
+            // Rows are d-aligned with d even, so windows start and end on
+            // byte boundaries (same precondition as the row-major path).
+            debug_assert!(first % 2 == 0 && out.len() % 2 == 0);
+            let bytes = &b.packed[first / 2..first / 2 + out.len() / 2];
+            for (p, &byte) in bytes.iter().enumerate() {
+                out[2 * p] = (byte & 0x0F) as f32;
+                out[2 * p + 1] = (byte >> 4) as f32;
+            }
+        }
+        QuantBits::Int2 => {
+            debug_assert!(first % 4 == 0 && out.len() % 4 == 0);
+            let bytes = &b.packed[first / 4..first / 4 + out.len() / 4];
+            for (p, &byte) in bytes.iter().enumerate() {
+                out[4 * p] = (byte & 0x03) as f32;
+                out[4 * p + 1] = ((byte >> 2) & 0x03) as f32;
+                out[4 * p + 2] = ((byte >> 4) & 0x03) as f32;
+                out[4 * p + 3] = (byte >> 6) as f32;
+            }
+        }
+    }
+}
+
 /// Worst-case absolute dequantization error for a block: half a step.
 pub fn max_error(b: &QuantBlock) -> f32 {
     match b.bits {
@@ -281,6 +328,30 @@ mod tests {
             dequantize_into(&b, &mut out);
             for o in out {
                 assert!((o - 2.5).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_codes_windows_match_dequant() {
+        // Any aligned window of unpacked codes must reproduce
+        // dequantize_into exactly via zero + code*scale (Fp16: the codes
+        // ARE the values).
+        let mut r = Rng::new(11);
+        let n = 64;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 1.5)).collect();
+        for bits in [QuantBits::Int2, QuantBits::Int4, QuantBits::Int8, QuantBits::Fp16] {
+            let b = quantize(&xs, bits);
+            let mut full = vec![0.0; n];
+            dequantize_into(&b, &mut full);
+            for (first, len) in [(0usize, n), (16, 32), (8, 8), (60, 4)] {
+                let mut codes = vec![0.0; len];
+                unpack_codes_into(&b, first, &mut codes);
+                for (i, &c) in codes.iter().enumerate() {
+                    let want = full[first + i];
+                    let got = if bits == QuantBits::Fp16 { c } else { b.zero + c * b.scale };
+                    assert_eq!(got, want, "bits={bits:?} first={first} i={i}");
+                }
             }
         }
     }

@@ -113,6 +113,13 @@ fn run_trace(threads: usize) -> Trace {
     let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
     cfg.skip_layers = 0;
     cfg.dense_below = 16;
+    // This trace pins the *default* pipeline: force the opt-in hier-pages
+    // pre-prune off so the TWILIGHT_HIER_PAGES=1 CI leg (which flips the
+    // env-read default in SparseConfig::twilight) compares against the
+    // same checked-in golden.
+    if let Some(t) = cfg.twilight.as_mut() {
+        t.hier_pages = false;
+    }
     let mut e = Engine::new(model, cfg, 1 << 13);
     e.set_threads(threads);
     // Governor on: the mass policy steers p from prune-mass telemetry

@@ -1,0 +1,268 @@
+//! Hierarchical page-level top-p pre-prune (`--hier-pages`) battery:
+//!
+//! 1. the mass guarantee — for any query shape, the kept set captures
+//!    ≥ p − hier_eps of the *full-candidate* estimated softmax mass;
+//! 2. engine-level: retrieval accuracy holds under hier mode, skipped
+//!    pages are reported in `EngineStats`/`SignalHub`, and the
+//!    `BudgetDirective::hier_pages_override` knob switches the mode on
+//!    without touching the static config;
+//! 3. determinism: hier mode stays bit-exact across worker counts and
+//!    prefill chunk sizes (page bounds read only sealed metadata, so the
+//!    sealing contract carries over);
+//! 4. serving: the scheduler's report and live stats carry the
+//!    skipped-page telemetry.
+
+use std::sync::Arc;
+use twilight::coordinator::engine::{DecodeBatch, Engine};
+use twilight::coordinator::request::Request;
+use twilight::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use twilight::coordinator::SparseConfig;
+use twilight::governor::BudgetDirective;
+use twilight::kvcache::{CacheConfig, PagedKvCache, SeqCache};
+use twilight::model::retrieval::build_retrieval_model;
+use twilight::model::sampler::greedy;
+use twilight::model::{Model, ModelConfig};
+use twilight::pruner::{prune_group_into, AttnScratch, PrunerConfig};
+use twilight::selector::SelectorKind;
+use twilight::util::rng::Rng;
+use twilight::workload::{gen_niah, RetrievalVocab};
+
+const V: RetrievalVocab = RetrievalVocab::DEFAULT;
+
+/// Force hier mode regardless of the TWILIGHT_HIER_PAGES env default.
+fn hier_cfg(p: f32) -> SparseConfig {
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, p);
+    cfg.skip_layers = 0;
+    cfg.dense_below = 16;
+    if let Some(t) = cfg.twilight.as_mut() {
+        t.hier_pages = true;
+        t.hier_eps = 0.02;
+    }
+    cfg
+}
+
+fn base_cfg(p: f32) -> SparseConfig {
+    let mut cfg = hier_cfg(p);
+    if let Some(t) = cfg.twilight.as_mut() {
+        t.hier_pages = false;
+    }
+    cfg
+}
+
+/// A small multi-layer random model (the 1-layer retrieval model takes
+/// the embedding-KV fast path, which bypasses the chunk machinery).
+fn deep_model(seed: u64) -> Arc<Model> {
+    let cfg = ModelConfig {
+        name: "hiertest".into(),
+        vocab_size: 32,
+        d_model: 24,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        head_dim: 6,
+        d_ff: 32,
+        use_rope: true,
+        rope_theta: 10000.0,
+        use_norm: true,
+        norm_eps: 1e-5,
+        max_ctx: 512,
+    };
+    Arc::new(Model::random(&cfg, seed))
+}
+
+#[test]
+fn mass_guarantee_across_query_shapes() {
+    // Sweep query/key sharpness: from diffuse (nothing skippable) to
+    // strongly peaked (most pages skipped). In every regime the kept
+    // set's mass under the FULL-candidate estimated softmax must stay
+    // ≥ p − hier_eps (small fp slack).
+    let d = 32;
+    let p = 0.9f32;
+    let eps = 0.02f32;
+    let cfg = PrunerConfig { p, hier_pages: true, hier_eps: eps, ..Default::default() };
+    let mut scratch = AttnScratch::default();
+    let mut skipped_any = 0u32;
+    for (seed, sharp) in
+        [(1u64, 0.0f32), (2, 1.0), (3, 2.0), (4, 4.0), (5, 8.0), (6, 0.5), (7, 3.0)]
+    {
+        let mut cache = PagedKvCache::new(CacheConfig::new(1, d, 40));
+        let mut seq = SeqCache::default();
+        let mut r = Rng::new(100 + seed);
+        let q: Vec<f32> = (0..d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        for i in 0..512 {
+            // One aligned key per 64 tokens, strength `sharp`.
+            let k: Vec<f32> = if i % 64 == 17 {
+                q.iter().map(|x| x * sharp).collect()
+            } else {
+                (0..d).map(|_| r.normal_f32(0.0, 0.4)).collect()
+            };
+            cache.append(&mut seq, &k, &k).unwrap();
+        }
+        let candidates: Vec<usize> = (0..512).collect();
+        let info = prune_group_into(&cfg, &cache, &seq, 0, &q, 1, &candidates, &mut scratch);
+        skipped_any += info.pages_skipped;
+        assert_eq!(info.pages_total, 32);
+        let out = &scratch.outcomes[0];
+        assert!(out.kept.windows(2).all(|w| w[0] < w[1]), "kept must be ascending");
+        assert!(out.kept.iter().all(|t| *t < 512));
+        // Full-candidate softmax from the row-major reference.
+        let mut est = vec![0.0; 512];
+        twilight::attention::spgemv::estimate_scores_rowmajor(
+            &cache, &seq, 0, &q, &candidates, &mut est,
+        );
+        let s = 1.0 / (d as f32).sqrt();
+        for x in est.iter_mut() {
+            *x *= s;
+        }
+        twilight::tensor::softmax_inplace(&mut est);
+        let full_mass: f32 = out.kept.iter().map(|&t| est[t]).sum();
+        assert!(
+            full_mass >= p - eps - 2e-3,
+            "seed {seed} sharp {sharp}: kept mass {full_mass} < p − δ = {}",
+            p - eps
+        );
+    }
+    assert!(skipped_any > 0, "the sweep must exercise actual page skipping");
+}
+
+#[test]
+fn hier_engine_answers_niah_and_reports_skips() {
+    let model = Arc::new(build_retrieval_model(V, 8192));
+    let mut e = Engine::new(model, hier_cfg(0.9), 16384);
+    let mut r = Rng::new(2);
+    let mut correct = 0;
+    for i in 0..8 {
+        let g = gen_niah(&mut r, V, 1024);
+        let logits = e.prefill(i, &g.prompt).unwrap();
+        if greedy(&logits) == g.answer {
+            correct += 1;
+        }
+        e.release(i);
+    }
+    assert!(correct >= 7, "hier-pages NIAH accuracy {correct}/8");
+    assert!(e.stats.sparse_calls > 0);
+    assert!(e.stats.hier_pages_total > 0, "hier mode must report page accounting");
+    assert!(e.stats.hier_pages_skipped <= e.stats.hier_pages_total);
+    assert_eq!(e.signals.hier_pages_total(), e.stats.hier_pages_total);
+    assert_eq!(e.signals.hier_pages_skipped(), e.stats.hier_pages_skipped);
+}
+
+#[test]
+fn directive_override_switches_hier_on() {
+    // Static config off, governor directive on: the knob must flip the
+    // pre-prune (visible through the page accounting) without any
+    // config rebuild.
+    let model = Arc::new(build_retrieval_model(V, 8192));
+    let mut e = Engine::new(model, base_cfg(0.9), 16384);
+    let mut r = Rng::new(3);
+    let g = gen_niah(&mut r, V, 512);
+    let _ = e.prefill(0, &g.prompt).unwrap();
+    assert_eq!(e.stats.hier_pages_total, 0, "hier off: no page accounting");
+    e.apply_directive(BudgetDirective {
+        hier_pages_override: Some(true),
+        ..BudgetDirective::NEUTRAL
+    });
+    let _ = e.decode(0, g.prompt[0]).unwrap();
+    assert!(e.stats.hier_pages_total > 0, "override must enable the pre-prune");
+    // And Some(false) forces it back off even if the config says on.
+    let mut e2 = Engine::new(
+        Arc::new(build_retrieval_model(V, 8192)),
+        hier_cfg(0.9),
+        16384,
+    );
+    e2.apply_directive(BudgetDirective {
+        hier_pages_override: Some(false),
+        ..BudgetDirective::NEUTRAL
+    });
+    let mut r = Rng::new(4);
+    let g = gen_niah(&mut r, V, 512);
+    let _ = e2.prefill(0, &g.prompt).unwrap();
+    assert_eq!(e2.stats.hier_pages_total, 0, "override must disable the pre-prune");
+}
+
+#[test]
+fn hier_bit_exact_across_threads() {
+    // The pre-prune is per-call-local: worker count must not change a
+    // bit of the logits or the page accounting.
+    let model = Arc::new(build_retrieval_model(V, 8192));
+    let run = |threads: usize| {
+        let mut e = Engine::new(model.clone(), hier_cfg(0.9), 16384);
+        e.set_threads(threads);
+        let mut r = Rng::new(5);
+        let g0 = gen_niah(&mut r, V, 300);
+        let g1 = gen_niah(&mut r, V, 452);
+        let _ = e.prefill(0, &g0.prompt).unwrap();
+        let _ = e.prefill(1, &g1.prompt).unwrap();
+        let mut all = Vec::new();
+        for _ in 0..4 {
+            let batch = DecodeBatch::new(vec![(0, g0.prompt[0]), (1, g1.prompt[0])]);
+            for res in e.step_batch(&batch) {
+                all.push(res.unwrap());
+            }
+        }
+        (all, e.stats.hier_pages_total, e.stats.hier_pages_skipped)
+    };
+    let (l1, t1, s1) = run(1);
+    for threads in [4usize, 8] {
+        let (ln, tn, sn) = run(threads);
+        assert_eq!(l1, ln, "hier logits diverged at threads={threads}");
+        assert_eq!((t1, s1), (tn, sn), "hier accounting diverged at threads={threads}");
+    }
+    assert!(t1 > 0 && s1 <= t1);
+}
+
+#[test]
+fn hier_bit_exact_across_chunk_spans() {
+    // Page bounds read only sealed min/max + sealed mirror blocks and the
+    // unsealed tail is scored exactly, so hier selection is a pure
+    // function of the visible prefix — chunk-size invariant like the
+    // rest of the pipeline.
+    let model = deep_model(11);
+    let mut r = Rng::new(12);
+    let prompt: Vec<u32> = (0..150).map(|_| r.below(32) as u32).collect();
+    let mut cfg = hier_cfg(0.9);
+    cfg.dense_below = 8;
+    let run = |span: usize, threads: usize| {
+        let mut e = Engine::new(model.clone(), cfg.clone(), 4096);
+        e.set_threads(threads);
+        e.set_prefill_chunk(span);
+        let mut all = vec![e.prefill(0, &prompt).unwrap()];
+        for _ in 0..3 {
+            all.push(e.decode(0, prompt[0]).unwrap());
+        }
+        (all, e.stats.hier_pages_total, e.stats.hier_pages_skipped)
+    };
+    let reference = run(1, 1);
+    assert!(reference.1 > 0, "the battery must exercise the hier path");
+    for threads in [1usize, 4] {
+        for span in [1usize, 7, 64, 1000] {
+            let got = run(span, threads);
+            assert_eq!(
+                reference, got,
+                "hier diverged at span={span} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn serving_report_carries_hier_telemetry() {
+    let model = Arc::new(build_retrieval_model(V, 8192));
+    let engine = Engine::new(model, hier_cfg(0.9), 1 << 16);
+    let mut s = Scheduler::new(engine, SchedulerConfig::default());
+    let mut r = Rng::new(6);
+    for i in 0..4 {
+        let g = gen_niah(&mut r, V, 256);
+        s.submit(Request::new(i, g.prompt, 4));
+    }
+    let rep = s.run_to_completion();
+    assert_eq!(rep.requests.len(), 4);
+    assert!(rep.hier_pages_total > 0, "report must carry the page accounting");
+    assert!(rep.hier_skip_frac() >= 0.0 && rep.hier_skip_frac() <= 1.0);
+    let j = rep.to_json();
+    assert!(j.get_f64("hier_pages_total").unwrap() > 0.0);
+    assert!(j.get_f64("hier_skip_frac").is_some());
+    let live = s.live_stats_json();
+    assert!(live.get_f64("hier_skip_frac").is_some());
+    assert!(live.get_f64("hier_pages_skipped").is_some());
+}
