@@ -6,6 +6,25 @@
 //! ```bash
 //! cargo run --release --example governed_serve [-- --policy aimd --slo-tpot-ms 5]
 //! ```
+//!
+//! For a *live* view of the same control loop, run the real server and
+//! scrape the always-on observability endpoints over the line protocol
+//! (DESIGN.md §10):
+//!
+//! ```bash
+//! cargo run --release -- serve --addr 127.0.0.1:7070 \
+//!     --governor aimd --slo-tpot-ms 5 --trace --trace-out trace.json &
+//!
+//! # Prometheus text (counters, gauges, TTFT/TPOT histograms, …):
+//! echo '{"cmd":"metrics"}' | nc 127.0.0.1 7070
+//! # Flight recorder: the last N step summaries, as JSON:
+//! echo '{"cmd":"dump"}' | nc 127.0.0.1 7070
+//! ```
+//!
+//! `twilight_p_scale` / `twilight_budget_scale` in the scrape are the
+//! governor's live directive — the same signals this example prints
+//! after the fact; `trace.json` (written at shutdown) opens in
+//! Perfetto / `chrome://tracing`.
 
 use twilight::coordinator::engine::Engine;
 use twilight::coordinator::request::Request;

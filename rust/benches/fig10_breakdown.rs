@@ -1,6 +1,7 @@
 //! Fig. 10 — time breakdown of the Select-then-Prune pipeline vs the
 //! Quest baseline, at several batch sizes on a long-retrieval workload.
-//! Cross-checks the §4.3 cost model.
+//! Cross-checks the §4.3 cost model. A final panel measures the span
+//! tracer's overhead on the decode hot path (target: < 3%).
 
 mod common;
 
@@ -67,4 +68,50 @@ fn main() {
         "\n§4.3 theoretical speedup at B0=N/4, B1=N/64: {:.2}x",
         sim::theoretical_speedup(ctx as f64, b0, ctx as f64 / 64.0)
     );
+
+    // --- tracing overhead panel ---------------------------------------
+    // Same warmed engine, same decode loop, span recorder off vs on
+    // (DESIGN.md §10: a span is four relaxed atomic stores into a
+    // pre-sized per-thread ring). Decode order is identical either way —
+    // tracing is purely observational — so the delta is the recorder.
+    println!("\ntracing overhead (span recorder, ctx={ctx}, batch=8):");
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.95);
+    cfg.skip_layers = 0;
+    let batch = 8usize;
+    let mut e = Engine::new(model, cfg, (ctx + 64) * batch + 64);
+    let mut rng = Rng::new(5);
+    for i in 0..batch {
+        let g = gen_niah(&mut rng, v, ctx);
+        let _ = e.prefill(i as u64, &g.prompt).unwrap();
+    }
+    let steps = 8;
+    let mut time_decode = |traced: bool| -> f64 {
+        twilight::obs::trace::set_enabled(traced);
+        // One warm pass: lets the traced leg create its span rings off
+        // the clock (a one-time allocation per thread).
+        for i in 0..batch {
+            let _ = e.decode(i as u64, 3).unwrap();
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            for i in 0..batch {
+                let _ = e.decode(i as u64, 3).unwrap();
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        twilight::obs::trace::set_enabled(false);
+        dt / steps as f64
+    };
+    let off = time_decode(false);
+    let on = time_decode(true);
+    let overhead = (on / off - 1.0) * 100.0;
+    println!(
+        "{:>10} {:>10} {:>9}\n{:>10.2} {:>10.2} {:>8.1}%  (target < 3%)",
+        "off-ms", "on-ms", "overhead",
+        off * 1e3,
+        on * 1e3,
+        overhead,
+    );
+    let (held, dropped) = twilight::obs::trace::event_counts();
+    println!("spans held {held}, dropped {dropped}");
 }

@@ -56,6 +56,7 @@ use crate::governor::signals::SignalHub;
 use crate::governor::BudgetDirective;
 use crate::kvcache::{CacheConfig, CacheError, PagedKvCache, SeqCache};
 use crate::model::{BatchBackend, Model, ModelConfig, SpanRef};
+use crate::obs::trace;
 use crate::pruner::{prune_group_into, AttnScratch, PrunerConfig};
 use crate::selector::{SelectorKind, TokenSelector};
 use crate::util::stats::Histogram;
@@ -310,6 +311,10 @@ pub struct Engine {
     prefill_chunk: usize,
     /// Attribution of the most recent mixed step.
     last_timing: StepTiming,
+    /// Monotonic batched-step ordinal used as the `step` span tag
+    /// (unlike `stats.steps` it also counts chunk-only steps, so every
+    /// recorded span maps to exactly one `run_batch` call).
+    step_seq: u64,
 }
 
 impl Engine {
@@ -335,6 +340,7 @@ impl Engine {
             call_pool: Vec::new(),
             prefill_chunk: default_prefill_chunk(),
             last_timing: StepTiming::default(),
+            step_seq: 0,
         }
     }
 
@@ -642,6 +648,9 @@ impl Engine {
         }
         let staged_before =
             self.stats.t_select + self.stats.t_prune + self.stats.t_attend + self.stats.t_dense;
+        let step = self.step_seq;
+        self.step_seq += 1;
+        let step_mark = trace::mark();
         let t0 = Instant::now();
         let probe_interval = self.signals.probe_interval();
         let mut backend = BatchStepBackend {
@@ -658,6 +667,7 @@ impl Engine {
             call_pool: &mut self.call_pool,
             pool: &self.pool,
             probe_interval,
+            step,
             spans: &spans,
             offs: &offs,
             subspecs: &subspecs,
@@ -676,6 +686,11 @@ impl Engine {
             self.signals.record_probe(recall);
         }
         let total = t0.elapsed().as_secs_f64();
+        trace::record_since(
+            step_mark,
+            trace::Stage::Step,
+            trace::Tags { step: step as u32, ..trace::Tags::NONE },
+        );
         // Mixed-step attribution: split the measured wall-clock by each
         // side's attention-work share.
         let cost_sum = decode_cost + prefill_cost;
@@ -767,6 +782,8 @@ struct BatchStepBackend<'a> {
     call_pool: &'a mut Vec<Vec<CallOut>>,
     pool: &'a ThreadPool,
     probe_interval: u64,
+    /// Engine step ordinal — the `step` span tag for this batch's spans.
+    step: u64,
     /// (start position, span) per batch item.
     spans: &'a [(usize, usize)],
     /// Query-token offset of each item in the flattened step buffers.
@@ -981,6 +998,15 @@ impl BatchBackend for BatchStepBackend<'_> {
         let mcfg = c;
         let directive = self.directive;
         let probe_interval = self.probe_interval;
+        let step = self.step;
+        // Caller-thread span context: pool-round spans recorded inside
+        // `ThreadPool::run` inherit the (step, layer) tags.
+        trace::set_ctx(trace::Tags {
+            step: step as u32,
+            layer: layer as u16,
+            ..trace::Tags::NONE
+        });
+        let phase_t0 = Instant::now();
         // One pool round per layer: the resident workers (spawned once,
         // on the engine's first parallel round) wake, drain exactly one
         // bucket each (chunk = 1, one ticket per LPT bucket), and park
@@ -991,9 +1017,18 @@ impl BatchBackend for BatchStepBackend<'_> {
             let WorkerCell { items, scratch, results } = &mut *guard;
             results.reserve(items.len());
             for item in items.drain(..) {
-                results.push(run_attn_item(cfg, mcfg, directive, probe_interval, item, scratch));
+                results.push(run_attn_item(
+                    cfg,
+                    mcfg,
+                    directive,
+                    probe_interval,
+                    step,
+                    item,
+                    scratch,
+                ));
             }
         });
+        let phase_wall = phase_t0.elapsed().as_secs_f64();
         // --- deterministic merge at the phase barrier ------------------
         let mut merged: Vec<Option<AttnItemOut>> = (0..n_items).map(|_| None).collect();
         for (w, cell) in cells.into_iter().enumerate() {
@@ -1005,6 +1040,7 @@ impl BatchBackend for BatchStepBackend<'_> {
             }
         }
         let mut calls_by_flat: Vec<Vec<CallOut>> = (0..n_items).map(|_| Vec::new()).collect();
+        let mut busy = 0.0f64;
         for r in merged.into_iter().flatten() {
             // Scatter the item's sub-call outputs back into the step's
             // token-major buffer; time/byte sums merge in flat order.
@@ -1019,10 +1055,26 @@ impl BatchBackend for BatchStepBackend<'_> {
             self.stats.t_prune += r.t_prune;
             self.stats.t_attend += r.t_attend;
             self.stats.t_dense += r.t_dense;
+            busy += r.t_select + r.t_prune + r.t_attend + r.t_dense;
             self.stats.est_bytes_select += r.bytes_select;
             self.stats.est_bytes_prune += r.bytes_prune;
             self.stats.est_bytes_attend += r.bytes_attend;
             calls_by_flat[r.flat] = r.calls;
+        }
+        // Worker utilization of this attention phase: staged busy time
+        // over workers × wall (an estimate — per-item overhead outside
+        // the staged timers counts as idle). Last-write-wins gauge; a
+        // scrape sees the most recent layer round.
+        if phase_wall > 0.0 && workers > 0 {
+            use std::sync::OnceLock;
+            static UTIL: OnceLock<&'static crate::obs::metrics::Gauge> = OnceLock::new();
+            let g = UTIL.get_or_init(|| {
+                crate::obs::metrics::gauge(
+                    "twilight_worker_utilization",
+                    "staged busy time / (workers x wall) of the latest attention phase",
+                )
+            });
+            g.set((busy / (workers as f64 * phase_wall)).min(1.0));
         }
         // Per-call telemetry records in (item, token, kv-head) order —
         // the same sequence token-at-a-time processing produces, so the
@@ -1080,6 +1132,7 @@ fn run_attn_item(
     c: &ModelConfig,
     directive: BudgetDirective,
     probe_interval: u64,
+    step: u64,
     item: AttnItem<'_>,
     scratch: &mut AttnScratch,
 ) -> AttnItemOut {
@@ -1103,6 +1156,14 @@ fn run_attn_item(
     let qd = c.q_dim();
     let span = subs.len();
     debug_assert_eq!(item_out.len(), span * group * d);
+    // Worker-thread span context: every stage span this item records
+    // (here and inside the pruner) carries the full tag set.
+    trace::set_ctx(trace::Tags {
+        step: step as u32,
+        seq: seq_idx as u32,
+        layer: layer as u16,
+        kv_head: kv_head as u16,
+    });
     let mut r = AttnItemOut {
         flat,
         seq: seq_idx,
@@ -1132,7 +1193,9 @@ fn run_attn_item(
             start,
             &mut r.out,
         );
-        r.t_dense = t.elapsed().as_secs_f64();
+        let el = t.elapsed();
+        r.t_dense = el.as_secs_f64();
+        trace::record_ctx(trace::Stage::DenseAttend, el);
         r.bytes_attend = subs.iter().map(|s| crate::sim::attn_bytes(s.n, d) as u64).sum();
         return r;
     }
@@ -1159,7 +1222,9 @@ fn run_attn_item(
                     &mut out[g * d..(g + 1) * d],
                 );
             }
-            r.t_dense += t.elapsed().as_secs_f64();
+            let el = t.elapsed();
+            r.t_dense += el.as_secs_f64();
+            trace::record_ctx(trace::Stage::DenseAttend, el);
             r.bytes_attend += crate::sim::attn_bytes(n, d) as u64;
             continue;
         }
@@ -1201,7 +1266,9 @@ fn run_attn_item(
         let mut cands = std::mem::take(&mut scratch.candidates);
         let t = Instant::now();
         selector.select_into(cache, seq, kv_head, qs_group, group, budget, &mut cands);
-        r.t_select += t.elapsed().as_secs_f64();
+        let el = t.elapsed();
+        r.t_select += el.as_secs_f64();
+        trace::record_ctx(trace::Stage::Select, el);
         r.bytes_select += selector_bytes(cfg.selector, n, d) as u64;
         // --- stage 2: Twilight Pruner ---------------------------------
         // Results stay in the arena: `scratch.union` (keep-set union)
@@ -1219,7 +1286,9 @@ fn run_attn_item(
             let t = Instant::now();
             let info =
                 prune_group_into(&pc, cache, seq, kv_head, qs_group, group, &cands, scratch);
-            r.t_prune += t.elapsed().as_secs_f64();
+            let el = t.elapsed();
+            r.t_prune += el.as_secs_f64();
+            trace::record_ctx(trace::Stage::Prune, el);
             r.bytes_prune +=
                 crate::sim::spgemv_bytes(cands.len(), d, cache.cfg.mirror_bits) as u64;
             call.hier_skipped = info.pages_skipped;
@@ -1294,7 +1363,9 @@ fn run_attn_item(
                 }
             }
         }
-        r.t_attend += t.elapsed().as_secs_f64();
+        let el = t.elapsed();
+        r.t_attend += el.as_secs_f64();
+        trace::record_ctx(trace::Stage::SparseAttend, el);
         r.bytes_attend += crate::sim::attn_bytes(kept.len(), d) as u64;
         // --- feedback for stateful (dropping) selectors ---------------
         if selector_wants_observation(cfg.selector) {

@@ -75,11 +75,28 @@ impl ServingReport {
         self.requests.iter().map(|r| r.output_len).sum()
     }
 
+    /// Prompt tokens across non-rejected requests (the tokens prefill
+    /// actually processed; rejected prompts never enter the engine).
+    pub fn total_prompt_tokens(&self) -> usize {
+        self.requests.iter().filter(|r| !r.rejected).map(|r| r.prompt_len).sum()
+    }
+
     pub fn throughput_tok_s(&self) -> f64 {
         if self.duration <= 0.0 {
             0.0
         } else {
             self.total_output_tokens() as f64 / self.duration
+        }
+    }
+
+    /// Prefill-phase throughput: prompt tokens over the run's wall clock.
+    /// Reported per phase next to [`Self::throughput_tok_s`] (decode) so
+    /// result files separate the two regimes under chunked prefill.
+    pub fn prefill_throughput_tok_s(&self) -> f64 {
+        if self.duration <= 0.0 {
+            0.0
+        } else {
+            self.total_prompt_tokens() as f64 / self.duration
         }
     }
 
@@ -146,22 +163,29 @@ impl ServingReport {
             ("requests", Json::Num(self.requests.len() as f64)),
             ("duration_s", Json::Num(self.duration)),
             ("output_tokens", Json::Num(self.total_output_tokens() as f64)),
+            ("prompt_tokens", Json::Num(self.total_prompt_tokens() as f64)),
             ("throughput_tok_s", Json::Num(self.throughput_tok_s())),
+            ("prefill_throughput_tok_s", Json::Num(self.prefill_throughput_tok_s())),
             ("ttft_mean_s", Json::Num(ttft.mean)),
+            ("ttft_p50_s", Json::Num(ttft.p50)),
+            ("ttft_p90_s", Json::Num(ttft.p90)),
             ("ttft_p99_s", Json::Num(ttft.p99)),
             ("prefill_mean_s", Json::Num(prefill.mean)),
+            ("prefill_p50_s", Json::Num(prefill.p50)),
+            ("prefill_p90_s", Json::Num(prefill.p90)),
             ("prefill_p99_s", Json::Num(prefill.p99)),
             ("tpot_mean_s", Json::Num(tpot.mean)),
             ("tpot_p50_s", Json::Num(tpot.p50)),
+            ("tpot_p90_s", Json::Num(tpot.p90)),
             ("tpot_p99_s", Json::Num(tpot.p99)),
             ("preemptions", Json::Num(self.preemptions() as f64)),
             ("rejected", Json::Num(self.rejected() as f64)),
+            // Unconditional so downstream dashboards can key on them
+            // without probing: 0/0/0.0 when --hier-pages never ran.
+            ("hier_pages_skipped", Json::Num(self.hier_pages_skipped as f64)),
+            ("hier_pages_total", Json::Num(self.hier_pages_total as f64)),
+            ("hier_skip_frac", Json::Num(self.hier_skip_frac())),
         ];
-        if self.hier_pages_total > 0 {
-            kv.push(("hier_pages_skipped", Json::Num(self.hier_pages_skipped as f64)));
-            kv.push(("hier_pages_total", Json::Num(self.hier_pages_total as f64)));
-            kv.push(("hier_skip_frac", Json::Num(self.hier_skip_frac())));
-        }
         if !self.governor.is_empty() {
             let pmin = self.governor.iter().map(|e| e.p_scale).fold(f32::INFINITY, f32::min);
             let pmax = self.governor.iter().map(|e| e.p_scale).fold(f32::NEG_INFINITY, f32::max);
@@ -255,9 +279,12 @@ mod tests {
         };
         assert_eq!(rep.rejected(), 1);
         assert!((rep.ttft_summary().mean - 0.5).abs() < 1e-12);
+        // Rejected prompts never prefill: excluded from prompt_tokens too.
+        assert_eq!(rep.total_prompt_tokens(), 10);
         let j = rep.to_json();
         assert_eq!(j.get_usize("rejected"), Some(1));
         assert!(j.get_f64("prefill_mean_s").is_some());
+        assert_eq!(j.get_usize("prompt_tokens"), Some(10));
     }
 
     #[test]
@@ -274,9 +301,26 @@ mod tests {
         };
         assert_eq!(rep.total_output_tokens(), 32);
         assert!((rep.throughput_tok_s() - 32.0 / 2.2).abs() < 1e-9);
+        assert!((rep.prefill_throughput_tok_s() - 20.0 / 2.2).abs() < 1e-9);
         let j = rep.to_json();
         assert_eq!(j.get_usize("requests"), Some(2));
         assert!(j.get_f64("tpot_mean_s").unwrap() > 0.0);
+        // Full percentile set is always present, per phase.
+        for key in [
+            "ttft_p50_s",
+            "ttft_p90_s",
+            "ttft_p99_s",
+            "prefill_p50_s",
+            "prefill_p90_s",
+            "tpot_p50_s",
+            "tpot_p90_s",
+            "prefill_throughput_tok_s",
+        ] {
+            assert!(j.get_f64(key).is_some(), "missing {key}");
+        }
+        // Hier fields are unconditional: 0 when the mode never ran.
+        assert_eq!(j.get_f64("hier_skip_frac"), Some(0.0));
+        assert_eq!(j.get_usize("hier_pages_total"), Some(0));
         assert!(j.get("governor_trace").is_none(), "ungoverned: no trace block");
     }
 

@@ -34,7 +34,10 @@ use super::metrics::{RequestMetrics, ServingReport};
 use super::request::{Request, RequestState};
 use crate::governor::Governor;
 use crate::model::sampler::sample;
+use crate::obs::metrics::{counter, gauge, histogram, Counter, Gauge, LogHist};
+use crate::obs::recorder::{self, Anomaly, StepRecord};
 use crate::util::json::{self, Json};
+use crate::util::logging;
 use crate::util::rng::Rng;
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -54,6 +57,10 @@ pub struct SchedulerConfig {
     /// mixed step (Sarathi-style): bounds how much a wave of admissions
     /// can stall the co-scheduled decodes, i.e. bounds TPOT inflation.
     pub max_prefill_tokens_per_step: usize,
+    /// Emit one obs snapshot log line (queue depth, TPOT EMA, kept
+    /// budget, utilization fields) every this many scheduler steps
+    /// (0 = off; `--snapshot-every` on the CLI).
+    pub snapshot_every_steps: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -63,6 +70,7 @@ impl Default for SchedulerConfig {
             admit_headroom_pages: 8,
             max_prefills_per_step: 4,
             max_prefill_tokens_per_step: 512,
+            snapshot_every_steps: 0,
         }
     }
 }
@@ -72,6 +80,94 @@ struct PrefillEntry {
     req: Request,
     /// Prompt tokens already appended to the engine.
     cursor: usize,
+}
+
+/// The scheduler's observability state: pre-resolved `'static` metric
+/// handles (so the per-step path never touches the registry lock) plus
+/// the previous-step counter values the deltas are computed from.
+struct SchedObs {
+    steps: &'static Counter,
+    tokens: &'static Counter,
+    prefill_tokens: &'static Counter,
+    preempt: &'static Counter,
+    reject: &'static Counter,
+    queue_depth: &'static Gauge,
+    running: &'static Gauge,
+    prefilling: &'static Gauge,
+    free_pages: &'static Gauge,
+    hier_skip: &'static Gauge,
+    probe_recall: &'static Gauge,
+    p_scale: &'static Gauge,
+    budget_scale: &'static Gauge,
+    ttft: &'static LogHist,
+    tpot: &'static LogHist,
+    step_seconds: &'static LogHist,
+    kept_budget: &'static LogHist,
+    topp_mass: &'static LogHist,
+    /// Scheduler steps observed (drives the snapshot-line cadence; not
+    /// the engine's `stats.steps`, which skips chunk-only steps).
+    sched_steps: u64,
+    /// Previous-step engine counter values (delta baselines).
+    last_kept: u64,
+    last_candidates: u64,
+    last_sparse_calls: u64,
+    last_prefill_steps: u64,
+    /// Cumulative local event counts (bumped by `requeue_preempted` /
+    /// `reject`) and their previous-step baselines.
+    preempt_events: u64,
+    reject_events: u64,
+    last_preempt: u64,
+    last_reject: u64,
+    /// SLO-breach edge detector: the flight recorder dumps once per
+    /// entry into breach, not every breached step.
+    in_breach: bool,
+}
+
+impl SchedObs {
+    fn new() -> SchedObs {
+        SchedObs {
+            steps: counter("twilight_steps_total", "scheduler steps executed"),
+            tokens: counter("twilight_tokens_generated_total", "decode tokens sampled"),
+            prefill_tokens: counter(
+                "twilight_prefill_tokens_total",
+                "prompt tokens pushed through prefill chunks",
+            ),
+            preempt: counter("twilight_preemptions_total", "recompute preemptions"),
+            reject: counter("twilight_rejected_total", "admissions terminally refused"),
+            queue_depth: gauge("twilight_queue_depth", "requests waiting for admission"),
+            running: gauge("twilight_running", "requests in the decode set"),
+            prefilling: gauge("twilight_prefilling", "requests partway through chunked prefill"),
+            free_pages: gauge("twilight_free_pages", "min free pages across layer pools"),
+            hier_skip: gauge(
+                "twilight_hier_skip_frac",
+                "fraction of candidate pages skipped by the hier pre-prune",
+            ),
+            probe_recall: gauge("twilight_probe_recall", "dense recall-probe EMA"),
+            p_scale: gauge("twilight_p_scale", "governor top-p multiplier in force"),
+            budget_scale: gauge("twilight_budget_scale", "governor stage-1 budget multiplier"),
+            ttft: histogram("twilight_ttft_seconds", "time to first token per request"),
+            tpot: histogram("twilight_tpot_seconds", "time per output token per request"),
+            step_seconds: histogram("twilight_step_seconds", "wall seconds per mixed engine step"),
+            kept_budget: histogram(
+                "twilight_kept_budget",
+                "mean kept tokens per pruned attention call, per step",
+            ),
+            topp_mass: histogram(
+                "twilight_topp_mass",
+                "per-layer windowed mean of captured top-p mass",
+            ),
+            sched_steps: 0,
+            last_kept: 0,
+            last_candidates: 0,
+            last_sparse_calls: 0,
+            last_prefill_steps: 0,
+            preempt_events: 0,
+            reject_events: 0,
+            last_preempt: 0,
+            last_reject: 0,
+            in_breach: false,
+        }
+    }
 }
 
 /// The coordinator's scheduler: admission queue + prefilling set +
@@ -88,6 +184,8 @@ pub struct Scheduler {
     /// Optional budget governor; when present it decides a
     /// [`crate::governor::BudgetDirective`] at the top of every step.
     governor: Option<Governor>,
+    /// Metrics handles + delta baselines (see [`SchedObs`]).
+    obs: SchedObs,
 }
 
 impl Scheduler {
@@ -101,6 +199,7 @@ impl Scheduler {
             rng: Rng::new(0xBA7C4),
             finished: Vec::new(),
             governor: None,
+            obs: SchedObs::new(),
         }
     }
 
@@ -363,7 +462,122 @@ impl Scheduler {
             // reported via EngineStats::t_prefill instead).
             gov.observe_step(self.engine.last_step_timing().decode, produced);
         }
+        self.observe_step_obs(now, produced);
         produced
+    }
+
+    /// Purely-observational end-of-step hook: update the metrics
+    /// registry, append a flight-recorder record, dump on an SLO-breach
+    /// rising edge, and emit the periodic snapshot log line. Nothing
+    /// here feeds back into scheduling.
+    fn observe_step_obs(&mut self, now: f64, produced: usize) {
+        self.obs.sched_steps += 1;
+        let timing = self.engine.last_step_timing();
+        let stats = &self.engine.stats;
+        let directive = self.engine.directive();
+        // Counters (deltas against the previous step's baselines).
+        self.obs.steps.inc();
+        self.obs.tokens.add(produced as u64);
+        let prefill_delta = stats.prefill_steps - self.obs.last_prefill_steps;
+        self.obs.prefill_tokens.add(prefill_delta);
+        self.obs.last_prefill_steps = stats.prefill_steps;
+        let preempt_delta = self.obs.preempt_events - self.obs.last_preempt;
+        self.obs.preempt.add(preempt_delta);
+        self.obs.last_preempt = self.obs.preempt_events;
+        let reject_delta = self.obs.reject_events - self.obs.last_reject;
+        self.obs.reject.add(reject_delta);
+        self.obs.last_reject = self.obs.reject_events;
+        // Gauges.
+        self.obs.queue_depth.set(self.queue.len() as f64);
+        self.obs.running.set(self.running.len() as f64);
+        self.obs.prefilling.set(self.prefilling.len() as f64);
+        self.obs.free_pages.set(self.engine.free_pages() as f64);
+        self.obs.hier_skip.set(self.engine.signals.hier_skip_frac());
+        self.obs.probe_recall.set(self.engine.signals.probe_recall());
+        self.obs.p_scale.set(directive.p_scale as f64);
+        self.obs.budget_scale.set(directive.budget_scale as f64);
+        // Histograms.
+        if timing.total > 0.0 {
+            self.obs.step_seconds.observe(timing.total);
+        }
+        let kept_delta = stats.kept_sum - self.obs.last_kept;
+        let candidates_delta = stats.candidates_sum - self.obs.last_candidates;
+        let calls_delta = stats.sparse_calls - self.obs.last_sparse_calls;
+        if calls_delta > 0 {
+            self.obs.kept_budget.observe(kept_delta as f64 / calls_delta as f64);
+        }
+        self.obs.last_kept = stats.kept_sum;
+        self.obs.last_candidates = stats.candidates_sum;
+        self.obs.last_sparse_calls = stats.sparse_calls;
+        for layer in 0..self.engine.signals.n_layers() {
+            let mass = self.engine.signals.layer_mass(layer);
+            if mass > 0.0 {
+                self.obs.topp_mass.observe(mass);
+            }
+        }
+        // Anomaly classification (most severe wins) + breach detection.
+        let tpot_ema = self.governor.as_ref().map(|g| g.tpot_ema()).unwrap_or(0.0);
+        let breach = self.governor.as_ref().is_some_and(|g| {
+            let target = g.slo_tpot();
+            target > 0.0 && g.tpot_ema() > 4.0 * target
+        });
+        let mut anomaly = Anomaly::None;
+        if preempt_delta > 0 {
+            anomaly = Anomaly::Preempt;
+        }
+        if reject_delta > 0 {
+            anomaly = Anomaly::Reject;
+        }
+        if breach {
+            anomaly = Anomaly::SloBreach;
+        }
+        recorder::record(StepRecord {
+            step: self.obs.sched_steps,
+            now,
+            step_s: timing.total,
+            decode_s: timing.decode,
+            prefill_s: timing.prefill,
+            produced: produced as u32,
+            queue: self.queue.len() as u32,
+            running: self.running.len() as u32,
+            prefilling: self.prefilling.len() as u32,
+            free_pages: self.engine.free_pages() as u32,
+            kept_delta,
+            candidates_delta,
+            p_scale: directive.p_scale,
+            budget_scale: directive.budget_scale,
+            degrade: directive.degrade_level,
+            anomaly,
+        });
+        // Dump once per *entry* into breach (governed tests run with
+        // deliberately unattainable SLOs — every step breaches — so an
+        // unedged dump would spam stderr for the whole run).
+        if breach && !self.obs.in_breach {
+            recorder::dump_stderr("TPOT SLO breach (tpot_ema > 4x target)", 16);
+        }
+        self.obs.in_breach = breach;
+        if self.cfg.snapshot_every_steps > 0
+            && self.obs.sched_steps % self.cfg.snapshot_every_steps as u64 == 0
+        {
+            logging::log_kv(
+                logging::Level::Info,
+                "obs",
+                "snapshot",
+                &[
+                    ("step", self.obs.sched_steps as f64),
+                    ("queue", self.queue.len() as f64),
+                    ("running", self.running.len() as f64),
+                    ("prefilling", self.prefilling.len() as f64),
+                    ("free_pages", self.engine.free_pages() as f64),
+                    ("step_s", timing.total),
+                    ("tpot_ema_s", tpot_ema),
+                    ("p_scale", directive.p_scale as f64),
+                    ("budget_scale", directive.budget_scale as f64),
+                    ("hier_skip_frac", self.engine.signals.hier_skip_frac()),
+                    ("probe_recall", self.engine.signals.probe_recall()),
+                ],
+            );
+        }
     }
 
     /// Terminally refuse service: a fresh prompt the admission policy can
@@ -373,6 +587,7 @@ impl Scheduler {
     fn reject(&mut self, mut req: Request, now: f64) {
         req.state = RequestState::Rejected;
         req.finished_at = Some(now);
+        self.obs.reject_events += 1;
         self.finished.push(req);
     }
 
@@ -383,6 +598,7 @@ impl Scheduler {
     fn requeue_preempted(&mut self, mut req: Request) {
         req.state = RequestState::Preempted;
         req.preemptions += 1;
+        self.obs.preempt_events += 1;
         req.prompt.extend_from_slice(&req.output);
         req.output.clear();
         req.first_token_at = None;
@@ -393,6 +609,15 @@ impl Scheduler {
     fn finish(&mut self, mut req: Request, now: f64) {
         req.state = RequestState::Finished;
         req.finished_at = Some(now);
+        // Per-request latency histograms (virtual time — consistent with
+        // the ServingReport's definitions in coordinator/metrics.rs).
+        if let Some(first) = req.first_token_at {
+            self.obs.ttft.observe((first - req.arrival).max(0.0));
+            if req.output.len() > 1 {
+                let gen_t = (req.finished_at.unwrap_or(now) - first).max(0.0);
+                self.obs.tpot.observe(gen_t / (req.output.len() - 1) as f64);
+            }
+        }
         self.finished.push(req);
     }
 

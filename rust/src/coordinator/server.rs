@@ -8,12 +8,26 @@
 //! ← {"pending": 0, "running": 1, "prune_ratio": ..., "governor": {...}}
 //! → {"cmd": "slo", "tpot_ms": 25}
 //! ← {"ok": true, "tpot_ms": 25}
+//! → {"cmd": "metrics"}
+//! ← # HELP twilight_steps_total …      (Prometheus text, ends "# EOF")
+//! → {"cmd": "dump"}
+//! ← {"records": [{"step": …, "step_s": …, "anomaly": "none"}, …]}
 //! → {"cmd": "shutdown"}
 //! ```
 //!
 //! `stats` reports live scheduler/engine counters plus governor state;
 //! `slo` retunes the governor's TPOT target at runtime (fails with
 //! `ok: false` when the scheduler is ungoverned).
+//!
+//! `metrics` replies with the global [`crate::obs::metrics`] registry in
+//! Prometheus text format — a multi-line raw body (not line-JSON),
+//! terminated by a `# EOF` line so a plain TCP scrape
+//! (`echo '{"cmd":"metrics"}' | nc host port`) knows where it ends.
+//! `dump` replies with one JSON line holding the
+//! [`crate::obs::recorder`] flight-recorder ring (the last N step
+//! summaries with timings, directives, and anomalies). Both read global
+//! observability state, so they answer on the connection thread without
+//! a round-trip through the engine loop.
 //!
 //! Connections are handled by an acceptor thread each; requests and
 //! control commands funnel through an mpsc channel into the single
@@ -189,6 +203,17 @@ fn handle_conn(
                 writeln!(writer, "{}", msg.to_string())?;
                 continue;
             }
+            Some("metrics") => {
+                // Raw Prometheus text (already newline-terminated and
+                // ending with "# EOF\n" — the scrape framing marker).
+                writer.write_all(crate::obs::metrics::render_prometheus().as_bytes())?;
+                writer.flush()?;
+                continue;
+            }
+            Some("dump") => {
+                writeln!(writer, "{}", crate::obs::recorder::to_json().to_string())?;
+                continue;
+            }
             Some(other) => {
                 writeln!(
                     writer,
@@ -318,6 +343,30 @@ mod tests {
         line.clear();
         reader.read_line(&mut line).unwrap();
         assert!(Json::parse(&line).unwrap().get("error").is_some());
+        // Prometheus metrics scrape: multi-line text body ending "# EOF".
+        writeln!(&stream, "{{\"cmd\": \"metrics\"}}").unwrap();
+        let mut body = String::new();
+        loop {
+            line.clear();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "metrics body truncated");
+            body.push_str(&line);
+            if line.trim_end() == "# EOF" {
+                break;
+            }
+        }
+        assert!(
+            body.lines().any(|l| l.starts_with("twilight_steps_total ")),
+            "metrics scrape missing scheduler counters:\n{body}"
+        );
+        assert!(body.contains("# TYPE twilight_ttft_seconds histogram"), "{body}");
+        // Flight-recorder dump: one JSON line with the step-record ring.
+        writeln!(&stream, "{{\"cmd\": \"dump\"}}").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let dump = Json::parse(&line).unwrap();
+        let records = dump.get("records").unwrap().as_arr().unwrap();
+        assert!(!records.is_empty(), "served steps must leave flight records");
+        assert!(records[0].get_f64("step_s").is_some());
         // Shutdown.
         writeln!(&stream, "{{\"cmd\": \"shutdown\"}}").unwrap();
         line.clear();

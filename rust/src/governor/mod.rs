@@ -194,6 +194,13 @@ impl Governor {
         self.slo.cfg.target_tpot_s
     }
 
+    /// Smoothed per-token latency the SLO tracker currently sees (0.0
+    /// until the first observed step). Observability reads this to flag
+    /// SLO-breach anomalies without reaching into the tracker.
+    pub fn tpot_ema(&self) -> f64 {
+        self.slo.tpot_ema()
+    }
+
     /// Assemble the snapshot a policy will see.
     pub fn snapshot(
         &self,

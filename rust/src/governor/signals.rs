@@ -206,6 +206,11 @@ impl SignalHub {
         self.probe_recall.samples()
     }
 
+    /// Number of per-layer telemetry rings (the model's layer count).
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
     /// Per-layer window means, for reports.
     pub fn layer_mass(&self, layer: usize) -> f64 {
         self.layers.get(layer).map(|l| l.mass.mean()).unwrap_or(0.0)

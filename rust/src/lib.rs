@@ -26,6 +26,7 @@ pub mod evalsuite;
 pub mod governor;
 pub mod kvcache;
 pub mod model;
+pub mod obs;
 pub mod pruner;
 pub mod runtime;
 pub mod selector;

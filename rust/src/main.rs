@@ -25,6 +25,16 @@
 //! `--governor` attaches the adaptive budget governor (DESIGN.md §8):
 //! it closes the loop on p / B0 against prune-mass telemetry, the
 //! `--slo-tpot-ms` latency target, and KV page-pool pressure.
+//!
+//! Observability (DESIGN.md §10): `--trace` (also `TWILIGHT_TRACE=1`)
+//! turns on the per-stage span recorder; `--trace-out trace.json` (also
+//! `TWILIGHT_TRACE_OUT`) writes the collected spans as Chrome
+//! trace-event JSON at exit — open in `chrome://tracing` / Perfetto.
+//! `--log-json` (also `TWILIGHT_LOG_JSON=1`) switches log lines to
+//! JSON-lines. `--snapshot-every N` makes the scheduler emit one
+//! structured `obs snapshot` log line every N steps. The Prometheus
+//! scrape (`{"cmd":"metrics"}`) and flight-recorder dump
+//! (`{"cmd":"dump"}`) are always live on the serve socket.
 
 use std::sync::Arc;
 
@@ -119,6 +129,7 @@ fn cmd_serve(a: &Args) {
         max_batch: a.usize_or("max-batch", 64),
         max_prefill_tokens_per_step: a
             .usize_or("prefill-budget", SchedulerConfig::default().max_prefill_tokens_per_step),
+        snapshot_every_steps: a.usize_or("snapshot-every", 0),
         ..Default::default()
     };
     let mut sched = Scheduler::new(engine, sched_cfg);
@@ -265,6 +276,21 @@ fn cmd_inspect(a: &Args) {
     }
 }
 
+/// Write the collected spans as Chrome trace-event JSON if a destination
+/// was given (`--trace-out` or `TWILIGHT_TRACE_OUT`). No-op otherwise.
+fn maybe_export_trace(a: &Args) {
+    let path = a
+        .get("trace-out")
+        .map(|s| s.to_string())
+        .or_else(|| std::env::var("TWILIGHT_TRACE_OUT").ok().filter(|s| !s.is_empty()));
+    if let Some(path) = path {
+        match twilight::obs::trace::export_chrome(&path) {
+            Ok(()) => twilight::log_info!("wrote Chrome trace to {path}"),
+            Err(e) => twilight::log_warn!("trace export to {path} failed: {e}"),
+        }
+    }
+}
+
 fn main() {
     logging::init();
     let all: Vec<String> = std::env::args().skip(1).collect();
@@ -272,8 +298,19 @@ fn main() {
         usage();
     }
     let cmd = all[0].clone();
-    let a = Args::parse(all.into_iter().skip(1), &["no-twilight", "help", "hier-pages"]);
+    let a = Args::parse(
+        all.into_iter().skip(1),
+        &["no-twilight", "help", "hier-pages", "trace", "log-json"],
+    );
     logging::set_level(logging::level_from_str(&a.str_or("log", "info")));
+    if a.flag("log-json") || std::env::var("TWILIGHT_LOG_JSON").is_ok_and(|v| v == "1") {
+        logging::set_json(true);
+    }
+    // Reads TWILIGHT_TRACE and installs the flight-recorder panic hook.
+    twilight::obs::init_from_env();
+    if a.flag("trace") {
+        twilight::obs::trace::set_enabled(true);
+    }
     match cmd.as_str() {
         "serve" => cmd_serve(&a),
         "eval" => cmd_eval(&a),
@@ -283,4 +320,5 @@ fn main() {
         "version" | "--version" => println!("twilight {}", twilight::VERSION),
         _ => usage(),
     }
+    maybe_export_trace(&a);
 }

@@ -290,6 +290,7 @@ impl Model {
         for (li, lw) in self.layers.iter().enumerate() {
             // Phase (a): norms + QKV + RoPE + KV append, serial per token
             // (appends mutate the shared page pools).
+            let ta = crate::obs::trace::timer();
             for (i, s) in spans.iter().enumerate() {
                 for cidx in 0..s.toks.len() {
                     if backend.is_failed(i) {
@@ -325,6 +326,11 @@ impl Model {
                     backend.append_kv(li, i, &k, &v);
                 }
             }
+            crate::obs::trace::stop(
+                ta,
+                crate::obs::trace::Stage::Append,
+                crate::obs::trace::Tags { layer: li as u16, ..crate::obs::trace::Tags::NONE },
+            );
             // Phase (b): attention for every query token at once.
             backend.attend_batch(li, &qs, &mut attn);
             // Phase (c): output projection + MLP, serial per token.
@@ -358,6 +364,7 @@ impl Model {
         // Unembed the last token of each span — and only for items whose
         // logits the caller will actually read (non-final prefill chunks
         // skip the full-vocab projection entirely).
+        let tu = crate::obs::trace::timer();
         let mut out = Vec::with_capacity(spans.len());
         for (i, s) in spans.iter().enumerate() {
             let mut logits = vec![0.0; c.vocab_size];
@@ -372,6 +379,11 @@ impl Model {
             }
             out.push(logits);
         }
+        crate::obs::trace::stop(
+            tu,
+            crate::obs::trace::Stage::Unembed,
+            crate::obs::trace::Tags::NONE,
+        );
         out
     }
 

@@ -1,0 +1,333 @@
+//! Metrics registry: named counters, gauges, and log-bucketed
+//! histograms with Prometheus-text exposition.
+//!
+//! The registry is global and always-on (unlike span tracing there is
+//! no toggle: a handful of atomics per scheduler step is noise). Hot
+//! paths never touch the registry map — callers resolve a `&'static`
+//! handle once (e.g. in `Scheduler::new` or a `OnceLock`) and then
+//! every observation is one or two relaxed atomic RMWs, allocation-free.
+//!
+//! Exposition (`render_prometheus`) emits the Prometheus text format —
+//! `# HELP`/`# TYPE` headers, cumulative `_bucket{le="…"}` lines for
+//! histograms, and a terminating `# EOF` line so a raw TCP scrape of
+//! `{"cmd":"metrics"}` (see `coordinator/server.rs`) knows where the
+//! body ends without Content-Length framing.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Monotonic counter.
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge holding an `f64` (stored as its bit pattern).
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge { bits: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Histogram bucket count: powers of two spanning `LO = 1e-6` up to
+/// `LO * 2^(N_BUCKETS-1)` (≈ 550 for seconds-valued series — wide
+/// enough for TTFT and kept-budget token counts alike).
+pub const N_BUCKETS: usize = 40;
+const LO: f64 = 1e-6;
+
+/// Log2-bucketed histogram: `bucket[i]` counts observations with
+/// `v <= LO * 2^i` (first bucket also absorbs everything below `LO`,
+/// the last also absorbs everything above — rendered as `+Inf`).
+pub struct LogHist {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    /// CAS-accumulated `f64` sum (observation rates here are ~per-step,
+    /// so CAS contention is irrelevant).
+    sum_bits: AtomicU64,
+}
+
+impl Default for LogHist {
+    fn default() -> LogHist {
+        LogHist::new()
+    }
+}
+
+impl LogHist {
+    pub const fn new() -> LogHist {
+        LogHist {
+            buckets: [const { AtomicU64::new(0) }; N_BUCKETS],
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0),
+        }
+    }
+
+    /// Upper bound of bucket `i` (`+Inf` for the last).
+    pub fn le(i: usize) -> f64 {
+        if i + 1 >= N_BUCKETS {
+            f64::INFINITY
+        } else {
+            LO * (1u64 << i) as f64
+        }
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        // NaN lands in bucket 0 (observe() sanitizes it to 0.0 anyway).
+        if v.is_nan() || v <= LO {
+            return 0;
+        }
+        // ceil(log2(v / LO)) without libm: walk the exponent.
+        let ratio = v / LO;
+        let mut i = ratio.log2().ceil() as isize;
+        // Float edge: ensure the invariant v <= le(i) actually holds.
+        while i > 0 && v <= LogHist::le((i - 1) as usize) {
+            i -= 1;
+        }
+        (i.max(0) as usize).min(N_BUCKETS - 1)
+    }
+
+    #[inline]
+    pub fn observe(&self, v: f64) {
+        let v = if v.is_finite() { v.max(0.0) } else { 0.0 };
+        self.buckets[LogHist::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Non-cumulative per-bucket counts (exposition cumulates them).
+    pub fn bucket_counts(&self) -> [u64; N_BUCKETS] {
+        let mut out = [0; N_BUCKETS];
+        for (o, b) in out.iter_mut().zip(self.buckets.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+}
+
+enum Metric {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Hist(&'static LogHist),
+}
+
+struct Entry {
+    help: &'static str,
+    metric: Metric,
+}
+
+fn registry() -> &'static Mutex<BTreeMap<&'static str, Entry>> {
+    static R: OnceLock<Mutex<BTreeMap<&'static str, Entry>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Get-or-register the counter `name`. The handle is `'static`: resolve
+/// once, observe forever without touching the registry lock.
+///
+/// Panics if `name` is already registered as a different metric type.
+pub fn counter(name: &'static str, help: &'static str) -> &'static Counter {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    let e = reg.entry(name).or_insert_with(|| Entry {
+        help,
+        metric: Metric::Counter(Box::leak(Box::new(Counter::new()))),
+    });
+    match e.metric {
+        Metric::Counter(c) => c,
+        _ => panic!("metric {name} already registered with a different type"),
+    }
+}
+
+/// Get-or-register the gauge `name` (see [`counter`] for semantics).
+pub fn gauge(name: &'static str, help: &'static str) -> &'static Gauge {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    let e = reg.entry(name).or_insert_with(|| Entry {
+        help,
+        metric: Metric::Gauge(Box::leak(Box::new(Gauge::new()))),
+    });
+    match e.metric {
+        Metric::Gauge(g) => g,
+        _ => panic!("metric {name} already registered with a different type"),
+    }
+}
+
+/// Get-or-register the histogram `name` (see [`counter`] for semantics).
+pub fn histogram(name: &'static str, help: &'static str) -> &'static LogHist {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    let e = reg.entry(name).or_insert_with(|| Entry {
+        help,
+        metric: Metric::Hist(Box::leak(Box::new(LogHist::new()))),
+    });
+    match e.metric {
+        Metric::Hist(h) => h,
+        _ => panic!("metric {name} already registered with a different type"),
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{v}")
+    } else {
+        format!("{v:.9}")
+    }
+}
+
+/// Render every registered metric in Prometheus text format, terminated
+/// by a `# EOF` line (OpenMetrics-style end marker for raw scrapes).
+pub fn render_prometheus() -> String {
+    use std::fmt::Write;
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    let mut out = String::with_capacity(1 << 12);
+    for (name, e) in reg.iter() {
+        let _ = writeln!(out, "# HELP {name} {}", e.help);
+        match e.metric {
+            Metric::Counter(c) => {
+                let _ = writeln!(out, "# TYPE {name} counter");
+                let _ = writeln!(out, "{name} {}", c.get());
+            }
+            Metric::Gauge(g) => {
+                let _ = writeln!(out, "# TYPE {name} gauge");
+                let _ = writeln!(out, "{name} {}", fmt_f64(g.get()));
+            }
+            Metric::Hist(h) => {
+                let _ = writeln!(out, "# TYPE {name} histogram");
+                let counts = h.bucket_counts();
+                let mut cum = 0u64;
+                for (i, c) in counts.iter().enumerate() {
+                    cum += c;
+                    let _ = writeln!(
+                        out,
+                        "{name}_bucket{{le=\"{}\"}} {cum}",
+                        fmt_f64(LogHist::le(i))
+                    );
+                }
+                let _ = writeln!(out, "{name}_sum {}", fmt_f64(h.sum()));
+                let _ = writeln!(out, "{name}_count {}", h.count());
+            }
+        }
+    }
+    out.push_str("# EOF\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_bucket_invariant() {
+        // Every observation must land in a bucket whose upper bound
+        // contains it and whose predecessor does not (modulo clamping).
+        for &v in &[0.0, 1e-9, 1e-6, 1.5e-6, 2e-6, 3.3e-4, 0.01, 0.25, 1.0, 7.0, 549.0, 1e9] {
+            let i = LogHist::bucket_of(v);
+            assert!(v <= LogHist::le(i), "v={v} above its bucket bound le={}", LogHist::le(i));
+            if i > 0 && i < N_BUCKETS - 1 {
+                assert!(v > LogHist::le(i - 1), "v={v} should be in an earlier bucket");
+            }
+        }
+    }
+
+    #[test]
+    fn hist_observe_and_expose() {
+        let h = histogram("twilight_test_hist_seconds", "test histogram");
+        h.observe(0.001);
+        h.observe(0.002);
+        h.observe(1.0);
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 1.003).abs() < 1e-12);
+        let counts = h.bucket_counts();
+        assert_eq!(counts.iter().sum::<u64>(), 3);
+        let c = counter("twilight_test_counter_total", "test counter");
+        c.add(41);
+        c.inc();
+        let g = gauge("twilight_test_gauge", "test gauge");
+        g.set(0.5);
+        let text = render_prometheus();
+        assert!(text.contains("# TYPE twilight_test_hist_seconds histogram"));
+        assert!(text.contains("twilight_test_hist_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("twilight_test_hist_seconds_count 3"));
+        assert!(text.contains("twilight_test_counter_total 42"));
+        assert!(text.contains("twilight_test_gauge 0.5"));
+        assert!(text.ends_with("# EOF\n"));
+        // Cumulative bucket lines must be monotonically non-decreasing.
+        let mut last = 0u64;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("twilight_test_hist_seconds_bucket") {
+                let n: u64 = rest.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(n >= last);
+                last = n;
+            }
+        }
+    }
+
+    #[test]
+    fn same_handle_resolves_twice() {
+        let a = counter("twilight_test_same_total", "x") as *const Counter;
+        let b = counter("twilight_test_same_total", "x") as *const Counter;
+        assert_eq!(a, b);
+    }
+}

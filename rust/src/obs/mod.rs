@@ -1,0 +1,28 @@
+//! Observability: span tracing, metrics registry, and flight recorder
+//! for the pruned-decode pipeline (DESIGN.md §10).
+//!
+//! Three coupled, dependency-free pieces:
+//!
+//! * [`trace`] — per-thread lock-free span rings over every pipeline
+//!   stage, exportable as Chrome trace-event JSON (`--trace-out`,
+//!   `TWILIGHT_TRACE=1`; open in Perfetto / `chrome://tracing`).
+//! * [`metrics`] — named counters/gauges/log-bucketed histograms with
+//!   Prometheus-text exposition (server `{"cmd":"metrics"}`).
+//! * [`recorder`] — bounded ring of recent step summaries, dumped on
+//!   panic, SLO breach, or `{"cmd":"dump"}`.
+//!
+//! All of it is observational only: nothing here feeds back into
+//! scheduling, pruning, sampling, or RNG state, so decode output is
+//! bit-identical with observability on or off.
+
+pub mod metrics;
+pub mod recorder;
+pub mod trace;
+
+/// Process-level init: resolve `TWILIGHT_TRACE` once and install the
+/// flight-recorder panic hook. Call early in `main`; optional for
+/// library users (everything lazily self-initializes).
+pub fn init_from_env() {
+    let _ = trace::enabled();
+    recorder::install_panic_hook();
+}

@@ -1,0 +1,255 @@
+//! Flight recorder: a bounded ring of the last N per-step summaries
+//! (timings, governor directive, budgets, anomalies), dumped to stderr
+//! as JSON-lines on panic or SLO breach and to the server client on
+//! `{"cmd":"dump"}` — the postmortem tool for stuck or degraded runs.
+//!
+//! The ring is a pre-sized `Vec<StepRecord>` behind a `Mutex`: records
+//! are `Copy`, pushes after warm-up overwrite in place, so recording is
+//! allocation-free and costs one uncontended lock per scheduler step
+//! (the scheduler is the only writer; dumps are the only other reader).
+
+use crate::util::json::{self, Json};
+use std::sync::{Mutex, Once, OnceLock};
+
+/// Most severe thing that happened in a step (priority-ordered).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Anomaly {
+    None = 0,
+    /// A decode item was preempted back to the queue this step.
+    Preempt = 1,
+    /// An admission was rejected (prompt cannot ever fit).
+    Reject = 2,
+    /// Smoothed TPOT ran over the SLO breach threshold.
+    SloBreach = 3,
+}
+
+impl Anomaly {
+    pub fn name(self) -> &'static str {
+        match self {
+            Anomaly::None => "none",
+            Anomaly::Preempt => "preempt",
+            Anomaly::Reject => "reject",
+            Anomaly::SloBreach => "slo_breach",
+        }
+    }
+}
+
+/// One scheduler step, summarized. `Copy` so ring pushes never allocate.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    /// Scheduler step ordinal.
+    pub step: u64,
+    /// Caller-supplied virtual/wall time handed to `Scheduler::step`.
+    pub now: f64,
+    /// Wall seconds of the whole engine step, and its decode/prefill
+    /// split (from `Engine::last_step_timing`).
+    pub step_s: f64,
+    pub decode_s: f64,
+    pub prefill_s: f64,
+    /// Decode tokens produced this step.
+    pub produced: u32,
+    pub queue: u32,
+    pub running: u32,
+    pub prefilling: u32,
+    pub free_pages: u32,
+    /// Kept/candidate token deltas over this step (budget actually used).
+    pub kept_delta: u64,
+    pub candidates_delta: u64,
+    /// Governor directive in force.
+    pub p_scale: f32,
+    pub budget_scale: f32,
+    pub degrade: u8,
+    pub anomaly: Anomaly,
+}
+
+impl StepRecord {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("step", Json::Num(self.step as f64)),
+            ("now", Json::Num(self.now)),
+            ("step_s", Json::Num(self.step_s)),
+            ("decode_s", Json::Num(self.decode_s)),
+            ("prefill_s", Json::Num(self.prefill_s)),
+            ("produced", Json::Num(self.produced as f64)),
+            ("queue", Json::Num(self.queue as f64)),
+            ("running", Json::Num(self.running as f64)),
+            ("prefilling", Json::Num(self.prefilling as f64)),
+            ("free_pages", Json::Num(self.free_pages as f64)),
+            ("kept_delta", Json::Num(self.kept_delta as f64)),
+            ("candidates_delta", Json::Num(self.candidates_delta as f64)),
+            ("p_scale", Json::Num(self.p_scale as f64)),
+            ("budget_scale", Json::Num(self.budget_scale as f64)),
+            ("degrade", Json::Num(self.degrade as f64)),
+            ("anomaly", json::s(self.anomaly.name())),
+        ])
+    }
+}
+
+/// Bounded ring of the last `cap` step records.
+pub struct FlightRecorder {
+    ring: Vec<StepRecord>,
+    /// Ring bound (`Vec::capacity` is only a lower bound, so keep our own).
+    cap: usize,
+    /// Total records ever pushed; `% cap` is the overwrite slot.
+    head: u64,
+}
+
+const DEFAULT_CAP: usize = 256;
+
+impl FlightRecorder {
+    fn new(cap: usize) -> FlightRecorder {
+        let cap = cap.max(1);
+        FlightRecorder { ring: Vec::with_capacity(cap), cap, head: 0 }
+    }
+
+    fn push(&mut self, r: StepRecord) {
+        let slot = (self.head % self.cap as u64) as usize;
+        if self.ring.len() < self.cap {
+            self.ring.push(r);
+        } else {
+            self.ring[slot] = r;
+        }
+        self.head += 1;
+    }
+
+    /// Records in chronological order, oldest kept first.
+    fn ordered(&self) -> Vec<StepRecord> {
+        let mut out = Vec::with_capacity(self.ring.len());
+        if self.head <= self.cap as u64 {
+            out.extend_from_slice(&self.ring);
+        } else {
+            let split = (self.head % self.cap as u64) as usize;
+            out.extend_from_slice(&self.ring[split..]);
+            out.extend_from_slice(&self.ring[..split]);
+        }
+        out
+    }
+}
+
+fn global() -> &'static Mutex<FlightRecorder> {
+    static R: OnceLock<Mutex<FlightRecorder>> = OnceLock::new();
+    R.get_or_init(|| {
+        let cap = std::env::var("TWILIGHT_RECORDER_CAP")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_CAP);
+        Mutex::new(FlightRecorder::new(cap))
+    })
+}
+
+/// Append a step record to the global ring.
+pub fn record(r: StepRecord) {
+    global().lock().unwrap_or_else(|e| e.into_inner()).push(r);
+}
+
+/// Chronological snapshot of the retained records.
+pub fn snapshot() -> Vec<StepRecord> {
+    global().lock().unwrap_or_else(|e| e.into_inner()).ordered()
+}
+
+/// `{"records":[…]}` — the `{"cmd":"dump"}` reply body.
+pub fn to_json() -> Json {
+    let records = snapshot().iter().map(|r| r.to_json()).collect();
+    json::obj(vec![("records", Json::Arr(records))])
+}
+
+/// Dump the newest `max` records (0 = all retained) to stderr as
+/// JSON-lines, newest last, with a one-line `reason` header.
+pub fn dump_stderr(reason: &str, max: usize) {
+    // try_lock: the panic hook must never deadlock against a holder
+    // that panicked while recording.
+    let Ok(rec) = global().try_lock() else {
+        eprintln!("twilight flight-recorder: {reason} (ring busy, skipping dump)");
+        return;
+    };
+    let all = rec.ordered();
+    drop(rec);
+    let skip = if max == 0 { 0 } else { all.len().saturating_sub(max) };
+    eprintln!(
+        "twilight flight-recorder: {reason} — last {} step record(s):",
+        all.len() - skip
+    );
+    for r in &all[skip..] {
+        eprintln!("{}", r.to_json().to_string());
+    }
+}
+
+/// Install a panic hook (once) that dumps the flight recorder before
+/// the default hook runs. Safe to call repeatedly.
+pub fn install_panic_hook() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            dump_stderr("panic", 0);
+            default(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64) -> StepRecord {
+        StepRecord {
+            step,
+            now: step as f64 * 0.01,
+            step_s: 1e-3,
+            decode_s: 8e-4,
+            prefill_s: 2e-4,
+            produced: 3,
+            queue: 1,
+            running: 3,
+            prefilling: 0,
+            free_pages: 100,
+            kept_delta: 640,
+            candidates_delta: 2048,
+            p_scale: 1.0,
+            budget_scale: 1.0,
+            degrade: 0,
+            anomaly: Anomaly::None,
+        }
+    }
+
+    #[test]
+    fn ring_bounds_and_orders() {
+        let mut fr = FlightRecorder::new(4);
+        for i in 0..10 {
+            fr.push(rec(i));
+        }
+        let got = fr.ordered();
+        assert_eq!(got.len(), 4);
+        let steps: Vec<u64> = got.iter().map(|r| r.step).collect();
+        assert_eq!(steps, vec![6, 7, 8, 9]);
+        // The ring never grew past its bound.
+        assert_eq!(fr.ring.len(), 4);
+        assert_eq!(fr.cap, 4);
+    }
+
+    #[test]
+    fn json_shape() {
+        let j = rec(41_203).to_json();
+        assert_eq!(j.get_f64("step"), Some(41_203.0));
+        assert_eq!(j.get_str("anomaly"), Some("none"));
+        let parsed = Json::parse(&j.to_string()).expect("record JSON round-trips");
+        assert_eq!(parsed.get_f64("produced"), Some(3.0));
+    }
+
+    #[test]
+    fn global_record_and_dump_shape() {
+        record(rec(1));
+        record(rec(2));
+        let j = to_json();
+        let arr = j.get("records").unwrap().as_arr().unwrap();
+        assert!(arr.len() >= 2);
+        dump_stderr("test", 1);
+    }
+
+    #[test]
+    fn anomaly_priority_order() {
+        assert!(Anomaly::SloBreach > Anomaly::Reject);
+        assert!(Anomaly::Reject > Anomaly::Preempt);
+        assert!(Anomaly::Preempt > Anomaly::None);
+    }
+}

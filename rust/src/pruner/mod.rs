@@ -409,6 +409,7 @@ pub fn prune_group_into(
     // One page-tiled SpGEMV pass for the whole group (codes unpacked once
     // per page run — §Perf); then per-head softmax + top-p on the shared
     // score matrix.
+    let ts = crate::obs::trace::timer();
     scratch.group_scores.resize(group * n, 0.0);
     estimate_scores_group(
         cache,
@@ -420,6 +421,8 @@ pub fn prune_group_into(
         &mut scratch.group_scores,
         &mut scratch.spgemv,
     );
+    crate::obs::trace::stop_ctx(ts, crate::obs::trace::Stage::Spgemv);
+    let tf = crate::obs::trace::timer();
     for g in 0..group {
         finish_head(
             &mut scratch.group_scores[g * n..(g + 1) * n],
@@ -434,6 +437,7 @@ pub fn prune_group_into(
     }
     scratch.union.sort_unstable();
     scratch.union.dedup();
+    crate::obs::trace::stop_ctx(tf, crate::obs::trace::Stage::ToppSearch);
     HierPruneInfo::default()
 }
 
@@ -467,6 +471,9 @@ fn hier_prune_group(
     let sealed = sealed_limit(seq, ps);
     let eps = f64::from(cfg.hier_eps.clamp(0.0, 0.5));
     let hier = &mut scratch.hier;
+    // Span over phases (1)-(4): segmentation, bounds, ordering, and the
+    // early-stopped scoring loop (the hier replacement for Spgemv).
+    let th = crate::obs::trace::timer();
     // --- (1) segment candidates into per-page runs (the tiler's own
     //         run definition — boundaries coincide by construction) -----
     hier.runs.clear();
@@ -648,6 +655,8 @@ fn hier_prune_group(
         }
         scored_count += len;
     }
+    crate::obs::trace::stop_ctx(th, crate::obs::trace::Stage::HierPages);
+    let tf = crate::obs::trace::timer();
     // --- (5) compact the scored subset back to candidate order ---------
     // Scores are gathered in ascending candidate order, so with nothing
     // skipped the compact arrays equal the full candidate arrays and the
@@ -669,6 +678,7 @@ fn hier_prune_group(
         }
         scratch.union.sort_unstable();
         scratch.union.dedup();
+        crate::obs::trace::stop_ctx(tf, crate::obs::trace::Stage::ToppSearch);
         return HierPruneInfo { pages_total: nruns as u32, pages_skipped: 0 };
     }
     hier.compact_pos.clear();
@@ -700,6 +710,7 @@ fn hier_prune_group(
     }
     scratch.union.sort_unstable();
     scratch.union.dedup();
+    crate::obs::trace::stop_ctx(tf, crate::obs::trace::Stage::ToppSearch);
     HierPruneInfo { pages_total: nruns as u32, pages_skipped: skipped }
 }
 

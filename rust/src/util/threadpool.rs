@@ -226,6 +226,11 @@ impl ThreadPool {
             }
             return;
         }
+        // Pooled rounds only: one span + one latency observation per
+        // round. The inline path above stays untouched (it is the
+        // threads == 1 hot path whose allocation budget is pinned).
+        let round_mark = crate::obs::trace::mark();
+        let round_t0 = std::time::Instant::now();
         // A previous round's re-raised panic unwinds through the guard
         // and poisons the lock; the pool is still fully consistent then
         // (rounds always complete their barrier), so clear the poison.
@@ -270,6 +275,22 @@ impl ThreadPool {
             slot.panic.take()
         };
         drop(round_guard);
+        crate::obs::trace::record_since(
+            round_mark,
+            crate::obs::trace::Stage::PoolRound,
+            crate::obs::trace::ctx(),
+        );
+        {
+            use std::sync::OnceLock;
+            static ROUND_HIST: OnceLock<&'static crate::obs::metrics::LogHist> = OnceLock::new();
+            let h = ROUND_HIST.get_or_init(|| {
+                crate::obs::metrics::histogram(
+                    "twilight_pool_round_seconds",
+                    "wall seconds of one pooled attention round (publish to barrier)",
+                )
+            });
+            h.observe(round_t0.elapsed().as_secs_f64());
+        }
         if let Some(payload) = panic {
             std::panic::resume_unwind(payload);
         }

@@ -18,6 +18,12 @@
 //! page legitimately quantizes a fresh mirror block (one allocation per
 //! 16 tokens — amortized, not per-call), and the recall probe
 //! (1 per 64 sparse calls) legitimately allocates its dense re-score.
+//!
+//! 4. span tracing holds the same contract: with `TWILIGHT_TRACE`-style
+//!    recording enabled, a warmed engine's decode steps allocate exactly
+//!    what they do with tracing off — each span event is four atomic
+//!    stores into a pre-sized per-thread ring (the ring itself is one
+//!    warm-up allocation).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -154,6 +160,10 @@ fn warmed_engine(ctx: usize) -> (Engine, u32) {
 
 #[test]
 fn hot_path_allocation_budget() {
+    // Pin tracing off for the baseline parts regardless of environment
+    // (the CI traced leg exports TWILIGHT_TRACE=1).
+    twilight::obs::trace::set_enabled(false);
+
     // --- (1) the pruned work unit: zero allocations, both modes -------
     prune_unit_is_zero_alloc(&PrunerConfig { p: 0.9, ..Default::default() }, "default");
     prune_unit_is_zero_alloc(
@@ -184,5 +194,25 @@ fn hot_path_allocation_budget() {
         "per-step allocations grew with context length ({} @ ctx=199 vs {} @ ctx=391): \
          a per-candidate buffer escaped the scratch arena",
         counts[0], c2
+    );
+
+    // --- (4) span tracing adds zero per-step allocations --------------
+    // The thread's span ring (and any metric-handle OnceLock) is created
+    // during the warm steps; after that every recorded span is four
+    // atomic stores. The measured steps must be constant AND equal to
+    // the tracing-off counts from part (2).
+    twilight::obs::trace::set_enabled(true);
+    let (mut e3, tok3) = warmed_engine(199);
+    let traced: Vec<u64> = (0..4).map(|_| step_allocs(&mut e3, tok3)).collect();
+    twilight::obs::trace::set_enabled(false);
+    assert!(
+        traced.windows(2).all(|w| w[0] == w[1]),
+        "traced decode steps must allocate a constant amount once warm: {traced:?}"
+    );
+    assert_eq!(
+        traced[0], counts[0],
+        "tracing must be allocation-free per event once the ring is warm \
+         ({} traced vs {} untraced allocations per step)",
+        traced[0], counts[0]
     );
 }

@@ -1,0 +1,287 @@
+//! Determinism-under-observation: the span tracer must be purely
+//! observational. One fixed-seed governed decode run (the golden_decode
+//! workload: mixed-length prefills, governed decode steps, a chunked
+//! admission segment) executes twice — tracing off, then tracing on —
+//! and the sampled tokens, budget counters, and telemetry must be
+//! bit-identical. The traced run's rings must then hold a consistent
+//! record: no wrap drops, a valid Chrome export, per-thread span
+//! nesting, and per-stage totals that reconcile with `EngineStats`
+//! (span and stat durations are the same `Instant::elapsed()` by
+//! construction, so they must agree to float-rounding).
+//!
+//! This file is a single test in its own binary on purpose: the span
+//! registry is process-global, and a lone test sees only its own runs.
+
+use std::sync::Arc;
+use twilight::coordinator::engine::{DecodeBatch, Engine};
+use twilight::coordinator::SparseConfig;
+use twilight::governor::{Governor, GovernorConfig};
+use twilight::model::retrieval::build_retrieval_model;
+use twilight::model::sampler::{sample, SamplingParams};
+use twilight::obs::trace::{self, Stage, ThreadSpans};
+use twilight::selector::SelectorKind;
+use twilight::util::rng::Rng;
+use twilight::workload::{gen_niah, RetrievalVocab};
+
+const V: RetrievalVocab = RetrievalVocab::DEFAULT;
+const SEQS: u64 = 3;
+const DECODE_STEPS: u64 = 12;
+const CHUNK_PROMPT_CTX: usize = 96;
+const CHUNK_SPAN: usize = 32;
+const THREADS: usize = 4;
+
+/// Everything determinism pins, floats as bit patterns (exact compare).
+#[derive(Clone, Debug, PartialEq)]
+struct Trace {
+    tokens: Vec<u32>,
+    kept_sum: u64,
+    candidates_sum: u64,
+    sparse_calls: u64,
+    steps: u64,
+    prefill_steps: u64,
+    probes: u64,
+    mean_mass_bits: u64,
+    probe_recall_bits: u64,
+    p_scale_bits: u32,
+    budget_scale_bits: u32,
+}
+
+/// Timing stats of the run, for reconciling against span totals.
+struct StatTimes {
+    t_select: f64,
+    t_prune: f64,
+    t_attend: f64,
+    t_dense: f64,
+}
+
+/// The golden_decode workload (same seeds, same virtual-time governor,
+/// same chunked admission) at a fixed worker count.
+fn run_trace() -> (Trace, StatTimes) {
+    let model = Arc::new(build_retrieval_model(V, 1 << 13));
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+    cfg.skip_layers = 0;
+    cfg.dense_below = 16;
+    if let Some(t) = cfg.twilight.as_mut() {
+        t.hier_pages = false;
+    }
+    let mut e = Engine::new(model, cfg, 1 << 13);
+    e.set_threads(THREADS);
+    let mut gov = Governor::new("mass", GovernorConfig::default()).expect("mass policy exists");
+    let mut wl_rng = Rng::new(0xD0_6E);
+    let mut sample_rng = Rng::new(0x5A11);
+    let params = SamplingParams { temperature: 0.8, top_p: 0.9 };
+    let mut tokens = Vec::new();
+    let mut frontier: Vec<(u64, u32)> = Vec::new();
+    for i in 0..SEQS {
+        let g = gen_niah(&mut wl_rng, V, 192 + 128 * i as usize);
+        let logits = e.prefill(i, &g.prompt).expect("prefill fits the page pool");
+        let tok = sample(&logits, &params, &mut sample_rng);
+        tokens.push(tok);
+        frontier.push((i, tok));
+    }
+    for step in 0..DECODE_STEPS {
+        let free_frac = e.free_pages() as f64 / e.total_pages().max(1) as f64;
+        let snap = gov.snapshot(
+            step as f64 * 0.01,
+            &e.signals,
+            free_frac,
+            0,
+            frontier.len(),
+            e.stats.steps,
+        );
+        let d = gov.step(&snap);
+        e.apply_directive(d);
+        let batch = DecodeBatch::new(frontier.clone());
+        let results = e.step_batch(&batch);
+        for (slot, res) in frontier.iter_mut().zip(results) {
+            let logits = res.expect("trace must not OOM");
+            let tok = sample(&logits, &params, &mut sample_rng);
+            tokens.push(tok);
+            slot.1 = tok;
+        }
+    }
+    let g3 = gen_niah(&mut wl_rng, V, CHUNK_PROMPT_CTX);
+    e.start_empty(SEQS);
+    let mut cursor = 0;
+    while cursor < g3.prompt.len() {
+        let end = (cursor + CHUNK_SPAN).min(g3.prompt.len());
+        let mut batch = DecodeBatch::default();
+        for &(id, tok) in frontier.iter() {
+            batch.push_decode(id, tok);
+        }
+        batch.push_chunk(SEQS, g3.prompt[cursor..end].to_vec(), end == g3.prompt.len());
+        let mut results = e.step_batch(&batch).into_iter();
+        for slot in frontier.iter_mut() {
+            let logits = results.next().unwrap().expect("trace must not OOM");
+            let tok = sample(&logits, &params, &mut sample_rng);
+            tokens.push(tok);
+            slot.1 = tok;
+        }
+        let chunk_logits = results.next().unwrap().expect("trace must not OOM");
+        cursor = end;
+        if cursor == g3.prompt.len() {
+            let tok = sample(&chunk_logits, &params, &mut sample_rng);
+            tokens.push(tok);
+        }
+    }
+    let d = e.directive();
+    (
+        Trace {
+            tokens,
+            kept_sum: e.stats.kept_sum,
+            candidates_sum: e.stats.candidates_sum,
+            sparse_calls: e.stats.sparse_calls,
+            steps: e.stats.steps,
+            prefill_steps: e.stats.prefill_steps,
+            probes: e.signals.probes(),
+            mean_mass_bits: e.signals.mean_mass().to_bits(),
+            probe_recall_bits: e.signals.probe_recall().to_bits(),
+            p_scale_bits: d.p_scale.to_bits(),
+            budget_scale_bits: d.budget_scale.to_bits(),
+        },
+        StatTimes {
+            t_select: e.stats.t_select,
+            t_prune: e.stats.t_prune,
+            t_attend: e.stats.t_attend,
+            t_dense: e.stats.t_dense,
+        },
+    )
+}
+
+/// abs 1e-5 s or rel 1e-3: span durations and stat durations come from
+/// the same `elapsed()` value, so only float-rounding separates them.
+fn close(span_total: f64, stat: f64, what: &str) {
+    let diff = (span_total - stat).abs();
+    assert!(
+        diff < 1e-5 || diff < stat.abs() * 1e-3,
+        "{what}: span total {span_total} vs stat {stat} (diff {diff})"
+    );
+}
+
+/// Inner spans must nest inside some same-thread outer-stage span.
+/// Outer spans on one thread never overlap (sequential execution), so
+/// the candidate container is the last outer begun at-or-before the
+/// inner's begin. `eps` absorbs the clock-read skew between a span's
+/// real end and the `now_ns()` its record call reconstructs begin from.
+fn assert_nested(t: &ThreadSpans, inner: Stage, outer: Stage) {
+    const EPS_NS: u64 = 10_000; // 10 µs
+    let mut outers: Vec<(u64, u64)> = t
+        .spans
+        .iter()
+        .filter(|s| s.stage == outer)
+        .map(|s| (s.begin_ns, s.begin_ns + s.dur_ns))
+        .collect();
+    outers.sort_unstable();
+    for s in t.spans.iter().filter(|s| s.stage == inner) {
+        let begin = s.begin_ns;
+        let end = s.begin_ns + s.dur_ns;
+        let idx = outers.partition_point(|&(ob, _)| ob <= begin + EPS_NS);
+        let ok = idx > 0 && {
+            let (ob, oe) = outers[idx - 1];
+            begin + EPS_NS >= ob && end <= oe + EPS_NS
+        };
+        assert!(
+            ok,
+            "{:?} span [{begin},{end}] on tid {} ({}) not nested in any {:?} span",
+            inner, t.tid, t.label, outer
+        );
+    }
+}
+
+#[test]
+fn tracing_is_observational_and_reconciles() {
+    // --- run A: tracing off (explicit: the CI traced leg exports
+    // TWILIGHT_TRACE=1, which set_enabled overrides) -------------------
+    trace::set_enabled(false);
+    let (t_off, _) = run_trace();
+    let (held, _) = trace::event_counts();
+    assert_eq!(held, 0, "disabled run must record nothing");
+
+    // --- run B: tracing on --------------------------------------------
+    trace::reset();
+    trace::set_enabled(true);
+    let (t_on, stats) = run_trace();
+    trace::set_enabled(false);
+
+    // (1) Bit-exactness: tokens, counters, telemetry, and the governor's
+    // final directive are identical with tracing on.
+    assert_eq!(t_off, t_on, "tracing changed the decode trace");
+
+    // (2) The rings held everything (no wrap) and saw the whole pipeline.
+    let threads = trace::snapshot();
+    let (held, dropped) = trace::event_counts();
+    assert_eq!(dropped, 0, "ring wrapped: raise TWILIGHT_TRACE_CAP for this workload");
+    assert!(held > 0);
+    let count_stage = |st: Stage| -> usize {
+        threads.iter().map(|t| t.spans.iter().filter(|s| s.stage == st).count()).sum()
+    };
+    for st in [
+        Stage::Select,
+        Stage::Prune,
+        Stage::Spgemv,
+        Stage::ToppSearch,
+        Stage::SparseAttend,
+        Stage::Append,
+        Stage::Unembed,
+        Stage::Step,
+    ] {
+        assert!(count_stage(st) > 0, "no {st:?} spans recorded");
+    }
+    assert!(
+        count_stage(Stage::PoolRound) > 0,
+        "threads={THREADS} with per-bucket tickets must take the pooled path"
+    );
+    assert!(count_stage(Stage::Step) as u64 >= DECODE_STEPS);
+    assert_eq!(count_stage(Stage::HierPages), 0, "hier off: no hier spans");
+
+    // (3) Spans nest: the pruner's sub-phases sit inside a Prune span on
+    // the same thread, and per-layer appends inside the step umbrella.
+    for t in &threads {
+        assert_nested(t, Stage::Spgemv, Stage::Prune);
+        assert_nested(t, Stage::ToppSearch, Stage::Prune);
+    }
+    // Step spans live on the engine (main) thread; Append/Unembed do too.
+    let main_t = threads
+        .iter()
+        .find(|t| t.spans.iter().any(|s| s.stage == Stage::Step))
+        .expect("some thread recorded Step spans");
+    assert_nested(main_t, Stage::Append, Stage::Step);
+    assert_nested(main_t, Stage::Unembed, Stage::Step);
+
+    // (4) Stage totals reconcile with EngineStats: same measurements.
+    let totals = trace::stage_totals();
+    close(totals[Stage::Select as usize], stats.t_select, "select");
+    close(totals[Stage::Prune as usize], stats.t_prune, "prune");
+    close(totals[Stage::SparseAttend as usize], stats.t_attend, "sparse_attend");
+    close(totals[Stage::DenseAttend as usize], stats.t_dense, "dense_attend");
+    // Sub-phases are strict subsets of the prune umbrella.
+    let sub = totals[Stage::Spgemv as usize] + totals[Stage::ToppSearch as usize];
+    assert!(
+        sub <= stats.t_prune * 1.001 + 1e-4,
+        "spgemv+topp_search ({sub}) exceed the prune umbrella ({})",
+        stats.t_prune
+    );
+
+    // (5) The Chrome export is valid JSON with well-formed events and
+    // carries the tags the pipeline set.
+    let rendered = trace::render_chrome();
+    let parsed = twilight::util::json::Json::parse(&rendered).expect("chrome JSON parses");
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(events.len() as u64 >= held, "every held span exports (plus metadata)");
+    let mut tagged = 0usize;
+    for ev in events {
+        let ph = ev.get_str("ph").unwrap();
+        assert!(ph == "X" || ph == "M", "unexpected event phase {ph}");
+        if ph == "X" {
+            assert!(ev.get_f64("ts").is_some() && ev.get_f64("dur").is_some());
+            assert!(ev.get_str("name").is_some());
+            if let Some(args) = ev.get("args") {
+                if args.get_f64("layer").is_some() {
+                    tagged += 1;
+                    assert_eq!(args.get_f64("layer"), Some(0.0), "1-layer model");
+                }
+            }
+        }
+    }
+    assert!(tagged > 0, "no layer-tagged spans in the export");
+}
