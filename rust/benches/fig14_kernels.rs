@@ -1,0 +1,174 @@
+//! Fig. 14 (repo-local) — SIMD kernel backend speedups (DESIGN.md §11).
+//!
+//! * 14a — primitive panel: scalar vs the best detected backend for the
+//!   hot kernels (`dot`, `axpy`, and the fused dequant-dots at INT4 /
+//!   INT8 / FP16) across lengths 64..16384. These are the inner loops
+//!   of the SpGEMV estimator and the sparse attention kernels, so the
+//!   per-primitive ratio bounds what the end-to-end path can gain.
+//! * 14b — the paged group score estimator (`estimate_scores_group`,
+//!   the pruner's actual hot path) end to end under the scalar vs the
+//!   auto-selected backend, switched via the global dispatch table.
+//!
+//! Besides the console table, the results land in `BENCH_kernels.json`
+//! at the repo root (uploaded as a CI artifact) so backend regressions
+//! are diffable across runs. On a host whose best backend is scalar the
+//! ratios are ≈1 and the panel degrades to a dispatch-overhead check.
+
+mod common;
+
+use std::hint::black_box;
+use std::time::Duration;
+use twilight::attention::spgemv::{estimate_scores_group, SpgemvScratch};
+use twilight::kvcache::{CacheConfig, PagedKvCache, SeqCache};
+use twilight::tensor::kernels::{self, Backend, Kernels, Select};
+use twilight::tensor::quant::{quantize, QuantBits};
+use twilight::util::json::{self, Json};
+use twilight::util::rng::Rng;
+use twilight::util::stats::bench;
+
+const LENS: [usize; 5] = [64, 256, 1024, 4096, 16384];
+
+fn timed<F: FnMut()>(name: &str, f: F) -> f64 {
+    bench(name, Duration::from_millis(50), Duration::from_millis(200), 3, f).secs.mean
+}
+
+fn quant_dot(t: &'static Kernels, bits: QuantBits) -> impl Fn(&[f32], &[u8], f32, f32) -> f32 {
+    move |q, packed, zero, scale| match bits {
+        QuantBits::Fp16 => (t.dot_f16)(q, packed),
+        QuantBits::Int8 => (t.dot_q_i8)(q, packed, zero, scale),
+        QuantBits::Int4 => (t.dot_q_i4)(q, packed, zero, scale),
+        QuantBits::Int2 => (t.dot_q_i2)(q, packed, zero, scale),
+    }
+}
+
+fn panel_primitives(scalar: &'static Kernels, best: &'static Kernels) -> Vec<Json> {
+    println!("-- 14a: primitives, scalar vs {} --", best.backend.name());
+    println!("{:>12} {:>7} {:>12} {:>12} {:>8}", "op", "n", "scalar us", "simd us", "speedup");
+    let mut rows = Vec::new();
+    let mut r = Rng::new(14);
+    for n in LENS {
+        let x: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let y: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let mut acc = vec![0.0f32; n];
+        // (op label, scalar seconds, simd seconds)
+        let mut emit = |op: &str, s_us: f64, b_us: f64| {
+            println!(
+                "{:>12} {:>7} {:>12.3} {:>12.3} {:>7.2}x",
+                op,
+                n,
+                s_us * 1e6,
+                b_us * 1e6,
+                s_us / b_us
+            );
+            rows.push(json::obj(vec![
+                ("op", Json::Str(op.to_string())),
+                ("n", Json::Num(n as f64)),
+                ("scalar_us", Json::Num(s_us * 1e6)),
+                ("simd_us", Json::Num(b_us * 1e6)),
+                ("speedup", Json::Num(s_us / b_us)),
+            ]));
+        };
+        let s = timed("dot/scalar", || {
+            black_box((scalar.dot)(black_box(&x), black_box(&y)));
+        });
+        let b = timed("dot/simd", || {
+            black_box((best.dot)(black_box(&x), black_box(&y)));
+        });
+        emit("dot", s, b);
+        let s = timed("axpy/scalar", || (scalar.axpy)(black_box(0.5), black_box(&x), &mut acc));
+        let b = timed("axpy/simd", || (best.axpy)(black_box(0.5), black_box(&x), &mut acc));
+        emit("axpy", s, b);
+        for bits in [QuantBits::Int4, QuantBits::Int8, QuantBits::Fp16] {
+            let blk = quantize(&y, bits);
+            let sdot = quant_dot(scalar, bits);
+            let bdot = quant_dot(best, bits);
+            let s = timed("dot_q/scalar", || {
+                black_box(sdot(black_box(&x), black_box(&blk.packed), blk.zero, blk.scale));
+            });
+            let b = timed("dot_q/simd", || {
+                black_box(bdot(black_box(&x), black_box(&blk.packed), blk.zero, blk.scale));
+            });
+            emit(&format!("dot_q_{}", bits.bits()), s, b);
+        }
+    }
+    rows
+}
+
+fn panel_spgemv(best: Backend) -> Vec<Json> {
+    println!("\n-- 14b: paged group estimator (group=4), scalar vs auto backend --");
+    println!("{:>7} {:>6} {:>12} {:>12} {:>8}", "ctx", "bits", "scalar us", "simd us", "speedup");
+    let d = 128;
+    let group = 4;
+    let mut rows = Vec::new();
+    for n in [4096usize, 16384] {
+        for bits in [QuantBits::Int4, QuantBits::Fp16] {
+            let mut cfg = CacheConfig::new(1, d, n.div_ceil(16) + 2);
+            cfg.mirror_bits = bits;
+            let mut cache = PagedKvCache::new(cfg);
+            let mut seq = SeqCache::default();
+            let mut r = Rng::new(20 + n as u64);
+            for _ in 0..n {
+                let k: Vec<f32> = (0..d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+                cache.append(&mut seq, &k, &k).unwrap();
+            }
+            let qs: Vec<f32> = (0..group * d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let tokens: Vec<usize> = (0..n).collect();
+            let mut out = vec![0.0f32; group * n];
+            let mut sc = SpgemvScratch::default();
+            // The estimator reads the process-global table, so this
+            // panel really does switch the dispatch the engine would use.
+            kernels::force_scalar();
+            let s = timed("spgemv/scalar", || {
+                estimate_scores_group(&cache, &seq, 0, &qs, group, &tokens, &mut out, &mut sc);
+            });
+            kernels::install(Select::Auto).expect("auto install cannot fail");
+            let b = timed("spgemv/auto", || {
+                estimate_scores_group(&cache, &seq, 0, &qs, group, &tokens, &mut out, &mut sc);
+            });
+            println!(
+                "{:>7} {:>6} {:>12.1} {:>12.1} {:>7.2}x",
+                n,
+                bits.bits(),
+                s * 1e6,
+                b * 1e6,
+                s / b
+            );
+            rows.push(json::obj(vec![
+                ("op", Json::Str("estimate_scores_group".to_string())),
+                ("bits", Json::Num(bits.bits() as f64)),
+                ("ctx", Json::Num(n as f64)),
+                ("group", Json::Num(group as f64)),
+                ("scalar_us", Json::Num(s * 1e6)),
+                ("simd_us", Json::Num(b * 1e6)),
+                ("speedup", Json::Num(s / b)),
+                ("backend", Json::Str(best.name().to_string())),
+            ]));
+        }
+    }
+    rows
+}
+
+fn main() {
+    common::header(
+        "Figure 14",
+        "SIMD kernel backend: scalar vs runtime-detected, per primitive and end-to-end",
+    );
+    let scalar = kernels::table(Backend::Scalar).expect("scalar table");
+    let detected = kernels::detect();
+    let best = kernels::table(detected).expect("detected table");
+    println!("host best backend: {}\n", detected.name());
+    let prim = panel_primitives(scalar, best);
+    let spg = panel_spgemv(detected);
+    let doc = json::obj(vec![
+        ("bench", Json::Str("fig14_kernels".to_string())),
+        ("backend", Json::Str(detected.name().to_string())),
+        ("arch", Json::Str(std::env::consts::ARCH.to_string())),
+        ("primitives", Json::Arr(prim)),
+        ("spgemv", Json::Arr(spg)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_kernels.json");
+    match std::fs::write(&path, doc.pretty()) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
+}

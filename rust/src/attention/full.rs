@@ -16,7 +16,7 @@
 
 use super::scale;
 use crate::kvcache::{PagedKvCache, SeqCache};
-use crate::tensor::{axpy, dot};
+use crate::tensor::kernels;
 
 /// Dense attention over contiguous K/V (`[n, d]` row-major): out `[d]`.
 pub fn contiguous_full(q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
@@ -25,14 +25,15 @@ pub fn contiguous_full(q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
     debug_assert_eq!(k.len(), n * d);
     debug_assert_eq!(v.len(), n * d);
     let s = scale(d);
+    let kn = kernels::active();
     let mut logits = vec![0.0f32; n];
     for (i, l) in logits.iter_mut().enumerate() {
-        *l = dot(q, &k[i * d..(i + 1) * d]) * s;
+        *l = (kn.dot)(q, &k[i * d..(i + 1) * d]) * s;
     }
-    crate::tensor::softmax_inplace(&mut logits);
+    (kn.softmax)(&mut logits);
     out.fill(0.0);
     for (i, &w) in logits.iter().enumerate() {
-        axpy(w, &v[i * d..(i + 1) * d], out);
+        (kn.axpy)(w, &v[i * d..(i + 1) * d], out);
     }
 }
 
@@ -58,13 +59,14 @@ pub fn paged_full_limit(
     let s = scale(d);
     let ps = cache.cfg.page_size;
     let npages = limit.div_ceil(ps);
+    let kn = kernels::active();
     let mut m = f32::NEG_INFINITY; // running max
     let mut denom = 0.0f32; // running sum of exp
     out.fill(0.0);
     for (pi, &page) in seq.pages[..npages].iter().enumerate() {
         let fill = (limit - pi * ps).min(ps);
         for slot in 0..fill {
-            let logit = dot(q, cache.k_at(page, head, slot)) * s;
+            let logit = (kn.dot)(q, cache.k_at(page, head, slot)) * s;
             if logit > m {
                 // Rescale accumulated state.
                 let corr = (m - logit).exp();
@@ -78,7 +80,7 @@ pub fn paged_full_limit(
             }
             let w = (logit - m).exp();
             denom += w;
-            axpy(w, cache.v_at(page, head, slot), out);
+            (kn.axpy)(w, cache.v_at(page, head, slot), out);
         }
     }
     if denom > 0.0 {
@@ -129,6 +131,7 @@ pub fn paged_full_causal(
 mod tests {
     use super::*;
     use crate::attention::testutil::{naive_sparse, random_cache, random_q};
+    use crate::tensor::{axpy, dot};
 
     #[test]
     fn contiguous_matches_naive() {

@@ -21,7 +21,7 @@
 
 use super::scale;
 use crate::kvcache::{PagedKvCache, SeqCache};
-use crate::tensor::{axpy, dot};
+use crate::tensor::kernels;
 
 /// Sparse attention for one (query-)head over `idx` (logical token ids).
 /// `out` is `[d]`.
@@ -36,13 +36,14 @@ pub fn head_varlen(
     let d = q.len();
     let s = scale(d);
     let ps = cache.cfg.page_size;
+    let kn = kernels::active();
     // Streaming softmax over the index list: one pass, no logits buffer.
     let mut m = f32::NEG_INFINITY;
     let mut denom = 0.0f32;
     out.fill(0.0);
     for &t in idx {
         let (page, slot) = seq.locate(t, ps);
-        let logit = dot(q, cache.k_at(page, kv_head, slot)) * s;
+        let logit = (kn.dot)(q, cache.k_at(page, kv_head, slot)) * s;
         if logit > m {
             if m.is_finite() {
                 let corr = (m - logit).exp();
@@ -55,7 +56,7 @@ pub fn head_varlen(
         }
         let w = (logit - m).exp();
         denom += w;
-        axpy(w, cache.v_at(page, kv_head, slot), out);
+        (kn.axpy)(w, cache.v_at(page, kv_head, slot), out);
     }
     if denom > 0.0 {
         let inv = 1.0 / denom;
@@ -80,6 +81,7 @@ pub fn padded(
     let d = q.len();
     let s = scale(d);
     let ps = cache.cfg.page_size;
+    let kn = kernels::active();
     let mut m = f32::NEG_INFINITY;
     let mut denom = 0.0f32;
     out.fill(0.0);
@@ -89,7 +91,7 @@ pub fn padded(
         let (page, slot) = seq.locate(t, ps);
         // The load happens regardless of the mask (that is the point).
         let kval = cache.k_at(page, kv_head, slot);
-        let logit = if masked { f32::NEG_INFINITY } else { dot(q, kval) * s };
+        let logit = if masked { f32::NEG_INFINITY } else { (kn.dot)(q, kval) * s };
         if logit > m {
             if m.is_finite() {
                 let corr = (m - logit).exp();
@@ -103,7 +105,7 @@ pub fn padded(
         let w = if logit.is_finite() { (logit - m).exp() } else { 0.0 };
         denom += w;
         if w > 0.0 {
-            axpy(w, cache.v_at(page, kv_head, slot), out);
+            (kn.axpy)(w, cache.v_at(page, kv_head, slot), out);
         } else {
             // Masked slot: still touch V to model the wasted read.
             std::hint::black_box(cache.v_at(page, kv_head, slot)[0]);
@@ -155,6 +157,7 @@ pub fn group_varlen_with(
     let d = qs.len() / group;
     let s = scale(d);
     let ps = cache.cfg.page_size;
+    let kn = kernels::active();
     m.clear();
     m.resize(group, f32::NEG_INFINITY);
     denom.clear();
@@ -167,7 +170,7 @@ pub fn group_varlen_with(
         for g in 0..group {
             let q = &qs[g * d..(g + 1) * d];
             let out = &mut outs[g * d..(g + 1) * d];
-            let logit = dot(q, kval) * s;
+            let logit = (kn.dot)(q, kval) * s;
             if logit > m[g] {
                 if m[g].is_finite() {
                     let corr = (m[g] - logit).exp();
@@ -180,7 +183,7 @@ pub fn group_varlen_with(
             }
             let w = (logit - m[g]).exp();
             denom[g] += w;
-            axpy(w, vval, out);
+            (kn.axpy)(w, vval, out);
         }
     }
     for g in 0..group {

@@ -31,6 +31,7 @@
 
 use crate::kvcache::{quant_dot_row_group, quant_dot_row_qsum, PagedKvCache, SeqCache};
 use crate::tensor::dot;
+use crate::tensor::kernels::{self, Kernels};
 use crate::tensor::quant::{self, quantize, QuantBits, QuantBlock};
 
 /// First token of the visibly-partial tail page (== `seq.len` when the
@@ -79,31 +80,26 @@ pub struct SpgemvScratch {
 
 /// Score one tile row against one query head, matching the row-major
 /// fused path bit for bit: integer widths use
-/// `zero·qsum + scale·dot(q, codes)` with the vectorized `tensor::dot`;
-/// Fp16 group rows also use `tensor::dot` (as `quant_dot_row_group`
-/// did).
+/// `zero·qsum + scale·dot(q, codes)` with the backend's throughput
+/// `dot`; Fp16 group rows also use `dot` (as `quant_dot_row_group`
+/// does). `kn` is fetched once per estimator call and threaded in.
 #[inline]
-fn tile_row_score(q: &[f32], qsum: f32, b: &QuantBlock, row: &[f32]) -> f32 {
+fn tile_row_score(q: &[f32], qsum: f32, b: &QuantBlock, row: &[f32], kn: &Kernels) -> f32 {
     match b.bits {
-        QuantBits::Fp16 => dot(q, row),
-        _ => b.zero * qsum + b.scale * dot(q, row),
+        QuantBits::Fp16 => (kn.dot)(q, row),
+        _ => b.zero * qsum + b.scale * (kn.dot)(q, row),
     }
 }
 
-/// Single-head variant: the historical `quant_dot_row_qsum` Fp16 path is
-/// a sequential accumulation (not the 4-lane `tensor::dot`), so the tiled
-/// path must reproduce that exact order to stay bit-identical.
+/// Single-head variant: the `quant_dot_row_qsum` Fp16 path is the fused
+/// packed-f16 dot, whose accumulation structure each backend's
+/// `dot_strict` mirrors — so the tiled path reproduces it bit-for-bit
+/// over the widened row (sequential in scalar, paired SIMD otherwise).
 #[inline]
-fn tile_row_score_single(q: &[f32], qsum: f32, b: &QuantBlock, row: &[f32]) -> f32 {
+fn tile_row_score_single(q: &[f32], qsum: f32, b: &QuantBlock, row: &[f32], kn: &Kernels) -> f32 {
     match b.bits {
-        QuantBits::Fp16 => {
-            let mut acc = 0.0f32;
-            for (qi, x) in q.iter().zip(row) {
-                acc += qi * x;
-            }
-            acc
-        }
-        _ => b.zero * qsum + b.scale * dot(q, row),
+        QuantBits::Fp16 => (kn.dot_strict)(q, row),
+        _ => b.zero * qsum + b.scale * (kn.dot)(q, row),
     }
 }
 
@@ -126,6 +122,7 @@ pub fn estimate_scores(
     let ps = cache.cfg.page_size;
     let sealed = sealed_limit(seq, ps);
     let qsum: f32 = q.iter().sum();
+    let kn = kernels::active();
     let n = tokens.len();
     let mut i = 0;
     while i < n {
@@ -135,7 +132,7 @@ pub fn estimate_scores(
             // Unsealed tail rows: exact fp32 (no mirror yet).
             for (r, &t) in tokens[i..j].iter().enumerate() {
                 let (page, slot) = seq.locate(t, ps);
-                out[i + r] = dot(q, cache.k_at(page, head, slot));
+                out[i + r] = (kn.dot)(q, cache.k_at(page, head, slot));
             }
             i = j;
             continue;
@@ -164,7 +161,7 @@ pub fn estimate_scores(
             for (r, &t) in tokens[i..j].iter().enumerate() {
                 let s = t % ps;
                 let row = &scratch.tile[(s - lo) * d..(s - lo + 1) * d];
-                out[i + r] = tile_row_score_single(q, qsum, block, row);
+                out[i + r] = tile_row_score_single(q, qsum, block, row, kn);
             }
         }
         i = j;
@@ -217,6 +214,7 @@ pub fn estimate_scores_group_with_qsums(
     debug_assert_eq!(scratch.qsums.len(), group);
     let sealed = sealed_limit(seq, ps);
     scratch.row.resize(group, 0.0);
+    let kn = kernels::active();
     let n = tokens.len();
     let mut i = 0;
     while i < n {
@@ -227,7 +225,7 @@ pub fn estimate_scores_group_with_qsums(
                 let (page, slot) = seq.locate(t, ps);
                 let k = cache.k_at(page, kv_head, slot);
                 for g in 0..group {
-                    out[g * n + i + r] = dot(&qs[g * d..(g + 1) * d], k);
+                    out[g * n + i + r] = (kn.dot)(&qs[g * d..(g + 1) * d], k);
                 }
             }
             i = j;
@@ -267,7 +265,7 @@ pub fn estimate_scores_group_with_qsums(
                 let row = &scratch.tile[(s - lo) * d..(s - lo + 1) * d];
                 for g in 0..group {
                     out[g * n + i + r] =
-                        tile_row_score(&qs[g * d..(g + 1) * d], scratch.qsums[g], block, row);
+                        tile_row_score(&qs[g * d..(g + 1) * d], scratch.qsums[g], block, row, kn);
                 }
             }
         }
@@ -405,6 +403,7 @@ impl QuantizedK {
     pub fn gemv_tiled(&self, q: &[f32], tile: &mut Vec<f32>, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.n);
         let qsum: f32 = q.iter().sum();
+        let kn = kernels::active();
         let mut row = 0;
         for block in &self.blocks {
             let rows = block.n / self.d;
@@ -412,7 +411,7 @@ impl QuantizedK {
             quant::unpack_codes_into(block, 0, tile);
             for s in 0..rows {
                 let r = &tile[s * self.d..(s + 1) * self.d];
-                out[row] = tile_row_score_single(q, qsum, block, r);
+                out[row] = tile_row_score_single(q, qsum, block, r, kn);
                 row += 1;
             }
         }

@@ -68,6 +68,9 @@ pub struct ServingReport {
     /// ran): candidate page runs skipped unscored / seen.
     pub hier_pages_skipped: u64,
     pub hier_pages_total: u64,
+    /// Active compute-kernel backend ("scalar", "avx2", "neon"; empty
+    /// when the report was built without one resolved).
+    pub kernel_backend: String,
 }
 
 impl ServingReport {
@@ -185,6 +188,7 @@ impl ServingReport {
             ("hier_pages_skipped", Json::Num(self.hier_pages_skipped as f64)),
             ("hier_pages_total", Json::Num(self.hier_pages_total as f64)),
             ("hier_skip_frac", Json::Num(self.hier_skip_frac())),
+            ("kernel_backend", Json::Str(self.kernel_backend.clone())),
         ];
         if !self.governor.is_empty() {
             let pmin = self.governor.iter().map(|e| e.p_scale).fold(f32::INFINITY, f32::min);
@@ -321,6 +325,8 @@ mod tests {
         // Hier fields are unconditional: 0 when the mode never ran.
         assert_eq!(j.get_f64("hier_skip_frac"), Some(0.0));
         assert_eq!(j.get_usize("hier_pages_total"), Some(0));
+        // Kernel backend key is always present (empty when unresolved).
+        assert_eq!(j.get_str("kernel_backend"), Some(""));
         assert!(j.get("governor_trace").is_none(), "ungoverned: no trace block");
     }
 

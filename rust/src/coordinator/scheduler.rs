@@ -655,6 +655,7 @@ impl Scheduler {
             governor,
             hier_pages_skipped: self.engine.signals.hier_pages_skipped(),
             hier_pages_total: self.engine.signals.hier_pages_total(),
+            kernel_backend: crate::tensor::kernels::active_name().to_string(),
         }
     }
 
@@ -682,6 +683,7 @@ impl Scheduler {
             ("rejected", Json::Num(rejected as f64)),
             ("threads", Json::Num(self.engine.threads() as f64)),
             ("prefill_chunk", Json::Num(self.engine.prefill_chunk() as f64)),
+            ("kernel_backend", Json::Str(crate::tensor::kernels::active_name().to_string())),
             ("steps", Json::Num(s.steps as f64)),
             ("prefill_steps", Json::Num(s.prefill_steps as f64)),
             ("prefill_chunks", Json::Num(s.prefill_chunks as f64)),

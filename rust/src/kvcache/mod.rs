@@ -363,16 +363,12 @@ pub fn quant_dot_row_qsum(q: &[f32], qsum: f32, b: &QuantBlock, offset: usize, d
     debug_assert_eq!(q.len(), d);
     debug_assert!(d <= MAX_HEAD_DIM);
     if b.bits == QuantBits::Fp16 {
-        // Fused sequential accumulation — the historical single-head
-        // Fp16 order; kept distinct from the group path's vectorized
-        // `dot` so results stay bit-for-bit stable.
-        let mut acc = 0.0f32;
-        for (i, &qi) in q.iter().enumerate() {
-            let j = offset + i;
-            let h = u16::from_le_bytes([b.packed[2 * j], b.packed[2 * j + 1]]);
-            acc += qi * crate::tensor::fp16::f16_to_f32(h);
-        }
-        return acc;
+        // Fused packed-f16 dot — the historical single-head Fp16 order
+        // (the backend's `dot_f16` pairs with its `dot_strict` so this
+        // stays bit-for-bit stable vs widened-row dots); kept distinct
+        // from the group path's throughput `dot`.
+        let kn = crate::tensor::kernels::active();
+        return (kn.dot_f16)(q, &b.packed[2 * offset..2 * (offset + d)]);
     }
     // Integer widths: widen via the shared `unpack_codes_into` (also
     // used by the group path and the page-tile unpack — one copy of the

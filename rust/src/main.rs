@@ -26,6 +26,13 @@
 //! it closes the loop on p / B0 against prune-mass telemetry, the
 //! `--slo-tpot-ms` latency target, and KV page-pool pressure.
 //!
+//! `--kernel auto|scalar|avx2|neon` (also `TWILIGHT_KERNEL`) picks the
+//! SIMD compute-kernel backend (DESIGN.md §11). The default `auto`
+//! resolves the best backend the host supports; `scalar` pins the
+//! bit-exact reference path. An explicitly named backend the host does
+//! not support is a hard error here (the env-var path only warns and
+//! falls back).
+//!
 //! Observability (DESIGN.md §10): `--trace` (also `TWILIGHT_TRACE=1`)
 //! turns on the per-stage span recorder; `--trace-out trace.json` (also
 //! `TWILIGHT_TRACE_OUT`) writes the collected spans as Chrome
@@ -117,13 +124,15 @@ fn cmd_serve(a: &Args) {
     engine.set_threads(a.usize_or("threads", engine.threads()));
     engine.set_prefill_chunk(a.usize_or("prefill-chunk", engine.prefill_chunk()));
     twilight::log_info!(
-        "model={} ({} params), pipeline={}, capacity={} tokens, threads={}, prefill_chunk={}",
+        "model={} ({} params), pipeline={}, capacity={} tokens, threads={}, prefill_chunk={}, \
+         kernel={}",
         model.cfg.name,
         model.param_count(),
         cfg.label(),
         capacity,
         engine.threads(),
-        engine.prefill_chunk()
+        engine.prefill_chunk(),
+        twilight::tensor::kernels::active_name()
     );
     let sched_cfg = SchedulerConfig {
         max_batch: a.usize_or("max-batch", 64),
@@ -310,6 +319,22 @@ fn main() {
     twilight::obs::init_from_env();
     if a.flag("trace") {
         twilight::obs::trace::set_enabled(true);
+    }
+    // Kernel backend: --kernel beats TWILIGHT_KERNEL. Unlike the env
+    // path (which warns and degrades to auto), a bad flag is fatal.
+    if let Some(k) = a.get("kernel") {
+        match twilight::tensor::kernels::Select::parse(k) {
+            Some(sel) => {
+                if let Err(e) = twilight::tensor::kernels::install(sel) {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            }
+            None => {
+                eprintln!("unknown kernel backend '{k}' (use auto, scalar, avx2, or neon)");
+                std::process::exit(2);
+            }
+        }
     }
     match cmd.as_str() {
         "serve" => cmd_serve(&a),

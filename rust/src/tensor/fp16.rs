@@ -87,11 +87,18 @@ pub fn encode(xs: &[f32]) -> Vec<u16> {
     xs.iter().map(|&x| f32_to_f16(x)).collect()
 }
 
-/// Decode fp16 storage back into f32.
+/// Batch f16 → f32 through the active kernel backend (F16C/NEON wide
+/// converts where available; value-exact in every backend). Lengths
+/// must match — use [`decode_into`] for the forgiving zip semantics.
+pub fn f16_to_f32_slice(hs: &[u16], out: &mut [f32]) {
+    assert_eq!(hs.len(), out.len());
+    (super::kernels::active().f16_slice)(hs, out)
+}
+
+/// Decode fp16 storage back into f32 (stops at the shorter slice).
 pub fn decode_into(hs: &[u16], out: &mut [f32]) {
-    for (o, &h) in out.iter_mut().zip(hs) {
-        *o = f16_to_f32(h);
-    }
+    let n = hs.len().min(out.len());
+    (super::kernels::active().f16_slice)(&hs[..n], &mut out[..n])
 }
 
 #[cfg(test)]
@@ -142,6 +149,103 @@ mod tests {
         decode_into(&hs, &mut out);
         for (a, b) in xs.iter().zip(&out) {
             assert!((a - b).abs() <= a.abs() * 0.001 + 1e-3);
+        }
+    }
+
+    /// Independent f64 reference for an f16 bit pattern: subnormals are
+    /// `mant · 2⁻²⁴`, normals `(1024 + mant)/1024 · 2^(exp−15)` — both
+    /// exactly representable in f64, so `as f32` is the true value.
+    fn f16_ref(h: u16) -> f32 {
+        let sign = if h & 0x8000 != 0 { -1.0f64 } else { 1.0 };
+        let exp = ((h >> 10) & 0x1F) as i32;
+        let mant = (h & 0x3FF) as f64;
+        let v = if exp == 0 {
+            mant * (-24f64).exp2()
+        } else if exp == 0x1F {
+            f64::INFINITY // mant != 0 (NaN) is handled by the caller
+        } else {
+            (1024.0 + mant) / 1024.0 * f64::from(exp - 15).exp2()
+        };
+        (sign * v) as f32
+    }
+
+    #[test]
+    fn f16_to_f32_exhaustive_all_bit_patterns() {
+        // Every one of the 65536 half bit patterns, pinned against the
+        // independent reference: subnormals, both zeros, both infinities,
+        // and the full NaN space.
+        for h in 0..=u16::MAX {
+            let got = f16_to_f32(h);
+            if (h >> 10) & 0x1F == 0x1F && h & 0x3FF != 0 {
+                assert!(got.is_nan(), "h={h:#06x} should be NaN, got {got}");
+            } else {
+                let want = f16_ref(h);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "h={h:#06x} got={got:e} want={want:e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_to_f16_roundtrips_every_half_exactly() {
+        // f16 -> f32 is exact, so converting back must return the very
+        // same bits for every non-NaN pattern (NaNs only need to stay
+        // NaN with the sign and quiet bit possibly normalized).
+        for h in 0..=u16::MAX {
+            let f = f16_to_f32(h);
+            if f.is_nan() {
+                let back = f32_to_f16(f);
+                assert!((back >> 10) & 0x1F == 0x1F && back & 0x3FF != 0, "h={h:#06x}");
+            } else {
+                assert_eq!(f32_to_f16(f), h, "h={h:#06x} f={f:e}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_to_f16_round_to_nearest_even() {
+        // Halfway cases must round to the even mantissa, in both the
+        // normal and subnormal ranges.
+        let ulp = (-10f32).exp2(); // f16 mantissa step at 1.0
+        // 1 + ulp/2 is exactly halfway between 1.0 and 1+ulp -> even (1.0).
+        assert_eq!(f32_to_f16(1.0 + ulp / 2.0), f32_to_f16(1.0));
+        // 1 + 3·ulp/2 is halfway between 1+ulp and 1+2·ulp -> even (1+2·ulp).
+        assert_eq!(f32_to_f16(1.0 + 1.5 * ulp), f32_to_f16(1.0 + 2.0 * ulp));
+        // Just above halfway rounds up.
+        assert_eq!(f32_to_f16(1.0 + ulp / 2.0 + ulp / 8.0), f32_to_f16(1.0 + ulp));
+        // Subnormal range: smallest subnormal is 2^-24.
+        let sub = (-24f32).exp2();
+        // 2^-25 is halfway between 0 and 2^-24 -> even (0).
+        assert_eq!(f32_to_f16(sub / 2.0), 0);
+        // 3·2^-25 is halfway between 2^-24 and 2^-23 -> even (m16 = 2).
+        assert_eq!(f32_to_f16(1.5 * sub), 2);
+        // Overflow boundary: values at or above 65520 round to inf,
+        // below it to f16::MAX (65504).
+        assert_eq!(f32_to_f16(65519.9), f32_to_f16(65504.0));
+        assert_eq!(f32_to_f16(65520.0), f32_to_f16(f32::INFINITY));
+    }
+
+    #[test]
+    fn f16_slice_matches_scalar_convert() {
+        // The batch path must agree with per-element conversion for
+        // every finite pattern and all remainder-tail lengths.
+        let hs: Vec<u16> = (0..=u16::MAX)
+            .filter(|h| !((h >> 10) & 0x1F == 0x1F && h & 0x3FF != 0))
+            .collect();
+        let mut out = vec![0.0f32; hs.len()];
+        f16_to_f32_slice(&hs, &mut out);
+        for (&h, &o) in hs.iter().zip(&out) {
+            assert_eq!(o.to_bits(), f16_to_f32(h).to_bits(), "h={h:#06x}");
+        }
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31] {
+            let mut small = vec![0.0f32; n];
+            f16_to_f32_slice(&hs[100..100 + n], &mut small);
+            for (i, &o) in small.iter().enumerate() {
+                assert_eq!(o.to_bits(), f16_to_f32(hs[100 + i]).to_bits());
+            }
         }
     }
 }

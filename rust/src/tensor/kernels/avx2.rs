@@ -1,0 +1,457 @@
+//! AVX2 + FMA + F16C backend (x86_64, Haswell and later).
+//!
+//! Reductions run 8 lanes wide with fused multiply-add and are
+//! eps-bounded against scalar (reassociation + FMA). The pairs that
+//! must agree *bitwise* with each other share one accumulation
+//! structure: `dot_strict` and `dot_f16` both use a single 8-wide
+//! accumulator, the same horizontal sum, and the same sequential scalar
+//! tail — so a dot against widened-f16 codes reproduces the packed-f16
+//! fused dot exactly, keeping the tiled-vs-rowmajor bit-equality tests
+//! green under this backend. Widening entries (`unpack_*`, `f16_slice`)
+//! are value-exact: integer→f32 and f16→f32 conversions round nothing.
+//!
+//! `unsafe` discipline: every intrinsic body is a private
+//! `#[target_feature(enable = "avx2,fma,f16c")] unsafe fn *_impl`; the
+//! safe wrappers in the dispatch table are the only entry points, and
+//! they are reachable only through a table that `kernels::detect()`
+//! refused to hand out unless the host reports all three features.
+
+use super::{scalar, Backend, Kernels};
+use crate::tensor::fp16::f16_to_f32;
+use core::arch::x86_64::*;
+
+pub static TABLE: Kernels = Kernels {
+    backend: Backend::Avx2,
+    dot,
+    dot_strict,
+    axpy,
+    dot_q_i8,
+    dot_q_i4,
+    dot_q_i2,
+    dot_f16,
+    unpack_i8,
+    unpack_i4,
+    // INT2 crumb interleave doesn't vectorize cleanly; the value-exact
+    // scalar widening stays (the INT2 ablation is not a perf target).
+    unpack_i2: scalar::unpack_i2,
+    unpack_f16,
+    f16_slice,
+    softmax,
+    rmsnorm,
+};
+
+// SAFETY (applies to every wrapper below): the `*_impl` functions
+// require avx2+fma+f16c. This table is only reachable via
+// `kernels::table(Backend::Avx2)`, which returns `None` unless
+// `is_x86_feature_detected!` confirmed all three features on this CPU.
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    unsafe { dot_impl(a, b) }
+}
+
+fn dot_strict(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    unsafe { dot_strict_impl(a, b) }
+}
+
+fn axpy(s: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    unsafe { axpy_impl(s, x, out) }
+}
+
+fn dot_q_i8(q: &[f32], packed: &[u8], zero: f32, scale: f32) -> f32 {
+    debug_assert!(packed.len() >= q.len());
+    unsafe { dot_q_i8_impl(q, packed, zero, scale) }
+}
+
+fn dot_q_i4(q: &[f32], packed: &[u8], zero: f32, scale: f32) -> f32 {
+    debug_assert!(packed.len() >= q.len().div_ceil(2));
+    unsafe { dot_q_i4_impl(q, packed, zero, scale) }
+}
+
+fn dot_q_i2(q: &[f32], packed: &[u8], zero: f32, scale: f32) -> f32 {
+    debug_assert!(packed.len() >= q.len().div_ceil(4));
+    unsafe { dot_q_i2_impl(q, packed, zero, scale) }
+}
+
+fn dot_f16(q: &[f32], packed: &[u8]) -> f32 {
+    debug_assert_eq!(packed.len(), 2 * q.len());
+    unsafe { dot_f16_impl(q, packed) }
+}
+
+fn unpack_i8(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), out.len());
+    unsafe { unpack_i8_impl(bytes, out) }
+}
+
+fn unpack_i4(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len() * 2, out.len());
+    unsafe { unpack_i4_impl(bytes, out) }
+}
+
+fn unpack_f16(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), 2 * out.len());
+    unsafe { unpack_f16_impl(bytes, out) }
+}
+
+fn f16_slice(hs: &[u16], out: &mut [f32]) {
+    debug_assert_eq!(hs.len(), out.len());
+    unsafe { f16_slice_impl(hs, out) }
+}
+
+fn softmax(xs: &mut [f32]) -> f32 {
+    if xs.is_empty() {
+        return f32::NEG_INFINITY;
+    }
+    unsafe { softmax_impl(xs) }
+}
+
+fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), w.len());
+    unsafe { rmsnorm_impl(x, w, eps, out) }
+}
+
+/// Horizontal sum of one 8-lane register. Shared by `dot_strict_impl`
+/// and `dot_f16_impl` so their reductions stay bit-identical.
+#[target_feature(enable = "avx2,fma,f16c")]
+unsafe fn hsum8(v: __m256) -> f32 {
+    let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
+    let s = _mm_add_ps(s, _mm_movehdup_ps(s));
+    _mm_cvtss_f32(_mm_add_ss(s, _mm_movehl_ps(s, s)))
+}
+
+/// Throughput dot: 4 independent 8-lane FMA accumulators (32 elements
+/// per iteration), then an 8-wide cleanup loop and a scalar tail.
+#[target_feature(enable = "avx2,fma,f16c")]
+unsafe fn dot_impl(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let blocks = n / 32;
+    for i in 0..blocks {
+        let j = i * 32;
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(j)), _mm256_loadu_ps(pb.add(j)), acc0);
+        acc1 =
+            _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(j + 8)), _mm256_loadu_ps(pb.add(j + 8)), acc1);
+        acc2 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(j + 16)),
+            _mm256_loadu_ps(pb.add(j + 16)),
+            acc2,
+        );
+        acc3 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(j + 24)),
+            _mm256_loadu_ps(pb.add(j + 24)),
+            acc3,
+        );
+    }
+    let mut j = blocks * 32;
+    while j + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(j)), _mm256_loadu_ps(pb.add(j)), acc0);
+        j += 8;
+    }
+    let mut s = hsum8(_mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3)));
+    while j < n {
+        s += a[j] * b[j];
+        j += 1;
+    }
+    s
+}
+
+/// Single-accumulator dot, structurally paired with `dot_f16_impl`.
+#[target_feature(enable = "avx2,fma,f16c")]
+unsafe fn dot_strict_impl(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc = _mm256_setzero_ps();
+    let chunks = n / 8;
+    for i in 0..chunks {
+        let j = i * 8;
+        acc = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(j)), _mm256_loadu_ps(pb.add(j)), acc);
+    }
+    let mut s = hsum8(acc);
+    for j in chunks * 8..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+#[target_feature(enable = "avx2,fma,f16c")]
+unsafe fn axpy_impl(s: f32, x: &[f32], out: &mut [f32]) {
+    let n = x.len();
+    let sv = _mm256_set1_ps(s);
+    let px = x.as_ptr();
+    let po = out.as_mut_ptr();
+    let chunks = n / 8;
+    for i in 0..chunks {
+        let j = i * 8;
+        let o = _mm256_fmadd_ps(sv, _mm256_loadu_ps(px.add(j)), _mm256_loadu_ps(po.add(j)));
+        _mm256_storeu_ps(po.add(j), o);
+    }
+    for j in chunks * 8..n {
+        out[j] += s * x[j];
+    }
+}
+
+#[target_feature(enable = "avx2,fma,f16c")]
+unsafe fn dot_q_i8_impl(q: &[f32], packed: &[u8], zero: f32, scale: f32) -> f32 {
+    let n = q.len();
+    let pq = q.as_ptr();
+    let pc = packed.as_ptr();
+    let mut code_acc = _mm256_setzero_ps();
+    let mut qsum_acc = _mm256_setzero_ps();
+    let chunks = n / 8;
+    for i in 0..chunks {
+        let j = i * 8;
+        // 8 unsigned codes -> i32 -> f32 (exact: codes are <= 255).
+        let bytes = _mm_loadl_epi64(pc.add(j) as *const __m128i);
+        let codes = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(bytes));
+        let qv = _mm256_loadu_ps(pq.add(j));
+        code_acc = _mm256_fmadd_ps(qv, codes, code_acc);
+        qsum_acc = _mm256_add_ps(qsum_acc, qv);
+    }
+    let mut code_dot = hsum8(code_acc);
+    let mut qsum = hsum8(qsum_acc);
+    for j in chunks * 8..n {
+        code_dot += q[j] * packed[j] as f32;
+        qsum += q[j];
+    }
+    zero * qsum + scale * code_dot
+}
+
+#[target_feature(enable = "avx2,fma,f16c")]
+unsafe fn dot_q_i4_impl(q: &[f32], packed: &[u8], zero: f32, scale: f32) -> f32 {
+    let n = q.len();
+    let pq = q.as_ptr();
+    let pc = packed.as_ptr();
+    let nib = _mm_set1_epi8(0x0F);
+    let mut code_acc = _mm256_setzero_ps();
+    let mut qsum_acc = _mm256_setzero_ps();
+    // 16 packed bytes = 32 codes per block, restored to element order
+    // (low nibble first) by interleaving the masked halves.
+    let blocks = n / 32;
+    for blk in 0..blocks {
+        let bytes = _mm_loadu_si128(pc.add(blk * 16) as *const __m128i);
+        let lo = _mm_and_si128(bytes, nib);
+        let hi = _mm_and_si128(_mm_srli_epi16(bytes, 4), nib);
+        let il0 = _mm_unpacklo_epi8(lo, hi); // codes 0..16
+        let il1 = _mm_unpackhi_epi8(lo, hi); // codes 16..32
+        let groups = [
+            _mm256_cvtepu8_epi32(il0),
+            _mm256_cvtepu8_epi32(_mm_srli_si128(il0, 8)),
+            _mm256_cvtepu8_epi32(il1),
+            _mm256_cvtepu8_epi32(_mm_srli_si128(il1, 8)),
+        ];
+        for (k, g) in groups.iter().enumerate() {
+            let codes = _mm256_cvtepi32_ps(*g);
+            let qv = _mm256_loadu_ps(pq.add(blk * 32 + k * 8));
+            code_acc = _mm256_fmadd_ps(qv, codes, code_acc);
+            qsum_acc = _mm256_add_ps(qsum_acc, qv);
+        }
+    }
+    let mut code_dot = hsum8(code_acc);
+    let mut qsum = hsum8(qsum_acc);
+    for i in blocks * 32..n {
+        let byte = packed[i / 2];
+        let code = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        code_dot += q[i] * code as f32;
+        qsum += q[i];
+    }
+    zero * qsum + scale * code_dot
+}
+
+#[target_feature(enable = "avx2,fma,f16c")]
+unsafe fn dot_q_i2_impl(q: &[f32], packed: &[u8], zero: f32, scale: f32) -> f32 {
+    let n = q.len();
+    let pq = q.as_ptr();
+    let mut code_acc = _mm256_setzero_ps();
+    let mut qsum_acc = _mm256_setzero_ps();
+    // Crumb interleave is branchy; widen 16 codes (4 bytes) to a stack
+    // tile scalar-side, keep the multiply-accumulate vectorized.
+    let mut tile = [0.0f32; 16];
+    let blocks = n / 16;
+    for blk in 0..blocks {
+        for (p, &byte) in packed[blk * 4..blk * 4 + 4].iter().enumerate() {
+            tile[4 * p] = (byte & 0x03) as f32;
+            tile[4 * p + 1] = ((byte >> 2) & 0x03) as f32;
+            tile[4 * p + 2] = ((byte >> 4) & 0x03) as f32;
+            tile[4 * p + 3] = (byte >> 6) as f32;
+        }
+        for k in 0..2 {
+            let codes = _mm256_loadu_ps(tile.as_ptr().add(k * 8));
+            let qv = _mm256_loadu_ps(pq.add(blk * 16 + k * 8));
+            code_acc = _mm256_fmadd_ps(qv, codes, code_acc);
+            qsum_acc = _mm256_add_ps(qsum_acc, qv);
+        }
+    }
+    let mut code_dot = hsum8(code_acc);
+    let mut qsum = hsum8(qsum_acc);
+    for i in blocks * 16..n {
+        let code = (packed[i / 4] >> ((i % 4) * 2)) & 0x03;
+        code_dot += q[i] * code as f32;
+        qsum += q[i];
+    }
+    zero * qsum + scale * code_dot
+}
+
+/// Fused fp16 dot: F16C converts (exactly) 8 halves per load, FMA into
+/// a single accumulator — the structure `dot_strict_impl` mirrors.
+#[target_feature(enable = "avx2,fma,f16c")]
+unsafe fn dot_f16_impl(q: &[f32], packed: &[u8]) -> f32 {
+    let n = q.len();
+    let pq = q.as_ptr();
+    let pc = packed.as_ptr();
+    let mut acc = _mm256_setzero_ps();
+    let chunks = n / 8;
+    for i in 0..chunks {
+        let h = _mm_loadu_si128(pc.add(i * 16) as *const __m128i);
+        let v = _mm256_cvtph_ps(h);
+        acc = _mm256_fmadd_ps(_mm256_loadu_ps(pq.add(i * 8)), v, acc);
+    }
+    let mut s = hsum8(acc);
+    for i in chunks * 8..n {
+        let h = u16::from_le_bytes([packed[2 * i], packed[2 * i + 1]]);
+        s += q[i] * f16_to_f32(h);
+    }
+    s
+}
+
+#[target_feature(enable = "avx2,fma,f16c")]
+unsafe fn unpack_i8_impl(bytes: &[u8], out: &mut [f32]) {
+    let n = out.len();
+    let pb = bytes.as_ptr();
+    let po = out.as_mut_ptr();
+    let chunks = n / 8;
+    for i in 0..chunks {
+        let j = i * 8;
+        let b = _mm_loadl_epi64(pb.add(j) as *const __m128i);
+        _mm256_storeu_ps(po.add(j), _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(b)));
+    }
+    for j in chunks * 8..n {
+        out[j] = bytes[j] as f32;
+    }
+}
+
+#[target_feature(enable = "avx2,fma,f16c")]
+unsafe fn unpack_i4_impl(bytes: &[u8], out: &mut [f32]) {
+    let n = out.len(); // even; bytes.len() == n / 2
+    let pb = bytes.as_ptr();
+    let po = out.as_mut_ptr();
+    let nib = _mm_set1_epi8(0x0F);
+    let blocks = n / 16; // 8 bytes -> 16 codes per block
+    for blk in 0..blocks {
+        let b = _mm_loadl_epi64(pb.add(blk * 8) as *const __m128i);
+        let lo = _mm_and_si128(b, nib);
+        let hi = _mm_and_si128(_mm_srli_epi16(b, 4), nib);
+        let il = _mm_unpacklo_epi8(lo, hi); // 16 codes in element order
+        let j = blk * 16;
+        _mm256_storeu_ps(po.add(j), _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(il)));
+        _mm256_storeu_ps(
+            po.add(j + 8),
+            _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_srli_si128(il, 8))),
+        );
+    }
+    for p in blocks * 8..n / 2 {
+        let byte = bytes[p];
+        out[2 * p] = (byte & 0x0F) as f32;
+        out[2 * p + 1] = (byte >> 4) as f32;
+    }
+}
+
+#[target_feature(enable = "avx2,fma,f16c")]
+unsafe fn unpack_f16_impl(bytes: &[u8], out: &mut [f32]) {
+    let n = out.len();
+    let pb = bytes.as_ptr();
+    let po = out.as_mut_ptr();
+    let chunks = n / 8;
+    for i in 0..chunks {
+        let h = _mm_loadu_si128(pb.add(i * 16) as *const __m128i);
+        _mm256_storeu_ps(po.add(i * 8), _mm256_cvtph_ps(h));
+    }
+    for i in chunks * 8..n {
+        let h = u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]);
+        out[i] = f16_to_f32(h);
+    }
+}
+
+#[target_feature(enable = "avx2,fma,f16c")]
+unsafe fn f16_slice_impl(hs: &[u16], out: &mut [f32]) {
+    let n = out.len();
+    let ph = hs.as_ptr();
+    let po = out.as_mut_ptr();
+    let chunks = n / 8;
+    for i in 0..chunks {
+        let h = _mm_loadu_si128(ph.add(i * 8) as *const __m128i);
+        _mm256_storeu_ps(po.add(i * 8), _mm256_cvtph_ps(h));
+    }
+    for i in chunks * 8..n {
+        out[i] = f16_to_f32(hs[i]);
+    }
+}
+
+/// Bit-identical to scalar: max is exact under any association, the
+/// exp/sum pass stays sequential scalar, and the normalize multiply is
+/// elementwise (vector and scalar round identically per element).
+#[target_feature(enable = "avx2,fma,f16c")]
+unsafe fn softmax_impl(xs: &mut [f32]) -> f32 {
+    let n = xs.len();
+    let p = xs.as_mut_ptr();
+    let mut mv = _mm256_set1_ps(f32::NEG_INFINITY);
+    let chunks = n / 8;
+    for i in 0..chunks {
+        mv = _mm256_max_ps(mv, _mm256_loadu_ps(p.add(i * 8)));
+    }
+    let m = _mm_max_ps(_mm256_castps256_ps128(mv), _mm256_extractf128_ps(mv, 1));
+    let m = _mm_max_ps(m, _mm_movehdup_ps(m));
+    let mut max = _mm_cvtss_f32(_mm_max_ss(m, _mm_movehl_ps(m, m)));
+    for x in xs[chunks * 8..].iter() {
+        max = max.max(*x);
+    }
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    let iv = _mm256_set1_ps(inv);
+    // Re-acquire: the iter_mut() pass above retired the earlier pointer.
+    let p = xs.as_mut_ptr();
+    for i in 0..chunks {
+        _mm256_storeu_ps(p.add(i * 8), _mm256_mul_ps(_mm256_loadu_ps(p.add(i * 8)), iv));
+    }
+    for x in xs[chunks * 8..].iter_mut() {
+        *x *= inv;
+    }
+    max
+}
+
+#[target_feature(enable = "avx2,fma,f16c")]
+unsafe fn rmsnorm_impl(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    let n = x.len();
+    let px = x.as_ptr();
+    let pw = w.as_ptr();
+    let po = out.as_mut_ptr();
+    let mut acc = _mm256_setzero_ps();
+    let chunks = n / 8;
+    for i in 0..chunks {
+        let v = _mm256_loadu_ps(px.add(i * 8));
+        acc = _mm256_fmadd_ps(v, v, acc);
+    }
+    let mut sumsq = hsum8(acc);
+    for j in chunks * 8..n {
+        sumsq += x[j] * x[j];
+    }
+    let inv = 1.0 / (sumsq / n as f32 + eps).sqrt();
+    let iv = _mm256_set1_ps(inv);
+    for i in 0..chunks {
+        let j = i * 8;
+        let scaled = _mm256_mul_ps(_mm256_loadu_ps(px.add(j)), iv);
+        _mm256_storeu_ps(po.add(j), _mm256_mul_ps(scaled, _mm256_loadu_ps(pw.add(j))));
+    }
+    for j in chunks * 8..n {
+        out[j] = x[j] * inv * w[j];
+    }
+}

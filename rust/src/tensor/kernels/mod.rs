@@ -1,0 +1,380 @@
+//! Runtime-dispatched SIMD kernel backend (DESIGN.md §11).
+//!
+//! Every hot inner loop of the serving stack — the f32 dot/axpy pair
+//! under attention, the fused per-width dequant-dots of the SpGEMV
+//! estimator, the page-tile code widening, fp16 loads, softmax and
+//! rmsnorm — funnels through one table of function pointers
+//! ([`Kernels`]). The table is resolved **once** from
+//! `TWILIGHT_KERNEL={auto,scalar,avx2,neon}` (or `--kernel`) on first
+//! use and cached in an atomic, so steady-state dispatch is a relaxed
+//! load plus an indirect call; hot loops fetch the table once per call
+//! ([`active`]) and amortize even that.
+//!
+//! ## Exactness contract
+//!
+//! * The **scalar** backend is byte-for-byte the historical loop bodies
+//!   (moved here verbatim from `tensor/`, `tensor/quant.rs`, and
+//!   `kvcache/`): under `TWILIGHT_KERNEL=scalar` every golden trace,
+//!   allocation pin, and bit-exactness test reproduces exactly what the
+//!   pre-dispatch code produced.
+//! * **unpack_* / f16 widening** entries are value-exact in every
+//!   backend: integer→f32 widening and f16→f32 conversion are exact
+//!   operations, so the SIMD versions return identical bits (NaN
+//!   payloads excepted — hardware f16 converts may quiet a signaling
+//!   NaN; the K cache never stores NaNs).
+//! * **softmax** is bit-identical in every backend: the max reduction
+//!   is exact under any association, and the exp/sum pass stays
+//!   sequential.
+//! * **Reductions** (`dot`, `dot_strict`, `dot_q_*`, `dot_f16`,
+//!   `axpy`, `rmsnorm`'s sum of squares) are eps-bounded across
+//!   backends: SIMD reassociates the accumulation (and fuses
+//!   multiply-add), so results differ from scalar by O(√n·ε) relative
+//!   error — the same class of reordering `tensor::dot`'s 4-lane split
+//!   already performs. `rust/tests/simd_parity.rs` pins the bound for
+//!   every width and remainder-tail length.
+//! * **Within** one SIMD backend, `dot_strict(q, widened)` and
+//!   `dot_f16(q, packed)` share one accumulation structure, so the
+//!   tiled-vs-rowmajor and gemv-vs-gemv_tiled bit-equality tests hold
+//!   under *any* backend, not just scalar (the fp16 group path and tile
+//!   path both route through `dot` for the same reason).
+//!
+//! ## Adding a backend
+//!
+//! Implement the table entries in a new `cfg(target_arch)`-gated
+//! module, add a [`Backend`] variant + feature detection in
+//! [`detect`], a [`Select`] name, and an id constant; the parity
+//! battery and `fig14_kernels` pick it up from [`detect`]
+//! automatically. Keep `unsafe` confined to `#[target_feature]` inner
+//! functions whose safe wrappers document why the feature is present
+//! (they are only reachable through a table installed after detection).
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// A compute backend the dispatch table can resolve to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// The bit-exact reference (the historical loop bodies).
+    Scalar,
+    /// x86_64 AVX2 + FMA + F16C (Haswell and later).
+    Avx2,
+    /// aarch64 NEON (baseline on AArch64).
+    Neon,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+
+    /// Stable numeric id (exposed as the `twilight_kernel_backend_id`
+    /// gauge: 0 = scalar, 1 = avx2, 2 = neon).
+    pub fn id(self) -> u8 {
+        match self {
+            Backend::Scalar => 0,
+            Backend::Avx2 => 1,
+            Backend::Neon => 2,
+        }
+    }
+}
+
+/// A backend *request*, as parsed from `TWILIGHT_KERNEL` / `--kernel`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Select {
+    /// Best supported backend for this host (the default).
+    Auto,
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl Select {
+    pub fn parse(s: &str) -> Option<Select> {
+        match s {
+            "auto" => Some(Select::Auto),
+            "scalar" => Some(Select::Scalar),
+            "avx2" => Some(Select::Avx2),
+            "neon" => Some(Select::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// The kernel dispatch table: one function pointer per hot primitive.
+///
+/// Slice-length contracts (callers guarantee; debug-asserted in the
+/// scalar reference): `dot`/`dot_strict`/`axpy` take equal-length
+/// slices; `dot_q_i8` takes `packed.len() >= q.len()` bytes,
+/// `dot_q_i4` `>= ceil(q.len()/2)`, `dot_q_i2` `>= ceil(q.len()/4)`,
+/// `dot_f16` exactly `2 * q.len()`; `unpack_i8` widens `out.len()`
+/// bytes, `unpack_i4` `out.len()/2` (out even), `unpack_i2`
+/// `out.len()/4` (out multiple of 4), `unpack_f16` `2 * out.len()`
+/// little-endian half words.
+pub struct Kernels {
+    pub backend: Backend,
+    /// f32 dot with the throughput-oriented (reassociating) reduction.
+    /// Scalar reference: the historical 4-lane split in `tensor::dot`.
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// f32 dot whose accumulation structure matches `dot_f16` exactly
+    /// (scalar: strictly sequential). Used where a widened-f16 row must
+    /// reproduce the packed-f16 path bit-for-bit.
+    pub dot_strict: fn(&[f32], &[f32]) -> f32,
+    /// `out[i] += s * x[i]`.
+    pub axpy: fn(f32, &[f32], &mut [f32]),
+    /// Fused dequant-dot over INT8 codes: `zero·Σq + scale·dot(q, codes)`.
+    pub dot_q_i8: fn(&[f32], &[u8], f32, f32) -> f32,
+    /// Fused dequant-dot over INT4 nibble pairs (odd tails handled).
+    pub dot_q_i4: fn(&[f32], &[u8], f32, f32) -> f32,
+    /// Fused dequant-dot over INT2 crumbs.
+    pub dot_q_i2: fn(&[f32], &[u8], f32, f32) -> f32,
+    /// Dot against packed little-endian f16 words (no scale/zero; the
+    /// halves ARE the values). Accumulation structure == `dot_strict`.
+    pub dot_f16: fn(&[f32], &[u8]) -> f32,
+    /// Widen INT8 codes to f32 (value-exact in every backend).
+    pub unpack_i8: fn(&[u8], &mut [f32]),
+    /// Widen INT4 nibble pairs to f32, element order (value-exact).
+    pub unpack_i4: fn(&[u8], &mut [f32]),
+    /// Widen INT2 crumbs to f32, element order (value-exact).
+    pub unpack_i2: fn(&[u8], &mut [f32]),
+    /// Widen packed little-endian f16 words to f32 (value-exact).
+    pub unpack_f16: fn(&[u8], &mut [f32]),
+    /// Batch f16→f32 over `u16` words (value-exact).
+    pub f16_slice: fn(&[u16], &mut [f32]),
+    /// In-place stable softmax; returns the max logit. Bit-identical in
+    /// every backend (exact max + sequential exp/sum).
+    pub softmax: fn(&mut [f32]) -> f32,
+    /// RMSNorm `x·w/rms(x)`; the sum of squares is the only reduction.
+    pub rmsnorm: fn(&[f32], &[f32], f32, &mut [f32]),
+}
+
+const ID_UNINIT: u8 = u8::MAX;
+const ID_SCALAR: u8 = 0;
+#[cfg(target_arch = "x86_64")]
+const ID_AVX2: u8 = 1;
+#[cfg(target_arch = "aarch64")]
+const ID_NEON: u8 = 2;
+
+/// The installed backend id; `ID_UNINIT` until first use.
+static ACTIVE: AtomicU8 = AtomicU8::new(ID_UNINIT);
+
+/// The active kernel table. First use resolves `TWILIGHT_KERNEL`
+/// (default `auto`); afterwards this is a relaxed atomic load. An
+/// unknown or host-unsupported env value warns and falls back to the
+/// best supported backend (never panics — the CLI's `--kernel` path
+/// surfaces a hard error instead via [`install`]).
+#[inline]
+pub fn active() -> &'static Kernels {
+    match ACTIVE.load(Ordering::Relaxed) {
+        ID_SCALAR => &scalar::TABLE,
+        #[cfg(target_arch = "x86_64")]
+        ID_AVX2 => &avx2::TABLE,
+        #[cfg(target_arch = "aarch64")]
+        ID_NEON => &neon::TABLE,
+        _ => init_from_env(),
+    }
+}
+
+/// Name of the active backend (for reports / logs / live stats).
+pub fn active_name() -> &'static str {
+    active().backend.name()
+}
+
+/// Best backend this host supports (feature detection; never fails —
+/// scalar is always available).
+pub fn detect() -> Backend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // The AVX2 table also uses FMA (dots) and F16C (f16 loads);
+        // all three ship together on every AVX2 CPU since Haswell, but
+        // detect each anyway — a missing one falls back to scalar.
+        if is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+            && is_x86_feature_detected!("f16c")
+        {
+            return Backend::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Backend::Neon;
+        }
+    }
+    Backend::Scalar
+}
+
+/// The table for a specific backend, if this build/host supports it.
+/// Does not touch the global selection — the parity tests and
+/// `fig14_kernels` compare backends side by side through this.
+pub fn table(b: Backend) -> Option<&'static Kernels> {
+    match b {
+        Backend::Scalar => Some(&scalar::TABLE),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => {
+            if detect() == Backend::Avx2 {
+                Some(&avx2::TABLE)
+            } else {
+                None
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => {
+            if detect() == Backend::Neon {
+                Some(&neon::TABLE)
+            } else {
+                None
+            }
+        }
+        #[allow(unreachable_patterns)]
+        _ => None,
+    }
+}
+
+/// Install a backend globally (overridable any time — tests and the CLI
+/// switch backends after process start, which is why the slot is an
+/// atomic and not a `OnceLock`). `Auto` resolves via [`detect`] and
+/// cannot fail; a named backend errors if the build target or the CPU
+/// does not support it, leaving the previous selection untouched.
+pub fn install(sel: Select) -> Result<&'static Kernels, String> {
+    let backend = match sel {
+        Select::Auto => detect(),
+        Select::Scalar => Backend::Scalar,
+        Select::Avx2 => Backend::Avx2,
+        Select::Neon => Backend::Neon,
+    };
+    let t = table(backend).ok_or_else(|| {
+        format!(
+            "kernel backend '{}' is not supported on this host (arch {}; detected best: '{}')",
+            backend.name(),
+            std::env::consts::ARCH,
+            detect().name()
+        )
+    })?;
+    ACTIVE.store(id_of(backend), Ordering::Relaxed);
+    publish_metric(backend);
+    Ok(t)
+}
+
+/// Force the bit-exact scalar reference (golden-trace and allocation
+/// tests pin behavior with this; infallible by construction).
+pub fn force_scalar() {
+    install(Select::Scalar).expect("scalar backend is always available");
+}
+
+fn id_of(b: Backend) -> u8 {
+    match b {
+        Backend::Scalar => ID_SCALAR,
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => ID_AVX2,
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => ID_NEON,
+        // Unreachable: `install` only stores ids for tables this build
+        // actually carries (`table` returned Some above).
+        #[allow(unreachable_patterns)]
+        _ => ID_SCALAR,
+    }
+}
+
+/// Record the selection in the obs metrics registry so a Prometheus
+/// scrape shows which backend served the run.
+fn publish_metric(b: Backend) {
+    crate::obs::metrics::gauge(
+        "twilight_kernel_backend_id",
+        "Active SIMD kernel backend (0=scalar, 1=avx2, 2=neon)",
+    )
+    .set(b.id() as f64);
+}
+
+/// Cold path of [`active`]: resolve `TWILIGHT_KERNEL` and install. Two
+/// racing threads resolve the same env value and store the same id, so
+/// the race is benign.
+#[cold]
+fn init_from_env() -> &'static Kernels {
+    let raw = std::env::var("TWILIGHT_KERNEL").unwrap_or_default();
+    let sel = if raw.is_empty() {
+        Select::Auto
+    } else {
+        match Select::parse(&raw) {
+            Some(s) => s,
+            None => {
+                eprintln!(
+                    "twilight: unknown TWILIGHT_KERNEL='{raw}' (use auto, scalar, avx2, or neon); \
+                     using auto"
+                );
+                Select::Auto
+            }
+        }
+    };
+    match install(sel) {
+        Ok(t) => t,
+        Err(e) => {
+            // Never panic from a library path: an explicitly requested
+            // but unsupported backend degrades to the detected best.
+            eprintln!("twilight: {e}; falling back to '{}'", detect().name());
+            install(Select::Auto).expect("auto install cannot fail")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: in-crate unit tests share one process with the whole lib
+    // test binary and therefore must NOT mutate the global selection
+    // (`install`/`force_scalar`); they compare per-backend tables via
+    // `table()` instead. The integration battery that does switch the
+    // global lives in `rust/tests/simd_parity.rs` (own process).
+
+    #[test]
+    fn select_parses_all_names() {
+        assert_eq!(Select::parse("auto"), Some(Select::Auto));
+        assert_eq!(Select::parse("scalar"), Some(Select::Scalar));
+        assert_eq!(Select::parse("avx2"), Some(Select::Avx2));
+        assert_eq!(Select::parse("neon"), Some(Select::Neon));
+        assert_eq!(Select::parse("avx512"), None);
+        assert_eq!(Select::parse(""), None);
+    }
+
+    #[test]
+    fn scalar_table_always_available() {
+        let t = table(Backend::Scalar).expect("scalar table");
+        assert_eq!(t.backend, Backend::Scalar);
+        assert_eq!((t.dot)(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn detect_is_supported() {
+        // Whatever detection picks must actually resolve to a table.
+        let b = detect();
+        assert!(table(b).is_some(), "detected backend {b:?} has no table");
+    }
+
+    #[test]
+    fn backend_ids_are_stable() {
+        assert_eq!(Backend::Scalar.id(), 0);
+        assert_eq!(Backend::Avx2.id(), 1);
+        assert_eq!(Backend::Neon.id(), 2);
+        assert_eq!(Backend::Scalar.name(), "scalar");
+    }
+
+    #[test]
+    fn active_resolves_without_panic() {
+        // Whatever TWILIGHT_KERNEL says (CI legs set scalar/auto), the
+        // first touch must resolve to a usable table.
+        let k = active();
+        assert_eq!((k.dot)(&[2.0], &[8.0]), 16.0);
+        assert_eq!(active_name(), k.backend.name());
+    }
+}

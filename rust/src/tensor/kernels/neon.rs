@@ -1,0 +1,405 @@
+//! NEON backend (aarch64; NEON is baseline on AArch64 but detection is
+//! still consulted before this table is handed out).
+//!
+//! Same exactness story as the AVX2 backend: reductions are 4 lanes
+//! wide with fused multiply-add and eps-bounded against scalar, while
+//! `dot_strict` / `dot_f16` share one accumulation structure (single
+//! 4-wide accumulator, `vaddvq_f32` horizontal sum, sequential scalar
+//! tail) so widened-f16 and packed-f16 dots agree bitwise. f16→f32
+//! conversion stays the scalar bit-twiddle (`fp16::f16_to_f32`) — the
+//! stable-toolchain `std::arch` surface has no f16 vector type — so the
+//! conversion entries are value-exact by construction; the fp16 dot
+//! still vectorizes its multiply-accumulate over a widened stack tile.
+//!
+//! `unsafe` discipline matches `avx2.rs`: private
+//! `#[target_feature(enable = "neon")] unsafe fn *_impl` bodies behind
+//! safe wrappers that are only reachable through a detection-gated table.
+
+use super::{scalar, Backend, Kernels};
+use crate::tensor::fp16::f16_to_f32;
+use core::arch::aarch64::*;
+
+pub static TABLE: Kernels = Kernels {
+    backend: Backend::Neon,
+    dot,
+    dot_strict,
+    axpy,
+    dot_q_i8,
+    dot_q_i4,
+    dot_q_i2,
+    dot_f16,
+    unpack_i8,
+    unpack_i4,
+    // Value-exact scalar widenings kept for the cold/awkward shapes
+    // (INT2 crumbs; f16 conversion has no stable NEON vector form).
+    unpack_i2: scalar::unpack_i2,
+    unpack_f16: scalar::unpack_f16,
+    f16_slice: scalar::f16_slice,
+    softmax,
+    rmsnorm,
+};
+
+// SAFETY (applies to every wrapper below): the `*_impl` functions
+// require NEON; this table is only reachable via
+// `kernels::table(Backend::Neon)`, which returns `None` unless
+// `is_aarch64_feature_detected!("neon")` held.
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    unsafe { dot_impl(a, b) }
+}
+
+fn dot_strict(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    unsafe { dot_strict_impl(a, b) }
+}
+
+fn axpy(s: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    unsafe { axpy_impl(s, x, out) }
+}
+
+fn dot_q_i8(q: &[f32], packed: &[u8], zero: f32, scale: f32) -> f32 {
+    debug_assert!(packed.len() >= q.len());
+    unsafe { dot_q_i8_impl(q, packed, zero, scale) }
+}
+
+fn dot_q_i4(q: &[f32], packed: &[u8], zero: f32, scale: f32) -> f32 {
+    debug_assert!(packed.len() >= q.len().div_ceil(2));
+    unsafe { dot_q_i4_impl(q, packed, zero, scale) }
+}
+
+fn dot_q_i2(q: &[f32], packed: &[u8], zero: f32, scale: f32) -> f32 {
+    debug_assert!(packed.len() >= q.len().div_ceil(4));
+    unsafe { dot_q_i2_impl(q, packed, zero, scale) }
+}
+
+fn dot_f16(q: &[f32], packed: &[u8]) -> f32 {
+    debug_assert_eq!(packed.len(), 2 * q.len());
+    unsafe { dot_f16_impl(q, packed) }
+}
+
+fn unpack_i8(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), out.len());
+    unsafe { unpack_i8_impl(bytes, out) }
+}
+
+fn unpack_i4(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len() * 2, out.len());
+    unsafe { unpack_i4_impl(bytes, out) }
+}
+
+fn softmax(xs: &mut [f32]) -> f32 {
+    if xs.is_empty() {
+        return f32::NEG_INFINITY;
+    }
+    unsafe { softmax_impl(xs) }
+}
+
+fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), w.len());
+    unsafe { rmsnorm_impl(x, w, eps, out) }
+}
+
+/// Throughput dot: 4 independent 4-lane FMA accumulators (16 elements
+/// per iteration), a 4-wide cleanup loop, and a scalar tail.
+#[target_feature(enable = "neon")]
+unsafe fn dot_impl(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut acc2 = vdupq_n_f32(0.0);
+    let mut acc3 = vdupq_n_f32(0.0);
+    let blocks = n / 16;
+    for i in 0..blocks {
+        let j = i * 16;
+        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(j)), vld1q_f32(pb.add(j)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(pa.add(j + 4)), vld1q_f32(pb.add(j + 4)));
+        acc2 = vfmaq_f32(acc2, vld1q_f32(pa.add(j + 8)), vld1q_f32(pb.add(j + 8)));
+        acc3 = vfmaq_f32(acc3, vld1q_f32(pa.add(j + 12)), vld1q_f32(pb.add(j + 12)));
+    }
+    let mut j = blocks * 16;
+    while j + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(j)), vld1q_f32(pb.add(j)));
+        j += 4;
+    }
+    let mut s = vaddvq_f32(vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3)));
+    while j < n {
+        s += a[j] * b[j];
+        j += 1;
+    }
+    s
+}
+
+/// Single-accumulator dot, structurally paired with `dot_f16_impl`.
+#[target_feature(enable = "neon")]
+unsafe fn dot_strict_impl(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc = vdupq_n_f32(0.0);
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc = vfmaq_f32(acc, vld1q_f32(pa.add(j)), vld1q_f32(pb.add(j)));
+    }
+    let mut s = vaddvq_f32(acc);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn axpy_impl(s: f32, x: &[f32], out: &mut [f32]) {
+    let n = x.len();
+    let sv = vdupq_n_f32(s);
+    let px = x.as_ptr();
+    let po = out.as_mut_ptr();
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        vst1q_f32(po.add(j), vfmaq_f32(vld1q_f32(po.add(j)), sv, vld1q_f32(px.add(j))));
+    }
+    for j in chunks * 4..n {
+        out[j] += s * x[j];
+    }
+}
+
+/// Widen 8 unsigned codes (one `vld1_u8`) to two f32 quads.
+#[target_feature(enable = "neon")]
+unsafe fn widen8(b: uint8x8_t) -> (float32x4_t, float32x4_t) {
+    let w = vmovl_u8(b);
+    (
+        vcvtq_f32_u32(vmovl_u16(vget_low_u16(w))),
+        vcvtq_f32_u32(vmovl_u16(vget_high_u16(w))),
+    )
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_q_i8_impl(q: &[f32], packed: &[u8], zero: f32, scale: f32) -> f32 {
+    let n = q.len();
+    let pq = q.as_ptr();
+    let pc = packed.as_ptr();
+    let mut code_acc = vdupq_n_f32(0.0);
+    let mut qsum_acc = vdupq_n_f32(0.0);
+    let chunks = n / 8;
+    for i in 0..chunks {
+        let j = i * 8;
+        let (c0, c1) = widen8(vld1_u8(pc.add(j)));
+        let q0 = vld1q_f32(pq.add(j));
+        let q1 = vld1q_f32(pq.add(j + 4));
+        code_acc = vfmaq_f32(code_acc, q0, c0);
+        code_acc = vfmaq_f32(code_acc, q1, c1);
+        qsum_acc = vaddq_f32(qsum_acc, vaddq_f32(q0, q1));
+    }
+    let mut code_dot = vaddvq_f32(code_acc);
+    let mut qsum = vaddvq_f32(qsum_acc);
+    for j in chunks * 8..n {
+        code_dot += q[j] * packed[j] as f32;
+        qsum += q[j];
+    }
+    zero * qsum + scale * code_dot
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_q_i4_impl(q: &[f32], packed: &[u8], zero: f32, scale: f32) -> f32 {
+    let n = q.len();
+    let pq = q.as_ptr();
+    let pc = packed.as_ptr();
+    let nib = vdup_n_u8(0x0F);
+    let mut code_acc = vdupq_n_f32(0.0);
+    let mut qsum_acc = vdupq_n_f32(0.0);
+    // 8 packed bytes = 16 codes per block, restored to element order
+    // (low nibble first) by zipping the masked halves.
+    let blocks = n / 16;
+    for blk in 0..blocks {
+        let bytes = vld1_u8(pc.add(blk * 8));
+        let lo = vand_u8(bytes, nib);
+        let hi = vshr_n_u8::<4>(bytes);
+        let il0 = vzip1_u8(lo, hi); // codes 0..8
+        let il1 = vzip2_u8(lo, hi); // codes 8..16
+        for (k, il) in [il0, il1].into_iter().enumerate() {
+            let (c0, c1) = widen8(il);
+            let j = blk * 16 + k * 8;
+            let q0 = vld1q_f32(pq.add(j));
+            let q1 = vld1q_f32(pq.add(j + 4));
+            code_acc = vfmaq_f32(code_acc, q0, c0);
+            code_acc = vfmaq_f32(code_acc, q1, c1);
+            qsum_acc = vaddq_f32(qsum_acc, vaddq_f32(q0, q1));
+        }
+    }
+    let mut code_dot = vaddvq_f32(code_acc);
+    let mut qsum = vaddvq_f32(qsum_acc);
+    for i in blocks * 16..n {
+        let byte = packed[i / 2];
+        let code = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        code_dot += q[i] * code as f32;
+        qsum += q[i];
+    }
+    zero * qsum + scale * code_dot
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_q_i2_impl(q: &[f32], packed: &[u8], zero: f32, scale: f32) -> f32 {
+    let n = q.len();
+    let pq = q.as_ptr();
+    let mut code_acc = vdupq_n_f32(0.0);
+    let mut qsum_acc = vdupq_n_f32(0.0);
+    // Crumb interleave is branchy; widen 16 codes (4 bytes) to a stack
+    // tile scalar-side, keep the multiply-accumulate vectorized.
+    let mut tile = [0.0f32; 16];
+    let blocks = n / 16;
+    for blk in 0..blocks {
+        for (p, &byte) in packed[blk * 4..blk * 4 + 4].iter().enumerate() {
+            tile[4 * p] = (byte & 0x03) as f32;
+            tile[4 * p + 1] = ((byte >> 2) & 0x03) as f32;
+            tile[4 * p + 2] = ((byte >> 4) & 0x03) as f32;
+            tile[4 * p + 3] = (byte >> 6) as f32;
+        }
+        for k in 0..4 {
+            let codes = vld1q_f32(tile.as_ptr().add(k * 4));
+            let qv = vld1q_f32(pq.add(blk * 16 + k * 4));
+            code_acc = vfmaq_f32(code_acc, qv, codes);
+            qsum_acc = vaddq_f32(qsum_acc, qv);
+        }
+    }
+    let mut code_dot = vaddvq_f32(code_acc);
+    let mut qsum = vaddvq_f32(qsum_acc);
+    for i in blocks * 16..n {
+        let code = (packed[i / 4] >> ((i % 4) * 2)) & 0x03;
+        code_dot += q[i] * code as f32;
+        qsum += q[i];
+    }
+    zero * qsum + scale * code_dot
+}
+
+/// Fused fp16 dot: scalar-exact conversion into a 4-wide stack tile,
+/// FMA into a single accumulator — the structure `dot_strict_impl`
+/// mirrors (so widened and packed fp16 paths agree bitwise).
+#[target_feature(enable = "neon")]
+unsafe fn dot_f16_impl(q: &[f32], packed: &[u8]) -> f32 {
+    let n = q.len();
+    let pq = q.as_ptr();
+    let mut acc = vdupq_n_f32(0.0);
+    let mut tile = [0.0f32; 4];
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        for (t, k) in tile.iter_mut().zip(j..j + 4) {
+            *t = f16_to_f32(u16::from_le_bytes([packed[2 * k], packed[2 * k + 1]]));
+        }
+        acc = vfmaq_f32(acc, vld1q_f32(pq.add(j)), vld1q_f32(tile.as_ptr()));
+    }
+    let mut s = vaddvq_f32(acc);
+    for i in chunks * 4..n {
+        let h = u16::from_le_bytes([packed[2 * i], packed[2 * i + 1]]);
+        s += q[i] * f16_to_f32(h);
+    }
+    s
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn unpack_i8_impl(bytes: &[u8], out: &mut [f32]) {
+    let n = out.len();
+    let pb = bytes.as_ptr();
+    let po = out.as_mut_ptr();
+    let chunks = n / 8;
+    for i in 0..chunks {
+        let j = i * 8;
+        let (c0, c1) = widen8(vld1_u8(pb.add(j)));
+        vst1q_f32(po.add(j), c0);
+        vst1q_f32(po.add(j + 4), c1);
+    }
+    for j in chunks * 8..n {
+        out[j] = bytes[j] as f32;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn unpack_i4_impl(bytes: &[u8], out: &mut [f32]) {
+    let n = out.len(); // even; bytes.len() == n / 2
+    let pb = bytes.as_ptr();
+    let po = out.as_mut_ptr();
+    let nib = vdup_n_u8(0x0F);
+    let blocks = n / 16; // 8 bytes -> 16 codes per block
+    for blk in 0..blocks {
+        let b = vld1_u8(pb.add(blk * 8));
+        let lo = vand_u8(b, nib);
+        let hi = vshr_n_u8::<4>(b);
+        let j = blk * 16;
+        let (c0, c1) = widen8(vzip1_u8(lo, hi));
+        let (c2, c3) = widen8(vzip2_u8(lo, hi));
+        vst1q_f32(po.add(j), c0);
+        vst1q_f32(po.add(j + 4), c1);
+        vst1q_f32(po.add(j + 8), c2);
+        vst1q_f32(po.add(j + 12), c3);
+    }
+    for p in blocks * 8..n / 2 {
+        let byte = bytes[p];
+        out[2 * p] = (byte & 0x0F) as f32;
+        out[2 * p + 1] = (byte >> 4) as f32;
+    }
+}
+
+/// Bit-identical to scalar: max is exact under any association, the
+/// exp/sum pass stays sequential scalar, and the normalize multiply is
+/// elementwise (vector and scalar round identically per element).
+#[target_feature(enable = "neon")]
+unsafe fn softmax_impl(xs: &mut [f32]) -> f32 {
+    let n = xs.len();
+    let p = xs.as_mut_ptr();
+    let mut mv = vdupq_n_f32(f32::NEG_INFINITY);
+    let chunks = n / 4;
+    for i in 0..chunks {
+        mv = vmaxq_f32(mv, vld1q_f32(p.add(i * 4)));
+    }
+    let mut max = vmaxvq_f32(mv);
+    for x in xs[chunks * 4..].iter() {
+        max = max.max(*x);
+    }
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    let iv = vdupq_n_f32(inv);
+    // Re-acquire: the iter_mut() pass above retired the earlier pointer.
+    let p = xs.as_mut_ptr();
+    for i in 0..chunks {
+        vst1q_f32(p.add(i * 4), vmulq_f32(vld1q_f32(p.add(i * 4)), iv));
+    }
+    for x in xs[chunks * 4..].iter_mut() {
+        *x *= inv;
+    }
+    max
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn rmsnorm_impl(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    let n = x.len();
+    let px = x.as_ptr();
+    let pw = w.as_ptr();
+    let po = out.as_mut_ptr();
+    let mut acc = vdupq_n_f32(0.0);
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let v = vld1q_f32(px.add(i * 4));
+        acc = vfmaq_f32(acc, v, v);
+    }
+    let mut sumsq = vaddvq_f32(acc);
+    for j in chunks * 4..n {
+        sumsq += x[j] * x[j];
+    }
+    let inv = 1.0 / (sumsq / n as f32 + eps).sqrt();
+    let iv = vdupq_n_f32(inv);
+    for i in 0..chunks {
+        let j = i * 4;
+        let scaled = vmulq_f32(vld1q_f32(px.add(j)), iv);
+        vst1q_f32(po.add(j), vmulq_f32(scaled, vld1q_f32(pw.add(j))));
+    }
+    for j in chunks * 4..n {
+        out[j] = x[j] * inv * w[j];
+    }
+}

@@ -1,0 +1,202 @@
+//! Scalar reference backend: the historical hot-loop bodies, moved here
+//! **verbatim** from `tensor/mod.rs`, `tensor/quant.rs`, and the fp16
+//! arm of `kvcache::quant_dot_row_qsum`. This table defines the
+//! bit-exact behavior that the golden decode trace and the allocation
+//! pin force with `TWILIGHT_KERNEL=scalar`; SIMD backends are measured
+//! against it by the parity battery. Do not "optimize" these bodies —
+//! any reassociation here moves the golden reference.
+
+use super::{Backend, Kernels};
+use crate::tensor::fp16::f16_to_f32;
+
+pub static TABLE: Kernels = Kernels {
+    backend: Backend::Scalar,
+    dot,
+    dot_strict,
+    axpy,
+    dot_q_i8,
+    dot_q_i4,
+    dot_q_i2,
+    dot_f16,
+    unpack_i8,
+    unpack_i4,
+    unpack_i2,
+    unpack_f16,
+    f16_slice,
+    softmax,
+    rmsnorm,
+};
+
+/// The historical `tensor::dot`: 4 independent accumulator lanes plus a
+/// sequential tail — already a (fixed) reassociation, kept bit-for-bit.
+pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Strictly sequential dot — the accumulation order of the historical
+/// fp16 row-scoring loop, so `dot_strict(q, widened_f16)` reproduces
+/// `dot_f16(q, packed)` bit-for-bit.
+pub(super) fn dot_strict(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+pub(super) fn axpy(s: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, xi) in out.iter_mut().zip(x) {
+        *o += s * xi;
+    }
+}
+
+/// Historical `dot_quantized` Int8 arm (fused: qsum inside, zipped).
+pub(super) fn dot_q_i8(q: &[f32], packed: &[u8], zero: f32, scale: f32) -> f32 {
+    debug_assert!(packed.len() >= q.len());
+    let mut code_dot = 0.0f32;
+    let mut qsum = 0.0f32;
+    for (&qi, &c) in q.iter().zip(packed.iter()) {
+        code_dot += qi * c as f32;
+        qsum += qi;
+    }
+    zero * qsum + scale * code_dot
+}
+
+/// Historical `dot_quantized` Int4 arm. NB: qsum accumulates *pairwise*
+/// (`q0 + q1` per byte) — bitwise different from a sequential sum; the
+/// fused signature exists precisely to preserve this order.
+pub(super) fn dot_q_i4(q: &[f32], packed: &[u8], zero: f32, scale: f32) -> f32 {
+    let n = q.len();
+    debug_assert!(packed.len() >= n.div_ceil(2));
+    let mut code_dot = 0.0f32;
+    let mut qsum = 0.0f32;
+    let pairs = n / 2;
+    for p in 0..pairs {
+        let byte = packed[p];
+        let q0 = q[2 * p];
+        let q1 = q[2 * p + 1];
+        code_dot += q0 * (byte & 0x0F) as f32 + q1 * (byte >> 4) as f32;
+        qsum += q0 + q1;
+    }
+    if n % 2 == 1 {
+        let i = n - 1;
+        let code = packed[i / 2] & 0x0F;
+        code_dot += q[i] * code as f32;
+        qsum += q[i];
+    }
+    zero * qsum + scale * code_dot
+}
+
+/// Historical `dot_quantized` Int2 arm (sequential crumb walk).
+pub(super) fn dot_q_i2(q: &[f32], packed: &[u8], zero: f32, scale: f32) -> f32 {
+    debug_assert!(packed.len() >= q.len().div_ceil(4));
+    let mut code_dot = 0.0f32;
+    let mut qsum = 0.0f32;
+    for (i, &qi) in q.iter().enumerate() {
+        let code = (packed[i / 4] >> ((i % 4) * 2)) & 0x03;
+        code_dot += qi * code as f32;
+        qsum += qi;
+    }
+    zero * qsum + scale * code_dot
+}
+
+/// Historical fp16 fused dot (the `dot_quantized` Fp16 arm and the
+/// kvcache fp16 row-scoring loop share this exact sequential order).
+pub(super) fn dot_f16(q: &[f32], packed: &[u8]) -> f32 {
+    debug_assert_eq!(packed.len(), 2 * q.len());
+    let mut acc = 0.0f32;
+    for (i, &qi) in q.iter().enumerate() {
+        let h = u16::from_le_bytes([packed[2 * i], packed[2 * i + 1]]);
+        acc += qi * f16_to_f32(h);
+    }
+    acc
+}
+
+/// Historical `unpack_codes_into` Int8 arm (over the pre-sliced window).
+pub(super) fn unpack_i8(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), out.len());
+    for (o, &byte) in out.iter_mut().zip(bytes) {
+        *o = byte as f32;
+    }
+}
+
+/// Historical `unpack_codes_into` Int4 arm (lo nibble = even element).
+pub(super) fn unpack_i4(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len() * 2, out.len());
+    for (p, &byte) in bytes.iter().enumerate() {
+        out[2 * p] = (byte & 0x0F) as f32;
+        out[2 * p + 1] = (byte >> 4) as f32;
+    }
+}
+
+/// Historical `unpack_codes_into` Int2 arm.
+pub(super) fn unpack_i2(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len() * 4, out.len());
+    for (p, &byte) in bytes.iter().enumerate() {
+        out[4 * p] = (byte & 0x03) as f32;
+        out[4 * p + 1] = ((byte >> 2) & 0x03) as f32;
+        out[4 * p + 2] = ((byte >> 4) & 0x03) as f32;
+        out[4 * p + 3] = (byte >> 6) as f32;
+    }
+}
+
+/// Historical `unpack_codes_into` Fp16 arm over pre-sliced LE bytes.
+pub(super) fn unpack_f16(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), 2 * out.len());
+    for (i, o) in out.iter_mut().enumerate() {
+        let h = u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]);
+        *o = f16_to_f32(h);
+    }
+}
+
+/// Batch f16→f32 over `u16` words (`fp16::decode_into`'s loop body).
+pub(super) fn f16_slice(hs: &[u16], out: &mut [f32]) {
+    debug_assert_eq!(hs.len(), out.len());
+    for (o, &h) in out.iter_mut().zip(hs) {
+        *o = f16_to_f32(h);
+    }
+}
+
+/// Historical `tensor::softmax_inplace`.
+pub(super) fn softmax(xs: &mut [f32]) -> f32 {
+    if xs.is_empty() {
+        return f32::NEG_INFINITY;
+    }
+    let max = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+    max
+}
+
+/// Historical `tensor::rmsnorm`.
+pub(super) fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), w.len());
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for ((o, xi), wi) in out.iter_mut().zip(x).zip(w) {
+        *o = xi * inv * wi;
+    }
+}

@@ -1,8 +1,15 @@
 //! Dense tensor substrate: row-major f32 tensors, fp16 bit conversion,
 //! and the quantized K-cache representations (INT2/4/8) from §4.2 of the
 //! paper.
+//!
+//! The free functions below (`dot`, `axpy`, `gemv`, `softmax_inplace`,
+//! `rmsnorm`) are thin dispatchers over the runtime-selected kernel
+//! table in [`kernels`] — `TWILIGHT_KERNEL={auto,scalar,avx2,neon}`
+//! picks the backend; `scalar` reproduces the historical loops
+//! bit-for-bit (see `kernels/` module docs for the exactness contract).
 
 pub mod fp16;
+pub mod kernels;
 pub mod quant;
 
 /// A row-major f32 tensor with explicit shape. The compute kernels in
@@ -64,11 +71,13 @@ impl Tensor {
 }
 
 /// y = W x + b for row-major `w: [out, inp]`. The MLP/QKV hot path.
+/// Rows contract through the active backend's `dot` (fetched once).
 pub fn gemv(w: &[f32], x: &[f32], bias: Option<&[f32]>, out: &mut [f32]) {
     let inp = x.len();
     debug_assert_eq!(w.len(), out.len() * inp);
+    let kn = kernels::active();
     for (o, row) in out.iter_mut().zip(w.chunks_exact(inp)) {
-        *o = dot(row, x);
+        *o = (kn.dot)(row, x);
     }
     if let Some(b) = bias {
         for (o, bi) in out.iter_mut().zip(b) {
@@ -77,63 +86,28 @@ pub fn gemv(w: &[f32], x: &[f32], bias: Option<&[f32]>, out: &mut [f32]) {
     }
 }
 
-/// Dot product, written so LLVM auto-vectorizes (4 independent partial
-/// sums over exact chunks).
+/// Dot product via the active kernel backend (scalar reference: 4
+/// independent partial sums over exact chunks, in `kernels/scalar.rs`).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc[0] += a[j] * b[j];
-        acc[1] += a[j + 1] * b[j + 1];
-        acc[2] += a[j + 2] * b[j + 2];
-        acc[3] += a[j + 3] * b[j + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for j in chunks * 4..a.len() {
-        s += a[j] * b[j];
-    }
-    s
+    (kernels::active().dot)(a, b)
 }
 
 /// `out += s * x` (axpy), used by attention value accumulation.
 #[inline]
 pub fn axpy(s: f32, x: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(x.len(), out.len());
-    for (o, xi) in out.iter_mut().zip(x) {
-        *o += s * xi;
-    }
+    (kernels::active().axpy)(s, x, out)
 }
 
 /// Numerically-stable in-place softmax; returns the max logit (useful for
-/// streaming variants and tests).
+/// streaming variants and tests). Bit-identical across kernel backends.
 pub fn softmax_inplace(xs: &mut [f32]) -> f32 {
-    if xs.is_empty() {
-        return f32::NEG_INFINITY;
-    }
-    let max = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let mut sum = 0.0f32;
-    for x in xs.iter_mut() {
-        *x = (*x - max).exp();
-        sum += *x;
-    }
-    let inv = 1.0 / sum;
-    for x in xs.iter_mut() {
-        *x *= inv;
-    }
-    max
+    (kernels::active().softmax)(xs)
 }
 
 /// RMSNorm: `x * w / rms(x)`.
 pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
-    debug_assert_eq!(x.len(), w.len());
-    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
-    let inv = 1.0 / (ms + eps).sqrt();
-    for ((o, xi), wi) in out.iter_mut().zip(x).zip(w) {
-        *o = xi * inv * wi;
-    }
+    (kernels::active().rmsnorm)(x, w, eps, out)
 }
 
 /// Rotary position embedding applied in pairs `(x[2i], x[2i+1])`,

@@ -134,56 +134,18 @@ pub fn dequantize_into(b: &QuantBlock, out: &mut [f32]) {
 ///
 /// Identity used: `dot(q, zero + code*scale) = zero*sum(q) + scale*dot(q, code)`,
 /// so the loop only multiplies integer codes, then applies scale/zero once.
+/// The per-width entries are *fused* (qsum is accumulated inside, in
+/// the historical order — Int4's is pairwise) so the scalar backend is
+/// bit-for-bit the pre-dispatch loops; SIMD backends are eps-bounded.
 #[inline]
 pub fn dot_quantized(q: &[f32], b: &QuantBlock) -> f32 {
     debug_assert_eq!(q.len(), b.n);
+    let kn = super::kernels::active();
     match b.bits {
-        QuantBits::Fp16 => {
-            let mut acc = 0.0f32;
-            for (i, &qi) in q.iter().enumerate() {
-                let h = u16::from_le_bytes([b.packed[2 * i], b.packed[2 * i + 1]]);
-                acc += qi * super::fp16::f16_to_f32(h);
-            }
-            acc
-        }
-        QuantBits::Int8 => {
-            let mut code_dot = 0.0f32;
-            let mut qsum = 0.0f32;
-            for (&qi, &c) in q.iter().zip(b.packed.iter()) {
-                code_dot += qi * c as f32;
-                qsum += qi;
-            }
-            b.zero * qsum + b.scale * code_dot
-        }
-        QuantBits::Int4 => {
-            let mut code_dot = 0.0f32;
-            let mut qsum = 0.0f32;
-            let pairs = b.n / 2;
-            for p in 0..pairs {
-                let byte = b.packed[p];
-                let q0 = q[2 * p];
-                let q1 = q[2 * p + 1];
-                code_dot += q0 * (byte & 0x0F) as f32 + q1 * (byte >> 4) as f32;
-                qsum += q0 + q1;
-            }
-            if b.n % 2 == 1 {
-                let i = b.n - 1;
-                let code = b.packed[i / 2] & 0x0F;
-                code_dot += q[i] * code as f32;
-                qsum += q[i];
-            }
-            b.zero * qsum + b.scale * code_dot
-        }
-        QuantBits::Int2 => {
-            let mut code_dot = 0.0f32;
-            let mut qsum = 0.0f32;
-            for (i, &qi) in q.iter().enumerate() {
-                let code = (b.packed[i / 4] >> ((i % 4) * 2)) & 0x03;
-                code_dot += qi * code as f32;
-                qsum += qi;
-            }
-            b.zero * qsum + b.scale * code_dot
-        }
+        QuantBits::Fp16 => (kn.dot_f16)(q, &b.packed),
+        QuantBits::Int8 => (kn.dot_q_i8)(q, &b.packed, b.zero, b.scale),
+        QuantBits::Int4 => (kn.dot_q_i4)(q, &b.packed, b.zero, b.scale),
+        QuantBits::Int2 => (kn.dot_q_i2)(q, &b.packed, b.zero, b.scale),
     }
 }
 
@@ -196,40 +158,26 @@ pub fn dot_quantized(q: &[f32], b: &QuantBlock) -> f32 {
 /// `quant_dot_row_qsum` / `quant_dot_row_group` use for their per-row
 /// stack buffers, so a dot over a tile row is bit-identical to the
 /// row-major fused path.
+/// The widenings are value-exact in every kernel backend (integer→f32
+/// and f16→f32 round nothing), so tile dots stay bit-identical to the
+/// row-major fused path under SIMD too.
 pub fn unpack_codes_into(b: &QuantBlock, first: usize, out: &mut [f32]) {
     debug_assert!(first + out.len() <= b.n);
+    let kn = super::kernels::active();
     match b.bits {
         QuantBits::Fp16 => {
-            for (i, o) in out.iter_mut().enumerate() {
-                let j = first + i;
-                let h = u16::from_le_bytes([b.packed[2 * j], b.packed[2 * j + 1]]);
-                *o = super::fp16::f16_to_f32(h);
-            }
+            (kn.unpack_f16)(&b.packed[2 * first..2 * (first + out.len())], out)
         }
-        QuantBits::Int8 => {
-            for (o, &byte) in out.iter_mut().zip(&b.packed[first..first + out.len()]) {
-                *o = byte as f32;
-            }
-        }
+        QuantBits::Int8 => (kn.unpack_i8)(&b.packed[first..first + out.len()], out),
         QuantBits::Int4 => {
             // Rows are d-aligned with d even, so windows start and end on
             // byte boundaries (same precondition as the row-major path).
             debug_assert!(first % 2 == 0 && out.len() % 2 == 0);
-            let bytes = &b.packed[first / 2..first / 2 + out.len() / 2];
-            for (p, &byte) in bytes.iter().enumerate() {
-                out[2 * p] = (byte & 0x0F) as f32;
-                out[2 * p + 1] = (byte >> 4) as f32;
-            }
+            (kn.unpack_i4)(&b.packed[first / 2..first / 2 + out.len() / 2], out)
         }
         QuantBits::Int2 => {
             debug_assert!(first % 4 == 0 && out.len() % 4 == 0);
-            let bytes = &b.packed[first / 4..first / 4 + out.len() / 4];
-            for (p, &byte) in bytes.iter().enumerate() {
-                out[4 * p] = (byte & 0x03) as f32;
-                out[4 * p + 1] = ((byte >> 2) & 0x03) as f32;
-                out[4 * p + 2] = ((byte >> 4) & 0x03) as f32;
-                out[4 * p + 3] = (byte >> 6) as f32;
-            }
+            (kn.unpack_i2)(&b.packed[first / 4..first / 4 + out.len() / 4], out)
         }
     }
 }

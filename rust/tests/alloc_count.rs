@@ -163,6 +163,11 @@ fn hot_path_allocation_budget() {
     // Pin tracing off for the baseline parts regardless of environment
     // (the CI traced leg exports TWILIGHT_TRACE=1).
     twilight::obs::trace::set_enabled(false);
+    // Resolve the kernel dispatch table before counting: the first
+    // `active()` call reads TWILIGHT_KERNEL and registers the backend
+    // gauge, both of which allocate. Scalar also keeps the counts
+    // backend-independent across the CI kernel legs.
+    twilight::tensor::kernels::force_scalar();
 
     // --- (1) the pruned work unit: zero allocations, both modes -------
     prune_unit_is_zero_alloc(&PrunerConfig { p: 0.9, ..Default::default() }, "default");

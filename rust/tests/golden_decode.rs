@@ -216,6 +216,11 @@ fn golden_path() -> PathBuf {
 
 #[test]
 fn golden_decode_trace_pinned_across_worker_counts() {
+    // The golden was recorded on the scalar kernel backend (the verbatim
+    // historical loop bodies); pin it so the TWILIGHT_KERNEL=auto CI leg
+    // compares against the same checked-in bytes. SIMD-vs-scalar parity
+    // is covered separately (eps-bounded) in rust/tests/simd_parity.rs.
+    twilight::tensor::kernels::force_scalar();
     let t1 = run_trace(1);
     // Decode steps + the mixed (decode + chunk) steps of the admission
     // segment all advance decode items, so all count as steps.

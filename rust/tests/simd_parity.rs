@@ -1,0 +1,399 @@
+//! SIMD-vs-scalar parity battery for the kernel dispatch table
+//! (DESIGN.md §11).
+//!
+//! The scalar backend is the bit-exact reference (the verbatim
+//! historical loop bodies, pinned by the golden decode trace); this
+//! battery pins what every *other* backend owes it:
+//!
+//! * reductions (`dot`, `dot_strict`, `axpy`, the fused `dot_q_*`
+//!   widths, `dot_f16`, rmsnorm's sum of squares) — eps-bounded, with
+//!   an O(√n·ε) relative bound, over **every** length 0..=257 so every
+//!   remainder-tail shape of every vector width is exercised;
+//! * value-exact entries (`unpack_*`, `f16_slice`) — bit-identical;
+//! * `softmax` — bit-identical (exact max + sequential exp/sum);
+//! * within one backend, `dot_strict` over widened halves must equal
+//!   `dot_f16` over the packed bytes bit-for-bit (the invariant the
+//!   tiled-SpGEMV bit-equality tests lean on);
+//! * end-to-end: a governed multi-step decode run under `auto` must
+//!   produce logits within a loose epsilon of the scalar run when fed
+//!   the same token stream (sampled ids are NOT asserted — a top-p cut
+//!   may legitimately flip a tail token under reassociation).
+//!
+//! On a host whose best backend IS scalar, every comparison degenerates
+//! to scalar-vs-scalar and the battery simply proves `auto` resolves
+//! without panicking — the required fallback behavior.
+//!
+//! Tests that touch the process-global backend selection (`install` /
+//! `force_scalar`) serialize on `BACKEND_LOCK`; the pure comparisons go
+//! through `kernels::table()` and never mutate the global.
+
+use std::sync::Mutex;
+
+use twilight::tensor::kernels::{self, Backend, Kernels, Select};
+use twilight::tensor::quant::{dequantize_into, quantize, QuantBits};
+use twilight::util::rng::Rng;
+
+/// Serializes the tests that mutate the global backend selection.
+static BACKEND_LOCK: Mutex<()> = Mutex::new(());
+
+fn scalar() -> &'static Kernels {
+    kernels::table(Backend::Scalar).expect("scalar table is always available")
+}
+
+/// The host's best table — scalar on hosts without SIMD, in which case
+/// the comparisons below are trivially exact (and still worth running:
+/// they prove the dispatch surface works there too).
+fn best() -> &'static Kernels {
+    kernels::table(kernels::detect()).expect("detected backend must have a table")
+}
+
+/// Eps bound for a reassociated length-`n` reduction whose exact
+/// per-term magnitude sum is `ref_abs`: O(√n·ε) relative, with headroom
+/// (32×) for the FMA/4-lane structure differences, plus an absolute
+/// floor for near-cancelling sums.
+fn reduction_tol(ref_abs: f32, n: usize) -> f32 {
+    ref_abs * (n as f32).sqrt() * 32.0 * f32::EPSILON + 1e-6
+}
+
+fn random_vec(r: &mut Rng, n: usize, std: f32) -> Vec<f32> {
+    (0..n).map(|_| r.normal_f32(0.0, std)).collect()
+}
+
+#[test]
+fn dot_parity_every_tail_length() {
+    let (s, b) = (scalar(), best());
+    let mut r = Rng::new(0x51D0);
+    for n in 0..=257usize {
+        let x = random_vec(&mut r, n, 1.0);
+        let y = random_vec(&mut r, n, 1.0);
+        let ref_abs: f32 = x.iter().zip(&y).map(|(a, c)| (a * c).abs()).sum();
+        let tol = reduction_tol(ref_abs, n);
+        let want = (s.dot)(&x, &y);
+        let got = (b.dot)(&x, &y);
+        assert!((want - got).abs() <= tol, "dot n={n}: {want} vs {got} (tol {tol})");
+        let want = (s.dot_strict)(&x, &y);
+        let got = (b.dot_strict)(&x, &y);
+        assert!((want - got).abs() <= tol, "dot_strict n={n}: {want} vs {got} (tol {tol})");
+    }
+}
+
+#[test]
+fn axpy_parity_every_tail_length() {
+    let (s, b) = (scalar(), best());
+    let mut r = Rng::new(0xA417);
+    for n in 0..=257usize {
+        let x = random_vec(&mut r, n, 1.0);
+        let base = random_vec(&mut r, n, 1.0);
+        let a = r.normal_f32(0.0, 1.0);
+        let mut want = base.clone();
+        let mut got = base.clone();
+        (s.axpy)(a, &x, &mut want);
+        (b.axpy)(a, &x, &mut got);
+        // axpy is elementwise (one multiply-add per lane): the only
+        // divergence is FMA vs separate rounding — a couple of ulps.
+        for i in 0..n {
+            let tol = 4.0 * f32::EPSILON * (base[i].abs() + (a * x[i]).abs()) + 1e-7;
+            assert!(
+                (want[i] - got[i]).abs() <= tol,
+                "axpy n={n} i={i}: {} vs {} (tol {tol})",
+                want[i],
+                got[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_quant_dot_parity_every_width_and_tail() {
+    let (s, b) = (scalar(), best());
+    let mut r = Rng::new(0x0D07);
+    for bits in [QuantBits::Int2, QuantBits::Int4, QuantBits::Int8, QuantBits::Fp16] {
+        for n in 0..=257usize {
+            let xs = random_vec(&mut r, n, 1.5);
+            let q = random_vec(&mut r, n, 1.0);
+            let blk = quantize(&xs, bits);
+            let (want, got) = match bits {
+                QuantBits::Fp16 => ((s.dot_f16)(&q, &blk.packed), (b.dot_f16)(&q, &blk.packed)),
+                QuantBits::Int8 => (
+                    (s.dot_q_i8)(&q, &blk.packed, blk.zero, blk.scale),
+                    (b.dot_q_i8)(&q, &blk.packed, blk.zero, blk.scale),
+                ),
+                QuantBits::Int4 => (
+                    (s.dot_q_i4)(&q, &blk.packed, blk.zero, blk.scale),
+                    (b.dot_q_i4)(&q, &blk.packed, blk.zero, blk.scale),
+                ),
+                QuantBits::Int2 => (
+                    (s.dot_q_i2)(&q, &blk.packed, blk.zero, blk.scale),
+                    (b.dot_q_i2)(&q, &blk.packed, blk.zero, blk.scale),
+                ),
+            };
+            // Internal magnitudes: scale·codes up to the top level plus
+            // the zero·Σq term — bound with the per-term sum of both.
+            let top = blk.scale * (bits.levels() - 1) as f32;
+            let ref_abs: f32 =
+                q.iter().map(|v| v.abs() * (blk.zero.abs() + top + 1.0)).sum();
+            let tol = reduction_tol(ref_abs, n.max(1)) + 1e-5;
+            assert!(
+                (want - got).abs() <= tol,
+                "dot_q {bits:?} n={n}: {want} vs {got} (tol {tol})"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_quant_dot_matches_dequant_reference() {
+    // Beyond scalar parity: every backend's fused dot must agree with
+    // the explicit dequantize-then-dot reference.
+    let b = best();
+    let mut r = Rng::new(0xDE0A);
+    for bits in [QuantBits::Int2, QuantBits::Int4, QuantBits::Int8, QuantBits::Fp16] {
+        for n in [1usize, 3, 31, 32, 33, 128, 255] {
+            let xs = random_vec(&mut r, n, 1.0);
+            let q = random_vec(&mut r, n, 1.0);
+            let blk = quantize(&xs, bits);
+            let mut deq = vec![0.0; n];
+            dequantize_into(&blk, &mut deq);
+            let want: f64 = q.iter().zip(&deq).map(|(a, c)| *a as f64 * *c as f64).sum();
+            let got = match bits {
+                QuantBits::Fp16 => (b.dot_f16)(&q, &blk.packed),
+                QuantBits::Int8 => (b.dot_q_i8)(&q, &blk.packed, blk.zero, blk.scale),
+                QuantBits::Int4 => (b.dot_q_i4)(&q, &blk.packed, blk.zero, blk.scale),
+                QuantBits::Int2 => (b.dot_q_i2)(&q, &blk.packed, blk.zero, blk.scale),
+            };
+            assert!(
+                (want - got as f64).abs() < 1e-3 * n as f64,
+                "{bits:?} n={n}: ref {want} vs fused {got}"
+            );
+        }
+    }
+}
+
+#[test]
+fn unpack_entries_are_value_exact() {
+    let (s, b) = (scalar(), best());
+    let mut r = Rng::new(0x0421);
+    for bits in [QuantBits::Int2, QuantBits::Int4, QuantBits::Int8, QuantBits::Fp16] {
+        // Alignment granularity of the width (Int4 windows are even,
+        // Int2 windows are multiples of 4 — the tile preconditions).
+        let step = match bits {
+            QuantBits::Int2 => 4,
+            QuantBits::Int4 => 2,
+            _ => 1,
+        };
+        for n in (0..=64usize).step_by(step).chain([256]) {
+            let xs = random_vec(&mut r, n, 2.0);
+            let blk = quantize(&xs, bits);
+            let mut want = vec![0.0f32; n];
+            let mut got = vec![7.0f32; n];
+            let (sw, bw) = match bits {
+                QuantBits::Fp16 => (s.unpack_f16, b.unpack_f16),
+                QuantBits::Int8 => (s.unpack_i8, b.unpack_i8),
+                QuantBits::Int4 => (s.unpack_i4, b.unpack_i4),
+                QuantBits::Int2 => (s.unpack_i2, b.unpack_i2),
+            };
+            sw(&blk.packed[..bits.bytes_for(n)], &mut want);
+            bw(&blk.packed[..bits.bytes_for(n)], &mut got);
+            for i in 0..n {
+                assert_eq!(
+                    want[i].to_bits(),
+                    got[i].to_bits(),
+                    "unpack {bits:?} n={n} i={i}: {} vs {}",
+                    want[i],
+                    got[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn f16_slice_is_value_exact() {
+    let (s, b) = (scalar(), best());
+    let mut r = Rng::new(0xF16A);
+    for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 100, 257] {
+        // Random finite half patterns (NaN payloads are the documented
+        // carve-out: hardware converts may quiet them).
+        let hs: Vec<u16> = (0..n)
+            .map(|_| loop {
+                let h = (r.next_u64() & 0xFFFF) as u16;
+                if (h & 0x7C00) != 0x7C00 || (h & 0x03FF) == 0 {
+                    break h; // finite or ±inf
+                }
+            })
+            .collect();
+        let mut want = vec![0.0f32; n];
+        let mut got = vec![0.0f32; n];
+        (s.f16_slice)(&hs, &mut want);
+        (b.f16_slice)(&hs, &mut got);
+        for i in 0..n {
+            assert_eq!(
+                want[i].to_bits(),
+                got[i].to_bits(),
+                "f16_slice n={n} i={i}: half {:#06x}",
+                hs[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn softmax_is_bit_identical() {
+    let (s, b) = (scalar(), best());
+    let mut r = Rng::new(0x50F7);
+    for n in (0..=64usize).chain([100, 257]) {
+        let base = random_vec(&mut r, n, 3.0);
+        let mut want = base.clone();
+        let mut got = base.clone();
+        let wm = (s.softmax)(&mut want);
+        let gm = (b.softmax)(&mut got);
+        assert_eq!(wm.to_bits(), gm.to_bits(), "softmax max n={n}");
+        for i in 0..n {
+            assert_eq!(want[i].to_bits(), got[i].to_bits(), "softmax n={n} i={i}");
+        }
+    }
+}
+
+#[test]
+fn rmsnorm_parity() {
+    let (s, b) = (scalar(), best());
+    let mut r = Rng::new(0x4151);
+    for n in [1usize, 7, 8, 9, 31, 32, 33, 256, 257] {
+        let x = random_vec(&mut r, n, 1.0);
+        let w = random_vec(&mut r, n, 1.0);
+        let mut want = vec![0.0f32; n];
+        let mut got = vec![0.0f32; n];
+        (s.rmsnorm)(&x, &w, 1e-5, &mut want);
+        (b.rmsnorm)(&x, &w, 1e-5, &mut got);
+        // The sum of squares is the only reduction; the normalize is
+        // elementwise. A loose relative bound per element suffices.
+        for i in 0..n {
+            let tol = want[i].abs() * 1e-4 + 1e-6;
+            assert!(
+                (want[i] - got[i]).abs() <= tol,
+                "rmsnorm n={n} i={i}: {} vs {}",
+                want[i],
+                got[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn dot_strict_matches_dot_f16_within_each_backend() {
+    // The invariant the tiled-SpGEMV bit-equality tests rely on: within
+    // ONE backend, a dot over widened halves reproduces the packed-f16
+    // dot bit-for-bit (shared accumulation structure).
+    let mut r = Rng::new(0x16F0);
+    for table in [scalar(), best()] {
+        for n in [0usize, 1, 5, 8, 13, 16, 64, 129, 257] {
+            let xs = random_vec(&mut r, n, 1.0);
+            let q = random_vec(&mut r, n, 1.0);
+            let blk = quantize(&xs, QuantBits::Fp16);
+            let mut widened = vec![0.0f32; n];
+            (table.f16_slice)(
+                &blk.packed
+                    .chunks_exact(2)
+                    .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                    .collect::<Vec<u16>>(),
+                &mut widened,
+            );
+            let a = (table.dot_strict)(&q, &widened);
+            let d = (table.dot_f16)(&q, &blk.packed);
+            assert_eq!(
+                a.to_bits(),
+                d.to_bits(),
+                "backend {} n={n}: dot_strict {a} != dot_f16 {d}",
+                table.backend.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn install_rejects_unsupported_backend_without_panicking() {
+    let _g = BACKEND_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // A backend the build target does not carry must be a clean Err
+    // that leaves the active selection usable.
+    let foreign = if cfg!(target_arch = "x86_64") { Select::Neon } else { Select::Avx2 };
+    let before = kernels::active_name();
+    assert!(kernels::install(foreign).is_err(), "foreign backend must not install");
+    assert_eq!(kernels::active_name(), before, "failed install must not change the selection");
+    // Auto always succeeds (worst case: scalar), and so does scalar.
+    assert!(kernels::install(Select::Auto).is_ok());
+    kernels::force_scalar();
+    assert_eq!(kernels::active_name(), "scalar");
+    assert!(kernels::install(Select::Auto).is_ok());
+}
+
+/// Governed multi-step decode, returning the per-step logits (prefill's
+/// included) under a fixed token stream. When `tokens_in` is `None` the
+/// stream is generated by sampling (scalar reference run) and returned;
+/// otherwise the given stream is replayed (backend-under-test run).
+fn decode_logit_trace(tokens_in: Option<&[u32]>) -> (Vec<Vec<f32>>, Vec<u32>) {
+    use twilight::coordinator::engine::Engine;
+    use twilight::coordinator::SparseConfig;
+    use twilight::model::retrieval::build_retrieval_model;
+    use twilight::model::sampler::{sample, SamplingParams};
+    use twilight::selector::SelectorKind;
+    use twilight::workload::{gen_niah, RetrievalVocab};
+
+    const STEPS: usize = 8;
+    let model = std::sync::Arc::new(build_retrieval_model(RetrievalVocab::DEFAULT, 1 << 13));
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+    cfg.skip_layers = 0;
+    cfg.dense_below = 16;
+    let mut e = Engine::new(model, cfg, 1 << 13);
+    e.set_threads(1);
+    let mut wl = Rng::new(0xBEEF);
+    let g = gen_niah(&mut wl, RetrievalVocab::DEFAULT, 300);
+    let mut srng = Rng::new(0x5EED);
+    let params = SamplingParams { temperature: 0.8, top_p: 0.9 };
+    let mut logits_trace = Vec::new();
+    let mut tokens = Vec::new();
+    let logits = e.prefill(0, &g.prompt).expect("prefill fits");
+    let mut tok = match tokens_in {
+        Some(ts) => ts[0],
+        None => sample(&logits, &params, &mut srng),
+    };
+    tokens.push(tok);
+    logits_trace.push(logits);
+    for step in 0..STEPS {
+        let logits = e.decode(0, tok).expect("decode fits");
+        tok = match tokens_in {
+            Some(ts) => ts[step + 1],
+            None => sample(&logits, &params, &mut srng),
+        };
+        tokens.push(tok);
+        logits_trace.push(logits);
+    }
+    (logits_trace, tokens)
+}
+
+#[test]
+fn engine_decode_auto_tracks_scalar_logits() {
+    let _g = BACKEND_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // Reference pass on the bit-exact scalar backend; its sampled token
+    // stream is then replayed under `auto` so both runs walk identical
+    // KV states and the logits are directly comparable step by step.
+    kernels::force_scalar();
+    let (want, tokens) = decode_logit_trace(None);
+    kernels::install(Select::Auto).expect("auto install cannot fail");
+    let (got, _) = decode_logit_trace(Some(&tokens));
+    assert_eq!(want.len(), got.len());
+    for (step, (w, g)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(w.len(), g.len(), "step {step}: logit width changed");
+        let maxabs = w.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let tol = 2e-2 * maxabs + 2e-2;
+        for (i, (a, c)) in w.iter().zip(g).enumerate() {
+            assert!(
+                (a - c).abs() <= tol,
+                "step {step} logit {i}: scalar {a} vs {} {c} (tol {tol})",
+                kernels::active_name()
+            );
+        }
+    }
+    // Leave the process on auto (matches the env default for any later
+    // test in this binary).
+    kernels::install(Select::Auto).expect("auto install cannot fail");
+}
