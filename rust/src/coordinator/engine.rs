@@ -54,6 +54,7 @@
 use super::{balance, AttnVariant, SparseConfig};
 use crate::governor::signals::SignalHub;
 use crate::governor::BudgetDirective;
+use crate::kvcache::offload::{PrefetchPlan, SimTier, DEFAULT_SLOWDOWN, PREFETCH_EPS_FRAC};
 use crate::kvcache::{CacheConfig, CacheError, PagedKvCache, SeqCache};
 use crate::model::{BatchBackend, Model, ModelConfig, SpanRef};
 use crate::obs::trace;
@@ -79,6 +80,16 @@ fn default_prefill_chunk() -> usize {
         .and_then(|v| v.parse::<usize>().ok())
         .filter(|&n| n >= 1)
         .unwrap_or(DEFAULT_PREFILL_CHUNK)
+}
+
+/// `TWILIGHT_RESIDENT_FRAC` (0, 1): attach a simulated slow tier at
+/// engine construction, keeping that fraction of each layer's page pool
+/// resident. Absent / out-of-range values mean fully resident.
+fn default_resident_frac() -> Option<f64> {
+    std::env::var("TWILIGHT_RESIDENT_FRAC")
+        .ok()
+        .and_then(|v| v.trim().parse::<f64>().ok())
+        .filter(|&f| f > 0.0 && f < 1.0)
 }
 
 /// One item of a mixed step: a sequence advancing by `toks`.
@@ -211,6 +222,19 @@ pub struct EngineStats {
     pub est_bytes_select: u64,
     pub est_bytes_prune: u64,
     pub est_bytes_attend: u64,
+    /// Tiered offload (0 unless a slow tier is attached; cumulative
+    /// totals, refreshed from the per-layer `TierState` counters after
+    /// every batched step): pages faulted in (demand + prefetch).
+    pub offload_faults: u64,
+    /// Faults performed by hier-bound prefetch tickets (⊆ faults; the
+    /// prefetch/demand *split* is timing-dependent, the total is not).
+    pub offload_prefetched: u64,
+    /// Sealed pages evicted to the tier.
+    pub offload_evictions: u64,
+    /// Bytes copied back from the tier by faults.
+    pub offload_bytes_faulted: u64,
+    /// Pages written through to the tier (seals + attach-time spills).
+    pub offload_spilled_pages: u64,
 }
 
 impl Default for EngineStats {
@@ -234,6 +258,11 @@ impl Default for EngineStats {
             est_bytes_select: 0,
             est_bytes_prune: 0,
             est_bytes_attend: 0,
+            offload_faults: 0,
+            offload_prefetched: 0,
+            offload_evictions: 0,
+            offload_bytes_faulted: 0,
+            offload_spilled_pages: 0,
         }
     }
 }
@@ -315,6 +344,12 @@ pub struct Engine {
     /// (unlike `stats.steps` it also counts chunk-only steps, so every
     /// recorded span maps to exactly one `run_batch` call).
     step_seq: u64,
+    /// Recycled prefetch-plan buffers (tiered offload): popped per item
+    /// before the attention phase, reserved to the pool's page count, and
+    /// pushed back after — steady-state prefetch planning is alloc-free.
+    plan_pool: Vec<PrefetchPlan>,
+    /// Fraction of each layer pool kept resident (1.0 = no tier).
+    resident_frac: f64,
 }
 
 impl Engine {
@@ -326,7 +361,7 @@ impl Engine {
             .map(|_| PagedKvCache::new(CacheConfig::new(c.n_kv_heads, c.head_dim, pages)))
             .collect();
         let n_layers = model.cfg.n_layers;
-        Engine {
+        let mut e = Engine {
             model,
             cfg,
             caches,
@@ -341,7 +376,13 @@ impl Engine {
             prefill_chunk: default_prefill_chunk(),
             last_timing: StepTiming::default(),
             step_seq: 0,
+            plan_pool: Vec::new(),
+            resident_frac: 1.0,
+        };
+        if let Some(f) = default_resident_frac() {
+            e.set_resident_frac(f);
         }
+        e
     }
 
     /// Prefill chunk span ([`DEFAULT_PREFILL_CHUNK`] unless overridden by
@@ -376,6 +417,36 @@ impl Engine {
     /// The persistent attention worker pool (instrumentation/tests).
     pub fn pool(&self) -> &ThreadPool {
         &self.pool
+    }
+
+    /// Fraction of each layer's page pool kept resident (1.0 = no tier).
+    pub fn resident_frac(&self) -> f64 {
+        self.resident_frac
+    }
+
+    /// Attach (or retarget) a simulated slow tier on every layer pool,
+    /// capping the resident in-use set at `frac` of the pool's pages —
+    /// `frac >= 1.0` detaches the tier and faults everything back in.
+    /// Safe mid-life: already-sealed pages spill at attach, so logits
+    /// stay bit-exact vs the fully-resident baseline either way (the
+    /// residency-invariance battery in `rust/tests/offload_decode.rs`).
+    pub fn set_resident_frac(&mut self, frac: f64) {
+        for c in &mut self.caches {
+            c.detach_tier();
+        }
+        if !frac.is_finite() || frac <= 0.0 || frac >= 1.0 {
+            self.resident_frac = 1.0;
+            return;
+        }
+        for c in &mut self.caches {
+            let fpp = c.cfg.kv_heads * c.cfg.page_size * c.cfg.head_dim;
+            let cap = ((c.cfg.num_pages as f64 * frac).ceil() as usize).max(1);
+            c.attach_tier(
+                Box::new(SimTier::new(fpp, c.cfg.num_pages, DEFAULT_SLOWDOWN)),
+                cap,
+            );
+        }
+        self.resident_frac = frac;
     }
 
     /// Install the governor's directive for subsequent decode steps.
@@ -650,6 +721,11 @@ impl Engine {
             self.stats.t_select + self.stats.t_prune + self.stats.t_attend + self.stats.t_dense;
         let step = self.step_seq;
         self.step_seq += 1;
+        // Tiered offload: advance the deterministic LRU clock (step
+        // ordinal + 1 so a first-step touch differs from "never").
+        for c in &self.caches {
+            c.set_clock(step + 1);
+        }
         let step_mark = trace::mark();
         let t0 = Instant::now();
         let probe_interval = self.signals.probe_interval();
@@ -665,6 +741,7 @@ impl Engine {
             scratches: &mut self.scratches,
             out_pool: &mut self.out_pool,
             call_pool: &mut self.call_pool,
+            plan_pool: &mut self.plan_pool,
             pool: &self.pool,
             probe_interval,
             step,
@@ -684,6 +761,63 @@ impl Engine {
         probes.sort_unstable_by_key(|&(tok, layer, kvh, _)| (tok, layer, kvh));
         for &(_, _, _, recall) in &probes {
             self.signals.record_probe(recall);
+        }
+        // Tiered offload: evict down to the (pressure-scaled) residency
+        // cap and refresh the cumulative offload totals from the
+        // per-layer counters. Victim order is deterministic (step-clock
+        // LRU), so the resident set entering the next step — and hence
+        // that step's fault count — is thread-count invariant.
+        let degrade = self.directive.degrade_level;
+        let mut any_tier = false;
+        let (mut faults, mut prefetched, mut evictions) = (0u64, 0u64, 0u64);
+        let (mut bytes_faulted, mut spilled) = (0u64, 0u64);
+        for c in self.caches.iter_mut() {
+            c.enforce_residency(degrade);
+            if let Some(ts) = c.tier_state() {
+                use std::sync::atomic::Ordering::Relaxed;
+                any_tier = true;
+                faults += ts.faults.load(Relaxed);
+                prefetched += ts.prefetched.load(Relaxed);
+                evictions += ts.evictions.load(Relaxed);
+                bytes_faulted += ts.bytes_faulted.load(Relaxed);
+                spilled += ts.spilled_writes.load(Relaxed);
+            }
+        }
+        if any_tier {
+            self.stats.offload_faults = faults;
+            self.stats.offload_prefetched = prefetched;
+            self.stats.offload_evictions = evictions;
+            self.stats.offload_bytes_faulted = bytes_faulted;
+            self.stats.offload_spilled_pages = spilled;
+            use std::sync::OnceLock;
+            static FAULTS: OnceLock<&'static crate::obs::metrics::Gauge> = OnceLock::new();
+            static EVICT: OnceLock<&'static crate::obs::metrics::Gauge> = OnceLock::new();
+            static OVERLAP: OnceLock<&'static crate::obs::metrics::Gauge> = OnceLock::new();
+            FAULTS
+                .get_or_init(|| {
+                    crate::obs::metrics::gauge(
+                        "twilight_offload_faults",
+                        "pages faulted in from the slow KV tier (cumulative)",
+                    )
+                })
+                .set(faults as f64);
+            EVICT
+                .get_or_init(|| {
+                    crate::obs::metrics::gauge(
+                        "twilight_offload_evictions",
+                        "sealed pages evicted to the slow KV tier (cumulative)",
+                    )
+                })
+                .set(evictions as f64);
+            OVERLAP
+                .get_or_init(|| {
+                    crate::obs::metrics::gauge(
+                        "twilight_offload_overlap",
+                        "fraction of tier faults performed by prefetch tickets \
+                         (overlapped with attention) rather than demand reads",
+                    )
+                })
+                .set(if faults == 0 { 0.0 } else { prefetched as f64 / faults as f64 });
         }
         let total = t0.elapsed().as_secs_f64();
         trace::record_since(
@@ -780,6 +914,8 @@ struct BatchStepBackend<'a> {
     /// Recycled work-item output / telemetry buffers (engine-owned).
     out_pool: &'a mut Vec<Vec<f32>>,
     call_pool: &'a mut Vec<Vec<CallOut>>,
+    /// Recycled prefetch-plan buffers (engine-owned, tiered offload).
+    plan_pool: &'a mut Vec<PrefetchPlan>,
     pool: &'a ThreadPool,
     probe_interval: u64,
     /// Engine step ordinal — the `step` span tag for this batch's spans.
@@ -922,7 +1058,13 @@ impl BatchBackend for BatchStepBackend<'_> {
         let mut flat_items: Vec<Option<AttnItem<'_>>> =
             Vec::with_capacity(self.sts.len() * kvn);
         let mut work: Vec<balance::WorkItem> = Vec::with_capacity(self.sts.len() * kvn);
+        // Tiered offload: one hier-bound prefetch plan per item (the
+        // bound maxes over every kv/group head, so the plan covers all
+        // of the item's work units). Built serially before the phase so
+        // the planned set is a pure function of deterministic state.
+        let mut plans: Vec<PrefetchPlan> = Vec::new();
         let cache = &self.caches[layer];
+        let tiered = cache.tier_state().is_some();
         for (i, st) in self.sts.iter_mut().enumerate() {
             if self.errors[i].is_some() {
                 flat_items.extend((0..kvn).map(|_| None));
@@ -936,6 +1078,28 @@ impl BatchBackend for BatchStepBackend<'_> {
             }
             let item_bases = &bases[self.offs[i]..self.offs[i] + span];
             let seq_cache = &st.caches[layer];
+            if tiered {
+                // Rank this item's non-resident sealed pages by the last
+                // attended token's hier bound; a dense sub-call reads
+                // everything, so it lifts the mass floor to 0.
+                if let Some(cidx) = (0..span).rev().find(|&cc| !subs[cc].skip) {
+                    let eps = if subs.iter().any(|s| !s.skip && s.dense) {
+                        0.0
+                    } else {
+                        PREFETCH_EPS_FRAC
+                    };
+                    let mut plan = self.plan_pool.pop().unwrap_or_default();
+                    plan.reserve(cache.cfg.num_pages, kvn * group);
+                    let qtok =
+                        &qs[(self.offs[i] + cidx) * qd..(self.offs[i] + cidx + 1) * qd];
+                    cache.plan_prefetch_into(seq_cache, qtok, group, eps, &mut plan);
+                    if plan.pages.is_empty() {
+                        self.plan_pool.push(plan);
+                    } else {
+                        plans.push(plan);
+                    }
+                }
+            }
             // Cost model: the kernels are bandwidth-bound, so the token
             // count to stream — summed over the chunk's sub-calls
             // (≈ span × context) — is the LPT weight.
@@ -1012,7 +1176,25 @@ impl BatchBackend for BatchStepBackend<'_> {
         // bucket each (chunk = 1, one ticket per LPT bucket), and park
         // again — the spawn/join cost that used to scale with
         // layers × steps is amortized to zero here.
-        self.pool.run(cells.len(), 1, |w| {
+        //
+        // Prefetch tickets go FIRST: with a tier attached, the planned
+        // non-resident pages start faulting before (and concurrently
+        // with) the attention buckets, so tier I/O overlaps attention on
+        // already-resident pages. At threads == 1 the inline path runs
+        // them sequentially ahead of the buckets — the reference order.
+        // Either way the step's *resident set* ends identical: demand
+        // reads fault whatever prefetch has not finished (the CAS admits
+        // exactly one loader per page), so only the prefetch/demand
+        // split is timing-dependent, never the faulted set.
+        let n_plans = plans.len();
+        self.pool.run(n_plans + cells.len(), 1, |w| {
+            if w < n_plans {
+                for &p in &plans[w].pages {
+                    cache.prefetch_page(p);
+                }
+                return;
+            }
+            let w = w - n_plans;
             let mut guard = cells[w].lock().expect("attention worker poisoned");
             let WorkerCell { items, scratch, results } = &mut *guard;
             results.reserve(items.len());
@@ -1028,6 +1210,9 @@ impl BatchBackend for BatchStepBackend<'_> {
                 ));
             }
         });
+        for plan in plans {
+            self.plan_pool.push(plan);
+        }
         let phase_wall = phase_t0.elapsed().as_secs_f64();
         // --- deterministic merge at the phase barrier ------------------
         let mut merged: Vec<Option<AttnItemOut>> = (0..n_items).map(|_| None).collect();

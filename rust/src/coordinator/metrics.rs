@@ -71,6 +71,15 @@ pub struct ServingReport {
     /// Active compute-kernel backend ("scalar", "avx2", "neon"; empty
     /// when the report was built without one resolved).
     pub kernel_backend: String,
+    /// Tiered-offload accounting, summed over layers (all 0 when the run
+    /// was fully resident): demand+prefetch page faults, faults served by
+    /// prefetch tickets, evictions, and fp32 bytes faulted back in.
+    pub offload_faults: u64,
+    pub offload_prefetched: u64,
+    pub offload_evictions: u64,
+    pub offload_bytes_faulted: u64,
+    /// Configured resident fraction (1.0 = no tier attached).
+    pub resident_frac: f64,
 }
 
 impl ServingReport {
@@ -157,6 +166,17 @@ impl ServingReport {
         }
     }
 
+    /// Fraction of page faults served by prefetch tickets rather than
+    /// demand reads inside the attention kernels (0 when nothing faulted,
+    /// i.e. the run was fully resident or the working set fit the cap).
+    pub fn offload_overlap_frac(&self) -> f64 {
+        if self.offload_faults == 0 {
+            0.0
+        } else {
+            self.offload_prefetched as f64 / self.offload_faults as f64
+        }
+    }
+
     /// JSON for result files.
     pub fn to_json(&self) -> Json {
         let tpot = self.tpot_summary();
@@ -189,6 +209,15 @@ impl ServingReport {
             ("hier_pages_total", Json::Num(self.hier_pages_total as f64)),
             ("hier_skip_frac", Json::Num(self.hier_skip_frac())),
             ("kernel_backend", Json::Str(self.kernel_backend.clone())),
+            // Offload keys are unconditional too: all-zero (and
+            // resident_frac as populated by the scheduler — 1.0 for a
+            // fully-resident engine) when no tier was attached.
+            ("offload_faults", Json::Num(self.offload_faults as f64)),
+            ("offload_prefetched", Json::Num(self.offload_prefetched as f64)),
+            ("offload_evictions", Json::Num(self.offload_evictions as f64)),
+            ("offload_bytes_faulted", Json::Num(self.offload_bytes_faulted as f64)),
+            ("offload_overlap_frac", Json::Num(self.offload_overlap_frac())),
+            ("resident_frac", Json::Num(self.resident_frac)),
         ];
         if !self.governor.is_empty() {
             let pmin = self.governor.iter().map(|e| e.p_scale).fold(f32::INFINITY, f32::min);
@@ -327,6 +356,10 @@ mod tests {
         assert_eq!(j.get_usize("hier_pages_total"), Some(0));
         // Kernel backend key is always present (empty when unresolved).
         assert_eq!(j.get_str("kernel_backend"), Some(""));
+        // Offload keys are always present: zero for untiered runs.
+        assert_eq!(j.get_usize("offload_faults"), Some(0));
+        assert_eq!(j.get_f64("offload_overlap_frac"), Some(0.0));
+        assert!(j.get_f64("resident_frac").is_some());
         assert!(j.get("governor_trace").is_none(), "ungoverned: no trace block");
     }
 

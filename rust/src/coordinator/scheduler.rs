@@ -656,6 +656,11 @@ impl Scheduler {
             hier_pages_skipped: self.engine.signals.hier_pages_skipped(),
             hier_pages_total: self.engine.signals.hier_pages_total(),
             kernel_backend: crate::tensor::kernels::active_name().to_string(),
+            offload_faults: self.engine.stats.offload_faults,
+            offload_prefetched: self.engine.stats.offload_prefetched,
+            offload_evictions: self.engine.stats.offload_evictions,
+            offload_bytes_faulted: self.engine.stats.offload_bytes_faulted,
+            resident_frac: self.engine.resident_frac(),
         }
     }
 
@@ -697,6 +702,10 @@ impl Scheduler {
             ("probe_recall", Json::Num(self.engine.signals.probe_recall())),
             ("hier_pages_skipped", Json::Num(self.engine.signals.hier_pages_skipped() as f64)),
             ("hier_skip_frac", Json::Num(self.engine.signals.hier_skip_frac())),
+            ("resident_frac", Json::Num(self.engine.resident_frac())),
+            ("offload_faults", Json::Num(s.offload_faults as f64)),
+            ("offload_prefetched", Json::Num(s.offload_prefetched as f64)),
+            ("offload_evictions", Json::Num(s.offload_evictions as f64)),
         ];
         if let Some(g) = &self.governor {
             kv.push(("governor", g.state_json()));

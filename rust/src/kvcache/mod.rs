@@ -30,8 +30,27 @@
 //! query inside a chunk sees only sealed (content-final) metadata plus
 //! exact reads of the visible prefix, so its result cannot depend on how
 //! many later tokens the chunk appended before it attended.
+//!
+//! **Tiering addendum.** With a slow tier attached
+//! ([`PagedKvCache::attach_tier`], surfaced as `--resident-frac` /
+//! `TWILIGHT_RESIDENT_FRAC`), the sealing contract gains a clause: a
+//! page's fp32 K/V is written through to the tier at seal, so sealed
+//! pages can be *evicted* (state flip + zeroed fp32, the bytes live in
+//! the tier) and *faulted* back on first exact read ([`k_at`]/[`v_at`]).
+//! The mirror, min/max metadata, and the unsealed tail never spill —
+//! selection and pruning stay fault-free, exactly the paper's "the INT4
+//! estimation mirror stays resident" deployment shape. See `offload.rs`
+//! for the residency state machine and the hier-bound prefetch plan.
+//!
+//! [`k_at`]: PagedKvCache::k_at
+//! [`v_at`]: PagedKvCache::v_at
 
 pub mod offload;
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::Ordering;
+
+use offload::{PrefetchPlan, Tier, TierState, PAGE_EVICTED, PAGE_LOADING, PAGE_RESIDENT};
 
 use crate::tensor::quant::{self, QuantBits, QuantBlock};
 
@@ -95,14 +114,64 @@ impl std::fmt::Display for CacheError {
 
 impl std::error::Error for CacheError {}
 
+/// Interior-mutable fp32 page storage. Plain `Vec` access under `&mut
+/// self` everywhere except the fault path, where the thread that won a
+/// page's `EVICTED → LOADING` CAS writes that page's region through
+/// `&self` while other pool threads are attending resident pages.
+///
+/// Soundness: the storage never reallocates after construction (fixed
+/// `num_pages`); distinct pages occupy disjoint ranges; a page's range
+/// is written through `&self` only by the CAS winner, and readers of
+/// that page synchronize through the acquire-load of `PAGE_RESIDENT`
+/// published by the winner's release-store.
+struct PageStore(UnsafeCell<Vec<f32>>);
+
+// SAFETY: see the struct docs — per-page exclusivity is enforced by the
+// `TierState` page state machine.
+unsafe impl Sync for PageStore {}
+
+impl PageStore {
+    fn new(n: usize) -> PageStore {
+        PageStore(UnsafeCell::new(vec![0.0; n]))
+    }
+
+    fn len(&self) -> usize {
+        // SAFETY: the Vec's length is fixed after construction.
+        unsafe { (*self.0.get()).len() }
+    }
+
+    /// Shared read. Caller guarantees no concurrent writer for the range
+    /// (resident pages are never written; loading pages are never read).
+    #[inline]
+    fn read(&self, a: usize, n: usize) -> &[f32] {
+        // SAFETY: struct-level contract above.
+        unsafe { &(*self.0.get())[a..a + n] }
+    }
+
+    /// Exclusive write through `&mut` (append / seal / evict paths).
+    #[inline]
+    fn slice_mut(&mut self, a: usize, n: usize) -> &mut [f32] {
+        // SAFETY: `&mut self` is exclusive.
+        unsafe { &mut (*self.0.get())[a..a + n] }
+    }
+
+    /// Racy write for the fault path. Caller must be the page's unique
+    /// writer (the `EVICTED → LOADING` CAS winner).
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    unsafe fn write_racy(&self, a: usize, n: usize) -> &mut [f32] {
+        &mut (*self.0.get())[a..a + n]
+    }
+}
+
 /// The physical paged pool. All tensors are row-major f32; the mirror is
 /// packed per (page, head).
 pub struct PagedKvCache {
     pub cfg: CacheConfig,
     /// K storage: `[page][kv_head][slot][d]`.
-    k: Vec<f32>,
+    k: PageStore,
     /// V storage: same layout.
-    v: Vec<f32>,
+    v: PageStore,
     /// Mirror K codes: per (page, head) `QuantBlock` over `[slot][d]`.
     mirror: Vec<Option<QuantBlock>>,
     /// Quest metadata: per (page, head), elementwise min then max (2*d).
@@ -112,21 +181,32 @@ pub struct PagedKvCache {
     /// Reference counts (prefix sharing); 0 = free.
     refs: Vec<u32>,
     free: Vec<PageId>,
+    /// Slow-tier residency state; `None` = everything resident (the
+    /// historical fully-in-memory cache, zero overhead on the hot path
+    /// beyond one branch per row read).
+    tier: Option<TierState>,
 }
 
 impl PagedKvCache {
     pub fn new(cfg: CacheConfig) -> PagedKvCache {
         let per_page = cfg.kv_heads * cfg.page_size * cfg.head_dim;
         PagedKvCache {
-            k: vec![0.0; cfg.num_pages * per_page],
-            v: vec![0.0; cfg.num_pages * per_page],
+            k: PageStore::new(cfg.num_pages * per_page),
+            v: PageStore::new(cfg.num_pages * per_page),
             mirror: (0..cfg.num_pages * cfg.kv_heads).map(|_| None).collect(),
             minmax: vec![0.0; cfg.num_pages * cfg.kv_heads * 2 * cfg.head_dim],
             page_fill: vec![0; cfg.num_pages],
             refs: vec![0; cfg.num_pages],
             free: (0..cfg.num_pages as PageId).rev().collect(),
+            tier: None,
             cfg,
         }
+    }
+
+    /// Floats in one page's K (or V) region, all kv heads.
+    #[inline]
+    fn floats_per_page(&self) -> usize {
+        self.cfg.kv_heads * self.cfg.page_size * self.cfg.head_dim
     }
 
     pub fn free_pages(&self) -> usize {
@@ -143,6 +223,12 @@ impl PagedKvCache {
         self.page_fill[p as usize] = 0;
         for h in 0..self.cfg.kv_heads {
             self.mirror[p as usize * self.cfg.kv_heads + h] = None;
+        }
+        // A fresh page starts resident (it is about to be appended to);
+        // its prior incarnation may have been evicted.
+        if let Some(ts) = &self.tier {
+            ts.state[p as usize].store(PAGE_RESIDENT, Ordering::Relaxed);
+            ts.touch(p);
         }
         Ok(p)
     }
@@ -174,18 +260,100 @@ impl PagedKvCache {
         ((page as usize * c.kv_heads + head) * c.page_size + slot) * c.head_dim
     }
 
-    /// K vector at (page, head, slot).
+    /// K vector at (page, head, slot). With a tier attached this is the
+    /// fault-on-read entry point: a non-resident page is faulted in
+    /// (whole page, all heads) before the row is returned.
     #[inline]
     pub fn k_at(&self, page: PageId, head: usize, slot: usize) -> &[f32] {
+        if let Some(ts) = &self.tier {
+            self.ensure_resident(ts, page);
+        }
         let b = self.k_base(page, head, slot);
-        &self.k[b..b + self.cfg.head_dim]
+        self.k.read(b, self.cfg.head_dim)
     }
 
-    /// V vector at (page, head, slot).
+    /// V vector at (page, head, slot). Faults like [`PagedKvCache::k_at`].
     #[inline]
     pub fn v_at(&self, page: PageId, head: usize, slot: usize) -> &[f32] {
+        if let Some(ts) = &self.tier {
+            self.ensure_resident(ts, page);
+        }
         let b = self.k_base(page, head, slot);
-        &self.v[b..b + self.cfg.head_dim]
+        self.v.read(b, self.cfg.head_dim)
+    }
+
+    /// Touch + residency check; the slow path does the actual fault.
+    #[inline]
+    fn ensure_resident(&self, ts: &TierState, page: PageId) {
+        ts.touch(page);
+        if ts.state[page as usize].load(Ordering::Acquire) != PAGE_RESIDENT {
+            self.fault_page_slow(ts, page, false);
+        }
+    }
+
+    /// Fault `page` in from the tier. Exactly one thread (the
+    /// `EVICTED → LOADING` CAS winner) performs the tier read; racers
+    /// spin until the winner publishes `RESIDENT`. Returns whether this
+    /// call performed the load.
+    #[cold]
+    fn fault_page_slow(&self, ts: &TierState, page: PageId, prefetch: bool) -> bool {
+        loop {
+            match ts.state[page as usize].compare_exchange(
+                PAGE_EVICTED,
+                PAGE_LOADING,
+                Ordering::Acquire,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    let t0 = std::time::Instant::now();
+                    let n = self.floats_per_page();
+                    let b = page as usize * n;
+                    // SAFETY: this thread won the CAS, so it is the
+                    // page's unique writer; readers wait for the
+                    // release-store of RESIDENT below.
+                    unsafe {
+                        ts.tier.read_page(
+                            page as usize,
+                            self.k.write_racy(b, n),
+                            self.v.write_racy(b, n),
+                        );
+                    }
+                    ts.state[page as usize].store(PAGE_RESIDENT, Ordering::Release);
+                    ts.faults.fetch_add(1, Ordering::Relaxed);
+                    if prefetch {
+                        ts.prefetched.fetch_add(1, Ordering::Relaxed);
+                    }
+                    ts.bytes_faulted.fetch_add((2 * n * 4) as u64, Ordering::Relaxed);
+                    crate::obs::trace::record_ctx(
+                        crate::obs::trace::Stage::PageFault,
+                        t0.elapsed(),
+                    );
+                    return true;
+                }
+                Err(s) if s == PAGE_RESIDENT => return false,
+                Err(_) => {
+                    // A racer is loading; evictions only happen under
+                    // `&mut self`, so once RESIDENT appears it holds for
+                    // the rest of this read phase.
+                    while ts.state[page as usize].load(Ordering::Acquire) == PAGE_LOADING {
+                        std::hint::spin_loop();
+                    }
+                }
+            }
+        }
+    }
+
+    /// Prefetch ticket entry point: fault `page` if it is not resident
+    /// (counted as prefetched only when this call performs the load —
+    /// a demand read may win the race, which changes the split but
+    /// never the total fault count).
+    pub fn prefetch_page(&self, page: PageId) {
+        if let Some(ts) = &self.tier {
+            ts.touch(page);
+            if ts.state[page as usize].load(Ordering::Acquire) != PAGE_RESIDENT {
+                self.fault_page_slow(ts, page, true);
+            }
+        }
     }
 
     /// Quest min/max metadata of (page, head): `(&min[d], &max[d])`.
@@ -229,9 +397,9 @@ impl PagedKvCache {
         for h in 0..c.kv_heads {
             let base = self.k_base(page, h, slot);
             let src = &k[h * c.head_dim..(h + 1) * c.head_dim];
-            self.k[base..base + c.head_dim].copy_from_slice(src);
+            self.k.slice_mut(base, c.head_dim).copy_from_slice(src);
             let vsrc = &v[h * c.head_dim..(h + 1) * c.head_dim];
-            self.v[base..base + c.head_dim].copy_from_slice(vsrc);
+            self.v.slice_mut(base, c.head_dim).copy_from_slice(vsrc);
             // Update Quest min/max incrementally.
             let mb = (page as usize * c.kv_heads + h) * 2 * c.head_dim;
             if slot == 0 {
@@ -262,15 +430,23 @@ impl PagedKvCache {
         Ok(())
     }
 
-    /// Build the mirror blocks for `page` from its (final) contents.
+    /// Build the mirror blocks for `page` from its (final) contents, and
+    /// — with a tier attached — write the page through to the slow tier
+    /// (the sealing contract's tiering clause: eviction is thereafter a
+    /// metadata flip, the authoritative bytes live in the tier).
     fn requantize_page(&mut self, page: PageId) {
         let c = self.cfg.clone();
         let fill = self.page_fill[page as usize] as usize;
         for h in 0..c.kv_heads {
             let b = self.k_base(page, h, 0);
-            let data = &self.k[b..b + fill * c.head_dim];
-            let block = quant::quantize(data, c.mirror_bits);
+            let block = quant::quantize(self.k.read(b, fill * c.head_dim), c.mirror_bits);
             self.mirror[page as usize * c.kv_heads + h] = Some(block);
+        }
+        if let Some(ts) = &self.tier {
+            let n = self.floats_per_page();
+            let b = page as usize * n;
+            ts.tier.write_page(page as usize, self.k.read(b, n), self.v.read(b, n));
+            ts.spilled_writes.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -305,6 +481,210 @@ impl PagedKvCache {
             .flatten()
             .map(|b| b.packed.len() + 8)
             .sum()
+    }
+
+    // --- tiered offload ---------------------------------------------------
+
+    /// Is `page` full and mirrored (content-final)? Only sealed pages
+    /// are evictable; everything else is pinned resident.
+    #[inline]
+    fn is_sealed(&self, page: usize) -> bool {
+        self.page_fill[page] as usize == self.cfg.page_size
+            && self.mirror[page * self.cfg.kv_heads].is_some()
+    }
+
+    /// Attach a slow tier with an in-use residency cap of `resident_cap`
+    /// pages. Every already-sealed in-use page is spilled immediately so
+    /// later eviction never has to copy out.
+    pub fn attach_tier(&mut self, tier: Box<dyn Tier>, resident_cap: usize) {
+        let ts = TierState::new(tier, self.cfg.num_pages, resident_cap);
+        let n = self.floats_per_page();
+        for p in 0..self.cfg.num_pages {
+            if self.refs[p] > 0 && self.is_sealed(p) {
+                let b = p * n;
+                ts.tier.write_page(p, self.k.read(b, n), self.v.read(b, n));
+                ts.spilled_writes.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.tier = Some(ts);
+    }
+
+    /// Detach the tier, faulting every evicted in-use page back in so
+    /// the cache returns to the fully-resident invariant.
+    pub fn detach_tier(&mut self) {
+        let Some(ts) = self.tier.take() else { return };
+        let n = self.floats_per_page();
+        for p in 0..self.cfg.num_pages {
+            if self.refs[p] > 0 && ts.state[p].load(Ordering::Relaxed) == PAGE_EVICTED {
+                // SAFETY: `&mut self` — no concurrent access.
+                unsafe {
+                    ts.tier.read_page(p, self.k.write_racy(p * n, n), self.v.write_racy(p * n, n));
+                }
+            }
+        }
+    }
+
+    /// The residency bookkeeping, if a tier is attached.
+    pub fn tier_state(&self) -> Option<&TierState> {
+        self.tier.as_ref()
+    }
+
+    /// Advance the deterministic LRU clock (the engine step ordinal).
+    pub fn set_clock(&self, step: u64) {
+        if let Some(ts) = &self.tier {
+            ts.clock.store(step, Ordering::Relaxed);
+        }
+    }
+
+    /// Is `page` resident right now? (Trivially true without a tier.)
+    pub fn is_resident(&self, page: PageId) -> bool {
+        match &self.tier {
+            Some(ts) => ts.state[page as usize].load(Ordering::Relaxed) == PAGE_RESIDENT,
+            None => true,
+        }
+    }
+
+    /// Resident in-use pages (the quantity `enforce_residency` caps).
+    pub fn resident_in_use_pages(&self) -> usize {
+        let Some(ts) = &self.tier else {
+            return self.used_pages();
+        };
+        (0..self.cfg.num_pages)
+            .filter(|&p| {
+                self.refs[p] > 0 && ts.state[p].load(Ordering::Relaxed) == PAGE_RESIDENT
+            })
+            .count()
+    }
+
+    /// Evict least-recently-touched sealed pages until the resident
+    /// in-use count fits the (pressure-scaled) cap. Eviction is a
+    /// metadata flip plus zeroing the fp32 region — the authoritative
+    /// bytes were written through at seal. Victims are ordered by
+    /// (last-touch asc, page id asc) over the deterministic step clock,
+    /// so the resident set is identical for any thread count.
+    pub fn enforce_residency(&mut self, degrade_level: u8) {
+        let num_pages = self.cfg.num_pages;
+        let n = self.floats_per_page();
+        let Some(ts) = &mut self.tier else { return };
+        let cap = ts.effective_cap(degrade_level);
+        let mut resident = 0usize;
+        ts.evict_scratch.clear();
+        for p in 0..num_pages {
+            if self.refs[p] == 0 || ts.state[p].load(Ordering::Relaxed) != PAGE_RESIDENT {
+                continue;
+            }
+            resident += 1;
+            let sealed = self.page_fill[p] as usize == self.cfg.page_size
+                && self.mirror[p * self.cfg.kv_heads].is_some();
+            if sealed {
+                let touch = ts.last_touch[p].load(Ordering::Relaxed);
+                ts.evict_scratch.push((touch, p as PageId));
+            }
+        }
+        if resident <= cap {
+            return;
+        }
+        ts.evict_scratch.sort_unstable();
+        let excess = resident - cap;
+        for &(_, p) in ts.evict_scratch.iter().take(excess) {
+            ts.state[p as usize].store(PAGE_EVICTED, Ordering::Release);
+            ts.evictions.fetch_add(1, Ordering::Relaxed);
+            // Zero the stale fp32 so any read that bypassed the fault
+            // path shows up as loudly-wrong zeros, never as silently
+            // stale data.
+            self.k.slice_mut(p as usize * n, n).fill(0.0);
+            self.v.slice_mut(p as usize * n, n).fill(0.0);
+        }
+    }
+
+    /// The prefetch oracle (hier-pages bound, PR 5): rank `seq`'s
+    /// non-resident sealed pages by their scaled upper logit bound
+    /// `s · (quest_ub + slack · Σ|q|)`, maxed over every (kv head ×
+    /// group head) of `qs` (`[kv_heads * group * head_dim]`, one
+    /// query token), and keep those whose bound-mass share
+    /// `exp(b − bmax) / Σ exp(·)` is ≥ `eps_frac` — pages below the
+    /// floor cannot shift any head's top-p mass materially, so faulting
+    /// them ahead of demand would waste link bandwidth. `eps_frac = 0`
+    /// plans every non-resident sealed page (dense attention).
+    ///
+    /// Buffers are caller-pooled; with [`PrefetchPlan::reserve`]d
+    /// capacity this never allocates.
+    pub fn plan_prefetch_into(
+        &self,
+        seq: &SeqCache,
+        qs: &[f32],
+        group: usize,
+        eps_frac: f32,
+        plan: &mut PrefetchPlan,
+    ) {
+        plan.clear();
+        let Some(ts) = &self.tier else { return };
+        let c = &self.cfg;
+        let d = c.head_dim;
+        let kvn = c.kv_heads;
+        debug_assert_eq!(qs.len(), kvn * group * d);
+        let sealed_pages = seq.len / c.page_size;
+        if sealed_pages == 0 {
+            return;
+        }
+        let s = crate::attention::scale(d);
+        for h in 0..kvn * group {
+            let a: f32 = qs[h * d..(h + 1) * d].iter().map(|x| x.abs()).sum();
+            plan.qabs.push(a);
+        }
+        // Per-page bound: the same quest-ub + quantization-slack formula
+        // the hier pruner proves sound (pruner/mod.rs §hier_prune_group),
+        // maxed over all heads that will read the page.
+        let mut bmax = f32::NEG_INFINITY;
+        for &page in &seq.pages[..sealed_pages] {
+            let mut key = f32::NEG_INFINITY;
+            for kvh in 0..kvn {
+                let (mn, mx) = self.minmax_at(page, kvh);
+                let block = self.mirror_at(page, kvh).expect("sealed page missing mirror");
+                let slack = if block.bits == QuantBits::Fp16 {
+                    // f16 round-off is relative — bound it from the
+                    // page's max |K| (see the pruner's derivation).
+                    let mut maxabs = 0.0f32;
+                    for i in 0..d {
+                        maxabs = maxabs.max(mn[i].abs()).max(mx[i].abs());
+                    }
+                    maxabs * (1.0 / 1024.0)
+                } else {
+                    quant::max_error(block)
+                };
+                for g in 0..group {
+                    let h = kvh * group + g;
+                    let q = &qs[h * d..(h + 1) * d];
+                    let mut ub = 0.0f32;
+                    for i in 0..d {
+                        ub += (q[i] * mn[i]).max(q[i] * mx[i]);
+                    }
+                    key = key.max(s * (ub + slack * plan.qabs[h]));
+                }
+            }
+            plan.weights.push(key);
+            bmax = bmax.max(key);
+        }
+        let mut total = 0.0f32;
+        for w in plan.weights.iter_mut() {
+            *w = (*w - bmax).exp();
+            total += *w;
+        }
+        for (&page, &w) in seq.pages[..sealed_pages].iter().zip(plan.weights.iter()) {
+            if ts.state[page as usize].load(Ordering::Relaxed) == PAGE_RESIDENT {
+                continue;
+            }
+            if w < eps_frac * total {
+                continue;
+            }
+            plan.entries.push((w, page));
+        }
+        // Fault order: best bound first (`exp` is monotonic in the
+        // bound), page-id ties ascending for determinism.
+        plan.entries.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        for &(_, p) in &plan.entries {
+            plan.pages.push(p);
+        }
     }
 }
 
@@ -510,5 +890,168 @@ mod tests {
         assert_eq!(c.bytes_main(), 2 * 4 * 16 * 16 * 4);
         // One full page mirrored at int4: 16*16/2 bytes + 8 overhead.
         assert_eq!(c.bytes_mirror(), 16 * 16 / 2 + 8);
+    }
+
+    // --- tiered offload ---------------------------------------------------
+
+    fn sim_tier_for(c: &PagedKvCache) -> Box<offload::SimTier> {
+        let fpp = c.cfg.kv_heads * c.cfg.page_size * c.cfg.head_dim;
+        Box::new(offload::SimTier::new(fpp, c.cfg.num_pages, 2))
+    }
+
+    #[test]
+    fn eviction_then_fault_restores_exact_bytes() {
+        let mut c = mk(2, 8, 6);
+        let mut seq = SeqCache::default();
+        let mut r = Rng::new(11);
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        for _ in 0..64 {
+            let k = rand_kv(&mut r, 16);
+            let v = rand_kv(&mut r, 16);
+            c.append(&mut seq, &k, &v).unwrap();
+            ks.push(k);
+            vs.push(v);
+        }
+        // Attach mid-life: the 4 sealed pages spill immediately.
+        let tier = sim_tier_for(&c);
+        c.attach_tier(tier, 2);
+        assert_eq!(c.tier_state().unwrap().spilled_writes.load(Ordering::Relaxed), 4);
+        c.set_clock(1);
+        c.enforce_residency(0);
+        assert!(c.resident_in_use_pages() <= 2, "cap must hold after enforce");
+        let evicted: Vec<PageId> =
+            (0..6).map(|p| p as PageId).filter(|&p| !c.is_resident(p)).collect();
+        assert!(!evicted.is_empty(), "some sealed page must have been evicted");
+        // The unsealed tail page (64 tokens = 4 full pages + 0…— append
+        // 3 more to create a tail) is never a victim.
+        for _ in 0..3 {
+            let k = rand_kv(&mut r, 16);
+            c.append(&mut seq, &k, &k).unwrap();
+            ks.push(k.clone());
+            vs.push(k);
+        }
+        c.set_clock(2);
+        c.enforce_residency(0);
+        let tail = *seq.pages.last().unwrap();
+        assert!(c.is_resident(tail), "unsealed tail must stay resident");
+        // Every row reads back bit-exact through the fault path.
+        for (i, k) in ks.iter().enumerate() {
+            let (page, slot) = seq.locate(i, 16);
+            for h in 0..2 {
+                assert_eq!(c.k_at(page, h, slot), &k[h * 8..(h + 1) * 8], "tok {i} head {h}");
+                assert_eq!(c.v_at(page, h, slot), &vs[i][h * 8..(h + 1) * 8]);
+            }
+        }
+        let ts = c.tier_state().unwrap();
+        assert!(ts.faults.load(Ordering::Relaxed) >= evicted.len() as u64);
+    }
+
+    #[test]
+    fn resident_pages_never_refault() {
+        let mut c = mk(1, 8, 4);
+        let mut seq = SeqCache::default();
+        let mut r = Rng::new(3);
+        for _ in 0..32 {
+            let k = rand_kv(&mut r, 8);
+            c.append(&mut seq, &k, &k).unwrap();
+        }
+        c.attach_tier(sim_tier_for(&c), 4);
+        // Everything fits: reads must not fault.
+        for i in 0..32 {
+            let (page, slot) = seq.locate(i, 16);
+            let _ = c.k_at(page, 0, slot);
+        }
+        assert_eq!(c.tier_state().unwrap().faults.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn prefetch_plan_is_nonresident_sealed_in_bound_order() {
+        let mut c = mk(1, 8, 10);
+        let mut seq = SeqCache::default();
+        let mut r = Rng::new(17);
+        for _ in 0..130 {
+            let k = rand_kv(&mut r, 8);
+            c.append(&mut seq, &k, &k).unwrap();
+        }
+        c.attach_tier(sim_tier_for(&c), 3);
+        c.set_clock(1);
+        c.enforce_residency(0);
+        let q = rand_kv(&mut r, 8);
+        let mut plan = offload::PrefetchPlan::default();
+        plan.reserve(c.cfg.num_pages, 1);
+        c.plan_prefetch_into(&seq, &q, 1, 0.0, &mut plan);
+        let sealed = seq.len / 16;
+        assert!(!plan.pages.is_empty());
+        for &p in &plan.pages {
+            assert!(!c.is_resident(p), "planned page {p} is already resident");
+            let pi = seq.pages[..sealed].iter().position(|&x| x == p);
+            assert!(pi.is_some(), "planned page {p} is not a sealed page of the seq");
+        }
+        // eps=0 plans every non-resident sealed page.
+        let nonresident = seq.pages[..sealed].iter().filter(|&&p| !c.is_resident(p)).count();
+        assert_eq!(plan.pages.len(), nonresident);
+        // Descending hier bound (recompute independently via the Quest
+        // ub + slack formula the plan uses).
+        let bound_of = |p: PageId| -> f32 {
+            let (mn, mx) = c.minmax_at(p, 0);
+            let block = c.mirror_at(p, 0).unwrap();
+            let slack = quant::max_error(block);
+            let qabs: f32 = q.iter().map(|x| x.abs()).sum();
+            let ub: f32 =
+                q.iter().zip(mn.iter().zip(mx)).map(|(&qi, (&lo, &hi))| (qi * lo).max(qi * hi)).sum();
+            crate::attention::scale(8) * (ub + slack * qabs)
+        };
+        for w in plan.pages.windows(2) {
+            assert!(
+                bound_of(w[0]) >= bound_of(w[1]),
+                "plan not in descending bound order: {:?}",
+                plan.pages
+            );
+        }
+        // A strictly positive mass floor can only shrink the plan.
+        let mut strict = offload::PrefetchPlan::default();
+        c.plan_prefetch_into(&seq, &q, 1, 0.5, &mut strict);
+        assert!(strict.pages.len() <= plan.pages.len());
+        for &p in &strict.pages {
+            assert!(plan.pages.contains(&p));
+        }
+    }
+
+    #[test]
+    fn detach_restores_fully_resident() {
+        let mut c = mk(1, 8, 6);
+        let mut seq = SeqCache::default();
+        let mut r = Rng::new(23);
+        let mut ks = Vec::new();
+        for _ in 0..64 {
+            let k = rand_kv(&mut r, 8);
+            c.append(&mut seq, &k, &k).unwrap();
+            ks.push(k);
+        }
+        c.attach_tier(sim_tier_for(&c), 1);
+        c.set_clock(1);
+        c.enforce_residency(0);
+        assert!((0..6).any(|p| !c.is_resident(p as PageId)));
+        c.detach_tier();
+        assert!(c.tier_state().is_none());
+        for (i, k) in ks.iter().enumerate() {
+            let (page, slot) = seq.locate(i, 16);
+            assert_eq!(c.k_at(page, 0, slot), &k[..8]);
+        }
+    }
+
+    #[test]
+    fn freed_pages_do_not_count_against_cap() {
+        let mut c = mk(1, 8, 8);
+        let mut a = SeqCache::default();
+        for _ in 0..64 {
+            c.append(&mut a, &[1.0; 8], &[1.0; 8]).unwrap();
+        }
+        c.attach_tier(sim_tier_for(&c), 8);
+        c.release(&a);
+        assert_eq!(c.resident_in_use_pages(), 0);
+        c.enforce_residency(0);
+        assert_eq!(c.tier_state().unwrap().evictions.load(Ordering::Relaxed), 0);
     }
 }

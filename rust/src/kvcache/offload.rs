@@ -1,31 +1,389 @@
-//! CPU-offload simulation for Table 7.
+//! Tiered KV offload: the slow-tier abstraction ([`Tier`]), the paged
+//! cache's residency state machine ([`TierState`]), and the hier-bound
+//! prefetch plan ([`PrefetchPlan`]) — plus the original per-token
+//! [`OffloadArena`] simulation kept for the Table 7 operator bench.
 //!
 //! The paper's offloading scenario keeps the KV cache in host memory and
-//! pays a per-token transfer cost to bring selected tokens to the GPU;
-//! Twilight wins big there because its final budget is tiny while its
-//! estimation cost (reading the small INT4 mirror, which stays resident)
-//! is fixed. Everything here is host memory, so we model the slow link
-//! explicitly: `load_tokens` copies each requested token's K/V through a
-//! scratch buffer `slowdown` times. The default slowdown (8×) approximates
-//! the HBM:PCIe-4.0 bandwidth ratio (~2 TB/s : ~25 GB/s would be 80×, but
-//! the paper's testbed overlaps transfers; 8× reproduces the paper's
-//! ~6–16× Quest→Quest-Twi gap shape without making the bench take forever).
+//! pays a transfer cost to bring selected tokens to the GPU; Twilight
+//! wins big there because its final budget is tiny while its estimation
+//! cost (reading the small INT4 mirror, which stays resident) is fixed.
+//! The engine-level design mirrors that split:
+//!
+//! * **What spills.** Only *sealed* pages (full, mirror built) ever move
+//!   to the slow tier; the INT4 mirror, the Quest min/max metadata, and
+//!   the unsealed fp32 tail are always resident. Stage 1 (selection) and
+//!   stage 2 (pruning) therefore never fault — only stage 3's exact-K/V
+//!   reads do.
+//! * **Write-through at seal.** A page's K/V is written to the tier the
+//!   moment it seals (and once more for pre-sealed pages when a tier is
+//!   attached mid-life), so *eviction is a metadata flip*: the resident
+//!   fp32 region is zeroed (stale reads fail loudly, they don't silently
+//!   return old data) and the page's state becomes `EVICTED`. Faulting
+//!   restores the exact bytes written at seal, which is why offloaded
+//!   decode is bit-exact vs fully-resident (`rust/tests/offload_decode.rs`).
+//! * **Fault-on-read.** `PagedKvCache::{k_at, v_at}` check residency and
+//!   fault the whole page in on miss (one CAS winner performs the tier
+//!   read; racers spin on `LOADING`). The hier-pages bound (PR 5) is the
+//!   *prefetch oracle*: before the attention phase the engine ranks a
+//!   sequence's non-resident sealed pages by their Quest-plus-slack logit
+//!   bound and fault tickets for pages that can still contribute top-p
+//!   mass run on the worker pool *ahead of* the attention tickets, so
+//!   fault I/O overlaps attention on already-resident pages.
+//! * **Victims.** LRU over a deterministic clock (the engine step
+//!   ordinal, never wall time) with page-id tie-breaks; the governor's
+//!   pressure ladder scales the effective residency cap down. Both
+//!   inputs are deterministic, so the resident set — and therefore the
+//!   total fault count — is identical for any thread count.
+//!
+//! The [`OffloadArena`] at the bottom is the original bench-only model
+//! of the slow link (`load_tokens` pays `slowdown` redundant passes per
+//! token); `benches/table7_offload.rs` still uses it for the per-token
+//! operator comparison, while the engine panels use the real tier.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+use super::PageId;
+
+// --- the slow tier -------------------------------------------------------
+
+/// A slow storage tier holding sealed pages' K/V at page granularity.
+///
+/// Implementations are shared read-only across the worker pool: faults
+/// run on pool threads while the engine thread is parked in
+/// `ThreadPool::run`. Per-page exclusivity is the *caller's* contract —
+/// `TierState`'s `EVICTED → LOADING` CAS admits one reader per page at a
+/// time, and `write_page` is only called from `&mut PagedKvCache`
+/// contexts (page seal, tier attach), never concurrently with a read of
+/// the same page.
+pub trait Tier: Send + Sync {
+    /// Stable backend name (reports / bench labels).
+    fn name(&self) -> &'static str;
+    /// Spill one page: `k`/`v` are the page's full
+    /// `[kv_heads * page_size * head_dim]` regions.
+    fn write_page(&self, page: usize, k: &[f32], v: &[f32]);
+    /// Fault one page back; `write_page(page, ..)` must have happened.
+    fn read_page(&self, page: usize, k_out: &mut [f32], v_out: &mut [f32]);
+}
+
+/// Interior-mutable page storage shared across pool threads.
+///
+/// Soundness: writes to a page's region happen either under `&mut`
+/// (construction) or gated by the per-page `written` flag's
+/// release-store / acquire-load pair, and the `TierState` page state
+/// machine guarantees no concurrent writer+reader on the same page (see
+/// [`Tier`]). Distinct pages occupy disjoint ranges.
+struct TierStore(UnsafeCell<Vec<f32>>);
+
+// SAFETY: see the struct docs — per-page exclusivity is enforced by the
+// caller's page state machine; the Vec itself never reallocates after
+// construction.
+unsafe impl Sync for TierStore {}
+
+impl TierStore {
+    fn new(n: usize) -> TierStore {
+        TierStore(UnsafeCell::new(vec![0.0; n]))
+    }
+
+    /// Read a page region. Caller guarantees no concurrent writer.
+    #[inline]
+    fn read(&self, a: usize, n: usize) -> &[f32] {
+        unsafe { &(*self.0.get())[a..a + n] }
+    }
+
+    /// Write a page region. Caller guarantees exclusivity for the range.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    unsafe fn write(&self, a: usize, n: usize) -> &mut [f32] {
+        &mut (*self.0.get())[a..a + n]
+    }
+}
+
+/// A simulated-latency host pool: fully preallocated (faults are
+/// allocation-free — the alloc-count contract holds with a tier
+/// attached), with `slowdown` redundant read passes modeling the slow
+/// link exactly like [`OffloadArena::load_tokens`] does.
+pub struct SimTier {
+    floats_per_page: usize,
+    slowdown: usize,
+    k: TierStore,
+    v: TierStore,
+    /// Per-page "has been spilled" flag; read-after-write guard.
+    written: Vec<AtomicU8>,
+}
+
+/// Default simulated link slowdown (see the module header of the bench:
+/// ~HBM:PCIe ratio with overlap, matching `OffloadArena`'s default).
+pub const DEFAULT_SLOWDOWN: usize = 8;
+
+impl SimTier {
+    pub fn new(floats_per_page: usize, num_pages: usize, slowdown: usize) -> SimTier {
+        SimTier {
+            floats_per_page,
+            slowdown: slowdown.max(1),
+            k: TierStore::new(floats_per_page * num_pages),
+            v: TierStore::new(floats_per_page * num_pages),
+            written: (0..num_pages).map(|_| AtomicU8::new(0)).collect(),
+        }
+    }
+}
+
+impl Tier for SimTier {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn write_page(&self, page: usize, k: &[f32], v: &[f32]) {
+        let n = self.floats_per_page;
+        assert_eq!(k.len(), n);
+        assert_eq!(v.len(), n);
+        // SAFETY: write_page is only called from `&mut PagedKvCache`
+        // contexts (seal / attach), one page at a time — no concurrent
+        // access to this range (Tier contract).
+        unsafe {
+            self.k.write(page * n, n).copy_from_slice(k);
+            self.v.write(page * n, n).copy_from_slice(v);
+        }
+        self.written[page].store(1, Ordering::Release);
+    }
+
+    fn read_page(&self, page: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+        let n = self.floats_per_page;
+        assert_eq!(
+            self.written[page].load(Ordering::Acquire),
+            1,
+            "tier read of page {page} before any write"
+        );
+        let src_k = self.k.read(page * n, n);
+        let src_v = self.v.read(page * n, n);
+        // The "link": redundant passes the optimizer cannot elide.
+        for pass in 0..self.slowdown {
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                acc += src_k[j] + src_v[j];
+            }
+            std::hint::black_box(acc);
+            if pass + 1 == self.slowdown {
+                k_out[..n].copy_from_slice(src_k);
+                v_out[..n].copy_from_slice(src_v);
+            }
+        }
+    }
+}
+
+/// A file-backed tier: pages live at fixed offsets in one flat file
+/// (K region then V region per page), read/written positionally so the
+/// handle is shared across pool threads without seeking.
+#[cfg(unix)]
+pub struct FileTier {
+    file: std::fs::File,
+    floats_per_page: usize,
+}
+
+#[cfg(unix)]
+impl FileTier {
+    /// Create (truncating) a tier file sized for `num_pages` pages.
+    pub fn create(
+        path: &std::path::Path,
+        floats_per_page: usize,
+        num_pages: usize,
+    ) -> std::io::Result<FileTier> {
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        file.set_len((num_pages * floats_per_page * 2 * 4) as u64)?;
+        Ok(FileTier { file, floats_per_page })
+    }
+
+    fn page_off(&self, page: usize) -> u64 {
+        (page * self.floats_per_page * 2 * 4) as u64
+    }
+}
+
+/// View an f32 slice as bytes (same-machine round-trip; endianness is
+/// irrelevant because the file never leaves the host).
+#[cfg(unix)]
+fn f32_bytes(s: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no padding and u8 has alignment 1.
+    unsafe { std::slice::from_raw_parts(s.as_ptr().cast::<u8>(), std::mem::size_of_val(s)) }
+}
+
+#[cfg(unix)]
+fn f32_bytes_mut(s: &mut [f32]) -> &mut [u8] {
+    // SAFETY: as above; any byte pattern is a valid f32.
+    unsafe { std::slice::from_raw_parts_mut(s.as_mut_ptr().cast::<u8>(), std::mem::size_of_val(s)) }
+}
+
+#[cfg(unix)]
+impl Tier for FileTier {
+    fn name(&self) -> &'static str {
+        "file"
+    }
+
+    fn write_page(&self, page: usize, k: &[f32], v: &[f32]) {
+        use std::os::unix::fs::FileExt;
+        let n = self.floats_per_page;
+        assert_eq!(k.len(), n);
+        assert_eq!(v.len(), n);
+        let off = self.page_off(page);
+        self.file.write_all_at(f32_bytes(k), off).expect("tier file write (K)");
+        self.file.write_all_at(f32_bytes(v), off + (n * 4) as u64).expect("tier file write (V)");
+    }
+
+    fn read_page(&self, page: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+        use std::os::unix::fs::FileExt;
+        let n = self.floats_per_page;
+        let off = self.page_off(page);
+        self.file.read_exact_at(f32_bytes_mut(&mut k_out[..n]), off).expect("tier file read (K)");
+        self.file
+            .read_exact_at(f32_bytes_mut(&mut v_out[..n]), off + (n * 4) as u64)
+            .expect("tier file read (V)");
+    }
+}
+
+// --- residency state machine ---------------------------------------------
+
+/// Page residency states (`TierState::state`).
+pub const PAGE_RESIDENT: u8 = 0;
+/// A fault winner is copying the page in; racers spin until `RESIDENT`.
+pub const PAGE_LOADING: u8 = 1;
+pub const PAGE_EVICTED: u8 = 2;
+
+/// Residency bookkeeping attached to a [`super::PagedKvCache`] when a
+/// slow tier is active. All hot-path fields are atomics so fault-on-read
+/// works through `&PagedKvCache` on pool threads.
+pub struct TierState {
+    pub tier: Box<dyn Tier>,
+    /// Unpressured residency cap, in pages (in-use pages only).
+    pub resident_cap: usize,
+    /// Per-page residency state (`PAGE_*` constants).
+    pub state: Vec<AtomicU8>,
+    /// Per-page last-touch stamp: the engine step ordinal (deterministic
+    /// — never wall time — so LRU victims are thread-count invariant).
+    pub last_touch: Vec<AtomicU64>,
+    /// Current deterministic clock; the engine stores its step ordinal
+    /// here before each batched step.
+    pub clock: AtomicU64,
+    /// Pages faulted in (demand + prefetch), cumulative.
+    pub faults: AtomicU64,
+    /// Faults performed by prefetch tickets (⊆ `faults`). The split
+    /// between prefetch and demand is timing-dependent (a demand read
+    /// can win the race for a planned page); the *total* is not.
+    pub prefetched: AtomicU64,
+    pub evictions: AtomicU64,
+    pub bytes_faulted: AtomicU64,
+    /// Pages written through to the tier (seals + attach-time spills).
+    pub spilled_writes: AtomicU64,
+    /// Victim-sort scratch, reserved once (fault path stays alloc-free).
+    pub(super) evict_scratch: Vec<(u64, PageId)>,
+}
+
+impl TierState {
+    pub fn new(tier: Box<dyn Tier>, num_pages: usize, resident_cap: usize) -> TierState {
+        TierState {
+            tier,
+            resident_cap: resident_cap.max(1),
+            state: (0..num_pages).map(|_| AtomicU8::new(PAGE_RESIDENT)).collect(),
+            last_touch: (0..num_pages).map(|_| AtomicU64::new(0)).collect(),
+            clock: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
+            prefetched: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            bytes_faulted: AtomicU64::new(0),
+            spilled_writes: AtomicU64::new(0),
+            evict_scratch: Vec::with_capacity(num_pages),
+        }
+    }
+
+    /// Stamp `page` with the current deterministic clock.
+    #[inline]
+    pub fn touch(&self, page: PageId) {
+        self.last_touch[page as usize]
+            .store(self.clock.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Residency cap after applying the governor's pressure ladder:
+    /// each degrade level sheds 10% of the unpressured cap (clamped so
+    /// at least one page stays).
+    pub fn effective_cap(&self, degrade_level: u8) -> usize {
+        let level = degrade_level.min(3) as usize;
+        (self.resident_cap * (10 - level) / 10).max(1)
+    }
+}
+
+// --- prefetch plan --------------------------------------------------------
+
+/// Mass-relevance floor for prefetch: a non-resident page is planned iff
+/// its bound-mass share `exp(b − bmax) / Σ exp(·)` is at least this
+/// fraction (the hier-pages §PR 5 argument: pages below it cannot shift
+/// any head's top-p mass materially). Dense items pass 0.0 — they read
+/// everything, so every non-resident page is planned.
+pub const PREFETCH_EPS_FRAC: f32 = 1e-3;
+
+/// One sequence's prefetch order for one layer: non-resident sealed
+/// pages that can still contribute top-p mass, descending bound order
+/// (page-id ties ascending). Buffers are pooled by the engine and
+/// reserved to the pool's page count so steady-state planning is
+/// allocation-free.
+#[derive(Default)]
+pub struct PrefetchPlan {
+    /// Physical pages to fault, in fault order.
+    pub pages: Vec<PageId>,
+    /// Scratch: (bound, page) for non-resident sealed pages.
+    pub(super) entries: Vec<(f32, PageId)>,
+    /// Scratch: per-sealed-page bound-mass weight `exp(b − bmax)`.
+    pub(super) weights: Vec<f32>,
+    /// Scratch: per (kv_head × group head) `Σ|q_i|`.
+    pub(super) qabs: Vec<f32>,
+}
+
+impl PrefetchPlan {
+    /// Reserve every buffer to its worst-case size so planning never
+    /// allocates once warm.
+    pub fn reserve(&mut self, num_pages: usize, heads: usize) {
+        self.pages.reserve(num_pages);
+        self.entries.reserve(num_pages);
+        self.weights.reserve(num_pages);
+        self.qabs.reserve(heads);
+    }
+
+    pub fn clear(&mut self) {
+        self.pages.clear();
+        self.entries.clear();
+        self.weights.clear();
+        self.qabs.clear();
+    }
+}
+
+// --- the original Table 7 operator-bench arena ----------------------------
 
 /// An offloaded KV arena for one sequence and one KV head group:
-/// contiguous `[token][d]` K and V.
+/// contiguous `[token][d]` K and V. Bench-only (the engine path uses
+/// [`Tier`]); kept because Table 7's operator panel compares *per-token*
+/// transfer volume, which the page-granular tier cannot express.
 pub struct OffloadArena {
     pub d: usize,
     pub k: Vec<f32>,
     pub v: Vec<f32>,
     /// How many redundant copy passes to make per load (link slowness).
     pub slowdown: usize,
-    /// Bytes "transferred" so far (diagnostics).
-    pub bytes_loaded: std::cell::Cell<u64>,
+    /// Bytes "transferred" so far (diagnostics). Atomic so arenas can be
+    /// shared read-only across the worker pool for overlapped loads.
+    pub bytes_loaded: AtomicU64,
 }
 
 impl OffloadArena {
     pub fn new(d: usize, slowdown: usize) -> OffloadArena {
-        OffloadArena { d, k: Vec::new(), v: Vec::new(), slowdown: slowdown.max(1), bytes_loaded: std::cell::Cell::new(0) }
+        OffloadArena {
+            d,
+            k: Vec::new(),
+            v: Vec::new(),
+            slowdown: slowdown.max(1),
+            bytes_loaded: AtomicU64::new(0),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -45,10 +403,21 @@ impl OffloadArena {
 
     /// Load the K/V rows for `tokens` into `k_out`/`v_out`
     /// (`[tokens.len() * d]` each), paying the simulated link cost.
+    ///
+    /// Bounds are enforced in release builds too: a bad token index must
+    /// fail loudly, not read a neighboring sequence's rows.
     pub fn load_tokens(&self, tokens: &[usize], k_out: &mut [f32], v_out: &mut [f32]) {
         let d = self.d;
-        debug_assert!(k_out.len() >= tokens.len() * d);
+        let n = self.len();
+        assert!(
+            k_out.len() >= tokens.len() * d && v_out.len() >= tokens.len() * d,
+            "load_tokens: output buffers too small ({} / {} for {} tokens × d={d})",
+            k_out.len(),
+            v_out.len(),
+            tokens.len(),
+        );
         for (i, &t) in tokens.iter().enumerate() {
+            assert!(t < n, "load_tokens: token index {t} out of range (arena holds {n})");
             let src_k = &self.k[t * d..(t + 1) * d];
             let src_v = &self.v[t * d..(t + 1) * d];
             let dst_k = &mut k_out[i * d..(i + 1) * d];
@@ -66,8 +435,7 @@ impl OffloadArena {
                 }
             }
         }
-        self.bytes_loaded
-            .set(self.bytes_loaded.get() + (tokens.len() * d * 2 * 4) as u64);
+        self.bytes_loaded.fetch_add((tokens.len() * d * 2 * 4) as u64, Ordering::Relaxed);
     }
 }
 
@@ -90,7 +458,17 @@ mod tests {
         assert_eq!(&k[0..4], &[3.0; 4]);
         assert_eq!(&k[4..8], &[7.0; 4]);
         assert_eq!(&v[0..4], &[103.0; 4]);
-        assert_eq!(a.bytes_loaded.get(), 2 * 4 * 2 * 4);
+        assert_eq!(a.bytes_loaded.load(Ordering::Relaxed), 2 * 4 * 2 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn load_rejects_bad_index_in_release() {
+        let mut a = OffloadArena::new(4, 1);
+        a.push(&[1.0; 4], &[1.0; 4]);
+        let mut k = vec![0.0; 4];
+        let mut v = vec![0.0; 4];
+        a.load_tokens(&[1], &mut k, &mut v);
     }
 
     #[test]
@@ -119,5 +497,59 @@ mod tests {
         }
         let t_slow = t0.elapsed();
         assert!(t_slow > t_fast * 4, "fast={t_fast:?} slow={t_slow:?}");
+    }
+
+    #[test]
+    fn sim_tier_round_trip() {
+        let fpp = 2 * 16 * 8; // 2 heads × 16 slots × d=8
+        let tier = SimTier::new(fpp, 4, 2);
+        let k: Vec<f32> = (0..fpp).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..fpp).map(|i| -(i as f32)).collect();
+        tier.write_page(2, &k, &v);
+        let mut ko = vec![0.0; fpp];
+        let mut vo = vec![0.0; fpp];
+        tier.read_page(2, &mut ko, &mut vo);
+        assert_eq!(ko, k);
+        assert_eq!(vo, v);
+    }
+
+    #[test]
+    #[should_panic(expected = "before any write")]
+    fn sim_tier_rejects_unwritten_read() {
+        let tier = SimTier::new(8, 2, 1);
+        let mut ko = vec![0.0; 8];
+        let mut vo = vec![0.0; 8];
+        tier.read_page(0, &mut ko, &mut vo);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn file_tier_round_trip() {
+        let fpp = 16 * 4;
+        let path = std::env::temp_dir()
+            .join(format!("twilight_tier_test_{}.bin", std::process::id()));
+        let tier = FileTier::create(&path, fpp, 3).unwrap();
+        let k: Vec<f32> = (0..fpp).map(|i| 0.5 + i as f32).collect();
+        let v: Vec<f32> = (0..fpp).map(|i| 7.0 - i as f32).collect();
+        tier.write_page(1, &k, &v);
+        tier.write_page(0, &v, &k); // neighbor pages must not alias
+        let mut ko = vec![0.0; fpp];
+        let mut vo = vec![0.0; fpp];
+        tier.read_page(1, &mut ko, &mut vo);
+        assert_eq!(ko, k);
+        assert_eq!(vo, v);
+        drop(tier);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn effective_cap_sheds_under_pressure() {
+        let ts = TierState::new(Box::new(SimTier::new(8, 4, 1)), 4, 100);
+        assert_eq!(ts.effective_cap(0), 100);
+        assert_eq!(ts.effective_cap(1), 90);
+        assert_eq!(ts.effective_cap(3), 70);
+        assert_eq!(ts.effective_cap(7), 70, "ladder clamps at level 3");
+        let tiny = TierState::new(Box::new(SimTier::new(8, 4, 1)), 4, 1);
+        assert_eq!(tiny.effective_cap(3), 1, "at least one page stays");
     }
 }

@@ -33,6 +33,12 @@
 //! not support is a hard error here (the env-var path only warns and
 //! falls back).
 //!
+//! `--resident-frac F` (also `TWILIGHT_RESIDENT_FRAC`) caps the
+//! fully-resident KV page pool at `ceil(F * num_pages)` pages per layer
+//! and spills the rest to the simulated slow tier (DESIGN.md §12);
+//! hier-bound prefetch faults pages back on demand. `F >= 1` (the
+//! default) keeps everything resident.
+//!
 //! Observability (DESIGN.md §10): `--trace` (also `TWILIGHT_TRACE=1`)
 //! turns on the per-stage span recorder; `--trace-out trace.json` (also
 //! `TWILIGHT_TRACE_OUT`) writes the collected spans as Chrome
@@ -116,6 +122,23 @@ fn load_model_arg(a: &Args) -> Arc<twilight::model::Model> {
     }
 }
 
+/// `--resident-frac F` (also `TWILIGHT_RESIDENT_FRAC`, which
+/// `Engine::new` already honors) attaches the simulated slow tier with a
+/// page-cap of `ceil(num_pages * F)`. The flag beats the env var; a
+/// value outside (0, 1) means fully resident. A malformed value is a
+/// hard error, matching the `--kernel` contract.
+fn apply_resident_frac(a: &Args, engine: &mut Engine) {
+    if let Some(f) = a.get("resident-frac") {
+        match f.parse::<f64>() {
+            Ok(frac) if frac.is_finite() && frac > 0.0 => engine.set_resident_frac(frac),
+            _ => {
+                eprintln!("bad --resident-frac '{f}' (want a fraction in (0, 1], e.g. 0.25)");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
 fn cmd_serve(a: &Args) {
     let model = load_model_arg(a);
     let cfg = sparse_config_from_args(a);
@@ -123,16 +146,18 @@ fn cmd_serve(a: &Args) {
     let mut engine = Engine::new(model.clone(), cfg.clone(), capacity);
     engine.set_threads(a.usize_or("threads", engine.threads()));
     engine.set_prefill_chunk(a.usize_or("prefill-chunk", engine.prefill_chunk()));
+    apply_resident_frac(a, &mut engine);
     twilight::log_info!(
         "model={} ({} params), pipeline={}, capacity={} tokens, threads={}, prefill_chunk={}, \
-         kernel={}",
+         kernel={}, resident_frac={}",
         model.cfg.name,
         model.param_count(),
         cfg.label(),
         capacity,
         engine.threads(),
         engine.prefill_chunk(),
-        twilight::tensor::kernels::active_name()
+        twilight::tensor::kernels::active_name(),
+        engine.resident_frac()
     );
     let sched_cfg = SchedulerConfig {
         max_batch: a.usize_or("max-batch", 64),
@@ -250,6 +275,7 @@ fn cmd_bench(a: &Args) {
         let mut e = Engine::new(model.clone(), cfg, ctx * 2 + 128);
         e.set_threads(a.usize_or("threads", e.threads()));
         e.set_prefill_chunk(a.usize_or("prefill-chunk", e.prefill_chunk()));
+        apply_resident_frac(a, &mut e);
         let _ = e.prefill(0, &g.prompt).unwrap();
         e.reset_stats();
         let t0 = std::time::Instant::now();

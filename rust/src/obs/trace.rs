@@ -60,10 +60,14 @@ pub enum Stage {
     PoolRound = 9,
     /// One whole mixed engine step (decode items + prefill chunks).
     Step = 10,
+    /// One page fault: a non-resident sealed page copied back from the
+    /// slow tier (tiered offload; demand reads and prefetch tickets
+    /// both record here).
+    PageFault = 11,
 }
 
 /// Number of [`Stage`] variants (array-indexing helper).
-pub const N_STAGES: usize = 11;
+pub const N_STAGES: usize = 12;
 
 impl Stage {
     pub const ALL: [Stage; N_STAGES] = [
@@ -78,6 +82,7 @@ impl Stage {
         Stage::Unembed,
         Stage::PoolRound,
         Stage::Step,
+        Stage::PageFault,
     ];
 
     /// Stable lowercase name (Chrome event name / Prometheus-ish label).
@@ -94,6 +99,7 @@ impl Stage {
             Stage::Unembed => "unembed",
             Stage::PoolRound => "pool_round",
             Stage::Step => "step",
+            Stage::PageFault => "page_fault",
         }
     }
 

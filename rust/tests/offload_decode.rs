@@ -1,0 +1,163 @@
+//! Tiered-offload correctness: decode under a capped resident set must
+//! be *bit-exact* with the fully-resident engine for every resident
+//! fraction and worker count, because faulting a page back restores the
+//! exact fp32 bytes the write-through spilled at seal time and the
+//! select/prune stages only ever read always-resident state (the INT4
+//! mirror, the minmax summaries, and the unsealed fp32 tail).
+//!
+//! Fault accounting is deterministic too: the per-step faulted set is
+//! `demand ∪ planned`, both derived from the deterministic pruned page
+//! set and the serial prefetch plan, so totals cannot depend on how many
+//! workers raced to serve them. Only the demand/prefetch *split* is
+//! timing-dependent, and nothing here pins it.
+//!
+//! Every run pins its residency explicitly via `set_resident_frac` (1.0
+//! detaches), so the battery is immune to `TWILIGHT_RESIDENT_FRAC` being
+//! exported by the offloaded CI leg.
+
+use std::sync::Arc;
+use twilight::coordinator::engine::{DecodeBatch, Engine};
+use twilight::coordinator::request::Request;
+use twilight::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use twilight::coordinator::SparseConfig;
+use twilight::model::retrieval::build_retrieval_model;
+use twilight::selector::SelectorKind;
+use twilight::util::rng::Rng;
+use twilight::workload::{gen_niah, RetrievalVocab};
+
+const V: RetrievalVocab = RetrievalVocab::DEFAULT;
+
+/// Small page pool so fractional caps actually bind: three sequences at
+/// 256/512/768 tokens plus decode growth use ~97 of the 128 pages, so
+/// frac 0.5 (cap 64) already forces evictions and frac 0.1 (cap 13)
+/// thrashes hard.
+const CAPACITY: usize = 2048;
+
+struct TraceOut {
+    logits: Vec<Vec<f32>>,
+    faults: u64,
+    evictions: u64,
+    bytes_faulted: u64,
+}
+
+/// Replay the same 3-sequence, 8-step decode trace with `threads`
+/// attention workers and the given resident fraction (1.0 = no tier).
+fn run_trace(threads: usize, frac: f64) -> TraceOut {
+    let model = Arc::new(build_retrieval_model(V, 1 << 14));
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+    cfg.skip_layers = 0;
+    cfg.dense_below = 16;
+    let mut e = Engine::new(model, cfg, CAPACITY);
+    e.set_threads(threads);
+    e.set_resident_frac(frac);
+    let mut rng = Rng::new(71);
+    let mut toks = Vec::new();
+    for i in 0..3u64 {
+        // Mixed context lengths → skewed budgets and uneven page counts.
+        let g = gen_niah(&mut rng, V, 256 * (i as usize + 1));
+        let _ = e.prefill(i, &g.prompt).unwrap();
+        toks.push(g.prompt[0]);
+    }
+    let mut logits = Vec::new();
+    for _ in 0..8 {
+        let batch = DecodeBatch::new((0..3u64).map(|i| (i, toks[i as usize])).collect());
+        for res in e.step_batch(&batch) {
+            logits.push(res.unwrap());
+        }
+    }
+    TraceOut {
+        logits,
+        faults: e.stats.offload_faults,
+        evictions: e.stats.offload_evictions,
+        bytes_faulted: e.stats.offload_bytes_faulted,
+    }
+}
+
+#[test]
+fn offloaded_decode_bit_exact_vs_fully_resident() {
+    let baseline = run_trace(1, 1.0);
+    assert_eq!(baseline.faults, 0, "fully-resident run must never fault");
+    for &frac in &[1.0, 0.5, 0.25, 0.1] {
+        for &threads in &[1usize, 4, 8] {
+            let out = run_trace(threads, frac);
+            assert_eq!(baseline.logits.len(), out.logits.len());
+            for (step, (a, b)) in baseline.logits.iter().zip(&out.logits).enumerate() {
+                assert_eq!(
+                    a, b,
+                    "logits diverged at step-result {step} (frac={frac}, threads={threads})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_totals_are_thread_invariant_and_capped_runs_actually_fault() {
+    // The faulted set per step is demand ∪ planned, both deterministic,
+    // so the totals must be identical no matter how many workers race.
+    let t1 = run_trace(1, 0.25);
+    let t4 = run_trace(4, 0.25);
+    let t8 = run_trace(8, 0.25);
+    assert!(t1.faults > 0, "cap 32 of ~97 in-use pages must force faults");
+    assert!(t1.evictions > 0, "over-cap residency must evict");
+    assert_eq!(t1.faults, t4.faults, "fault totals must not depend on worker count");
+    assert_eq!(t1.faults, t8.faults, "fault totals must not depend on worker count");
+    assert_eq!(t1.evictions, t4.evictions);
+    assert_eq!(t1.evictions, t8.evictions);
+    assert_eq!(t1.bytes_faulted, t4.bytes_faulted);
+    // Every fault moves exactly one page of K plus one page of V, so the
+    // byte counter is an exact multiple of the per-fault transfer.
+    assert_eq!(t1.bytes_faulted % t1.faults, 0);
+    assert!(t1.bytes_faulted / t1.faults > 0);
+}
+
+#[test]
+fn tighter_caps_fault_no_less() {
+    // Shrinking the resident cap can only grow (or hold) the fault
+    // count: a page resident at cap C is at least as likely resident at
+    // any C' > C under the same LRU trace.
+    let half = run_trace(1, 0.5);
+    let tenth = run_trace(1, 0.1);
+    assert!(
+        tenth.faults >= half.faults,
+        "frac 0.1 faulted {} < frac 0.5's {}",
+        tenth.faults,
+        half.faults
+    );
+}
+
+#[test]
+fn serving_report_carries_offload_accounting() {
+    let model = Arc::new(build_retrieval_model(V, 1 << 14));
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+    cfg.skip_layers = 0;
+    cfg.dense_below = 16;
+    let mut engine = Engine::new(model, cfg, CAPACITY);
+    engine.set_threads(4);
+    engine.set_resident_frac(0.25);
+    let mut s = Scheduler::new(engine, SchedulerConfig::default());
+    let mut rng = Rng::new(73);
+    let mut answers = Vec::new();
+    for i in 0..3u64 {
+        let g = gen_niah(&mut rng, V, 256 * (i as usize + 1));
+        answers.push(g.answer);
+        s.submit(Request::new(i, g.prompt, 4));
+    }
+    let rep = s.run_to_completion();
+    assert_eq!(rep.requests.len(), 3);
+    assert!((rep.resident_frac - 0.25).abs() < 1e-12);
+    assert!(rep.offload_faults > 0, "capped serve must fault pages back in");
+    assert!(rep.offload_faults >= rep.offload_prefetched);
+    let overlap = rep.offload_overlap_frac();
+    assert!((0.0..=1.0).contains(&overlap), "overlap frac out of range: {overlap}");
+    let j = rep.to_json();
+    assert!(j.get_f64("offload_overlap_frac").is_some());
+    assert_eq!(j.get_usize("offload_faults"), Some(rep.offload_faults as usize));
+    // Offload must not cost correctness: retrieval answers still land.
+    let correct = s
+        .finished_requests()
+        .iter()
+        .filter(|r| r.output.first() == Some(&answers[r.id as usize]))
+        .count();
+    assert!(correct >= 2, "{correct}/3 retrieval answers under offloaded decode");
+}
