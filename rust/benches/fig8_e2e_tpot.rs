@@ -1,16 +1,21 @@
 //! Fig. 8 — end-to-end decoding TPOT across batch sizes, through the
 //! full coordinator (queue → continuous batcher → engine); plus the
-//! chunked-prefill panels: TTFT vs chunk span, and a mixed-load
-//! comparison of serial (chunk=1) vs chunked prefill while a steady
-//! decode set is running.
+//! chunked-prefill panels: TTFT vs chunk span, a mixed-load comparison
+//! of serial (chunk=1) vs chunked prefill while a steady decode set is
+//! running, and the sparse-prefill panel (dense prefill vs bound-guided
+//! page skipping, TTFT vs context with the skip fraction and a NIAH
+//! recall pin). The sparse-prefill panel also lands in
+//! `BENCH_prefill.json` at the crate root (uploaded as a CI artifact)
+//! so prefill regressions are diffable across runs.
 
 mod common;
 
 use twilight::coordinator::engine::Engine;
 use twilight::coordinator::request::Request;
 use twilight::coordinator::scheduler::{Scheduler, SchedulerConfig};
-use twilight::coordinator::SparseConfig;
+use twilight::coordinator::{SparseConfig, SparsePrefillCfg};
 use twilight::selector::SelectorKind;
+use twilight::util::json::{self, Json};
 use twilight::util::rng::Rng;
 use twilight::workload::{gen_niah, RetrievalVocab};
 
@@ -184,5 +189,99 @@ fn main() {
             tok_s,
             preempt
         );
+    }
+
+    // --- Part 4: sparse prefill — TTFT vs context ---------------------
+    // Dense chunked prefill vs `--sparse-prefill` (bound-guided page
+    // skipping) on the 4-layer model: same prompt, same spans, the only
+    // difference is whether chunk queries walk every sealed page or only
+    // the bound-ordered prefix the hier top-p test keeps. The skip
+    // fraction is the fraction of *gated* pages (beyond the local
+    // window) the early stop never visited.
+    println!();
+    common::header("Figure 8d", "sparse prefill: TTFT vs context (dense vs top-p page skip)");
+    println!(
+        "{:>7} {:>12} {:>13} {:>9} {:>10}",
+        "ctx", "dense-ms", "sparse-ms", "speedup", "skip-frac"
+    );
+    let model4 = deep_model(11);
+    let vocab4 = model4.cfg.vocab_size;
+    let mut sp_rows = Vec::new();
+    for c in [pctx / 4, pctx / 2, pctx] {
+        let mut rng = Rng::new(29);
+        let prompt: Vec<u32> = (0..c).map(|_| rng.below(vocab4) as u32).collect();
+        let mut run = |sparse: bool| {
+            let mut cfg = SparseConfig::dense();
+            cfg.sparse_prefill = sparse.then(SparsePrefillCfg::default);
+            let mut e = Engine::new(model4.clone(), cfg, c + 128);
+            e.set_threads(4);
+            e.set_prefill_chunk(64);
+            let t0 = std::time::Instant::now();
+            e.prefill(0, &prompt).unwrap();
+            let skip = if e.stats.prefill_blocks_total == 0 {
+                0.0
+            } else {
+                e.stats.prefill_blocks_skipped as f64 / e.stats.prefill_blocks_total as f64
+            };
+            (t0.elapsed().as_secs_f64(), skip)
+        };
+        let (t_dense, _) = run(false);
+        let (t_sparse, skip_frac) = run(true);
+        println!(
+            "{:>7} {:>12.2} {:>13.2} {:>8.2}x {:>10.3}",
+            c,
+            t_dense * 1e3,
+            t_sparse * 1e3,
+            t_dense / t_sparse,
+            skip_frac
+        );
+        sp_rows.push(json::obj(vec![
+            ("ctx", Json::Num(c as f64)),
+            ("dense_ms", Json::Num(t_dense * 1e3)),
+            ("sparse_ms", Json::Num(t_sparse * 1e3)),
+            ("speedup", Json::Num(t_dense / t_sparse)),
+            ("skip_frac", Json::Num(skip_frac)),
+        ]));
+    }
+    // Recall pin: skipping must not lose the needle. The retrieval
+    // model's peaked NIAH caches are exactly the regime the bound order
+    // exploits, so the skip is aggressive *and* the answer must survive.
+    let mut rng = Rng::new(31);
+    let mut correct = 0usize;
+    let trials = 8usize;
+    let mut pin_skip = (0u64, 0u64);
+    for _ in 0..trials {
+        let g = gen_niah(&mut rng, v, pctx);
+        let mut cfg = SparseConfig::dense();
+        cfg.sparse_prefill = Some(SparsePrefillCfg::default());
+        let mut e = Engine::new(model.clone(), cfg, pctx + 128);
+        e.set_threads(4);
+        e.set_prefill_chunk(64);
+        let logits = e.prefill(0, &g.prompt).unwrap();
+        let argmax = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i as u32);
+        correct += usize::from(argmax == Some(g.answer));
+        pin_skip.0 += e.stats.prefill_blocks_skipped;
+        pin_skip.1 += e.stats.prefill_blocks_total;
+    }
+    let pin_frac = if pin_skip.1 == 0 { 0.0 } else { pin_skip.0 as f64 / pin_skip.1 as f64 };
+    println!(
+        "recall pin: NIAH@{pctx} answered {correct}/{trials} with skip-frac {pin_frac:.3}"
+    );
+    let doc = json::obj(vec![
+        ("bench", Json::Str("fig8_sparse_prefill".to_string())),
+        ("arch", Json::Str(std::env::consts::ARCH.to_string())),
+        ("ttft", Json::Arr(sp_rows)),
+        ("recall_correct", Json::Num(correct as f64)),
+        ("recall_trials", Json::Num(trials as f64)),
+        ("recall_skip_frac", Json::Num(pin_frac)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_prefill.json");
+    match std::fs::write(&path, doc.pretty()) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
     }
 }

@@ -5,6 +5,12 @@
 //!   and paged streaming-softmax (FlashInfer analog).
 //! * [`sparse`] — index-list sparse attention with the three varlen
 //!   packings of Appendix B.2 (padded / head-varlen / group-varlen).
+//! * [`prefill`] — bound-guided page skipping for chunked-prefill
+//!   queries (DESIGN.md §13): sealed pages below the local window are
+//!   visited in descending envelope-bound order with streaming softmax
+//!   and the hier top-p early-stop test, so long-prompt TTFT stops
+//!   paying the dense O(n²) walk while keeping ≥ 1 − eps of each row's
+//!   softmax mass.
 //! * [`spgemv`] — the score-estimation SpGEMV over the quantized mirror
 //!   K cache (Appendix B.1), at INT2/4/8/FP16 — page-tiled: per-page
 //!   candidate runs unpack each mirror block once and amortize the
@@ -34,6 +40,7 @@
 //! bit-exact for any chunk size.
 
 pub mod full;
+pub mod prefill;
 pub mod sparse;
 pub mod spgemv;
 

@@ -1,0 +1,493 @@
+//! Sparse *prefill* attention: bound-guided page skipping for the
+//! chunked context phase (DESIGN.md §13).
+//!
+//! Decode got its sparsity from Select-then-Prune; prefill chunk queries
+//! still walked the dense visible prefix (`full::paged_full_causal`), so
+//! TTFT stayed O(n²) in prompt length. This kernel upgrades the
+//! Skip-Softmax idea — compare a block's bound on max(QKᵀ) against the
+//! running softmax state and skip blocks that cannot contribute mass —
+//! into the same provable top-p form the hier decode path uses
+//! (`pruner::hier_prune_group`):
+//!
+//! * Every query of the span always attends **exactly** to a *mandatory
+//!   region*: the local window before the first active query, the
+//!   chunk's own tokens, and the unsealed fp32 tail (none of which have
+//!   sealed metadata anyway). That seeds the streaming (M, S) state.
+//! * Sealed pages strictly below the window (`gated` pages) get one
+//!   shared upper logit bound per (item, kv-head): the Quest min/max
+//!   ub + quantization slack·Σ|q| formula, evaluated over the
+//!   *coordinate envelope* `[qmin, qmax]` of all the span's query rows —
+//!   one bound pass amortized across the whole span, so the skip
+//!   decision itself is O(pages·d), not O(span·pages·d).
+//! * Pages are visited in descending bound order with streaming softmax
+//!   accumulation of the **exact** fp32 scores; before each page, every
+//!   query checks the hier early-stop test `R·(1−eps) ≤ eps·S` against
+//!   the shared suffix-sum of remaining bound mass and drops out once
+//!   the pages it has not visited cannot carry an eps-fraction of its
+//!   softmax mass.
+//!
+//! Soundness (per query row, per head): every unvisited token's exact
+//! logit is ≤ its page's envelope bound (its q lies inside the
+//! envelope, and the slack covers the metadata the bound was built
+//! from), so the true remaining mass is ≤ R = suffix·exp(bmax − M).
+//! Stopping when R(1−eps) ≤ eps·S therefore leaves at most an eps
+//! fraction of the *full dense* softmax mass unattended — the kept mass
+//! is ≥ 1 − eps of the dense reference, with all visited scores exact
+//! (top-p with p = 1, the prefill analog of the pruner's mass ≥ p − eps
+//! guarantee). With the feature off the engine never calls this path
+//! and the dense walk stays the bit-exact reference.
+
+use super::scale;
+use crate::kvcache::{PagedKvCache, SeqCache};
+use crate::tensor::kernels;
+
+/// Aggregate counters of one multi-query sparse-prefill call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SparsePrefillStats {
+    /// Sealed pages below the window gate (per query-row denominator —
+    /// multiply by live rows for the total opportunity).
+    pub gated_pages: usize,
+    /// Σ over (query, group head) of gated pages *not* visited.
+    pub pages_skipped: u64,
+    /// Σ over (query, group head) of gated pages considered.
+    pub pages_total: u64,
+}
+
+/// Reused buffers for [`sparse_prefill_causal`] — engine workers hold
+/// one per scratch arena so the steady-state call allocates nothing
+/// once the buffers have grown to the working-set size.
+#[derive(Default)]
+pub struct SparsePrefillScratch {
+    /// Active chunk offsets (filled by the engine before the call;
+    /// taken out for the call itself).
+    pub active: Vec<usize>,
+    /// Coordinate envelope over the active query rows, `[d]` each.
+    qmin: Vec<f32>,
+    qmax: Vec<f32>,
+    /// Scaled envelope bound per gated page.
+    bounds: Vec<f64>,
+    /// Gated page indices sorted by bound (descending, id-ascending).
+    pub order: Vec<u32>,
+    /// `suffix[oi] = Σ_{o ≥ oi} page_size · exp(bound[order[o]] − bmax)`.
+    suffix: Vec<f64>,
+    /// Streaming softmax state per (active query × group head).
+    m: Vec<f64>,
+    ssum: Vec<f64>,
+    live: Vec<bool>,
+    /// Gated pages actually visited per (active query × group head),
+    /// indexed `ai * group + g` — prefixes of `order` (tests reconstruct
+    /// the visited set from these two).
+    pub visited: Vec<u32>,
+}
+
+/// Multi-query sparse prefill for one KV head of a chunk item. Query
+/// layout matches [`full::paged_full_causal`]: the row for chunk offset
+/// `c`, group head `g` is `qs[c * q_stride + g * d ..][..d]`, its output
+/// goes to `outs[(c * group + g) * d ..][..d]`, and it attends causally
+/// over tokens `0..=start+c`. Only the rows named by `active`
+/// (ascending chunk offsets) are computed; other rows are untouched.
+/// `eps` is the top-p slack (clamped to [0, 0.5]); `window` is the
+/// always-dense local window (clamped to ≥ 1 so the self token is
+/// always exact).
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_prefill_causal(
+    cache: &PagedKvCache,
+    seq: &SeqCache,
+    kv_head: usize,
+    qs: &[f32],
+    q_stride: usize,
+    group: usize,
+    start: usize,
+    active: &[usize],
+    eps: f32,
+    window: usize,
+    outs: &mut [f32],
+    scratch: &mut SparsePrefillScratch,
+) -> SparsePrefillStats {
+    let mut stats = SparsePrefillStats::default();
+    if active.is_empty() {
+        return stats;
+    }
+    let d = cache.cfg.head_dim;
+    let ps = cache.cfg.page_size;
+    let s = scale(d);
+    let kn = kernels::active();
+    let eps = eps.clamp(0.0, 0.5) as f64;
+    let window = window.max(1);
+    let nq = active.len() * group;
+    debug_assert!(active.windows(2).all(|w| w[0] < w[1]), "active offsets ascending");
+    debug_assert!(start + active[active.len() - 1] < seq.len);
+    // Gate: pages wholly below the first active query's local window are
+    // candidates for skipping. They are < the visible prefix of *every*
+    // active query, fully filled, hence sealed (mirror + minmax valid).
+    let gate_tok = (start + active[0] + 1).saturating_sub(window);
+    let gated = gate_tok / ps;
+    stats.gated_pages = gated;
+    stats.pages_total = (gated * nq) as u64;
+    // --- streaming state + mandatory region (exact, always attended) --
+    scratch.m.clear();
+    scratch.m.resize(nq, f64::NEG_INFINITY);
+    scratch.ssum.clear();
+    scratch.ssum.resize(nq, 0.0);
+    scratch.live.clear();
+    scratch.live.resize(nq, true);
+    scratch.visited.clear();
+    scratch.visited.resize(nq, gated as u32);
+    for &c in active {
+        outs[c * group * d..(c + 1) * group * d].fill(0.0);
+    }
+    // Page-outer / slot / query-inner over tokens [gated·ps, n_c): the
+    // K/V rows load once per slot for the whole span. Per-query
+    // causality is the `tok < n_c` check.
+    let n_max = start + active[active.len() - 1] + 1;
+    for pi in gated..n_max.div_ceil(ps) {
+        let page = seq.pages[pi];
+        let fill = (n_max - pi * ps).min(ps);
+        for slot in 0..fill {
+            let tok = pi * ps + slot;
+            let krow = cache.k_at(page, kv_head, slot);
+            let vrow = cache.v_at(page, kv_head, slot);
+            for (ai, &c) in active.iter().enumerate() {
+                if tok > start + c {
+                    continue; // not visible to this query yet (causality)
+                }
+                for g in 0..group {
+                    let q = &qs[c * q_stride + g * d..c * q_stride + (g + 1) * d];
+                    let out = &mut outs[(c * group + g) * d..(c * group + g + 1) * d];
+                    let qi = ai * group + g;
+                    stream_token(kn, q, krow, vrow, s, qi, scratch, out);
+                }
+            }
+        }
+    }
+    if gated == 0 {
+        normalize(active, group, d, scratch, outs);
+        return stats;
+    }
+    // --- one amortized bound pass over the gated pages -----------------
+    // Coordinate envelope of every active query row: any q in the span
+    // satisfies qmin[i] ≤ q[i] ≤ qmax[i], so one interval-arithmetic
+    // bound per page is sound for all of them at once.
+    scratch.qmin.clear();
+    scratch.qmin.resize(d, f32::INFINITY);
+    scratch.qmax.clear();
+    scratch.qmax.resize(d, f32::NEG_INFINITY);
+    for &c in active {
+        for g in 0..group {
+            let q = &qs[c * q_stride + g * d..c * q_stride + (g + 1) * d];
+            for i in 0..d {
+                scratch.qmin[i] = scratch.qmin[i].min(q[i]);
+                scratch.qmax[i] = scratch.qmax[i].max(q[i]);
+            }
+        }
+    }
+    let qabs_sum: f32 =
+        scratch.qmin.iter().zip(&scratch.qmax).map(|(a, b)| a.abs().max(b.abs())).sum();
+    scratch.bounds.clear();
+    let mut bmax = f64::NEG_INFINITY;
+    for &page in &seq.pages[..gated] {
+        let b = (s * cache.envelope_page_bound(page, kv_head, &scratch.qmin, &scratch.qmax, qabs_sum))
+            as f64;
+        scratch.bounds.push(b);
+        bmax = bmax.max(b);
+    }
+    // Visit order: best bound first, page-id ties ascending (sort keys
+    // are finite, so total_cmp is a strict weak order and the order —
+    // hence every skip decision — is deterministic).
+    scratch.order.clear();
+    scratch.order.extend(0..gated as u32);
+    let bounds = &scratch.bounds;
+    scratch
+        .order
+        .sort_unstable_by(|&a, &b| bounds[b as usize].total_cmp(&bounds[a as usize]).then(a.cmp(&b)));
+    // Suffix sums of remaining bound mass (a page contributes at most
+    // page_size tokens at its bound).
+    scratch.suffix.clear();
+    scratch.suffix.resize(gated + 1, 0.0);
+    for oi in (0..gated).rev() {
+        scratch.suffix[oi] =
+            scratch.suffix[oi + 1] + ps as f64 * (scratch.bounds[scratch.order[oi] as usize] - bmax).exp();
+    }
+    // --- descending-bound visit with per-query early stop --------------
+    let mut n_live = nq;
+    for oi in 0..gated {
+        for qi in 0..nq {
+            if !scratch.live[qi] || scratch.ssum[qi] <= 0.0 {
+                continue;
+            }
+            // True remaining mass of this query ≤ R (every unvisited
+            // logit ≤ its page bound ≤ bmax-relative suffix term).
+            let rem = scratch.suffix[oi] * (bmax - scratch.m[qi]).exp();
+            if rem * (1.0 - eps) <= eps * scratch.ssum[qi] {
+                scratch.live[qi] = false;
+                scratch.visited[qi] = oi as u32;
+                n_live -= 1;
+            }
+        }
+        if n_live == 0 {
+            break;
+        }
+        let page = seq.pages[scratch.order[oi] as usize];
+        for slot in 0..ps {
+            let krow = cache.k_at(page, kv_head, slot);
+            let vrow = cache.v_at(page, kv_head, slot);
+            for (ai, &c) in active.iter().enumerate() {
+                for g in 0..group {
+                    let qi = ai * group + g;
+                    if !scratch.live[qi] {
+                        continue;
+                    }
+                    let q = &qs[c * q_stride + g * d..c * q_stride + (g + 1) * d];
+                    let out = &mut outs[(c * group + g) * d..(c * group + g + 1) * d];
+                    stream_token(kn, q, krow, vrow, s, qi, scratch, out);
+                }
+            }
+        }
+    }
+    for qi in 0..nq {
+        stats.pages_skipped += (gated as u32 - scratch.visited[qi]) as u64;
+    }
+    normalize(active, group, d, scratch, outs);
+    stats
+}
+
+/// One streaming-softmax update: exact logit, running-max rescale of the
+/// f32 accumulator, f64 (M, S) state for the early-stop test.
+#[inline]
+fn stream_token(
+    kn: &kernels::Kernels,
+    q: &[f32],
+    krow: &[f32],
+    vrow: &[f32],
+    s: f32,
+    qi: usize,
+    scratch: &mut SparsePrefillScratch,
+    out: &mut [f32],
+) {
+    let logit = ((kn.dot)(q, krow) * s) as f64;
+    let m = scratch.m[qi];
+    if logit > m {
+        if m.is_finite() {
+            let corr = (m - logit).exp();
+            scratch.ssum[qi] *= corr;
+            let cf = corr as f32;
+            for o in out.iter_mut() {
+                *o *= cf;
+            }
+        }
+        scratch.m[qi] = logit;
+    }
+    let w = (logit - scratch.m[qi]).exp();
+    scratch.ssum[qi] += w;
+    (kn.axpy)(w as f32, vrow, out);
+}
+
+fn normalize(
+    active: &[usize],
+    group: usize,
+    d: usize,
+    scratch: &SparsePrefillScratch,
+    outs: &mut [f32],
+) {
+    for (ai, &c) in active.iter().enumerate() {
+        for g in 0..group {
+            let denom = scratch.ssum[ai * group + g];
+            if denom > 0.0 {
+                let inv = (1.0 / denom) as f32;
+                for o in outs[(c * group + g) * d..(c * group + g + 1) * d].iter_mut() {
+                    *o *= inv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full::paged_full_limit;
+    use crate::attention::testutil::{random_cache, random_q};
+    use crate::kvcache::{CacheConfig, SeqCache};
+    use crate::util::rng::Rng;
+
+    /// Peaked retrieval-style cache: most keys are small noise, a few
+    /// "needle" tokens align with the query direction — the regime where
+    /// bound-guided skipping should drop most gated pages.
+    fn peaked_cache(seed: u64, d: usize, n: usize, needles: &[usize]) -> (PagedKvCache, SeqCache) {
+        let pages = n.div_ceil(16) + 2;
+        let mut cache = PagedKvCache::new(CacheConfig::new(1, d, pages));
+        let mut seq = SeqCache::default();
+        let mut r = Rng::new(seed);
+        for t in 0..n {
+            let mut k: Vec<f32> = (0..d).map(|_| r.normal_f32(0.0, 0.2)).collect();
+            if needles.contains(&t) {
+                for x in k.iter_mut() {
+                    *x += 2.0;
+                }
+            }
+            let v: Vec<f32> = (0..d).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            cache.append(&mut seq, &k, &v).unwrap();
+        }
+        (cache, seq)
+    }
+
+    fn dense_reference(
+        cache: &PagedKvCache,
+        seq: &SeqCache,
+        q: &[f32],
+        limit: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        // Exact softmax weights over the visible prefix + dense output.
+        let s = scale(q.len());
+        let mut w: Vec<f32> =
+            (0..limit).map(|t| cache.exact_score(seq, 0, q, t) * s).collect();
+        crate::tensor::softmax_inplace(&mut w);
+        let mut out = vec![0.0; q.len()];
+        paged_full_limit(cache, seq, 0, q, limit, &mut out);
+        (w, out)
+    }
+
+    #[test]
+    fn matches_dense_when_nothing_gated() {
+        // Context shorter than the window: the kernel is a pure
+        // mandatory-region walk and must match the dense reference.
+        let d = 16;
+        let (cache, seq) = random_cache(11, 1, d, 40);
+        let start = 30;
+        let active = [1usize, 5, 9];
+        let mut qs = Vec::new();
+        for c in 0..10 {
+            qs.extend(random_q(300 + c, d));
+        }
+        let mut outs = vec![0.0f32; 10 * d];
+        let mut scratch = SparsePrefillScratch::default();
+        let st = sparse_prefill_causal(
+            &cache, &seq, 0, &qs, d, 1, start, &active, 0.05, 64, &mut outs, &mut scratch,
+        );
+        assert_eq!(st.gated_pages, 0);
+        assert_eq!(st.pages_skipped, 0);
+        for &c in &active {
+            let (_, want) = dense_reference(&cache, &seq, &qs[c * d..(c + 1) * d], start + c + 1);
+            for (a, b) in outs[c * d..(c + 1) * d].iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "offset {c}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn skips_pages_and_keeps_mass_on_peaked_cache() {
+        // The soundness property (DESIGN.md §13): per query row, the
+        // softmax mass of the visited set — measured against the *full
+        // dense* softmax — is ≥ 1 − eps, while most gated pages are
+        // skipped in this peaked regime. Visited sets are reconstructed
+        // from the scratch's (order, visited) prefixes.
+        let d = 32;
+        let n = 1024;
+        let ps = 16;
+        let eps = 0.05f32;
+        let window = 64;
+        let (cache, seq) = peaked_cache(21, d, n, &[200, 201, 530]);
+        let start = n - 8 - 1; // span of 8 queries ending at token n-1
+        let span = 8;
+        let mut r = Rng::new(22);
+        let mut qs = Vec::new();
+        for _ in 0..span {
+            // Needle-aligned queries with noise — the retrieval regime.
+            qs.extend((0..d).map(|_| 1.0 + r.normal_f32(0.0, 0.3)));
+        }
+        let active: Vec<usize> = (0..span).collect();
+        let mut outs = vec![0.0f32; span * d];
+        let mut scratch = SparsePrefillScratch::default();
+        let st = sparse_prefill_causal(
+            &cache, &seq, 0, &qs, d, 1, start, &active, eps, window, &mut outs, &mut scratch,
+        );
+        assert!(st.gated_pages > 40, "gate must cover most of the context");
+        assert!(
+            st.pages_skipped as f64 > 0.5 * st.pages_total as f64,
+            "peaked cache must skip most gated pages: {}/{}",
+            st.pages_skipped,
+            st.pages_total
+        );
+        for (ai, &c) in active.iter().enumerate() {
+            let limit = start + c + 1;
+            let q = &qs[c * d..(c + 1) * d];
+            let (w, want) = dense_reference(&cache, &seq, q, limit);
+            // Visited tokens: the mandatory region plus the visited
+            // order-prefix of gated pages.
+            let mut mass = w[st.gated_pages * ps..limit].iter().sum::<f32>();
+            for &pi in &scratch.order[..scratch.visited[ai] as usize] {
+                let lo = pi as usize * ps;
+                mass += w[lo..lo + ps].iter().sum::<f32>();
+            }
+            assert!(
+                mass >= 1.0 - eps - 1e-4,
+                "offset {c}: kept mass {mass} < 1 - eps"
+            );
+            // And the output should be close to dense (the skipped tail
+            // carries ≤ eps mass).
+            for (a, b) in outs[c * d..(c + 1) * d].iter().zip(&want) {
+                assert!((a - b).abs() < 0.1, "offset {c}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn eps_zero_visits_everything_and_matches_dense() {
+        // eps = 0 makes the stop test unsatisfiable while any bound mass
+        // remains, so every page is visited and the result matches the
+        // dense reference to fp tolerance (different accumulation order).
+        let d = 16;
+        let n = 400;
+        let (cache, seq) = random_cache(31, 1, d, n);
+        let start = n - 4 - 1;
+        let active = [0usize, 3];
+        let mut qs = Vec::new();
+        for c in 0..4 {
+            qs.extend(random_q(500 + c, d));
+        }
+        let mut outs = vec![0.0f32; 4 * d];
+        let mut scratch = SparsePrefillScratch::default();
+        let st = sparse_prefill_causal(
+            &cache, &seq, 0, &qs, d, 1, start, &active, 0.0, 8, &mut outs, &mut scratch,
+        );
+        assert!(st.gated_pages > 10);
+        assert_eq!(st.pages_skipped, 0, "eps=0 must visit every gated page");
+        for &c in &active {
+            let (_, want) = dense_reference(&cache, &seq, &qs[c * d..(c + 1) * d], start + c + 1);
+            for (a, b) in outs[c * d..(c + 1) * d].iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "offset {c}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn random_cache_soundness_property() {
+        // Diffuse random keys: little skipping is expected (the adaptive
+        // regime), but the mass property must hold regardless.
+        let d = 24;
+        let n = 600;
+        let ps = 16;
+        let eps = 0.1f32;
+        let (cache, seq) = random_cache(41, 1, d, n);
+        let start = n - 6 - 1;
+        let active: Vec<usize> = vec![0, 2, 5];
+        let mut qs = Vec::new();
+        for c in 0..6 {
+            qs.extend(random_q(700 + c, d));
+        }
+        let mut outs = vec![0.0f32; 6 * d];
+        let mut scratch = SparsePrefillScratch::default();
+        let st = sparse_prefill_causal(
+            &cache, &seq, 0, &qs, d, 1, start, &active, eps, 32, &mut outs, &mut scratch,
+        );
+        for (ai, &c) in active.iter().enumerate() {
+            let limit = start + c + 1;
+            let (w, _) = dense_reference(&cache, &seq, &qs[c * d..(c + 1) * d], limit);
+            let mut mass = w[st.gated_pages * ps..limit].iter().sum::<f32>();
+            for &pi in &scratch.order[..scratch.visited[ai] as usize] {
+                mass += w[pi as usize * ps..(pi as usize + 1) * ps].iter().sum::<f32>();
+            }
+            assert!(mass >= 1.0 - eps - 1e-4, "offset {c}: kept mass {mass}");
+        }
+    }
+}

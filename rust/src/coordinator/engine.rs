@@ -55,7 +55,7 @@ use super::{balance, AttnVariant, SparseConfig};
 use crate::governor::signals::SignalHub;
 use crate::governor::BudgetDirective;
 use crate::kvcache::offload::{PrefetchPlan, SimTier, DEFAULT_SLOWDOWN, PREFETCH_EPS_FRAC};
-use crate::kvcache::{CacheConfig, CacheError, PagedKvCache, SeqCache};
+use crate::kvcache::{CacheConfig, CacheError, PageId, PagedKvCache, SeqCache};
 use crate::model::{BatchBackend, Model, ModelConfig, SpanRef};
 use crate::obs::trace;
 use crate::pruner::{prune_group_into, AttnScratch, PrunerConfig};
@@ -101,7 +101,7 @@ pub struct StepItem {
     /// over its own prefix.
     pub toks: Vec<u32>,
     /// Prompt processing (chunk) rather than decode: accounted to
-    /// `EngineStats::prefill_steps`, excluded from the decode share of
+    /// `EngineStats::prefill_tokens`, excluded from the decode share of
     /// [`StepTiming`], and — for single-layer models — eligible for the
     /// algebraic attend-skip (see [`Engine::prefill`]).
     pub prefill: bool,
@@ -187,6 +187,9 @@ pub struct EngineStats {
     pub t_attend: f64,
     /// Seconds in dense attention (skip layers / short contexts).
     pub t_dense: f64,
+    /// Seconds in the bound-guided sparse-prefill kernel
+    /// (`attention::prefill`; 0 unless sparse prefill ran).
+    pub t_sprefill: f64,
     /// Seconds in everything else (projections, MLP, norms, sampling).
     pub t_other: f64,
     /// Batched steps that advanced at least one decode item (a batch of
@@ -197,8 +200,10 @@ pub struct EngineStats {
     /// appends whole spans, so this counts *tokens*, not forward passes —
     /// the single-layer fast path pushes only the final prompt token).
     /// Kept separate from `steps` so TPOT-style per-step averages are not
-    /// skewed by prompt processing.
-    pub prefill_steps: u64,
+    /// skewed by prompt processing. (Named `prefill_steps` before the
+    /// chunked-prefill rework made it a token count; the serving report's
+    /// wire label keeps the historical name for golden stability.)
+    pub prefill_tokens: u64,
     /// Prefill chunk items executed (spans of any size count once).
     pub prefill_chunks: u64,
     /// Cumulative wall-clock attributed to the prefill share of mixed
@@ -216,6 +221,12 @@ pub struct EngineStats {
     pub hier_pages_skipped: u64,
     /// Hier-pages mode: cumulative candidate page runs seen.
     pub hier_pages_total: u64,
+    /// Sparse prefill: cumulative gated (sealed, below-window) pages
+    /// skipped unvisited across (prefill query × group head) rows
+    /// (0 unless the sparse-prefill path ran).
+    pub prefill_blocks_skipped: u64,
+    /// Sparse prefill: cumulative gated pages considered (denominator).
+    pub prefill_blocks_total: u64,
     /// Histogram of final per-head budgets.
     pub kept_hist: Histogram,
     /// Bytes the pipeline *would* stream on a GPU (sim cost model).
@@ -244,9 +255,10 @@ impl Default for EngineStats {
             t_prune: 0.0,
             t_attend: 0.0,
             t_dense: 0.0,
+            t_sprefill: 0.0,
             t_other: 0.0,
             steps: 0,
-            prefill_steps: 0,
+            prefill_tokens: 0,
             prefill_chunks: 0,
             t_prefill: 0.0,
             candidates_sum: 0,
@@ -254,6 +266,8 @@ impl Default for EngineStats {
             sparse_calls: 0,
             hier_pages_skipped: 0,
             hier_pages_total: 0,
+            prefill_blocks_skipped: 0,
+            prefill_blocks_total: 0,
             kept_hist: Histogram::new(0.0, 4096.0, 64),
             est_bytes_select: 0,
             est_bytes_prune: 0,
@@ -348,6 +362,12 @@ pub struct Engine {
     /// before the attention phase, reserved to the pool's page count, and
     /// pushed back after — steady-state prefetch planning is alloc-free.
     plan_pool: Vec<PrefetchPlan>,
+    /// Cross-item fault batch (tiered offload): the union of every
+    /// item's planned pages for one (step, layer) phase, offset-sorted
+    /// and deduped, dispatched as ONE prefetch ticket — a single
+    /// ascending sweep over the backing tier instead of per-item
+    /// ticket bursts seeking independently.
+    fault_batch: Vec<PageId>,
     /// Fraction of each layer pool kept resident (1.0 = no tier).
     resident_frac: f64,
 }
@@ -377,6 +397,7 @@ impl Engine {
             last_timing: StepTiming::default(),
             step_seq: 0,
             plan_pool: Vec::new(),
+            fault_batch: Vec::new(),
             resident_frac: 1.0,
         };
         if let Some(f) = default_resident_frac() {
@@ -539,7 +560,7 @@ impl Engine {
     /// needs the forward pass); deeper models run the prompt through
     /// [`Engine::step_batch`] in [`Engine::prefill_chunk`]-sized chunks —
     /// bit-exact for any chunk size. Either way the work is accounted to
-    /// `stats.prefill_steps` (tokens), not `stats.steps`, so decode step
+    /// `stats.prefill_tokens`, not `stats.steps`, so decode step
     /// counts and the governor's TPOT view stay truthful.
     pub fn prefill(&mut self, id: SeqId, prompt: &[u32]) -> Result<Vec<f32>, CacheError> {
         assert!(!prompt.is_empty());
@@ -678,7 +699,15 @@ impl Engine {
         let n_layers = model.cfg.n_layers;
         let kvn = model.cfg.n_kv_heads;
         let dense_below = directive.dense_below_override.unwrap_or(self.cfg.dense_below);
-        let blank = SubSpec { n: 0, dense: true, budget: 0, skip: true };
+        // Sparse prefill: config opt-in, overridable either way by the
+        // governor (the pressure ladder forces it on at level ≥ 2).
+        let sp_enabled =
+            directive.sparse_prefill_override.unwrap_or(self.cfg.sparse_prefill.is_some());
+        // Stateful (dropping) selectors feed on the observation stream of
+        // their sparse calls: only their would-be-dense sub-calls convert
+        // to sparse prefill, so the selector sees the same call sequence.
+        let sp_stateful = selector_wants_observation(self.cfg.selector);
+        let blank = SubSpec { n: 0, dense: true, budget: 0, skip: true, sprefill: false };
         let mut subspecs: Vec<Vec<SubSpec>> =
             (0..n_layers).map(|_| vec![blank; total_q]).collect();
         let mut call_bases: Vec<Vec<u64>> = (0..n_layers).map(|_| vec![0u64; total_q]).collect();
@@ -698,8 +727,18 @@ impl Engine {
                         || n <= dense_below
                         || (self.cfg.selector == SelectorKind::Full
                             && self.cfg.twilight.is_none());
+                    // Bound-guided sparse prefill replaces the dense
+                    // context walk of a chunk query (and, for stateless
+                    // selectors, the Select-then-Prune pipeline too).
+                    // Short contexts stay dense: the gate would cover
+                    // nothing and the envelope pass is pure overhead.
+                    let sprefill = sp_enabled
+                        && batch.items[i].prefill
+                        && !skip
+                        && n > dense_below
+                        && (dense || !sp_stateful);
                     let mut budget = 0;
-                    if !dense && !skip {
+                    if !dense && !skip && !sprefill {
                         budget = self.cfg.budget.resolve(n);
                         if directive.budget_scale != 1.0 {
                             budget = ((budget as f32 * directive.budget_scale).round()
@@ -709,7 +748,8 @@ impl Engine {
                         bases[offs[i] + cidx] = call_idx;
                         call_idx += kvn as u64;
                     }
-                    specs[offs[i] + cidx] = SubSpec { n, dense, budget, skip };
+                    specs[offs[i] + cidx] =
+                        SubSpec { n, dense: dense && !sprefill, budget, skip, sprefill };
                 }
             }
         }
@@ -717,8 +757,11 @@ impl Engine {
         if self.scratches.len() < threads {
             self.scratches.resize_with(threads, AttnScratch::default);
         }
-        let staged_before =
-            self.stats.t_select + self.stats.t_prune + self.stats.t_attend + self.stats.t_dense;
+        let staged_before = self.stats.t_select
+            + self.stats.t_prune
+            + self.stats.t_attend
+            + self.stats.t_dense
+            + self.stats.t_sprefill;
         let step = self.step_seq;
         self.step_seq += 1;
         // Tiered offload: advance the deterministic LRU clock (step
@@ -742,6 +785,7 @@ impl Engine {
             out_pool: &mut self.out_pool,
             call_pool: &mut self.call_pool,
             plan_pool: &mut self.plan_pool,
+            fault_batch: &mut self.fault_batch,
             pool: &self.pool,
             probe_interval,
             step,
@@ -840,14 +884,17 @@ impl Engine {
         }
         for it in &batch.items {
             if it.prefill {
-                self.stats.prefill_steps += it.toks.len() as u64;
+                self.stats.prefill_tokens += it.toks.len() as u64;
                 self.stats.prefill_chunks += 1;
             }
         }
         // Everything not attributed to a stage is "other" (projections,
         // MLP, norms, unembedding).
-        let staged_after =
-            self.stats.t_select + self.stats.t_prune + self.stats.t_attend + self.stats.t_dense;
+        let staged_after = self.stats.t_select
+            + self.stats.t_prune
+            + self.stats.t_attend
+            + self.stats.t_dense
+            + self.stats.t_sprefill;
         self.stats.t_other += (total - (staged_after - staged_before)).max(0.0);
         let mut results = Vec::with_capacity(batch.len());
         for (i, (mut st, lg)) in sts.into_iter().zip(logits).enumerate() {
@@ -916,6 +963,8 @@ struct BatchStepBackend<'a> {
     call_pool: &'a mut Vec<Vec<CallOut>>,
     /// Recycled prefetch-plan buffers (engine-owned, tiered offload).
     plan_pool: &'a mut Vec<PrefetchPlan>,
+    /// Cross-item fault batch (engine-owned; see [`Engine::fault_batch`]).
+    fault_batch: &'a mut Vec<PageId>,
     pool: &'a ThreadPool,
     probe_interval: u64,
     /// Engine step ordinal — the `step` span tag for this batch's spans.
@@ -948,6 +997,9 @@ struct SubSpec {
     budget: usize,
     /// Elided by the single-layer algebraic shortcut.
     skip: bool,
+    /// Bound-guided sparse-prefill sub-call (`attention::prefill`):
+    /// mutually exclusive with `dense`, consumes no sparse-call label.
+    sprefill: bool,
 }
 
 /// One unit of phase-(b) attention work: an (item, kv-head) pair —
@@ -999,6 +1051,13 @@ struct CallOut {
     /// when the pre-prune is off).
     hier_skipped: u32,
     hier_total: u32,
+    /// Sparse-prefill sub-call: routed to the `prefill_blocks_*`
+    /// counters only — it is *not* a sparse call (no candidates/kept
+    /// telemetry, no label, no probe).
+    sprefill: bool,
+    /// Gated pages skipped / considered, summed over the group's heads.
+    sp_skipped: u32,
+    sp_total: u32,
 }
 
 /// The result of one attention work item, merged at the phase barrier in
@@ -1014,6 +1073,7 @@ struct AttnItemOut {
     t_prune: f64,
     t_attend: f64,
     t_dense: f64,
+    t_sprefill: f64,
     bytes_select: u64,
     bytes_prune: u64,
     bytes_attend: u64,
@@ -1065,6 +1125,14 @@ impl BatchBackend for BatchStepBackend<'_> {
         let mut plans: Vec<PrefetchPlan> = Vec::new();
         let cache = &self.caches[layer];
         let tiered = cache.tier_state().is_some();
+        let ps = cache.cfg.page_size;
+        // Sparse-prefill LPT weight pieces: one shared bound/envelope
+        // pass (≈ window + a page of suffix bookkeeping) per item, plus
+        // the expected visited fraction of each sub-call's context
+        // (documented ¼ — the same scale the decode budget fraction
+        // uses; exact visit counts are data-dependent and unknowable
+        // before the kernel runs).
+        let sp_w = self.cfg.sparse_prefill.unwrap_or_default().window;
         for (i, st) in self.sts.iter_mut().enumerate() {
             if self.errors[i].is_some() {
                 flat_items.extend((0..kvn).map(|_| None));
@@ -1106,7 +1174,15 @@ impl BatchBackend for BatchStepBackend<'_> {
             let cost: usize = subs
                 .iter()
                 .filter(|s| !s.skip)
-                .map(|s| if s.dense { s.n } else { s.budget })
+                .map(|s| {
+                    if s.sprefill {
+                        sp_w + ps + s.n / 4
+                    } else if s.dense {
+                        s.n
+                    } else {
+                        s.budget
+                    }
+                })
                 .sum();
             let sel_base = layer * kvn;
             for (kvh, selector) in st.selectors[sel_base..sel_base + kvn].iter_mut().enumerate() {
@@ -1177,24 +1253,38 @@ impl BatchBackend for BatchStepBackend<'_> {
         // again — the spawn/join cost that used to scale with
         // layers × steps is amortized to zero here.
         //
-        // Prefetch tickets go FIRST: with a tier attached, the planned
-        // non-resident pages start faulting before (and concurrently
-        // with) the attention buckets, so tier I/O overlaps attention on
-        // already-resident pages. At threads == 1 the inline path runs
-        // them sequentially ahead of the buckets — the reference order.
-        // Either way the step's *resident set* ends identical: demand
-        // reads fault whatever prefetch has not finished (the CAS admits
-        // exactly one loader per page), so only the prefetch/demand
-        // split is timing-dependent, never the faulted set.
-        let n_plans = plans.len();
-        self.pool.run(n_plans + cells.len(), 1, |w| {
-            if w < n_plans {
-                for &p in &plans[w].pages {
-                    cache.prefetch_page(p);
-                }
+        // The prefetch ticket goes FIRST: with a tier attached, the
+        // planned non-resident pages start faulting before (and
+        // concurrently with) the attention buckets, so tier I/O overlaps
+        // attention on already-resident pages. At threads == 1 the
+        // inline path runs it sequentially ahead of the buckets — the
+        // reference order. Either way the step's *resident set* ends
+        // identical: demand reads fault whatever prefetch has not
+        // finished (the CAS admits exactly one loader per page), so only
+        // the prefetch/demand split is timing-dependent, never the
+        // faulted set.
+        //
+        // Cross-item fault batching: every item's planned pages fuse
+        // into ONE offset-sorted, deduped batch dispatched as a single
+        // ticket — the backing tier sees one ascending positional sweep
+        // per (step, layer) instead of per-item ticket bursts seeking
+        // independently. (Cross-*layer* batching is impossible: layer
+        // l+1's queries depend on layer l's outputs, so its plans cannot
+        // exist yet.) Per-page CAS semantics are unchanged.
+        self.fault_batch.clear();
+        for plan in &plans {
+            self.fault_batch.extend_from_slice(&plan.pages);
+        }
+        self.fault_batch.sort_unstable();
+        self.fault_batch.dedup();
+        let batch_pages = self.fault_batch.as_slice();
+        let n_tickets = usize::from(!batch_pages.is_empty());
+        self.pool.run(n_tickets + cells.len(), 1, |w| {
+            if w < n_tickets {
+                cache.prefetch_pages(batch_pages);
                 return;
             }
-            let w = w - n_plans;
+            let w = w - n_tickets;
             let mut guard = cells[w].lock().expect("attention worker poisoned");
             let WorkerCell { items, scratch, results } = &mut *guard;
             results.reserve(items.len());
@@ -1240,7 +1330,8 @@ impl BatchBackend for BatchStepBackend<'_> {
             self.stats.t_prune += r.t_prune;
             self.stats.t_attend += r.t_attend;
             self.stats.t_dense += r.t_dense;
-            busy += r.t_select + r.t_prune + r.t_attend + r.t_dense;
+            self.stats.t_sprefill += r.t_sprefill;
+            busy += r.t_select + r.t_prune + r.t_attend + r.t_dense + r.t_sprefill;
             self.stats.est_bytes_select += r.bytes_select;
             self.stats.est_bytes_prune += r.bytes_prune;
             self.stats.est_bytes_attend += r.bytes_attend;
@@ -1276,6 +1367,15 @@ impl BatchBackend for BatchStepBackend<'_> {
             for cc in 0..ncalls {
                 for k in 0..kvn {
                     let Some(&call) = calls_by_flat[i * kvn + k].get(cc) else { continue };
+                    if call.sprefill {
+                        // Sparse-prefill sub-calls feed only the block
+                        // counters — they are not sparse calls, consume
+                        // no labels, and must not skew kept/candidate
+                        // telemetry or the kept histogram.
+                        self.stats.prefill_blocks_skipped += call.sp_skipped as u64;
+                        self.stats.prefill_blocks_total += call.sp_total as u64;
+                        continue;
+                    }
                     self.stats.sparse_calls += 1;
                     self.stats.candidates_sum += call.candidates as u64;
                     self.stats.kept_sum += call.kept as u64;
@@ -1358,6 +1458,7 @@ fn run_attn_item(
         t_prune: 0.0,
         t_attend: 0.0,
         t_dense: 0.0,
+        t_sprefill: 0.0,
         bytes_select: 0,
         bytes_prune: 0,
         bytes_attend: 0,
@@ -1385,11 +1486,66 @@ fn run_attn_item(
         return r;
     }
     let ps = cache.cfg.page_size;
+    // --- bound-guided sparse prefill ----------------------------------
+    // All flagged sub-calls of this (item, kv-head) run as ONE kernel
+    // call sharing a single envelope/bound pass (DESIGN.md §13): the
+    // per-page upper bound is evaluated once over the coordinate
+    // envelope of every active query row, then each query early-stops
+    // independently on the hier top-p test.
+    if subs.iter().any(|s| s.sprefill) {
+        let sp = cfg.sparse_prefill.unwrap_or_default();
+        let mut active = std::mem::take(&mut scratch.sprefill.active);
+        active.clear();
+        active.extend(
+            subs.iter().enumerate().filter(|(_, s)| s.sprefill).map(|(cc, _)| cc),
+        );
+        let t = Instant::now();
+        let sps = crate::attention::prefill::sparse_prefill_causal(
+            cache,
+            seq_cache,
+            kv_head,
+            &qs[kv_head * group * d..],
+            qd,
+            group,
+            start,
+            &active,
+            sp.eps,
+            sp.window,
+            &mut r.out,
+            &mut scratch.sprefill,
+        );
+        let el = t.elapsed();
+        r.t_sprefill += el.as_secs_f64();
+        trace::record_ctx(trace::Stage::SparsePrefill, el);
+        let gated = sps.gated_pages;
+        for (ai, &cc) in active.iter().enumerate() {
+            let vis = &scratch.sprefill.visited[ai * group..(ai + 1) * group];
+            // The group's visited sets are prefixes of one shared page
+            // order, so their union is the longest prefix (max).
+            let vmax = vis.iter().copied().max().unwrap_or(0) as usize;
+            let skipped: u32 = vis.iter().map(|&v| gated as u32 - v).sum();
+            r.bytes_attend +=
+                crate::sim::attn_bytes(subs[cc].n - gated * ps + vmax * ps, d) as u64;
+            r.calls.push(CallOut {
+                cidx: cc,
+                candidates: 0,
+                kept: 0,
+                prune_record: None,
+                probe: None,
+                hier_skipped: 0,
+                hier_total: 0,
+                sprefill: true,
+                sp_skipped: skipped,
+                sp_total: (gated * group) as u32,
+            });
+        }
+        scratch.sprefill.active = active;
+    }
     // Truncated visible-prefix view for mid-chunk sub-calls, built
     // lazily and grown monotonically (sub-calls see increasing n).
     let mut view: Option<SeqCache> = None;
     for (cidx, spec) in subs.iter().enumerate() {
-        if spec.skip {
+        if spec.skip || spec.sprefill {
             continue;
         }
         let n = spec.n;
@@ -1443,6 +1599,9 @@ fn run_attn_item(
             probe: None,
             hier_skipped: 0,
             hier_total: 0,
+            sprefill: false,
+            sp_skipped: 0,
+            sp_total: 0,
         };
         // --- stage 1: Token Selector (black box, conservative) --------
         // Candidates land in the arena's reused buffer (taken out for
@@ -1821,25 +1980,25 @@ mod tests {
     }
 
     #[test]
-    fn prefill_steps_counted_separately_from_decode_steps() {
-        // prefill_steps counts prompt tokens pushed through the forward
+    fn prefill_tokens_counted_separately_from_decode_steps() {
+        // prefill_tokens counts prompt tokens pushed through the forward
         // pass. Single-layer fast path: only the final prompt token.
         let mut e = engine(SparseConfig::dense());
         let mut r = Rng::new(6);
         let g = gen_niah(&mut r, V, 128);
         let _ = e.prefill(0, &g.prompt).unwrap();
         assert_eq!(e.stats.steps, 0, "prefill must not count as decode");
-        assert_eq!(e.stats.prefill_steps, 1);
+        assert_eq!(e.stats.prefill_tokens, 1);
         assert_eq!(e.stats.prefill_chunks, 1);
         let _ = e.decode(0, g.prompt[0]).unwrap();
         assert_eq!(e.stats.steps, 1);
-        assert_eq!(e.stats.prefill_steps, 1);
+        assert_eq!(e.stats.prefill_tokens, 1);
         // Multi-layer path: every prompt token, whatever the chunking.
         let cfg = crate::model::testutil::tiny_config();
         let m = Arc::new(crate::model::testutil::random_model(&cfg, 2));
         let mut e2 = Engine::new(m, SparseConfig::dense(), 1024);
         let _ = e2.prefill(0, &[1, 2, 3, 4, 5]).unwrap();
-        assert_eq!(e2.stats.prefill_steps, 5);
+        assert_eq!(e2.stats.prefill_tokens, 5);
         assert_eq!(e2.stats.steps, 0);
         assert!(e2.stats.prefill_chunks >= 1);
         // Mixed-step timing attribution: a pure-decode step is all decode.
@@ -1847,6 +2006,50 @@ mod tests {
         let t = e2.last_step_timing();
         assert!(t.total > 0.0);
         assert!((t.decode - t.total).abs() < 1e-12 && t.prefill == 0.0);
+    }
+
+    #[test]
+    fn sparse_prefill_answers_niah_and_skips_blocks() {
+        // Sparse prefill on a dense config: the single-layer retrieval
+        // model routes each prompt's final token through the
+        // bound-guided kernel (AllButLast), which must still find the
+        // needle (≥ 1 − eps mass kept) while skipping most gated pages.
+        let mut cfg = SparseConfig::dense();
+        cfg.sparse_prefill = Some(crate::coordinator::SparsePrefillCfg::default());
+        let mut e = engine(cfg);
+        let mut r = Rng::new(21);
+        let mut correct = 0;
+        for i in 0..8 {
+            let g = gen_niah(&mut r, V, 1024);
+            let logits = e.prefill(i, &g.prompt).unwrap();
+            if greedy(&logits) == g.answer {
+                correct += 1;
+            }
+            e.release(i);
+        }
+        assert!(correct >= 7, "sparse-prefill NIAH accuracy {correct}/8");
+        assert!(e.stats.prefill_blocks_total > 0, "gated pages must be considered");
+        assert!(
+            e.stats.prefill_blocks_skipped > 0,
+            "retrieval prompts must skip some gated pages"
+        );
+        assert!(e.stats.t_sprefill > 0.0);
+        // Sprefill sub-calls are not sparse calls: no labels, no
+        // kept/candidate telemetry.
+        assert_eq!(e.stats.sparse_calls, 0);
+
+        // Governor force-enable: config off, directive on — the ladder's
+        // level ≥ 2 override must activate the path the same way.
+        let mut e2 = engine(SparseConfig::dense());
+        e2.apply_directive(BudgetDirective {
+            sparse_prefill_override: Some(true),
+            ..BudgetDirective::NEUTRAL
+        });
+        let mut r = Rng::new(22);
+        let g = gen_niah(&mut r, V, 1024);
+        let logits = e2.prefill(0, &g.prompt).unwrap();
+        assert_eq!(greedy(&logits), g.answer);
+        assert!(e2.stats.prefill_blocks_total > 0, "override must enable the path");
     }
 
     #[test]

@@ -68,6 +68,11 @@ pub struct ServingReport {
     /// ran): candidate page runs skipped unscored / seen.
     pub hier_pages_skipped: u64,
     pub hier_pages_total: u64,
+    /// Bound-guided sparse-prefill accounting (0/0 unless the
+    /// `--sparse-prefill` path ran): gated pages skipped / considered
+    /// across (prefill query × group head) rows.
+    pub prefill_blocks_skipped: u64,
+    pub prefill_blocks_total: u64,
     /// Active compute-kernel backend ("scalar", "avx2", "neon"; empty
     /// when the report was built without one resolved).
     pub kernel_backend: String,
@@ -166,6 +171,16 @@ impl ServingReport {
         }
     }
 
+    /// Fraction of gated pages the sparse-prefill kernel skipped (0 when
+    /// the path never ran).
+    pub fn prefill_blocks_skip_frac(&self) -> f64 {
+        if self.prefill_blocks_total == 0 {
+            0.0
+        } else {
+            self.prefill_blocks_skipped as f64 / self.prefill_blocks_total as f64
+        }
+    }
+
     /// Fraction of page faults served by prefetch tickets rather than
     /// demand reads inside the attention kernels (0 when nothing faulted,
     /// i.e. the run was fully resident or the working set fit the cap).
@@ -208,6 +223,11 @@ impl ServingReport {
             ("hier_pages_skipped", Json::Num(self.hier_pages_skipped as f64)),
             ("hier_pages_total", Json::Num(self.hier_pages_total as f64)),
             ("hier_skip_frac", Json::Num(self.hier_skip_frac())),
+            // Sparse-prefill keys are unconditional too: 0/0/0.0 when
+            // the path never ran.
+            ("prefill_blocks_skipped", Json::Num(self.prefill_blocks_skipped as f64)),
+            ("prefill_blocks_total", Json::Num(self.prefill_blocks_total as f64)),
+            ("prefill_blocks_skip_frac", Json::Num(self.prefill_blocks_skip_frac())),
             ("kernel_backend", Json::Str(self.kernel_backend.clone())),
             // Offload keys are unconditional too: all-zero (and
             // resident_frac as populated by the scheduler — 1.0 for a
@@ -354,6 +374,10 @@ mod tests {
         // Hier fields are unconditional: 0 when the mode never ran.
         assert_eq!(j.get_f64("hier_skip_frac"), Some(0.0));
         assert_eq!(j.get_usize("hier_pages_total"), Some(0));
+        // Sparse-prefill fields are unconditional: 0 when the path
+        // never ran.
+        assert_eq!(j.get_f64("prefill_blocks_skip_frac"), Some(0.0));
+        assert_eq!(j.get_usize("prefill_blocks_total"), Some(0));
         // Kernel backend key is always present (empty when unresolved).
         assert_eq!(j.get_str("kernel_backend"), Some(""));
         // Offload keys are always present: zero for untiered runs.

@@ -82,6 +82,35 @@ impl AttnVariant {
     }
 }
 
+/// Sparse *prefill* knobs (DESIGN.md §13): chunked-prefill queries skip
+/// sealed pages whose envelope bound cannot carry an `eps` fraction of
+/// their softmax mass, always attending exactly to the last `window`
+/// tokens (plus the chunk itself and the unsealed tail). Off by
+/// default — the dense context walk stays the bit-exact reference.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SparsePrefillCfg {
+    /// Top-p slack: each query keeps ≥ 1 − eps of its dense softmax
+    /// mass (clamped to [0, 0.5] by the kernel).
+    pub eps: f32,
+    /// Always-dense local window before the chunk (≥ 1: the self token
+    /// is always scored exactly).
+    pub window: usize,
+}
+
+impl Default for SparsePrefillCfg {
+    fn default() -> Self {
+        SparsePrefillCfg { eps: 0.02, window: 64 }
+    }
+}
+
+/// `TWILIGHT_SPARSE_PREFILL=1` opts the constructors into sparse
+/// prefill (the CLI flag / config file / governor override also work).
+fn sparse_prefill_from_env() -> Option<SparsePrefillCfg> {
+    std::env::var("TWILIGHT_SPARSE_PREFILL")
+        .is_ok_and(|v| v == "1" || v == "true")
+        .then(SparsePrefillCfg::default)
+}
+
 /// Full sparse-attention pipeline configuration for the engine.
 #[derive(Clone, Debug)]
 pub struct SparseConfig {
@@ -96,6 +125,9 @@ pub struct SparseConfig {
     pub skip_layers: usize,
     /// Contexts shorter than this stay dense.
     pub dense_below: usize,
+    /// Bound-guided page skipping for prefill chunk queries; `None`
+    /// keeps prefill dense (bit-exact reference).
+    pub sparse_prefill: Option<SparsePrefillCfg>,
     /// Kernel packing variant.
     pub attn: AttnVariant,
 }
@@ -109,6 +141,7 @@ impl SparseConfig {
             twilight: None,
             skip_layers: usize::MAX,
             dense_below: 0,
+            sparse_prefill: sparse_prefill_from_env(),
             attn: AttnVariant::GroupVarlen,
         }
     }
@@ -127,6 +160,7 @@ impl SparseConfig {
             twilight: Some(PrunerConfig { p, hier_pages, ..Default::default() }),
             skip_layers: 2,
             dense_below: 64,
+            sparse_prefill: sparse_prefill_from_env(),
             attn: AttnVariant::GroupVarlen,
         }
     }
@@ -139,6 +173,7 @@ impl SparseConfig {
             twilight: None,
             skip_layers: 2,
             dense_below: 64,
+            sparse_prefill: sparse_prefill_from_env(),
             attn: AttnVariant::GroupVarlen,
         }
     }
@@ -160,21 +195,34 @@ impl SparseConfig {
                 Some(PrunerConfig { p, min_keep, hier_pages, hier_eps, ..base })
             }
         };
+        let sparse_prefill = match j.get("sparse_prefill") {
+            Some(Json::Bool(false)) => None,
+            None => sparse_prefill_from_env(),
+            Some(sp) => {
+                let base = SparsePrefillCfg::default();
+                Some(SparsePrefillCfg {
+                    eps: sp.get_f64("eps").unwrap_or(base.eps as f64) as f32,
+                    window: sp.get_usize("window").unwrap_or(base.window),
+                })
+            }
+        };
         Ok(SparseConfig {
             selector,
             budget,
             twilight,
             skip_layers: j.get_usize("skip_layers").unwrap_or(2),
             dense_below: j.get_usize("dense_below").unwrap_or(64),
+            sparse_prefill,
             attn: AttnVariant::parse(j.get_str("attn").unwrap_or("group"))
                 .ok_or("bad attn variant")?,
         })
     }
 
     /// Short human-readable label for reports ("quest+twi(p=0.95)",
-    /// "+hier" appended when the page pre-prune is on).
+    /// "+hier" appended when the page pre-prune is on, "+sp" when
+    /// sparse prefill is on).
     pub fn label(&self) -> String {
-        match &self.twilight {
+        let base = match &self.twilight {
             Some(t) if t.hier_pages => {
                 format!("{}+twi(p={})+hier", self.selector.name(), t.p)
             }
@@ -183,6 +231,11 @@ impl SparseConfig {
                 BudgetSpec::Fixed(b) => format!("{}(B={b})", self.selector.name()),
                 BudgetSpec::Fraction(f) => format!("{}(B={f}N)", self.selector.name()),
             },
+        };
+        if self.sparse_prefill.is_some() {
+            format!("{base}+sp")
+        } else {
+            base
         }
     }
 }
@@ -258,5 +311,26 @@ mod tests {
         let c = SparseConfig::from_json(&j).unwrap();
         assert!(c.twilight.is_none());
         assert_eq!(c.label(), "ds(B=512)");
+    }
+
+    #[test]
+    fn sparse_prefill_via_json_and_label() {
+        let j = Json::parse(
+            r#"{"selector":"quest","budget":"0.25f","twilight":{"p":0.9},
+                "sparse_prefill":{"eps":0.05,"window":128}}"#,
+        )
+        .unwrap();
+        let c = SparseConfig::from_json(&j).unwrap();
+        let sp = c.sparse_prefill.unwrap();
+        assert!((sp.eps - 0.05).abs() < 1e-6);
+        assert_eq!(sp.window, 128);
+        assert_eq!(c.label(), "quest+twi(p=0.9)+sp");
+
+        // `true` opts in with defaults; `false` forces it off.
+        let j = Json::parse(r#"{"selector":"full","budget":"1f","sparse_prefill":true}"#).unwrap();
+        let c = SparseConfig::from_json(&j).unwrap();
+        assert_eq!(c.sparse_prefill, Some(SparsePrefillCfg::default()));
+        let j = Json::parse(r#"{"selector":"full","budget":"1f","sparse_prefill":false}"#).unwrap();
+        assert!(SparseConfig::from_json(&j).unwrap().sparse_prefill.is_none());
     }
 }

@@ -96,6 +96,7 @@ struct SchedObs {
     prefilling: &'static Gauge,
     free_pages: &'static Gauge,
     hier_skip: &'static Gauge,
+    sprefill_skip: &'static Gauge,
     probe_recall: &'static Gauge,
     p_scale: &'static Gauge,
     budget_scale: &'static Gauge,
@@ -111,7 +112,7 @@ struct SchedObs {
     last_kept: u64,
     last_candidates: u64,
     last_sparse_calls: u64,
-    last_prefill_steps: u64,
+    last_prefill_tokens: u64,
     /// Cumulative local event counts (bumped by `requeue_preempted` /
     /// `reject`) and their previous-step baselines.
     preempt_events: u64,
@@ -142,6 +143,10 @@ impl SchedObs {
                 "twilight_hier_skip_frac",
                 "fraction of candidate pages skipped by the hier pre-prune",
             ),
+            sprefill_skip: gauge(
+                "twilight_prefill_block_skip_frac",
+                "fraction of gated pages skipped by bound-guided sparse prefill",
+            ),
             probe_recall: gauge("twilight_probe_recall", "dense recall-probe EMA"),
             p_scale: gauge("twilight_p_scale", "governor top-p multiplier in force"),
             budget_scale: gauge("twilight_budget_scale", "governor stage-1 budget multiplier"),
@@ -160,7 +165,7 @@ impl SchedObs {
             last_kept: 0,
             last_candidates: 0,
             last_sparse_calls: 0,
-            last_prefill_steps: 0,
+            last_prefill_tokens: 0,
             preempt_events: 0,
             reject_events: 0,
             last_preempt: 0,
@@ -478,9 +483,9 @@ impl Scheduler {
         // Counters (deltas against the previous step's baselines).
         self.obs.steps.inc();
         self.obs.tokens.add(produced as u64);
-        let prefill_delta = stats.prefill_steps - self.obs.last_prefill_steps;
+        let prefill_delta = stats.prefill_tokens - self.obs.last_prefill_tokens;
         self.obs.prefill_tokens.add(prefill_delta);
-        self.obs.last_prefill_steps = stats.prefill_steps;
+        self.obs.last_prefill_tokens = stats.prefill_tokens;
         let preempt_delta = self.obs.preempt_events - self.obs.last_preempt;
         self.obs.preempt.add(preempt_delta);
         self.obs.last_preempt = self.obs.preempt_events;
@@ -493,6 +498,11 @@ impl Scheduler {
         self.obs.prefilling.set(self.prefilling.len() as f64);
         self.obs.free_pages.set(self.engine.free_pages() as f64);
         self.obs.hier_skip.set(self.engine.signals.hier_skip_frac());
+        self.obs.sprefill_skip.set(if stats.prefill_blocks_total == 0 {
+            0.0
+        } else {
+            stats.prefill_blocks_skipped as f64 / stats.prefill_blocks_total as f64
+        });
         self.obs.probe_recall.set(self.engine.signals.probe_recall());
         self.obs.p_scale.set(directive.p_scale as f64);
         self.obs.budget_scale.set(directive.budget_scale as f64);
@@ -655,6 +665,8 @@ impl Scheduler {
             governor,
             hier_pages_skipped: self.engine.signals.hier_pages_skipped(),
             hier_pages_total: self.engine.signals.hier_pages_total(),
+            prefill_blocks_skipped: self.engine.stats.prefill_blocks_skipped,
+            prefill_blocks_total: self.engine.stats.prefill_blocks_total,
             kernel_backend: crate::tensor::kernels::active_name().to_string(),
             offload_faults: self.engine.stats.offload_faults,
             offload_prefetched: self.engine.stats.offload_prefetched,
@@ -690,9 +702,12 @@ impl Scheduler {
             ("prefill_chunk", Json::Num(self.engine.prefill_chunk() as f64)),
             ("kernel_backend", Json::Str(crate::tensor::kernels::active_name().to_string())),
             ("steps", Json::Num(s.steps as f64)),
-            ("prefill_steps", Json::Num(s.prefill_steps as f64)),
+            ("prefill_tokens", Json::Num(s.prefill_tokens as f64)),
             ("prefill_chunks", Json::Num(s.prefill_chunks as f64)),
             ("t_prefill_s", Json::Num(s.t_prefill)),
+            ("t_sprefill_s", Json::Num(s.t_sprefill)),
+            ("prefill_blocks_skipped", Json::Num(s.prefill_blocks_skipped as f64)),
+            ("prefill_blocks_total", Json::Num(s.prefill_blocks_total as f64)),
             ("avg_candidates", Json::Num(s.avg_candidates())),
             ("avg_kept", Json::Num(s.avg_kept())),
             ("prune_ratio", Json::Num(s.prune_ratio())),

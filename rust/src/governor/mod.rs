@@ -55,6 +55,13 @@ pub struct BudgetDirective {
     /// force it off for accuracy-critical phases. `None` leaves the
     /// configured default in force.
     pub hier_pages_override: Option<bool>,
+    /// Toggles the bound-guided sparse *prefill* path
+    /// (`SparseConfig::sparse_prefill`, DESIGN.md §13) when set: the
+    /// pressure ladder forces it on under load so long-prompt chunks
+    /// stop paying the dense O(n²) context walk (trading ≤ eps of each
+    /// query's softmax mass), and a policy can force it off for
+    /// accuracy-critical phases. `None` leaves the configured default.
+    pub sparse_prefill_override: Option<bool>,
     /// Pressure ladder rung (0 = none); the scheduler throttles
     /// admission from level 2 and freezes it at level 3.
     pub degrade_level: u8,
@@ -66,6 +73,7 @@ impl BudgetDirective {
         budget_scale: 1.0,
         dense_below_override: None,
         hier_pages_override: None,
+        sparse_prefill_override: None,
         degrade_level: 0,
     };
 
@@ -309,6 +317,13 @@ impl Governor {
                     None => Json::Null,
                 },
             ),
+            (
+                "sparse_prefill_override",
+                match self.directive.sparse_prefill_override {
+                    Some(v) => Json::Bool(v),
+                    None => Json::Null,
+                },
+            ),
             ("slo_tpot_ms", Json::Num(self.slo.cfg.target_tpot_s * 1e3)),
             ("tpot_ema_ms", Json::Num(self.slo.tpot_ema() * 1e3)),
             ("slo_violation_rate", Json::Num(self.slo.violation_rate())),
@@ -336,6 +351,7 @@ mod tests {
             budget_scale: 0.0,
             dense_below_override: Some(1 << 20),
             hier_pages_override: Some(true),
+            sparse_prefill_override: Some(true),
             degrade_level: 99,
         }
         .clamped();

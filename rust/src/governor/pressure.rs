@@ -9,8 +9,9 @@
 //! |-------|-------------------|-----------------------------------------|
 //! | 0     | comfortable       | none                                    |
 //! | 1     | `< tighten_below` | tighten p (prune harder, steps faster)  |
-//! | 2     | `< shrink_below`  | also shrink the stage-1 budget B0 and   |
-//! |       |                   | halve the prefill chunk span            |
+//! | 2     | `< shrink_below`  | also shrink the stage-1 budget B0,      |
+//! |       |                   | halve the prefill chunk span, and force |
+//! |       |                   | the sparse prefill path on              |
 //! | 3     | `< dense_guard`   | also raise `dense_below` so short       |
 //! |       |                   | contexts skip selection entirely,       |
 //! |       |                   | quarter the prefill chunk, and the      |
@@ -83,6 +84,10 @@ impl PressureConfig {
         }
         if level >= 2 {
             d.budget_scale = d.budget_scale.min(self.budget_scale);
+            // Long-prompt chunks stop paying the dense O(n²) context
+            // walk: sparse prefill trades ≤ eps mass for page skipping
+            // — cheaper to give up than admission (level 3's freeze).
+            d.sparse_prefill_override = Some(true);
         }
         if level >= 3 {
             let floor = d.dense_below_override.unwrap_or(0).max(self.dense_below);
@@ -131,6 +136,11 @@ mod tests {
                 assert_eq!(d.dense_below_override, Some(c.dense_below));
             } else {
                 assert_eq!(d.dense_below_override, None);
+            }
+            if level >= 2 {
+                assert_eq!(d.sparse_prefill_override, Some(true));
+            } else {
+                assert_eq!(d.sparse_prefill_override, None);
             }
         }
     }

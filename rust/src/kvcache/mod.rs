@@ -356,6 +356,21 @@ impl PagedKvCache {
         }
     }
 
+    /// Batched prefetch entry point: fault each page of `pages` in slice
+    /// order. The engine merges every item's per-step plan into one
+    /// offset-sorted, deduplicated batch per layer and dispatches it as
+    /// a single ticket, so a positional backing tier (`FileTier`) sees
+    /// one ascending sweep of reads per (step, layer) instead of
+    /// per-item ticket bursts — sequential I/O the OS readahead can
+    /// coalesce. Per-page claim semantics are unchanged (the CAS admits
+    /// exactly one loader per page), so the faulted *set* is identical
+    /// to per-page dispatch; only the issue order differs.
+    pub fn prefetch_pages(&self, pages: &[PageId]) {
+        for &p in pages {
+            self.prefetch_page(p);
+        }
+    }
+
     /// Quest min/max metadata of (page, head): `(&min[d], &max[d])`.
     #[inline]
     pub fn minmax_at(&self, page: PageId, head: usize) -> (&[f32], &[f32]) {
@@ -685,6 +700,54 @@ impl PagedKvCache {
         for &(_, p) in &plan.entries {
             plan.pages.push(p);
         }
+    }
+
+    /// Span-envelope upper logit bound of one *sealed* page for the
+    /// sparse-prefill path (DESIGN.md §13): for any query row `q` with
+    /// `qmin[i] ≤ q[i] ≤ qmax[i]` coordinate-wise, every token `t` of
+    /// the page satisfies
+    ///
+    /// `q · K[t]  ≤  Σᵢ max(qmin·mn, qmin·mx, qmax·mn, qmax·mx)ᵢ
+    ///               + slack · qabs_sum`
+    ///
+    /// — the interval-arithmetic generalization of the hier bound
+    /// (`pruner::hier_prune_group` proves the single-query form): each
+    /// coordinate's contribution `qᵢ·Kᵢ` is maximized over the
+    /// rectangle `[qmin, qmax]ᵢ × [mn, mx]ᵢ` at a corner, and `slack`
+    /// (the same Fp16/int split as the hier path) covers the gap
+    /// between the metadata and the true rows with `Σ|q| ≤ qabs_sum`.
+    /// One call bounds every query of a chunk span at once, which is
+    /// what keeps the skip decision O(pages·d) instead of
+    /// O(span·pages·d). Unscaled — callers apply `attention::scale`.
+    pub fn envelope_page_bound(
+        &self,
+        page: PageId,
+        head: usize,
+        qmin: &[f32],
+        qmax: &[f32],
+        qabs_sum: f32,
+    ) -> f32 {
+        let d = self.cfg.head_dim;
+        debug_assert_eq!(qmin.len(), d);
+        debug_assert_eq!(qmax.len(), d);
+        let (mn, mx) = self.minmax_at(page, head);
+        let block = self.mirror_at(page, head).expect("sealed page missing mirror");
+        let slack = if block.bits == QuantBits::Fp16 {
+            let mut maxabs = 0.0f32;
+            for i in 0..d {
+                maxabs = maxabs.max(mn[i].abs()).max(mx[i].abs());
+            }
+            maxabs * (1.0 / 1024.0)
+        } else {
+            quant::max_error(block)
+        };
+        let mut ub = 0.0f32;
+        for i in 0..d {
+            let lo = (qmin[i] * mn[i]).max(qmin[i] * mx[i]);
+            let hi = (qmax[i] * mn[i]).max(qmax[i] * mx[i]);
+            ub += lo.max(hi);
+        }
+        ub + slack * qabs_sum
     }
 }
 

@@ -26,9 +26,15 @@
 //!   read; racers spin on `LOADING`). The hier-pages bound (PR 5) is the
 //!   *prefetch oracle*: before the attention phase the engine ranks a
 //!   sequence's non-resident sealed pages by their Quest-plus-slack logit
-//!   bound and fault tickets for pages that can still contribute top-p
-//!   mass run on the worker pool *ahead of* the attention tickets, so
-//!   fault I/O overlaps attention on already-resident pages.
+//!   bound into a [`PrefetchPlan`], then fuses every item's plan for the
+//!   layer into **one sorted, deduped page batch** served by a single
+//!   prefetch ticket scheduled *ahead of* the attention tickets: one
+//!   ascending positional sweep over the tier (sequential I/O on
+//!   [`FileTier`], no duplicate faults for pages shared across plans)
+//!   that overlaps attention on already-resident pages. Batching cannot
+//!   cross *layers* — layer `l+1`'s queries, and so its bounds, depend on
+//!   layer `l`'s outputs. Per-page CAS semantics are unchanged, so the
+//!   faulted set (and the fault count) is identical to per-plan tickets.
 //! * **Victims.** LRU over a deterministic clock (the engine step
 //!   ordinal, never wall time) with page-id tie-breaks; the governor's
 //!   pressure ladder scales the effective residency cap down. Both

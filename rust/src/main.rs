@@ -22,6 +22,15 @@
 //! (default 0.02; kept mass stays ≥ p − hier_eps). Skipped-page counts
 //! appear in `stats` / serving reports.
 //!
+//! `--sparse-prefill` (also `TWILIGHT_SPARSE_PREFILL=1`) enables
+//! bound-guided page skipping for the chunked context phase: prefill
+//! chunk queries visit sealed pages in descending envelope-bound order
+//! and early-stop once the rest provably carries < `--prefill-eps`
+//! (default 0.02) of their softmax mass; the last `--prefill-window`
+//! (default 64) tokens always attend exactly. Either tuning flag
+//! implies the mode. Skipped-block counts appear in `stats` / serving
+//! reports as `prefill_blocks_*`.
+//!
 //! `--governor` attaches the adaptive budget governor (DESIGN.md §8):
 //! it closes the loop on p / B0 against prune-mass telemetry, the
 //! `--slo-tpot-ms` latency target, and KV page-pool pressure.
@@ -101,6 +110,22 @@ fn sparse_config_from_args(a: &Args) -> SparseConfig {
     cfg.skip_layers =
         a.usize_or("skip-layers", if a.str_or("model", "retrieval") == "retrieval" { 0 } else { 2 });
     cfg.dense_below = a.usize_or("dense-below", 64);
+    // Bound-guided sparse prefill (also TWILIGHT_SPARSE_PREFILL=1, which
+    // the SparseConfig constructors already honor). `--prefill-eps` /
+    // `--prefill-window` imply the flag and tune the kernel.
+    if a.flag("sparse-prefill") {
+        cfg.sparse_prefill.get_or_insert_with(Default::default);
+    }
+    if let Some(e) = a.get("prefill-eps") {
+        if let Ok(eps) = e.parse::<f32>() {
+            cfg.sparse_prefill.get_or_insert_with(Default::default).eps = eps.clamp(0.0, 0.5);
+        }
+    }
+    if let Some(w) = a.get("prefill-window") {
+        if let Ok(win) = w.parse::<usize>() {
+            cfg.sparse_prefill.get_or_insert_with(Default::default).window = win.max(1);
+        }
+    }
     cfg
 }
 
@@ -335,7 +360,7 @@ fn main() {
     let cmd = all[0].clone();
     let a = Args::parse(
         all.into_iter().skip(1),
-        &["no-twilight", "help", "hier-pages", "trace", "log-json"],
+        &["no-twilight", "help", "hier-pages", "sparse-prefill", "trace", "log-json"],
     );
     logging::set_level(logging::level_from_str(&a.str_or("log", "info")));
     if a.flag("log-json") || std::env::var("TWILIGHT_LOG_JSON").is_ok_and(|v| v == "1") {

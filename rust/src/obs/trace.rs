@@ -64,10 +64,14 @@ pub enum Stage {
     /// slow tier (tiered offload; demand reads and prefetch tickets
     /// both record here).
     PageFault = 11,
+    /// Sparse-prefill attention: the bound-guided page-skipping kernel
+    /// over a chunk item's query span (`attention::prefill`,
+    /// DESIGN.md §13). Reconciles against `EngineStats::t_sprefill`.
+    SparsePrefill = 12,
 }
 
 /// Number of [`Stage`] variants (array-indexing helper).
-pub const N_STAGES: usize = 12;
+pub const N_STAGES: usize = 13;
 
 impl Stage {
     pub const ALL: [Stage; N_STAGES] = [
@@ -83,6 +87,7 @@ impl Stage {
         Stage::PoolRound,
         Stage::Step,
         Stage::PageFault,
+        Stage::SparsePrefill,
     ];
 
     /// Stable lowercase name (Chrome event name / Prometheus-ish label).
@@ -100,6 +105,7 @@ impl Stage {
             Stage::PoolRound => "pool_round",
             Stage::Step => "step",
             Stage::PageFault => "page_fault",
+            Stage::SparsePrefill => "sparse_prefill",
         }
     }
 

@@ -143,6 +143,8 @@ pub struct AttnScratch {
     pub obs_w: Vec<f32>,
     /// Hierarchical page pre-prune state.
     hier: HierScratch,
+    /// Bound-guided sparse-prefill state (`attention::prefill`).
+    pub sprefill: crate::attention::prefill::SparsePrefillScratch,
 }
 
 /// Historical name of the arena (pre-dating the attention/selector

@@ -10,13 +10,17 @@
 //!    step;
 //! 3. the scheduler's chunked admission completes long prompts across
 //!    steps, and prompt-size-aware admission rejects prompts the pool
-//!    can never hold (counted in the serving report).
+//!    can never hold (counted in the serving report);
+//! 4. bound-guided sparse prefill (`--sparse-prefill`) is sound: off it
+//!    never runs, at eps=0 it visits everything and matches the dense
+//!    kernel, at working eps the logit drift stays mass-bounded, and its
+//!    skip telemetry is thread- and span-invariant where defined.
 
 use std::sync::Arc;
 use twilight::coordinator::engine::{DecodeBatch, Engine};
 use twilight::coordinator::request::Request;
 use twilight::coordinator::scheduler::{Scheduler, SchedulerConfig};
-use twilight::coordinator::SparseConfig;
+use twilight::coordinator::{SparseConfig, SparsePrefillCfg};
 use twilight::model::{Model, ModelConfig};
 use twilight::selector::SelectorKind;
 use twilight::util::rng::Rng;
@@ -94,7 +98,12 @@ fn run_spans(
 fn chunked_prefill_bit_exact_across_spans_dense() {
     let model = deep_model(1);
     let prompt = random_prompt(2, 100, 32);
-    let cfg = SparseConfig::dense();
+    let mut cfg = SparseConfig::dense();
+    // Bound-guided sparse prefill amortizes one envelope over the whole
+    // chunk span, so its output is intentionally span-*sensitive*; the
+    // invariance batteries pin the dense reference regardless of the
+    // TWILIGHT_SPARSE_PREFILL env default.
+    cfg.sparse_prefill = None;
     let (reference, ..) = run_spans(&model, &cfg, &prompt, 1, 1);
     for threads in [1usize, 4] {
         for span in [1usize, 7, 16, 64, 1000] {
@@ -119,6 +128,7 @@ fn chunked_prefill_bit_exact_across_spans_sparse() {
     let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
     cfg.skip_layers = 0;
     cfg.dense_below = 8;
+    cfg.sparse_prefill = None; // span-invariance battery: see dense test
     let (reference, telemetry) = run_spans(&model, &cfg, &prompt, 1, 1);
     assert!(telemetry.sparse_calls > 0, "the battery must exercise the pruned path");
     assert!(telemetry.probes > 0, "the battery must exercise the recall probe");
@@ -149,6 +159,7 @@ fn chunked_prefill_bit_exact_with_stateful_selector() {
     let mut cfg = SparseConfig::twilight(SelectorKind::SnapKv, 0.9);
     cfg.skip_layers = 0;
     cfg.dense_below = 8;
+    cfg.sparse_prefill = None; // span-invariance battery: see dense test
     let (reference, ..) = run_spans(&model, &cfg, &prompt, 1, 1);
     for threads in [1usize, 4] {
         for span in [1usize, 16, 33] {
@@ -173,6 +184,7 @@ fn mixed_step_leaves_decode_logits_unchanged() {
     let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
     cfg.skip_layers = 0;
     cfg.dense_below = 8;
+    cfg.sparse_prefill = None; // span-invariance battery: see dense test
     let mk = |threads: usize| {
         let mut e = Engine::new(model.clone(), cfg.clone(), 4096);
         e.set_threads(threads);
@@ -209,6 +221,113 @@ fn mixed_step_leaves_decode_logits_unchanged() {
         solo.set_prefill_chunk(64);
         let want = solo.prefill(2, &p2).unwrap();
         assert_eq!(tail[0], want, "interleaved chunks diverged from solo prefill");
+    }
+}
+
+/// `run_spans` plus the sparse-prefill skip counters.
+fn run_sprefill(
+    model: &Arc<Model>,
+    cfg: &SparseConfig,
+    prompt: &[u32],
+    span: usize,
+    threads: usize,
+) -> (Vec<Vec<f32>>, (u64, u64)) {
+    let mut e = Engine::new(model.clone(), cfg.clone(), 4096);
+    e.set_threads(threads);
+    e.set_prefill_chunk(span);
+    let mut all = vec![e.prefill(0, prompt).unwrap()];
+    for _ in 0..3 {
+        all.push(e.decode(0, prompt[0]).unwrap());
+    }
+    (all, (e.stats.prefill_blocks_skipped, e.stats.prefill_blocks_total))
+}
+
+#[test]
+fn sparse_prefill_eps_zero_matches_dense_reference() {
+    // eps = 0 makes the early-stop test `rem*(1-eps) <= eps*ssum`
+    // unsatisfiable while any suffix mass remains, so every gated page is
+    // visited: the streaming-softmax path must then agree with the dense
+    // kernel to accumulation-order rounding, and skip nothing. With the
+    // flag off the path must not even be entered (counters stay zero).
+    let model = deep_model(17);
+    let prompt = random_prompt(18, 200, 32);
+    let mut cfg = SparseConfig::dense();
+    cfg.sparse_prefill = None;
+    let (reference, (off_skipped, off_total)) = run_sprefill(&model, &cfg, &prompt, 64, 1);
+    assert_eq!((off_skipped, off_total), (0, 0), "flag off must not touch the counters");
+    cfg.sparse_prefill = Some(SparsePrefillCfg { eps: 0.0, window: 1 });
+    let (got, (skipped, total)) = run_sprefill(&model, &cfg, &prompt, 64, 1);
+    assert!(total > 0, "the deep-model prompt must gate pages");
+    assert_eq!(skipped, 0, "eps=0 must visit every gated page");
+    assert_eq!(reference.len(), got.len());
+    for (r, g) in reference.iter().zip(&got) {
+        for (a, b) in r.iter().zip(g) {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "eps=0 sparse prefill drifted from dense: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sparse_prefill_keeps_mass_within_eps_of_dense() {
+    // With a working eps the per-query kept softmax mass is >= 1-eps of
+    // the dense total, which bounds the attention-output perturbation;
+    // witnessed end-to-end through two layers and the unembed.
+    let model = deep_model(19);
+    let prompt = random_prompt(20, 256, 32);
+    let mut cfg = SparseConfig::dense();
+    cfg.sparse_prefill = None;
+    let (reference, ..) = run_sprefill(&model, &cfg, &prompt, 64, 4);
+    cfg.sparse_prefill = Some(SparsePrefillCfg { eps: 0.02, window: 16 });
+    let (got, (_, total)) = run_sprefill(&model, &cfg, &prompt, 64, 4);
+    assert!(total > 0, "sparse prefill must have run");
+    let mut worst = 0.0f32;
+    for (r, g) in reference.iter().zip(&got) {
+        for (a, b) in r.iter().zip(g) {
+            worst = worst.max((a - b).abs());
+        }
+    }
+    assert!(worst < 0.25, "eps=0.02 logit drift too large: {worst}");
+}
+
+#[test]
+fn sparse_prefill_skip_telemetry_is_thread_and_span_invariant() {
+    // On the single-layer retrieval model only the final prompt token
+    // routes through attend, so the sparse-prefill call sees the same
+    // lone query whatever the chunk span or worker count: logits, the
+    // retrieved answer, and the skip counters must all be identical —
+    // and the peaked NIAH cache must actually skip pages.
+    let model = Arc::new(twilight::model::retrieval::build_retrieval_model(V, 8192));
+    let mut r = Rng::new(23);
+    let g = gen_niah(&mut r, V, 1024);
+    let mut cfg = SparseConfig::dense();
+    cfg.sparse_prefill = Some(SparsePrefillCfg::default());
+    let mut run = |span: usize, threads: usize| {
+        let mut e = Engine::new(model.clone(), cfg.clone(), 1 << 13);
+        e.set_threads(threads);
+        e.set_prefill_chunk(span);
+        let logits = e.prefill(0, &g.prompt).unwrap();
+        (logits, (e.stats.prefill_blocks_skipped, e.stats.prefill_blocks_total))
+    };
+    let (ref_logits, ref_counters) = run(64, 1);
+    assert!(ref_counters.1 > 0, "NIAH@1024 must gate pages");
+    assert!(ref_counters.0 > 0, "a peaked cache must skip pages");
+    let argmax = |v: &[f32]| {
+        v.iter().enumerate().fold((0usize, f32::MIN), |best, (i, &x)| {
+            if x > best.1 {
+                (i, x)
+            } else {
+                best
+            }
+        })
+    };
+    assert_eq!(argmax(&ref_logits).0 as u32, g.answer, "sparse prefill broke retrieval");
+    for (span, threads) in [(64, 4), (64, 8), (256, 1), (1000, 4)] {
+        let (logits, counters) = run(span, threads);
+        assert_eq!(ref_logits, logits, "logits diverged at span={span} threads={threads}");
+        assert_eq!(ref_counters, counters, "skip counters diverged at span={span} threads={threads}");
     }
 }
 

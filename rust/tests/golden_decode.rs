@@ -56,7 +56,7 @@ struct Trace {
     candidates_sum: u64,
     sparse_calls: u64,
     steps: u64,
-    prefill_steps: u64,
+    prefill_tokens: u64,
     probes: u64,
     est_bytes_select: u64,
     est_bytes_prune: u64,
@@ -72,6 +72,9 @@ struct Trace {
 impl Trace {
     fn render(&self) -> String {
         let toks: Vec<String> = self.tokens.iter().map(|t| t.to_string()).collect();
+        // The `prefill_steps` wire label is the historical name of what
+        // is now `EngineStats::prefill_tokens` — kept literal so the
+        // checked-in golden bytes stay stable across the rename.
         format!(
             "twilight golden decode trace v1\n\
              tokens {}\n\
@@ -93,7 +96,7 @@ impl Trace {
             self.candidates_sum,
             self.sparse_calls,
             self.steps,
-            self.prefill_steps,
+            self.prefill_tokens,
             self.probes,
             self.est_bytes_select,
             self.est_bytes_prune,
@@ -120,6 +123,11 @@ fn run_trace(threads: usize) -> Trace {
     if let Some(t) = cfg.twilight.as_mut() {
         t.hier_pages = false;
     }
+    // Same reasoning for the opt-in sparse-prefill path: the
+    // TWILIGHT_SPARSE_PREFILL=1 CI leg flips the constructors' env-read
+    // default, and the envelope bound depends on the chunk span, so the
+    // golden pins the dense prefill reference explicitly.
+    cfg.sparse_prefill = None;
     let mut e = Engine::new(model, cfg, 1 << 13);
     e.set_threads(threads);
     // Governor on: the mass policy steers p from prune-mass telemetry
@@ -198,7 +206,7 @@ fn run_trace(threads: usize) -> Trace {
         candidates_sum: e.stats.candidates_sum,
         sparse_calls: e.stats.sparse_calls,
         steps: e.stats.steps,
-        prefill_steps: e.stats.prefill_steps,
+        prefill_tokens: e.stats.prefill_tokens,
         probes: e.signals.probes(),
         est_bytes_select: e.stats.est_bytes_select,
         est_bytes_prune: e.stats.est_bytes_prune,
@@ -234,7 +242,7 @@ fn golden_decode_trace_pinned_across_worker_counts() {
     // Chunked admission pushed the whole 4th prompt through the forward
     // pass (the first three prompts ride the 1-layer fast path: one
     // token each).
-    assert_eq!(t1.prefill_steps, SEQS + CHUNK_PROMPT_CTX as u64 + 1);
+    assert_eq!(t1.prefill_tokens, SEQS + CHUNK_PROMPT_CTX as u64 + 1);
     assert!(t1.sparse_calls > 0, "the trace must exercise the pruned path");
     assert!(t1.probes > 0, "the trace must exercise the recall probe");
     // (1) Bit-exactness across worker counts — the pool contract. The

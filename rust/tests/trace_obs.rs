@@ -38,7 +38,7 @@ struct Trace {
     candidates_sum: u64,
     sparse_calls: u64,
     steps: u64,
-    prefill_steps: u64,
+    prefill_tokens: u64,
     probes: u64,
     mean_mass_bits: u64,
     probe_recall_bits: u64,
@@ -52,6 +52,7 @@ struct StatTimes {
     t_prune: f64,
     t_attend: f64,
     t_dense: f64,
+    t_sprefill: f64,
 }
 
 /// The golden_decode workload (same seeds, same virtual-time governor,
@@ -132,7 +133,7 @@ fn run_trace() -> (Trace, StatTimes) {
             candidates_sum: e.stats.candidates_sum,
             sparse_calls: e.stats.sparse_calls,
             steps: e.stats.steps,
-            prefill_steps: e.stats.prefill_steps,
+            prefill_tokens: e.stats.prefill_tokens,
             probes: e.signals.probes(),
             mean_mass_bits: e.signals.mean_mass().to_bits(),
             probe_recall_bits: e.signals.probe_recall().to_bits(),
@@ -144,6 +145,7 @@ fn run_trace() -> (Trace, StatTimes) {
             t_prune: e.stats.t_prune,
             t_attend: e.stats.t_attend,
             t_dense: e.stats.t_dense,
+            t_sprefill: e.stats.t_sprefill,
         },
     )
 }
@@ -254,6 +256,9 @@ fn tracing_is_observational_and_reconciles() {
     close(totals[Stage::Prune as usize], stats.t_prune, "prune");
     close(totals[Stage::SparseAttend as usize], stats.t_attend, "sparse_attend");
     close(totals[Stage::DenseAttend as usize], stats.t_dense, "dense_attend");
+    // 0 ≈ 0 in the default run; exact when TWILIGHT_SPARSE_PREFILL=1
+    // flips the constructors' env-read default for the traced CI leg.
+    close(totals[Stage::SparsePrefill as usize], stats.t_sprefill, "sparse_prefill");
     // Sub-phases are strict subsets of the prune umbrella.
     let sub = totals[Stage::Spgemv as usize] + totals[Stage::ToppSearch as usize];
     assert!(
