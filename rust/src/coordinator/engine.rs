@@ -54,7 +54,9 @@
 use super::{balance, AttnVariant, SparseConfig};
 use crate::governor::signals::SignalHub;
 use crate::governor::BudgetDirective;
-use crate::kvcache::offload::{PrefetchPlan, SimTier, DEFAULT_SLOWDOWN, PREFETCH_EPS_FRAC};
+use crate::kvcache::offload::{
+    ChaosConfig, ChaosTier, PrefetchPlan, SimTier, DEFAULT_SLOWDOWN, PREFETCH_EPS_FRAC,
+};
 use crate::kvcache::{CacheConfig, CacheError, PageId, PagedKvCache, SeqCache};
 use crate::model::{BatchBackend, Model, ModelConfig, SpanRef};
 use crate::obs::trace;
@@ -246,6 +248,20 @@ pub struct EngineStats {
     pub offload_bytes_faulted: u64,
     /// Pages written through to the tier (seals + attach-time spills).
     pub offload_spilled_pages: u64,
+    /// Fault-domain counters (0 unless faults occur; cumulative, refreshed
+    /// from per-layer `TierState` like the offload counters): tier read
+    /// ops that returned an error (every retry attempt counts).
+    pub tier_read_errors: u64,
+    /// Tier write ops that returned an error (every retry attempt counts).
+    pub tier_write_errors: u64,
+    /// Retry-ladder re-attempts after a tier error (reads + writes).
+    pub tier_retries: u64,
+    /// Pages declared lost after read-retry exhaustion (terminal; the
+    /// owning request fails with `CacheError::PageLost`).
+    pub pages_lost: u64,
+    /// Attention work items quarantined after an in-item panic (the
+    /// owning request fails with `CacheError::WorkerPanic`).
+    pub worker_panics: u64,
 }
 
 impl Default for EngineStats {
@@ -277,6 +293,11 @@ impl Default for EngineStats {
             offload_evictions: 0,
             offload_bytes_faulted: 0,
             offload_spilled_pages: 0,
+            tier_read_errors: 0,
+            tier_write_errors: 0,
+            tier_retries: 0,
+            pages_lost: 0,
+            worker_panics: 0,
         }
     }
 }
@@ -370,6 +391,16 @@ pub struct Engine {
     fault_batch: Vec<PageId>,
     /// Fraction of each layer pool kept resident (1.0 = no tier).
     resident_frac: f64,
+    /// Chaos fault injection (`TWILIGHT_CHAOS` / `--chaos`): when set,
+    /// every tier attached by [`Engine::set_resident_frac`] is wrapped
+    /// in a seeded [`ChaosTier`]. `None` (the default) leaves every
+    /// byte of behavior unchanged — the golden trace pins this.
+    chaos: Option<ChaosConfig>,
+    /// `(layer, page)` pairs whose bytes were lost while *no* tier was
+    /// attached to record the loss (a failed `detach_tier` read):
+    /// checked by the end-of-step lost-page scan, pruned when the
+    /// owning sequence releases its pages.
+    pending_lost: Vec<(usize, PageId)>,
 }
 
 impl Engine {
@@ -399,6 +430,8 @@ impl Engine {
             plan_pool: Vec::new(),
             fault_batch: Vec::new(),
             resident_frac: 1.0,
+            chaos: ChaosConfig::from_env(),
+            pending_lost: Vec::new(),
         };
         if let Some(f) = default_resident_frac() {
             e.set_resident_frac(f);
@@ -452,22 +485,58 @@ impl Engine {
     /// stay bit-exact vs the fully-resident baseline either way (the
     /// residency-invariance battery in `rust/tests/offload_decode.rs`).
     pub fn set_resident_frac(&mut self, frac: f64) {
+        // Detaching faults every evicted in-use page back in; a detach
+        // read that exhausts its retries loses the page's bytes. Each
+        // layer's losses are re-marked on its replacement tier (or
+        // parked in `pending_lost` when going fully resident) so the
+        // owning request still fails loudly instead of decoding zeros.
+        let mut lost_by_layer: Vec<Vec<PageId>> = Vec::with_capacity(self.caches.len());
         for c in &mut self.caches {
-            c.detach_tier();
+            lost_by_layer.push(c.detach_tier());
         }
         if !frac.is_finite() || frac <= 0.0 || frac >= 1.0 {
             self.resident_frac = 1.0;
+            for (layer, lost) in lost_by_layer.into_iter().enumerate() {
+                self.pending_lost.extend(lost.into_iter().map(|p| (layer, p)));
+            }
+            self.pending_lost.sort_unstable();
+            self.pending_lost.dedup();
             return;
         }
-        for c in &mut self.caches {
+        for (c, lost) in self.caches.iter_mut().zip(lost_by_layer) {
             let fpp = c.cfg.kv_heads * c.cfg.page_size * c.cfg.head_dim;
             let cap = ((c.cfg.num_pages as f64 * frac).ceil() as usize).max(1);
-            c.attach_tier(
-                Box::new(SimTier::new(fpp, c.cfg.num_pages, DEFAULT_SLOWDOWN)),
-                cap,
-            );
+            let inner = Box::new(SimTier::new(fpp, c.cfg.num_pages, DEFAULT_SLOWDOWN));
+            let tier: Box<dyn crate::kvcache::offload::Tier> = match self.chaos {
+                Some(cfg) => Box::new(ChaosTier::new(inner, cfg, c.cfg.num_pages)),
+                None => inner,
+            };
+            c.attach_tier(tier, cap);
+            c.mark_pages_lost(&lost);
         }
         self.resident_frac = frac;
+    }
+
+    /// Install (or clear) chaos fault injection. Tiers attached by
+    /// future [`Engine::set_resident_frac`] calls are wrapped with the
+    /// new config; a tier already live is re-attached at the current
+    /// fraction so the change takes effect immediately (this is how
+    /// `--chaos` overrides a `TWILIGHT_CHAOS` env default that
+    /// `Engine::new` already applied).
+    pub fn set_chaos(&mut self, cfg: Option<ChaosConfig>) {
+        if self.chaos == cfg {
+            return;
+        }
+        self.chaos = cfg;
+        let frac = self.resident_frac;
+        if frac < 1.0 {
+            self.set_resident_frac(frac);
+        }
+    }
+
+    /// The chaos configuration in force (`None` = no injection).
+    pub fn chaos(&self) -> Option<ChaosConfig> {
+        self.chaos
     }
 
     /// Install the governor's directive for subsequent decode steps.
@@ -797,6 +866,8 @@ impl Engine {
         };
         let logits = model.decode_batch(&model_spans, &mut backend);
         let mut errors = backend.errors;
+        self.stats.worker_panics +=
+            errors.iter().filter(|e| **e == Some(CacheError::WorkerPanic)).count() as u64;
         // Replay buffered recall probes into the EMA in (token, layer,
         // kv-head) order — token-at-a-time order — instead of the
         // (layer, token) order the per-layer phase barriers produced
@@ -815,6 +886,7 @@ impl Engine {
         let mut any_tier = false;
         let (mut faults, mut prefetched, mut evictions) = (0u64, 0u64, 0u64);
         let (mut bytes_faulted, mut spilled) = (0u64, 0u64);
+        let (mut read_errs, mut write_errs, mut retries, mut lost) = (0u64, 0u64, 0u64, 0u64);
         for c in self.caches.iter_mut() {
             c.enforce_residency(degrade);
             if let Some(ts) = c.tier_state() {
@@ -825,6 +897,10 @@ impl Engine {
                 evictions += ts.evictions.load(Relaxed);
                 bytes_faulted += ts.bytes_faulted.load(Relaxed);
                 spilled += ts.spilled_writes.load(Relaxed);
+                read_errs += ts.read_errors.load(Relaxed);
+                write_errs += ts.write_errors.load(Relaxed);
+                retries += ts.retries.load(Relaxed);
+                lost += ts.lost_pages.load(Relaxed);
             }
         }
         if any_tier {
@@ -833,6 +909,10 @@ impl Engine {
             self.stats.offload_evictions = evictions;
             self.stats.offload_bytes_faulted = bytes_faulted;
             self.stats.offload_spilled_pages = spilled;
+            self.stats.tier_read_errors = read_errs;
+            self.stats.tier_write_errors = write_errs;
+            self.stats.tier_retries = retries;
+            self.stats.pages_lost = lost;
             use std::sync::OnceLock;
             static FAULTS: OnceLock<&'static crate::obs::metrics::Gauge> = OnceLock::new();
             static EVICT: OnceLock<&'static crate::obs::metrics::Gauge> = OnceLock::new();
@@ -862,6 +942,44 @@ impl Engine {
                     )
                 })
                 .set(if faults == 0 { 0.0 } else { prefetched as f64 / faults as f64 });
+            // Fault-domain gauges: registered only once a fault has
+            // actually occurred, so fault-free runs (and their metric
+            // dumps) are byte-identical to the pre-chaos engine.
+            if read_errs + write_errs + retries + lost > 0 {
+                static RERR: OnceLock<&'static crate::obs::metrics::Gauge> = OnceLock::new();
+                static WERR: OnceLock<&'static crate::obs::metrics::Gauge> = OnceLock::new();
+                static RETRY: OnceLock<&'static crate::obs::metrics::Gauge> = OnceLock::new();
+                static LOST: OnceLock<&'static crate::obs::metrics::Gauge> = OnceLock::new();
+                RERR.get_or_init(|| {
+                    crate::obs::metrics::gauge(
+                        "twilight_tier_read_errors",
+                        "failed tier page reads, every retry attempt counted (cumulative)",
+                    )
+                })
+                .set(read_errs as f64);
+                WERR.get_or_init(|| {
+                    crate::obs::metrics::gauge(
+                        "twilight_tier_write_errors",
+                        "failed tier page writes, every retry attempt counted (cumulative)",
+                    )
+                })
+                .set(write_errs as f64);
+                RETRY
+                    .get_or_init(|| {
+                        crate::obs::metrics::gauge(
+                            "twilight_tier_retries",
+                            "retry-ladder re-attempts after tier errors (cumulative)",
+                        )
+                    })
+                    .set(retries as f64);
+                LOST.get_or_init(|| {
+                    crate::obs::metrics::gauge(
+                        "twilight_pages_lost",
+                        "KV pages declared lost after read-retry exhaustion (cumulative)",
+                    )
+                })
+                .set(lost as f64);
+            }
         }
         let total = t0.elapsed().as_secs_f64();
         trace::record_since(
@@ -898,11 +1016,29 @@ impl Engine {
         self.stats.t_other += (total - (staged_after - staged_before)).max(0.0);
         let mut results = Vec::with_capacity(batch.len());
         for (i, (mut st, lg)) in sts.into_iter().zip(logits).enumerate() {
+            // Lost-page scan: a page can go LOST on a *prefetch* ticket
+            // (no attention item ever reads it, so no error surfaced
+            // inline) or during a tier detach (`pending_lost`). Any
+            // sequence touching such a page must fail — decoding over a
+            // zero-filled page would be silently wrong.
+            if errors[i].is_none() {
+                let hit = st.caches.iter().enumerate().any(|(layer, sc)| {
+                    self.caches[layer].has_lost_page(sc)
+                        || (!self.pending_lost.is_empty()
+                            && sc.pages.iter().any(|p| {
+                                self.pending_lost.binary_search(&(layer, *p)).is_ok()
+                            }))
+                });
+                if hit {
+                    errors[i] = Some(CacheError::PageLost);
+                }
+            }
             match errors[i].take() {
                 Some(e) => {
                     // The sequence is already out of the map; return its
                     // pages to the pools.
                     for (layer, sc) in st.caches.iter().enumerate() {
+                        self.prune_pending_lost(layer, sc);
                         self.caches[layer].release(sc);
                     }
                     results.push(Err(e));
@@ -921,9 +1057,21 @@ impl Engine {
     pub fn release(&mut self, id: SeqId) {
         if let Some(st) = self.seqs.remove(&id) {
             for (layer, sc) in st.caches.iter().enumerate() {
+                self.prune_pending_lost(layer, sc);
                 self.caches[layer].release(sc);
             }
         }
+    }
+
+    /// Drop `pending_lost` entries owned by a sequence being released:
+    /// the pages return to the free pool and their next allocation
+    /// starts clean (mirrors `alloc_page` resetting `PAGE_LOST`).
+    fn prune_pending_lost(&mut self, layer: usize, sc: &SeqCache) {
+        if self.pending_lost.is_empty() {
+            return;
+        }
+        self.pending_lost
+            .retain(|&(l, p)| l != layer || !sc.pages.contains(&p));
     }
 
     /// Reset statistics (between bench phases).
@@ -1085,7 +1233,11 @@ struct AttnItemOut {
 struct WorkerCell<'a> {
     items: Vec<AttnItem<'a>>,
     scratch: AttnScratch,
-    results: Vec<AttnItemOut>,
+    /// `Ok` = the item's attention output; `Err((flat, seq))` = the item
+    /// panicked mid-run and was quarantined — the merge fails sequence
+    /// `seq` with `CacheError::WorkerPanic` while every sibling item's
+    /// result lands normally.
+    results: Vec<Result<AttnItemOut, (usize, usize)>>,
 }
 
 impl BatchBackend for BatchStepBackend<'_> {
@@ -1289,15 +1441,18 @@ impl BatchBackend for BatchStepBackend<'_> {
             let WorkerCell { items, scratch, results } = &mut *guard;
             results.reserve(items.len());
             for item in items.drain(..) {
-                results.push(run_attn_item(
-                    cfg,
-                    mcfg,
-                    directive,
-                    probe_interval,
-                    step,
-                    item,
-                    scratch,
-                ));
+                // Per-item failure containment: a panic inside one work
+                // item (poisoned request state, injected chaos panic
+                // escaping the fault funnel) quarantines that item only —
+                // siblings in the same bucket keep running and the pool
+                // round completes normally. The scratch arena is safe to
+                // reuse after an unwind: every run_attn_item clears or
+                // resizes each buffer before reading it.
+                let (flat, seq) = (item.flat, item.seq);
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_attn_item(cfg, mcfg, directive, probe_interval, step, item, scratch)
+                }));
+                results.push(out.map_err(|_| (flat, seq)));
             }
         });
         for plan in plans {
@@ -1310,8 +1465,20 @@ impl BatchBackend for BatchStepBackend<'_> {
             let cell = cell.into_inner().expect("attention worker poisoned");
             self.scratches[w] = cell.scratch;
             for r in cell.results {
-                let flat = r.flat;
-                merged[flat] = Some(r);
+                match r {
+                    Ok(r) => {
+                        let flat = r.flat;
+                        merged[flat] = Some(r);
+                    }
+                    Err((_, seq)) => {
+                        // First error wins (matches append_kv's policy);
+                        // the item's recycled buffers died with the
+                        // unwind — the pools just re-allocate later.
+                        if self.errors[seq].is_none() {
+                            self.errors[seq] = Some(CacheError::WorkerPanic);
+                        }
+                    }
+                }
             }
         }
         let mut calls_by_flat: Vec<Vec<CallOut>> = (0..n_items).map(|_| Vec::new()).collect();

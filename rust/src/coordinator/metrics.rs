@@ -7,9 +7,13 @@
 //! `prefill_time` (`first_token_at - admitted_at`) isolates the chunked
 //! prompt processing from queueing (`admitted_at - arrival`); TPOT spans
 //! only the decode phase. Rejected requests (prompt can never fit the
-//! page pool) are counted separately and excluded from the latency
-//! summaries.
+//! page pool) and failed requests (terminal faults — DESIGN.md §14) are
+//! counted separately and excluded from the latency summaries, as is
+//! any request that never produced a first token (`started == false`:
+//! its `first_token_at` is a placeholder, not a measurement — including
+//! it would wash garbage TTFTs into the percentiles).
 
+use super::request::FailReason;
 use crate::governor::TraceEntry;
 use crate::util::json::{self, Json};
 use crate::util::stats::Summary;
@@ -23,11 +27,19 @@ pub struct RequestMetrics {
     pub arrival: f64,
     /// When admission began (== `arrival` when never queued).
     pub admitted_at: f64,
+    /// Meaningful only when `started` (a placeholder otherwise — never
+    /// use it in a summary without checking `started`).
     pub first_token_at: f64,
     pub finished_at: f64,
     pub preemptions: u32,
     /// Refused at admission: the prompt can never fit the page pool.
     pub rejected: bool,
+    /// The request actually produced a first token; false for requests
+    /// rejected or failed before sampling anything.
+    pub started: bool,
+    /// Terminal fault (`RequestState::Failed`), with the contained
+    /// reason; `None` for every other outcome.
+    pub fail_reason: Option<FailReason>,
 }
 
 impl RequestMetrics {
@@ -85,6 +97,14 @@ pub struct ServingReport {
     pub offload_bytes_faulted: u64,
     /// Configured resident fraction (1.0 = no tier attached).
     pub resident_frac: f64,
+    /// Fault-domain accounting (all 0 on a fault-free run): tier read /
+    /// write errors (every retry attempt counted), retry-ladder
+    /// re-attempts, pages declared lost, and quarantined worker panics.
+    pub tier_read_errors: u64,
+    pub tier_write_errors: u64,
+    pub tier_retries: u64,
+    pub pages_lost: u64,
+    pub worker_panics: u64,
 }
 
 impl ServingReport {
@@ -117,12 +137,20 @@ impl ServingReport {
         }
     }
 
+    /// Requests whose latencies belong in the percentile summaries:
+    /// served to completion AND actually started (a request that never
+    /// sampled a token has no TTFT to measure — it is counted via
+    /// [`Self::never_started`] instead of poisoning the percentiles).
+    fn summarizable(r: &&RequestMetrics) -> bool {
+        !r.rejected && r.fail_reason.is_none() && r.started
+    }
+
     pub fn ttft_summary(&self) -> Summary {
         Summary::from(
             &self
                 .requests
                 .iter()
-                .filter(|r| !r.rejected)
+                .filter(Self::summarizable)
                 .map(|r| r.ttft())
                 .collect::<Vec<_>>(),
         )
@@ -134,7 +162,7 @@ impl ServingReport {
             &self
                 .requests
                 .iter()
-                .filter(|r| !r.rejected)
+                .filter(Self::summarizable)
                 .map(|r| r.prefill_time())
                 .collect::<Vec<_>>(),
         )
@@ -145,7 +173,7 @@ impl ServingReport {
             &self
                 .requests
                 .iter()
-                .filter(|r| !r.rejected && r.output_len > 1)
+                .filter(|r| Self::summarizable(r) && r.output_len > 1)
                 .map(|r| r.tpot())
                 .collect::<Vec<_>>(),
         )
@@ -159,6 +187,38 @@ impl ServingReport {
     /// Requests refused at admission (prompt can never fit the pool).
     pub fn rejected(&self) -> usize {
         self.requests.iter().filter(|r| r.rejected).count()
+    }
+
+    /// Requests that died to a contained fault (`RequestState::Failed`).
+    pub fn failed(&self) -> usize {
+        self.requests.iter().filter(|r| r.fail_reason.is_some()).count()
+    }
+
+    /// Failed requests with the given reason.
+    pub fn failed_with(&self, reason: FailReason) -> usize {
+        self.requests.iter().filter(|r| r.fail_reason == Some(reason)).count()
+    }
+
+    /// Requests that never produced a first token (rejected, or failed /
+    /// still-queued at run end before sampling anything) — excluded from
+    /// every latency summary, counted here instead.
+    pub fn never_started(&self) -> usize {
+        self.requests.iter().filter(|r| !r.started).count()
+    }
+
+    /// Fraction of non-rejected requests served to completion (the
+    /// resilience panel's headline number: 1.0 on a fault-free run).
+    pub fn completion_rate(&self) -> f64 {
+        let attempted = self.requests.iter().filter(|r| !r.rejected).count();
+        if attempted == 0 {
+            return 1.0;
+        }
+        let completed = self
+            .requests
+            .iter()
+            .filter(|r| !r.rejected && r.fail_reason.is_none())
+            .count();
+        completed as f64 / attempted as f64
     }
 
     /// Fraction of candidate pages the hier pre-prune skipped (0 when the
@@ -218,6 +278,22 @@ impl ServingReport {
             ("tpot_p99_s", Json::Num(tpot.p99)),
             ("preemptions", Json::Num(self.preemptions() as f64)),
             ("rejected", Json::Num(self.rejected() as f64)),
+            // Fault-domain keys are unconditional (0 on fault-free runs)
+            // so resilience dashboards can key on them without probing.
+            ("failed", Json::Num(self.failed() as f64)),
+            ("failed_page_lost", Json::Num(self.failed_with(FailReason::PageLost) as f64)),
+            ("failed_worker_panic", Json::Num(self.failed_with(FailReason::WorkerPanic) as f64)),
+            (
+                "failed_non_finite_logits",
+                Json::Num(self.failed_with(FailReason::NonFiniteLogits) as f64),
+            ),
+            ("never_started", Json::Num(self.never_started() as f64)),
+            ("completion_rate", Json::Num(self.completion_rate())),
+            ("tier_read_errors", Json::Num(self.tier_read_errors as f64)),
+            ("tier_write_errors", Json::Num(self.tier_write_errors as f64)),
+            ("tier_retries", Json::Num(self.tier_retries as f64)),
+            ("pages_lost", Json::Num(self.pages_lost as f64)),
+            ("worker_panics", Json::Num(self.worker_panics as f64)),
             // Unconditional so downstream dashboards can key on them
             // without probing: 0/0/0.0 when --hier-pages never ran.
             ("hier_pages_skipped", Json::Num(self.hier_pages_skipped as f64)),
@@ -300,6 +376,8 @@ mod tests {
             finished_at: fin,
             preemptions: 0,
             rejected: false,
+            started: out > 0,
+            fail_reason: None,
         }
     }
 
@@ -343,6 +421,38 @@ mod tests {
     #[test]
     fn single_token_tpot_zero() {
         assert_eq!(rm(0.0, 0.1, 0.1, 1).tpot(), 0.0);
+    }
+
+    #[test]
+    fn failed_and_never_started_excluded_from_summaries() {
+        // One clean request, one failure mid-decode (started), one
+        // failure before its first token (never started — its
+        // `first_token_at` is a garbage placeholder the summaries must
+        // never read).
+        let mut failed_started = rm(0.0, 9.0, 9.5, 3);
+        failed_started.fail_reason = Some(FailReason::PageLost);
+        let mut failed_early = rm(0.0, 0.0, 0.2, 0);
+        failed_early.fail_reason = Some(FailReason::WorkerPanic);
+        failed_early.started = false;
+        let rep = ServingReport {
+            requests: vec![rm(0.0, 0.5, 1.5, 11), failed_started, failed_early],
+            duration: 1.5,
+            ..Default::default()
+        };
+        assert_eq!(rep.failed(), 2);
+        assert_eq!(rep.failed_with(FailReason::PageLost), 1);
+        assert_eq!(rep.failed_with(FailReason::WorkerPanic), 1);
+        assert_eq!(rep.never_started(), 1);
+        assert!((rep.completion_rate() - 1.0 / 3.0).abs() < 1e-12);
+        // Only the clean request's latencies survive.
+        assert!((rep.ttft_summary().mean - 0.5).abs() < 1e-12);
+        assert!((rep.tpot_summary().mean - 0.1).abs() < 1e-12);
+        let j = rep.to_json();
+        assert_eq!(j.get_usize("failed"), Some(2));
+        assert_eq!(j.get_usize("failed_page_lost"), Some(1));
+        assert_eq!(j.get_usize("never_started"), Some(1));
+        assert!(j.get_f64("completion_rate").is_some());
+        assert_eq!(j.get_usize("pages_lost"), Some(0));
     }
 
     #[test]

@@ -1,9 +1,43 @@
 //! Request representation and lifecycle for the serving coordinator.
+//!
+//! Fault domains (DESIGN.md §14): [`RequestState::Failed`] is the
+//! request-level terminal state for faults the engine contained below it
+//! (a lost KV page, a quarantined worker panic) or the scheduler caught
+//! above it (non-finite logits). A failed request releases its pages,
+//! surfaces its [`FailReason`] in reports and the server error reply,
+//! and never perturbs a neighbor's bytes.
 
 use crate::model::sampler::SamplingParams;
 
 /// Unique request id.
 pub type RequestId = u64;
+
+/// Why a request reached [`RequestState::Failed`]. One reason per
+/// request (the first fault wins); carried through reports/metrics so
+/// operators can tell tier loss from poisoned work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailReason {
+    /// A sealed KV page's bytes became unreachable (tier read-retry
+    /// ladder exhausted — `CacheError::PageLost`).
+    PageLost,
+    /// The request's attention work item panicked on a pool thread and
+    /// was quarantined (`CacheError::WorkerPanic`).
+    WorkerPanic,
+    /// The forward pass produced NaN/inf logits; failing beats sampling
+    /// garbage tokens.
+    NonFiniteLogits,
+}
+
+impl FailReason {
+    /// Stable wire label (reports / metrics / server error replies).
+    pub fn label(self) -> &'static str {
+        match self {
+            FailReason::PageLost => "page_lost",
+            FailReason::WorkerPanic => "worker_panic",
+            FailReason::NonFiniteLogits => "non_finite_logits",
+        }
+    }
+}
 
 /// Lifecycle states of a request inside the coordinator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -21,6 +55,9 @@ pub enum RequestState {
     Finished,
     /// Refused at admission: the prompt can never fit the page pool.
     Rejected,
+    /// Terminal fault: the request died (pages reclaimed, neighbors
+    /// unaffected) for the contained reason.
+    Failed { reason: FailReason },
 }
 
 /// A serving request plus its runtime bookkeeping.

@@ -31,8 +31,9 @@
 
 use super::engine::{DecodeBatch, Engine};
 use super::metrics::{RequestMetrics, ServingReport};
-use super::request::{Request, RequestState};
+use super::request::{FailReason, Request, RequestState};
 use crate::governor::Governor;
+use crate::kvcache::CacheError;
 use crate::model::sampler::sample;
 use crate::obs::metrics::{counter, gauge, histogram, Counter, Gauge, LogHist};
 use crate::obs::recorder::{self, Anomaly, StepRecord};
@@ -91,6 +92,7 @@ struct SchedObs {
     prefill_tokens: &'static Counter,
     preempt: &'static Counter,
     reject: &'static Counter,
+    failed: &'static Counter,
     queue_depth: &'static Gauge,
     running: &'static Gauge,
     prefilling: &'static Gauge,
@@ -117,8 +119,10 @@ struct SchedObs {
     /// `reject`) and their previous-step baselines.
     preempt_events: u64,
     reject_events: u64,
+    failed_events: u64,
     last_preempt: u64,
     last_reject: u64,
+    last_failed: u64,
     /// SLO-breach edge detector: the flight recorder dumps once per
     /// entry into breach, not every breached step.
     in_breach: bool,
@@ -135,6 +139,11 @@ impl SchedObs {
             ),
             preempt: counter("twilight_preemptions_total", "recompute preemptions"),
             reject: counter("twilight_rejected_total", "admissions terminally refused"),
+            failed: counter(
+                "twilight_failed_total",
+                "requests terminally failed by contained faults (lost pages, \
+                 quarantined panics, non-finite logits)",
+            ),
             queue_depth: gauge("twilight_queue_depth", "requests waiting for admission"),
             running: gauge("twilight_running", "requests in the decode set"),
             prefilling: gauge("twilight_prefilling", "requests partway through chunked prefill"),
@@ -168,8 +177,10 @@ impl SchedObs {
             last_prefill_tokens: 0,
             preempt_events: 0,
             reject_events: 0,
+            failed_events: 0,
             last_preempt: 0,
             last_reject: 0,
+            last_failed: 0,
             in_breach: false,
         }
     }
@@ -191,6 +202,15 @@ pub struct Scheduler {
     governor: Option<Governor>,
     /// Metrics handles + delta baselines (see [`SchedObs`]).
     obs: SchedObs,
+    /// Cumulative tier faults (read + write errors + lost pages) seen at
+    /// the last governed step, for the per-step delta.
+    tier_faults_seen: u64,
+    /// Engine step count when the fault EMA last advanced — the EMA only
+    /// moves on real engine steps, never on idle scheduler spins.
+    tier_fault_last_steps: u64,
+    /// Smoothed tier faults/step fed to the governor's pressure ladder
+    /// (DESIGN.md §14); decays back to 0 when the tier heals.
+    tier_fault_ema: f64,
 }
 
 impl Scheduler {
@@ -205,6 +225,9 @@ impl Scheduler {
             finished: Vec::new(),
             governor: None,
             obs: SchedObs::new(),
+            tier_faults_seen: 0,
+            tier_fault_last_steps: 0,
+            tier_fault_ema: 0.0,
         }
     }
 
@@ -259,12 +282,25 @@ impl Scheduler {
             } else {
                 self.engine.free_pages() as f64 / total as f64
             };
+            // Advance the tier-fault EMA only when the engine actually
+            // stepped: idle scheduler spins must not decay the signal.
+            if self.engine.stats.steps != self.tier_fault_last_steps {
+                let s = &self.engine.stats;
+                let total_faults = s.tier_read_errors + s.tier_write_errors + s.pages_lost;
+                let steps_delta = s.steps.saturating_sub(self.tier_fault_last_steps).max(1);
+                let per_step =
+                    total_faults.saturating_sub(self.tier_faults_seen) as f64 / steps_delta as f64;
+                self.tier_fault_ema = 0.8 * self.tier_fault_ema + 0.2 * per_step;
+                self.tier_fault_last_steps = s.steps;
+                self.tier_faults_seen = total_faults;
+            }
             let snap = gov.snapshot(
                 now,
                 &self.engine.signals,
                 free_frac,
                 self.queue.len(),
                 self.running.len() + self.prefilling.len(),
+                self.tier_fault_ema,
                 self.engine.stats.steps,
             );
             let d = gov.step(&snap);
@@ -388,24 +424,39 @@ impl Scheduler {
                 );
             }
             let mut results = self.engine.step_batch(&batch).into_iter();
-            // Decode results, in batch order.
+            // Decode results, in batch order. Per-request fate mapping
+            // (DESIGN.md §14): OutOfPages is transient (recompute-preempt
+            // and requeue — pressure clears); PageLost / WorkerPanic are
+            // terminal faults the engine already contained (pages
+            // released) — fail the request, never the process. Non-finite
+            // logits fail the request too: sampling from NaN scores would
+            // emit garbage tokens that *look* like service.
             let mut kept = Vec::with_capacity(self.running.len());
             let mut victims = Vec::new();
+            let mut failures: Vec<(Request, FailReason)> = Vec::new();
             for mut req in self.running.drain(..) {
                 match results.next().unwrap() {
                     Ok(logits) => {
-                        let tok = sample(&logits, &req.params, &mut self.rng);
-                        req.output.push(tok);
-                        produced += 1;
-                        kept.push(req);
+                        if logits.iter().all(|v| v.is_finite()) {
+                            let tok = sample(&logits, &req.params, &mut self.rng);
+                            req.output.push(tok);
+                            produced += 1;
+                            kept.push(req);
+                        } else {
+                            // Engine still holds the sequence on Ok.
+                            self.engine.release(req.id);
+                            failures.push((req, FailReason::NonFiniteLogits));
+                        }
                     }
-                    // OOM mid-step (engine released the sequence):
-                    // recompute-preempt this request.
-                    Err(_) => victims.push(req),
+                    Err(CacheError::OutOfPages) => victims.push(req),
+                    Err(CacheError::PageLost) => failures.push((req, FailReason::PageLost)),
+                    Err(CacheError::WorkerPanic) => {
+                        failures.push((req, FailReason::WorkerPanic))
+                    }
                 }
             }
             self.running = kept;
-            // Chunk results, in plan order.
+            // Chunk results, in plan order; the same fate mapping.
             let mut retire: Vec<usize> = Vec::new();
             for &(pi, span) in &plan {
                 let p = &mut self.prefilling[pi];
@@ -413,19 +464,34 @@ impl Scheduler {
                     Ok(logits) => {
                         p.cursor += span;
                         if p.cursor == p.req.prompt.len() {
-                            // TTFT is stamped here, at the first *sampled*
-                            // token — not at admission.
-                            let tok = sample(&logits, &p.req.params, &mut self.rng);
-                            p.req.output.push(tok);
-                            p.req.first_token_at = Some(now);
-                            p.req.state = RequestState::Decoding;
+                            if logits.iter().all(|v| v.is_finite()) {
+                                // TTFT is stamped here, at the first
+                                // *sampled* token — not at admission.
+                                let tok = sample(&logits, &p.req.params, &mut self.rng);
+                                p.req.output.push(tok);
+                                p.req.first_token_at = Some(now);
+                                p.req.state = RequestState::Decoding;
+                            } else {
+                                p.req.state = RequestState::Failed {
+                                    reason: FailReason::NonFiniteLogits,
+                                };
+                            }
                             retire.push(pi);
                         }
                     }
-                    Err(_) => {
+                    Err(CacheError::OutOfPages) => {
                         // Engine released the sequence mid-chunk: the
                         // whole prompt re-prefills later.
                         p.req.state = RequestState::Preempted;
+                        retire.push(pi);
+                    }
+                    Err(CacheError::PageLost) => {
+                        p.req.state = RequestState::Failed { reason: FailReason::PageLost };
+                        retire.push(pi);
+                    }
+                    Err(CacheError::WorkerPanic) => {
+                        p.req.state =
+                            RequestState::Failed { reason: FailReason::WorkerPanic };
                         retire.push(pi);
                     }
                 }
@@ -441,11 +507,21 @@ impl Scheduler {
                             self.running.push(p.req);
                         }
                     }
+                    RequestState::Failed { reason } => {
+                        // No-op when the engine already released the
+                        // sequence (the Err paths); reclaims the pages
+                        // for the non-finite-logits path.
+                        self.engine.release(p.req.id);
+                        self.fail(p.req, reason, now);
+                    }
                     _ => self.requeue_preempted(p.req),
                 }
             }
             for victim in victims {
                 self.requeue_preempted(victim);
+            }
+            for (req, reason) in failures {
+                self.fail(req, reason, now);
             }
         }
         // --- completion -----------------------------------------------
@@ -492,6 +568,9 @@ impl Scheduler {
         let reject_delta = self.obs.reject_events - self.obs.last_reject;
         self.obs.reject.add(reject_delta);
         self.obs.last_reject = self.obs.reject_events;
+        let failed_delta = self.obs.failed_events - self.obs.last_failed;
+        self.obs.failed.add(failed_delta);
+        self.obs.last_failed = self.obs.failed_events;
         // Gauges.
         self.obs.queue_depth.set(self.queue.len() as f64);
         self.obs.running.set(self.running.len() as f64);
@@ -540,6 +619,10 @@ impl Scheduler {
         }
         if breach {
             anomaly = Anomaly::SloBreach;
+        }
+        if failed_delta > 0 {
+            // Most severe: service was lost, not merely degraded.
+            anomaly = Anomaly::Failed;
         }
         recorder::record(StepRecord {
             step: self.obs.sched_steps,
@@ -601,6 +684,18 @@ impl Scheduler {
         self.finished.push(req);
     }
 
+    /// Terminal fault: the request died to a contained failure (lost KV
+    /// page, quarantined worker panic, non-finite logits). Its pages are
+    /// already reclaimed by the caller; neighbors were never touched.
+    /// Partial output is kept for diagnostics but the request reports as
+    /// failed, not served.
+    fn fail(&mut self, mut req: Request, reason: FailReason, now: f64) {
+        req.state = RequestState::Failed { reason };
+        req.finished_at = Some(now);
+        self.obs.failed_events += 1;
+        self.finished.push(req);
+    }
+
     /// Recompute-style preemption: fold the generated tokens back into
     /// the prompt and push the request to the queue head (its pages must
     /// already be released). Also used for prefilling requests evicted
@@ -652,10 +747,17 @@ impl Scheduler {
                 output_len: r.output.len(),
                 arrival: r.arrival,
                 admitted_at: r.admitted_at.unwrap_or(r.arrival),
+                // A placeholder for never-started requests; `started`
+                // gates every summary that would read it.
                 first_token_at: r.first_token_at.unwrap_or(r.arrival),
                 finished_at: r.finished_at.unwrap_or(duration),
                 preemptions: r.preemptions,
                 rejected: r.state == RequestState::Rejected,
+                started: r.first_token_at.is_some(),
+                fail_reason: match r.state {
+                    RequestState::Failed { reason } => Some(reason),
+                    _ => None,
+                },
             })
             .collect();
         let governor = self.governor.as_mut().map(|g| g.take_trace()).unwrap_or_default();
@@ -673,6 +775,11 @@ impl Scheduler {
             offload_evictions: self.engine.stats.offload_evictions,
             offload_bytes_faulted: self.engine.stats.offload_bytes_faulted,
             resident_frac: self.engine.resident_frac(),
+            tier_read_errors: self.engine.stats.tier_read_errors,
+            tier_write_errors: self.engine.stats.tier_write_errors,
+            tier_retries: self.engine.stats.tier_retries,
+            pages_lost: self.engine.stats.pages_lost,
+            worker_panics: self.engine.stats.worker_panics,
         }
     }
 
@@ -690,14 +797,25 @@ impl Scheduler {
             .iter()
             .filter(|r| r.state == RequestState::Rejected)
             .count();
+        let failed = self
+            .finished
+            .iter()
+            .filter(|r| matches!(r.state, RequestState::Failed { .. }))
+            .count();
         let mut kv: Vec<(&str, Json)> = vec![
             ("pending", Json::Num(self.queue.len() as f64)),
             ("prefilling", Json::Num(self.prefilling.len() as f64)),
             ("running", Json::Num(self.running.len() as f64)),
-            // Served to completion; refusals are counted separately so
-            // the two fields never overlap.
-            ("finished", Json::Num((self.finished.len() - rejected) as f64)),
+            // Served to completion; refusals and contained faults are
+            // counted separately so the three fields never overlap.
+            ("finished", Json::Num((self.finished.len() - rejected - failed) as f64)),
             ("rejected", Json::Num(rejected as f64)),
+            ("failed", Json::Num(failed as f64)),
+            ("pages_lost", Json::Num(s.pages_lost as f64)),
+            ("tier_read_errors", Json::Num(s.tier_read_errors as f64)),
+            ("tier_write_errors", Json::Num(s.tier_write_errors as f64)),
+            ("tier_retries", Json::Num(s.tier_retries as f64)),
+            ("worker_panics", Json::Num(s.worker_panics as f64)),
             ("threads", Json::Num(self.engine.threads() as f64)),
             ("prefill_chunk", Json::Num(self.engine.prefill_chunk() as f64)),
             ("kernel_backend", Json::Str(crate::tensor::kernels::active_name().to_string())),

@@ -15,6 +15,17 @@
 //! → {"cmd": "shutdown"}
 //! ```
 //!
+//! Requests that die to a contained fault (lost KV page, quarantined
+//! worker panic, non-finite logits — DESIGN.md §14) get a structured
+//! error reply naming the reason instead of an output:
+//! `{"id": 3, "error": "request failed", "reason": "page_lost", ...}`.
+//! Rejected admissions are reported the same way. Latency fields are
+//! only emitted when the request actually produced a first token.
+//!
+//! Request lines are capped at [`MAX_LINE_BYTES`]; an oversized line is
+//! drained in constant memory, answered with a structured error, and
+//! the connection stays up — a client bug can't OOM the server.
+//!
 //! `stats` reports live scheduler/engine counters plus governor state;
 //! `slo` retunes the governor's TPOT target at runtime (fails with
 //! `ok: false` when the scheduler is ungoverned).
@@ -34,7 +45,7 @@
 //! scheduler thread that owns the engine (the same single-writer design
 //! vLLM's engine loop uses).
 
-use super::request::Request;
+use super::request::{Request, RequestState};
 use super::scheduler::Scheduler;
 use crate::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Write};
@@ -120,36 +131,116 @@ pub fn serve(mut sched: Scheduler, addr: &str) -> std::io::Result<()> {
         // Drive the engine.
         let now = t0.elapsed().as_secs_f64();
         sched.step(now);
-        // Reply to finished requests.
-        let finished: Vec<(u64, Vec<u32>, f64, f64)> = sched
+        // Reply to finished requests: served ones with outputs and
+        // latency, terminally-failed/rejected ones with a structured
+        // error naming the contained fault.
+        let finished: Vec<(u64, Json)> = sched
             .finished_requests()
             .iter()
             .filter(|r| pending.iter().any(|(id, _, _)| *id == r.id))
-            .map(|r| {
-                let ttft = r.first_token_at.unwrap_or(0.0) - r.arrival;
-                let tpot = if r.output.len() > 1 {
-                    (r.finished_at.unwrap_or(now) - r.first_token_at.unwrap_or(now))
-                        / (r.output.len() - 1) as f64
-                } else {
-                    0.0
-                };
-                (r.id, r.output.clone(), ttft, tpot)
-            })
+            .map(|r| (r.id, reply_json(r, now)))
             .collect();
-        for (id, output, ttft, tpot) in finished {
+        for (id, msg) in finished {
             if let Some(pos) = pending.iter().position(|(pid, _, _)| *pid == id) {
                 let (_, reply, _) = pending.remove(pos);
-                let msg = json::obj(vec![
-                    ("id", Json::Num(id as f64)),
-                    ("output", Json::Arr(output.iter().map(|&t| Json::Num(t as f64)).collect())),
-                    ("ttft_s", Json::Num(ttft)),
-                    ("tpot_s", Json::Num(tpot)),
-                ]);
                 let _ = reply.send(msg);
             }
         }
         if sched.running() == 0 && sched.pending() == 0 {
             std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+}
+
+/// Build the per-request reply line for a finished request.
+///
+/// Latency fields are computed only from timestamps that actually exist:
+/// `first_token_at` is `None` for requests that died before producing a
+/// token (rejected, or failed during prefill), and the old
+/// `unwrap_or(0.0) - arrival` fabricated a large negative TTFT for
+/// them. Such requests now get an error reply with no latency fields.
+fn reply_json(r: &Request, now: f64) -> Json {
+    match r.state {
+        RequestState::Failed { reason } => json::obj(vec![
+            ("id", Json::Num(r.id as f64)),
+            ("error", json::s("request failed")),
+            ("reason", json::s(reason.label())),
+            ("partial_tokens", Json::Num(r.output.len() as f64)),
+        ]),
+        RequestState::Rejected => json::obj(vec![
+            ("id", Json::Num(r.id as f64)),
+            ("error", json::s("request rejected")),
+            ("reason", json::s("prompt cannot fit page pool")),
+        ]),
+        _ => {
+            let mut kv = vec![
+                ("id", Json::Num(r.id as f64)),
+                (
+                    "output",
+                    Json::Arr(r.output.iter().map(|&t| Json::Num(t as f64)).collect()),
+                ),
+            ];
+            if let Some(first) = r.first_token_at {
+                kv.push(("ttft_s", Json::Num(first - r.arrival)));
+                let tpot = if r.output.len() > 1 {
+                    (r.finished_at.unwrap_or(now) - first) / (r.output.len() - 1) as f64
+                } else {
+                    0.0
+                };
+                kv.push(("tpot_s", Json::Num(tpot)));
+            }
+            json::obj(kv)
+        }
+    }
+}
+
+/// Hard cap on one request line. A line that would buffer more than
+/// this is drained to its newline in constant memory and answered with
+/// an error — an unbounded `read_line` would let one client OOM the
+/// whole server with a newline-free stream.
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Read one `\n`-terminated line into `buf` (newline excluded),
+/// buffering at most [`MAX_LINE_BYTES`]. Returns `Ok(None)` at clean
+/// EOF, `Ok(Some(oversized))` otherwise; an oversized line leaves `buf`
+/// empty. A partial final line (EOF before `\n`) is handed up like
+/// `BufRead::lines` would.
+fn read_bounded_line(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+) -> std::io::Result<Option<bool>> {
+    buf.clear();
+    let mut oversized = false;
+    loop {
+        let (used, done) = {
+            let chunk = reader.fill_buf()?;
+            if chunk.is_empty() {
+                if buf.is_empty() && !oversized {
+                    return Ok(None);
+                }
+                (0, true)
+            } else if let Some(pos) = chunk.iter().position(|&b| b == b'\n') {
+                if !oversized && buf.len() + pos <= MAX_LINE_BYTES {
+                    buf.extend_from_slice(&chunk[..pos]);
+                } else {
+                    oversized = true;
+                }
+                (pos + 1, true)
+            } else {
+                if !oversized && buf.len() + chunk.len() <= MAX_LINE_BYTES {
+                    buf.extend_from_slice(chunk);
+                } else {
+                    oversized = true;
+                }
+                (chunk.len(), false)
+            }
+        };
+        reader.consume(used);
+        if done {
+            if oversized {
+                buf.clear();
+            }
+            return Ok(Some(oversized));
         }
     }
 }
@@ -161,9 +252,25 @@ fn handle_conn(
     next_id: Arc<AtomicU64>,
 ) -> std::io::Result<()> {
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let Some(oversized) = read_bounded_line(&mut reader, &mut buf)? else {
+            return Ok(());
+        };
+        if oversized {
+            writeln!(
+                writer,
+                "{}",
+                json::obj(vec![(
+                    "error",
+                    json::s(&format!("request line exceeds {MAX_LINE_BYTES} bytes")),
+                )])
+                .to_string()
+            )?;
+            continue;
+        }
+        let line = String::from_utf8_lossy(&buf);
         if line.trim().is_empty() {
             continue;
         }
@@ -261,7 +368,6 @@ fn handle_conn(
             }
         }
     }
-    Ok(())
 }
 
 fn engine_gone<T>(_: T) -> std::io::Error {
@@ -279,6 +385,33 @@ mod tests {
     use crate::util::rng::Rng;
     use crate::workload::{gen_niah, RetrievalVocab};
     use std::io::{BufRead, BufReader, Write};
+
+    #[test]
+    fn reply_json_latency_and_fault_shapes() {
+        use crate::coordinator::request::FailReason;
+        let mut r = Request::new(5, vec![1, 2], 4);
+        r.arrival = 10.0;
+        // Never-started requests must not fabricate latency fields (the
+        // old unwrap_or(0.0) yielded ttft_s = -arrival).
+        r.state = RequestState::Finished;
+        let j = reply_json(&r, 11.0);
+        assert!(j.get("ttft_s").is_none(), "{}", j.to_string());
+        assert!(j.get("output").is_some());
+        // Served: latency present and sane.
+        r.first_token_at = Some(10.5);
+        r.finished_at = Some(11.0);
+        r.output = vec![7, 8, 9];
+        let j = reply_json(&r, 11.0);
+        assert_eq!(j.get_f64("ttft_s"), Some(0.5));
+        assert_eq!(j.get_f64("tpot_s"), Some(0.25));
+        // Contained fault: structured error naming the reason, no output.
+        r.state = RequestState::Failed { reason: FailReason::PageLost };
+        let j = reply_json(&r, 11.0);
+        assert_eq!(j.get_str("error"), Some("request failed"));
+        assert_eq!(j.get_str("reason"), Some("page_lost"));
+        assert_eq!(j.get_f64("partial_tokens"), Some(3.0));
+        assert!(j.get("output").is_none());
+    }
 
     #[test]
     fn end_to_end_over_tcp() {
@@ -367,6 +500,19 @@ mod tests {
         let records = dump.get("records").unwrap().as_arr().unwrap();
         assert!(!records.is_empty(), "served steps must leave flight records");
         assert!(records[0].get_f64("step_s").is_some());
+        // Oversized request lines are refused in constant memory and the
+        // connection survives to serve the next command.
+        let big = vec![b'x'; MAX_LINE_BYTES + 16];
+        (&stream).write_all(&big).unwrap();
+        writeln!(&stream).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let err = Json::parse(&line).unwrap();
+        assert!(err.get_str("error").unwrap().contains("exceeds"), "{line}");
+        writeln!(&stream, "{{\"cmd\": \"stats\"}}").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(Json::parse(&line).unwrap().get("pending").is_some(), "{line}");
         // Shutdown.
         writeln!(&stream, "{{\"cmd\": \"shutdown\"}}").unwrap();
         line.clear();

@@ -209,7 +209,10 @@ impl Governor {
         self.slo.tpot_ema()
     }
 
-    /// Assemble the snapshot a policy will see.
+    /// Assemble the snapshot a policy will see. `tier_fault_ema` is the
+    /// scheduler's smoothed tier faults/step (0.0 when no offload tier
+    /// is attached).
+    #[allow(clippy::too_many_arguments)]
     pub fn snapshot(
         &self,
         now: f64,
@@ -217,6 +220,7 @@ impl Governor {
         free_frac: f64,
         queue_depth: usize,
         running: usize,
+        tier_fault_ema: f64,
         steps: u64,
     ) -> SignalSnapshot {
         SignalSnapshot {
@@ -229,6 +233,7 @@ impl Governor {
             mean_mass: hub.mean_mass(),
             mean_keep_ratio: hub.mean_keep_ratio(),
             probe_recall: hub.probe_recall(),
+            tier_fault_ema,
             steps,
         }
     }
@@ -251,7 +256,13 @@ impl Governor {
             self.policy_directive = self.policy.decide(snap).clamped();
         }
         let mut d = self.policy_directive;
-        let level = self.cfg.pressure.level(snap.free_frac);
+        // Effective rung = max of memory pressure and sustained tier
+        // faults (the fault rung caps at 2 — see pressure.rs).
+        let level = self
+            .cfg
+            .pressure
+            .level(snap.free_frac)
+            .max(self.cfg.pressure.fault_level(snap.tier_fault_ema));
         self.cfg.pressure.apply(level, &mut d);
         let d = d.clamped();
         let changed = d != self.directive;
@@ -380,6 +391,21 @@ mod tests {
     }
 
     #[test]
+    fn sustained_tier_faults_degrade_without_memory_pressure() {
+        let mut g = Governor::new("static", GovernorConfig::default()).unwrap();
+        // Plenty of page headroom, but the offload tier is failing.
+        let snap = SignalSnapshot { free_frac: 0.9, tier_fault_ema: 5.0, ..Default::default() };
+        let d = g.step(&snap);
+        assert_eq!(d.degrade_level, 2, "fault rung caps below admission freeze");
+        assert!(d.p_scale < 1.0);
+        assert!(d.budget_scale < 1.0);
+        assert_eq!(d.sparse_prefill_override, Some(true));
+        // A healthy tier with the same headroom stays neutral.
+        let calm = SignalSnapshot { free_frac: 0.9, ..Default::default() };
+        assert_eq!(g.step(&calm).degrade_level, 0);
+    }
+
+    #[test]
     fn pressure_overlays_any_policy() {
         // Even the static policy degrades under pressure.
         let mut g = Governor::new("static", GovernorConfig::default()).unwrap();
@@ -407,7 +433,7 @@ mod tests {
         // Steps twice as slow as the SLO allows.
         for i in 0..20u64 {
             g.observe_step(0.020, 4);
-            let snap = g.snapshot(i as f64 * 0.02, &hub, 0.9, 0, 4, i);
+            let snap = g.snapshot(i as f64 * 0.02, &hub, 0.9, 0, 4, 0.0, i);
             g.step(&snap);
         }
         let d = g.directive();
@@ -438,7 +464,7 @@ mod tests {
         .unwrap();
         let hub = SignalHub::new(1);
         g.observe_step(0.020, 1); // one violating latency sample
-        let snap = g.snapshot(0.0, &hub, 0.9, 0, 1, 1);
+        let snap = g.snapshot(0.0, &hub, 0.9, 0, 1, 0.0, 1);
         let first = g.step(&snap);
         assert!(first.budget_scale < 1.0);
         let mut held = first;
@@ -448,7 +474,7 @@ mod tests {
         assert_eq!(held, first, "stale signals must not advance the policy");
         // A fresh observation resumes adaptation.
         g.observe_step(0.020, 1);
-        let snap2 = g.snapshot(0.1, &hub, 0.9, 0, 1, 2);
+        let snap2 = g.snapshot(0.1, &hub, 0.9, 0, 1, 0.0, 2);
         let next = g.step(&snap2);
         assert!(next.budget_scale < first.budget_scale);
     }

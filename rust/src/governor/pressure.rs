@@ -27,6 +27,15 @@
 //! knob: with p and B0 both cut, short contexts would pay the full
 //! estimation error for negligible savings — running them dense keeps
 //! them exact while long contexts carry the degradation.
+//!
+//! **Tier faults** (DESIGN.md §14) feed the same ladder: a sustained
+//! rate of offload-tier read/write errors engages levels 1–2 even with
+//! page headroom, because pruning harder and forcing sparse prefill are
+//! exactly the knobs that touch *fewer cold pages per step* — shrinking
+//! exposure to a degrading tier before pages start getting lost
+//! outright. Faults alone never freeze admission (level 3 stays
+//! reserved for genuine memory exhaustion); the effective rung is the
+//! max of the memory rung and the fault rung.
 
 use super::BudgetDirective;
 
@@ -46,6 +55,11 @@ pub struct PressureConfig {
     pub budget_scale: f32,
     /// `dense_below` override applied at level 3.
     pub dense_below: usize,
+    /// Smoothed tier faults/step at or above which the fault rung is 1.
+    pub fault_tighten_at: f64,
+    /// Smoothed tier faults/step at or above which the fault rung is 2
+    /// (its ceiling — faults alone never freeze admission).
+    pub fault_shrink_at: f64,
 }
 
 impl Default for PressureConfig {
@@ -57,6 +71,8 @@ impl Default for PressureConfig {
             p_scale: 0.9,
             budget_scale: 0.6,
             dense_below: 256,
+            fault_tighten_at: 0.5,
+            fault_shrink_at: 2.0,
         }
     }
 }
@@ -69,6 +85,20 @@ impl PressureConfig {
         } else if free_frac < self.shrink_below {
             2
         } else if free_frac < self.tighten_below {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// Fault rung for a smoothed tier-fault rate (faults/step EMA,
+    /// read + write errors + lost pages). Capped at 2: degrading the
+    /// pruning knobs shrinks tier exposure, but only real memory
+    /// exhaustion may freeze admission.
+    pub fn fault_level(&self, fault_ema: f64) -> u8 {
+        if fault_ema >= self.fault_shrink_at {
+            2
+        } else if fault_ema >= self.fault_tighten_at {
             1
         } else {
             0
@@ -143,6 +173,16 @@ mod tests {
                 assert_eq!(d.sparse_prefill_override, None);
             }
         }
+    }
+
+    #[test]
+    fn fault_rung_engages_and_caps_below_freeze() {
+        let c = PressureConfig::default();
+        assert_eq!(c.fault_level(0.0), 0);
+        assert_eq!(c.fault_level(c.fault_tighten_at), 1);
+        assert_eq!(c.fault_level(c.fault_shrink_at), 2);
+        // Faults alone never reach the admission-freeze rung.
+        assert_eq!(c.fault_level(1e9), 2);
     }
 
     #[test]

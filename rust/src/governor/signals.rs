@@ -272,6 +272,10 @@ pub struct SignalSnapshot {
     pub mean_keep_ratio: f64,
     /// EMA of the dense recall probe (1.0 until the first probe).
     pub probe_recall: f64,
+    /// Smoothed offload-tier faults per step (read + write errors +
+    /// lost pages; 0 with no tier attached or a healthy one). Feeds the
+    /// pressure ladder's fault rung (DESIGN.md §14).
+    pub tier_fault_ema: f64,
     /// Engine decode steps so far.
     pub steps: u64,
 }
@@ -288,6 +292,7 @@ impl Default for SignalSnapshot {
             mean_mass: 0.0,
             mean_keep_ratio: 0.0,
             probe_recall: 1.0,
+            tier_fault_ema: 0.0,
             steps: 0,
         }
     }

@@ -50,7 +50,10 @@ pub mod offload;
 use std::cell::UnsafeCell;
 use std::sync::atomic::Ordering;
 
-use offload::{PrefetchPlan, Tier, TierState, PAGE_EVICTED, PAGE_LOADING, PAGE_RESIDENT};
+use offload::{
+    PrefetchPlan, Tier, TierState, PAGE_EVICTED, PAGE_LOADING, PAGE_LOST, PAGE_RESIDENT,
+    TIER_READ_RETRIES, TIER_RETRY_DEADLINE, TIER_WRITE_RETRIES,
+};
 
 use crate::tensor::quant::{self, QuantBits, QuantBlock};
 
@@ -98,16 +101,32 @@ impl SeqCache {
     }
 }
 
-/// Errors from the allocator.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// Errors surfaced per request by the cache / batched step. The
+/// scheduler maps each variant to a different fate: `OutOfPages` is
+/// *transient* (preempt and requeue — pressure clears), the rest are
+/// *terminal* for the request (`RequestState::Failed`) but never for
+/// the process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CacheError {
     OutOfPages,
+    /// A sealed page's bytes became unreachable: the tier-read retry
+    /// ladder exhausted (see `offload::TIER_READ_RETRIES`). The page's
+    /// fp32 region is zeroed — loudly wrong, never torn — and the
+    /// owning request must fail rather than emit silently corrupt
+    /// logits.
+    PageLost,
+    /// An attention work item panicked on a pool thread and was
+    /// quarantined (engine-level containment; carried here so the
+    /// per-item error plumbing stays one type).
+    WorkerPanic,
 }
 
 impl std::fmt::Display for CacheError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             CacheError::OutOfPages => write!(f, "KV cache pool exhausted"),
+            CacheError::PageLost => write!(f, "KV page lost (tier read retries exhausted)"),
+            CacheError::WorkerPanic => write!(f, "attention worker panicked (item quarantined)"),
         }
     }
 }
@@ -225,9 +244,13 @@ impl PagedKvCache {
             self.mirror[p as usize * self.cfg.kv_heads + h] = None;
         }
         // A fresh page starts resident (it is about to be appended to);
-        // its prior incarnation may have been evicted.
+        // its prior incarnation may have been evicted — or lost (a
+        // `PAGE_LOST` escalation is sticky only for the incarnation that
+        // failed; reallocation is the reset point). The durability flag
+        // resets with it: the new contents have not been spilled yet.
         if let Some(ts) = &self.tier {
             ts.state[p as usize].store(PAGE_RESIDENT, Ordering::Relaxed);
+            ts.durable[p as usize].store(0, Ordering::Relaxed);
             ts.touch(p);
         }
         Ok(p)
@@ -293,8 +316,17 @@ impl PagedKvCache {
 
     /// Fault `page` in from the tier. Exactly one thread (the
     /// `EVICTED → LOADING` CAS winner) performs the tier read; racers
-    /// spin until the winner publishes `RESIDENT`. Returns whether this
-    /// call performed the load.
+    /// spin until the winner publishes `RESIDENT` (or `LOST`). Returns
+    /// whether this call performed the load attempt.
+    ///
+    /// Failure ladder (DESIGN.md §14): a failed read is retried up to
+    /// [`TIER_READ_RETRIES`] times with exponential spin backoff under a
+    /// [`TIER_RETRY_DEADLINE`] wall clock; exhaustion zero-fills the
+    /// region and publishes `PAGE_LOST` so racers unstick and the engine
+    /// fails the owning request with [`CacheError::PageLost`]. A *panic*
+    /// out of the tier (chaos injection, tier bugs) is contained the
+    /// same way: the unwind guard below guarantees the page never stays
+    /// `LOADING`, so no racer can spin forever on a dead loader.
     #[cold]
     fn fault_page_slow(&self, ts: &TierState, page: PageId, prefetch: bool) -> bool {
         loop {
@@ -308,22 +340,67 @@ impl PagedKvCache {
                     let t0 = std::time::Instant::now();
                     let n = self.floats_per_page();
                     let b = page as usize * n;
-                    // SAFETY: this thread won the CAS, so it is the
-                    // page's unique writer; readers wait for the
-                    // release-store of RESIDENT below.
-                    unsafe {
-                        ts.tier.read_page(
-                            page as usize,
-                            self.k.write_racy(b, n),
-                            self.v.write_racy(b, n),
-                        );
+                    let deadline = t0 + TIER_RETRY_DEADLINE;
+                    let mut attempt = 0u32;
+                    let loaded = loop {
+                        // SAFETY: this thread won the CAS, so it is the
+                        // page's unique writer; readers wait for the
+                        // release-store of RESIDENT below. The
+                        // catch_unwind contains tier panics so the state
+                        // machine below always runs (AssertUnwindSafe is
+                        // sound: on unwind the buffers hold torn bytes,
+                        // which the retry overwrites or the zero-fill
+                        // below erases — they are never published).
+                        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || unsafe {
+                                ts.tier.read_page(
+                                    page as usize,
+                                    self.k.write_racy(b, n),
+                                    self.v.write_racy(b, n),
+                                )
+                            },
+                        ));
+                        match res {
+                            Ok(Ok(())) => break true,
+                            Ok(Err(_)) | Err(_) => {
+                                ts.read_errors.fetch_add(1, Ordering::Relaxed);
+                                attempt += 1;
+                                if attempt > TIER_READ_RETRIES
+                                    || std::time::Instant::now() >= deadline
+                                {
+                                    break false;
+                                }
+                                ts.retries.fetch_add(1, Ordering::Relaxed);
+                                // Exponential spin backoff (64·2^attempt
+                                // spins): transient tier hiccups clear
+                                // without yielding the OS scheduler.
+                                for _ in 0..(64u32 << attempt.min(8)) {
+                                    std::hint::spin_loop();
+                                }
+                            }
+                        }
+                    };
+                    if loaded {
+                        ts.state[page as usize].store(PAGE_RESIDENT, Ordering::Release);
+                        ts.faults.fetch_add(1, Ordering::Relaxed);
+                        if prefetch {
+                            ts.prefetched.fetch_add(1, Ordering::Relaxed);
+                        }
+                        ts.bytes_faulted.fetch_add((2 * n * 4) as u64, Ordering::Relaxed);
+                    } else {
+                        // Ladder exhausted: erase any torn bytes (loudly
+                        // wrong zeros, never corruption) and publish
+                        // LOST — racers unstick, the owning request
+                        // fails, neighbors are untouched.
+                        // SAFETY: still the unique writer (state is
+                        // LOADING until the store below).
+                        unsafe {
+                            self.k.write_racy(b, n).fill(0.0);
+                            self.v.write_racy(b, n).fill(0.0);
+                        }
+                        ts.state[page as usize].store(PAGE_LOST, Ordering::Release);
+                        ts.lost_pages.fetch_add(1, Ordering::Relaxed);
                     }
-                    ts.state[page as usize].store(PAGE_RESIDENT, Ordering::Release);
-                    ts.faults.fetch_add(1, Ordering::Relaxed);
-                    if prefetch {
-                        ts.prefetched.fetch_add(1, Ordering::Relaxed);
-                    }
-                    ts.bytes_faulted.fetch_add((2 * n * 4) as u64, Ordering::Relaxed);
                     crate::obs::trace::record_ctx(
                         crate::obs::trace::Stage::PageFault,
                         t0.elapsed(),
@@ -331,16 +408,34 @@ impl PagedKvCache {
                     return true;
                 }
                 Err(s) if s == PAGE_RESIDENT => return false,
+                Err(s) if s == PAGE_LOST => {
+                    // Sticky for this incarnation: the owning request is
+                    // failing; do not burn retries on every row read.
+                    return false;
+                }
                 Err(_) => {
                     // A racer is loading; evictions only happen under
-                    // `&mut self`, so once RESIDENT appears it holds for
-                    // the rest of this read phase.
+                    // `&mut self`, so once the loader publishes a
+                    // terminal state (RESIDENT or LOST) it holds for the
+                    // rest of this read phase.
                     while ts.state[page as usize].load(Ordering::Acquire) == PAGE_LOADING {
                         std::hint::spin_loop();
                     }
                 }
             }
         }
+    }
+
+    /// Does any page of `seq` sit in `PAGE_LOST`? The engine calls this
+    /// per (request, layer) at the end of a batched step to convert lost
+    /// pages into a per-request [`CacheError::PageLost`] — conservative
+    /// (a lost page the item's sparse selection skipped still fails the
+    /// request) but deterministic and never silently corrupt.
+    pub fn has_lost_page(&self, seq: &SeqCache) -> bool {
+        let Some(ts) = &self.tier else { return false };
+        seq.pages
+            .iter()
+            .any(|&p| ts.state[p as usize].load(Ordering::Acquire) == PAGE_LOST)
     }
 
     /// Prefetch ticket entry point: fault `page` if it is not resident
@@ -460,8 +555,7 @@ impl PagedKvCache {
         if let Some(ts) = &self.tier {
             let n = self.floats_per_page();
             let b = page as usize * n;
-            ts.tier.write_page(page as usize, self.k.read(b, n), self.v.read(b, n));
-            ts.spilled_writes.fetch_add(1, Ordering::Relaxed);
+            spill_page(ts, page as usize, self.k.read(b, n), self.v.read(b, n));
         }
     }
 
@@ -517,24 +611,66 @@ impl PagedKvCache {
         for p in 0..self.cfg.num_pages {
             if self.refs[p] > 0 && self.is_sealed(p) {
                 let b = p * n;
-                ts.tier.write_page(p, self.k.read(b, n), self.v.read(b, n));
-                ts.spilled_writes.fetch_add(1, Ordering::Relaxed);
+                spill_page(&ts, p, self.k.read(b, n), self.v.read(b, n));
             }
         }
         self.tier = Some(ts);
     }
 
     /// Detach the tier, faulting every evicted in-use page back in so
-    /// the cache returns to the fully-resident invariant.
-    pub fn detach_tier(&mut self) {
-        let Some(ts) = self.tier.take() else { return };
+    /// the cache returns to the fully-resident invariant. Reads run the
+    /// same bounded retry ladder as the fault path; a page whose ladder
+    /// exhausts is zero-filled and counted lost (the owning request
+    /// fails on its next step) — detach never panics the process.
+    pub fn detach_tier(&mut self) -> Vec<PageId> {
+        let mut lost = Vec::new();
+        let Some(ts) = self.tier.take() else { return lost };
         let n = self.floats_per_page();
         for p in 0..self.cfg.num_pages {
             if self.refs[p] > 0 && ts.state[p].load(Ordering::Relaxed) == PAGE_EVICTED {
-                // SAFETY: `&mut self` — no concurrent access.
-                unsafe {
-                    ts.tier.read_page(p, self.k.write_racy(p * n, n), self.v.write_racy(p * n, n));
+                let mut ok = false;
+                for attempt in 0..=TIER_READ_RETRIES {
+                    // SAFETY: `&mut self` — no concurrent access.
+                    let res = unsafe {
+                        ts.tier.read_page(
+                            p,
+                            self.k.write_racy(p * n, n),
+                            self.v.write_racy(p * n, n),
+                        )
+                    };
+                    match res {
+                        Ok(()) => {
+                            ok = true;
+                            break;
+                        }
+                        Err(_) => {
+                            ts.read_errors.fetch_add(1, Ordering::Relaxed);
+                            if attempt < TIER_READ_RETRIES {
+                                ts.retries.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
                 }
+                if !ok {
+                    self.k.slice_mut(p * n, n).fill(0.0);
+                    self.v.slice_mut(p * n, n).fill(0.0);
+                    lost.push(p as PageId);
+                }
+            }
+        }
+        lost
+    }
+
+    /// Re-poison `pages` as `PAGE_LOST` on the *current* tier — used by
+    /// the engine to carry lost pages across a detach/attach
+    /// reconfiguration so their owners still fail instead of reading
+    /// silent zeros. No-op without a tier (the engine then tracks the
+    /// pages itself).
+    pub fn mark_pages_lost(&self, pages: &[PageId]) {
+        if let Some(ts) = &self.tier {
+            for &p in pages {
+                ts.state[p as usize].store(PAGE_LOST, Ordering::Release);
+                ts.lost_pages.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
@@ -591,7 +727,11 @@ impl PagedKvCache {
             resident += 1;
             let sealed = self.page_fill[p] as usize == self.cfg.page_size
                 && self.mirror[p * self.cfg.kv_heads].is_some();
-            if sealed {
+            // Only *durable* sealed pages are evictable: a page whose
+            // spill never acknowledged (torn write, tier outage) has no
+            // trustworthy tier copy, so it stays pinned resident —
+            // degraded capacity, never lost data.
+            if sealed && ts.durable[p].load(Ordering::Relaxed) == 1 {
                 let touch = ts.last_touch[p].load(Ordering::Relaxed);
                 ts.evict_scratch.push((touch, p as PageId));
             }
@@ -748,6 +888,32 @@ impl PagedKvCache {
             ub += lo.max(hi);
         }
         ub + slack * qabs_sum
+    }
+}
+
+/// Write-through spill with the bounded write-retry ladder
+/// (DESIGN.md §14). On acknowledgement the page becomes durable
+/// (evictable); on exhaustion it stays non-durable, which
+/// `enforce_residency` treats as pinned resident — the request keeps
+/// its exact bytes and only capacity degrades.
+fn spill_page(ts: &TierState, page: usize, k: &[f32], v: &[f32]) {
+    for attempt in 0..=TIER_WRITE_RETRIES {
+        match ts.tier.write_page(page, k, v) {
+            Ok(()) => {
+                ts.durable[page].store(1, Ordering::Release);
+                ts.spilled_writes.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            Err(_) => {
+                ts.write_errors.fetch_add(1, Ordering::Relaxed);
+                if attempt < TIER_WRITE_RETRIES {
+                    ts.retries.fetch_add(1, Ordering::Relaxed);
+                    for _ in 0..(64u32 << attempt.min(8)) {
+                        std::hint::spin_loop();
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -1102,6 +1268,133 @@ mod tests {
             let (page, slot) = seq.locate(i, 16);
             assert_eq!(c.k_at(page, 0, slot), &k[..8]);
         }
+    }
+
+    #[test]
+    fn lost_page_fails_loudly_never_hangs() {
+        let mut c = mk(1, 8, 6);
+        let mut seq = SeqCache::default();
+        let mut r = Rng::new(31);
+        for _ in 0..64 {
+            let k = rand_kv(&mut r, 8);
+            c.append(&mut seq, &k, &k).unwrap();
+        }
+        // Reads always fail; writes always succeed (pages can evict).
+        let cfg = offload::ChaosConfig { seed: 1, p_read: 1.0, p_write: 0.0, p_panic: 0.0 };
+        let chaos = Box::new(offload::ChaosTier::new(sim_tier_for(&c), cfg, 6));
+        c.attach_tier(chaos, 2);
+        c.set_clock(1);
+        c.enforce_residency(0);
+        assert!(!c.has_lost_page(&seq), "nothing is lost before any read");
+        let victim = (0..64)
+            .find(|&i| !c.is_resident(seq.locate(i, 16).0))
+            .expect("some token must sit on an evicted page");
+        let (page, slot) = seq.locate(victim, 16);
+        // Demand read: the ladder exhausts, the row comes back as loud
+        // zeros (never torn bytes), and nothing hangs or panics.
+        assert_eq!(c.k_at(page, 0, slot), &[0.0f32; 8]);
+        assert!(c.has_lost_page(&seq));
+        let ts = c.tier_state().unwrap();
+        assert!(ts.lost_pages.load(Ordering::Relaxed) >= 1);
+        assert!(ts.read_errors.load(Ordering::Relaxed) >= 1);
+        assert!(ts.retries.load(Ordering::Relaxed) >= 1);
+        // Sticky: a second read must not burn another retry ladder.
+        let errs = ts.read_errors.load(Ordering::Relaxed);
+        let _ = c.k_at(page, 0, slot);
+        let ts = c.tier_state().unwrap();
+        assert_eq!(ts.read_errors.load(Ordering::Relaxed), errs);
+        // Reallocation is the reset point: freed lost pages come back
+        // clean for their next owner.
+        c.release(&seq);
+        let mut seq2 = SeqCache::default();
+        for _ in 0..96 {
+            c.append(&mut seq2, &[1.0; 8], &[1.0; 8]).unwrap();
+        }
+        assert!(!c.has_lost_page(&seq2));
+    }
+
+    #[test]
+    fn unacknowledged_spill_pins_page_resident() {
+        let mut c = mk(1, 8, 6);
+        let mut seq = SeqCache::default();
+        let mut r = Rng::new(37);
+        let mut ks = Vec::new();
+        for _ in 0..64 {
+            let k = rand_kv(&mut r, 8);
+            c.append(&mut seq, &k, &k).unwrap();
+            ks.push(k);
+        }
+        // Every spill tears: no page may ever become an eviction victim.
+        let cfg = offload::ChaosConfig { seed: 5, p_read: 0.0, p_write: 1.0, p_panic: 0.0 };
+        let chaos = Box::new(offload::ChaosTier::new(sim_tier_for(&c), cfg, 6));
+        c.attach_tier(chaos, 1);
+        c.set_clock(1);
+        c.enforce_residency(0);
+        assert_eq!(c.resident_in_use_pages(), 4, "non-durable pages must stay pinned");
+        let ts = c.tier_state().unwrap();
+        assert_eq!(ts.evictions.load(Ordering::Relaxed), 0);
+        assert!(ts.write_errors.load(Ordering::Relaxed) >= 4);
+        assert_eq!(ts.spilled_writes.load(Ordering::Relaxed), 0);
+        // The data stayed resident, so every row is still bit-exact.
+        for (i, k) in ks.iter().enumerate() {
+            let (page, slot) = seq.locate(i, 16);
+            assert_eq!(c.k_at(page, 0, slot), &k[..8]);
+        }
+        assert!(!c.has_lost_page(&seq));
+    }
+
+    #[test]
+    fn transient_read_fault_heals_bit_exact() {
+        use std::sync::atomic::AtomicU64;
+        /// Fails the first two reads of every page, then delegates.
+        struct Flaky {
+            inner: offload::SimTier,
+            attempts: Vec<AtomicU64>,
+        }
+        impl offload::Tier for Flaky {
+            fn name(&self) -> &'static str {
+                "flaky"
+            }
+            fn write_page(&self, p: usize, k: &[f32], v: &[f32])
+                -> Result<(), offload::TierError> {
+                self.inner.write_page(p, k, v)
+            }
+            fn read_page(&self, p: usize, ko: &mut [f32], vo: &mut [f32])
+                -> Result<(), offload::TierError> {
+                if self.attempts[p].fetch_add(1, Ordering::Relaxed) < 2 {
+                    return Err(offload::TierError { op: offload::TierOp::Read, page: p });
+                }
+                self.inner.read_page(p, ko, vo)
+            }
+        }
+        let mut c = mk(1, 8, 6);
+        let mut seq = SeqCache::default();
+        let mut r = Rng::new(41);
+        let mut ks = Vec::new();
+        for _ in 0..64 {
+            let k = rand_kv(&mut r, 8);
+            c.append(&mut seq, &k, &k).unwrap();
+            ks.push(k);
+        }
+        let fpp = c.cfg.kv_heads * c.cfg.page_size * c.cfg.head_dim;
+        let flaky = Flaky {
+            inner: offload::SimTier::new(fpp, 6, 1),
+            attempts: (0..6).map(|_| AtomicU64::new(0)).collect(),
+        };
+        c.attach_tier(Box::new(flaky), 2);
+        c.set_clock(1);
+        c.enforce_residency(0);
+        // Two failures per page sit inside the ladder's budget: every
+        // row must heal to exact bytes, with zero lost pages.
+        for (i, k) in ks.iter().enumerate() {
+            let (page, slot) = seq.locate(i, 16);
+            assert_eq!(c.k_at(page, 0, slot), &k[..8], "tok {i}");
+        }
+        let ts = c.tier_state().unwrap();
+        assert_eq!(ts.lost_pages.load(Ordering::Relaxed), 0);
+        assert!(ts.read_errors.load(Ordering::Relaxed) >= 2);
+        assert!(ts.retries.load(Ordering::Relaxed) >= 2);
+        assert!(!c.has_lost_page(&seq));
     }
 
     #[test]

@@ -41,6 +41,21 @@
 //!   inputs are deterministic, so the resident set — and therefore the
 //!   total fault count — is identical for any thread count.
 //!
+//! **Fault domains (DESIGN.md §14).** Tier I/O is *fallible*: both trait
+//! methods return `Result<(), TierError>`, and the cache's fault funnel
+//! ([`super::PagedKvCache`]'s `fault_page_slow`) runs a bounded
+//! retry-with-backoff ladder before escalating a page to `PAGE_LOST` —
+//! the per-request failure signal (`CacheError::PageLost`). Writes that
+//! never acknowledge leave the page non-`durable`, which pins it
+//! resident (an unacknowledged — possibly torn — spill must never become
+//! a page's only copy). The [`ChaosTier`] wrapper injects seeded,
+//! deterministic read/write errors, added latency, torn writes, and
+//! (optionally) panics into any inner tier for soak testing
+//! (`TWILIGHT_CHAOS=seed:p_read:p_write[:p_panic]` / `--chaos`): fault
+//! decisions are keyed on `(page, op, per-page attempt ordinal)` — never
+//! on global call order — so fault sites are thread-count invariant and
+//! a retry draws a fresh, independent outcome.
+//!
 //! The [`OffloadArena`] at the bottom is the original bench-only model
 //! of the slow link (`load_tokens` pays `slowdown` redundant passes per
 //! token); `benches/table7_offload.rs` still uses it for the per-token
@@ -53,6 +68,34 @@ use super::PageId;
 
 // --- the slow tier -------------------------------------------------------
 
+/// Which tier operation failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierOp {
+    Read,
+    Write,
+}
+
+/// A failed tier operation. Carries enough to account and retry; the
+/// underlying cause (I/O error, injected chaos) is deliberately erased —
+/// the retry ladder treats every failure the same way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierError {
+    pub op: TierOp,
+    pub page: usize,
+}
+
+impl std::fmt::Display for TierError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let op = match self.op {
+            TierOp::Read => "read",
+            TierOp::Write => "write",
+        };
+        write!(f, "tier {op} of page {} failed", self.page)
+    }
+}
+
+impl std::error::Error for TierError {}
+
 /// A slow storage tier holding sealed pages' K/V at page granularity.
 ///
 /// Implementations are shared read-only across the worker pool: faults
@@ -62,14 +105,21 @@ use super::PageId;
 /// time, and `write_page` is only called from `&mut PagedKvCache`
 /// contexts (page seal, tier attach), never concurrently with a read of
 /// the same page.
+///
+/// Failure contract: on `Err` the output buffers (read) or the backing
+/// store (write) may hold *partial* data — callers must either retry to
+/// completion or treat the operation as if it never happened (the cache
+/// zero-fills on a lost read and leaves the page non-durable on a failed
+/// write; torn bytes are never observable).
 pub trait Tier: Send + Sync {
     /// Stable backend name (reports / bench labels).
     fn name(&self) -> &'static str;
     /// Spill one page: `k`/`v` are the page's full
     /// `[kv_heads * page_size * head_dim]` regions.
-    fn write_page(&self, page: usize, k: &[f32], v: &[f32]);
+    fn write_page(&self, page: usize, k: &[f32], v: &[f32]) -> Result<(), TierError>;
     /// Fault one page back; `write_page(page, ..)` must have happened.
-    fn read_page(&self, page: usize, k_out: &mut [f32], v_out: &mut [f32]);
+    fn read_page(&self, page: usize, k_out: &mut [f32], v_out: &mut [f32])
+        -> Result<(), TierError>;
 }
 
 /// Interior-mutable page storage shared across pool threads.
@@ -139,7 +189,7 @@ impl Tier for SimTier {
         "sim"
     }
 
-    fn write_page(&self, page: usize, k: &[f32], v: &[f32]) {
+    fn write_page(&self, page: usize, k: &[f32], v: &[f32]) -> Result<(), TierError> {
         let n = self.floats_per_page;
         assert_eq!(k.len(), n);
         assert_eq!(v.len(), n);
@@ -151,10 +201,15 @@ impl Tier for SimTier {
             self.v.write(page * n, n).copy_from_slice(v);
         }
         self.written[page].store(1, Ordering::Release);
+        Ok(())
     }
 
-    fn read_page(&self, page: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+    fn read_page(&self, page: usize, k_out: &mut [f32], v_out: &mut [f32])
+        -> Result<(), TierError> {
         let n = self.floats_per_page;
+        // A read before any write is a *caller* bug (the sealing contract
+        // writes through before any page can be evicted), not a fault to
+        // retry — keep it a panic so the bug fails loudly in tests.
         assert_eq!(
             self.written[page].load(Ordering::Acquire),
             1,
@@ -174,6 +229,7 @@ impl Tier for SimTier {
                 v_out[..n].copy_from_slice(src_v);
             }
         }
+        Ok(())
     }
 }
 
@@ -229,24 +285,191 @@ impl Tier for FileTier {
         "file"
     }
 
-    fn write_page(&self, page: usize, k: &[f32], v: &[f32]) {
+    fn write_page(&self, page: usize, k: &[f32], v: &[f32]) -> Result<(), TierError> {
         use std::os::unix::fs::FileExt;
         let n = self.floats_per_page;
         assert_eq!(k.len(), n);
         assert_eq!(v.len(), n);
         let off = self.page_off(page);
-        self.file.write_all_at(f32_bytes(k), off).expect("tier file write (K)");
-        self.file.write_all_at(f32_bytes(v), off + (n * 4) as u64).expect("tier file write (V)");
+        let e = TierError { op: TierOp::Write, page };
+        // A transient pwrite error is a fault, not a crash: the caller's
+        // retry ladder re-attempts and, failing that, pins the page
+        // resident (non-durable) — the process never dies here.
+        self.file.write_all_at(f32_bytes(k), off).map_err(|_| e)?;
+        self.file.write_all_at(f32_bytes(v), off + (n * 4) as u64).map_err(|_| e)?;
+        Ok(())
     }
 
-    fn read_page(&self, page: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+    fn read_page(&self, page: usize, k_out: &mut [f32], v_out: &mut [f32])
+        -> Result<(), TierError> {
         use std::os::unix::fs::FileExt;
         let n = self.floats_per_page;
         let off = self.page_off(page);
-        self.file.read_exact_at(f32_bytes_mut(&mut k_out[..n]), off).expect("tier file read (K)");
+        let e = TierError { op: TierOp::Read, page };
+        self.file.read_exact_at(f32_bytes_mut(&mut k_out[..n]), off).map_err(|_| e)?;
         self.file
             .read_exact_at(f32_bytes_mut(&mut v_out[..n]), off + (n * 4) as u64)
-            .expect("tier file read (V)");
+            .map_err(|_| e)?;
+        Ok(())
+    }
+}
+
+// --- chaos injection ------------------------------------------------------
+
+/// Seeded fault-injection parameters for [`ChaosTier`]. Parsed from
+/// `TWILIGHT_CHAOS=seed:p_read:p_write[:p_panic]` (or `--chaos` with the
+/// same format): `p_read`/`p_write` are per-attempt failure
+/// probabilities in `[0, 1]`; the optional `p_panic` makes a failing
+/// read *panic* instead of returning `Err` (exercising the worker-pool
+/// quarantine path end to end).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosConfig {
+    pub seed: u64,
+    pub p_read: f64,
+    pub p_write: f64,
+    pub p_panic: f64,
+}
+
+impl ChaosConfig {
+    /// Parse `seed:p_read:p_write[:p_panic]`; `None` on any malformed
+    /// field (callers decide whether that is a hard error or "off").
+    pub fn parse(s: &str) -> Option<ChaosConfig> {
+        let mut it = s.split(':');
+        let seed = it.next()?.trim().parse::<u64>().ok()?;
+        let p_read = it.next()?.trim().parse::<f64>().ok()?;
+        let p_write = it.next()?.trim().parse::<f64>().ok()?;
+        let p_panic = match it.next() {
+            Some(f) => f.trim().parse::<f64>().ok()?,
+            None => 0.0,
+        };
+        if it.next().is_some() {
+            return None;
+        }
+        for p in [p_read, p_write, p_panic] {
+            if !(0.0..=1.0).contains(&p) {
+                return None;
+            }
+        }
+        Some(ChaosConfig { seed, p_read, p_write, p_panic })
+    }
+
+    /// `TWILIGHT_CHAOS` from the environment; `None` = chaos off (the
+    /// default — with chaos off no `ChaosTier` is ever constructed, so
+    /// every byte of behavior is the historical one).
+    pub fn from_env() -> Option<ChaosConfig> {
+        std::env::var("TWILIGHT_CHAOS").ok().as_deref().and_then(ChaosConfig::parse)
+    }
+}
+
+/// SplitMix64 — the draw generator behind [`ChaosTier`]'s fault
+/// decisions (stateless per draw; all state lives in the keyed inputs).
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Spin iterations injected on a "slow op" draw (models a degraded
+/// link / deep queue; deterministic in outcome, only wall time moves).
+const CHAOS_SLOW_SPINS: usize = 4096;
+
+/// A fault-injecting decorator over any inner [`Tier`].
+///
+/// Determinism contract: every decision is a pure hash of
+/// `(seed, op, page, per-(page,op) attempt ordinal)`. The attempt
+/// ordinal advances once per call *on that page*, and the cache's page
+/// state machine admits exactly one tier read per (page, eviction
+/// epoch) regardless of which thread wins the race — so the fault
+/// *sites* (which loads fail, which spills tear) are identical for any
+/// thread count, and a retry is a fresh independent draw (the ladder
+/// can succeed). With the same seed the whole fault schedule replays
+/// bit-for-bit.
+pub struct ChaosTier {
+    inner: Box<dyn Tier>,
+    cfg: ChaosConfig,
+    read_attempts: Vec<AtomicU64>,
+    write_attempts: Vec<AtomicU64>,
+    /// Injected read / write failures (diagnostics; panics count as
+    /// read failures — they enter the same ladder).
+    pub injected_reads: AtomicU64,
+    pub injected_writes: AtomicU64,
+}
+
+impl ChaosTier {
+    pub fn new(inner: Box<dyn Tier>, cfg: ChaosConfig, num_pages: usize) -> ChaosTier {
+        ChaosTier {
+            inner,
+            cfg,
+            read_attempts: (0..num_pages).map(|_| AtomicU64::new(0)).collect(),
+            write_attempts: (0..num_pages).map(|_| AtomicU64::new(0)).collect(),
+            injected_reads: AtomicU64::new(0),
+            injected_writes: AtomicU64::new(0),
+        }
+    }
+
+    /// Uniform draw in `[0, 1)` keyed on (seed, op, page, attempt).
+    fn draw(&self, op: u64, page: usize, attempt: u64) -> f64 {
+        let h = splitmix64(
+            splitmix64(splitmix64(self.cfg.seed ^ (op << 56)) ^ page as u64) ^ attempt,
+        );
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Burn deterministic time when the latency draw fires (probability
+    /// `p_read`, independent of the failure draw).
+    fn maybe_slow(&self, page: usize, attempt: u64) {
+        if self.cfg.p_read > 0.0 && self.draw(2, page, attempt) < self.cfg.p_read {
+            for _ in 0..CHAOS_SLOW_SPINS {
+                std::hint::spin_loop();
+            }
+        }
+    }
+}
+
+impl Tier for ChaosTier {
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn write_page(&self, page: usize, k: &[f32], v: &[f32]) -> Result<(), TierError> {
+        let attempt = self.write_attempts[page].fetch_add(1, Ordering::Relaxed);
+        self.maybe_slow(page, attempt);
+        if self.draw(1, page, attempt) < self.cfg.p_write {
+            self.injected_writes.fetch_add(1, Ordering::Relaxed);
+            // Torn write: half the draws lose the data entirely, the
+            // other half land it but never acknowledge — either way the
+            // caller must treat the spill as void (the page stays
+            // non-durable and pinned resident until a retry succeeds).
+            if self.draw(3, page, attempt) < 0.5 {
+                let _ = self.inner.write_page(page, k, v);
+            }
+            return Err(TierError { op: TierOp::Write, page });
+        }
+        self.inner.write_page(page, k, v)
+    }
+
+    fn read_page(&self, page: usize, k_out: &mut [f32], v_out: &mut [f32])
+        -> Result<(), TierError> {
+        let attempt = self.read_attempts[page].fetch_add(1, Ordering::Relaxed);
+        self.maybe_slow(page, attempt);
+        let u = self.draw(0, page, attempt);
+        if u < self.cfg.p_panic {
+            // The nastiest failure mode: an unwind out of the fault
+            // funnel. The cache's loading guard and the engine's
+            // per-item quarantine must both hold for this not to kill
+            // the process or wedge racers on LOADING.
+            panic!("chaos: injected panic reading page {page} (attempt {attempt})");
+        }
+        if u < self.cfg.p_panic + self.cfg.p_read {
+            self.injected_reads.fetch_add(1, Ordering::Relaxed);
+            // Torn read: scribble half of K before failing, so callers
+            // that ignore the Err are loudly wrong.
+            let half = k_out.len() / 2;
+            k_out[..half].fill(f32::NAN);
+            return Err(TierError { op: TierOp::Read, page });
+        }
+        self.inner.read_page(page, k_out, v_out)
     }
 }
 
@@ -257,6 +480,19 @@ pub const PAGE_RESIDENT: u8 = 0;
 /// A fault winner is copying the page in; racers spin until `RESIDENT`.
 pub const PAGE_LOADING: u8 = 1;
 pub const PAGE_EVICTED: u8 = 2;
+/// The retry ladder exhausted on this page: its fp32 region is zeroed
+/// and the owning request must fail with `CacheError::PageLost`. Sticky
+/// until the page is freed and reallocated (`alloc_page` resets it).
+pub const PAGE_LOST: u8 = 3;
+
+/// Bounded retries per failed tier read before a page is declared lost.
+pub const TIER_READ_RETRIES: u32 = 3;
+/// Bounded retries per failed tier write (seal / attach spill).
+pub const TIER_WRITE_RETRIES: u32 = 3;
+/// Per-fault wall-clock deadline: even if retries remain, a fault that
+/// has burned this long escalates to `PageLost` so one sick page cannot
+/// stall a whole decode step indefinitely.
+pub const TIER_RETRY_DEADLINE: std::time::Duration = std::time::Duration::from_millis(50);
 
 /// Residency bookkeeping attached to a [`super::PagedKvCache`] when a
 /// slow tier is active. All hot-path fields are atomics so fault-on-read
@@ -283,6 +519,20 @@ pub struct TierState {
     pub bytes_faulted: AtomicU64,
     /// Pages written through to the tier (seals + attach-time spills).
     pub spilled_writes: AtomicU64,
+    /// Per-page durability: 1 once a `write_page` for the page's final
+    /// contents has been *acknowledged*. Only durable pages are eviction
+    /// candidates — a torn / unacknowledged spill must never become the
+    /// page's only copy, so non-durable sealed pages stay pinned
+    /// resident (safe degradation, never corruption).
+    pub durable: Vec<AtomicU8>,
+    /// Failed tier reads (every attempt, including ones a retry healed).
+    pub read_errors: AtomicU64,
+    /// Failed tier writes (every attempt).
+    pub write_errors: AtomicU64,
+    /// Retry-ladder re-attempts (reads and writes).
+    pub retries: AtomicU64,
+    /// Pages escalated to `PAGE_LOST` (retry ladder exhausted).
+    pub lost_pages: AtomicU64,
     /// Victim-sort scratch, reserved once (fault path stays alloc-free).
     pub(super) evict_scratch: Vec<(u64, PageId)>,
 }
@@ -300,6 +550,11 @@ impl TierState {
             evictions: AtomicU64::new(0),
             bytes_faulted: AtomicU64::new(0),
             spilled_writes: AtomicU64::new(0),
+            durable: (0..num_pages).map(|_| AtomicU8::new(0)).collect(),
+            read_errors: AtomicU64::new(0),
+            write_errors: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            lost_pages: AtomicU64::new(0),
             evict_scratch: Vec::with_capacity(num_pages),
         }
     }
@@ -511,10 +766,10 @@ mod tests {
         let tier = SimTier::new(fpp, 4, 2);
         let k: Vec<f32> = (0..fpp).map(|i| i as f32).collect();
         let v: Vec<f32> = (0..fpp).map(|i| -(i as f32)).collect();
-        tier.write_page(2, &k, &v);
+        tier.write_page(2, &k, &v).unwrap();
         let mut ko = vec![0.0; fpp];
         let mut vo = vec![0.0; fpp];
-        tier.read_page(2, &mut ko, &mut vo);
+        tier.read_page(2, &mut ko, &mut vo).unwrap();
         assert_eq!(ko, k);
         assert_eq!(vo, v);
     }
@@ -525,7 +780,7 @@ mod tests {
         let tier = SimTier::new(8, 2, 1);
         let mut ko = vec![0.0; 8];
         let mut vo = vec![0.0; 8];
-        tier.read_page(0, &mut ko, &mut vo);
+        let _ = tier.read_page(0, &mut ko, &mut vo);
     }
 
     #[cfg(unix)]
@@ -537,15 +792,83 @@ mod tests {
         let tier = FileTier::create(&path, fpp, 3).unwrap();
         let k: Vec<f32> = (0..fpp).map(|i| 0.5 + i as f32).collect();
         let v: Vec<f32> = (0..fpp).map(|i| 7.0 - i as f32).collect();
-        tier.write_page(1, &k, &v);
-        tier.write_page(0, &v, &k); // neighbor pages must not alias
+        tier.write_page(1, &k, &v).unwrap();
+        tier.write_page(0, &v, &k).unwrap(); // neighbor pages must not alias
         let mut ko = vec![0.0; fpp];
         let mut vo = vec![0.0; fpp];
-        tier.read_page(1, &mut ko, &mut vo);
+        tier.read_page(1, &mut ko, &mut vo).unwrap();
         assert_eq!(ko, k);
         assert_eq!(vo, v);
         drop(tier);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn chaos_config_parses_and_rejects() {
+        let c = ChaosConfig::parse("7:0.05:0.02").unwrap();
+        assert_eq!(c, ChaosConfig { seed: 7, p_read: 0.05, p_write: 0.02, p_panic: 0.0 });
+        let c = ChaosConfig::parse("1:0.5:0.25:0.125").unwrap();
+        assert_eq!(c.p_panic, 0.125);
+        for bad in ["", "7", "7:0.1", "x:0.1:0.1", "7:1.5:0.0", "7:0.1:0.1:0.1:0.1", "7:-0.1:0"] {
+            assert!(ChaosConfig::parse(bad).is_none(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn chaos_fault_sites_are_seed_deterministic() {
+        let fpp = 8;
+        let pages = 16;
+        let cfg = ChaosConfig { seed: 42, p_read: 0.3, p_write: 0.3, p_panic: 0.0 };
+        let run = || {
+            let chaos = ChaosTier::new(Box::new(SimTier::new(fpp, pages, 1)), cfg, pages);
+            let k = vec![1.0f32; fpp];
+            let v = vec![2.0f32; fpp];
+            let mut outcomes = Vec::new();
+            for page in 0..pages {
+                // Write until acknowledged (bounded: independent draws).
+                let mut writes = 0;
+                while chaos.write_page(page, &k, &v).is_err() {
+                    writes += 1;
+                    assert!(writes < 64, "write draws must be independent per attempt");
+                }
+                let mut ko = vec![0.0f32; fpp];
+                let mut vo = vec![0.0f32; fpp];
+                let mut reads = 0;
+                while chaos.read_page(page, &mut ko, &mut vo).is_err() {
+                    reads += 1;
+                    assert!(reads < 64);
+                }
+                assert_eq!(ko, k, "an acknowledged read must return exact bytes");
+                outcomes.push((writes, reads));
+            }
+            outcomes
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed must replay the same fault schedule");
+        assert!(
+            a.iter().any(|&(w, r)| w > 0 || r > 0),
+            "p=0.3 over 16 pages should inject at least one fault: {a:?}"
+        );
+    }
+
+    #[test]
+    fn chaos_off_is_transparent() {
+        let fpp = 8;
+        let cfg = ChaosConfig { seed: 9, p_read: 0.0, p_write: 0.0, p_panic: 0.0 };
+        let chaos = ChaosTier::new(Box::new(SimTier::new(fpp, 4, 1)), cfg, 4);
+        let k: Vec<f32> = (0..fpp).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..fpp).map(|i| -(i as f32)).collect();
+        for page in 0..4 {
+            chaos.write_page(page, &k, &v).unwrap();
+            let mut ko = vec![0.0f32; fpp];
+            let mut vo = vec![0.0f32; fpp];
+            chaos.read_page(page, &mut ko, &mut vo).unwrap();
+            assert_eq!(ko, k);
+            assert_eq!(vo, v);
+        }
+        assert_eq!(chaos.injected_reads.load(Ordering::Relaxed), 0);
+        assert_eq!(chaos.injected_writes.load(Ordering::Relaxed), 0);
     }
 
     #[test]

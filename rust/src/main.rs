@@ -48,6 +48,13 @@
 //! hier-bound prefetch faults pages back on demand. `F >= 1` (the
 //! default) keeps everything resident.
 //!
+//! `--chaos seed:p_read:p_write[:p_panic]` (also `TWILIGHT_CHAOS`)
+//! wraps the slow tier in the deterministic fault injector (DESIGN.md
+//! §14): seeded per-(page, attempt) read/write failures, latency
+//! spikes, torn writes, and optional in-read panics. Faulted requests
+//! fail with a contained reason while neighbors stay bit-exact. The
+//! flag beats the env var; `--chaos off` disables injection entirely.
+//!
 //! Observability (DESIGN.md §10): `--trace` (also `TWILIGHT_TRACE=1`)
 //! turns on the per-stage span recorder; `--trace-out trace.json` (also
 //! `TWILIGHT_TRACE_OUT`) writes the collected spans as Chrome
@@ -164,6 +171,30 @@ fn apply_resident_frac(a: &Args, engine: &mut Engine) {
     }
 }
 
+/// `--chaos seed:p_read:p_write[:p_panic]` (also `TWILIGHT_CHAOS`,
+/// which `Engine::new` already honors) installs deterministic tier
+/// fault injection; `--chaos off`/`none` clears an env-set default.
+/// The flag beats the env var; a malformed value is a hard error,
+/// matching the `--kernel` / `--resident-frac` contract. Call before
+/// [`apply_resident_frac`] so freshly attached tiers wrap once.
+fn apply_chaos(a: &Args, engine: &mut Engine) {
+    if let Some(c) = a.get("chaos") {
+        match c.as_str() {
+            "off" | "none" | "0" => engine.set_chaos(None),
+            spec => match twilight::kvcache::offload::ChaosConfig::parse(spec) {
+                Some(cfg) => engine.set_chaos(Some(cfg)),
+                None => {
+                    eprintln!(
+                        "bad --chaos '{spec}' (want seed:p_read:p_write[:p_panic], \
+                         e.g. 7:0.05:0.02, or 'off')"
+                    );
+                    std::process::exit(2);
+                }
+            },
+        }
+    }
+}
+
 fn cmd_serve(a: &Args) {
     let model = load_model_arg(a);
     let cfg = sparse_config_from_args(a);
@@ -171,10 +202,11 @@ fn cmd_serve(a: &Args) {
     let mut engine = Engine::new(model.clone(), cfg.clone(), capacity);
     engine.set_threads(a.usize_or("threads", engine.threads()));
     engine.set_prefill_chunk(a.usize_or("prefill-chunk", engine.prefill_chunk()));
+    apply_chaos(a, &mut engine);
     apply_resident_frac(a, &mut engine);
     twilight::log_info!(
         "model={} ({} params), pipeline={}, capacity={} tokens, threads={}, prefill_chunk={}, \
-         kernel={}, resident_frac={}",
+         kernel={}, resident_frac={}, chaos={}",
         model.cfg.name,
         model.param_count(),
         cfg.label(),
@@ -182,7 +214,11 @@ fn cmd_serve(a: &Args) {
         engine.threads(),
         engine.prefill_chunk(),
         twilight::tensor::kernels::active_name(),
-        engine.resident_frac()
+        engine.resident_frac(),
+        match engine.chaos() {
+            Some(c) => format!("{}:{}:{}:{}", c.seed, c.p_read, c.p_write, c.p_panic),
+            None => "off".to_string(),
+        }
     );
     let sched_cfg = SchedulerConfig {
         max_batch: a.usize_or("max-batch", 64),
@@ -300,6 +336,7 @@ fn cmd_bench(a: &Args) {
         let mut e = Engine::new(model.clone(), cfg, ctx * 2 + 128);
         e.set_threads(a.usize_or("threads", e.threads()));
         e.set_prefill_chunk(a.usize_or("prefill-chunk", e.prefill_chunk()));
+        apply_chaos(a, &mut e);
         apply_resident_frac(a, &mut e);
         let _ = e.prefill(0, &g.prompt).unwrap();
         e.reset_stats();

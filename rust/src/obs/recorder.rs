@@ -21,6 +21,10 @@ pub enum Anomaly {
     Reject = 2,
     /// Smoothed TPOT ran over the SLO breach threshold.
     SloBreach = 3,
+    /// A request terminally failed to a contained fault this step (lost
+    /// KV page, quarantined worker panic, non-finite logits) — the most
+    /// severe outcome: service was lost, not merely degraded.
+    Failed = 4,
 }
 
 impl Anomaly {
@@ -30,6 +34,7 @@ impl Anomaly {
             Anomaly::Preempt => "preempt",
             Anomaly::Reject => "reject",
             Anomaly::SloBreach => "slo_breach",
+            Anomaly::Failed => "failed",
         }
     }
 }
@@ -248,8 +253,10 @@ mod tests {
 
     #[test]
     fn anomaly_priority_order() {
+        assert!(Anomaly::Failed > Anomaly::SloBreach);
         assert!(Anomaly::SloBreach > Anomaly::Reject);
         assert!(Anomaly::Reject > Anomaly::Preempt);
         assert!(Anomaly::Preempt > Anomaly::None);
+        assert_eq!(Anomaly::Failed.name(), "failed");
     }
 }

@@ -21,8 +21,11 @@
 //! the threads outliving the scope, which is what makes the
 //! lifetime-erased job reference sound. A worker panic is captured, the
 //! round still drains to the barrier, and the panic is re-raised on the
-//! caller with the pool intact for subsequent rounds. Dropping the pool
-//! flags shutdown, wakes, and joins every worker.
+//! caller with the pool intact for subsequent rounds —
+//! [`ThreadPool::run_quarantined`] instead *contains* each panic to its
+//! index and hands the captured payloads back, the fault-domain variant
+//! (DESIGN.md §14) for callers that fail one item, not the round.
+//! Dropping the pool flags shutdown, wakes, and joins every worker.
 //!
 //! Determinism contract: `threads == 1` — and any round with
 //! `n <= chunk` — executes inline on the caller thread, the sequential
@@ -296,6 +299,31 @@ impl ThreadPool {
         }
     }
 
+    /// Like [`ThreadPool::run`], but a panic in one index is *contained*
+    /// to that index instead of poisoning the whole round: every other
+    /// index still executes, and the captured panics come back sorted by
+    /// index for the caller to map onto per-item failures (the engine
+    /// turns them into `CacheError::WorkerPanic` so one poisoned request
+    /// cannot take down its batch neighbors — DESIGN.md §14). An empty
+    /// return vector means every index completed.
+    pub fn run_quarantined<F: Fn(usize) + Sync>(
+        &self,
+        n: usize,
+        chunk: usize,
+        work: F,
+    ) -> Vec<(usize, Box<dyn Any + Send>)> {
+        let panics: Mutex<Vec<(usize, Box<dyn Any + Send>)>> = Mutex::new(Vec::new());
+        self.run(n, chunk, |i| {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| work(i))) {
+                let mut p = panics.lock().unwrap_or_else(|e| e.into_inner());
+                p.push((i, payload));
+            }
+        });
+        let mut panics = panics.into_inner().unwrap_or_else(|e| e.into_inner());
+        panics.sort_unstable_by_key(|&(i, _)| i);
+        panics
+    }
+
     fn ensure_workers(&self, want: usize) {
         let mut handles = self.handles.lock().unwrap();
         while handles.len() < want {
@@ -391,6 +419,40 @@ mod tests {
         }
         assert_eq!(pool.spawned_threads(), spawned, "threads must spawn once, not per round");
         assert_eq!(pool.rounds(), 51);
+    }
+
+    #[test]
+    fn quarantined_panic_contains_to_one_index() {
+        let pool = ThreadPool::new(4);
+        let hits = (0..64).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        let panics = pool.run_quarantined(64, 1, |i| {
+            if i == 7 {
+                panic!("poisoned item");
+            }
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(panics.len(), 1, "exactly the poisoned item is quarantined");
+        assert_eq!(panics[0].0, 7);
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), u64::from(i != 7), "sibling {i}");
+        }
+        let sum = AtomicU64::new(0);
+        pool.run(100, 3, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950, "pool survives a quarantined round");
+    }
+
+    #[test]
+    fn quarantined_inline_path_contains_too() {
+        let pool = ThreadPool::new(1);
+        let panics = pool.run_quarantined(8, 1, |i| {
+            if i % 2 == 0 {
+                panic!("even ticket {i}");
+            }
+        });
+        assert_eq!(panics.iter().map(|p| p.0).collect::<Vec<_>>(), vec![0, 2, 4, 6]);
+        assert_eq!(pool.spawned_threads(), 0, "inline path must not spawn");
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Fault-domain hardening soak (DESIGN.md §14): decode under seeded
+//! chaos injection must never crash the process, must contain every
+//! fault to the owning request, and must keep survivors *bit-exact*
+//! with the fault-free run — a transient tier error heals through the
+//! retry ladder by restoring the exact spilled bytes, and an exhausted
+//! ladder kills exactly one sequence (its pages reclaimed, surfaced as
+//! `CacheError::PageLost`) while its neighbors never see a byte move.
+//!
+//! Determinism contract: fault decisions are pure hashes of
+//! `(seed, op, page, attempt-ordinal)`, and the set of tier reads per
+//! run is deterministic (one read per page per eviction epoch under the
+//! step-clock LRU), so the injected-fault counters and the *positions*
+//! of contained errors are invariant across worker counts. Only
+//! latency is allowed to vary with threads.
+//!
+//! Every run pins residency and chaos explicitly, so the battery is
+//! immune to `TWILIGHT_RESIDENT_FRAC` / `TWILIGHT_CHAOS` being exported
+//! by the CI chaos leg.
+
+use std::sync::Arc;
+use twilight::coordinator::engine::{DecodeBatch, Engine};
+use twilight::coordinator::request::Request;
+use twilight::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use twilight::coordinator::SparseConfig;
+use twilight::kvcache::offload::ChaosConfig;
+use twilight::model::retrieval::build_retrieval_model;
+use twilight::selector::SelectorKind;
+use twilight::util::rng::Rng;
+use twilight::workload::{gen_niah, RetrievalVocab};
+
+const V: RetrievalVocab = RetrievalVocab::DEFAULT;
+
+/// Same pool shape as `offload_decode.rs`: 3 sequences at 256/512/768
+/// tokens use ~97 of the 128 pages, so frac 0.25 (cap 32) forces
+/// evictions and therefore tier reads for every run.
+const CAPACITY: usize = 2048;
+
+struct ChaosOut {
+    /// Per (step, seq) decode result: `None` = contained fault.
+    logits: Vec<Option<Vec<f32>>>,
+    read_errors: u64,
+    write_errors: u64,
+    retries: u64,
+    pages_lost: u64,
+}
+
+/// Replay the fixed 3-sequence, 8-step decode trace with `threads`
+/// attention workers. Prefill runs fully resident (the pin below
+/// neutralizes any CI-leg env *before* the prompt phase); the
+/// (optionally chaos-wrapped) tier attaches afterwards at frac 0.25,
+/// so every injected fault lands in the decode phase all variants
+/// share.
+fn run_chaos_trace(threads: usize, chaos: Option<ChaosConfig>) -> ChaosOut {
+    let model = Arc::new(build_retrieval_model(V, 1 << 14));
+    let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+    cfg.skip_layers = 0;
+    cfg.dense_below = 16;
+    let mut e = Engine::new(model, cfg, CAPACITY);
+    e.set_threads(threads);
+    e.set_resident_frac(1.0);
+    e.set_chaos(None);
+    let mut rng = Rng::new(71);
+    let mut toks = Vec::new();
+    for i in 0..3u64 {
+        let g = gen_niah(&mut rng, V, 256 * (i as usize + 1));
+        let _ = e.prefill(i, &g.prompt).unwrap();
+        toks.push(g.prompt[0]);
+    }
+    e.set_chaos(chaos);
+    e.set_resident_frac(0.25);
+    // A sequence whose retry ladder exhausts fails once — the engine
+    // releases it (pages reclaimed) and the scheduler would retire the
+    // request — so it drops out of later batches while its neighbors
+    // keep decoding undisturbed.
+    let mut failed = [false; 3];
+    let mut logits = Vec::new();
+    for _ in 0..8 {
+        let mut batch = DecodeBatch::default();
+        for i in 0..3u64 {
+            if !failed[i as usize] {
+                batch.push_decode(i, toks[i as usize]);
+            }
+        }
+        let mut results = e.step_batch(&batch).into_iter();
+        for i in 0..3usize {
+            if failed[i] {
+                logits.push(None);
+                continue;
+            }
+            match results.next().unwrap() {
+                Ok(l) => logits.push(Some(l)),
+                Err(_) => {
+                    failed[i] = true;
+                    logits.push(None);
+                }
+            }
+        }
+    }
+    ChaosOut {
+        logits,
+        read_errors: e.stats.tier_read_errors,
+        write_errors: e.stats.tier_write_errors,
+        retries: e.stats.tier_retries,
+        pages_lost: e.stats.pages_lost,
+    }
+}
+
+/// Moderate fault rates: plenty of transient read errors (healed by the
+/// retry ladder), occasional torn writes (pin pages resident), and a
+/// small panic rate to exercise the in-funnel `catch_unwind`.
+const SOAK: ChaosConfig = ChaosConfig { seed: 7, p_read: 0.5, p_write: 0.1, p_panic: 0.05 };
+
+#[test]
+fn chaos_survivors_bit_exact_and_counters_thread_invariant() {
+    let baseline = run_chaos_trace(1, None);
+    assert!(
+        baseline.logits.iter().all(|l| l.is_some()),
+        "fault-free run must complete every decode"
+    );
+    assert_eq!(baseline.read_errors, 0);
+    assert_eq!(baseline.pages_lost, 0);
+
+    let t1 = run_chaos_trace(1, Some(SOAK));
+    let t4 = run_chaos_trace(4, Some(SOAK));
+    assert_eq!(t1.logits.len(), baseline.logits.len());
+    assert_eq!(t4.logits.len(), baseline.logits.len());
+    // Injected faults actually happened (seeded, so this is a fixed
+    // property of the trace, not a flake).
+    assert!(t1.read_errors > 0, "soak must inject read faults");
+    assert!(t1.retries > 0, "retry ladder must engage");
+    // Counters are pure functions of (seed, page, attempt-ordinal), so
+    // the worker count must not move them.
+    assert_eq!(t1.read_errors, t4.read_errors, "read-error count varied with threads");
+    assert_eq!(t1.write_errors, t4.write_errors, "write-error count varied with threads");
+    assert_eq!(t1.retries, t4.retries, "retry count varied with threads");
+    assert_eq!(t1.pages_lost, t4.pages_lost, "lost-page count varied with threads");
+    for (i, (a, b)) in t1.logits.iter().zip(&t4.logits).enumerate() {
+        // Same contained-error positions at any thread count…
+        assert_eq!(a.is_some(), b.is_some(), "error position {i} varied with threads");
+        // …and every survivor is bit-exact with the fault-free run:
+        // healed retries restored the exact spilled bytes.
+        if let (Some(chaos_l), Some(base_l)) = (a, &baseline.logits[i]) {
+            assert_eq!(chaos_l, base_l, "surviving logits diverged at position {i}");
+        }
+        if let (Some(chaos_l), Some(base_l)) = (b, &baseline.logits[i]) {
+            assert_eq!(chaos_l, base_l, "surviving logits diverged at position {i} (t4)");
+        }
+    }
+}
+
+/// `p_read = 1.0`: every tier read exhausts its retry ladder, so any
+/// sequence that needs a faulted page terminally fails with `PageLost`.
+/// The scheduler must contain that — failed requests accounted in the
+/// report, their pages reclaimed, the rest served — at any thread
+/// count, with identical failure counts.
+#[test]
+fn lethal_chaos_fails_requests_loudly_and_reclaims_pages() {
+    let mut seen: Option<(usize, u64)> = None;
+    for &threads in &[1usize, 4] {
+        let model = Arc::new(build_retrieval_model(V, 1 << 14));
+        let mut cfg = SparseConfig::twilight(SelectorKind::Quest, 0.9);
+        cfg.skip_layers = 0;
+        cfg.dense_below = 16;
+        let mut engine = Engine::new(model, cfg, CAPACITY);
+        engine.set_threads(threads);
+        engine.set_chaos(Some(ChaosConfig { seed: 11, p_read: 1.0, p_write: 0.0, p_panic: 0.0 }));
+        engine.set_resident_frac(0.25);
+        let mut s = Scheduler::new(engine, SchedulerConfig::default());
+        let mut rng = Rng::new(73);
+        for i in 0..3u64 {
+            let g = gen_niah(&mut rng, V, 256 * (i as usize + 1));
+            s.submit(Request::new(i, g.prompt, 4));
+        }
+        let rep = s.run_to_completion();
+        assert_eq!(rep.requests.len(), 3);
+        // The 768-token request alone overflows the cap-32 resident
+        // set, so at least one request must hit a lost page.
+        assert!(rep.failed() >= 1, "lethal chaos must fail a request (threads={threads})");
+        assert!(rep.completion_rate() < 1.0);
+        assert!(rep.pages_lost >= 1);
+        assert!(rep.tier_read_errors >= 1);
+        let j = rep.to_json();
+        assert_eq!(j.get_f64("failed"), Some(rep.failed() as f64));
+        assert!(j.get_f64("failed_page_lost").unwrap() >= 1.0);
+        assert!(j.get_f64("completion_rate").unwrap() < 1.0);
+        // Containment: every page came back — failed requests released
+        // theirs — and the engine holds no sequences.
+        assert_eq!(
+            s.engine.free_pages(),
+            s.engine.total_pages(),
+            "failed requests must release their pages (threads={threads})"
+        );
+        // Failure accounting is thread-invariant (determinism contract).
+        match seen {
+            None => seen = Some((rep.failed(), rep.pages_lost)),
+            Some(prev) => assert_eq!(
+                prev,
+                (rep.failed(), rep.pages_lost),
+                "failure accounting varied with threads"
+            ),
+        }
+    }
+}
